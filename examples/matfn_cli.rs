@@ -1,0 +1,89 @@
+//! Matrix-function playground: sweep spectra and watch PRISM adapt.
+//!
+//! Reproduces the qualitative content of the paper's Figure 1 at example
+//! scale: fix `sigma_max = 1`, sweep `sigma_min` over decades, and for each
+//! matrix report iterations-to-tolerance for classic Newton–Schulz,
+//! PolarExpress (optimized for sigma_min = 1e-3), and PRISM — for both the
+//! polar factor and the square root. PolarExpress degrades away from its
+//! design interval; PRISM stays flat. Also prints the alpha_k traces, the
+//! paper's "fingerprint" of spectrum adaptivity (Figs. 3-4 right panels).
+//!
+//! ```sh
+//! cargo run --release --example matfn_cli -- [--n 128] [--decades 10]
+//! ```
+
+use prism::baselines::polar_express::PolarExpress;
+use prism::cli::Args;
+use prism::linalg::gemm::syrk_at_a;
+use prism::prism::polar::{polar_prism, PolarOpts};
+use prism::prism::sqrt::{sqrt_prism, SqrtOpts};
+use prism::prism::StopRule;
+use prism::randmat;
+use prism::rng::Rng;
+
+fn main() {
+    let args = Args::from_env(false);
+    let n = args.get_usize("n", 128).unwrap();
+    let m = n / 2;
+    let decades = args.get_usize("decades", 10).unwrap();
+    let seed = args.get_u64("seed", 42).unwrap();
+    let tol = 1e-6;
+    let stop = StopRule::default().with_max_iters(400).with_tol(tol);
+    let pe = PolarExpress::paper_default();
+
+    println!("matfn_cli (Fig. 1 analog): {n}x{m}, sigma_min sweep, tol {tol:.0e}\n");
+    println!("POLAR  — iterations to ‖I − XᵀX‖_F < tol");
+    println!(
+        "{:>10} {:>12} {:>14} {:>10} {:>18}",
+        "sigma_min", "classic-NS", "PolarExpress", "PRISM-5", "PRISM speedup(it)"
+    );
+
+    let mut rng = Rng::seed_from(seed);
+    let mut last_alphas: Vec<f64> = Vec::new();
+    for dec in 0..decades {
+        let smin = 10f64.powi(-(dec as i32 + 1));
+        let s = randmat::logspace(smin, 1.0, m);
+        let a = randmat::with_spectrum(&mut rng, n, m, &s);
+
+        let classic = polar_prism(&a, &PolarOpts::classic(2).with_stop(stop), &mut rng);
+        let (_, pe_log) = pe.polar(&a, &stop);
+        let fast = polar_prism(&a, &PolarOpts::degree5().with_stop(stop), &mut rng);
+        let it = |l: &prism::prism::IterationLog| {
+            l.iters_to_tol(tol).map(|k| k.to_string()).unwrap_or_else(|| "—".into())
+        };
+        let speedup = match (classic.log.iters_to_tol(tol), fast.log.iters_to_tol(tol)) {
+            (Some(c), Some(p)) if p > 0 => format!("{:.2}x", c as f64 / p as f64),
+            _ => "—".into(),
+        };
+        println!(
+            "{:>10.0e} {:>12} {:>14} {:>10} {:>18}",
+            smin,
+            it(&classic.log),
+            it(&pe_log),
+            it(&fast.log),
+            speedup
+        );
+        last_alphas = fast.log.alphas.clone();
+    }
+
+    println!("\nSQRT   — iterations to coupled residual < tol (A = GᵀG)");
+    println!("{:>10} {:>12} {:>10}", "sigma_min", "classic-NS", "PRISM-5");
+    for dec in 0..decades / 2 {
+        // sqrt squares the condition number: sweep fewer decades.
+        let smin = 10f64.powi(-(dec as i32 + 1));
+        let s = randmat::logspace(smin, 1.0, m);
+        let g = randmat::with_spectrum(&mut rng, n, m, &s);
+        let a = syrk_at_a(&g);
+        let classic = sqrt_prism(&a, &SqrtOpts::classic(2).with_stop(stop), &mut rng);
+        let fast = sqrt_prism(&a, &SqrtOpts::degree5().with_stop(stop), &mut rng);
+        let it = |l: &prism::prism::IterationLog| {
+            l.iters_to_tol(tol).map(|k| k.to_string()).unwrap_or_else(|| "—".into())
+        };
+        println!("{:>10.0e} {:>12} {:>10}", smin, it(&classic.log), it(&fast.log));
+    }
+
+    println!("\nPRISM-5 alpha_k trace for the hardest polar instance (adapts, then");
+    println!("relaxes to the Taylor coefficient 0.375 as the spectrum contracts):");
+    let pts: Vec<String> = last_alphas.iter().map(|a| format!("{a:.3}")).collect();
+    println!("  [{}]", pts.join(", "));
+}

@@ -1,0 +1,125 @@
+//! Figure 6 analog, and the repo's end-to-end driver: train the transformer
+//! language model through the full three-layer stack.
+//!
+//! * **L1/L2** — the model fwd/bwd (with the Pallas Newton–Schulz kernels in
+//!   its orbit) was lowered once by `make artifacts` into
+//!   `artifacts/train_step.hlo.txt`.
+//! * **Runtime** — Rust loads + compiles it with PJRT; Python never runs.
+//! * **L3** — this driver samples token batches from a synthetic Markov/Zipf
+//!   corpus, executes the artifact, and applies Muon (PolarExpress / PRISM-3 /
+//!   PRISM-5 polar backends) or AdamW in Rust.
+//!
+//! The paper's Fig. 6 ordering is: AdamW ≫ PolarExpress > PRISM-5 > PRISM-3
+//! in final validation loss (lower better). We print the loss curves and the
+//! final train/val losses per optimizer.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example muon_lm -- --steps 200
+//! ```
+
+use prism::cli::Args;
+use prism::config::Backend;
+use prism::coordinator::train::TrainDriver;
+use prism::optim::adamw::AdamW;
+use prism::optim::muon::Muon;
+use prism::optim::Optimizer;
+use prism::rng::Rng;
+use prism::runtime::Runtime;
+use prism::workload::MarkovCorpus;
+
+struct RunOut {
+    name: String,
+    losses: Vec<f64>,
+    val_loss: f64,
+    ms_per_step: f64,
+}
+
+fn run_one(
+    rt: &Runtime,
+    corpus: &MarkovCorpus,
+    mut opt: Box<dyn Optimizer>,
+    steps: usize,
+    seed: u64,
+    log_every: usize,
+) -> prism::util::Result<RunOut> {
+    let mut driver = TrainDriver::new(rt, seed as f32)?;
+    let mut rng = Rng::seed_from(seed ^ 0xBA7C4);
+    let name = opt.name();
+    println!("── {name}: {} params", driver.num_params());
+    for step in 0..steps {
+        let (xs, ys) = corpus.sample_batch(&mut rng, driver.batch, driver.seq_len);
+        let loss = driver.step(&xs, &ys, opt.as_mut())?;
+        if step % log_every == 0 || step + 1 == steps {
+            println!("  step {step:>4}  train loss {loss:.4}");
+        }
+    }
+    // Validation: average loss over held-out batches (fresh RNG stream).
+    let mut vrng = Rng::seed_from(seed ^ 0x7E57);
+    let mut val = 0.0;
+    let vbatches = 8;
+    for _ in 0..vbatches {
+        let (xs, ys) = corpus.sample_batch(&mut vrng, driver.batch, driver.seq_len);
+        val += driver.eval(&xs, &ys)?;
+    }
+    val /= vbatches as f64;
+    let ms = driver.step_times_s.iter().sum::<f64>() / driver.step_times_s.len() as f64 * 1e3;
+    println!("  val loss {val:.4}  ({ms:.0} ms/step)\n");
+    Ok(RunOut { name, losses: driver.losses, val_loss: val, ms_per_step: ms })
+}
+
+fn main() -> prism::util::Result<()> {
+    let args = Args::from_env(false);
+    let steps = args.get_usize("steps", 200)?;
+    let seed = args.get_u64("seed", 42)?;
+    let log_every = args.get_usize("log-every", 25)?;
+    let dir = args.get_string("artifacts", "artifacts");
+
+    let rt = Runtime::open(&dir)?;
+    println!("muon_lm (Fig. 6 analog) — PJRT platform: {}\n", rt.platform());
+
+    // One shared corpus so every optimizer sees the same task.
+    let probe = TrainDriver::new(&rt, seed as f32)?;
+    let (vocab, batch, seq) = (probe.vocab, probe.batch, probe.seq_len);
+    drop(probe);
+    let mut crng = Rng::seed_from(seed);
+    let corpus = MarkovCorpus::generate(&mut crng, vocab, 200_000);
+    println!(
+        "corpus: {} tokens, vocab {vocab}, unigram entropy {:.3} nats; batch {batch} x seq {seq}\n",
+        corpus.tokens.len(),
+        corpus.unigram_entropy()
+    );
+
+    let runs: Vec<(&str, Box<dyn Optimizer>)> = vec![
+        ("adamw", Box::new(AdamW::paper_default())),
+        ("muon+polar-express", Box::new(Muon::paper_default(Backend::PolarExpress, seed))),
+        ("muon+prism3", Box::new(Muon::paper_default(Backend::Prism3, seed))),
+        ("muon+prism5", Box::new(Muon::paper_default(Backend::Prism5, seed))),
+    ];
+
+    let mut outs = Vec::new();
+    for (_tag, opt) in runs {
+        outs.push(run_one(&rt, &corpus, opt, steps, seed, log_every)?);
+    }
+
+    println!("{:<24} {:>12} {:>12} {:>12}", "optimizer", "final train", "val loss", "ms/step");
+    for o in &outs {
+        println!(
+            "{:<24} {:>12.4} {:>12.4} {:>12.0}",
+            o.name,
+            o.losses.last().copied().unwrap_or(f64::NAN),
+            o.val_loss,
+            o.ms_per_step
+        );
+    }
+    println!("\nloss curves (every {log_every} steps):");
+    for o in &outs {
+        let pts: Vec<String> = o
+            .losses
+            .iter()
+            .step_by(log_every.max(1))
+            .map(|l| format!("{l:.3}"))
+            .collect();
+        println!("  {:<22} [{}]", o.name, pts.join(", "));
+    }
+    Ok(())
+}

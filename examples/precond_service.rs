@@ -1,0 +1,170 @@
+//! The L3 coordinator under load: route, batch, and execute matrix-function
+//! jobs on a worker pool, the way a distributed Shampoo/DION deployment
+//! refreshes preconditioners while training continues.
+//!
+//! A synthetic gradient stream (HTMP heavy-tailed spectra, mixed shapes)
+//! feeds the service; we sweep worker counts and batching limits and report
+//! throughput plus latency percentiles per configuration — demonstrating the
+//! amortization PRISM's cheap `O(n²p)` fit enables inside a batched service.
+//!
+//! ```sh
+//! cargo run --release --example precond_service -- [--jobs 96] [--n 96]
+//! ```
+
+use prism::cli::Args;
+use prism::config::{Backend, ServiceConfig};
+use prism::coordinator::async_shampoo::AsyncShampoo;
+use prism::coordinator::service::{JobKind, Service};
+use prism::linalg::gemm::syrk_at_a;
+use prism::nn::mlp::Mlp;
+use prism::optim::Optimizer;
+use prism::rng::Rng;
+use prism::util::Stopwatch;
+use prism::workload::{BlobsDataset, GradientStream};
+
+struct LoadResult {
+    workers: usize,
+    max_batch: usize,
+    backend: &'static str,
+    jobs_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn run_load(
+    workers: usize,
+    max_batch: usize,
+    backend: Backend,
+    bname: &'static str,
+    jobs: usize,
+    n: usize,
+    kappa: f64,
+    seed: u64,
+) -> LoadResult {
+    let cfg = ServiceConfig {
+        workers,
+        queue_capacity: 256,
+        max_batch,
+        sketch_p: 8,
+        max_iters: 60,
+        tol: 1e-7,
+    };
+    // Mixed shapes: square covariance blocks (InvSqrt) and tall gradient
+    // panels (Polar) — same-shape jobs batch together, mixed shapes don't.
+    let shapes = vec![(n, n), (n, n / 2), (n + n / 4, n)];
+    let mut stream = GradientStream::new(seed, shapes, kappa);
+    let svc = Service::start(cfg, backend, seed);
+    let sw = Stopwatch::start();
+    for _ in 0..jobs {
+        let (layer, g) = stream.next_grad();
+        let (r, c) = g.shape();
+        if r == c {
+            svc.submit(layer, JobKind::InvSqrt { eps: 1e-8 }, syrk_at_a(&g)).unwrap();
+        } else {
+            svc.submit(layer, JobKind::Polar, g).unwrap();
+        }
+    }
+    let results = svc.drain().unwrap();
+    let wall = sw.elapsed_s();
+    assert_eq!(results.len(), jobs, "every submitted job must complete");
+
+    let mut lat: Vec<f64> = results.iter().map(|r| r.latency_s * 1e3).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
+    LoadResult {
+        workers,
+        max_batch,
+        backend: bname,
+        jobs_per_s: jobs as f64 / wall,
+        p50_ms: pct(0.5),
+        p99_ms: pct(0.99),
+    }
+}
+
+fn main() {
+    let args = Args::from_env(false);
+    let jobs = args.get_usize("jobs", 96).unwrap();
+    let n = args.get_usize("n", 96).unwrap();
+    let kappa = args.get_f64("kappa", 0.5).unwrap();
+    let seed = args.get_u64("seed", 42).unwrap();
+
+    println!("precond_service: {jobs} jobs, base shape {n}x{n}, HTMP(kappa={kappa})\n");
+
+    let mut rows = Vec::new();
+    // Sweep 1: worker scaling at fixed batch.
+    for workers in [1, 2, 4] {
+        rows.push(run_load(workers, 4, Backend::Prism5, "prism5", jobs, n, kappa, seed));
+    }
+    // Sweep 2: batching policy at fixed workers.
+    for max_batch in [1, 8] {
+        rows.push(run_load(4, max_batch, Backend::Prism5, "prism5", jobs, n, kappa, seed));
+    }
+    // Sweep 3: backend comparison at the best config.
+    for (b, name) in [
+        (Backend::Eigen, "eigen"),
+        (Backend::PolarExpress, "polar-express"),
+        (Backend::Prism3, "prism3"),
+    ] {
+        rows.push(run_load(4, 4, b, name, jobs, n, kappa, seed));
+    }
+
+    println!(
+        "{:>7} {:>9} {:<14} {:>10} {:>9} {:>9}",
+        "workers", "max_batch", "backend", "jobs/s", "p50 ms", "p99 ms"
+    );
+    for r in &rows {
+        println!(
+            "{:>7} {:>9} {:<14} {:>10.1} {:>9.1} {:>9.1}",
+            r.workers, r.max_batch, r.backend, r.jobs_per_s, r.p50_ms, r.p99_ms
+        );
+    }
+    println!("\nNotes: throughput should scale with workers until GEMM saturates cores;");
+    println!("batching trades p50 latency for throughput; PRISM backends avoid the O(n³)");
+    println!("eigendecomposition so they dominate at larger n.");
+
+    // ── Phase 2: staleness-tolerant training through the service ─────────
+    // AsyncShampoo trains while its inverse-root refreshes run on the
+    // worker pool — the Distributed-Shampoo/DION deployment pattern.
+    println!("\n── async Shampoo through the service (staleness-tolerant) ──");
+    let cfg = ServiceConfig {
+        workers: 2,
+        queue_capacity: 64,
+        max_batch: 1,
+        sketch_p: 8,
+        max_iters: 40,
+        tol: 1e-7,
+    };
+    let svc = Service::start(cfg, Backend::Prism5, seed);
+    let mut opt = AsyncShampoo::new(0.05, 1e-6, 5, &svc);
+    let mut rng = Rng::seed_from(seed);
+    let data = BlobsDataset::generate(&mut rng, 800, 64, 8, 1.8);
+    let mut model = Mlp::new(&mut rng, &[64, 48, 8]);
+    let (train_idx, val_idx) = data.split(0.2);
+    let (val_x, val_y) = data.batch(&val_idx);
+    let sw = Stopwatch::start();
+    let steps = 60;
+    for step in 0..steps {
+        let idx: Vec<usize> =
+            train_idx.iter().cycle().skip(step * 48).take(48).copied().collect();
+        let (x, y) = data.batch(&idx);
+        let (loss, _) = model.forward_backward(&x, &y);
+        {
+            let mut params = model.params_mut();
+            opt.step(&mut params);
+        }
+        model.zero_grads();
+        if step % 15 == 0 || step + 1 == steps {
+            println!(
+                "  step {step:>3}  loss {loss:.4}  val acc {:.3}  in-flight {}  mean staleness {:.1}",
+                model.accuracy(&val_x, &val_y),
+                opt.pending_jobs(),
+                opt.mean_staleness()
+            );
+        }
+    }
+    opt.sync();
+    println!(
+        "  done in {:.2}s — train loop never blocked after warmup (staleness ≤ interval + service lag)",
+        sw.elapsed_s()
+    );
+}

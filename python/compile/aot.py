@@ -1,0 +1,166 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text** + manifest.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the Rust `xla` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Run `python -m compile.aot --out-dir ../artifacts` from `python/` (this is
+what `make artifacts` does). Python never runs after this point — the Rust
+binary executes the artifacts via PJRT.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The Fig. 6 model configuration (CPU-scaled; see DESIGN.md substitutions).
+VOCAB = 256
+DIM = 128
+LAYERS = 2
+HEADS = 4
+MLP_DIM = 256
+BATCH = 8
+SEQ_LEN = 32
+CFG = (VOCAB, DIM, LAYERS, HEADS, MLP_DIM)
+
+# Default PRISM polar artifact shape (Muon-sized gradient matrix).
+POLAR_M = 256
+POLAR_N = 128
+SKETCH_P = 8
+TRACE_Q = 10
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def tensor_entries(named_shapes):
+    return [
+        {"name": n, "shape": list(s), "dtype": "f32"} for (n, s) in named_shapes
+    ]
+
+
+def build_artifacts(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+
+    def emit(name, lowered, inputs, outputs, meta=None):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": tensor_entries(inputs),
+                "outputs": tensor_entries(outputs),
+                "meta": meta or {},
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    pspec = model.param_spec(VOCAB, DIM, LAYERS, HEADS, MLP_DIM)
+
+    # ---- init_params(seed) -> params ------------------------------------
+    init_fn = functools.partial(
+        model.init_params, vocab=VOCAB, dim=DIM, layers=LAYERS, heads=HEADS,
+        mlp_dim=MLP_DIM,
+    )
+    lowered = jax.jit(init_fn).lower(spec(()))
+    emit(
+        "init_params",
+        lowered,
+        inputs=[("seed", ())],
+        outputs=[(f"param.{n}", s) for (n, s) in pspec],
+        meta={"vocab": VOCAB, "dim": DIM, "layers": LAYERS, "heads": HEADS,
+              "mlp_dim": MLP_DIM},
+    )
+
+    # ---- train_step(params..., x, y) -> (loss, grads...) ----------------
+    def step_fn(*args):
+        params = args[:-2]
+        return model.train_step(params, args[-2], args[-1], CFG)
+
+    arg_specs = [spec(s) for (_, s) in pspec] + [
+        spec((BATCH, SEQ_LEN)),
+        spec((BATCH, SEQ_LEN)),
+    ]
+    lowered = jax.jit(step_fn).lower(*arg_specs)
+    emit(
+        "train_step",
+        lowered,
+        inputs=[(f"param.{n}", s) for (n, s) in pspec]
+        + [("tokens_x", (BATCH, SEQ_LEN)), ("tokens_y", (BATCH, SEQ_LEN))],
+        outputs=[("loss", ())] + [(f"grad.{n}", s) for (n, s) in pspec],
+        meta={"batch": BATCH, "seq_len": SEQ_LEN, "vocab": VOCAB},
+    )
+
+    # ---- PRISM polar steps (Pallas kernels) ------------------------------
+    lowered = jax.jit(model.polar_step_d2).lower(
+        spec((POLAR_M, POLAR_N)), spec(())
+    )
+    emit(
+        "polar_step_d2",
+        lowered,
+        inputs=[("x", (POLAR_M, POLAR_N)), ("alpha", ())],
+        outputs=[("x_next", (POLAR_M, POLAR_N))],
+        meta={"d": 2, "alpha_lo": 0.375, "alpha_hi": 1.45},
+    )
+
+    lowered = jax.jit(model.polar_step_d1).lower(
+        spec((POLAR_M, POLAR_N)), spec(())
+    )
+    emit(
+        "polar_step_d1",
+        lowered,
+        inputs=[("x", (POLAR_M, POLAR_N)), ("alpha", ())],
+        outputs=[("x_next", (POLAR_M, POLAR_N))],
+        meta={"d": 1, "alpha_lo": 0.5, "alpha_hi": 1.0},
+    )
+
+    # ---- residual + sketched traces (Pallas) ------------------------------
+    lowered = jax.jit(
+        functools.partial(model.polar_residual_traces, q=TRACE_Q)
+    ).lower(spec((POLAR_M, POLAR_N)), spec((SKETCH_P, POLAR_N)))
+    emit(
+        "polar_residual_traces",
+        lowered,
+        inputs=[("x", (POLAR_M, POLAR_N)), ("s", (SKETCH_P, POLAR_N))],
+        outputs=[("traces", (TRACE_Q,)), ("fro", ())],
+        meta={"q": TRACE_Q, "p": SKETCH_P},
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    # legacy single-file interface used by early Makefile revisions
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    print(f"AOT-lowering artifacts into {out_dir}")
+    build_artifacts(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

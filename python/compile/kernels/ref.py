@@ -1,0 +1,58 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact counterpart here; pytest +
+hypothesis sweep shapes and dtypes asserting allclose between the two.
+These references are also the L2 building blocks wherever a differentiable
+path is required (pallas_call has no default VJP).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain matmul in f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def residual_polar_ref(x):
+    """R = I - XᵀX for a (possibly rectangular) iterate X: m x n."""
+    n = x.shape[1]
+    return jnp.eye(n, dtype=x.dtype) - matmul_ref(x.T, x)
+
+
+def residual_coupled_ref(y, x):
+    """R = I - Y X (coupled square-root residual, Higham-stable pairing)."""
+    n = x.shape[1]
+    return jnp.eye(n, dtype=x.dtype) - matmul_ref(y, x)
+
+
+def ns_update_d1_ref(x, r, alpha):
+    """X · (I + αR) = X + α (X @ R)."""
+    return x + alpha * matmul_ref(x, r)
+
+
+def poly_d2_ref(r, alpha):
+    """W = R/2 + α R² (so the d=2 update is X + X @ W)."""
+    return 0.5 * r + alpha * matmul_ref(r, r)
+
+
+def ns_update_d2_ref(x, r, alpha):
+    """X · (I + R/2 + αR²)."""
+    return x + matmul_ref(x, poly_d2_ref(r, alpha))
+
+
+def sketch_traces_ref(s, r, q):
+    """[tr(S R^i Sᵀ) for i in 1..q] computed right-to-left in O(n²p)."""
+    y = s.T
+    out = []
+    for _ in range(q):
+        y = matmul_ref(r, y)
+        out.append(jnp.sum(s.T * y))
+    return jnp.stack(out)
+
+
+def polar_step_d2_ref(x, alpha):
+    """One full PRISM-5 polar iteration at a given α (the AOT artifact's
+    semantics): R = I − XᵀX, X ← X(I + R/2 + αR²)."""
+    r = residual_polar_ref(x)
+    return ns_update_d2_ref(x, r, alpha)

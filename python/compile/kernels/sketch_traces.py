@@ -1,0 +1,24 @@
+"""Sketched power traces `T_i = tr(S R^i Sᵀ)` assembled from the Pallas
+matmul kernel.
+
+The O(n²p) schedule is the paper's: carry `Y ← R @ Y` (n×p panel, p ≪ n —
+the panel stays resident in VMEM across the whole sweep) and reduce
+`tr(S Y) = Σ_{k,j} Sᵀ[k,j]·Y[k,j]` per power. The sequential i-loop is a
+`lax.scan`-free Python loop — q is a small compile-time constant (6 for d=1,
+10 for d=2) so unrolling into the HLO is the right call.
+"""
+
+import jax.numpy as jnp
+
+from .ns_update import matmul
+
+
+def sketch_traces(s, r, q):
+    """s: (p, n) sketch, r: (n, n) symmetric residual → (q,) traces."""
+    st = s.T  # n x p
+    y = st
+    out = []
+    for _ in range(q):
+        y = matmul(r, y)  # Pallas tiled matmul
+        out.append(jnp.sum(st * y))
+    return jnp.stack(out)

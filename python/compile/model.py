@@ -1,0 +1,131 @@
+"""L2: the JAX model and PRISM iteration steps that get AOT-lowered.
+
+* A decoder-only transformer LM (the Fig. 6 model, scaled for CPU): all
+  parameters are rank ≤ 2 so the Rust optimizer can treat each as one
+  matrix/vector (heads are reshaped internally).
+* The PRISM polar step + sketched-trace computation assembled from the
+  Pallas kernels in `kernels/` — these lower into the same HLO artifacts
+  the Rust hot path executes.
+
+The train_step (fwd+bwd) uses pure-jnp ops (pallas_call has no default VJP);
+the PRISM artifacts use the Pallas kernels directly (forward-only).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ns_update, residual, sketch_traces
+
+
+# ------------------------------------------------------------ transformer --
+
+def param_spec(vocab, dim, layers, heads, mlp_dim):
+    """Ordered (name, shape) list — the contract with the Rust TrainDriver."""
+    del heads
+    spec = [("embed", (vocab, dim))]
+    for l in range(layers):
+        spec += [
+            (f"l{l}.ln1_g", (dim,)),
+            (f"l{l}.wq", (dim, dim)),
+            (f"l{l}.wk", (dim, dim)),
+            (f"l{l}.wv", (dim, dim)),
+            (f"l{l}.wo", (dim, dim)),
+            (f"l{l}.ln2_g", (dim,)),
+            (f"l{l}.w1", (dim, mlp_dim)),
+            (f"l{l}.w2", (mlp_dim, dim)),
+        ]
+    spec += [("ln_f_g", (dim,))]
+    return spec
+
+
+def init_params(seed, vocab, dim, layers, heads, mlp_dim):
+    """Initialise parameters from a scalar seed (f32, traced)."""
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.float32).astype(jnp.int32))
+    spec = param_spec(vocab, dim, layers, heads, mlp_dim)
+    params = []
+    for i, (name, shape) in enumerate(spec):
+        k = jax.random.fold_in(key, i)
+        if name.endswith(("_g",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name == "embed":
+            params.append(0.02 * jax.random.normal(k, shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(k, shape, jnp.float32) * (1.0 / jnp.sqrt(fan_in))
+            )
+    return tuple(params)
+
+
+def _rmsnorm(x, g):
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def forward(params, tokens, cfg):
+    """tokens: int32 [B, T] → logits [B, T, V]."""
+    vocab, dim, layers, heads, mlp_dim = cfg
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]  # [B, T, D]
+    t = tokens.shape[1]
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    dh = dim // heads
+    for _ in range(layers):
+        ln1_g = next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        ln2_g = next(it)
+        w1, w2 = next(it), next(it)
+        h = _rmsnorm(x, ln1_g)
+        q = (h @ wq).reshape(*h.shape[:-1], heads, dh)
+        k = (h @ wk).reshape(*h.shape[:-1], heads, dh)
+        v = (h @ wv).reshape(*h.shape[:-1], heads, dh)
+        att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(dh)
+        att = jnp.where(causal[None, None, :, :] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", att, v).reshape(*h.shape[:-1], dim)
+        x = x + o @ wo
+        h2 = _rmsnorm(x, ln2_g)
+        x = x + jax.nn.gelu(h2 @ w1) @ w2
+    ln_f_g = next(it)
+    x = _rmsnorm(x, ln_f_g)
+    return x @ embed.T  # tied unembedding
+
+
+def loss_fn(params, tokens_x, tokens_y, cfg):
+    logits = forward(params, tokens_x, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tokens_y[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(params, tokens_x_f, tokens_y_f, cfg):
+    """AOT entrypoint: f32 token buffers (the Rust side has one buffer type),
+    cast to int32 inside. Returns (loss, *grads)."""
+    tx = tokens_x_f.astype(jnp.int32)
+    ty = tokens_y_f.astype(jnp.int32)
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tx, ty, cfg))(params)
+    return (loss, *grads)
+
+
+# ----------------------------------------------------------- PRISM steps --
+
+def polar_step_d2(x, alpha):
+    """One PRISM-5 polar iteration (Pallas kernels): R = I − XᵀX,
+    X ← X(I + R/2 + αR²). α comes from the Rust-side sketch fit."""
+    r = residual.residual_polar(x)
+    return ns_update.ns_update_d2(x, r, alpha)
+
+
+def polar_step_d1(x, alpha):
+    """One PRISM-3 polar iteration (Pallas kernels)."""
+    r = residual.residual_polar(x)
+    return ns_update.ns_update_d1(x, r, alpha)
+
+
+def polar_residual_traces(x, s, q=10):
+    """R = I − XᵀX plus its sketched power traces (Pallas): everything the
+    Rust coordinator needs to pick α for the *next* step in one call."""
+    r = residual.residual_polar(x)
+    t = sketch_traces.sketch_traces(s, r, q)
+    fro = jnp.sqrt(jnp.sum(r * r))
+    return t, fro

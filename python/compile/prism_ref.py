@@ -1,0 +1,134 @@
+"""Reference PRISM polar iteration in pure JAX — the cross-language oracle.
+
+Mirrors the Rust `prism::polar` engine coefficient-for-coefficient:
+
+* residual `R = I − XᵀX` (Pallas kernel in the compiled path),
+* sketched power traces `T_i = tr(S R^i Sᵀ)` for i ≤ 4d+2,
+* closed-form quartic coefficients `c₁..c₄` of `m(α)` (paper §A.1),
+* constrained minimisation of `m(α)` on `[ℓ, u]` by solving the cubic
+  `m'(α) = 0` (numpy roots — build-time only, never in the hot path),
+* the update `X ← X·g_d(R; α)`.
+
+Used by pytest to validate both the Pallas kernels *and* the Rust
+implementation (the Rust integration tests execute the AOT artifact built
+from these same formulas and compare iteration-for-iteration).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+# α constraint intervals per degree (paper: [1/2,1] for d=1 from Thm 1;
+# [3/8, 29/20] for d=2, found empirically).
+ALPHA_INTERVAL = {1: (0.5, 1.0), 2: (0.375, 1.45)}
+
+
+def quartic_coeffs_d1(t):
+    """c₁..c₄ of m(α) for d=1 from traces t[i-1] = tr(S R^i Sᵀ) (§A.1)."""
+    t1, t2, t3, t4, t5, t6 = t[:6]
+    del t1
+    c1 = 4.0 * t3 - 4.0 * t2
+    c2 = 6.0 * t4 - 10.0 * t3 + 4.0 * t2
+    c3 = 4.0 * t5 - 8.0 * t4 + 4.0 * t3
+    c4 = t6 - 2.0 * t5 + t4
+    return c1, c2, c3, c4
+
+
+def quartic_coeffs_d2(t):
+    """c₁..c₄ of m(α) for d=2; needs traces up to R¹⁰ (§A.1)."""
+    (t4, t5, t6, t7, t8, t9, t10) = t[3:10]
+    c1 = 0.5 * t7 + 2.0 * t6 + 0.5 * t5 - 3.0 * t4
+    c2 = 1.5 * t8 + 3.0 * t7 - 4.5 * t6 - 4.0 * t5 + 4.0 * t4
+    c3 = 2.0 * t9 - 6.0 * t7 + 4.0 * t6
+    c4 = t10 - 2.0 * t9 + t8
+    return c1, c2, c3, c4
+
+
+def minimize_quartic(c1, c2, c3, c4, lo, hi):
+    """argmin over [lo, hi] of c₁α + c₂α² + c₃α³ + c₄α⁴ via m'(α) = 0."""
+    # m'(α) = c1 + 2 c2 α + 3 c3 α² + 4 c4 α³.
+    roots = np.roots([4.0 * c4, 3.0 * c3, 2.0 * c2, c1])
+    cands = [lo, hi] + [
+        float(r.real) for r in roots if abs(r.imag) < 1e-9 and lo <= r.real <= hi
+    ]
+    m = lambda a: c1 * a + c2 * a * a + c3 * a**3 + c4 * a**4
+    return min(cands, key=m)
+
+
+def fit_alpha(x, s, d):
+    """PRISM Step 5: fit α for iterate x using sketch s (p × n)."""
+    r = ref.residual_polar_ref(x)
+    q = 4 * d + 2
+    t = np.asarray(ref.sketch_traces_ref(s, r, q), dtype=np.float64)
+    lo, hi = ALPHA_INTERVAL[d]
+    if d == 1:
+        c = quartic_coeffs_d1(t)
+    else:
+        c = quartic_coeffs_d2(t)
+    return minimize_quartic(*c, lo, hi)
+
+
+def fit_alpha_exact(x, d, grid=2001):
+    """PRISM Step 4 by brute force: dense grid over the exact objective
+    m(α) = ‖I − Xᵀ X g(R;α)²‖²_F (test oracle — O(n³) per grid point
+    avoided by eigenvalues)."""
+    r = np.asarray(ref.residual_polar_ref(x), dtype=np.float64)
+    lam = np.linalg.eigvalsh(r)
+    lo, hi = ALPHA_INTERVAL[d]
+    alphas = np.linspace(lo, hi, grid)
+    best, best_v = lo, np.inf
+    for a in alphas:
+        if d == 1:
+            g = 1.0 + a * lam
+        else:
+            g = 1.0 + 0.5 * lam + a * lam * lam
+        v = np.sum((1.0 - (1.0 - lam) * g * g) ** 2)
+        if v < best_v:
+            best, best_v = a, v
+    return best
+
+
+def polar_prism_ref(a, d=2, iters=40, p=8, tol=1e-8, seed=0, exact=False):
+    """Full PRISM polar iteration; returns (X, residual history, α history)."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(a, jnp.float32)
+    x = x / jnp.linalg.norm(x)
+    n = x.shape[1]
+    res, alphas = [], []
+    for _ in range(iters):
+        r = ref.residual_polar_ref(x)
+        rn = float(jnp.linalg.norm(r))
+        res.append(rn)
+        if rn < tol:
+            break
+        if exact:
+            alpha = fit_alpha_exact(x, d)
+        else:
+            s = jnp.asarray(rng.randn(p, n) / np.sqrt(p), jnp.float32)
+            alpha = fit_alpha(x, s, d)
+        alphas.append(alpha)
+        if d == 1:
+            x = ref.ns_update_d1_ref(x, r, alpha)
+        else:
+            x = ref.ns_update_d2_ref(x, r, alpha)
+    return x, res, alphas
+
+
+def polar_classic_ref(a, d=2, iters=40, tol=1e-8):
+    """Classical Newton–Schulz (Taylor α: 1/2 for d=1, 3/8 for d=2)."""
+    x = jnp.asarray(a, jnp.float32)
+    x = x / jnp.linalg.norm(x)
+    taylor = {1: 0.5, 2: 0.375}[d]
+    res = []
+    for _ in range(iters):
+        r = ref.residual_polar_ref(x)
+        rn = float(jnp.linalg.norm(r))
+        res.append(rn)
+        if rn < tol:
+            break
+        if d == 1:
+            x = ref.ns_update_d1_ref(x, r, taylor)
+        else:
+            x = ref.ns_update_d2_ref(x, r, taylor)
+    return x, res

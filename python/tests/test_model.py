@@ -1,0 +1,93 @@
+"""L2 correctness: transformer shapes, loss/grads, and trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+CFG = (64, 32, 2, 4, 64)  # vocab, dim, layers, heads, mlp_dim (tiny)
+
+
+def make_params(seed=0):
+    return model.init_params(float(seed), *CFG)
+
+
+def test_param_spec_matches_init():
+    spec = model.param_spec(*CFG)
+    params = make_params()
+    assert len(spec) == len(params)
+    for (name, shape), p in zip(spec, params):
+        assert p.shape == shape, name
+        assert p.dtype == jnp.float32
+
+
+def test_all_params_rank_le_2():
+    for (name, shape) in model.param_spec(*CFG):
+        assert len(shape) <= 2, f"{name} has rank {len(shape)}"
+
+
+def test_forward_shapes_and_causality():
+    params = make_params()
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    logits = model.forward(params, tokens, CFG)
+    assert logits.shape == (2, 8, CFG[0])
+    # Causality: changing a future token must not affect earlier logits.
+    t2 = tokens.at[0, 7].set(5)
+    l2 = model.forward(params, t2, CFG)
+    np.testing.assert_allclose(logits[0, :7], l2[0, :7], rtol=1e-5, atol=1e-5)
+    # ... but it does affect the last position's logits distribution via
+    # embedding? No — position 7's own logits change only through its input.
+    assert not np.allclose(logits[0, 7], l2[0, 7])
+
+
+def test_initial_loss_near_uniform():
+    params = make_params()
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (4, 16), 0, CFG[0])
+    y = jax.random.randint(jax.random.fold_in(key, 1), (4, 16), 0, CFG[0])
+    loss = model.loss_fn(params, x, y, CFG)
+    assert abs(float(loss) - np.log(CFG[0])) < 0.5
+
+
+def test_train_step_returns_finite_grads():
+    params = make_params()
+    x = jnp.ones((2, 8), jnp.float32)
+    y = jnp.ones((2, 8), jnp.float32)
+    out = model.train_step(params, x, y, CFG)
+    loss, grads = out[0], out[1:]
+    assert np.isfinite(float(loss))
+    assert len(grads) == len(params)
+    nonzero = 0
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert np.all(np.isfinite(g))
+        nonzero += int(np.linalg.norm(g) > 0)
+    assert nonzero >= len(params) - 1  # everything but maybe one gain
+
+
+def test_few_sgd_steps_reduce_loss():
+    params = list(make_params())
+    key = jax.random.PRNGKey(3)
+    x = jax.random.randint(key, (8, 16), 0, CFG[0]).astype(jnp.float32)
+    # Learnable structure: target = input shifted by +1 mod vocab.
+    y = jnp.mod(x + 1, CFG[0])
+    step = jax.jit(lambda ps: model.train_step(tuple(ps), x, y, CFG))
+    loss0 = float(step(params)[0])
+    for _ in range(20):
+        out = step(params)
+        grads = out[1:]
+        params = [p - 0.5 * g for p, g in zip(params, grads)]
+    loss1 = float(step(params)[0])
+    assert loss1 < loss0 - 0.3, f"{loss0} -> {loss1}"
+
+
+def test_polar_residual_traces_shapes():
+    x = jax.random.normal(jax.random.PRNGKey(1), (48, 24)) / 7.0
+    s = jax.random.normal(jax.random.PRNGKey(2), (4, 24)) / 2.0
+    t, fro = model.polar_residual_traces(x, s, q=6)
+    assert t.shape == (6,)
+    assert np.isfinite(np.asarray(t)).all()
+    # fro must equal ‖I − XᵀX‖_F
+    r = np.eye(24) - np.asarray(x).T @ np.asarray(x)
+    np.testing.assert_allclose(float(fro), np.linalg.norm(r), rtol=1e-4)

@@ -1,0 +1,143 @@
+"""PRISM algorithm-level tests in Python: the α-fitting machinery and the
+full reference iteration (the same formulas the Rust engines implement).
+
+These pin down the *math* independently of any substrate:
+  * the closed-form quartic coefficients of m(α) match direct evaluation,
+  * the cubic-root minimiser matches a dense grid search,
+  * the sketched fit matches the exact fit for small p (Theorem 2),
+  * PRISM converges, and no slower than classic NS (Theorem 1),
+  * the α trace starts at the upper bound and decays to the Taylor
+    coefficient (the Figs. 3/4 fingerprint).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import prism_ref
+from compile.kernels import ref
+
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def spectrum_matrix(rng, m, n, smin):
+    """m x n matrix with log-spaced singular values in [smin, 1]."""
+    s = np.logspace(np.log10(smin), 0, n)
+    u, _ = np.linalg.qr(rng.randn(m, n))
+    v, _ = np.linalg.qr(rng.randn(n, n))
+    return (u * s) @ v.T
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, d=st.sampled_from([1, 2]))
+def test_quartic_coeffs_match_direct_evaluation(seed, d):
+    """m(α) from the closed-form c's must equal ‖S(I − XᵀX g²)‖²_F − c₀."""
+    rng = np.random.RandomState(seed)
+    n, p = 12, 6
+    x = jnp.asarray(rng.randn(2 * n, n) / (3 * n), jnp.float32)
+    s = jnp.asarray(rng.randn(p, n).astype(np.float32))
+    r = ref.residual_polar_ref(x)
+    q = 4 * d + 2
+    t = np.asarray(ref.sketch_traces_ref(s, r, q), dtype=np.float64)
+    if d == 1:
+        c1, c2, c3, c4 = prism_ref.quartic_coeffs_d1(t)
+    else:
+        c1, c2, c3, c4 = prism_ref.quartic_coeffs_d2(t)
+
+    rn = np.asarray(r, np.float64)
+    sn = np.asarray(s, np.float64)
+    eye = np.eye(n)
+
+    def m_direct(a):
+        g = eye + a * rn if d == 1 else eye + 0.5 * rn + a * rn @ rn
+        inner = eye - (eye - rn) @ g @ g  # I − XᵀX g² with XᵀX = I − R
+        return np.linalg.norm(sn @ inner) ** 2
+
+    m0 = m_direct(0.0)
+    for a in [0.4, 0.7, 1.0, 1.3]:
+        want = m_direct(a) - m0
+        got = c1 * a + c2 * a * a + c3 * a**3 + c4 * a**4
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds)
+def test_cubic_minimizer_matches_grid(seed):
+    rng = np.random.RandomState(seed)
+    c = rng.randn(4)
+    lo, hi = 0.375, 1.45
+    got = prism_ref.minimize_quartic(*c, lo, hi)
+    grid = np.linspace(lo, hi, 20001)
+    m = c[0] * grid + c[1] * grid**2 + c[2] * grid**3 + c[3] * grid**4
+    want = grid[np.argmin(m)]
+    mv = lambda a: c[0] * a + c[1] * a * a + c[2] * a**3 + c[3] * a**4
+    # The analytic argmin must be at least as good as the grid argmin.
+    assert mv(got) <= mv(want) + 1e-9
+
+
+@pytest.mark.parametrize("d", [1, 2])
+def test_sketched_alpha_close_to_exact(d):
+    """Theorem 2 in action: p = 8 sketch ≈ exact fit."""
+    rng = np.random.RandomState(0)
+    a = spectrum_matrix(rng, 32, 16, 1e-3)
+    x = jnp.asarray(a / np.linalg.norm(a), jnp.float32)
+    exact = prism_ref.fit_alpha_exact(x, d)
+    diffs = []
+    for seed in range(5):
+        s = jnp.asarray(
+            np.random.RandomState(100 + seed).randn(8, 16) / np.sqrt(8), jnp.float32
+        )
+        diffs.append(abs(prism_ref.fit_alpha(x, s, d) - exact))
+    lo, hi = prism_ref.ALPHA_INTERVAL[d]
+    assert np.median(diffs) < 0.25 * (hi - lo), (exact, diffs)
+
+
+@pytest.mark.parametrize("smin", [1e-2, 1e-4, 1e-6])
+def test_prism_no_slower_than_classic(smin):
+    """Theorem 1: PRISM needs no more iterations than classic NS."""
+    rng = np.random.RandomState(1)
+    a = spectrum_matrix(rng, 48, 24, smin)
+    _, res_c = prism_ref.polar_classic_ref(a, d=2, iters=120, tol=1e-6)
+    _, res_p, _ = prism_ref.polar_prism_ref(a, d=2, iters=120, tol=1e-6, seed=2)
+    assert res_p[-1] < 1e-6
+    assert len(res_p) <= len(res_c), (len(res_p), len(res_c))
+
+
+def test_prism_converges_to_svd_polar_factor():
+    rng = np.random.RandomState(3)
+    a = spectrum_matrix(rng, 40, 20, 1e-4)
+    x, res, _ = prism_ref.polar_prism_ref(a, d=2, iters=100, tol=1e-9, seed=4)
+    u, _, vt = np.linalg.svd(a, full_matrices=False)
+    np.testing.assert_allclose(np.asarray(x), u @ vt, rtol=0, atol=5e-4)
+
+
+def test_alpha_trace_fingerprint():
+    """α starts pinned at the upper bound, ends at the Taylor coefficient."""
+    rng = np.random.RandomState(5)
+    a = spectrum_matrix(rng, 64, 32, 1e-6)
+    _, _, alphas = prism_ref.polar_prism_ref(a, d=2, iters=100, tol=1e-9, seed=6)
+    lo, hi = prism_ref.ALPHA_INTERVAL[2]
+    assert alphas[0] > hi - 0.05, alphas[:3]
+    assert abs(alphas[-1] - lo) < 0.05, alphas[-3:]
+
+
+def test_exact_and_sketched_iterations_agree():
+    """Full runs with exact vs sketched α land within an iteration or two."""
+    rng = np.random.RandomState(7)
+    a = spectrum_matrix(rng, 36, 18, 1e-4)
+    # tol well above the f32 noise floor (≈1e-7 at this size).
+    _, res_e, _ = prism_ref.polar_prism_ref(a, d=2, iters=80, tol=1e-6, exact=True)
+    _, res_s, _ = prism_ref.polar_prism_ref(a, d=2, iters=80, tol=1e-6, seed=8)
+    assert abs(len(res_e) - len(res_s)) <= 2
+
+
+def test_monotone_residual_decay():
+    rng = np.random.RandomState(9)
+    a = spectrum_matrix(rng, 48, 24, 1e-5)
+    for d in (1, 2):
+        _, res, _ = prism_ref.polar_prism_ref(a, d=d, iters=120, tol=1e-8, seed=10)
+        for r0, r1 in zip(res, res[1:]):
+            if r0 < 1e-5:
+                break  # below this the f32 noise floor dominates
+            assert r1 <= r0 * 1.05, (d, r0, r1)

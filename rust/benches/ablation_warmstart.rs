@@ -1,0 +1,78 @@
+//! Ablation: the Muon warm-start trick (paper §C).
+//!
+//! The paper observes that α_k sits at the interval's upper bound for the
+//! first few iterations (Figs. 3/4 right panels) and exploits it: pin
+//! α = u for the first 3 iterations — skipping the fit entirely — then fit.
+//! This bench quantifies what that buys (fit overhead saved) and costs
+//! (iterations, if the pinned α was wrong for the instance) across spectra,
+//! sweeping warm ∈ {0, 1, 3, 5, all}.
+
+use prism::benchkit::{banner, SeriesWriter, Table};
+use prism::configfmt::Value;
+use prism::prism::polar::{orthogonality_error, polar_prism, PolarOpts};
+use prism::prism::{AlphaMode, StopRule};
+use prism::randmat;
+use prism::rng::Rng;
+
+fn run_with_warm(
+    a: &prism::linalg::Mat,
+    warm: usize,
+    total: usize,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    // Phase 1: α pinned at the upper bound for `warm` iterations.
+    let (_, hi) = prism::coeffs::alpha_interval(2);
+    let sw = prism::util::Stopwatch::start();
+    let stop1 = StopRule::default().with_max_iters(warm.min(total)).with_tol(1e-12);
+    let opts1 = PolarOpts { d: 2, alpha: AlphaMode::Fixed(hi), stop: stop1 };
+    let mid = if warm > 0 { polar_prism(a, &opts1, rng).q } else { a.clone() };
+    // Phase 2: sketched fit for the remainder.
+    let stop2 = StopRule::default().with_max_iters(total - warm.min(total)).with_tol(1e-8);
+    let opts2 = PolarOpts { d: 2, alpha: AlphaMode::Sketched { p: 8 }, stop: stop2 };
+    let out = polar_prism(&mid, &opts2, rng);
+    (orthogonality_error(&out.q), sw.elapsed_s())
+}
+
+fn main() {
+    banner("ablation — Muon warm-start (α pinned high, then fitted)", "paper §C");
+    let mut rng = Rng::seed_from(42);
+    let mut series = SeriesWriter::create("bench_out/ablation_warmstart.jsonl");
+    let total = 8; // a Muon-style fixed budget
+
+    let instances: Vec<(String, prism::linalg::Mat)> = vec![
+        ("gaussian".into(), randmat::gaussian(&mut rng, 128, 64)),
+        ("htmp κ=0.1".into(), randmat::htmp(&mut rng, 128, 64, 0.1)),
+        (
+            "logspace 1e-6".into(),
+            randmat::with_spectrum(&mut rng, 128, 64, &randmat::logspace(1e-6, 1.0, 64)),
+        ),
+        (
+            "narrow [0.5,1]".into(),
+            randmat::with_spectrum(&mut rng, 128, 64, &randmat::logspace(0.5, 1.0, 64)),
+        ),
+    ];
+
+    let mut t = Table::new(&["instance", "warm", "‖I−QᵀQ‖ after 8 iters", "wall ms"]);
+    for (label, a) in &instances {
+        for warm in [0usize, 1, 3, 5, 8] {
+            let (err, wall) = run_with_warm(a, warm, total, &mut rng);
+            t.row(&[
+                label.clone(),
+                if warm == 8 { "all".into() } else { warm.to_string() },
+                format!("{err:.2e}"),
+                format!("{:.1}", wall * 1e3),
+            ]);
+            series.point(&[
+                ("instance", Value::Str(label.clone())),
+                ("warm", Value::Int(warm as i64)),
+                ("err", Value::Float(err)),
+                ("wall_s", Value::Float(wall)),
+            ]);
+        }
+    }
+    println!("\nfixed budget of {total} iterations (Muon regime):");
+    t.print();
+    println!("\nexpected: warm=3 ≈ warm=0 in error (α would have been at the bound anyway)");
+    println!("but cheaper; warm=all loses on narrow spectra where pinning α=1.45 overshoots.");
+    println!("series → bench_out/ablation_warmstart.jsonl");
+}

@@ -1,0 +1,102 @@
+//! Figure 3: convergence of degree-5 polynomial methods for orthogonalizing
+//! a Gaussian random matrix A ∈ R^{n×m} with aspect ratios γ = n/m ∈
+//! {1, 4, 50}; right panel — the α_k trace per aspect ratio.
+//!
+//! The Marchenko–Pastur edge moves with γ (σ_min/σ_max = (√γ−1)/(√γ+1) for
+//! the normalized Gram spectrum), so each γ exercises a different effective
+//! condition number; PRISM adapts its α_k trace to each without being told.
+
+use prism::baselines::polar_express::PolarExpress;
+use prism::benchkit::{banner, SeriesWriter, Table};
+use prism::configfmt::Value;
+use prism::prism::polar::{polar_prism, PolarOpts};
+use prism::prism::{IterationLog, StopRule};
+use prism::randmat;
+use prism::rng::Rng;
+
+const TOL: f64 = 1e-8;
+
+fn row_series(series: &mut SeriesWriter, gamma: f64, method: &str, log: &IterationLog) {
+    for (k, &r) in log.residuals.iter().enumerate() {
+        series.point(&[
+            ("gamma", Value::Float(gamma)),
+            ("method", Value::Str(method.into())),
+            ("iter", Value::Int(k as i64)),
+            (
+                "time_s",
+                Value::Float(if k == 0 { 0.0 } else { log.times_s[k - 1] }),
+            ),
+            ("residual", Value::Float(r)),
+        ]);
+    }
+}
+
+fn main() {
+    banner(
+        "Figure 3 — polar convergence on Gaussian matrices, γ = n/m ∈ {1,4,50}",
+        "paper Fig. 3 (wall-clock) / Fig. D.1 (iterations)",
+    );
+    let m = 64;
+    let stop = StopRule::default().with_max_iters(200).with_tol(TOL);
+    let pe = PolarExpress::paper_default();
+    let mut series = SeriesWriter::create("bench_out/fig3.jsonl");
+    let mut rng = Rng::seed_from(42);
+
+    let mut t = Table::new(&[
+        "gamma",
+        "NS-5 iters",
+        "NS-5 ms",
+        "PolarExpress iters",
+        "PE ms",
+        "PRISM-5 iters",
+        "PRISM ms",
+    ]);
+    let mut alpha_rows: Vec<(f64, Vec<f64>)> = Vec::new();
+    for gamma in [1usize, 4, 50] {
+        let n = m * gamma;
+        let a = randmat::gaussian(&mut rng, n, m);
+
+        let classic = polar_prism(&a, &PolarOpts::classic(2).with_stop(stop), &mut rng);
+        let (_, pe_log) = pe.polar(&a, &stop);
+        let fast = polar_prism(&a, &PolarOpts::degree5().with_stop(stop), &mut rng);
+
+        row_series(&mut series, gamma as f64, "newton-schulz", &classic.log);
+        row_series(&mut series, gamma as f64, "polar-express", &pe_log);
+        row_series(&mut series, gamma as f64, "prism", &fast.log);
+
+        let it = |l: &IterationLog| {
+            l.iters_to_tol(TOL).map(|k| k.to_string()).unwrap_or_else(|| "—".into())
+        };
+        let ms = |l: &IterationLog| format!("{:.1}", l.time_to_tol(TOL).unwrap_or(l.wall_s) * 1e3);
+        t.row(&[
+            format!("{gamma}"),
+            it(&classic.log),
+            ms(&classic.log),
+            it(&pe_log),
+            ms(&pe_log),
+            it(&fast.log),
+            ms(&fast.log),
+        ]);
+        alpha_rows.push((gamma as f64, fast.log.alphas.clone()));
+    }
+    println!("\nGaussian A (m = {m}), ‖I − XᵀX‖_F < {TOL:.0e}:");
+    t.print();
+
+    println!("\nright panel — PRISM α_k per aspect ratio:");
+    for (gamma, alphas) in &alpha_rows {
+        let pts: Vec<String> = alphas.iter().map(|a| format!("{a:.3}")).collect();
+        println!("  γ={gamma:<4} [{}]", pts.join(", "));
+        for (k, &a) in alphas.iter().enumerate() {
+            series.point(&[
+                ("gamma", Value::Float(*gamma)),
+                ("method", Value::Str("prism-alpha".into())),
+                ("iter", Value::Int(k as i64)),
+                ("alpha", Value::Float(a)),
+            ]);
+        }
+    }
+    println!("\nexpected shape: PRISM fastest for all γ; larger γ ⇒ better-conditioned");
+    println!("Gram spectrum ⇒ fewer iterations; α_k starts at the upper bound and decays");
+    println!("to the Taylor coefficient 0.375 as the spectrum contracts to 1.");
+    println!("series → bench_out/fig3.jsonl");
+}

@@ -1,0 +1,102 @@
+//! Figure 6: Muon-vs-AdamW language-model training with different polar
+//! backends — the end-to-end three-layer experiment.
+//!
+//! Loads the AOT-compiled JAX/Pallas `train_step` artifact through PJRT
+//! (`make artifacts` must have run) and trains the transformer LM on a
+//! synthetic Markov/Zipf corpus with four optimizers: AdamW, and Muon with
+//! PolarExpress / PRISM-3 / PRISM-5 polar factors, using the paper's §C
+//! iteration budgets (5/5/3 with warm-start α pinned high).
+//!
+//! Paper final val losses: PolarExpress 5.4523, PRISM-5 5.0251,
+//! PRISM-3 4.9886, AdamW 6.8689 — the *ordering* (every Muon ≪ AdamW,
+//! PRISM ≤ PolarExpress) is the reproduction target.
+
+use prism::benchkit::{banner, SeriesWriter, Table};
+use prism::config::Backend;
+use prism::configfmt::Value;
+use prism::coordinator::train::TrainDriver;
+use prism::optim::adamw::AdamW;
+use prism::optim::muon::Muon;
+use prism::optim::Optimizer;
+use prism::rng::Rng;
+use prism::runtime::Runtime;
+use prism::workload::MarkovCorpus;
+
+fn main() {
+    banner("Figure 6 — Muon polar backends vs AdamW on the AOT LM", "paper Fig. 6, §C");
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIPPED: artifacts not available ({e}); run `make artifacts` first.");
+            return;
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let steps = std::env::var("PRISM_FIG6_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60usize);
+    let seed = 42u64;
+    let mut series = SeriesWriter::create("bench_out/fig6.jsonl");
+
+    let probe = TrainDriver::new(&rt, seed as f32).expect("load train driver");
+    let (vocab, batch, seq) = (probe.vocab, probe.batch, probe.seq_len);
+    drop(probe);
+    let mut crng = Rng::seed_from(seed);
+    let corpus = MarkovCorpus::generate(&mut crng, vocab, 200_000);
+    println!(
+        "LM: vocab {vocab}, batch {batch} x seq {seq}; corpus {} tokens ({:.3} nats unigram); {steps} steps/optimizer\n",
+        corpus.tokens.len(),
+        corpus.unigram_entropy()
+    );
+
+    let opts: Vec<Box<dyn Optimizer>> = vec![
+        Box::new(AdamW::paper_default()),
+        Box::new(Muon::paper_default(Backend::PolarExpress, seed)),
+        Box::new(Muon::paper_default(Backend::Prism3, seed)),
+        Box::new(Muon::paper_default(Backend::Prism5, seed)),
+    ];
+
+    let mut t = Table::new(&["optimizer", "final train loss", "val loss", "ms/step"]);
+    for mut opt in opts {
+        let mut driver = TrainDriver::new(&rt, seed as f32).expect("driver");
+        let mut rng = Rng::seed_from(seed ^ 0xF16);
+        let name = opt.name();
+        for step in 0..steps {
+            let (xs, ys) = corpus.sample_batch(&mut rng, driver.batch, driver.seq_len);
+            let loss = driver.step(&xs, &ys, opt.as_mut()).expect("train step");
+            series.point(&[
+                ("optimizer", Value::Str(name.clone())),
+                ("step", Value::Int(step as i64)),
+                ("train_loss", Value::Float(loss)),
+            ]);
+        }
+        let mut vrng = Rng::seed_from(seed ^ 0x7E57);
+        let mut val = 0.0;
+        for _ in 0..6 {
+            let (xs, ys) = corpus.sample_batch(&mut vrng, driver.batch, driver.seq_len);
+            val += driver.eval(&xs, &ys).expect("eval");
+        }
+        val /= 6.0;
+        let ms =
+            driver.step_times_s.iter().sum::<f64>() / driver.step_times_s.len() as f64 * 1e3;
+        series.point(&[
+            ("optimizer", Value::Str(name.clone())),
+            ("val_loss", Value::Float(val)),
+            ("ms_per_step", Value::Float(ms)),
+        ]);
+        t.row(&[
+            name,
+            format!("{:.4}", driver.losses.last().copied().unwrap_or(f64::NAN)),
+            format!("{val:.4}"),
+            format!("{ms:.0}"),
+        ]);
+    }
+    println!();
+    t.print();
+    println!("\npaper (GPT-2, 200M FineWeb tokens): PE 5.4523, PRISM-5 5.0251,");
+    println!("PRISM-3 4.9886, AdamW 6.8689 — expect the same ordering here:");
+    println!("all Muon variants well below AdamW; PRISM at or below PolarExpress,");
+    println!("with PRISM-5 the cheapest per step (3 iterations vs 5).");
+    println!("series → bench_out/fig6.jsonl");
+}

@@ -1,0 +1,72 @@
+//! L3 substrate roofline: blocked GEMM / SYRK throughput across sizes.
+//!
+//! Everything PRISM does is GEMM-dominated, so the linalg substrate's
+//! GFLOP/s sets the scale of every other benchmark. We track it here to (a)
+//! catch regressions and (b) anchor the §Perf roofline analysis in
+//! EXPERIMENTS.md (single-core f64; target = practical scalar/auto-vec
+//! roofline, not BLAS).
+
+use prism::benchkit::{banner, Bench, SeriesWriter, Table};
+use prism::configfmt::Value;
+use prism::linalg::gemm::{matmul, matmul_at_b, syrk_at_a};
+use prism::randmat;
+use prism::rng::Rng;
+
+fn main() {
+    banner("perf — GEMM/SYRK substrate throughput", "EXPERIMENTS.md §Perf (L3)");
+    let bench = Bench { min_time_s: 0.3, max_samples: 15, warmup: 1 };
+    let mut rng = Rng::seed_from(42);
+    let mut series = SeriesWriter::create("bench_out/perf_gemm.jsonl");
+
+    let mut t = Table::new(&["op", "n", "median ms", "GFLOP/s"]);
+    for n in [64usize, 128, 256, 512] {
+        let a = randmat::gaussian(&mut rng, n, n);
+        let b = randmat::gaussian(&mut rng, n, n);
+        let flops = 2.0 * (n as f64).powi(3);
+
+        let s = bench.run(&format!("matmul_{n}"), || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        t.row(&[
+            "C = A·B".into(),
+            n.to_string(),
+            format!("{:.2}", s.median_s() * 1e3),
+            format!("{:.2}", flops / s.median_s() / 1e9),
+        ]);
+        series.point(&[
+            ("op", Value::Str("matmul".into())),
+            ("n", Value::Int(n as i64)),
+            ("gflops", Value::Float(flops / s.median_s() / 1e9)),
+        ]);
+
+        let s = bench.run(&format!("matmul_at_b_{n}"), || {
+            std::hint::black_box(matmul_at_b(&a, &b));
+        });
+        t.row(&[
+            "C = Aᵀ·B".into(),
+            n.to_string(),
+            format!("{:.2}", s.median_s() * 1e3),
+            format!("{:.2}", flops / s.median_s() / 1e9),
+        ]);
+
+        // SYRK does half the FLOPs of a full GEMM (symmetric result).
+        let s = bench.run(&format!("syrk_{n}"), || {
+            std::hint::black_box(syrk_at_a(&a));
+        });
+        t.row(&[
+            "C = Aᵀ·A".into(),
+            n.to_string(),
+            format!("{:.2}", s.median_s() * 1e3),
+            format!("{:.2}", flops / s.median_s() / 1e9),
+        ]);
+        series.point(&[
+            ("op", Value::Str("syrk".into())),
+            ("n", Value::Int(n as i64)),
+            ("gflops", Value::Float(flops / s.median_s() / 1e9)),
+        ]);
+    }
+    t.print();
+    println!("\n(GFLOP/s computed on the full 2n³ count; syrk exploits symmetry so its");
+    println!("effective rate appears ~2x the work it actually does.)");
+    println!("series → bench_out/perf_gemm.jsonl");
+}

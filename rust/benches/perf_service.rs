@@ -1,0 +1,94 @@
+//! L3 coordinator throughput/latency under load — the service-side view
+//! used in EXPERIMENTS.md §Perf.
+//!
+//! Sweeps worker count, batching limit, and backend on a fixed synthetic
+//! gradient stream, reporting jobs/s and latency percentiles. The service
+//! must scale with workers until the GEMM work saturates physical cores, and
+//! batching must trade p50 latency for throughput — both are asserted
+//! qualitatively in the printed notes.
+
+use prism::benchkit::{banner, SeriesWriter, Table};
+use prism::config::{Backend, ServiceConfig};
+use prism::configfmt::Value;
+use prism::coordinator::service::{JobKind, Service};
+use prism::linalg::gemm::syrk_at_a;
+use prism::util::Stopwatch;
+use prism::workload::GradientStream;
+
+fn run(workers: usize, max_batch: usize, backend: Backend, jobs: usize, n: usize) -> (f64, f64, f64) {
+    let cfg = ServiceConfig {
+        workers,
+        queue_capacity: 256,
+        max_batch,
+        sketch_p: 8,
+        max_iters: 60,
+        tol: 1e-7,
+    };
+    let shapes = vec![(n, n), (n, n / 2)];
+    let mut stream = GradientStream::new(42, shapes, 0.5);
+    let svc = Service::start(cfg, backend, 42);
+    let sw = Stopwatch::start();
+    for _ in 0..jobs {
+        let (layer, g) = stream.next_grad();
+        let (r, c) = g.shape();
+        if r == c {
+            svc.submit(layer, JobKind::InvSqrt { eps: 1e-8 }, syrk_at_a(&g)).unwrap();
+        } else {
+            svc.submit(layer, JobKind::Polar, g).unwrap();
+        }
+    }
+    let results = svc.drain().unwrap();
+    let wall = sw.elapsed_s();
+    let mut lat: Vec<f64> = results.iter().map(|r| r.latency_s * 1e3).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
+    (jobs as f64 / wall, pct(0.5), pct(0.99))
+}
+
+fn main() {
+    banner("perf — preconditioner service throughput/latency", "EXPERIMENTS.md §Perf (L3)");
+    let jobs = 64;
+    let n = 96;
+    let mut series = SeriesWriter::create("bench_out/perf_service.jsonl");
+
+    let mut t = Table::new(&["workers", "max_batch", "backend", "jobs/s", "p50 ms", "p99 ms"]);
+    let mut cases: Vec<(usize, usize, Backend, &str)> = Vec::new();
+    for w in [1usize, 2, 4, 8] {
+        cases.push((w, 4, Backend::Prism5, "prism5"));
+    }
+    for b in [1usize, 2, 8, 16] {
+        cases.push((4, b, Backend::Prism5, "prism5"));
+    }
+    for (bk, nm) in [
+        (Backend::Eigen, "eigen"),
+        (Backend::PolarExpress, "polar-express"),
+        (Backend::Prism3, "prism3"),
+        (Backend::NewtonSchulz, "newton-schulz"),
+    ] {
+        cases.push((4, 4, bk, nm));
+    }
+    for (w, b, bk, nm) in cases {
+        let (jps, p50, p99) = run(w, b, bk, jobs, n);
+        t.row(&[
+            w.to_string(),
+            b.to_string(),
+            nm.to_string(),
+            format!("{jps:.1}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+        ]);
+        series.point(&[
+            ("workers", Value::Int(w as i64)),
+            ("max_batch", Value::Int(b as i64)),
+            ("backend", Value::Str(nm.into())),
+            ("jobs_per_s", Value::Float(jps)),
+            ("p50_ms", Value::Float(p50)),
+            ("p99_ms", Value::Float(p99)),
+        ]);
+    }
+    println!("\n{jobs} jobs, base shape {n}x{n}, HTMP(κ=0.5):");
+    t.print();
+    println!("\nexpected: throughput scales with workers to core count; larger batches");
+    println!("raise p50 (queueing) without throughput loss; PRISM ≥ eigen at this size.");
+    println!("series → bench_out/perf_service.jsonl");
+}

@@ -1,0 +1,108 @@
+//! Exact matrix functions via eigendecomposition / SVD — the baseline the
+//! paper's Shampoo experiment calls "eigen-decomposition" (Fig. 5) and the
+//! correctness oracle for every iterative engine.
+
+use crate::linalg::eigen::symmetric_eigen;
+use crate::linalg::svd::svd;
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+
+/// `A^{1/2}` for symmetric PSD `A` (eigenvalues clamped at 0).
+pub fn sqrt_eigen(a: &Mat) -> Mat {
+    symmetric_eigen(a).apply_fn(|w| w.max(0.0).sqrt())
+}
+
+/// `A^{-1/2}` with damping: `(A + εI)^{-1/2}` — Shampoo's convention.
+pub fn inv_sqrt_eigen(a: &Mat, eps: f64) -> Mat {
+    symmetric_eigen(a).apply_fn(|w| 1.0 / (w.max(0.0) + eps).sqrt())
+}
+
+/// `A^{-1/p}` with damping.
+pub fn inv_root_eigen(a: &Mat, p: usize, eps: f64) -> Result<Mat> {
+    if p == 0 {
+        return Err(Error::Parse("p must be >= 1".into()));
+    }
+    Ok(symmetric_eigen(a).apply_fn(|w| (w.max(0.0) + eps).powf(-1.0 / p as f64)))
+}
+
+/// Exact polar factor via SVD (both orientations).
+pub fn polar_eigen(a: &Mat) -> Mat {
+    let (m, n) = a.shape();
+    if m >= n {
+        svd(a).polar_factor()
+    } else {
+        svd(&a.transpose()).polar_factor().transpose()
+    }
+}
+
+/// `sign(A)` for symmetric `A`.
+pub fn sign_eigen(a: &Mat) -> Mat {
+    symmetric_eigen(a).apply_fn(|w| if w >= 0.0 { 1.0 } else { -1.0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_at_b};
+    use crate::randmat;
+    use crate::rng::Rng;
+
+    #[test]
+    fn sqrt_and_invsqrt_consistent() {
+        let mut rng = Rng::seed_from(1);
+        let w = randmat::logspace(0.01, 1.0, 10);
+        let a = randmat::sym_with_spectrum(&mut rng, 10, &w);
+        let s = sqrt_eigen(&a);
+        assert!(matmul(&s, &s).sub(&a).max_abs() < 1e-9);
+        let is = inv_sqrt_eigen(&a, 0.0);
+        assert!(matmul(&s, &is).sub(&Mat::eye(10)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn damping_regularises() {
+        let mut rng = Rng::seed_from(2);
+        // Singular matrix: rank deficient.
+        let g = Mat::gaussian(&mut rng, 10, 3, 1.0);
+        let a = crate::linalg::gemm::syrk_a_at(&g); // 10x10 rank 3
+        let is = inv_sqrt_eigen(&a, 1e-4);
+        assert!(!is.has_non_finite());
+    }
+
+    #[test]
+    fn inv_root_p4() {
+        let mut rng = Rng::seed_from(3);
+        let w = randmat::logspace(0.1, 1.0, 8);
+        let a = randmat::sym_with_spectrum(&mut rng, 8, &w);
+        let r = inv_root_eigen(&a, 4, 0.0).unwrap();
+        let r2 = matmul(&r, &r);
+        let r4 = matmul(&r2, &r2);
+        assert!(matmul(&r4, &a).sub(&Mat::eye(8)).max_abs() < 1e-8);
+        assert!(inv_root_eigen(&a, 0, 0.0).is_err());
+    }
+
+    #[test]
+    fn polar_orthogonal_both_orientations() {
+        let mut rng = Rng::seed_from(4);
+        for shape in [(12, 7), (7, 12)] {
+            let a = randmat::gaussian(&mut rng, shape.0, shape.1, );
+            let q = polar_eigen(&a);
+            assert_eq!(q.shape(), shape);
+            let k = shape.0.min(shape.1);
+            let g = if shape.0 >= shape.1 {
+                matmul_at_b(&q, &q)
+            } else {
+                crate::linalg::gemm::syrk_a_at(&q)
+            };
+            assert!(g.sub(&Mat::eye(k)).max_abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn sign_eigen_squares_to_identity() {
+        let mut rng = Rng::seed_from(5);
+        let w = vec![-0.9, -0.1, 0.2, 0.8];
+        let a = randmat::sym_with_spectrum(&mut rng, 4, &w);
+        let s = sign_eigen(&a);
+        assert!(matmul(&s, &s).sub(&Mat::eye(4)).max_abs() < 1e-9);
+    }
+}

@@ -1,0 +1,16 @@
+//! Baseline algorithms the paper compares against.
+//!
+//! * [`polar_express`] — PolarExpress (Amsel et al. 2025): per-iteration
+//!   minimax-optimal odd degree-5 polynomials on a prescribed singular-value
+//!   interval, constructed here by a Remez/equioscillation solver and
+//!   precomputed for the paper's σ_min = 10⁻³ tuning. Includes the coupled
+//!   form for (inverse) square roots (paper footnote 2).
+//! * [`eigen_fn`] — exact matrix functions via eigendecomposition/SVD, the
+//!   Shampoo default the paper benchmarks against in Fig. 5.
+//! * [`cans`] — a Chebyshev-type accelerated Newton–Schulz in the spirit of
+//!   Grishina et al. 2025: first-iteration interval rescaling + classical
+//!   updates afterwards.
+
+pub mod polar_express;
+pub mod eigen_fn;
+pub mod cans;

@@ -1,0 +1,226 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Provides warmup + adaptive iteration timing with median/IQR reporting, a
+//! fixed-width table printer for the paper-figure benches, and JSONL series
+//! output so plots can be regenerated outside Rust.
+
+use crate::configfmt::{to_json, Value};
+use crate::util::{fmt_duration, median, percentile, Stopwatch};
+use std::collections::BTreeMap;
+use std::io::Write;
+
+/// Timing statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn median_s(&self) -> f64 {
+        median(&self.samples)
+    }
+    pub fn p10_s(&self) -> f64 {
+        percentile(&self.samples, 10.0)
+    }
+    pub fn p90_s(&self) -> f64 {
+        percentile(&self.samples, 90.0)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    /// Minimum total measured time per case.
+    pub min_time_s: f64,
+    /// Max samples per case (cap for slow cases).
+    pub max_samples: usize,
+    pub warmup: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { min_time_s: 0.2, max_samples: 25, warmup: 1 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { min_time_s: 0.05, max_samples: 7, warmup: 1 }
+    }
+
+    /// Time `f` repeatedly; each sample is one invocation.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let total = Stopwatch::start();
+        while samples.len() < 3
+            || (total.elapsed_s() < self.min_time_s && samples.len() < self.max_samples)
+        {
+            let sw = Stopwatch::start();
+            f();
+            samples.push(sw.elapsed_s());
+        }
+        Stats { name: name.to_string(), samples }
+    }
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$} | ", cell, w = widths[c]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push_str("|");
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// JSONL series writer: each `point` call appends one JSON object. Used by
+/// the figure benches to dump (x, y, series) triples for re-plotting.
+pub struct SeriesWriter {
+    file: Option<std::fs::File>,
+}
+
+impl SeriesWriter {
+    /// Write to `path`, or a no-op writer if the directory can't be created.
+    pub fn create(path: &str) -> SeriesWriter {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        SeriesWriter { file: std::fs::File::create(path).ok() }
+    }
+
+    pub fn noop() -> SeriesWriter {
+        SeriesWriter { file: None }
+    }
+
+    pub fn point(&mut self, fields: &[(&str, Value)]) {
+        if let Some(f) = self.file.as_mut() {
+            let mut map = BTreeMap::new();
+            for (k, v) in fields {
+                map.insert(k.to_string(), v.clone());
+            }
+            let _ = writeln!(f, "{}", to_json(&Value::Table(map)));
+        }
+    }
+}
+
+/// Convenience: render one bench stat line.
+pub fn stat_line(s: &Stats) -> String {
+    format!(
+        "{:<40} median {:>10}  p10 {:>10}  p90 {:>10}  (n={})",
+        s.name,
+        fmt_duration(s.median_s()),
+        fmt_duration(s.p10_s()),
+        fmt_duration(s.p90_s()),
+        s.samples.len()
+    )
+}
+
+/// Standard bench entry banner.
+pub fn banner(title: &str, paper_ref: &str) {
+    println!("\n=== {title} ===");
+    println!("reproduces: {paper_ref}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bench { min_time_s: 0.0, max_samples: 5, warmup: 0 };
+        let s = b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.samples.len() >= 3);
+        assert!(s.median_s() >= 0.0);
+        assert!(s.p10_s() <= s.p90_s());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["algo", "time"]);
+        t.row(&["ns".into(), "1.0ms".into()]);
+        t.row(&["prism-long-name".into(), "0.5ms".into()]);
+        let r = t.render();
+        assert!(r.contains("prism-long-name"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4); // header, sep, 2 rows
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+
+    #[test]
+    fn series_writer_writes_jsonl() {
+        let path = "/tmp/prism_test_series.jsonl";
+        {
+            let mut w = SeriesWriter::create(path);
+            w.point(&[("x", Value::Int(1)), ("y", Value::Float(0.5))]);
+            w.point(&[("x", Value::Int(2)), ("y", Value::Float(0.25))]);
+        }
+        let content = std::fs::read_to_string(path).unwrap();
+        assert_eq!(content.lines().count(), 2);
+        assert!(content.contains("\"x\":1"));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn noop_writer_ok() {
+        let mut w = SeriesWriter::noop();
+        w.point(&[("x", Value::Int(1))]); // must not panic
+    }
+
+    #[test]
+    fn stat_line_contains_name() {
+        let s = Stats { name: "t".into(), samples: vec![0.001, 0.002, 0.003] };
+        assert!(stat_line(&s).contains('t'));
+    }
+}

@@ -1,0 +1,192 @@
+//! Minimal command-line parsing (no `clap` offline).
+//!
+//! Supports `prog <subcommand> --flag value --switch positional ...` with
+//! typed accessors, defaults, and an auto-generated usage string.
+
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, `--switch`
+/// booleans, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without program name). Flags may be `--k v` or `--k=v`.
+    /// The first non-flag token is treated as the subcommand if
+    /// `expect_subcommand` is set.
+    pub fn parse(argv: &[String], expect_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else if expect_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse from `std::env::args()`.
+    pub fn from_env(expect_subcommand: bool) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, expect_subcommand)
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_string(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{name}: expected float, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated f64 list.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| Error::Parse(format!("--{name}: bad float '{s}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Declarative usage help.
+pub struct Usage {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub subcommands: &'static [(&'static str, &'static str)],
+}
+
+impl Usage {
+    pub fn render(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <subcommand> [--flags]\n\nSUBCOMMANDS:\n",
+            self.program, self.about, self.program);
+        for (name, about) in self.subcommands {
+            s.push_str(&format!("  {name:<18} {about}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_subcommand_and_flags() {
+        // Note: a bare `--flag value` is always treated as an option pair, so
+        // boolean switches go last or use `--flag=`: this is documented
+        // behaviour of the schema-less parser.
+        let a = Args::parse(&sv(&["polar", "--n", "256", "file.txt", "--verbose"]), true);
+        assert_eq!(a.subcommand.as_deref(), Some("polar"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 256);
+        assert!(a.has_switch("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn parse_equals_form() {
+        let a = Args::parse(&sv(&["--lr=0.1", "--name=run1"]), false);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.1);
+        assert_eq!(a.get_string("name", ""), "run1");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], false);
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("x", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_string("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = Args::parse(&sv(&["--n", "abc"]), false);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn f64_list_parses() {
+        let a = Args::parse(&sv(&["--gammas", "1,4,50"]), false);
+        assert_eq!(a.get_f64_list("gammas", &[]).unwrap(), vec![1.0, 4.0, 50.0]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(&sv(&["run", "--fast"]), true);
+        assert!(a.has_switch("fast"));
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = Usage {
+            program: "prism",
+            about: "matrix functions",
+            subcommands: &[("polar", "orthogonalize")],
+        };
+        let r = u.render();
+        assert!(r.contains("polar"));
+        assert!(r.contains("USAGE"));
+    }
+}

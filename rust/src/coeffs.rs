@@ -1,0 +1,525 @@
+//! Closed-form assembly of the PRISM fitting objective `m(α)` from
+//! (sketched) power traces `T_i ≈ tr(R^i)`.
+//!
+//! The derivations follow Appendix A of the paper. Writing the
+//! per-eigenvalue next-residual as `h(λ, α)` and `m(α) = Σ_i h(λ_i, α)²`,
+//! each family below gives polynomial coefficients of `m` (ascending in α,
+//! constant term set to 0 — it does not affect the argmin):
+//!
+//! * Newton–Schulz d=1 (`g₁(ξ;α) = 1 + αξ`, 3rd-order iteration),
+//! * Newton–Schulz d=2 (`g₂(ξ;α) = 1 + ξ/2 + αξ²`, 5th-order iteration),
+//! * coupled inverse Newton for `A^{-1/p}` (general p via binomial sums),
+//! * Chebyshev inverse iteration, and
+//! * DB-Newton, whose coefficients need only `tr(M)`, `tr(M²) = ‖M‖_F²`,
+//!   `tr(M⁻¹)`, `tr(M⁻²)` — all O(n²) given the inverse the iteration
+//!   already computes, so **no sketching is needed** (paper §A.2).
+
+use crate::linalg::Mat;
+
+/// Recommended α-constraint interval per degree (paper Thm. 1 / §4.1):
+/// d=1 → [1/2, 1]; d=2 → [3/8, 29/20].
+///
+/// For d ≥ 3 (which the paper's Part I defines but never tunes) we
+/// generalise the pattern behind the published intervals: the lower bound
+/// is the Taylor coefficient `a_d` (so the fit can always fall back to the
+/// classical iteration — the "never slower" guarantee), and the upper bound
+/// caps the small-σ growth factor `g_d(1; α) = Σ_{k<d} a_k + α` at `d + 1`,
+/// i.e. `u_d = (d+1) − Σ_{k<d} a_k`. This reproduces the paper's u₁ = 1
+/// exactly and gives u₂ = 1.5 (paper's empirical choice: 1.45, which we
+/// keep verbatim for d = 2).
+pub fn alpha_interval(d: usize) -> (f64, f64) {
+    match d {
+        1 => (0.5, 1.0),
+        2 => (3.0 / 8.0, 29.0 / 20.0),
+        _ => {
+            let partial: f64 = (0..d).map(taylor_coeff).sum();
+            (taylor_coeff(d), (d as f64 + 1.0) - partial)
+        }
+    }
+}
+
+/// Taylor coefficient `a_k` of `f(ξ) = (1−ξ)^{-1/2} = Σ_k a_k ξ^k`:
+/// `a_k = C(2k, k) / 4^k` (a₀ = 1, a₁ = 1/2, a₂ = 3/8, a₃ = 5/16, ...).
+pub fn taylor_coeff(k: usize) -> f64 {
+    binom(2 * k, k) / 4f64.powi(k as i32)
+}
+
+/// Multiply two polynomials given by ascending coefficient vectors.
+fn poly_mul(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; a.len() + b.len() - 1];
+    for (i, &av) in a.iter().enumerate() {
+        if av == 0.0 {
+            continue;
+        }
+        for (j, &bv) in b.iter().enumerate() {
+            out[i + j] += av * bv;
+        }
+    }
+    out
+}
+
+/// `T[P] = Σ_j p_j · tr(S R^j Sᵀ)` for a polynomial `P(ξ) = Σ p_j ξ^j`
+/// with **zero constant term** (all fitting polynomials here vanish at 0,
+/// so the unavailable power-0 trace is never needed).
+fn trace_of_poly(p: &[f64], t: &[f64]) -> f64 {
+    assert!(p.is_empty() || p[0].abs() < 1e-300, "non-zero constant term");
+    p.iter()
+        .enumerate()
+        .skip(1)
+        .map(|(j, &c)| c * t[j - 1])
+        .sum()
+}
+
+/// Quartic coefficients of `m(α)` for **general-degree** Newton–Schulz
+/// (`g_d(ξ; α) = f_{d−1}(ξ) + αξ^d`), assembled symbolically:
+///
+/// with `F = f_{d−1}` and `1 − ξ·X²-substitution` (X² = I − R), the sketched
+/// residual is `M(α) = M₀ + αM₁ + α²M₂` where
+/// `M₀ = 1 − (1−ξ)F²`, `M₁ = −2(1−ξ)F ξ^d`, `M₂ = −(1−ξ)ξ^{2d}`,
+/// so `m(α) = T[M₀²] + 2αT[M₀M₁] + α²(T[M₁²] + 2T[M₀M₂]) + 2α³T[M₁M₂]
+/// + α⁴T[M₂²]` — every term a trace of a power of R up to `4d + 2`
+/// (exactly the paper's §4.2 count). Reduces to [`ns_d1_coeffs`] /
+/// [`ns_d2_coeffs`] for d = 1, 2.
+pub fn ns_general_coeffs(t: &[f64], d: usize) -> [f64; 5] {
+    assert!(d >= 1);
+    assert!(t.len() >= 4 * d + 2, "need T1..T{}", 4 * d + 2);
+    // F = f_{d-1}(ξ), one_minus = (1 − ξ), xi_d = ξ^d.
+    let f: Vec<f64> = (0..d).map(taylor_coeff).collect();
+    let one_minus = vec![1.0, -1.0];
+    let mut xi_d = vec![0.0; d + 1];
+    xi_d[d] = 1.0;
+
+    // M0 = 1 − (1−ξ)F² (constant terms cancel: F(0) = 1).
+    let mut m0: Vec<f64> = poly_mul(&one_minus, &poly_mul(&f, &f))
+        .iter()
+        .map(|c| -c)
+        .collect();
+    m0[0] += 1.0;
+    // M1 = −2(1−ξ)F·ξ^d ; M2 = −(1−ξ)·ξ^{2d}.
+    let m1: Vec<f64> = poly_mul(&poly_mul(&one_minus, &f), &xi_d)
+        .iter()
+        .map(|c| -2.0 * c)
+        .collect();
+    let m2: Vec<f64> = poly_mul(&one_minus, &poly_mul(&xi_d, &xi_d))
+        .iter()
+        .map(|c| -c)
+        .collect();
+
+    let tp = |a: &[f64], b: &[f64]| trace_of_poly(&poly_mul(a, b), t);
+    [
+        0.0, // constant term unused by the argmin
+        2.0 * tp(&m0, &m1),
+        tp(&m1, &m1) + 2.0 * tp(&m0, &m2),
+        2.0 * tp(&m1, &m2),
+        tp(&m2, &m2),
+    ]
+}
+
+/// Quartic coefficients for Newton–Schulz d=1 from traces `t[i] = T_{i+1}`
+/// (so `t` must hold T₁..T₆, length ≥ 6).
+///
+/// c₁ = 4T₃ − 4T₂;  c₂ = 6T₄ − 10T₃ + 4T₂;
+/// c₃ = 4T₅ − 8T₄ + 4T₃;  c₄ = T₆ − 2T₅ + T₄.
+pub fn ns_d1_coeffs(t: &[f64]) -> [f64; 5] {
+    assert!(t.len() >= 6, "need T1..T6");
+    let tr = |i: usize| t[i - 1];
+    [
+        0.0,
+        4.0 * tr(3) - 4.0 * tr(2),
+        6.0 * tr(4) - 10.0 * tr(3) + 4.0 * tr(2),
+        4.0 * tr(5) - 8.0 * tr(4) + 4.0 * tr(3),
+        tr(6) - 2.0 * tr(5) + tr(4),
+    ]
+}
+
+/// Quartic coefficients for Newton–Schulz d=2; needs T₁..T₁₀.
+///
+/// c₁ = ½T₇ + 2T₆ + ½T₅ − 3T₄;
+/// c₂ = 3/2·T₈ + 3T₇ − 9/2·T₆ − 4T₅ + 4T₄;
+/// c₃ = 2T₉ − 6T₇ + 4T₆;  c₄ = T₁₀ − 2T₉ + T₈.
+pub fn ns_d2_coeffs(t: &[f64]) -> [f64; 5] {
+    assert!(t.len() >= 10, "need T1..T10");
+    let tr = |i: usize| t[i - 1];
+    [
+        0.0,
+        0.5 * tr(7) + 2.0 * tr(6) + 0.5 * tr(5) - 3.0 * tr(4),
+        1.5 * tr(8) + 3.0 * tr(7) - 4.5 * tr(6) - 4.0 * tr(5) + 4.0 * tr(4),
+        2.0 * tr(9) - 6.0 * tr(7) + 4.0 * tr(6),
+        tr(10) - 2.0 * tr(9) + tr(8),
+    ]
+}
+
+/// How many traces each family needs.
+pub fn traces_needed(d: usize) -> usize {
+    match d {
+        1 => 6,
+        2 => 10,
+        _ => 4 * d + 2,
+    }
+}
+
+fn binom(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let mut r = 1.0;
+    for i in 0..k {
+        r = r * (n - i) as f64 / (i + 1) as f64;
+    }
+    r
+}
+
+/// Degree-2p coefficients for the coupled inverse Newton iteration for
+/// `A^{-1/p}` (paper §A.3). Needs T₁..T_{2p+2}.
+///
+/// Per-eigenvalue residual of the next iterate:
+/// `λ + Σ_{i=1}^p C(p,i) α^i (λ^{i+1} − λ^i)`, so
+/// `c_k = 2·C(p,k)(T_{k+2} − T_{k+1}) [k ≤ p]
+///        + (Σ_{i+j=k, 1≤i,j≤p} C(p,i)C(p,j)) (T_{k+2} − 2T_{k+1} + T_k)`.
+pub fn inverse_newton_coeffs(t: &[f64], p: usize) -> Vec<f64> {
+    assert!(p >= 1);
+    assert!(t.len() >= 2 * p + 2, "need T1..T{}", 2 * p + 2);
+    let tr = |i: usize| t[i - 1];
+    let mut c = vec![0.0; 2 * p + 1];
+    for k in 1..=2 * p {
+        let mut ck = 0.0;
+        if k <= p {
+            ck += 2.0 * binom(p, k) * (tr(k + 2) - tr(k + 1));
+        }
+        let mut pair_sum = 0.0;
+        for i in 1..k {
+            let j = k - i;
+            if i <= p && j <= p {
+                pair_sum += binom(p, i) * binom(p, j);
+            }
+        }
+        if pair_sum > 0.0 {
+            ck += pair_sum * (tr(k + 2) - 2.0 * tr(k + 1) + tr(k));
+        }
+        c[k] = ck;
+    }
+    c
+}
+
+/// Quadratic coefficients for the Chebyshev inverse iteration (paper §A.4):
+/// c₁ = 2T₅ − 2T₄;  c₂ = T₄ − 2T₅ + T₆. Needs T₁..T₆.
+/// Recommended interval [1/2, 2].
+pub fn chebyshev_coeffs(t: &[f64]) -> [f64; 3] {
+    assert!(t.len() >= 6, "need T1..T6");
+    let tr = |i: usize| t[i - 1];
+    [0.0, 2.0 * tr(5) - 2.0 * tr(4), tr(4) - 2.0 * tr(5) + tr(6)]
+}
+
+/// Exact DB-Newton quartic coefficients in O(n²) (paper §A.2):
+///
+/// c₁ = tr(−4I + 8M − 4M²)
+/// c₂ = tr(10I − 14M + 6M² − 2M⁻¹)
+/// c₃ = tr(−12I + 12M − 4M² + 4M⁻¹)
+/// c₄ = tr(6I − 4M + M² − 4M⁻¹ + M⁻²)
+///
+/// using `tr(M²) = Σ_ij M_ij²` for symmetric M.
+pub fn db_newton_coeffs(m: &Mat, m_inv: &Mat) -> [f64; 5] {
+    assert!(m.is_square() && m_inv.is_square());
+    let n = m.rows() as f64;
+    let tr_m = m.trace();
+    let tr_m2 = m.fro_norm_sq(); // symmetric M
+    let tr_minv = m_inv.trace();
+    let tr_minv2 = m_inv.fro_norm_sq();
+    [
+        0.0,
+        -4.0 * n + 8.0 * tr_m - 4.0 * tr_m2,
+        10.0 * n - 14.0 * tr_m + 6.0 * tr_m2 - 2.0 * tr_minv,
+        -12.0 * n + 12.0 * tr_m - 4.0 * tr_m2 + 4.0 * tr_minv,
+        6.0 * n - 4.0 * tr_m + tr_m2 - 4.0 * tr_minv + tr_minv2,
+    ]
+}
+
+/// Scalar next-residual for the NS family: `h(x, α) = 1 − (1−x)·g_d(x;α)²`.
+/// Used by tests and the scalar Fig. 2 bench to validate the coefficient
+/// assembly against direct evaluation.
+pub fn h_next_residual(d: usize, x: f64, alpha: f64) -> f64 {
+    let g = match d {
+        1 => 1.0 + alpha * x,
+        2 => 1.0 + 0.5 * x + alpha * x * x,
+        _ => panic!("d must be 1 or 2"),
+    };
+    1.0 - (1.0 - x) * g * g
+}
+
+/// Direct evaluation of `m(α) = Σ h(λ_i, α)²` from eigenvalues — the test
+/// oracle for the trace-based assembly.
+pub fn m_direct(d: usize, eigs: &[f64], alpha: f64) -> f64 {
+    eigs.iter().map(|&x| h_next_residual(d, x, alpha).powi(2)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyfit::poly_eval;
+    use crate::ptest::{gens, Prop};
+
+    /// Exact traces T_i = Σ λ^i from eigenvalues.
+    fn traces_from_eigs(eigs: &[f64], q: usize) -> Vec<f64> {
+        (1..=q)
+            .map(|i| eigs.iter().map(|&l| l.powi(i as i32)).sum())
+            .collect()
+    }
+
+    #[test]
+    fn d1_coeffs_match_direct() {
+        Prop::new("ns d1 m(α) matches direct").cases(100).run(|rng| {
+            let n = gens::usize_in(rng, 2, 12);
+            let eigs: Vec<f64> = (0..n).map(|_| gens::f64_in(rng, 0.0, 1.0)).collect();
+            let t = traces_from_eigs(&eigs, 6);
+            let c = ns_d1_coeffs(&t);
+            for &alpha in &[0.5, 0.7, 1.0] {
+                let via_coeffs = poly_eval(&c, alpha);
+                let direct = m_direct(1, &eigs, alpha) - m_direct(1, &eigs, 0.0)
+                    + poly_eval(&c, 0.0);
+                // both drop the constant term: compare differences
+                let want = m_direct(1, &eigs, alpha) - m_direct(1, &eigs, 0.0);
+                let got = via_coeffs - poly_eval(&c, 0.0);
+                assert!(
+                    (want - got).abs() < 1e-8 * (1.0 + want.abs()),
+                    "α={alpha}: want {want} got {got} (direct={direct})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn d2_coeffs_match_direct() {
+        Prop::new("ns d2 m(α) matches direct").cases(100).run(|rng| {
+            let n = gens::usize_in(rng, 2, 12);
+            let eigs: Vec<f64> = (0..n).map(|_| gens::f64_in(rng, 0.0, 1.0)).collect();
+            let t = traces_from_eigs(&eigs, 10);
+            let c = ns_d2_coeffs(&t);
+            for &alpha in &[0.375, 0.8, 1.45] {
+                let want = m_direct(2, &eigs, alpha) - m_direct(2, &eigs, 0.0);
+                let got = poly_eval(&c, alpha) - c[0];
+                assert!(
+                    (want - got).abs() < 1e-8 * (1.0 + want.abs()),
+                    "α={alpha}: want {want} got {got}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_newton_matches_direct_p123() {
+        // Direct residual: r_next(λ, α) = λ + Σ C(p,i) α^i (λ^{i+1} − λ^i),
+        // m(α) = Σ r_next².
+        let direct = |p: usize, eigs: &[f64], a: f64| -> f64 {
+            eigs.iter()
+                .map(|&l| {
+                    let mut r = l;
+                    for i in 1..=p {
+                        r += binom(p, i) * a.powi(i as i32) * (l.powi(i as i32 + 1) - l.powi(i as i32));
+                    }
+                    r * r
+                })
+                .sum()
+        };
+        Prop::new("inverse newton coeffs").cases(60).run(|rng| {
+            for p in 1..=3 {
+                let n = gens::usize_in(rng, 2, 8);
+                let eigs: Vec<f64> = (0..n).map(|_| gens::f64_in(rng, 0.0, 1.0)).collect();
+                let t = traces_from_eigs(&eigs, 2 * p + 2);
+                let c = inverse_newton_coeffs(&t, p);
+                for &alpha in &[0.3, 1.0, 1.7] {
+                    let want = direct(p, &eigs, alpha) - direct(p, &eigs, 0.0);
+                    let got = poly_eval(&c, alpha) - c[0];
+                    assert!(
+                        (want - got).abs() < 1e-8 * (1.0 + want.abs()),
+                        "p={p} α={alpha}: want {want} got {got}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn chebyshev_matches_direct() {
+        // r_next(λ, α) = λ² − α(λ² − λ³); m(α) = Σ r_next².
+        Prop::new("chebyshev coeffs").cases(60).run(|rng| {
+            let n = gens::usize_in(rng, 2, 10);
+            let eigs: Vec<f64> = (0..n).map(|_| gens::f64_in(rng, 0.0, 1.0)).collect();
+            let t = traces_from_eigs(&eigs, 6);
+            let c = chebyshev_coeffs(&t);
+            for &alpha in &[0.5, 1.0, 2.0] {
+                let direct: f64 = eigs
+                    .iter()
+                    .map(|&l| {
+                        let r = l * l - alpha * (l * l - l * l * l);
+                        r * r
+                    })
+                    .sum();
+                let d0: f64 = eigs.iter().map(|&l| (l * l) * (l * l)).sum();
+                let want = direct - d0;
+                let got = poly_eval(&c, alpha) - c[0];
+                assert!(
+                    (want - got).abs() < 1e-9 * (1.0 + want.abs()),
+                    "α={alpha}: want {want} got {got}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn db_newton_matches_direct() {
+        // m(α) = ‖I − M_{k+1}‖_F² with
+        // M_{k+1} = 2α(1−α)I + (1−α)²M + α²M⁻¹, evaluated spectrally.
+        use crate::linalg::eigen::symmetric_eigen;
+        use crate::randmat;
+        let mut rng = crate::rng::Rng::seed_from(11);
+        let n = 10;
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.3, 2.0)).collect();
+        let m = randmat::sym_with_spectrum(&mut rng, n, &w);
+        let e = symmetric_eigen(&m);
+        let m_inv = e.apply_fn(|x| 1.0 / x);
+        let c = db_newton_coeffs(&m, &m_inv);
+        for &alpha in &[0.2, 0.5, 0.9] {
+            let direct: f64 = e
+                .values
+                .iter()
+                .map(|&mu| {
+                    let next = 2.0 * alpha * (1.0 - alpha)
+                        + (1.0 - alpha) * (1.0 - alpha) * mu
+                        + alpha * alpha / mu;
+                    (1.0 - next).powi(2)
+                })
+                .sum();
+            let d0: f64 = e.values.iter().map(|&mu| (1.0 - mu).powi(2)).sum();
+            let want = direct - d0;
+            let got = poly_eval(&c, alpha) - c[0];
+            assert!(
+                (want - got).abs() < 1e-7 * (1.0 + want.abs()),
+                "α={alpha}: want {want} got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn alpha_intervals() {
+        assert_eq!(alpha_interval(1), (0.5, 1.0));
+        assert_eq!(alpha_interval(2), (0.375, 1.45));
+    }
+
+    #[test]
+    fn traces_needed_counts() {
+        assert_eq!(traces_needed(1), 6);
+        assert_eq!(traces_needed(2), 10);
+    }
+
+    #[test]
+    fn h_taylor_alpha_recovers_classic() {
+        // α = 1/2 in d=1 is the classical Newton–Schulz: h(x, 1/2) must
+        // equal the classical residual map 1 − (1−x)(1+x/2)².
+        for x in [0.1, 0.5, 0.9] {
+            let classic = 1.0 - (1.0 - x) * (1.0 + 0.5 * x) * (1.0 + 0.5 * x);
+            assert!((h_next_residual(1, x, 0.5) - classic).abs() < 1e-14);
+        }
+    }
+
+    fn binom(n: usize, k: usize) -> f64 {
+        super::binom(n, k)
+    }
+
+    #[test]
+    fn binom_values() {
+        assert_eq!(binom(2, 1), 2.0);
+        assert_eq!(binom(4, 2), 6.0);
+        assert_eq!(binom(3, 0), 1.0);
+        assert_eq!(binom(2, 3), 0.0);
+    }
+}
+
+#[cfg(test)]
+mod general_d_tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn taylor_coeffs_of_inverse_sqrt() {
+        assert_eq!(taylor_coeff(0), 1.0);
+        assert_eq!(taylor_coeff(1), 0.5);
+        assert_eq!(taylor_coeff(2), 3.0 / 8.0);
+        assert_eq!(taylor_coeff(3), 5.0 / 16.0);
+        assert_eq!(taylor_coeff(4), 35.0 / 128.0);
+    }
+
+    #[test]
+    fn general_matches_d1_closed_form() {
+        let mut rng = Rng::seed_from(1);
+        for _ in 0..20 {
+            let t: Vec<f64> = (0..6).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let a = ns_d1_coeffs(&t);
+            let b = ns_general_coeffs(&t, 1);
+            for i in 1..5 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "c{i}: {} vs {}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn general_matches_d2_closed_form() {
+        let mut rng = Rng::seed_from(2);
+        for _ in 0..20 {
+            let t: Vec<f64> = (0..10).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let a = ns_d2_coeffs(&t);
+            let b = ns_general_coeffs(&t, 2);
+            for i in 1..5 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "c{i}: {} vs {}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn general_interval_extends_published_pattern() {
+        // d=1 reproduces the paper's [1/2, 1]; d≥3 follows the growth-cap rule.
+        assert_eq!(alpha_interval(1), (0.5, 1.0));
+        let (lo3, hi3) = alpha_interval(3);
+        assert!((lo3 - 5.0 / 16.0).abs() < 1e-12);
+        assert!((hi3 - (4.0 - 1.875)).abs() < 1e-12); // 4 − (1 + 1/2 + 3/8)
+        let (lo4, hi4) = alpha_interval(4);
+        assert!(lo4 < lo3 && hi4 > hi3); // coefficients shrink, caps grow
+    }
+
+    #[test]
+    fn general_d3_coeffs_match_eigen_evaluation() {
+        // Build a small symmetric R, compute exact traces, and check that
+        // m(α) assembled from ns_general_coeffs equals the direct
+        // per-eigenvalue objective Σ_i h(λ_i, α)² up to the constant term.
+        let mut rng = Rng::seed_from(3);
+        let n = 8;
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.05, 0.95)).collect();
+        let r = crate::randmat::sym_with_spectrum(&mut rng, n, &w);
+        let d = 3;
+        let t = crate::sketch::exact_power_traces(&r, 4 * d + 2);
+        let c = ns_general_coeffs(&t, d);
+        let f: Vec<f64> = (0..d).map(taylor_coeff).collect();
+        let direct = |a: f64| -> f64 {
+            w.iter()
+                .map(|&lam| {
+                    let g: f64 = f
+                        .iter()
+                        .enumerate()
+                        .map(|(k, &fk)| fk * lam.powi(k as i32))
+                        .sum::<f64>()
+                        + a * lam.powi(d as i32);
+                    let h = 1.0 - (1.0 - lam) * g * g;
+                    h * h
+                })
+                .sum()
+        };
+        let m0 = direct(0.0);
+        for a in [0.3, 0.5, 1.0, 1.8] {
+            let want = direct(a) - m0;
+            let got = c[1] * a + c[2] * a * a + c[3] * a.powi(3) + c[4] * a.powi(4);
+            assert!(
+                (got - want).abs() < 1e-8 * want.abs().max(1.0),
+                "α={a}: {got} vs {want}"
+            );
+        }
+    }
+}

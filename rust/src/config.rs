@@ -1,0 +1,241 @@
+//! Typed experiment / training configuration, read from the TOML subset.
+//!
+//! Every example binary and bench accepts `--config path.toml`; values not
+//! present fall back to defaults so configs stay short.
+
+use crate::configfmt::{parse_toml, Value};
+use crate::util::{Error, Result};
+
+/// Which polar/inverse-root backend an optimizer uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Classical Newton–Schulz (fixed Taylor coefficients).
+    NewtonSchulz,
+    /// PolarExpress minimax polynomials (σ_min = 1e-3 tuning).
+    PolarExpress,
+    /// PRISM with degree-3 update (d = 1).
+    Prism3,
+    /// PRISM with degree-5 update (d = 2).
+    Prism5,
+    /// Exact eigendecomposition (baseline).
+    Eigen,
+    /// PRISM-accelerated DB-Newton.
+    PrismNewton,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "ns" | "newton-schulz" | "newton_schulz" => Ok(Backend::NewtonSchulz),
+            "polar-express" | "polarexpress" | "pe" => Ok(Backend::PolarExpress),
+            "prism3" | "prism-3" => Ok(Backend::Prism3),
+            "prism5" | "prism-5" | "prism" => Ok(Backend::Prism5),
+            "eigen" | "eig" | "svd" => Ok(Backend::Eigen),
+            "prism-newton" | "prismnewton" | "newton" => Ok(Backend::PrismNewton),
+            other => Err(Error::Parse(format!("unknown backend '{other}'"))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::NewtonSchulz => "newton-schulz",
+            Backend::PolarExpress => "polar-express",
+            Backend::Prism3 => "prism-3",
+            Backend::Prism5 => "prism-5",
+            Backend::Eigen => "eigen",
+            Backend::PrismNewton => "prism-newton",
+        }
+    }
+}
+
+/// Training configuration shared by the Shampoo/Muon experiments.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub seed: u64,
+    pub steps: usize,
+    pub batch_size: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub momentum: f64,
+    pub backend: Backend,
+    /// Matrix-function iterations per optimizer step (paper: 5 for PE/PRISM-3,
+    /// 3 for PRISM-5).
+    pub matfn_iters: usize,
+    /// Shampoo: refresh preconditioners every this many steps.
+    pub precond_interval: usize,
+    /// Shampoo damping epsilon.
+    pub damping: f64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            seed: 0,
+            steps: 200,
+            batch_size: 32,
+            lr: 6e-3,
+            weight_decay: 0.01,
+            momentum: 0.95,
+            backend: Backend::Prism5,
+            matfn_iters: 5,
+            precond_interval: 10,
+            damping: 1e-6,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML file; missing keys keep defaults.
+    pub fn from_toml_file(path: &str) -> Result<TrainConfig> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| Error::Runtime(format!("read {path}: {e}")))?;
+        let v = parse_toml(&src)?;
+        Self::from_value(&v)
+    }
+
+    pub fn from_value(v: &Value) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        let geti = |p: &str, d: usize| -> usize {
+            v.get_path(p).and_then(|x| x.as_int()).map(|x| x as usize).unwrap_or(d)
+        };
+        let getf = |p: &str, d: f64| -> f64 { v.get_path(p).and_then(|x| x.as_float()).unwrap_or(d) };
+        c.seed = v.get_path("seed").and_then(|x| x.as_int()).unwrap_or(0) as u64;
+        c.steps = geti("steps", c.steps);
+        c.batch_size = geti("batch_size", c.batch_size);
+        c.lr = getf("lr", c.lr);
+        c.weight_decay = getf("weight_decay", c.weight_decay);
+        c.momentum = getf("momentum", c.momentum);
+        c.matfn_iters = geti("matfn_iters", c.matfn_iters);
+        c.precond_interval = geti("precond_interval", c.precond_interval);
+        c.damping = getf("damping", c.damping);
+        c.log_every = geti("log_every", c.log_every);
+        if let Some(s) = v.get_path("backend").and_then(|x| x.as_str()) {
+            c.backend = Backend::parse(s)?;
+        }
+        Ok(c)
+    }
+}
+
+/// Preconditioner-service configuration (the L3 coordinator).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    /// Batch together up to this many same-shape jobs per dispatch.
+    pub max_batch: usize,
+    /// Sketch size p for the PRISM fits.
+    pub sketch_p: usize,
+    pub max_iters: usize,
+    pub tol: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            queue_capacity: 1024,
+            max_batch: 8,
+            sketch_p: 8,
+            max_iters: 30,
+            tol: 1e-7,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn from_value(v: &Value) -> ServiceConfig {
+        let mut c = ServiceConfig::default();
+        let geti = |p: &str, d: usize| -> usize {
+            v.get_path(p).and_then(|x| x.as_int()).map(|x| x as usize).unwrap_or(d)
+        };
+        c.workers = geti("service.workers", c.workers);
+        c.queue_capacity = geti("service.queue_capacity", c.queue_capacity);
+        c.max_batch = geti("service.max_batch", c.max_batch);
+        c.sketch_p = geti("service.sketch_p", c.sketch_p);
+        c.max_iters = geti("service.max_iters", c.max_iters);
+        c.tol = v.get_path("service.tol").and_then(|x| x.as_float()).unwrap_or(c.tol);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in [
+            Backend::NewtonSchulz,
+            Backend::PolarExpress,
+            Backend::Prism3,
+            Backend::Prism5,
+            Backend::Eigen,
+            Backend::PrismNewton,
+        ] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert!(Backend::parse("nope").is_err());
+    }
+
+    #[test]
+    fn train_config_from_toml() {
+        let v = parse_toml(
+            r#"
+steps = 50
+lr = 0.01
+backend = "prism3"
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_value(&v).unwrap();
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.backend, Backend::Prism3);
+        // defaults survive
+        assert_eq!(c.momentum, 0.95);
+    }
+
+    #[test]
+    fn service_config_defaults() {
+        let v = parse_toml("[service]\nworkers = 3\n").unwrap();
+        let c = ServiceConfig::from_value(&v);
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.max_batch, 8);
+    }
+}
+
+#[cfg(test)]
+mod file_tests {
+    use super::*;
+
+    #[test]
+    fn shipped_config_files_parse() {
+        let root = env!("CARGO_MANIFEST_DIR");
+        let muon = TrainConfig::from_toml_file(&format!("{root}/configs/muon_fig6.toml"))
+            .expect("muon config");
+        assert_eq!(muon.steps, 200);
+        assert_eq!(muon.backend, Backend::Prism5);
+        assert_eq!(muon.matfn_iters, 3);
+        assert!((muon.lr - 0.006).abs() < 1e-12);
+
+        let sham =
+            TrainConfig::from_toml_file(&format!("{root}/configs/shampoo_fig5.toml"))
+                .expect("shampoo config");
+        assert_eq!(sham.precond_interval, 10);
+        assert!((sham.weight_decay - 5e-4).abs() < 1e-12);
+        // Its [service] section feeds ServiceConfig.
+        let src =
+            std::fs::read_to_string(format!("{root}/configs/shampoo_fig5.toml")).unwrap();
+        let v = parse_toml(&src).unwrap();
+        let svc = ServiceConfig::from_value(&v);
+        assert_eq!(svc.workers, 4);
+        assert_eq!(svc.max_batch, 4);
+        assert!((svc.tol - 1e-7).abs() < 1e-20);
+    }
+
+    #[test]
+    fn missing_config_file_is_error() {
+        assert!(TrainConfig::from_toml_file("/nonexistent/x.toml").is_err());
+    }
+}

@@ -1,0 +1,532 @@
+//! Minimal TOML and JSON parsing (no `serde`/`toml` offline).
+//!
+//! * TOML subset: tables (`[a.b]`), key = value with strings, ints, floats,
+//!   booleans and flat arrays — enough for experiment configs.
+//! * JSON: full parser + writer — used for the artifact `manifest.json`
+//!   interchange with `python/compile/aot.py` and the bench JSONL output.
+
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A dynamically-typed config/JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+    /// Dotted-path lookup: `get_path("optim.lr")`.
+    pub fn get_path(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+// ---------------------------------------------------------------- TOML ----
+
+/// Parse the TOML subset. Keys at top level go into the root table; `[a.b]`
+/// opens nested tables.
+pub fn parse_toml(src: &str) -> Result<Value> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            let inner = &line[1..line.len() - 1];
+            current_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_table(&mut root, &current_path)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| Error::Parse(format!("toml line {}: missing '='", lineno + 1)))?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_toml_value(line[eq + 1..].trim())
+            .map_err(|e| Error::Parse(format!("toml line {}: {e}", lineno + 1)))?;
+        insert_at(&mut root, &current_path, key, val)?;
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table(root: &mut BTreeMap<String, Value>, path: &[String]) -> Result<()> {
+    let mut cur = root;
+    for p in path {
+        let entry = cur
+            .entry(p.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            _ => return Err(Error::Parse(format!("toml: '{p}' is not a table"))),
+        };
+    }
+    Ok(())
+}
+
+fn insert_at(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    key: String,
+    val: Value,
+) -> Result<()> {
+    let mut cur = root;
+    for p in path {
+        cur = match cur.get_mut(p) {
+            Some(Value::Table(t)) => t,
+            _ => return Err(Error::Parse(format!("toml: missing table '{p}'"))),
+        };
+    }
+    cur.insert(key, val);
+    Ok(())
+}
+
+fn parse_toml_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_toml_value(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(Error::Parse(format!("unrecognised value '{s}'")))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+// ---------------------------------------------------------------- JSON ----
+
+/// Parse a JSON document.
+pub fn parse_json(src: &str) -> Result<Value> {
+    let mut p = JsonParser { src: src.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.src.len() {
+        return Err(Error::Parse(format!("json: trailing data at byte {}", p.pos)));
+    }
+    Ok(v)
+}
+
+struct JsonParser<'a> {
+    src: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.bump() == Some(c) {
+            Ok(())
+        } else {
+            Err(Error::Parse(format!(
+                "json: expected '{}' at byte {}",
+                c as char,
+                self.pos.saturating_sub(1)
+            )))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.lit("true", Value::Bool(true)),
+            Some(b'f') => self.lit("false", Value::Bool(false)),
+            Some(b'n') => self.lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(Error::Parse(format!("json: unexpected {other:?} at {}", self.pos))),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value> {
+        if self.src[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(Error::Parse(format!("json: bad literal at {}", self.pos)))
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Table(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Value::Table(map)),
+                _ => return Err(Error::Parse(format!("json: bad object at {}", self.pos))),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Value::Array(items)),
+                _ => return Err(Error::Parse(format!("json: bad array at {}", self.pos))),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump().ok_or_else(|| {
+                                Error::Parse("json: truncated \\u".to_string())
+                            })?;
+                            code = code * 16
+                                + (c as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| Error::Parse("json: bad \\u".to_string()))?;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    _ => return Err(Error::Parse("json: bad escape".to_string())),
+                },
+                Some(c) => out.push(c as char),
+                None => return Err(Error::Parse("json: unterminated string".to_string())),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+        if is_float {
+            text.parse::<f64>()
+                .map(Value::Float)
+                .map_err(|_| Error::Parse(format!("json: bad number '{text}'")))
+        } else {
+            text.parse::<i64>()
+                .map(Value::Int)
+                .map_err(|_| Error::Parse(format!("json: bad number '{text}'")))
+        }
+    }
+}
+
+/// Serialise a `Value` to compact JSON.
+pub fn to_json(v: &Value) -> String {
+    let mut s = String::new();
+    write_json(v, &mut s);
+    s
+}
+
+fn write_json(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Int(i) => {
+            let _ = write!(out, "{i}");
+        }
+        Value::Float(f) => {
+            if f.is_finite() {
+                let _ = write!(out, "{f}");
+            } else {
+                out.push_str("null");
+            }
+        }
+        Value::Str(s) => {
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(out, "\\u{:04x}", c as u32);
+                    }
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        Value::Array(a) => {
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_json(item, out);
+            }
+            out.push(']');
+        }
+        Value::Table(t) => {
+            out.push('{');
+            for (i, (k, val)) in t.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_json(&Value::Str(k.clone()), out);
+                out.push(':');
+                write_json(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_basic() {
+        let src = r#"
+# experiment config
+name = "fig3"
+n = 256
+lr = 0.02
+verbose = true
+gammas = [1.0, 4.0, 50.0]
+
+[optim]
+kind = "muon"
+momentum = 0.95
+
+[optim.polar]
+degree = 5
+"#;
+        let v = parse_toml(src).unwrap();
+        assert_eq!(v.get_path("name").unwrap().as_str(), Some("fig3"));
+        assert_eq!(v.get_path("n").unwrap().as_int(), Some(256));
+        assert_eq!(v.get_path("lr").unwrap().as_float(), Some(0.02));
+        assert_eq!(v.get_path("verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get_path("optim.kind").unwrap().as_str(), Some("muon"));
+        assert_eq!(v.get_path("optim.polar.degree").unwrap().as_int(), Some(5));
+        let arr = v.get_path("gammas").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_float(), Some(50.0));
+    }
+
+    #[test]
+    fn toml_rejects_garbage() {
+        assert!(parse_toml("key value").is_err());
+        assert!(parse_toml("k = @@").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let src = r#"{"a": 1, "b": [1.5, "x", true, null], "c": {"d": -2}}"#;
+        let v = parse_json(src).unwrap();
+        assert_eq!(v.get_path("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get_path("c.d").unwrap().as_int(), Some(-2));
+        let re = parse_json(&to_json(&v)).unwrap();
+        assert_eq!(v, re);
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        let v = parse_json(r#""a\nb\t\"q\" A""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\nb\t\"q\" A"));
+        let out = to_json(&v);
+        let back = parse_json(&out).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn json_rejects_trailing() {
+        assert!(parse_json("{} x").is_err());
+        assert!(parse_json("[1,]").is_err());
+    }
+
+    #[test]
+    fn json_nested_arrays() {
+        let v = parse_json("[[1,2],[3,4]]").unwrap();
+        let a = v.as_array().unwrap();
+        assert_eq!(a[1].as_array().unwrap()[0].as_int(), Some(3));
+    }
+
+    #[test]
+    fn json_empty_containers() {
+        assert_eq!(parse_json("{}").unwrap(), Value::Table(BTreeMap::new()));
+        assert_eq!(parse_json("[]").unwrap(), Value::Array(vec![]));
+    }
+
+    #[test]
+    fn json_floats() {
+        let v = parse_json("[1e-3, -2.5E2, 0.0]").unwrap();
+        let a = v.as_array().unwrap();
+        assert_eq!(a[0].as_float(), Some(1e-3));
+        assert_eq!(a[1].as_float(), Some(-250.0));
+    }
+}

@@ -1,0 +1,407 @@
+//! Staleness-tolerant Shampoo: preconditioner refreshes run *asynchronously*
+//! through the preconditioner [`Service`](super::service::Service) while
+//! training keeps stepping on slightly-stale inverse roots — the pattern of
+//! Distributed Shampoo (Shi et al. 2023) and DION (Ahn et al. 2025), with
+//! PRISM (or any backend) doing the matrix functions on the worker pool.
+//!
+//! Protocol per layer with matrix-shaped parameters:
+//!  * every step: accumulate `L += G Gᵀ`, `R += Gᵀ G` and apply the update
+//!    `L̂^{-1/2} G R̂^{-1/2}` with whatever `L̂,R̂` roots are installed;
+//!  * every `refresh_interval` steps: snapshot the normalised accumulators
+//!    and *submit* two `InvSqrt` jobs — no waiting;
+//!  * every step: poll `try_recv` and install any finished roots, tagging
+//!    them with the submission step so staleness is observable.
+//!
+//! The first update per layer blocks until its roots arrive (identity
+//! preconditioning would distort the first steps); afterwards the train
+//! loop never waits on the service.
+
+use super::service::{JobKind, JobResult, Service};
+use crate::linalg::gemm::{matmul, syrk_a_at, syrk_at_a};
+use crate::linalg::Mat;
+use crate::nn::{Param, ParamKind};
+use crate::optim::Optimizer;
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum Side {
+    Left,
+    Right,
+}
+
+struct LayerState {
+    l: Mat,
+    r: Mat,
+    l_inv: Mat,
+    r_inv: Mat,
+    /// Scale factors applied after the normalised inverse roots come back.
+    l_scale: f64,
+    r_scale: f64,
+    /// Step at which the currently installed roots were *submitted*.
+    installed_at: (usize, usize),
+    ready: bool,
+}
+
+/// Shampoo with service-backed asynchronous preconditioner refreshes.
+pub struct AsyncShampoo<'s> {
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub damping: f64,
+    pub refresh_interval: usize,
+    pub grafting: bool,
+    service: &'s Service,
+    /// job id → (param index, side, submit step, trace scale)
+    pending: HashMap<u64, (usize, Side, usize, f64)>,
+    states: Vec<Option<LayerState>>,
+    bufs: Vec<Mat>,
+    t: usize,
+    /// Histogram source: staleness (steps) of the roots used at each step.
+    pub staleness_log: Vec<usize>,
+}
+
+impl<'s> AsyncShampoo<'s> {
+    pub fn new(lr: f64, damping: f64, refresh_interval: usize, service: &'s Service) -> Self {
+        AsyncShampoo {
+            lr,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            damping,
+            refresh_interval: refresh_interval.max(1),
+            grafting: true,
+            service,
+            pending: HashMap::new(),
+            states: Vec::new(),
+            bufs: Vec::new(),
+            t: 0,
+            staleness_log: Vec::new(),
+        }
+    }
+
+    /// Install a finished inverse root.
+    fn install(&mut self, res: JobResult, meta: (usize, Side, usize, f64)) {
+        let (idx, side, step, scale) = meta;
+        if let Some(st) = self.states[idx].as_mut() {
+            match side {
+                Side::Left => {
+                    st.l_inv = res.result.scaled(1.0 / scale.sqrt());
+                    st.installed_at.0 = step;
+                }
+                Side::Right => {
+                    st.r_inv = res.result.scaled(1.0 / scale.sqrt());
+                    st.installed_at.1 = step;
+                }
+            }
+            st.ready = true;
+        }
+    }
+
+    /// Drain every finished refresh without blocking.
+    fn poll(&mut self) {
+        while let Some(res) = self.service.try_recv() {
+            if let Some(meta) = self.pending.remove(&res.id) {
+                self.install(res, meta);
+            }
+        }
+    }
+
+    /// Block until at least one pending job finishes (used only before a
+    /// layer's very first preconditioned step).
+    fn wait_one(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        if let Ok(res) = self.service.recv() {
+            if let Some(meta) = self.pending.remove(&res.id) {
+                self.install(res, meta);
+            }
+        }
+    }
+
+    /// Block until every in-flight refresh has been installed. Call this to
+    /// bound staleness explicitly (e.g. at evaluation points); the train
+    /// loop itself never needs it.
+    pub fn sync(&mut self) {
+        let _ = self.service.flush();
+        while !self.pending.is_empty() {
+            self.wait_one();
+        }
+    }
+
+    /// Whether a refresh for `idx` is already in flight (either side) —
+    /// used to avoid queue build-up when steps outpace the service.
+    fn refresh_in_flight(&self, idx: usize) -> bool {
+        self.pending.values().any(|&(i, _, _, _)| i == idx)
+    }
+
+    /// Submit L/R refresh jobs for layer `idx` from the current accumulators.
+    fn submit_refresh(&mut self, idx: usize) {
+        let (lt, rt, ln, rn) = {
+            let st = self.states[idx].as_ref().unwrap();
+            let (m, n) = (st.l.rows(), st.r.rows());
+            let lt = st.l.trace().max(1e-30) / m as f64;
+            let rt = st.r.trace().max(1e-30) / n as f64;
+            (lt, rt, st.l.scaled(1.0 / lt), st.r.scaled(1.0 / rt))
+        };
+        let eps = self.damping;
+        if let Ok(id) = self.service.submit(idx, JobKind::InvSqrt { eps }, ln) {
+            self.pending.insert(id, (idx, Side::Left, self.t, lt));
+        }
+        if let Ok(id) = self.service.submit(idx, JobKind::InvSqrt { eps }, rn) {
+            self.pending.insert(id, (idx, Side::Right, self.t, rt));
+        }
+        // Partial batches must not sit in the router while we keep training.
+        let _ = self.service.flush();
+    }
+
+    /// Average staleness (in steps) of installed roots, for reporting.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.staleness_log.is_empty() {
+            return 0.0;
+        }
+        self.staleness_log.iter().sum::<usize>() as f64 / self.staleness_log.len() as f64
+    }
+
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+impl Optimizer for AsyncShampoo<'_> {
+    fn step(&mut self, params: &mut [&mut Param]) {
+        if self.states.is_empty() {
+            self.states = params.iter().map(|_| None).collect();
+            self.bufs =
+                params.iter().map(|p| Mat::zeros(p.w.rows(), p.w.cols())).collect();
+        }
+        let refresh = self.t % self.refresh_interval == 0;
+        self.poll();
+        for (i, p) in params.iter_mut().enumerate() {
+            let buf = &mut self.bufs[i];
+            buf.scale(self.momentum);
+            buf.axpy(1.0, &p.g);
+            let g = buf.clone();
+            let update = match p.kind {
+                ParamKind::Matrix if p.w.rows() > 1 && p.w.cols() > 1 => {
+                    let (m, n) = g.shape();
+                    if self.states[i].is_none() {
+                        self.states[i] = Some(LayerState {
+                            l: Mat::zeros(m, m),
+                            r: Mat::zeros(n, n),
+                            l_inv: Mat::eye(m),
+                            r_inv: Mat::eye(n),
+                            l_scale: 1.0,
+                            r_scale: 1.0,
+                            installed_at: (0, 0),
+                            ready: false,
+                        });
+                    }
+                    {
+                        let st = self.states[i].as_mut().unwrap();
+                        st.l.axpy(1.0, &syrk_a_at(&g));
+                        st.r.axpy(1.0, &syrk_at_a(&g));
+                        let _ = (st.l_scale, st.r_scale);
+                    }
+                    // Refresh on schedule, but never queue a second refresh
+                    // behind one still in flight: if the service is slower
+                    // than the train loop, work on the freshest snapshot
+                    // rather than a backlog of stale ones.
+                    if (refresh || !self.states[i].as_ref().unwrap().ready)
+                        && !self.refresh_in_flight(i)
+                    {
+                        self.submit_refresh(i);
+                    }
+                    // First use must have real roots; afterwards stay async.
+                    while !self.states[i].as_ref().unwrap().ready {
+                        self.wait_one();
+                    }
+                    let st = self.states[i].as_ref().unwrap();
+                    let stale =
+                        self.t.saturating_sub(st.installed_at.0.min(st.installed_at.1));
+                    self.staleness_log.push(stale);
+                    let mut u = matmul(&matmul(&st.l_inv, &g), &st.r_inv);
+                    if self.grafting {
+                        let un = u.fro_norm().max(1e-30);
+                        u.scale(g.fro_norm() / un);
+                    }
+                    u
+                }
+                _ => g,
+            };
+            if self.weight_decay > 0.0 {
+                let w = p.w.clone();
+                p.w.axpy(-self.lr * self.weight_decay, &w);
+            }
+            p.w.axpy(-self.lr, &update);
+        }
+        self.t += 1;
+    }
+
+    fn name(&self) -> String {
+        format!("async-shampoo(lr={},interval={})", self.lr, self.refresh_interval)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, ServiceConfig};
+    use crate::nn::mlp::Mlp;
+    use crate::rng::Rng;
+    use crate::workload::BlobsDataset;
+
+    fn service(workers: usize) -> Service {
+        let cfg = ServiceConfig {
+            workers,
+            queue_capacity: 64,
+            max_batch: 1, // refreshes should dispatch immediately
+            sketch_p: 8,
+            max_iters: 40,
+            tol: 1e-7,
+        };
+        Service::start(cfg, Backend::Prism5, 9)
+    }
+
+    fn train_loss_curve_with(
+        opt: &mut dyn Optimizer,
+        steps: usize,
+        mut after_step: impl FnMut(&mut dyn Optimizer),
+    ) -> Vec<f64> {
+        let mut rng = Rng::seed_from(3);
+        let data = BlobsDataset::generate(&mut rng, 400, 32, 4, 2.0);
+        let mut model = Mlp::new(&mut rng, &[32, 24, 4]);
+        let (train_idx, _) = data.split(0.1);
+        let mut losses = Vec::new();
+        for step in 0..steps {
+            let idx: Vec<usize> =
+                train_idx.iter().cycle().skip(step * 32).take(32).copied().collect();
+            let (x, y) = data.batch(&idx);
+            let (loss, _) = model.forward_backward(&x, &y);
+            {
+                let mut params = model.params_mut();
+                opt.step(&mut params);
+            }
+            model.zero_grads();
+            losses.push(loss);
+            after_step(opt);
+        }
+        losses
+    }
+
+    fn train_loss_curve(opt: &mut dyn Optimizer, steps: usize) -> Vec<f64> {
+        train_loss_curve_with(opt, steps, |_| {})
+    }
+
+    #[test]
+    fn async_shampoo_reduces_loss() {
+        let svc = service(2);
+        let mut opt = AsyncShampoo::new(0.05, 1e-6, 4, &svc);
+        let losses = train_loss_curve(&mut opt, 30);
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.7),
+            "{} -> {}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn staleness_bounded_when_service_keeps_up() {
+        // `sync` after each step models a training step that is slower than
+        // a refresh (the realistic regime — train steps run GEMMs on the
+        // whole model, a refresh handles one layer pair). Staleness is then
+        // bounded by the refresh interval.
+        let svc = service(2);
+        let interval = 5;
+        let mut opt = AsyncShampoo::new(0.05, 1e-6, interval, &svc);
+        {
+            let o: &mut AsyncShampoo = &mut opt;
+            let mut rng = Rng::seed_from(3);
+            let data = BlobsDataset::generate(&mut rng, 400, 32, 4, 2.0);
+            let mut model = Mlp::new(&mut rng, &[32, 24, 4]);
+            let (train_idx, _) = data.split(0.1);
+            for step in 0..25 {
+                let idx: Vec<usize> =
+                    train_idx.iter().cycle().skip(step * 32).take(32).copied().collect();
+                let (x, y) = data.batch(&idx);
+                let _ = model.forward_backward(&x, &y);
+                {
+                    let mut params = model.params_mut();
+                    o.step(&mut params);
+                }
+                model.zero_grads();
+                o.sync();
+            }
+        }
+        assert!(!opt.staleness_log.is_empty());
+        let max_stale = *opt.staleness_log.iter().max().unwrap();
+        assert!(max_stale <= interval + 1, "max staleness {max_stale}");
+    }
+
+    #[test]
+    fn fast_loop_does_not_build_backlog() {
+        // When the train loop outpaces the service we must NOT queue
+        // refreshes behind each other: at most one refresh (two jobs) in
+        // flight per layer at any time.
+        let svc = service(1);
+        let mut opt = AsyncShampoo::new(0.05, 1e-6, 1, &svc); // refresh every step
+        let _ = train_loss_curve(&mut opt, 20);
+        // MLP [32,24,4] has 2 matrix layers ⇒ ≤ 4 jobs in flight.
+        assert!(opt.pending_jobs() <= 4, "pending {}", opt.pending_jobs());
+        opt.sync();
+        assert_eq!(opt.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn first_step_waits_for_real_roots() {
+        let svc = service(1);
+        let mut opt = AsyncShampoo::new(0.05, 1e-6, 50, &svc);
+        let losses = train_loss_curve(&mut opt, 3);
+        // If identity roots had been used the staleness log would be empty;
+        // instead every matrix step records an installed-root use.
+        assert!(opt.staleness_log.len() >= 3);
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn matches_sync_shampoo_loss_within_tolerance() {
+        // Async with interval k, synced each step (service keeps up), should
+        // track sync Shampoo with the same k.
+        let svc = service(2);
+        let mut async_opt = AsyncShampoo::new(0.05, 1e-6, 4, &svc);
+        let async_losses = {
+            let mut rng = Rng::seed_from(3);
+            let data = BlobsDataset::generate(&mut rng, 400, 32, 4, 2.0);
+            let mut model = Mlp::new(&mut rng, &[32, 24, 4]);
+            let (train_idx, _) = data.split(0.1);
+            let mut losses = Vec::new();
+            for step in 0..30 {
+                let idx: Vec<usize> =
+                    train_idx.iter().cycle().skip(step * 32).take(32).copied().collect();
+                let (x, y) = data.batch(&idx);
+                let (loss, _) = model.forward_backward(&x, &y);
+                {
+                    let mut params = model.params_mut();
+                    async_opt.step(&mut params);
+                }
+                model.zero_grads();
+                async_opt.sync();
+                losses.push(loss);
+            }
+            losses
+        };
+        let mut sync_opt = crate::optim::shampoo::Shampoo::new(
+            0.05,
+            1e-6,
+            4,
+            crate::optim::matfn::InvRootBackend::new(Backend::Prism5, 40),
+            9,
+        );
+        let sync_losses = train_loss_curve(&mut sync_opt, 30);
+        let (a, s) = (async_losses.last().unwrap(), sync_losses.last().unwrap());
+        // Both drive this separable task to (near-)zero loss; staleness < k
+        // steps must not change the qualitative optimisation behaviour.
+        assert!(*a < 1e-4, "async failed to converge: {a}");
+        assert!(*s < 1e-4, "sync failed to converge: {s}");
+    }
+}

@@ -1,0 +1,23 @@
+//! The L3 coordinator.
+//!
+//! * [`service`] — the **preconditioner service**: a routed, batched,
+//!   multi-worker queue of matrix-function jobs (Shampoo inverse roots, Muon
+//!   orthogonalizations) with staleness-aware scheduling, backpressure and
+//!   metrics. This is how a distributed-Shampoo-style trainer offloads its
+//!   matrix functions (cf. Shi et al. 2023; DION).
+//! * [`train`] — the **training driver**: owns flattened model parameters,
+//!   executes the AOT-compiled JAX `train_step` artifact via PJRT for
+//!   loss+gradients, and applies the Rust optimizers (Muon/AdamW) — Python
+//!   never runs on this path.
+
+//! * [`async_shampoo`] — **staleness-tolerant Shampoo**: preconditioner
+//!   refreshes submitted to the service asynchronously; the train loop never
+//!   blocks on a matrix function after warmup.
+
+pub mod async_shampoo;
+pub mod service;
+pub mod train;
+
+pub use async_shampoo::AsyncShampoo;
+pub use service::{Job, JobKind, JobResult, Service};
+pub use train::TrainDriver;

@@ -1,0 +1,367 @@
+//! The preconditioner service: route → batch → execute matrix-function jobs
+//! on a worker pool, with bounded queues (backpressure) and full metrics.
+//!
+//! Training integrations submit gradient/covariance matrices tagged by layer
+//! and function kind; the router groups same-shape, same-kind jobs into
+//! batches (shared sketch draws amortise PRISM's fitting overhead within a
+//! batch), workers run the PRISM engines, and results flow back over a
+//! completion channel. Staleness scheduling lets Shampoo keep training on
+//! slightly-old preconditioners while refreshes are in flight — the pattern
+//! of Distributed Shampoo/DION.
+
+use crate::config::{Backend, ServiceConfig};
+use crate::linalg::Mat;
+use crate::metrics::Registry;
+use crate::optim::matfn::{InvRootBackend, PolarBackend};
+use crate::rng::Rng;
+use crate::util::{Error, Result, Stopwatch};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// What function to apply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobKind {
+    /// `(A + εI)^{-1/2}` for symmetric PSD input.
+    InvSqrt { eps: f64 },
+    /// Polar factor (orthogonalization).
+    Polar,
+}
+
+impl JobKind {
+    fn route_key(&self, shape: (usize, usize)) -> (u8, usize, usize) {
+        let tag = match self {
+            JobKind::InvSqrt { .. } => 0,
+            JobKind::Polar => 1,
+        };
+        (tag, shape.0, shape.1)
+    }
+}
+
+/// A matrix-function request.
+pub struct Job {
+    pub id: u64,
+    pub layer: usize,
+    pub kind: JobKind,
+    pub matrix: Mat,
+    pub submitted: Instant,
+}
+
+/// A completed job.
+pub struct JobResult {
+    pub id: u64,
+    pub layer: usize,
+    pub result: Mat,
+    /// Queue wait + service time, seconds.
+    pub latency_s: f64,
+    pub batch_size: usize,
+}
+
+enum WorkerMsg {
+    Batch(Vec<Job>),
+    Shutdown,
+}
+
+/// Service handle. Dropping it shuts the workers down.
+pub struct Service {
+    tx: SyncSender<WorkerMsg>,
+    results_rx: Mutex<Receiver<JobResult>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<Mutex<BTreeMap<(u8, usize, usize), Vec<Job>>>>,
+    cfg: ServiceConfig,
+    next_id: Mutex<u64>,
+    pub metrics: Arc<Registry>,
+    /// Jobs handed to workers / results taken off the completion channel.
+    /// Both counters are only touched by service-handle callers (never by
+    /// workers), so `dispatched − received` is an exact count of results
+    /// still owed and the drain loop can block on it race-free: every
+    /// dispatched job sends exactly one result.
+    dispatched: AtomicU64,
+    received: AtomicU64,
+}
+
+impl Service {
+    /// Start the service with `cfg.workers` threads using `backend` for the
+    /// matrix functions.
+    pub fn start(cfg: ServiceConfig, backend: Backend, seed: u64) -> Service {
+        let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_capacity);
+        let rx = Arc::new(Mutex::new(rx));
+        let (res_tx, res_rx): (Sender<JobResult>, Receiver<JobResult>) =
+            std::sync::mpsc::channel();
+        let metrics = Arc::new(Registry::default());
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let res_tx = res_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let iters = cfg.max_iters;
+            workers.push(std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(seed ^ (w as u64 + 1));
+                let inv = InvRootBackend::new(backend, iters);
+                let pol = PolarBackend::new(backend, iters);
+                let service_time = metrics.histogram("service.exec_s");
+                let done = metrics.counter("service.jobs_done");
+                loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(WorkerMsg::Batch(jobs)) => {
+                            let bsize = jobs.len();
+                            for job in jobs {
+                                let sw = Stopwatch::start();
+                                let result = match job.kind {
+                                    JobKind::InvSqrt { eps } => {
+                                        inv.inv_sqrt(&job.matrix, eps, &mut rng)
+                                    }
+                                    JobKind::Polar => pol.polar(&job.matrix, &mut rng),
+                                };
+                                service_time.observe(sw.elapsed_s());
+                                done.inc();
+                                let latency_s = job.submitted.elapsed().as_secs_f64();
+                                let _ = res_tx.send(JobResult {
+                                    id: job.id,
+                                    layer: job.layer,
+                                    result,
+                                    latency_s,
+                                    batch_size: bsize,
+                                });
+                            }
+                        }
+                        Ok(WorkerMsg::Shutdown) | Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Service {
+            tx,
+            results_rx: Mutex::new(res_rx),
+            workers,
+            pending: Arc::new(Mutex::new(BTreeMap::new())),
+            cfg,
+            next_id: Mutex::new(0),
+            metrics,
+            dispatched: AtomicU64::new(0),
+            received: AtomicU64::new(0),
+        }
+    }
+
+    /// Submit a job; same-shape jobs are held back briefly to form batches
+    /// of up to `max_batch` (call [`flush`] to force dispatch).
+    pub fn submit(&self, layer: usize, kind: JobKind, matrix: Mat) -> Result<u64> {
+        let id = {
+            let mut n = self.next_id.lock().unwrap();
+            *n += 1;
+            *n
+        };
+        self.metrics.counter("service.jobs_submitted").inc();
+        let key = kind.route_key(matrix.shape());
+        let job = Job { id, layer, kind, matrix, submitted: Instant::now() };
+        let ready = {
+            let mut pend = self.pending.lock().unwrap();
+            let q = pend.entry(key).or_default();
+            q.push(job);
+            if q.len() >= self.cfg.max_batch {
+                Some(std::mem::take(q))
+            } else {
+                None
+            }
+        };
+        if let Some(batch) = ready {
+            self.dispatch(batch)?;
+        }
+        Ok(id)
+    }
+
+    fn dispatch(&self, batch: Vec<Job>) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        self.dispatched.fetch_add(batch.len() as u64, Ordering::SeqCst);
+        self.metrics
+            .histogram("service.batch_size")
+            .observe(batch.len() as f64);
+        self.tx
+            .send(WorkerMsg::Batch(batch))
+            .map_err(|_| Error::Runtime("service: workers gone".into()))
+    }
+
+    /// Dispatch all partially-filled batches.
+    pub fn flush(&self) -> Result<()> {
+        let batches: Vec<Vec<Job>> = {
+            let mut pend = self.pending.lock().unwrap();
+            pend.values_mut().map(std::mem::take).collect()
+        };
+        for b in batches {
+            self.dispatch(b)?;
+        }
+        Ok(())
+    }
+
+    /// Number of results still owed (dispatched − received). Results of
+    /// partially-filled batches still held back by the router are *not*
+    /// counted — call [`Self::flush`] first.
+    pub fn inflight(&self) -> usize {
+        let d = self.dispatched.load(Ordering::SeqCst);
+        let r = self.received.load(Ordering::SeqCst);
+        (d - r) as usize
+    }
+
+    /// Blocking receive of the next completed job.
+    pub fn recv(&self) -> Result<JobResult> {
+        let rx = self.results_rx.lock().unwrap();
+        let r = rx
+            .recv()
+            .map_err(|_| Error::Runtime("service: result channel closed".into()))?;
+        self.received.fetch_add(1, Ordering::SeqCst);
+        self.metrics.histogram("service.latency_s").observe(r.latency_s);
+        Ok(r)
+    }
+
+    /// Non-blocking receive: returns `None` when no result is ready yet.
+    /// Used by staleness-tolerant callers (e.g. [`super::async_shampoo`])
+    /// that keep working with old results while refreshes are in flight.
+    pub fn try_recv(&self) -> Option<JobResult> {
+        let rx = self.results_rx.lock().unwrap();
+        match rx.try_recv() {
+            Ok(r) => {
+                self.received.fetch_add(1, Ordering::SeqCst);
+                self.metrics.histogram("service.latency_s").observe(r.latency_s);
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Flush, then collect every outstanding result. Blocks until all
+    /// dispatched jobs have reported back; race-free because `dispatched`
+    /// is fixed once `flush` returns and each job sends exactly one result.
+    pub fn drain(&self) -> Result<Vec<JobResult>> {
+        self.flush()?;
+        let mut out = Vec::new();
+        while self.inflight() > 0 {
+            out.push(self.recv()?);
+        }
+        Ok(out)
+    }
+
+    pub fn report(&self) -> String {
+        self.metrics.report()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_at_b};
+    use crate::randmat;
+
+    fn cfg(workers: usize, max_batch: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            queue_capacity: 64,
+            max_batch,
+            sketch_p: 8,
+            max_iters: 40,
+            tol: 1e-7,
+        }
+    }
+
+    #[test]
+    fn invsqrt_jobs_round_trip() {
+        let mut rng = Rng::seed_from(1);
+        let svc = Service::start(cfg(2, 2), Backend::Prism5, 42);
+        let mut inputs = Vec::new();
+        for layer in 0..4 {
+            let w = randmat::logspace(1e-2, 1.0, 8);
+            let a = randmat::sym_with_spectrum(&mut rng, 8, &w);
+            inputs.push(a.clone());
+            svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        }
+        let results = svc.drain().unwrap();
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            let a = &inputs[r.layer];
+            let prod = matmul(&matmul(&r.result, a), &r.result);
+            assert!(
+                prod.sub(&Mat::eye(8)).max_abs() < 1e-3,
+                "layer {}: err {}",
+                r.layer,
+                prod.sub(&Mat::eye(8)).max_abs()
+            );
+            assert!(r.latency_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn polar_jobs_round_trip() {
+        let mut rng = Rng::seed_from(2);
+        let svc = Service::start(cfg(1, 4), Backend::Prism3, 7);
+        let a = randmat::gaussian(&mut rng, 16, 8);
+        svc.submit(0, JobKind::Polar, a).unwrap();
+        let results = svc.drain().unwrap();
+        assert_eq!(results.len(), 1);
+        let q = &results[0].result;
+        assert!(matmul_at_b(q, q).sub(&Mat::eye(8)).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn batching_groups_same_shape() {
+        let mut rng = Rng::seed_from(3);
+        let svc = Service::start(cfg(1, 3), Backend::Eigen, 1);
+        // 3 same-shape jobs = exactly one full batch.
+        for layer in 0..3 {
+            let w = randmat::logspace(0.1, 1.0, 6);
+            let a = randmat::sym_with_spectrum(&mut rng, 6, &w);
+            svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        }
+        let results = svc.drain().unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| r.batch_size == 3), "batch sizes: {:?}",
+            results.iter().map(|r| r.batch_size).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mixed_shapes_split_batches() {
+        let mut rng = Rng::seed_from(4);
+        let svc = Service::start(cfg(2, 8), Backend::Eigen, 2);
+        for layer in 0..4 {
+            let n = if layer % 2 == 0 { 5 } else { 7 };
+            let w = randmat::logspace(0.1, 1.0, n);
+            let a = randmat::sym_with_spectrum(&mut rng, n, &w);
+            svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        }
+        let results = svc.drain().unwrap();
+        assert_eq!(results.len(), 4);
+        // Shapes must be preserved per layer.
+        for r in &results {
+            let n = if r.layer % 2 == 0 { 5 } else { 7 };
+            assert_eq!(r.result.shape(), (n, n));
+        }
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let mut rng = Rng::seed_from(5);
+        let svc = Service::start(cfg(1, 1), Backend::Prism5, 3);
+        let w = randmat::logspace(0.1, 1.0, 6);
+        let a = randmat::sym_with_spectrum(&mut rng, 6, &w);
+        svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        let _ = svc.drain().unwrap();
+        let rep = svc.report();
+        assert!(rep.contains("service.jobs_done"));
+        assert!(rep.contains("service.latency_s"));
+    }
+}

@@ -1,0 +1,181 @@
+//! The training driver: executes the AOT-compiled JAX `train_step` artifact
+//! (loss + gradients) through PJRT and applies a Rust optimizer — the
+//! end-to-end path of the Fig. 6 experiment with Python fully out of the
+//! request loop.
+//!
+//! Artifact contract (written by `python/compile/aot.py`):
+//! * `init_params`: `(seed: f32[]) → (param_0, ..., param_{P-1})`
+//! * `train_step`: `(param_0..param_{P-1}, tokens_x: f32[B,T],
+//!   tokens_y: f32[B,T]) → (loss: f32[], grad_0, ..., grad_{P-1})`
+//!
+//! Parameter tensors are at most rank-2 (the model reshapes heads
+//! internally), so each maps onto one optimizer [`Param`].
+
+use crate::nn::{Param, ParamKind};
+use crate::optim::Optimizer;
+use crate::runtime::{f32_to_mat, mat_to_f32, Executable, Runtime};
+use crate::util::{Error, Result, Stopwatch};
+use std::sync::Arc;
+
+pub struct TrainDriver {
+    step_exe: Arc<Executable>,
+    pub params: Vec<Param>,
+    /// (rows, cols) per param as fed to PJRT.
+    shapes: Vec<(usize, usize)>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub losses: Vec<f64>,
+    pub step_times_s: Vec<f64>,
+}
+
+fn dims_of(shape: &[i64]) -> Result<(usize, usize)> {
+    match shape.len() {
+        0 => Ok((1, 1)),
+        1 => Ok((1, shape[0] as usize)),
+        2 => Ok((shape[0] as usize, shape[1] as usize)),
+        _ => Err(Error::Runtime(format!(
+            "param of rank {} unsupported (model must flatten)",
+            shape.len()
+        ))),
+    }
+}
+
+impl TrainDriver {
+    /// Load artifacts and initialise parameters on-device.
+    pub fn new(rt: &Runtime, seed: f32) -> Result<TrainDriver> {
+        let init_exe = rt.load("init_params")?;
+        let step_exe = rt.load("train_step")?;
+        let meta = &step_exe.entry.meta;
+        let geti = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .and_then(|v| v.as_int())
+                .map(|x| x as usize)
+                .ok_or_else(|| Error::Runtime(format!("train_step meta missing '{k}'")))
+        };
+        let (batch, seq_len, vocab) = (geti("batch")?, geti("seq_len")?, geti("vocab")?);
+
+        // Initialise parameters by running the init artifact.
+        let raw = init_exe.run_f32(&[&[seed]])?;
+        let nparams = step_exe.entry.inputs.len() - 2; // minus tokens_x/y
+        if raw.len() != nparams {
+            return Err(Error::Runtime(format!(
+                "init_params returned {} tensors, train_step expects {nparams}",
+                raw.len()
+            )));
+        }
+        let mut params = Vec::with_capacity(nparams);
+        let mut shapes = Vec::with_capacity(nparams);
+        for (i, buf) in raw.iter().enumerate() {
+            let spec = &step_exe.entry.inputs[i];
+            let (r, c) = dims_of(&spec.shape)?;
+            let w = f32_to_mat(r, c, buf)?;
+            let kind = if r > 1 && c > 1 { ParamKind::Matrix } else { ParamKind::Vector };
+            let mut p = Param::matrix(&spec.name, w);
+            p.kind = kind;
+            params.push(p);
+            shapes.push((r, c));
+        }
+        Ok(TrainDriver {
+            step_exe,
+            params,
+            shapes,
+            batch,
+            seq_len,
+            vocab,
+            losses: Vec::new(),
+            step_times_s: Vec::new(),
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// One optimizer step on a token batch. `xs`/`ys` are `[batch][seq_len]`.
+    pub fn step(
+        &mut self,
+        xs: &[Vec<u32>],
+        ys: &[Vec<u32>],
+        opt: &mut dyn Optimizer,
+    ) -> Result<f64> {
+        let sw = Stopwatch::start();
+        if xs.len() != self.batch || ys.len() != self.batch {
+            return Err(Error::Runtime(format!(
+                "batch size {} != artifact batch {}",
+                xs.len(),
+                self.batch
+            )));
+        }
+        // Flatten inputs.
+        let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(self.params.len() + 2);
+        for p in &self.params {
+            bufs.push(mat_to_f32(&p.w));
+        }
+        let flat = |rows: &[Vec<u32>]| -> Vec<f32> {
+            rows.iter().flat_map(|r| r.iter().map(|&t| t as f32)).collect()
+        };
+        bufs.push(flat(xs));
+        bufs.push(flat(ys));
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let outs = self.step_exe.run_f32(&refs)?;
+        if outs.len() != self.params.len() + 1 {
+            return Err(Error::Runtime(format!(
+                "train_step returned {} outputs, expected {}",
+                outs.len(),
+                self.params.len() + 1
+            )));
+        }
+        let loss = outs[0][0] as f64;
+        if !loss.is_finite() {
+            return Err(Error::Numerical(format!("loss diverged: {loss}")));
+        }
+        // Write grads into the params and step the optimizer.
+        for (i, g) in outs[1..].iter().enumerate() {
+            let (r, c) = self.shapes[i];
+            self.params[i].g = f32_to_mat(r, c, g)?;
+        }
+        {
+            let mut refs: Vec<&mut Param> = self.params.iter_mut().collect();
+            opt.step(&mut refs);
+        }
+        for p in self.params.iter_mut() {
+            p.zero_grad();
+        }
+        self.losses.push(loss);
+        self.step_times_s.push(sw.elapsed_s());
+        Ok(loss)
+    }
+
+    /// Save a checkpoint of the current parameters (atomic write).
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        crate::nn::checkpoint::save(path, &self.params, self.losses.len() as u64)
+    }
+
+    /// Restore parameters from a checkpoint; returns the step it was taken
+    /// at. Names and shapes must match the loaded artifact's parameters.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<u64> {
+        let (saved, step) = crate::nn::checkpoint::load(path)?;
+        crate::nn::checkpoint::restore_into(&mut self.params, &saved)?;
+        Ok(step)
+    }
+
+    /// Loss on a batch without updating parameters.
+    pub fn eval(&self, xs: &[Vec<u32>], ys: &[Vec<u32>]) -> Result<f64> {
+        let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(self.params.len() + 2);
+        for p in &self.params {
+            bufs.push(mat_to_f32(&p.w));
+        }
+        let flat = |rows: &[Vec<u32>]| -> Vec<f32> {
+            rows.iter().flat_map(|r| r.iter().map(|&t| t as f32)).collect()
+        };
+        bufs.push(flat(xs));
+        bufs.push(flat(ys));
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let outs = self.step_exe.run_f32(&refs)?;
+        Ok(outs[0][0] as f64)
+    }
+}
+
+// Integration tests live in rust/tests/train_integration.rs (they require
+// `make artifacts`).

@@ -1,0 +1,64 @@
+//! # PRISM — Polynomial-fitting and Randomized Iterative Sketching for Matrix functions
+//!
+//! A production-quality reproduction of *"PRISM: Distribution-free Adaptive
+//! Computation of Matrix Functions for Accelerating Neural Network Training"*
+//! (Yang, Wang, Balabanov, Erichson, Mahoney; 2026) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate is organised in four tiers:
+//!
+//! 1. **Substrates** (everything built from scratch — the build environment is
+//!    fully offline): [`rng`], [`threads`], [`cli`], [`configfmt`], [`ptest`],
+//!    [`metrics`], [`benchkit`], [`linalg`], [`randmat`], [`workload`].
+//! 2. **PRISM core**: [`sketch`] (oblivious subspace embeddings + sketched
+//!    power traces), [`polyfit`] (constrained minimisation of the degree-4
+//!    fitting objective `m(α)`), [`coeffs`] (closed-form coefficient
+//!    assembly), and the iteration engines in [`prism`] — one per row of the
+//!    paper's Table 1.
+//! 3. **Baselines**: [`baselines`] — classical Newton–Schulz, PolarExpress
+//!    (minimax/equioscillation), CANS-style Chebyshev acceleration, and
+//!    eigendecomposition-based matrix functions.
+//! 4. **Application layer**: [`optim`] (Muon, Shampoo, AdamW, SGD with
+//!    pluggable matrix-function backends), [`nn`] (manual-backprop networks
+//!    for the Fig. 5 experiments), [`runtime`] (PJRT loading of AOT-compiled
+//!    JAX/Pallas artifacts) and [`coordinator`] (the L3 preconditioner
+//!    service + training driver).
+//!
+//! ## Quick start
+//!
+//! ```
+//! use prism::randmat;
+//! use prism::rng::Rng;
+//! use prism::prism::polar::{polar_prism, PolarOpts};
+//!
+//! let mut rng = Rng::seed_from(42);
+//! let a = randmat::gaussian(&mut rng, 96, 48);
+//! let out = polar_prism(&a, &PolarOpts::degree5(), &mut rng);
+//! assert!(out.log.final_residual() < 1e-6);
+//! ```
+#![allow(clippy::needless_range_loop)]
+
+pub mod util;
+pub mod rng;
+pub mod threads;
+pub mod cli;
+pub mod configfmt;
+pub mod config;
+pub mod ptest;
+pub mod metrics;
+pub mod benchkit;
+pub mod linalg;
+pub mod randmat;
+pub mod workload;
+pub mod sketch;
+pub mod polyfit;
+pub mod coeffs;
+pub mod prism;
+pub mod baselines;
+pub mod optim;
+pub mod nn;
+pub mod runtime;
+pub mod coordinator;
+
+pub use linalg::Mat;
+pub use rng::Rng;

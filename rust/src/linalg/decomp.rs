@@ -1,0 +1,363 @@
+//! Classical decompositions: Cholesky, LU (with partial pivoting) and
+//! Householder QR. These back the DB-Newton engine (Cholesky-based inverse),
+//! the eigen baseline (orthogonal iteration helpers) and the random-matrix
+//! generators (Haar orthogonal via QR).
+
+use super::Mat;
+use crate::util::{Error, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+/// Fails on non-SPD input.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if !a.is_square() {
+        return Err(Error::Shape(format!("cholesky: {:?} not square", a.shape())));
+    }
+    let n = a.rows();
+    let mut l = Mat::zeros(n, n);
+    for j in 0..n {
+        let mut d = a[(j, j)];
+        for k in 0..j {
+            d -= l[(j, k)] * l[(j, k)];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(Error::Numerical(format!(
+                "cholesky: pivot {d:.3e} at column {j} (matrix not SPD)"
+            )));
+        }
+        let dj = d.sqrt();
+        l[(j, j)] = dj;
+        for i in (j + 1)..n {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            l[(i, j)] = s / dj;
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (lower-triangular, forward substitution), in place into `b`.
+pub fn forward_sub(l: &Mat, b: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * b[k];
+        }
+        b[i] = s / l[(i, i)];
+    }
+}
+
+/// Solve `Lᵀ x = y` (backward substitution), in place.
+pub fn backward_sub_t(l: &Mat, b: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * b[k];
+        }
+        b[i] = s / l[(i, i)];
+    }
+}
+
+/// SPD inverse via Cholesky: `A⁻¹ = L⁻ᵀ L⁻¹`.
+/// This is the paper's recommended path for DB-Newton's `M_k⁻¹`.
+pub fn cholesky_inverse(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    // Solve A X = I column by column (two triangular solves each).
+    let mut inv = Mat::zeros(n, n);
+    let mut col = vec![0.0; n];
+    for j in 0..n {
+        col.iter_mut().for_each(|x| *x = 0.0);
+        col[j] = 1.0;
+        forward_sub(&l, &mut col);
+        backward_sub_t(&l, &mut col);
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    // Enforce exact symmetry (removes O(eps) drift).
+    inv.symmetrize();
+    Ok(inv)
+}
+
+/// LU decomposition with partial pivoting. Returns (LU packed, perm, sign).
+pub struct Lu {
+    pub lu: Mat,
+    pub perm: Vec<usize>,
+    pub sign: f64,
+}
+
+pub fn lu_decompose(a: &Mat) -> Result<Lu> {
+    if !a.is_square() {
+        return Err(Error::Shape(format!("lu: {:?} not square", a.shape())));
+    }
+    let n = a.rows();
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
+    for k in 0..n {
+        // pivot
+        let mut p = k;
+        let mut pmax = lu[(k, k)].abs();
+        for i in (k + 1)..n {
+            let v = lu[(i, k)].abs();
+            if v > pmax {
+                pmax = v;
+                p = i;
+            }
+        }
+        if pmax < 1e-300 {
+            return Err(Error::Numerical(format!("lu: singular at column {k}")));
+        }
+        if p != k {
+            perm.swap(p, k);
+            sign = -sign;
+            for j in 0..n {
+                let tmp = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = tmp;
+            }
+        }
+        let pivot = lu[(k, k)];
+        for i in (k + 1)..n {
+            let f = lu[(i, k)] / pivot;
+            lu[(i, k)] = f;
+            for j in (k + 1)..n {
+                let v = lu[(k, j)];
+                lu[(i, j)] -= f * v;
+            }
+        }
+    }
+    Ok(Lu { lu, perm, sign })
+}
+
+/// Solve `A x = b` given an LU factorisation.
+pub fn lu_solve_factored(f: &Lu, b: &[f64]) -> Vec<f64> {
+    let n = f.lu.rows();
+    assert_eq!(b.len(), n);
+    let mut x: Vec<f64> = f.perm.iter().map(|&p| b[p]).collect();
+    // forward (unit lower)
+    for i in 0..n {
+        let mut s = x[i];
+        for k in 0..i {
+            s -= f.lu[(i, k)] * x[k];
+        }
+        x[i] = s;
+    }
+    // backward (upper)
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for k in (i + 1)..n {
+            s -= f.lu[(i, k)] * x[k];
+        }
+        x[i] = s / f.lu[(i, i)];
+    }
+    x
+}
+
+/// Solve `A x = b`.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let f = lu_decompose(a)?;
+    Ok(lu_solve_factored(&f, b))
+}
+
+/// General inverse via LU.
+pub fn lu_inverse(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    let f = lu_decompose(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e.iter_mut().for_each(|x| *x = 0.0);
+        e[j] = 1.0;
+        let col = lu_solve_factored(&f, &e);
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    Ok(inv)
+}
+
+/// Householder QR: returns (Q [m x n, thin], R [n x n]) with A = Q R, m >= n.
+pub fn qr_householder(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr: need m >= n, got {m}x{n}");
+    let mut r = a.clone();
+    // Store Householder vectors.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build v for column k.
+        let mut norm_x = 0.0;
+        for i in k..m {
+            norm_x += r[(i, k)] * r[(i, k)];
+        }
+        norm_x = norm_x.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm_x < 1e-300 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm_x } else { norm_x };
+        for i in k..m {
+            v[i - k] = r[(i, k)];
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * r[(i, j)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[(i, j)] -= f * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+    // Accumulate thin Q by applying the reflectors to I's first n columns in
+    // reverse order.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= f * v[i - k];
+            }
+        }
+    }
+    // Zero R's lower triangle (numerical noise) and truncate to n x n.
+    let mut rr = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, rr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_at_b, syrk_at_a};
+    use crate::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Mat {
+        let g = Mat::gaussian(rng, n + 4, n, 1.0);
+        let mut a = syrk_at_a(&g);
+        a.add_diag(0.5);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::seed_from(1);
+        let a = spd(&mut rng, 12);
+        let l = cholesky(&a).unwrap();
+        let llt = matmul(&l, &l.transpose());
+        assert!(a.sub(&llt).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn cholesky_inverse_works() {
+        let mut rng = Rng::seed_from(2);
+        let a = spd(&mut rng, 10);
+        let inv = cholesky_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv);
+        assert!(prod.sub(&Mat::eye(10)).max_abs() < 1e-8);
+        assert_eq!(inv.symmetry_defect(), 0.0);
+    }
+
+    #[test]
+    fn lu_solve_matches() {
+        let mut rng = Rng::seed_from(3);
+        let a = Mat::gaussian(&mut rng, 9, 9, 1.0);
+        let x_true: Vec<f64> = (0..9).map(|i| i as f64 - 4.0).collect();
+        let b = a.matvec(&x_true);
+        let x = lu_solve(&a, &b).unwrap();
+        for i in 0..9 {
+            assert!((x[i] - x_true[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn lu_inverse_works() {
+        let mut rng = Rng::seed_from(4);
+        let a = Mat::gaussian(&mut rng, 11, 11, 1.0);
+        let inv = lu_inverse(&a).unwrap();
+        assert!(matmul(&a, &inv).sub(&Mat::eye(11)).max_abs() < 1e-7);
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let a = Mat::zeros(3, 3);
+        assert!(lu_decompose(&a).is_err());
+    }
+
+    #[test]
+    fn qr_reconstructs_and_orthogonal() {
+        let mut rng = Rng::seed_from(5);
+        for &(m, n) in &[(8, 8), (15, 6), (30, 30)] {
+            let a = Mat::gaussian(&mut rng, m, n, 1.0);
+            let (q, r) = qr_householder(&a);
+            let qr = matmul(&q, &r);
+            assert!(a.sub(&qr).max_abs() < 1e-9, "{m}x{n} reconstruct");
+            let qtq = matmul_at_b(&q, &q);
+            assert!(qtq.sub(&Mat::eye(n)).max_abs() < 1e-10, "{m}x{n} orthogonality");
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::seed_from(6);
+        let a = spd(&mut rng, 7);
+        let l = cholesky(&a).unwrap();
+        let x_true: Vec<f64> = (0..7).map(|i| (i as f64).sin()).collect();
+        // b = L x
+        let mut b = vec![0.0; 7];
+        for i in 0..7 {
+            for k in 0..=i {
+                b[i] += l[(i, k)] * x_true[k];
+            }
+        }
+        forward_sub(&l, &mut b);
+        for i in 0..7 {
+            assert!((b[i] - x_true[i]).abs() < 1e-10);
+        }
+    }
+}

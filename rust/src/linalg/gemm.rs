@@ -1,0 +1,351 @@
+//! Blocked GEMM and symmetric rank-k kernels.
+//!
+//! This is the O(n³) hot path of every Newton–Schulz-like iteration, so it is
+//! the module the §Perf pass optimises. The current kernel (post-§Perf, see
+//! EXPERIMENTS.md) is a **broadcast-FMA** design:
+//!
+//! * loop order (jc, kc, i, t, j) whose innermost loop is a dependence-free
+//!   `c[j] += a·b[j]` stream — auto-vectorised to AVX-512 FMAs (dot-product
+//!   reductions cannot be, without float-reassociation licence);
+//! * a 4-row micro-tile so each B panel row read from L2 feeds four C rows;
+//! * SYRK via rank-1 updates on the upper triangle, mirrored at the end.
+//!
+//! The previous packed dot-product kernel is kept as `gemm_packed` for the
+//! ablation and as an independent implementation for cross-checking tests.
+//!
+//! GEMM-call counting: the PRISM paper reports costs in units of GEMMs; the
+//! engines count their GEMM invocations through [`GemmCounter`].
+
+use super::Mat;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global GEMM counter (process-wide, cheap relaxed atomics). The iteration
+/// logs snapshot it before/after so per-algorithm GEMM counts can be reported
+/// exactly as the paper does.
+static GEMM_CALLS: AtomicU64 = AtomicU64::new(0);
+static GEMM_FLOPS: AtomicU64 = AtomicU64::new(0);
+
+pub struct GemmCounter;
+
+impl GemmCounter {
+    pub fn calls() -> u64 {
+        GEMM_CALLS.load(Ordering::Relaxed)
+    }
+    pub fn flops() -> u64 {
+        GEMM_FLOPS.load(Ordering::Relaxed)
+    }
+    fn record(m: usize, n: usize, k: usize) {
+        GEMM_CALLS.fetch_add(1, Ordering::Relaxed);
+        GEMM_FLOPS.fetch_add((2 * m * n * k) as u64, Ordering::Relaxed);
+    }
+}
+
+const MC: usize = 64; // rows of A per block
+const KC: usize = 256; // shared dim per block
+
+/// `C = A · B`.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul: {:?} x {:?}", a.shape(), b.shape());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    GemmCounter::record(m, n, k);
+    let mut c = Mat::zeros(m, n);
+    gemm_broadcast(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
+    c
+}
+
+/// `C = Aᵀ · B` (one O(mk) transpose, then the broadcast kernel).
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: {:?}ᵀ x {:?}", a.shape(), b.shape());
+    let at = a.transpose();
+    let (m, k) = at.shape();
+    let n = b.cols();
+    GemmCounter::record(m, n, k);
+    let mut c = Mat::zeros(m, n);
+    gemm_broadcast(at.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
+    c
+}
+
+/// `C = A · Bᵀ` (one O(nk) transpose, then the broadcast kernel).
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: {:?} x {:?}ᵀ", a.shape(), b.shape());
+    let (m, k) = a.shape();
+    let n = b.rows();
+    GemmCounter::record(m, n, k);
+    let bn = b.transpose();
+    let mut c = Mat::zeros(m, n);
+    gemm_broadcast(a.as_slice(), bn.as_slice(), c.as_mut_slice(), m, n, k);
+    c
+}
+
+/// Symmetric rank-k: `C = Aᵀ A` (exactly symmetric by construction).
+///
+/// Rank-1 accumulation over rows of A: for each row `r`,
+/// `C[i, i..] += r[i]·r[i..]` — the inner stream is contiguous and
+/// dependence-free, so it vectorises like the GEMM kernel (§Perf change 3;
+/// the old dot-product triangle ran at half the broadcast kernel's rate).
+pub fn syrk_at_a(a: &Mat) -> Mat {
+    let (k, n) = a.shape();
+    GemmCounter::record(n, n, k);
+    let mut c = Mat::zeros(n, n);
+    {
+        let cs = c.as_mut_slice();
+        for t in 0..k {
+            let row = a.row(t);
+            for i in 0..n {
+                let av = row[i];
+                let (ci, ri) = (&mut cs[i * n + i..(i + 1) * n], &row[i..]);
+                for (cv, rv) in ci.iter_mut().zip(ri) {
+                    *cv += av * rv;
+                }
+            }
+        }
+    }
+    mirror_upper(&mut c);
+    c
+}
+
+/// Symmetric rank-k: `C = A Aᵀ` (via the same rank-1 kernel on Aᵀ's rows,
+/// i.e. A's columns — one O(mk) transpose keeps the hot loop contiguous).
+pub fn syrk_a_at(a: &Mat) -> Mat {
+    let (m, k) = a.shape();
+    GemmCounter::record(m, m, k);
+    let at = a.transpose(); // k x m
+    let mut c = Mat::zeros(m, m);
+    {
+        let cs = c.as_mut_slice();
+        for t in 0..k {
+            let row = at.row(t);
+            for i in 0..m {
+                let av = row[i];
+                let (ci, ri) = (&mut cs[i * m + i..(i + 1) * m], &row[i..]);
+                for (cv, rv) in ci.iter_mut().zip(ri) {
+                    *cv += av * rv;
+                }
+            }
+        }
+    }
+    mirror_upper(&mut c);
+    c
+}
+
+/// Copy the upper triangle into the lower one (exact symmetry).
+fn mirror_upper(c: &mut Mat) {
+    let n = c.rows();
+    for i in 1..n {
+        for j in 0..i {
+            c[(i, j)] = c[(j, i)];
+        }
+    }
+}
+
+/// Broadcast-FMA kernel: `C[m x n] += A[m x k] · B[k x n]`, both row-major.
+///
+/// Loop order (jc, kc, i, t, j): the innermost `crow[j] += a_it * brow[j]`
+/// has no cross-iteration dependence, so rustc vectorises it into AVX-512
+/// FMAs (a dot-product reduction kernel cannot be auto-vectorised without
+/// float-reassociation licence). The (KC2 × NC) B panel stays hot in L2
+/// across the whole i sweep, and each C row segment stays in L1 across the
+/// t loop. §Perf change 2: 1.6–2.4x over the packed dot-product kernel.
+fn gemm_broadcast(a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+    const NC: usize = 512; // B-panel columns (NC·KC2·8B = 512 KiB ≤ L2)
+    const KC2: usize = 256; // B-panel rows
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        for k0 in (0..k).step_by(KC2) {
+            let k1 = (k0 + KC2).min(k);
+            // 4-row micro-tile: each B row loaded from L2 feeds four C rows'
+            // FMA streams (§Perf changes 4/5 — B bandwidth quartered).
+            let mut i = 0;
+            while i + 4 <= m {
+                let (rows01, rows23) = (&mut c[i * n..(i + 4) * n]).split_at_mut(2 * n);
+                let (row0, row1) = rows01.split_at_mut(n);
+                let (row2, row3) = rows23.split_at_mut(n);
+                let c0 = &mut row0[j0..j1];
+                let c1 = &mut row1[j0..j1];
+                let c2 = &mut row2[j0..j1];
+                let c3 = &mut row3[j0..j1];
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                for t in k0..k1 {
+                    let (av0, av1, av2, av3) = (a0[t], a1[t], a2[t], a3[t]);
+                    let brow = &b[t * n + j0..t * n + j1];
+                    for ((((c0v, c1v), c2v), c3v), bv) in c0
+                        .iter_mut()
+                        .zip(c1.iter_mut())
+                        .zip(c2.iter_mut())
+                        .zip(c3.iter_mut())
+                        .zip(brow)
+                    {
+                        *c0v += av0 * bv;
+                        *c1v += av1 * bv;
+                        *c2v += av2 * bv;
+                        *c3v += av3 * bv;
+                    }
+                }
+                i += 4;
+            }
+            while i + 2 <= m {
+                let (row0, row1) = (&mut c[i * n..(i + 2) * n]).split_at_mut(n);
+                let c0 = &mut row0[j0..j1];
+                let c1 = &mut row1[j0..j1];
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                for t in k0..k1 {
+                    let (av0, av1) = (a0[t], a1[t]);
+                    let brow = &b[t * n + j0..t * n + j1];
+                    for ((c0v, c1v), bv) in c0.iter_mut().zip(c1.iter_mut()).zip(brow) {
+                        *c0v += av0 * bv;
+                        *c1v += av1 * bv;
+                    }
+                }
+                i += 2;
+            }
+            if i < m {
+                let crow = &mut c[i * n + j0..i * n + j1];
+                for t in k0..k1 {
+                    let av = a[i * k + t];
+                    let brow = &b[t * n + j0..t * n + j1];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Former core kernel (packed dot-product): kept for the §Perf ablation and
+/// as a second implementation the property tests cross-check against.
+#[allow(dead_code)]
+pub(crate) fn gemm_packed(a: &[f64], bt: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                let arow = &a[i * k + k0..i * k + k1];
+                let crow = &mut c[i * n..(i + 1) * n];
+                let mut j = 0;
+                // 2-column unroll: amortises the A-row reload.
+                while j + 2 <= n {
+                    let b0 = &bt[j * k + k0..j * k + k1];
+                    let b1 = &bt[(j + 1) * k + k0..(j + 1) * k + k1];
+                    let (mut s0a, mut s0b) = (0.0, 0.0);
+                    let (mut s1a, mut s1b) = (0.0, 0.0);
+                    let len = arow.len();
+                    let mut t = 0;
+                    while t + 2 <= len {
+                        s0a += arow[t] * b0[t];
+                        s0b += arow[t + 1] * b0[t + 1];
+                        s1a += arow[t] * b1[t];
+                        s1b += arow[t + 1] * b1[t + 1];
+                        t += 2;
+                    }
+                    while t < len {
+                        s0a += arow[t] * b0[t];
+                        s1a += arow[t] * b1[t];
+                        t += 1;
+                    }
+                    crow[j] += s0a + s0b;
+                    crow[j + 1] += s1a + s1b;
+                    j += 2;
+                }
+                while j < n {
+                    let brow = &bt[j * k + k0..j * k + k1];
+                    let mut acc = 0.0;
+                    for t in 0..arow.len() {
+                        acc += arow[t] * brow[t];
+                    }
+                    crow[j] += acc;
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Reference (naive) matmul for tests.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for t in 0..k {
+            let av = a[(i, t)];
+            for j in 0..n {
+                c[(i, j)] += av * b[(t, j)];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn close(a: &Mat, b: &Mat, tol: f64) -> bool {
+        a.shape() == b.shape() && a.sub(b).max_abs() < tol
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::seed_from(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 13, 9), (64, 64, 64), (65, 130, 33)] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            assert!(close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-10), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seed_from(2);
+        let a = Mat::gaussian(&mut rng, 20, 20, 1.0);
+        assert!(close(&matmul(&a, &Mat::eye(20)), &a, 1e-12));
+        assert!(close(&matmul(&Mat::eye(20), &a), &a, 1e-12));
+    }
+
+    #[test]
+    fn at_b_and_a_bt_match() {
+        let mut rng = Rng::seed_from(3);
+        let a = Mat::gaussian(&mut rng, 12, 7, 1.0);
+        let b = Mat::gaussian(&mut rng, 12, 9, 1.0);
+        let want = matmul_naive(&a.transpose(), &b);
+        assert!(close(&matmul_at_b(&a, &b), &want, 1e-10));
+
+        let c = Mat::gaussian(&mut rng, 9, 7, 1.0);
+        let want2 = matmul_naive(&a, &c.transpose());
+        assert!(close(&matmul_a_bt(&a, &c), &want2, 1e-10));
+    }
+
+    #[test]
+    fn syrk_matches_matmul() {
+        let mut rng = Rng::seed_from(4);
+        let a = Mat::gaussian(&mut rng, 15, 8, 1.0);
+        let want = matmul_naive(&a.transpose(), &a);
+        let got = syrk_at_a(&a);
+        assert!(close(&got, &want, 1e-10));
+        assert_eq!(got.symmetry_defect(), 0.0);
+
+        let want2 = matmul_naive(&a, &a.transpose());
+        let got2 = syrk_a_at(&a);
+        assert!(close(&got2, &want2, 1e-10));
+        assert_eq!(got2.symmetry_defect(), 0.0);
+    }
+
+    #[test]
+    fn gemm_counter_increments() {
+        let before = GemmCounter::calls();
+        let mut rng = Rng::seed_from(5);
+        let a = Mat::gaussian(&mut rng, 4, 4, 1.0);
+        let _ = matmul(&a, &a);
+        assert!(GemmCounter::calls() > before);
+        assert!(GemmCounter::flops() > 0);
+    }
+}

@@ -1,0 +1,426 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the PRISM engines, baselines and optimizers need, built from
+//! scratch: a row-major `f64` matrix type, blocked GEMM, norms, and the
+//! classical decompositions (Cholesky, LU, Householder QR, cyclic-Jacobi
+//! symmetric eigensolver, SVD).
+//!
+//! The layout is deliberately simple (one contiguous `Vec<f64>` per matrix);
+//! the performance-critical kernels (GEMM and friends) live in [`gemm`] and
+//! are written to be auto-vectorisable.
+
+pub mod gemm;
+pub mod decomp;
+pub mod eigen;
+pub mod svd;
+pub mod norms;
+
+pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_at_a, syrk_a_at};
+pub use decomp::{cholesky, cholesky_inverse, lu_inverse, lu_solve, qr_householder};
+pub use eigen::{symmetric_eigen, SymEigen};
+pub use norms::{spectral_norm_est, spectral_norm_sym};
+pub use svd::{svd, Svd};
+
+use crate::rng::Rng;
+use crate::util::{Error, Result};
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing buffer (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_vec: {}x{} needs {} elems, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked to keep both sides cache-friendly for large matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, s: f64) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// `self + s * other` (elementwise), in place.
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Add `s` to the diagonal, in place (square only used in practice but
+    /// works on the leading min(rows, cols) diagonal).
+    pub fn add_diag(&mut self, s: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>()
+    }
+
+    /// Trace (square).
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self.data[i * self.cols + i]).sum()
+    }
+
+    /// Max |a_ij|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0_f64, |m, x| m.max(x.abs()))
+    }
+
+    /// Whether any entry is NaN or infinite.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// Symmetry defect `max |A - Aᵀ|`.
+    pub fn symmetry_defect(&self) -> f64 {
+        assert!(self.is_square());
+        let mut d = 0.0_f64;
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                d = d.max((self.data[i * self.cols + j] - self.data[j * self.cols + i]).abs());
+            }
+        }
+        d
+    }
+
+    /// Force exact symmetry: `(A + Aᵀ)/2` in place.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let a = self.data[i * self.cols + j];
+                let b = self.data[j * self.cols + i];
+                let m = 0.5 * (a + b);
+                self.data[i * self.cols + j] = m;
+                self.data[j * self.cols + i] = m;
+            }
+        }
+    }
+
+    /// `A - B` as a new matrix.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `A + B` as a new matrix.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a + b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `s * A` as a new matrix.
+    pub fn scaled(&self, s: f64) -> Mat {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Matrix–vector product `A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for j in 0..self.cols {
+                acc += row[j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// `Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let xi = x[i];
+            for j in 0..self.cols {
+                y[j] += row[j] * xi;
+            }
+        }
+        y
+    }
+
+    /// Gaussian random matrix with entries N(0, sigma²).
+    pub fn gaussian(rng: &mut Rng, rows: usize, cols: usize, sigma: f64) -> Mat {
+        let data = (0..rows * cols).map(|_| rng.normal() * sigma).collect();
+        Mat { rows, cols, data }
+    }
+
+    /// Copy a sub-block `[r0..r0+h) x [c0..c0+w)`.
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Mat {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols);
+        let mut out = Mat::zeros(h, w);
+        for i in 0..h {
+            out.row_mut(i)
+                .copy_from_slice(&self.data[(r0 + i) * self.cols + c0..(r0 + i) * self.cols + c0 + w]);
+        }
+        out
+    }
+
+    /// Write a sub-block in place.
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
+        for i in 0..b.rows {
+            let dst = (r0 + i) * self.cols + c0;
+            self.data[dst..dst + b.cols].copy_from_slice(b.row(i));
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(6);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            if show_c < self.cols {
+                write!(f, "...")?;
+            }
+            writeln!(f)?;
+        }
+        if show_r < self.rows {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_and_index() {
+        let m = Mat::eye(3);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 1)], 0.0);
+        assert_eq!(m.trace(), 3.0);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(Mat::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Mat::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let a = Mat::gaussian(&mut rng, 37, 53, 1.0);
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let a = Mat::eye(2);
+        let mut b = Mat::zeros(2, 2);
+        b.axpy(2.0, &a);
+        assert_eq!(b[(0, 0)], 2.0);
+        b.scale(0.5);
+        assert_eq!(b[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn fro_norm_eye() {
+        let m = Mat::eye(4);
+        assert!((m.fro_norm() - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn symmetrize_removes_defect() {
+        let mut rng = Rng::seed_from(2);
+        let mut a = Mat::gaussian(&mut rng, 8, 8, 1.0);
+        assert!(a.symmetry_defect() > 0.0);
+        a.symmetrize();
+        assert_eq!(a.symmetry_defect(), 0.0);
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let m = Mat::eye(3);
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.matvec(&x), x);
+        assert_eq!(m.matvec_t(&x), x);
+    }
+
+    #[test]
+    fn block_get_set() {
+        let mut rng = Rng::seed_from(3);
+        let a = Mat::gaussian(&mut rng, 10, 10, 1.0);
+        let b = a.block(2, 3, 4, 5);
+        assert_eq!(b.shape(), (4, 5));
+        assert_eq!(b[(0, 0)], a[(2, 3)]);
+        let mut c = Mat::zeros(10, 10);
+        c.set_block(2, 3, &b);
+        assert_eq!(c[(2, 3)], a[(2, 3)]);
+        assert_eq!(c[(5, 7)], a[(5, 7)]);
+        assert_eq!(c[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn add_diag_works() {
+        let mut m = Mat::zeros(3, 3);
+        m.add_diag(2.5);
+        assert_eq!(m.trace(), 7.5);
+    }
+
+    #[test]
+    fn sub_add_scaled() {
+        let a = Mat::eye(2);
+        let b = a.scaled(3.0);
+        assert_eq!(b[(0, 0)], 3.0);
+        let c = b.sub(&a);
+        assert_eq!(c[(0, 0)], 2.0);
+        let d = c.add(&a);
+        assert_eq!(d[(0, 0)], 3.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Singular value decomposition for rectangular matrices (m >= n), via the
+//! symmetric eigendecomposition of AᵀA with a Gram-correction for small
+//! singular values. Accurate enough to serve as the exact-polar baseline and
+//! the test oracle for the Newton–Schulz orthogonalization engines.
+
+use super::eigen::symmetric_eigen;
+use super::gemm::{matmul, syrk_at_a};
+use super::Mat;
+
+/// Thin SVD: `A = U diag(s) Vᵀ`, `U: m x n`, `V: n x n`, s descending.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub v: Mat,
+}
+
+/// Compute the thin SVD of `A` (m >= n). For m < n, the caller should
+/// transpose. Singular vectors for tiny singular values are completed by
+/// Gram–Schmidt against the already-computed ones.
+pub fn svd(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    assert!(m >= n, "svd: need m >= n, got {m}x{n}; transpose first");
+    let ata = syrk_at_a(a);
+    let e = symmetric_eigen(&ata);
+    // Descending singular values.
+    let mut s: Vec<f64> = Vec::with_capacity(n);
+    let mut v = Mat::zeros(n, n);
+    for i in 0..n {
+        let src = n - 1 - i; // eigen gives ascending
+        s.push(e.values[src].max(0.0).sqrt());
+        for r in 0..n {
+            v[(r, i)] = e.vectors[(r, src)];
+        }
+    }
+    // U = A V diag(1/s); columns whose singular value is below the AᵀA
+    // round-off floor (≈ √eps · s_max) carry no directional information and
+    // are completed by Gram–Schmidt instead.
+    let av = matmul(a, &v);
+    let mut u = Mat::zeros(m, n);
+    let tol = s.first().copied().unwrap_or(0.0) * 1e-7;
+    for j in 0..n {
+        if s[j] > tol {
+            let inv = 1.0 / s[j];
+            for i in 0..m {
+                u[(i, j)] = av[(i, j)] * inv;
+            }
+        } else {
+            // Complete with a vector orthogonal to previous columns.
+            // Start from e_{j mod m}, Gram-Schmidt, normalise.
+            let mut col = vec![0.0; m];
+            col[j % m] = 1.0;
+            for prev in 0..j {
+                let mut dot = 0.0;
+                for i in 0..m {
+                    dot += col[i] * u[(i, prev)];
+                }
+                for i in 0..m {
+                    col[i] -= dot * u[(i, prev)];
+                }
+            }
+            let norm: f64 = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for i in 0..m {
+                    u[(i, j)] = col[i] / norm;
+                }
+            }
+        }
+    }
+    Svd { u, s, v }
+}
+
+impl Svd {
+    /// Exact polar factor `U Vᵀ` (the orthogonalization target of Muon).
+    pub fn polar_factor(&self) -> Mat {
+        matmul(&self.u, &self.v.transpose())
+    }
+
+    /// Reconstruct `A`.
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.s.len();
+        let mut us = self.u.clone();
+        for j in 0..n {
+            for i in 0..us.rows() {
+                us[(i, j)] *= self.s[j];
+            }
+        }
+        matmul(&us, &self.v.transpose())
+    }
+
+    /// Condition number σ_max / σ_min.
+    pub fn cond(&self) -> f64 {
+        let smax = self.s.first().copied().unwrap_or(0.0);
+        let smin = self.s.last().copied().unwrap_or(0.0);
+        smax / smin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_at_b;
+    use crate::rng::Rng;
+
+    #[test]
+    fn svd_reconstructs() {
+        let mut rng = Rng::seed_from(1);
+        for &(m, n) in &[(10, 10), (20, 8), (33, 17)] {
+            let a = Mat::gaussian(&mut rng, m, n, 1.0);
+            let d = svd(&a);
+            assert!(d.reconstruct().sub(&a).max_abs() < 1e-8, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Rng::seed_from(2);
+        let a = Mat::gaussian(&mut rng, 15, 9, 1.0);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn polar_factor_is_orthogonal() {
+        let mut rng = Rng::seed_from(3);
+        let a = Mat::gaussian(&mut rng, 18, 7, 1.0);
+        let q = svd(&a).polar_factor();
+        let qtq = matmul_at_b(&q, &q);
+        assert!(qtq.sub(&Mat::eye(7)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // A = diag(3, 2, 1) embedded in 5x3.
+        let mut a = Mat::zeros(5, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 2.0;
+        a[(2, 2)] = 1.0;
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-10);
+        assert!((d.s[1] - 2.0).abs() < 1e-10);
+        assert!((d.s[2] - 1.0).abs() < 1e-10);
+        assert!((d.cond() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_deficient_still_orthogonal_u() {
+        let mut rng = Rng::seed_from(4);
+        // rank-2 matrix in 8x4
+        let b = Mat::gaussian(&mut rng, 8, 2, 1.0);
+        let c = Mat::gaussian(&mut rng, 2, 4, 1.0);
+        let a = matmul(&b, &c);
+        let d = svd(&a);
+        // Tiny singular values come from eigenvalues of AᵀA at ~1e-16·scale,
+        // so after sqrt they sit near 1e-7 · s[0].
+        assert!(d.s[2] < 1e-6 * d.s[0] && d.s[3] < 1e-6 * d.s[0], "{:?}", d.s);
+        let utu = matmul_at_b(&d.u, &d.u);
+        assert!(utu.sub(&Mat::eye(4)).max_abs() < 1e-6);
+    }
+}

@@ -1,0 +1,391 @@
+//! `prism` — the leader binary: CLI over the PRISM matrix-function engines,
+//! the preconditioner service, and the AOT training driver.
+//!
+//! Subcommands:
+//!
+//! * `polar`   — orthogonalize a random test matrix, compare backends.
+//! * `sqrt`    — coupled Newton–Schulz square root / inverse square root.
+//! * `invroot` — coupled inverse Newton for `A^{-1/p}`.
+//! * `inverse` — Chebyshev iteration for `A^{-1}`.
+//! * `sign`    — matrix sign (the §4 case study).
+//! * `serve`   — run the preconditioner service on a synthetic gradient
+//!   stream and report throughput/latency percentiles.
+//! * `train`   — end-to-end: load the AOT-compiled JAX/Pallas `train_step`
+//!   artifact via PJRT and train the transformer LM with Muon/AdamW/Shampoo.
+//! * `info`    — show the artifact manifest and PJRT platform.
+//!
+//! Run with no args for usage.
+
+use prism::baselines::polar_express::PolarExpress;
+use prism::cli::Args;
+use prism::config::{Backend, ServiceConfig, TrainConfig};
+use prism::coordinator::service::{JobKind, Service};
+use prism::coordinator::train::TrainDriver;
+use prism::linalg::Mat;
+use prism::optim::adamw::AdamW;
+use prism::optim::muon::Muon;
+use prism::optim::shampoo::Shampoo;
+use prism::optim::Optimizer;
+use prism::prism::chebyshev::{chebyshev_inverse, ChebyshevOpts};
+use prism::prism::inverse_newton::{inv_root_prism, InvRootOpts};
+use prism::prism::polar::{orthogonality_error, polar_prism, PolarOpts};
+use prism::prism::sign::{sign_prism, SignOpts};
+use prism::prism::sqrt::{sqrt_error, sqrt_prism, SqrtOpts};
+use prism::prism::{AlphaMode, IterationLog, StopRule};
+use prism::randmat;
+use prism::rng::Rng;
+use prism::runtime::Runtime;
+use prism::util::Stopwatch;
+use prism::workload::{GradientStream, MarkovCorpus};
+
+const USAGE: &str = "\
+prism — distribution-free adaptive matrix functions (PRISM reproduction)
+
+USAGE:
+  prism <subcommand> [--flag value ...]
+
+SUBCOMMANDS:
+  polar     orthogonalization U Vᵀ          (Figs. 1, 3, 4)
+  sqrt      A^{1/2} and A^{-1/2}            (Figs. D.3, D.4)
+  invroot   A^{-1/p} via inverse Newton     (Table 1 row 5)
+  inverse   A^{-1} via Chebyshev            (Table 1 row 7)
+  sign      matrix sign                     (§4 case study)
+  serve     preconditioner service demo     (L3 coordinator)
+  train     AOT LM training via PJRT        (Fig. 6 end-to-end)
+  info      artifact manifest + PJRT platform
+
+COMMON FLAGS:
+  --n / --m        matrix shape             (default 256 / 128)
+  --spectrum S     gaussian|logspace|htmp|wishart|mp (default gaussian)
+  --smin X         smallest singular value for logspace (default 1e-6)
+  --kappa K        HTMP tail parameter      (default 0.5)
+  --seed N         RNG seed                 (default 42)
+  --iters K        max iterations           (default 100)
+  --tol T          residual tolerance       (default 1e-7)
+  --d D            polynomial degree 1|2    (default 2)
+  --sketch P       sketch rows p            (default 8)
+  --backends LIST  comma list: classic,prism,polarexpress,exact
+  --artifacts DIR  artifact directory       (default artifacts)
+";
+
+fn main() {
+    let args = Args::from_env(true);
+    let code = match args.subcommand.as_deref() {
+        Some("polar") => cmd_polar(&args),
+        Some("sqrt") => cmd_sqrt(&args),
+        Some("invroot") => cmd_invroot(&args),
+        Some("inverse") => cmd_inverse(&args),
+        Some("sign") => cmd_sign(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("prism: error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Build the test matrix requested by `--spectrum`.
+fn test_matrix(args: &Args, rng: &mut Rng, square: bool) -> prism::util::Result<Mat> {
+    let n = args.get_usize("n", 256)?;
+    let m = if square { n } else { args.get_usize("m", (n / 2).max(1))? };
+    let smin = args.get_f64("smin", 1e-6)?;
+    let kappa = args.get_f64("kappa", 0.5)?;
+    let kind = args.get_string("spectrum", "gaussian");
+    let k = n.min(m);
+    Ok(match kind.as_str() {
+        "gaussian" => randmat::gaussian(rng, n, m),
+        "logspace" => {
+            let s = randmat::logspace(smin, 1.0, k);
+            randmat::with_spectrum(rng, n, m, &s)
+        }
+        "htmp" => randmat::htmp(rng, n, m, kappa),
+        "wishart" => randmat::wishart(rng, n, m),
+        "mp" => {
+            let w = randmat::marchenko_pastur_eigs(rng, k, m as f64 / n as f64);
+            let s: Vec<f64> = w.iter().map(|x| x.sqrt()).collect();
+            randmat::with_spectrum(rng, n, m, &s)
+        }
+        other => {
+            return Err(prism::util::Error::Parse(format!(
+                "--spectrum '{other}' (want gaussian|logspace|htmp|wishart|mp)"
+            )))
+        }
+    })
+}
+
+fn stop_rule(args: &Args) -> prism::util::Result<StopRule> {
+    Ok(StopRule::default()
+        .with_max_iters(args.get_usize("iters", 100)?)
+        .with_tol(args.get_f64("tol", 1e-7)?))
+}
+
+fn print_log(name: &str, log: &IterationLog, extra: &str) {
+    println!(
+        "  {name:<14} iters={:<4} residual={:<12.3e} time={:>8.2}ms {}",
+        log.iters(),
+        log.final_residual(),
+        log.wall_s * 1e3,
+        extra
+    );
+    if !log.alphas.is_empty() {
+        let alphas: Vec<String> = log.alphas.iter().take(10).map(|a| format!("{a:.3}")).collect();
+        println!(
+            "  {:<14} α_k = [{}{}]",
+            "",
+            alphas.join(", "),
+            if log.alphas.len() > 10 { ", …" } else { "" }
+        );
+    }
+}
+
+fn cmd_polar(args: &Args) -> prism::util::Result<()> {
+    let mut rng = Rng::seed_from(args.get_u64("seed", 42)?);
+    let a = test_matrix(args, &mut rng, false)?;
+    let stop = stop_rule(args)?;
+    let d = args.get_usize("d", 2)?;
+    let p = args.get_usize("sketch", 8)?;
+    let backends = args.get_string("backends", "classic,prism,polarexpress");
+    println!(
+        "polar: A is {}x{}, spectrum={}",
+        a.rows(),
+        a.cols(),
+        args.get_string("spectrum", "gaussian")
+    );
+    for b in backends.split(',') {
+        match b.trim() {
+            "classic" => {
+                let out = polar_prism(&a, &PolarOpts::classic(d).with_stop(stop), &mut rng);
+                print_log(
+                    "classic-NS",
+                    &out.log,
+                    &format!("orth-err={:.2e}", orthogonality_error(&out.q)),
+                );
+            }
+            "prism" => {
+                let opts = PolarOpts { d, alpha: AlphaMode::Sketched { p }, stop };
+                let out = polar_prism(&a, &opts, &mut rng);
+                print_log(
+                    &format!("PRISM-{}", 2 * d + 1),
+                    &out.log,
+                    &format!("orth-err={:.2e}", orthogonality_error(&out.q)),
+                );
+            }
+            "exact" => {
+                let opts = PolarOpts { d, alpha: AlphaMode::Exact, stop };
+                let out = polar_prism(&a, &opts, &mut rng);
+                print_log(
+                    "PRISM-exact",
+                    &out.log,
+                    &format!("orth-err={:.2e}", orthogonality_error(&out.q)),
+                );
+            }
+            "polarexpress" => {
+                let pe = PolarExpress::paper_default();
+                let (q, log) = pe.polar(&a, &stop);
+                print_log(
+                    "PolarExpress",
+                    &log,
+                    &format!("orth-err={:.2e}", orthogonality_error(&q)),
+                );
+            }
+            other => eprintln!("  (unknown backend '{other}', skipped)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sqrt(args: &Args) -> prism::util::Result<()> {
+    let mut rng = Rng::seed_from(args.get_u64("seed", 42)?);
+    let g = test_matrix(args, &mut rng, false)?;
+    // Square roots want a symmetric PSD input: use GᵀG (Wishart-like).
+    let a = prism::linalg::gemm::syrk_at_a(&g);
+    let stop = stop_rule(args)?;
+    let d = args.get_usize("d", 2)?;
+    println!("sqrt: A = GᵀG is {}x{}", a.rows(), a.cols());
+    for (name, opts) in [
+        ("classic-NS", SqrtOpts::classic(d).with_stop(stop)),
+        (
+            "PRISM",
+            if d == 1 { SqrtOpts::degree3() } else { SqrtOpts::degree5() }.with_stop(stop),
+        ),
+    ] {
+        let out = sqrt_prism(&a, &opts, &mut rng);
+        print_log(name, &out.log, &format!("‖I−YAY‖={:.2e}", sqrt_error(&a, &out.inv_sqrt)));
+    }
+    Ok(())
+}
+
+fn cmd_invroot(args: &Args) -> prism::util::Result<()> {
+    let mut rng = Rng::seed_from(args.get_u64("seed", 42)?);
+    let g = test_matrix(args, &mut rng, false)?;
+    let a = prism::linalg::gemm::syrk_at_a(&g);
+    let stop = stop_rule(args)?;
+    let p = args.get_usize("p", 2)?;
+    println!("invroot: A^(-1/{p}), A is {}x{}", a.rows(), a.cols());
+    for (name, opts) in [
+        ("classic", InvRootOpts::classic(p).with_stop(stop)),
+        ("PRISM", InvRootOpts::prism(p).with_stop(stop)),
+    ] {
+        let out = inv_root_prism(&a, &opts, &mut rng);
+        print_log(name, &out.log, "");
+    }
+    Ok(())
+}
+
+fn cmd_inverse(args: &Args) -> prism::util::Result<()> {
+    let mut rng = Rng::seed_from(args.get_u64("seed", 42)?);
+    let a = test_matrix(args, &mut rng, true)?;
+    let stop = stop_rule(args)?;
+    println!("inverse: A is {}x{}", a.rows(), a.cols());
+    for (name, opts) in [
+        ("classic-Cheb", ChebyshevOpts::classic().with_stop(stop)),
+        ("PRISM-Cheb", ChebyshevOpts::prism().with_stop(stop)),
+    ] {
+        let out = chebyshev_inverse(&a, &opts, &mut rng);
+        print_log(name, &out.log, "");
+    }
+    Ok(())
+}
+
+fn cmd_sign(args: &Args) -> prism::util::Result<()> {
+    let mut rng = Rng::seed_from(args.get_u64("seed", 42)?);
+    let n = args.get_usize("n", 128)?;
+    let smin = args.get_f64("smin", 1e-6)?;
+    // A with A² symmetric and eigenvalues of both signs.
+    let w: Vec<f64> = randmat::logspace(smin, 1.0, n)
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| if i % 2 == 0 { x } else { -x })
+        .collect();
+    let a = randmat::sym_with_spectrum(&mut rng, n, &w);
+    let stop = stop_rule(args)?;
+    let d = args.get_usize("d", 1)?;
+    println!("sign: A is {n}x{n}, eigenvalues in ±[{smin:.1e}, 1]");
+    for (name, alpha) in [
+        ("classic-NS", AlphaMode::Classic),
+        ("PRISM", AlphaMode::Sketched { p: args.get_usize("sketch", 8)? }),
+        ("PRISM-exact", AlphaMode::Exact),
+    ] {
+        let out = sign_prism(&a, &SignOpts { d, alpha, stop, normalize: true }, &mut rng);
+        print_log(name, &out.log, "");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> prism::util::Result<()> {
+    let seed = args.get_u64("seed", 42)?;
+    let jobs = args.get_usize("jobs", 64)?;
+    let cfg = ServiceConfig {
+        workers: args.get_usize("workers", 4)?,
+        queue_capacity: 128,
+        max_batch: args.get_usize("batch", 4)?,
+        sketch_p: args.get_usize("sketch", 8)?,
+        max_iters: args.get_usize("iters", 60)?,
+        tol: args.get_f64("tol", 1e-7)?,
+    };
+    let backend = Backend::parse(&args.get_string("backend", "prism5"))?;
+    let kappa = args.get_f64("kappa", 0.5)?;
+    let n = args.get_usize("n", 128)?;
+    println!(
+        "serve: {} workers, batch≤{}, backend={}, {jobs} jobs of {n}x{n} HTMP(κ={kappa})",
+        cfg.workers,
+        cfg.max_batch,
+        backend.name()
+    );
+    let shapes = vec![(n, n), (n, n / 2)];
+    let mut stream = GradientStream::new(seed, shapes, kappa);
+    let svc = Service::start(cfg, backend, seed);
+    let sw = Stopwatch::start();
+    for _ in 0..jobs {
+        let (layer, g) = stream.next_grad();
+        let (r, c) = g.shape();
+        if r == c {
+            let a = prism::linalg::gemm::syrk_at_a(&g);
+            svc.submit(layer, JobKind::InvSqrt { eps: 1e-8 }, a)?;
+        } else {
+            svc.submit(layer, JobKind::Polar, g)?;
+        }
+    }
+    let results = svc.drain()?;
+    let wall = sw.elapsed_s();
+    println!(
+        "  {} results in {:.2}s — {:.1} jobs/s",
+        results.len(),
+        wall,
+        results.len() as f64 / wall
+    );
+    println!("{}", svc.report());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> prism::util::Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_toml_file(path)?,
+        None => TrainConfig::default(),
+    };
+    let steps = args.get_usize("steps", cfg.steps)?;
+    let opt_name = args.get_string("optimizer", "muon");
+    let backend = Backend::parse(&args.get_string("backend", cfg.backend.name()))?;
+    let dir = args.get_string("artifacts", "artifacts");
+    let rt = Runtime::open(&dir)?;
+    println!("train: PJRT platform = {}", rt.platform());
+    let mut driver = TrainDriver::new(&rt, cfg.seed as f32)?;
+    println!(
+        "  model: {} params across {} tensors, batch={} seq={} vocab={}",
+        driver.num_params(),
+        driver.params.len(),
+        driver.batch,
+        driver.seq_len,
+        driver.vocab
+    );
+    let mut opt: Box<dyn Optimizer> = match opt_name.as_str() {
+        "muon" => Box::new(Muon::paper_default(backend, cfg.seed)),
+        "adamw" => Box::new(AdamW::paper_default()),
+        "shampoo" => Box::new(Shampoo::paper_default(backend, cfg.seed)),
+        other => {
+            return Err(prism::util::Error::Parse(format!(
+                "--optimizer '{other}' (want muon|adamw|shampoo)"
+            )))
+        }
+    };
+    let mut rng = Rng::seed_from(cfg.seed);
+    let corpus = MarkovCorpus::generate(&mut rng, driver.vocab, 200_000);
+    println!(
+        "  corpus: {} tokens, unigram entropy {:.3} nats; optimizer = {}",
+        corpus.tokens.len(),
+        corpus.unigram_entropy(),
+        opt.name()
+    );
+    let log_every = args.get_usize("log-every", cfg.log_every.max(1))?;
+    for step in 0..steps {
+        let (xs, ys) = corpus.sample_batch(&mut rng, driver.batch, driver.seq_len);
+        let loss = driver.step(&xs, &ys, opt.as_mut())?;
+        if step % log_every == 0 || step + 1 == steps {
+            let t = driver.step_times_s.last().copied().unwrap_or(0.0);
+            println!("  step {step:>5}  loss {loss:.4}  ({:.0} ms/step)", t * 1e3);
+        }
+    }
+    let first = driver.losses.first().copied().unwrap_or(f64::NAN);
+    let last = driver.losses.last().copied().unwrap_or(f64::NAN);
+    println!("  done: loss {first:.4} → {last:.4} over {steps} steps");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> prism::util::Result<()> {
+    let dir = args.get_string("artifacts", "artifacts");
+    let rt = Runtime::open(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts in {dir}:");
+    for e in &rt.manifest.entries {
+        let ins: Vec<String> =
+            e.inputs.iter().map(|t| format!("{}{:?}", t.name, t.shape)).collect();
+        println!("  {:<24} {} inputs: {}", e.name, e.file, ins.join(", "));
+    }
+    Ok(())
+}

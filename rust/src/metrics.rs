@@ -1,0 +1,244 @@
+//! Metrics: counters, gauges and log-bucketed histograms with a process-wide
+//! registry. The coordinator reports queue depths, batch sizes and per-stage
+//! latencies through this module; benches print the same tables.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time gauge.
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn set(&self, x: i64) {
+        self.v.store(x, Ordering::Relaxed);
+    }
+    pub fn add(&self, x: i64) {
+        self.v.fetch_add(x, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram with logarithmic buckets covering ~[1ns, 1000s] when values are
+/// seconds (or any positive quantity). 8 buckets per decade.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_micro: AtomicU64, // sum in 1e-6 units for mean
+}
+
+const DECADES: f64 = 12.0; // 1e-9 .. 1e3
+const PER_DECADE: usize = 8;
+const NBUCKETS: usize = (DECADES as usize) * PER_DECADE;
+const LOG_MIN: f64 = -9.0;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micro: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        if x <= 1e-9 {
+            return 0;
+        }
+        let idx = ((x.log10() - LOG_MIN) * PER_DECADE as f64).floor() as isize;
+        idx.clamp(0, NBUCKETS as isize - 1) as usize
+    }
+
+    fn bucket_upper(i: usize) -> f64 {
+        10f64.powf(LOG_MIN + (i + 1) as f64 / PER_DECADE as f64)
+    }
+
+    pub fn observe(&self, x: f64) {
+        self.buckets[Self::bucket_of(x)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micro
+            .fetch_add((x * 1e6).max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_micro.load(Ordering::Relaxed) as f64 * 1e-6 / c as f64
+    }
+
+    /// Approximate quantile from the bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(NBUCKETS - 1)
+    }
+}
+
+/// Process-wide registry keyed by name.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histos: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::default)
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Counter::default()))
+            .clone()
+    }
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Gauge::default()))
+            .clone()
+    }
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histos
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Render a plain-text report of everything registered.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {}\n", c.get()));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge   {k} = {}\n", g.get()));
+        }
+        for (k, h) in self.histos.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "histo   {k}: n={} mean={:.3e} p50={:.3e} p90={:.3e} p99={:.3e}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.9),
+                h.quantile(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::default();
+        let c = r.counter("jobs");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = r.gauge("depth");
+        g.set(10);
+        g.add(-3);
+        assert_eq!(g.get(), 7);
+        // Same name returns same instance.
+        assert_eq!(r.counter("jobs").get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-6); // 1us .. 1ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // p50 should be near 0.5ms
+        assert!(p50 > 1e-4 && p50 < 1.5e-3, "p50={p50}");
+        assert!((h.mean() - 5.0e-4).abs() < 1e-4, "mean={}", h.mean());
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.9), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.gauge("b").set(1);
+        r.histogram("c").observe(0.5);
+        let rep = r.report();
+        assert!(rep.contains("counter a"));
+        assert!(rep.contains("gauge   b"));
+        assert!(rep.contains("histo   c"));
+    }
+
+    #[test]
+    fn global_registry_singleton() {
+        global().counter("x").inc();
+        assert!(global().counter("x").get() >= 1);
+    }
+}

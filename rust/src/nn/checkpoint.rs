@@ -1,0 +1,271 @@
+//! Checkpointing: a small self-describing binary format for parameter sets,
+//! so long training runs (the Fig. 6 driver) can stop and resume without
+//! Python or external serialization crates.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic   8 bytes  "PRISMCK1"
+//! step    u64      optimizer step the checkpoint was taken at
+//! count   u64      number of parameters
+//! per parameter:
+//!   name_len u64, name bytes (UTF-8)
+//!   kind     u8   (0 = Matrix, 1 = Vector)
+//!   rows u64, cols u64
+//!   data     rows·cols f64
+//! checksum u64     FNV-1a over everything before it
+//! ```
+
+use super::layers::{Param, ParamKind};
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PRISMCK1";
+
+/// FNV-1a, enough to catch truncation/bit-rot — not cryptographic.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(buf: &[u8], off: &mut usize) -> Result<u64> {
+    if *off + 8 > buf.len() {
+        return Err(Error::Runtime("checkpoint truncated".into()));
+    }
+    let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
+
+/// Serialize `params` (+ the optimizer step) into the checkpoint format.
+pub fn encode(params: &[Param], step: u64) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u64(&mut buf, step);
+    put_u64(&mut buf, params.len() as u64);
+    for p in params {
+        put_u64(&mut buf, p.name.len() as u64);
+        buf.extend_from_slice(p.name.as_bytes());
+        buf.push(match p.kind {
+            ParamKind::Matrix => 0,
+            ParamKind::Vector => 1,
+        });
+        put_u64(&mut buf, p.w.rows() as u64);
+        put_u64(&mut buf, p.w.cols() as u64);
+        for &v in p.w.as_slice() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let check = fnv1a(&buf);
+    put_u64(&mut buf, check);
+    buf
+}
+
+/// Decode a checkpoint; returns (params, step). Validates magic, checksum
+/// and internal lengths.
+pub fn decode(buf: &[u8]) -> Result<(Vec<Param>, u64)> {
+    if buf.len() < MAGIC.len() + 24 {
+        return Err(Error::Runtime("checkpoint too short".into()));
+    }
+    if &buf[..8] != MAGIC {
+        return Err(Error::Runtime("bad checkpoint magic".into()));
+    }
+    let body = &buf[..buf.len() - 8];
+    let mut off = buf.len() - 8;
+    let want = get_u64(buf, &mut off)?;
+    if fnv1a(body) != want {
+        return Err(Error::Runtime("checkpoint checksum mismatch".into()));
+    }
+    let mut off = 8;
+    let step = get_u64(body, &mut off)?;
+    let count = get_u64(body, &mut off)? as usize;
+    let mut params = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = get_u64(body, &mut off)? as usize;
+        if off + name_len + 1 > body.len() {
+            return Err(Error::Runtime("checkpoint truncated (name)".into()));
+        }
+        let name = std::str::from_utf8(&body[off..off + name_len])
+            .map_err(|_| Error::Runtime("checkpoint name not UTF-8".into()))?
+            .to_string();
+        off += name_len;
+        let kind = match body[off] {
+            0 => ParamKind::Matrix,
+            1 => ParamKind::Vector,
+            k => return Err(Error::Runtime(format!("bad param kind {k}"))),
+        };
+        off += 1;
+        let rows = get_u64(body, &mut off)? as usize;
+        let cols = get_u64(body, &mut off)? as usize;
+        let numel = rows
+            .checked_mul(cols)
+            .ok_or_else(|| Error::Runtime("checkpoint shape overflow".into()))?;
+        if off + numel * 8 > body.len() {
+            return Err(Error::Runtime("checkpoint truncated (data)".into()));
+        }
+        let mut w = Mat::zeros(rows, cols);
+        for v in w.as_mut_slice() {
+            *v = f64::from_le_bytes(body[off..off + 8].try_into().unwrap());
+            off += 8;
+        }
+        let mut p = Param::matrix(&name, w);
+        p.kind = kind;
+        params.push(p);
+    }
+    Ok((params, step))
+}
+
+/// Write a checkpoint atomically (tmp file + rename).
+pub fn save(path: impl AsRef<Path>, params: &[Param], step: u64) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    let buf = encode(params, step);
+    let mut f = std::fs::File::create(&tmp)
+        .map_err(|e| Error::Runtime(format!("create {}: {e}", tmp.display())))?;
+    f.write_all(&buf)
+        .map_err(|e| Error::Runtime(format!("write {}: {e}", tmp.display())))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .map_err(|e| Error::Runtime(format!("rename to {}: {e}", path.display())))?;
+    Ok(())
+}
+
+/// Load a checkpoint from disk.
+pub fn load(path: impl AsRef<Path>) -> Result<(Vec<Param>, u64)> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .map_err(|e| Error::Runtime(format!("open {}: {e}", path.as_ref().display())))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)
+        .map_err(|e| Error::Runtime(format!("read checkpoint: {e}")))?;
+    decode(&buf)
+}
+
+/// Copy checkpointed weights into an existing parameter set, matching by
+/// name and validating shapes — the resume path for [`crate::coordinator::train::TrainDriver`].
+pub fn restore_into(params: &mut [Param], saved: &[Param]) -> Result<()> {
+    if params.len() != saved.len() {
+        return Err(Error::Shape(format!(
+            "checkpoint has {} params, model has {}",
+            saved.len(),
+            params.len()
+        )));
+    }
+    for (p, s) in params.iter_mut().zip(saved) {
+        if p.name != s.name {
+            return Err(Error::Shape(format!(
+                "param name mismatch: model '{}' vs checkpoint '{}'",
+                p.name, s.name
+            )));
+        }
+        if p.w.shape() != s.w.shape() {
+            return Err(Error::Shape(format!(
+                "param '{}': model {:?} vs checkpoint {:?}",
+                p.name,
+                p.w.shape(),
+                s.w.shape()
+            )));
+        }
+        p.w = s.w.clone();
+        p.zero_grad();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sample_params(seed: u64) -> Vec<Param> {
+        let mut rng = Rng::seed_from(seed);
+        vec![
+            Param::matrix("w0", Mat::gaussian(&mut rng, 6, 4, 1.0)),
+            Param::vector("b0", 4),
+            Param::matrix("w1", Mat::gaussian(&mut rng, 4, 3, 0.5)),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let params = sample_params(1);
+        let buf = encode(&params, 1234);
+        let (got, step) = decode(&buf).unwrap();
+        assert_eq!(step, 1234);
+        assert_eq!(got.len(), 3);
+        for (a, b) in params.iter().zip(&got) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.w.shape(), b.w.shape());
+            assert_eq!(a.w.as_slice(), b.w.as_slice()); // bit-exact
+        }
+    }
+
+    #[test]
+    fn save_load_via_disk() {
+        let params = sample_params(2);
+        let path = std::env::temp_dir().join("prism_ckpt_test.bin");
+        save(&path, &params, 7).unwrap();
+        let (got, step) = load(&path).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(got[0].w.as_slice(), params[0].w.as_slice());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let params = sample_params(3);
+        let mut buf = encode(&params, 1);
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0xFF;
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let params = sample_params(4);
+        let buf = encode(&params, 1);
+        assert!(decode(&buf[..buf.len() - 9]).is_err());
+        assert!(decode(&buf[..10]).is_err());
+        assert!(decode(b"").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let params = sample_params(5);
+        let mut buf = encode(&params, 1);
+        buf[0] = b'X';
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn restore_matches_by_name_and_shape() {
+        let saved = sample_params(6);
+        let mut params = sample_params(7); // same structure, different values
+        restore_into(&mut params, &saved).unwrap();
+        assert_eq!(params[0].w.as_slice(), saved[0].w.as_slice());
+
+        // Name mismatch rejected.
+        let mut renamed = sample_params(8);
+        renamed[1].name = "other".into();
+        assert!(restore_into(&mut renamed, &saved).is_err());
+
+        // Shape mismatch rejected.
+        let mut reshaped = sample_params(9);
+        reshaped[0].w = Mat::zeros(2, 2);
+        assert!(restore_into(&mut reshaped, &saved).is_err());
+
+        // Count mismatch rejected.
+        let mut fewer = sample_params(10);
+        fewer.pop();
+        assert!(restore_into(&mut fewer, &saved).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Parameters and the layer primitives (linear, ReLU, softmax cross-entropy)
+//! with hand-written backward passes.
+
+use crate::linalg::gemm::{matmul, matmul_a_bt, matmul_at_b};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// What kind of parameter this is — optimizers treat matrices (Muon polar,
+/// Shampoo Kronecker) differently from vectors (elementwise Adam).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// 2-D weight (rows = in, cols = out).
+    Matrix,
+    /// Bias/gain vector stored as a 1 x n matrix.
+    Vector,
+}
+
+/// A trainable tensor with its gradient accumulator.
+pub struct Param {
+    pub name: String,
+    pub w: Mat,
+    pub g: Mat,
+    pub kind: ParamKind,
+}
+
+impl Param {
+    pub fn matrix(name: &str, w: Mat) -> Param {
+        let g = Mat::zeros(w.rows(), w.cols());
+        Param { name: name.into(), w, g, kind: ParamKind::Matrix }
+    }
+    pub fn vector(name: &str, n: usize) -> Param {
+        Param {
+            name: name.into(),
+            w: Mat::zeros(1, n),
+            g: Mat::zeros(1, n),
+            kind: ParamKind::Vector,
+        }
+    }
+    pub fn zero_grad(&mut self) {
+        self.g.as_mut_slice().iter_mut().for_each(|x| *x = 0.0);
+    }
+    pub fn numel(&self) -> usize {
+        self.w.rows() * self.w.cols()
+    }
+}
+
+/// Kaiming-ish init for a `fan_in x fan_out` weight.
+pub fn init_linear(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Mat {
+    Mat::gaussian(rng, fan_in, fan_out, (2.0 / fan_in as f64).sqrt())
+}
+
+/// Forward `y = x W + b`; `x: B x in`, `W: in x out`, `b: 1 x out`.
+pub fn linear_forward(x: &Mat, w: &Mat, b: &Mat) -> Mat {
+    let mut y = matmul(x, w);
+    let out = y.cols();
+    for i in 0..y.rows() {
+        let row = y.row_mut(i);
+        for j in 0..out {
+            row[j] += b[(0, j)];
+        }
+    }
+    y
+}
+
+/// Backward of linear: given `dy`, accumulate `dW += xᵀ dy`, `db += Σ_rows dy`
+/// and return `dx = dy Wᵀ`.
+pub fn linear_backward(x: &Mat, w: &Mat, dy: &Mat, dw: &mut Mat, db: &mut Mat) -> Mat {
+    dw.axpy(1.0, &matmul_at_b(x, dy));
+    for i in 0..dy.rows() {
+        let row = dy.row(i);
+        for j in 0..dy.cols() {
+            db[(0, j)] += row[j];
+        }
+    }
+    matmul_a_bt(dy, w)
+}
+
+/// ReLU forward (in place variant returns a fresh matrix for the cache).
+pub fn relu_forward(x: &Mat) -> Mat {
+    let mut y = x.clone();
+    y.as_mut_slice().iter_mut().for_each(|v| {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    });
+    y
+}
+
+/// ReLU backward: `dx = dy ⊙ (x > 0)`.
+pub fn relu_backward(x: &Mat, dy: &Mat) -> Mat {
+    let mut dx = dy.clone();
+    for (d, &v) in dx.as_mut_slice().iter_mut().zip(x.as_slice()) {
+        if v <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    dx
+}
+
+/// Softmax cross-entropy: returns (mean loss, dlogits, #correct).
+/// `logits: B x C`, `labels[b] ∈ [0, C)`.
+pub fn softmax_ce(logits: &Mat, labels: &[usize]) -> (f64, Mat, usize) {
+    let (b, c) = logits.shape();
+    assert_eq!(labels.len(), b);
+    let mut dlogits = Mat::zeros(b, c);
+    let mut loss = 0.0;
+    let mut correct = 0;
+    for i in 0..b {
+        let row = logits.row(i);
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut denom = 0.0;
+        for &v in row {
+            denom += (v - mx).exp();
+        }
+        let log_denom = denom.ln() + mx;
+        let y = labels[i];
+        loss += log_denom - row[y];
+        // argmax
+        let (mut best, mut best_v) = (0usize, f64::NEG_INFINITY);
+        for (j, &v) in row.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = j;
+            }
+        }
+        if best == y {
+            correct += 1;
+        }
+        for j in 0..c {
+            let p = (row[j] - log_denom).exp();
+            dlogits[(i, j)] = (p - if j == y { 1.0 } else { 0.0 }) / b as f64;
+        }
+    }
+    (loss / b as f64, dlogits, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference check of a scalar function's gradient wrt one entry.
+    fn fd_check(
+        mut f: impl FnMut(&Mat) -> f64,
+        w: &Mat,
+        grad: &Mat,
+        idx: (usize, usize),
+        tol: f64,
+    ) {
+        let h = 1e-6;
+        let mut wp = w.clone();
+        wp[idx] += h;
+        let mut wm = w.clone();
+        wm[idx] -= h;
+        let num = (f(&wp) - f(&wm)) / (2.0 * h);
+        let ana = grad[idx];
+        assert!(
+            (num - ana).abs() < tol * (1.0 + num.abs()),
+            "fd {num} vs analytic {ana} at {idx:?}"
+        );
+    }
+
+    #[test]
+    fn linear_grads_match_fd() {
+        let mut rng = Rng::seed_from(1);
+        let x = Mat::gaussian(&mut rng, 4, 3, 1.0);
+        let w = Mat::gaussian(&mut rng, 3, 5, 1.0);
+        let b = Mat::gaussian(&mut rng, 1, 5, 1.0);
+        let labels = vec![0usize, 2, 4, 1];
+
+        let loss_of = |w_: &Mat, b_: &Mat, x_: &Mat| {
+            let y = linear_forward(x_, w_, b_);
+            softmax_ce(&y, &labels).0
+        };
+
+        let y = linear_forward(&x, &w, &b);
+        let (_, dy, _) = softmax_ce(&y, &labels);
+        let mut dw = Mat::zeros(3, 5);
+        let mut db = Mat::zeros(1, 5);
+        let dx = linear_backward(&x, &w, &dy, &mut dw, &mut db);
+
+        fd_check(|w_| loss_of(w_, &b, &x), &w, &dw, (1, 2), 1e-4);
+        fd_check(|w_| loss_of(w_, &b, &x), &w, &dw, (0, 0), 1e-4);
+        fd_check(|b_| loss_of(&w, b_, &x), &b, &db, (0, 3), 1e-4);
+        fd_check(|x_| loss_of(&w, &b, x_), &x, &dx, (2, 1), 1e-4);
+    }
+
+    #[test]
+    fn relu_zeroes_negatives() {
+        let x = Mat::from_vec(1, 4, vec![-1.0, 2.0, 0.0, -0.5]).unwrap();
+        let y = relu_forward(&x);
+        assert_eq!(y.as_slice(), &[0.0, 2.0, 0.0, 0.0]);
+        let dy = Mat::from_vec(1, 4, vec![1.0; 4]).unwrap();
+        let dx = relu_backward(&x, &dy);
+        assert_eq!(dx.as_slice(), &[0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_ce_perfect_prediction_low_loss() {
+        let mut logits = Mat::zeros(2, 3);
+        logits[(0, 1)] = 20.0;
+        logits[(1, 0)] = 20.0;
+        let (loss, _, correct) = softmax_ce(&logits, &[1, 0]);
+        assert!(loss < 1e-6);
+        assert_eq!(correct, 2);
+    }
+
+    #[test]
+    fn softmax_grads_sum_to_zero() {
+        let mut rng = Rng::seed_from(2);
+        let logits = Mat::gaussian(&mut rng, 3, 5, 1.0);
+        let (_, d, _) = softmax_ce(&logits, &[0, 1, 2]);
+        for i in 0..3 {
+            let s: f64 = d.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn param_helpers() {
+        let mut rng = Rng::seed_from(3);
+        let mut p = Param::matrix("w", Mat::gaussian(&mut rng, 2, 3, 1.0));
+        assert_eq!(p.numel(), 6);
+        p.g[(0, 0)] = 5.0;
+        p.zero_grad();
+        assert_eq!(p.g[(0, 0)], 0.0);
+        let v = Param::vector("b", 4);
+        assert_eq!(v.kind, ParamKind::Vector);
+        assert_eq!(v.w.shape(), (1, 4));
+    }
+}

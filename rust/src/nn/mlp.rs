@@ -1,0 +1,184 @@
+//! Multi-layer perceptron with explicit backprop — the Fig. 5 model
+//! (substituting for ResNet-20/32 at CPU scale; see DESIGN.md).
+
+use super::layers::{
+    init_linear, linear_backward, linear_forward, relu_backward, relu_forward, softmax_ce,
+    Param,
+};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// `dims = [in, h1, ..., out]`; ReLU between layers, none after the last.
+pub struct Mlp {
+    pub weights: Vec<Param>,
+    pub biases: Vec<Param>,
+    dims: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn new(rng: &mut Rng, dims: &[usize]) -> Mlp {
+        assert!(dims.len() >= 2);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..dims.len() - 1 {
+            weights.push(Param::matrix(
+                &format!("w{l}"),
+                init_linear(rng, dims[l], dims[l + 1]),
+            ));
+            biases.push(Param::vector(&format!("b{l}"), dims[l + 1]));
+        }
+        Mlp { weights, biases, dims: dims.to_vec() }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.weights.iter().map(|p| p.numel()).sum::<usize>()
+            + self.biases.iter().map(|p| p.numel()).sum::<usize>()
+    }
+
+    /// Forward pass only; returns logits.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut h = x.clone();
+        for l in 0..self.num_layers() {
+            h = linear_forward(&h, &self.weights[l].w, &self.biases[l].w);
+            if l + 1 < self.num_layers() {
+                h = relu_forward(&h);
+            }
+        }
+        h
+    }
+
+    /// Forward + backward; accumulates gradients into the params.
+    /// Returns (mean loss, #correct).
+    pub fn forward_backward(&mut self, x: &Mat, labels: &[usize]) -> (f64, usize) {
+        let nl = self.num_layers();
+        // Forward with caches: pre[l] = input to layer l, post[l] = pre-ReLU output.
+        let mut inputs: Vec<Mat> = Vec::with_capacity(nl);
+        let mut pre_relu: Vec<Mat> = Vec::with_capacity(nl);
+        let mut h = x.clone();
+        for l in 0..nl {
+            inputs.push(h.clone());
+            let y = linear_forward(&h, &self.weights[l].w, &self.biases[l].w);
+            pre_relu.push(y.clone());
+            h = if l + 1 < nl { relu_forward(&y) } else { y };
+        }
+        let (loss, mut d, correct) = softmax_ce(&h, labels);
+        // Backward.
+        for l in (0..nl).rev() {
+            if l + 1 < nl {
+                d = relu_backward(&pre_relu[l], &d);
+            }
+            let w = self.weights[l].w.clone(); // cheap relative to the GEMMs
+            let dw_holder = &mut self.weights[l].g;
+            let db_holder = &mut self.biases[l].g;
+            d = linear_backward(&inputs[l], &w, &d, dw_holder, db_holder);
+        }
+        (loss, correct)
+    }
+
+    /// Evaluate accuracy on a batch.
+    pub fn accuracy(&self, x: &Mat, labels: &[usize]) -> f64 {
+        let logits = self.forward(x);
+        let mut correct = 0;
+        for i in 0..labels.len() {
+            let row = logits.row(i);
+            let (mut best, mut bv) = (0usize, f64::NEG_INFINITY);
+            for (j, &v) in row.iter().enumerate() {
+                if v > bv {
+                    bv = v;
+                    best = j;
+                }
+            }
+            if best == labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / labels.len() as f64
+    }
+
+    pub fn zero_grads(&mut self) {
+        for p in self.weights.iter_mut().chain(self.biases.iter_mut()) {
+            p.zero_grad();
+        }
+    }
+
+    /// All params (weights then biases) for an optimizer pass.
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        self.weights.iter_mut().chain(self.biases.iter_mut()).collect()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_counts() {
+        let mut rng = Rng::seed_from(1);
+        let mlp = Mlp::new(&mut rng, &[8, 16, 4]);
+        assert_eq!(mlp.num_layers(), 2);
+        assert_eq!(mlp.num_params(), 8 * 16 + 16 + 16 * 4 + 4);
+        let x = Mat::gaussian(&mut rng, 3, 8, 1.0);
+        assert_eq!(mlp.forward(&x).shape(), (3, 4));
+    }
+
+    #[test]
+    fn full_model_grad_matches_fd() {
+        let mut rng = Rng::seed_from(2);
+        let mut mlp = Mlp::new(&mut rng, &[5, 7, 3]);
+        let x = Mat::gaussian(&mut rng, 4, 5, 1.0);
+        let labels = vec![0usize, 1, 2, 0];
+        mlp.zero_grads();
+        let (_, _) = mlp.forward_backward(&x, &labels);
+        // FD on one entry of each weight/bias.
+        let h = 1e-6;
+        for l in 0..2 {
+            let idx = (1.min(mlp.weights[l].w.rows() - 1), 2.min(mlp.weights[l].w.cols() - 1));
+            let ana = mlp.weights[l].g[idx];
+            mlp.weights[l].w[idx] += h;
+            let lp = {
+                let logits = mlp.forward(&x);
+                crate::nn::layers::softmax_ce(&logits, &labels).0
+            };
+            mlp.weights[l].w[idx] -= 2.0 * h;
+            let lm = {
+                let logits = mlp.forward(&x);
+                crate::nn::layers::softmax_ce(&logits, &labels).0
+            };
+            mlp.weights[l].w[idx] += h;
+            let num = (lp - lm) / (2.0 * h);
+            assert!((num - ana).abs() < 1e-4 * (1.0 + num.abs()), "layer {l}: {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn sgd_training_reduces_loss() {
+        let mut rng = Rng::seed_from(3);
+        let ds = crate::workload::BlobsDataset::generate(&mut rng, 128, 10, 3, 4.0);
+        let mut mlp = Mlp::new(&mut rng, &[10, 32, 3]);
+        let idx: Vec<usize> = (0..64).collect();
+        let (x, y) = ds.batch(&idx);
+        mlp.zero_grads();
+        let (loss0, _) = mlp.forward_backward(&x, &y);
+        // 30 plain-SGD steps.
+        let mut last = loss0;
+        for _ in 0..30 {
+            for p in mlp.params_mut() {
+                let g = p.g.clone();
+                p.w.axpy(-0.1, &g);
+            }
+            mlp.zero_grads();
+            let (l, _) = mlp.forward_backward(&x, &y);
+            last = l;
+        }
+        assert!(last < 0.5 * loss0, "loss {loss0} -> {last}");
+        assert!(mlp.accuracy(&x, &y) > 0.8);
+    }
+}

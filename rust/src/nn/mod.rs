@@ -1,0 +1,19 @@
+//! Manual-backprop neural networks for the optimizer experiments.
+//!
+//! The Fig. 5 stand-in (Shampoo on image-like classification) trains an
+//! [`Mlp`] on [`crate::workload::BlobsDataset`]; the Fig. 6 native-Rust
+//! fallback (Muon on language modelling) trains an [`MlpLm`] — a windowed
+//! embedding-MLP language model whose parameters are matrix-shaped, exactly
+//! the case Muon/Shampoo preconditioning targets. (The full transformer runs
+//! through the JAX/PJRT path in `coordinator::train`.)
+//!
+//! Everything uses explicit reverse-mode gradients; no autodiff framework.
+
+pub mod checkpoint;
+pub mod layers;
+pub mod mlp;
+pub mod lm;
+
+pub use layers::{Param, ParamKind};
+pub use lm::MlpLm;
+pub use mlp::Mlp;

@@ -1,0 +1,23 @@
+//! Optimizers with pluggable matrix-function backends.
+//!
+//! * [`sgd`] / [`adamw`] — baselines (AdamW is Fig. 6's reference curve).
+//! * [`muon`] — momentum + orthogonalized update via a [`matfn::PolarBackend`].
+//! * [`shampoo`] — Kronecker-factored preconditioning via a
+//!   [`matfn::InvRootBackend`] (Fig. 5's three compared backends).
+//! * [`schedule`] — learning-rate schedules.
+
+pub mod matfn;
+pub mod sgd;
+pub mod adamw;
+pub mod muon;
+pub mod shampoo;
+pub mod schedule;
+
+use crate::nn::Param;
+
+/// A parameter-set optimizer. `step` consumes the accumulated gradients and
+/// updates weights in place; callers zero grads afterwards.
+pub trait Optimizer {
+    fn step(&mut self, params: &mut [&mut Param]);
+    fn name(&self) -> String;
+}

@@ -1,0 +1,59 @@
+//! Learning-rate schedules.
+
+/// Linear warmup followed by cosine decay to `min_frac · base`.
+#[derive(Debug, Clone, Copy)]
+pub struct WarmupCosine {
+    pub base: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_frac: f64,
+}
+
+impl WarmupCosine {
+    pub fn lr(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base * (step + 1) as f64 / self.warmup_steps as f64;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let t = t.min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        self.base * (self.min_frac + (1.0 - self.min_frac) * cos)
+    }
+}
+
+/// Step decay: multiply by `gamma` every `every` steps.
+#[derive(Debug, Clone, Copy)]
+pub struct StepDecay {
+    pub base: f64,
+    pub gamma: f64,
+    pub every: usize,
+}
+
+impl StepDecay {
+    pub fn lr(&self, step: usize) -> f64 {
+        self.base * self.gamma.powi((step / self.every.max(1)) as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = WarmupCosine { base: 1.0, warmup_steps: 10, total_steps: 110, min_frac: 0.1 };
+        assert!(s.lr(0) < s.lr(5));
+        assert!((s.lr(9) - 1.0).abs() < 1e-12);
+        assert!(s.lr(50) < 1.0);
+        assert!((s.lr(1000) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_decay_halves() {
+        let s = StepDecay { base: 1.0, gamma: 0.5, every: 10 };
+        assert_eq!(s.lr(0), 1.0);
+        assert_eq!(s.lr(10), 0.5);
+        assert_eq!(s.lr(25), 0.25);
+    }
+}

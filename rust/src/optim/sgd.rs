@@ -1,0 +1,70 @@
+//! SGD with momentum and decoupled weight decay.
+
+use super::Optimizer;
+use crate::linalg::Mat;
+use crate::nn::Param;
+
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    bufs: Vec<Mat>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64, weight_decay: f64) -> Sgd {
+        Sgd { lr, momentum, weight_decay, bufs: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [&mut Param]) {
+        if self.bufs.is_empty() {
+            self.bufs = params.iter().map(|p| Mat::zeros(p.w.rows(), p.w.cols())).collect();
+        }
+        for (p, buf) in params.iter_mut().zip(self.bufs.iter_mut()) {
+            buf.scale(self.momentum);
+            buf.axpy(1.0, &p.g);
+            if self.weight_decay > 0.0 {
+                let w = p.w.clone();
+                p.w.axpy(-self.lr * self.weight_decay, &w);
+            }
+            p.w.axpy(-self.lr, buf);
+        }
+    }
+    fn name(&self) -> String {
+        format!("sgd(lr={}, m={})", self.lr, self.momentum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut p = Param::matrix("w", Mat::zeros(2, 2));
+        p.g[(0, 0)] = 1.0;
+        let mut opt = Sgd::new(0.1, 0.0, 0.0);
+        opt.step(&mut [&mut p]);
+        assert!((p.w[(0, 0)] + 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut p = Param::matrix("w", Mat::zeros(1, 1));
+        let mut opt = Sgd::new(1.0, 0.5, 0.0);
+        p.g[(0, 0)] = 1.0;
+        opt.step(&mut [&mut p]); // buf = 1, w = -1
+        opt.step(&mut [&mut p]); // buf = 1.5, w = -2.5
+        assert!((p.w[(0, 0)] + 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut p = Param::matrix("w", Mat::eye(2));
+        let mut opt = Sgd::new(0.1, 0.0, 0.5);
+        opt.step(&mut [&mut p]);
+        assert!(p.w[(0, 0)] < 1.0);
+    }
+}

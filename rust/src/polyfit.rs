@@ -1,0 +1,332 @@
+//! Constrained minimisation of the PRISM fitting objective `m(α)`.
+//!
+//! For Newton–Schulz-family iterations `m(α)` is a degree-4 polynomial
+//! (quartic); for Chebyshev/inverse-Newton-p=1 it is quadratic; for inverse
+//! p-th roots with p ≥ 3 it has degree 2p. We minimise over an interval
+//! `[ℓ, u]` by solving `m'(α) = 0` in closed form (Cardano for the cubic
+//! derivative) or via companion-matrix eigenvalues for higher degrees, then
+//! comparing candidate stationary points and endpoints.
+
+use crate::util::{Error, Result};
+
+/// Evaluate a polynomial with coefficients `c[i]` of `α^i` (ascending).
+pub fn poly_eval(c: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for &ci in c.iter().rev() {
+        acc = acc * x + ci;
+    }
+    acc
+}
+
+/// Derivative coefficients (ascending order in, ascending out).
+pub fn poly_deriv(c: &[f64]) -> Vec<f64> {
+    if c.len() <= 1 {
+        return vec![0.0];
+    }
+    c.iter()
+        .enumerate()
+        .skip(1)
+        .map(|(i, &ci)| ci * i as f64)
+        .collect()
+}
+
+/// All real roots of a quadratic `c0 + c1 x + c2 x²`.
+pub fn roots_quadratic(c0: f64, c1: f64, c2: f64) -> Vec<f64> {
+    if c2.abs() < 1e-300 {
+        if c1.abs() < 1e-300 {
+            return vec![];
+        }
+        return vec![-c0 / c1];
+    }
+    let disc = c1 * c1 - 4.0 * c2 * c0;
+    if disc < 0.0 {
+        return vec![];
+    }
+    let sq = disc.sqrt();
+    // Numerically-stable form.
+    let q = -0.5 * (c1 + c1.signum() * sq);
+    let mut roots = vec![];
+    if q.abs() > 1e-300 {
+        roots.push(c0 / q);
+    }
+    roots.push(q / c2);
+    roots
+}
+
+/// All real roots of the cubic `c0 + c1 x + c2 x² + c3 x³` (Cardano +
+/// trigonometric for three-real-root case).
+pub fn roots_cubic(c0: f64, c1: f64, c2: f64, c3: f64) -> Vec<f64> {
+    if c3.abs() < 1e-300 {
+        return roots_quadratic(c0, c1, c2);
+    }
+    // Depressed cubic t³ + p t + q with x = t - b/(3a).
+    let (a, b, c, d) = (c3, c2, c1, c0);
+    let shift = b / (3.0 * a);
+    let p = c / a - shift * shift * 3.0;
+    let q = 2.0 * shift.powi(3) - shift * c / a + d / a;
+    let mut roots = Vec::new();
+    let half_q = q / 2.0;
+    let third_p = p / 3.0;
+    let disc = half_q * half_q + third_p.powi(3);
+    if disc > 1e-300 {
+        // One real root.
+        let sq = disc.sqrt();
+        let u = cbrt(-half_q + sq);
+        let v = cbrt(-half_q - sq);
+        roots.push(u + v - shift);
+    } else if disc.abs() <= 1e-300 {
+        // Repeated roots.
+        let u = cbrt(-half_q);
+        roots.push(2.0 * u - shift);
+        roots.push(-u - shift);
+    } else {
+        // Three real roots (casus irreducibilis): trigonometric method.
+        let r = (-third_p.powi(3)).sqrt();
+        let phi = (-half_q / r).clamp(-1.0, 1.0).acos();
+        let m = 2.0 * (-third_p).sqrt();
+        for k in 0..3 {
+            roots.push(m * ((phi + 2.0 * std::f64::consts::PI * k as f64) / 3.0).cos() - shift);
+        }
+    }
+    roots
+}
+
+fn cbrt(x: f64) -> f64 {
+    x.signum() * x.abs().powf(1.0 / 3.0)
+}
+
+/// Real roots of an arbitrary-degree polynomial via companion-matrix
+/// eigenvalues. Uses an unshifted QR-like power method on the companion
+/// matrix; adequate for the small degrees (≤ 10) we need. Falls back to
+/// bisection scanning for robustness.
+pub fn roots_general(c: &[f64], lo: f64, hi: f64) -> Vec<f64> {
+    // Trim leading zeros.
+    let mut coeffs = c.to_vec();
+    while coeffs.len() > 1 && coeffs.last().unwrap().abs() < 1e-300 {
+        coeffs.pop();
+    }
+    let deg = coeffs.len() - 1;
+    match deg {
+        0 => vec![],
+        1 => vec![-coeffs[0] / coeffs[1]],
+        2 => roots_quadratic(coeffs[0], coeffs[1], coeffs[2]),
+        3 => roots_cubic(coeffs[0], coeffs[1], coeffs[2], coeffs[3]),
+        _ => {
+            // Dense sign-change scan + bisection over [lo, hi]: we only ever
+            // need roots inside the constraint interval.
+            let grid = 512;
+            let mut out = Vec::new();
+            let mut prev_x = lo;
+            let mut prev_f = poly_eval(&coeffs, lo);
+            for i in 1..=grid {
+                let x = lo + (hi - lo) * i as f64 / grid as f64;
+                let f = poly_eval(&coeffs, x);
+                if prev_f == 0.0 {
+                    out.push(prev_x);
+                } else if prev_f * f < 0.0 {
+                    // Bisection.
+                    let (mut a, mut b) = (prev_x, x);
+                    let (mut fa, _fb) = (prev_f, f);
+                    for _ in 0..80 {
+                        let m = 0.5 * (a + b);
+                        let fm = poly_eval(&coeffs, m);
+                        if fa * fm <= 0.0 {
+                            b = m;
+                        } else {
+                            a = m;
+                            fa = fm;
+                        }
+                    }
+                    out.push(0.5 * (a + b));
+                }
+                prev_x = x;
+                prev_f = f;
+            }
+            out
+        }
+    }
+}
+
+/// Minimise `m(α) = Σ c_i α^i` over `α ∈ [lo, hi]`. Returns (α*, m(α*)).
+pub fn minimize_on_interval(c: &[f64], lo: f64, hi: f64) -> Result<(f64, f64)> {
+    if !(lo < hi) || !lo.is_finite() || !hi.is_finite() {
+        return Err(Error::Parse(format!("bad interval [{lo}, {hi}]")));
+    }
+    if c.iter().any(|x| !x.is_finite()) {
+        return Err(Error::Numerical("non-finite polynomial coefficients".into()));
+    }
+    let d = poly_deriv(c);
+    let mut candidates = vec![lo, hi];
+    for r in roots_general(&d, lo, hi) {
+        if r > lo && r < hi && r.is_finite() {
+            candidates.push(r);
+        }
+    }
+    let mut best = (lo, f64::INFINITY);
+    for &x in &candidates {
+        let v = poly_eval(c, x);
+        if v < best.1 {
+            best = (x, v);
+        }
+    }
+    Ok(best)
+}
+
+/// Convenience for the common quartic case: coefficients `[c0..c4]`.
+pub fn minimize_quartic(c: &[f64; 5], lo: f64, hi: f64) -> Result<(f64, f64)> {
+    minimize_on_interval(c, lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::{gens, Prop};
+    use crate::rng::Rng;
+
+    #[test]
+    fn eval_and_deriv() {
+        // m(x) = 1 + 2x + 3x²
+        let c = [1.0, 2.0, 3.0];
+        assert_eq!(poly_eval(&c, 2.0), 1.0 + 4.0 + 12.0);
+        assert_eq!(poly_deriv(&c), vec![2.0, 6.0]);
+    }
+
+    #[test]
+    fn quadratic_roots_known() {
+        // (x-1)(x-3) = 3 - 4x + x²
+        let mut r = roots_quadratic(3.0, -4.0, 1.0);
+        r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((r[0] - 1.0).abs() < 1e-12);
+        assert!((r[1] - 3.0).abs() < 1e-12);
+        assert!(roots_quadratic(1.0, 0.0, 1.0).is_empty()); // x²+1
+    }
+
+    #[test]
+    fn cubic_roots_three_real() {
+        // (x+2)(x)(x-1) = x³ + x² - 2x
+        let mut r = roots_cubic(0.0, -2.0, 1.0, 1.0);
+        r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(r.len(), 3);
+        assert!((r[0] + 2.0).abs() < 1e-9);
+        assert!(r[1].abs() < 1e-9);
+        assert!((r[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cubic_roots_one_real() {
+        // x³ - 1 has one real root at 1.
+        let r = roots_cubic(-1.0, 0.0, 0.0, 1.0);
+        assert_eq!(r.len(), 1);
+        assert!((r[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cubic_random_roots_verify() {
+        Prop::new("cubic roots satisfy poly").cases(100).run(|rng| {
+            let c: Vec<f64> = (0..4).map(|_| gens::f64_in(rng, -3.0, 3.0)).collect();
+            if c[3].abs() < 0.1 {
+                return;
+            }
+            for r in roots_cubic(c[0], c[1], c[2], c[3]) {
+                let v = poly_eval(&c, r);
+                let scale = c.iter().map(|x| x.abs()).fold(1.0, f64::max) * (1.0 + r.abs().powi(3));
+                assert!(v.abs() < 1e-7 * scale, "root {r} gives {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn general_roots_degree6() {
+        // (x-0.2)(x-0.5)(x-0.8) * (x²+1) * (x-2) expanded numerically:
+        let factors = [0.2, 0.5, 0.8, 2.0];
+        // Build coefficients of Π(x - f) * (x²+1).
+        let mut c = vec![1.0];
+        for &f in &factors {
+            let mut nc = vec![0.0; c.len() + 1];
+            for (i, &ci) in c.iter().enumerate() {
+                nc[i + 1] += ci;
+                nc[i] -= f * ci;
+            }
+            c = nc;
+        }
+        let mut nc = vec![0.0; c.len() + 2];
+        for (i, &ci) in c.iter().enumerate() {
+            nc[i + 2] += ci;
+            nc[i] += ci;
+        }
+        c = nc;
+        let roots = roots_general(&c, 0.0, 1.0);
+        assert_eq!(roots.len(), 3, "roots in [0,1]: {roots:?}");
+        for (got, want) in roots.iter().zip([0.2, 0.5, 0.8]) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn minimize_quartic_interior() {
+        // m(α) = (α - 0.7)² (α² + 1): min at 0.7.
+        // Expand: (α² - 1.4α + 0.49)(α² + 1)
+        let c = [0.49, -1.4, 1.49, -1.4, 1.0];
+        let (a, v) = minimize_quartic(&c, 0.0, 2.0).unwrap();
+        assert!((a - 0.7).abs() < 1e-6, "a={a}");
+        assert!(v.abs() < 1e-10);
+    }
+
+    #[test]
+    fn minimize_clamps_to_endpoints() {
+        // m(α) = α (increasing): min at lo.
+        let (a, _) = minimize_on_interval(&[0.0, 1.0], 0.5, 1.0).unwrap();
+        assert_eq!(a, 0.5);
+        // m(α) = -α: min at hi.
+        let (a, _) = minimize_on_interval(&[0.0, -1.0], 0.5, 1.0).unwrap();
+        assert_eq!(a, 1.0);
+    }
+
+    #[test]
+    fn minimize_random_quartics_beats_grid() {
+        Prop::new("quartic min <= grid min").cases(200).run(|rng| {
+            let c: [f64; 5] = [
+                gens::f64_in(rng, -2.0, 2.0),
+                gens::f64_in(rng, -2.0, 2.0),
+                gens::f64_in(rng, -2.0, 2.0),
+                gens::f64_in(rng, -2.0, 2.0),
+                gens::f64_in(rng, -2.0, 2.0),
+            ];
+            let (lo, hi) = (0.5, 1.5);
+            let (astar, vstar) = minimize_quartic(&c, lo, hi).unwrap();
+            assert!((lo..=hi).contains(&astar));
+            for i in 0..=100 {
+                let x = lo + (hi - lo) * i as f64 / 100.0;
+                assert!(
+                    vstar <= poly_eval(&c, x) + 1e-9,
+                    "grid point {x} beats {astar}: {} < {vstar}",
+                    poly_eval(&c, x)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn minimize_rejects_bad_input() {
+        assert!(minimize_on_interval(&[1.0, f64::NAN], 0.0, 1.0).is_err());
+        assert!(minimize_on_interval(&[1.0], 1.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn degenerate_poly_is_constant() {
+        let (a, v) = minimize_on_interval(&[3.0], 0.0, 1.0).unwrap();
+        assert_eq!(v, 3.0);
+        assert!((0.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn roots_general_smoke_random() {
+        let mut rng = Rng::seed_from(9);
+        for _ in 0..20 {
+            let c: Vec<f64> = (0..7).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            for r in roots_general(&c, -1.0, 1.0) {
+                assert!(poly_eval(&c, r).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Chebyshev iteration for the matrix inverse (Table 1 row 7; paper §A.4).
+//!
+//! `X₀ = Āᵀ` (Ā = A/‖A‖_F), `R_k = I − Ā X_k`,
+//! `X_{k+1} = X_k (I + R_k + α_k R_k²)`; classical Chebyshev fixes α = 1,
+//! PRISM fits α ∈ [1/2, 2] from the sketched quadratic.
+//! The result is rescaled: `A⁻¹ = Ā⁻¹ / ‖A‖_F`.
+
+use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use crate::coeffs::chebyshev_coeffs;
+use crate::linalg::gemm::matmul;
+use crate::linalg::Mat;
+use crate::polyfit::minimize_on_interval;
+use crate::rng::Rng;
+use crate::sketch::{exact_power_traces, GaussianSketch};
+
+#[derive(Debug, Clone)]
+pub struct ChebyshevOpts {
+    pub alpha: AlphaMode,
+    pub stop: StopRule,
+}
+
+impl ChebyshevOpts {
+    pub fn prism() -> Self {
+        ChebyshevOpts { alpha: AlphaMode::Sketched { p: 8 }, stop: StopRule::default() }
+    }
+    pub fn classic() -> Self {
+        ChebyshevOpts { alpha: AlphaMode::Classic, stop: StopRule::default() }
+    }
+    pub fn with_stop(mut self, stop: StopRule) -> Self {
+        self.stop = stop;
+        self
+    }
+}
+
+pub struct ChebyshevResult {
+    pub inverse: Mat,
+    pub log: IterationLog,
+}
+
+const ALPHA_LO: f64 = 0.5;
+const ALPHA_HI: f64 = 2.0;
+
+fn select_alpha(r: &Mat, mode: AlphaMode, rng: &mut Rng) -> f64 {
+    match mode {
+        AlphaMode::Classic => 1.0,
+        AlphaMode::Fixed(a) => a,
+        AlphaMode::Exact => {
+            let t = exact_power_traces(r, 6);
+            let c = chebyshev_coeffs(&t);
+            minimize_on_interval(&c, ALPHA_LO, ALPHA_HI).map(|(a, _)| a).unwrap_or(1.0)
+        }
+        AlphaMode::Sketched { p } => {
+            let s = GaussianSketch::draw(rng, p, r.rows());
+            let t = s.power_traces(r, 6);
+            let c = chebyshev_coeffs(&t);
+            minimize_on_interval(&c, ALPHA_LO, ALPHA_HI).map(|(a, _)| a).unwrap_or(1.0)
+        }
+        AlphaMode::SketchedKind { p, kind } => {
+            let s = kind.draw(rng, p, r.rows());
+            let t = s.power_traces(r, 6);
+            let c = chebyshev_coeffs(&t);
+            minimize_on_interval(&c, ALPHA_LO, ALPHA_HI).map(|(a, _)| a).unwrap_or(1.0)
+        }
+    }
+}
+
+/// Compute `A⁻¹` for a full-rank square `A` (not necessarily symmetric).
+pub fn chebyshev_inverse(a: &Mat, opts: &ChebyshevOpts, rng: &mut Rng) -> ChebyshevResult {
+    assert!(a.is_square());
+    let c = a.fro_norm().max(1e-300);
+    let abar = a.scaled(1.0 / c);
+    let mut x = abar.transpose();
+
+    let residual = |x: &Mat| -> Mat {
+        let mut r = matmul(&abar, x).scaled(-1.0);
+        r.add_diag(1.0);
+        r
+    };
+
+    let mut r = residual(&x);
+    let mut rec = RunRecorder::start(r.fro_norm());
+    for _ in 0..opts.stop.max_iters {
+        if r.fro_norm() < opts.stop.tol {
+            break;
+        }
+        // NOTE: R here is symmetric iff A is normal; the α fit uses the
+        // symmetric part's traces which is exact for the symmetric inputs
+        // the paper covers and a controlled heuristic otherwise.
+        let mut r_sym = r.clone();
+        r_sym.symmetrize();
+        let alpha = select_alpha(&r_sym, opts.alpha, rng);
+        let r2 = matmul(&r, &r);
+        // G = I + R + αR²
+        let mut g = r.clone();
+        g.axpy(alpha, &r2);
+        g.add_diag(1.0);
+        x = matmul(&x, &g);
+        r = residual(&x);
+        let rn = r.fro_norm();
+        rec.step(alpha, rn);
+        if !rn.is_finite() || rn > opts.stop.diverge_above {
+            break;
+        }
+    }
+    ChebyshevResult { inverse: x.scaled(1.0 / c), log: rec.finish(&opts.stop) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::randmat;
+
+    #[test]
+    fn inverse_of_spd() {
+        let mut rng = Rng::seed_from(1);
+        let w = randmat::logspace(0.05, 1.0, 10);
+        let a = randmat::sym_with_spectrum(&mut rng, 10, &w);
+        for opts in [ChebyshevOpts::classic(), ChebyshevOpts::prism()] {
+            let stop = StopRule::default().with_max_iters(150);
+            let out = chebyshev_inverse(&a, &opts.with_stop(stop), &mut rng);
+            assert!(out.log.converged, "res={}", out.log.final_residual());
+            let prod = matmul(&a, &out.inverse);
+            assert!(prod.sub(&Mat::eye(10)).max_abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn inverse_of_nonsymmetric() {
+        let mut rng = Rng::seed_from(2);
+        // Well-conditioned non-symmetric matrix: I + small noise.
+        let mut a = Mat::gaussian(&mut rng, 12, 12, 0.08);
+        a.add_diag(1.0);
+        let stop = StopRule::default().with_max_iters(200);
+        let out = chebyshev_inverse(&a, &ChebyshevOpts::prism().with_stop(stop), &mut rng);
+        assert!(out.log.converged);
+        let prod = matmul(&a, &out.inverse);
+        assert!(prod.sub(&Mat::eye(12)).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn prism_not_slower() {
+        let mut rng = Rng::seed_from(3);
+        let w = randmat::logspace(1e-3, 1.0, 16);
+        let a = randmat::sym_with_spectrum(&mut rng, 16, &w);
+        let stop = StopRule::default().with_max_iters(500).with_tol(1e-6);
+        let classic = chebyshev_inverse(&a, &ChebyshevOpts::classic().with_stop(stop), &mut rng);
+        let prism = chebyshev_inverse(&a, &ChebyshevOpts::prism().with_stop(stop), &mut rng);
+        assert!(classic.log.converged && prism.log.converged);
+        let ic = classic.log.iters_to_tol(1e-6).unwrap();
+        let ip = prism.log.iters_to_tol(1e-6).unwrap();
+        assert!(ip <= ic + 1, "prism {ip} vs classic {ic}");
+    }
+
+    #[test]
+    fn matches_lu_inverse() {
+        let mut rng = Rng::seed_from(4);
+        let w = randmat::logspace(0.1, 1.0, 8);
+        let a = randmat::sym_with_spectrum(&mut rng, 8, &w);
+        let out = chebyshev_inverse(&a, &ChebyshevOpts::prism(), &mut rng);
+        let exact = crate::linalg::decomp::lu_inverse(&a).unwrap();
+        assert!(out.inverse.sub(&exact).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn alphas_in_interval() {
+        let mut rng = Rng::seed_from(5);
+        let w = randmat::logspace(0.01, 1.0, 12);
+        let a = randmat::sym_with_spectrum(&mut rng, 12, &w);
+        let out = chebyshev_inverse(&a, &ChebyshevOpts::prism(), &mut rng);
+        for &al in &out.log.alphas {
+            assert!((ALPHA_LO..=ALPHA_HI).contains(&al));
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! DB-Newton (Denman–Beavers) product-form iteration for the matrix square
+//! root (Table 1 row 6; paper §A.2 and Fig. D.5).
+//!
+//! `M₀ = Ā`, `X₀ = Ā`, `Y₀ = I` (Ā = A/‖A‖_F):
+//! `M_{k+1} = 2α(1−α) I + (1−α)² M_k + α² M_k⁻¹`
+//! `X_{k+1} = (1−α) X_k + α X_k M_k⁻¹`
+//! `Y_{k+1} = (1−α) Y_k + α Y_k M_k⁻¹`
+//!
+//! with `X → Ā^{1/2}`, `Y → Ā^{-1/2}`. The PRISM coefficients here are
+//! **exact and O(n²)** (no sketching needed — the traces involve only `M`,
+//! `M²`, `M⁻¹`, `M⁻²` norms and the iteration computes `M⁻¹` anyway, via
+//! Cholesky since `M_k` stays SPD). Classical DB-Newton fixes α = 1/2.
+
+use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use crate::coeffs::db_newton_coeffs;
+use crate::linalg::decomp::cholesky_inverse;
+use crate::linalg::Mat;
+use crate::polyfit::minimize_quartic;
+use crate::linalg::gemm::matmul;
+
+#[derive(Debug, Clone)]
+pub struct DbNewtonOpts {
+    pub alpha: AlphaMode,
+    pub stop: StopRule,
+}
+
+impl DbNewtonOpts {
+    pub fn prism() -> Self {
+        DbNewtonOpts { alpha: AlphaMode::Exact, stop: StopRule::default() }
+    }
+    pub fn classic() -> Self {
+        DbNewtonOpts { alpha: AlphaMode::Classic, stop: StopRule::default() }
+    }
+    pub fn with_stop(mut self, stop: StopRule) -> Self {
+        self.stop = stop;
+        self
+    }
+}
+
+pub struct DbNewtonResult {
+    pub sqrt: Mat,
+    pub inv_sqrt: Mat,
+    pub log: IterationLog,
+}
+
+/// The α search interval. The Newton iteration is globally convergent so the
+/// paper imposes no constraint; we use the natural convex-combination range.
+const ALPHA_LO: f64 = 0.05;
+const ALPHA_HI: f64 = 0.95;
+
+/// Compute `A^{1/2}`, `A^{-1/2}` for SPD `A` with (PRISM-)DB-Newton.
+pub fn db_newton_prism(a: &Mat, opts: &DbNewtonOpts, rng_unused: &mut crate::rng::Rng) -> DbNewtonResult {
+    let _ = rng_unused; // signature symmetry with the other engines
+    assert!(a.is_square());
+    let c = a.fro_norm().max(1e-300);
+    let mut m = a.scaled(1.0 / c);
+    m.symmetrize();
+    let mut x = m.clone();
+    let mut y = Mat::eye(a.rows());
+
+    let res_norm = |m: &Mat| -> f64 {
+        let mut r = m.scaled(-1.0);
+        r.add_diag(1.0);
+        r.fro_norm()
+    };
+
+    let mut rec = RunRecorder::start(res_norm(&m));
+    for _ in 0..opts.stop.max_iters {
+        if res_norm(&m) < opts.stop.tol {
+            break;
+        }
+        // M⁻¹ via Cholesky (M stays SPD along the iteration).
+        let m_inv = match cholesky_inverse(&m) {
+            Ok(inv) => inv,
+            Err(_) => break, // numerical breakdown: stop and report
+        };
+        let alpha = match opts.alpha {
+            AlphaMode::Classic => 0.5,
+            AlphaMode::Fixed(a) => a,
+            // Exact O(n²) fit — `Sketched` falls back to the same exact path
+            // because sketching cannot beat O(n²).
+            AlphaMode::Exact
+            | AlphaMode::Sketched { .. }
+            | AlphaMode::SketchedKind { .. } => {
+                let cfs = db_newton_coeffs(&m, &m_inv);
+                minimize_quartic(&cfs, ALPHA_LO, ALPHA_HI)
+                    .map(|(a, _)| a)
+                    .unwrap_or(0.5)
+            }
+        };
+        let one_m = 1.0 - alpha;
+        // X ← (1−α)X + α X M⁻¹ ; Y likewise.
+        let xm = matmul(&x, &m_inv);
+        let ym = matmul(&y, &m_inv);
+        let mut xn = x.scaled(one_m);
+        xn.axpy(alpha, &xm);
+        let mut yn = y.scaled(one_m);
+        yn.axpy(alpha, &ym);
+        x = xn;
+        y = yn;
+        // M ← 2α(1−α)I + (1−α)²M + α²M⁻¹
+        let mut mn = m.scaled(one_m * one_m);
+        mn.axpy(alpha * alpha, &m_inv);
+        mn.add_diag(2.0 * alpha * one_m);
+        mn.symmetrize();
+        m = mn;
+        let rn = res_norm(&m);
+        rec.step(alpha, rn);
+        if !rn.is_finite() || rn > opts.stop.diverge_above {
+            break;
+        }
+    }
+    let sc = c.sqrt();
+    DbNewtonResult {
+        sqrt: x.scaled(sc),
+        inv_sqrt: y.scaled(1.0 / sc),
+        log: rec.finish(&opts.stop),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::randmat;
+    use crate::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize, wmin: f64) -> Mat {
+        let w = randmat::logspace(wmin, 1.0, n);
+        randmat::sym_with_spectrum(rng, n, &w)
+    }
+
+    #[test]
+    fn classic_db_newton_sqrt() {
+        let mut rng = Rng::seed_from(1);
+        let a = spd(&mut rng, 10, 0.01);
+        let out = db_newton_prism(&a, &DbNewtonOpts::classic(), &mut rng);
+        assert!(out.log.converged, "res={}", out.log.final_residual());
+        let back = matmul(&out.sqrt, &out.sqrt);
+        assert!(back.sub(&a).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn prism_db_newton_sqrt_and_invsqrt() {
+        let mut rng = Rng::seed_from(2);
+        let a = spd(&mut rng, 12, 1e-4);
+        let stop = StopRule::default().with_max_iters(100);
+        let out = db_newton_prism(&a, &DbNewtonOpts::prism().with_stop(stop), &mut rng);
+        assert!(out.log.converged);
+        let back = matmul(&out.sqrt, &out.sqrt);
+        assert!(back.sub(&a).max_abs() < 1e-6);
+        let prod = matmul(&out.sqrt, &out.inv_sqrt);
+        assert!(prod.sub(&Mat::eye(12)).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn prism_not_slower_than_classic() {
+        // Fig. D.5: PRISM-Newton converges at least as fast as DB-Newton.
+        let mut rng = Rng::seed_from(3);
+        let a = spd(&mut rng, 16, 1e-6);
+        let stop = StopRule::default().with_max_iters(200).with_tol(1e-8);
+        let classic =
+            db_newton_prism(&a, &DbNewtonOpts::classic().with_stop(stop), &mut rng);
+        let prism = db_newton_prism(&a, &DbNewtonOpts::prism().with_stop(stop), &mut rng);
+        assert!(classic.log.converged && prism.log.converged);
+        let ic = classic.log.iters_to_tol(1e-8).unwrap();
+        let ip = prism.log.iters_to_tol(1e-8).unwrap();
+        assert!(ip <= ic, "prism {ip} vs classic {ic}");
+    }
+
+    #[test]
+    fn newton_beats_newton_schulz_on_hard_spectrum() {
+        // Fig. D.5's observation: Newton (rational) converges in far fewer
+        // iterations than Newton–Schulz (polynomial) on hard spectra.
+        use crate::prism::sqrt::{sqrt_prism, SqrtOpts};
+        let mut rng = Rng::seed_from(4);
+        let a = spd(&mut rng, 14, 1e-8);
+        let stop = StopRule::default().with_max_iters(400).with_tol(1e-6);
+        let ns = sqrt_prism(&a, &SqrtOpts::degree5().with_stop(stop), &mut rng);
+        let nt = db_newton_prism(&a, &DbNewtonOpts::prism().with_stop(stop), &mut rng);
+        assert!(ns.log.converged && nt.log.converged);
+        assert!(
+            nt.log.iters_to_tol(1e-6).unwrap() < ns.log.iters_to_tol(1e-6).unwrap(),
+            "newton {} vs ns {}",
+            nt.log.iters_to_tol(1e-6).unwrap(),
+            ns.log.iters_to_tol(1e-6).unwrap()
+        );
+    }
+
+    #[test]
+    fn alphas_in_unit_interval() {
+        let mut rng = Rng::seed_from(5);
+        let a = spd(&mut rng, 8, 0.05);
+        let out = db_newton_prism(&a, &DbNewtonOpts::prism(), &mut rng);
+        for &al in &out.log.alphas {
+            assert!((ALPHA_LO..=ALPHA_HI).contains(&al));
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Shared iteration bookkeeping: logs, stopping rules, α-selection modes.
+
+use crate::linalg::gemm::GemmCounter;
+use crate::util::Stopwatch;
+
+/// How the update coefficient α_k is chosen each iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AlphaMode {
+    /// Fixed Taylor coefficient — the classical iteration.
+    Classic,
+    /// PRISM fit with sketch dimension p (Step 5 of the meta-algorithm).
+    Sketched { p: usize },
+    /// PRISM fit with a non-Gaussian sketch family (ablation; the paper
+    /// defaults to Gaussian and we confirm the choice doesn't matter much).
+    SketchedKind { p: usize, kind: crate::sketch::SketchKind },
+    /// PRISM fit with exact traces (Step 4; O(n³) — ablation only).
+    Exact,
+    /// Fixed user-supplied α (used by the Muon warm-start trick, §C).
+    Fixed(f64),
+}
+
+impl AlphaMode {
+    pub fn name(&self) -> String {
+        match self {
+            AlphaMode::Classic => "classic".into(),
+            AlphaMode::Sketched { p } => format!("prism(p={p})"),
+            AlphaMode::SketchedKind { p, kind } => format!("prism(p={p},{})", kind.name()),
+            AlphaMode::Exact => "prism(exact)".into(),
+            AlphaMode::Fixed(a) => format!("fixed({a})"),
+        }
+    }
+}
+
+/// Stopping rule for the iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct StopRule {
+    pub max_iters: usize,
+    /// Stop when the residual Frobenius norm falls below this.
+    pub tol: f64,
+    /// Abort (report divergence) if the residual exceeds this.
+    pub diverge_above: f64,
+}
+
+impl Default for StopRule {
+    fn default() -> Self {
+        StopRule { max_iters: 60, tol: 1e-8, diverge_above: 1e12 }
+    }
+}
+
+impl StopRule {
+    pub fn with_max_iters(mut self, k: usize) -> Self {
+        self.max_iters = k;
+        self
+    }
+    pub fn with_tol(mut self, t: f64) -> Self {
+        self.tol = t;
+        self
+    }
+}
+
+/// Per-run record: residual trajectory, chosen α's, GEMM counts, wall time.
+#[derive(Debug, Clone, Default)]
+pub struct IterationLog {
+    /// `residuals[k]` = ‖R_k‖_F *before* iteration k (so index 0 is the
+    /// initial residual); one extra trailing entry is the final residual.
+    pub residuals: Vec<f64>,
+    /// α chosen at iteration k.
+    pub alphas: Vec<f64>,
+    /// Cumulative wall-clock seconds at the end of iteration k.
+    pub times_s: Vec<f64>,
+    pub gemm_calls: u64,
+    pub wall_s: f64,
+    pub converged: bool,
+    pub diverged: bool,
+}
+
+impl IterationLog {
+    pub fn iters(&self) -> usize {
+        self.alphas.len()
+    }
+    pub fn final_residual(&self) -> f64 {
+        self.residuals.last().copied().unwrap_or(f64::INFINITY)
+    }
+    pub fn initial_residual(&self) -> f64 {
+        self.residuals.first().copied().unwrap_or(f64::INFINITY)
+    }
+    /// First iteration index whose *post*-residual is below `tol`
+    /// (residuals[k+1] < tol), or None.
+    pub fn iters_to_tol(&self, tol: f64) -> Option<usize> {
+        self.residuals
+            .iter()
+            .skip(1)
+            .position(|&r| r < tol)
+            .map(|i| i + 1)
+    }
+    /// Wall time until the residual first drops below `tol`.
+    pub fn time_to_tol(&self, tol: f64) -> Option<f64> {
+        let k = self.iters_to_tol(tol)?;
+        self.times_s.get(k - 1).copied()
+    }
+}
+
+/// Records GEMM-count + time around an iteration loop.
+pub struct RunRecorder {
+    sw: Stopwatch,
+    gemm_start: u64,
+    pub log: IterationLog,
+}
+
+impl RunRecorder {
+    pub fn start(initial_residual: f64) -> Self {
+        let mut log = IterationLog::default();
+        log.residuals.push(initial_residual);
+        RunRecorder { sw: Stopwatch::start(), gemm_start: GemmCounter::calls(), log }
+    }
+
+    /// Record one completed iteration.
+    pub fn step(&mut self, alpha: f64, post_residual: f64) {
+        self.log.alphas.push(alpha);
+        self.log.residuals.push(post_residual);
+        self.log.times_s.push(self.sw.elapsed_s());
+    }
+
+    pub fn finish(mut self, stop: &StopRule) -> IterationLog {
+        self.log.wall_s = self.sw.elapsed_s();
+        self.log.gemm_calls = GemmCounter::calls() - self.gemm_start;
+        let fin = self.log.final_residual();
+        self.log.converged = fin < stop.tol;
+        self.log.diverged = !fin.is_finite() || fin > stop.diverge_above;
+        self.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_accessors() {
+        let mut rec = RunRecorder::start(1.0);
+        rec.step(0.5, 0.5);
+        rec.step(0.6, 1e-9);
+        let log = rec.finish(&StopRule::default());
+        assert_eq!(log.iters(), 2);
+        assert_eq!(log.initial_residual(), 1.0);
+        assert_eq!(log.final_residual(), 1e-9);
+        assert!(log.converged);
+        assert!(!log.diverged);
+        assert_eq!(log.iters_to_tol(0.7), Some(1));
+        assert_eq!(log.iters_to_tol(1e-8), Some(2));
+        assert_eq!(log.iters_to_tol(1e-12), None);
+        assert!(log.time_to_tol(0.7).is_some());
+    }
+
+    #[test]
+    fn divergence_detected() {
+        let mut rec = RunRecorder::start(1.0);
+        rec.step(0.5, 1e15);
+        let log = rec.finish(&StopRule::default());
+        assert!(log.diverged);
+        assert!(!log.converged);
+    }
+
+    #[test]
+    fn alpha_mode_names() {
+        assert_eq!(AlphaMode::Classic.name(), "classic");
+        assert_eq!(AlphaMode::Sketched { p: 8 }.name(), "prism(p=8)");
+        assert!(AlphaMode::Fixed(1.45).name().contains("1.45"));
+    }
+
+    #[test]
+    fn stop_rule_builders() {
+        let s = StopRule::default().with_max_iters(5).with_tol(1e-3);
+        assert_eq!(s.max_iters, 5);
+        assert_eq!(s.tol, 1e-3);
+    }
+}

@@ -1,0 +1,178 @@
+//! α-selection shared by the Newton–Schulz-family engines (sign, polar,
+//! sqrt): build the quartic `m(α)` from (sketched or exact) power traces of
+//! the residual and minimise it over the degree's constraint interval.
+
+use super::driver::AlphaMode;
+use crate::coeffs::{alpha_interval, ns_d1_coeffs, ns_d2_coeffs, traces_needed};
+use crate::linalg::Mat;
+use crate::polyfit::minimize_quartic;
+use crate::rng::Rng;
+use crate::sketch::{exact_power_traces, GaussianSketch};
+
+/// Taylor coefficient of ξ^d in f_d — the classical Newton–Schulz choice.
+/// f(ξ) = (1-ξ)^{-1/2} = 1 + ξ/2 + 3ξ²/8 + 5ξ³/16 + ...
+pub fn taylor_alpha(d: usize) -> f64 {
+    crate::coeffs::taylor_coeff(d)
+}
+
+/// Choose α for one Newton–Schulz iteration with residual `r` (symmetric).
+pub fn select_alpha_ns(r: &Mat, d: usize, mode: AlphaMode, rng: &mut Rng) -> f64 {
+    match mode {
+        AlphaMode::Classic => taylor_alpha(d),
+        AlphaMode::Fixed(a) => a,
+        AlphaMode::Exact => {
+            let t = exact_power_traces(r, traces_needed(d));
+            alpha_from_traces(&t, d)
+        }
+        AlphaMode::Sketched { p } => {
+            let s = GaussianSketch::draw(rng, p, r.rows());
+            let t = s.power_traces(r, traces_needed(d));
+            alpha_from_traces(&t, d)
+        }
+        AlphaMode::SketchedKind { p, kind } => {
+            let s = kind.draw(rng, p, r.rows());
+            let t = s.power_traces(r, traces_needed(d));
+            alpha_from_traces(&t, d)
+        }
+    }
+}
+
+/// Minimise the assembled quartic on the recommended interval.
+pub fn alpha_from_traces(t: &[f64], d: usize) -> f64 {
+    let c = match d {
+        1 => ns_d1_coeffs(t),
+        2 => ns_d2_coeffs(t),
+        // General degree: symbolic assembly (paper §4.2's 4d+2-trace recipe).
+        _ => crate::coeffs::ns_general_coeffs(t, d),
+    };
+    let (lo, hi) = alpha_interval(d);
+    match minimize_quartic(&c, lo, hi) {
+        Ok((a, _)) => a,
+        // On numerical trouble fall back to the safe classical coefficient.
+        Err(_) => taylor_alpha(d),
+    }
+}
+
+/// Evaluate the degree-d update polynomial applied to the iterate:
+/// returns `X · g_d(R; α)` where
+/// g₁(R;α) = I + αR and g₂(R;α) = I + R/2 + αR².
+///
+/// `r2` must be `R²` when d = 2 (caller computes/reuses it), unused for d=1.
+pub fn apply_update(x: &Mat, r: &Mat, r2: Option<&Mat>, d: usize, alpha: f64) -> Mat {
+    let g = update_poly(r, r2, d, alpha);
+    crate::linalg::gemm::matmul(x, &g)
+}
+
+/// The polynomial matrix `g_d(R; α)` itself (for coupled iterations that
+/// also need `g · Y`).
+pub fn update_poly(r: &Mat, r2: Option<&Mat>, d: usize, alpha: f64) -> Mat {
+    let n = r.rows();
+    match d {
+        1 => {
+            let mut g = r.scaled(alpha);
+            g.add_diag(1.0);
+            g
+        }
+        2 => {
+            let r2 = r2.expect("d=2 needs R²");
+            let mut g = r.scaled(0.5);
+            g.axpy(alpha, r2);
+            g.add_diag(1.0);
+            debug_assert_eq!(g.rows(), n);
+            g
+        }
+        _ => {
+            // General degree: g = Σ_{k<d} a_k R^k + α R^d by Horner-free
+            // accumulation over explicit powers (d−1 extra GEMMs — the
+            // (2d+1)-order iteration's intrinsic cost).
+            let mut g = Mat::zeros(n, n);
+            g.add_diag(taylor_alpha(0)); // a₀ = 1
+            let mut pow = r.clone();
+            for k in 1..=d {
+                let coef = if k == d { alpha } else { taylor_alpha(k) };
+                g.axpy(coef, &pow);
+                if k < d {
+                    pow = crate::linalg::gemm::matmul(&pow, r);
+                }
+            }
+            g
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::randmat;
+
+    #[test]
+    fn taylor_values() {
+        assert_eq!(taylor_alpha(1), 0.5);
+        assert_eq!(taylor_alpha(2), 0.375);
+    }
+
+    #[test]
+    fn classic_mode_returns_taylor() {
+        let mut rng = Rng::seed_from(1);
+        let r = Mat::eye(4);
+        assert_eq!(select_alpha_ns(&r, 1, AlphaMode::Classic, &mut rng), 0.5);
+        assert_eq!(select_alpha_ns(&r, 2, AlphaMode::Fixed(1.45), &mut rng), 1.45);
+    }
+
+    #[test]
+    fn exact_alpha_in_interval() {
+        let mut rng = Rng::seed_from(2);
+        for d in [1usize, 2] {
+            let w: Vec<f64> = (0..12).map(|_| rng.uniform_in(0.0, 0.9)).collect();
+            let r = randmat::sym_with_spectrum(&mut rng, 12, &w);
+            let a = select_alpha_ns(&r, d, AlphaMode::Exact, &mut rng);
+            let (lo, hi) = crate::coeffs::alpha_interval(d);
+            assert!((lo..=hi).contains(&a), "d={d} a={a}");
+        }
+    }
+
+    #[test]
+    fn sketched_close_to_exact_alpha() {
+        let mut rng = Rng::seed_from(3);
+        let w: Vec<f64> = (0..32).map(|_| rng.uniform_in(0.2, 0.95)).collect();
+        let r = randmat::sym_with_spectrum(&mut rng, 32, &w);
+        let a_exact = select_alpha_ns(&r, 1, AlphaMode::Exact, &mut rng);
+        // Average of several sketched fits should track the exact fit.
+        let reps = 20;
+        let mean: f64 = (0..reps)
+            .map(|_| select_alpha_ns(&r, 1, AlphaMode::Sketched { p: 8 }, &mut rng))
+            .sum::<f64>()
+            / reps as f64;
+        assert!((mean - a_exact).abs() < 0.15, "mean={mean} exact={a_exact}");
+    }
+
+    #[test]
+    fn update_poly_d1_identity_residual() {
+        // R = 0 ⇒ g = I ⇒ X unchanged.
+        let mut rng = Rng::seed_from(4);
+        let x = Mat::gaussian(&mut rng, 5, 5, 1.0);
+        let r = Mat::zeros(5, 5);
+        let out = apply_update(&x, &r, None, 1, 0.7);
+        assert!(out.sub(&x).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_poly_d2_matches_direct() {
+        let mut rng = Rng::seed_from(5);
+        let r = {
+            let g = Mat::gaussian(&mut rng, 6, 6, 0.3);
+            let mut s = g.add(&g.transpose());
+            s.scale(0.5);
+            s
+        };
+        let r2 = matmul(&r, &r);
+        let alpha = 1.1;
+        let g = update_poly(&r, Some(&r2), 2, alpha);
+        // direct: I + R/2 + αR²
+        let mut want = Mat::eye(6);
+        want.axpy(0.5, &r);
+        want.axpy(alpha, &r2);
+        assert!(g.sub(&want).max_abs() < 1e-12);
+    }
+}

@@ -1,0 +1,197 @@
+//! Coupled inverse Newton iteration for `A^{-1/p}` (Table 1 row 5; paper
+//! §A.3). This is the other inverse-root backend available to Shampoo
+//! (`p = 2` gives `A^{-1/2}` directly, `p = 4` the 4th root used by
+//! Shampoo's original formulation).
+//!
+//! `X₀ = (1/c) I`, `M₀ = A/cᵖ` with `c = (2‖A‖_F/(p+1))^{1/p}`;
+//! `R_k = I − M_k`, `X_{k+1} = X_k (I + α_k R_k)`,
+//! `M_{k+1} = (I + α_k R_k)ᵖ M_k`.
+//! PRISM chooses `α_k` by minimising the sketched next-residual (degree-2p
+//! polynomial in α); the classical iteration fixes `α = 1/p`.
+
+use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use crate::coeffs::inverse_newton_coeffs;
+use crate::linalg::gemm::matmul;
+use crate::linalg::Mat;
+use crate::polyfit::minimize_on_interval;
+use crate::rng::Rng;
+use crate::sketch::{exact_power_traces, GaussianSketch};
+
+#[derive(Debug, Clone)]
+pub struct InvRootOpts {
+    /// The root order p ≥ 1 (p=1 is the Newton–Schulz matrix inverse).
+    pub p: usize,
+    pub alpha: AlphaMode,
+    pub stop: StopRule,
+}
+
+impl InvRootOpts {
+    pub fn prism(p: usize) -> Self {
+        InvRootOpts { p, alpha: AlphaMode::Sketched { p: 8 }, stop: StopRule::default() }
+    }
+    pub fn classic(p: usize) -> Self {
+        InvRootOpts { p, alpha: AlphaMode::Classic, stop: StopRule::default() }
+    }
+    pub fn with_stop(mut self, stop: StopRule) -> Self {
+        self.stop = stop;
+        self
+    }
+}
+
+pub struct InvRootResult {
+    /// `A^{-1/p}`.
+    pub inv_root: Mat,
+    pub log: IterationLog,
+}
+
+/// α-constraint interval for root order p: the Taylor coefficient is `1/p`;
+/// we allow up to 2× like the d=1 sign case ([ℓ, u] = [1/p, 2/p]).
+pub fn alpha_interval_p(p: usize) -> (f64, f64) {
+    (1.0 / p as f64, 2.0 / p as f64)
+}
+
+fn select_alpha(r: &Mat, p: usize, mode: AlphaMode, rng: &mut Rng) -> f64 {
+    let (lo, hi) = alpha_interval_p(p);
+    match mode {
+        AlphaMode::Classic => 1.0 / p as f64,
+        AlphaMode::Fixed(a) => a,
+        AlphaMode::Exact => {
+            let t = exact_power_traces(r, 2 * p + 2);
+            let c = inverse_newton_coeffs(&t, p);
+            minimize_on_interval(&c, lo, hi).map(|(a, _)| a).unwrap_or(1.0 / p as f64)
+        }
+        AlphaMode::Sketched { p: sk } => {
+            let s = GaussianSketch::draw(rng, sk, r.rows());
+            let t = s.power_traces(r, 2 * p + 2);
+            let c = inverse_newton_coeffs(&t, p);
+            minimize_on_interval(&c, lo, hi).map(|(a, _)| a).unwrap_or(1.0 / p as f64)
+        }
+        AlphaMode::SketchedKind { p: sk, kind } => {
+            let s = kind.draw(rng, sk, r.rows());
+            let t = s.power_traces(r, 2 * p + 2);
+            let c = inverse_newton_coeffs(&t, p);
+            minimize_on_interval(&c, lo, hi).map(|(a, _)| a).unwrap_or(1.0 / p as f64)
+        }
+    }
+}
+
+/// Compute `A^{-1/p}` for SPD `A`.
+pub fn inv_root_prism(a: &Mat, opts: &InvRootOpts, rng: &mut Rng) -> InvRootResult {
+    assert!(a.is_square());
+    let p = opts.p;
+    assert!(p >= 1);
+    let n = a.rows();
+    let c = (2.0 * a.fro_norm() / (p as f64 + 1.0)).powf(1.0 / p as f64);
+    let mut x = Mat::eye(n).scaled(1.0 / c);
+    let mut m = a.scaled(1.0 / c.powi(p as i32));
+
+    let mut r = {
+        let mut r = m.scaled(-1.0);
+        r.add_diag(1.0);
+        r
+    };
+    let mut rec = RunRecorder::start(r.fro_norm());
+    for _ in 0..opts.stop.max_iters {
+        if r.fro_norm() < opts.stop.tol {
+            break;
+        }
+        let alpha = select_alpha(&r, p, opts.alpha, rng);
+        // G = I + αR
+        let mut g = r.scaled(alpha);
+        g.add_diag(1.0);
+        x = matmul(&x, &g);
+        // M ← Gᵖ M  (p-1 extra multiplications; p is tiny)
+        let mut gp = g.clone();
+        for _ in 1..p {
+            gp = matmul(&gp, &g);
+        }
+        m = matmul(&gp, &m);
+        m.symmetrize();
+        r = {
+            let mut r = m.scaled(-1.0);
+            r.add_diag(1.0);
+            r
+        };
+        let rn = r.fro_norm();
+        rec.step(alpha, rn);
+        if !rn.is_finite() || rn > opts.stop.diverge_above {
+            break;
+        }
+    }
+    InvRootResult { inv_root: x, log: rec.finish(&opts.stop) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigen::symmetric_eigen;
+    use crate::randmat;
+
+    fn spd(rng: &mut Rng, n: usize, wmin: f64) -> Mat {
+        let w = randmat::logspace(wmin, 1.0, n);
+        randmat::sym_with_spectrum(rng, n, &w)
+    }
+
+    #[test]
+    fn p1_is_inverse() {
+        let mut rng = Rng::seed_from(1);
+        let a = spd(&mut rng, 10, 0.05);
+        for opts in [InvRootOpts::classic(1), InvRootOpts::prism(1)] {
+            let stop = StopRule::default().with_max_iters(200);
+            let out = inv_root_prism(&a, &opts.with_stop(stop), &mut rng);
+            assert!(out.log.converged, "res={}", out.log.final_residual());
+            let prod = matmul(&a, &out.inv_root);
+            assert!(prod.sub(&Mat::eye(10)).max_abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn p2_is_inverse_sqrt() {
+        let mut rng = Rng::seed_from(2);
+        let a = spd(&mut rng, 12, 0.02);
+        let stop = StopRule::default().with_max_iters(200);
+        let out = inv_root_prism(&a, &InvRootOpts::prism(2).with_stop(stop), &mut rng);
+        assert!(out.log.converged);
+        let e = symmetric_eigen(&a);
+        let exact = e.apply_fn(|w| 1.0 / w.sqrt());
+        assert!(out.inv_root.sub(&exact).max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn p4_fourth_root() {
+        let mut rng = Rng::seed_from(3);
+        let a = spd(&mut rng, 8, 0.1);
+        let stop = StopRule::default().with_max_iters(300);
+        let out = inv_root_prism(&a, &InvRootOpts::prism(4).with_stop(stop), &mut rng);
+        assert!(out.log.converged, "res={}", out.log.final_residual());
+        // (A^{-1/4})⁴ A = I
+        let x2 = matmul(&out.inv_root, &out.inv_root);
+        let x4 = matmul(&x2, &x2);
+        let prod = matmul(&x4, &a);
+        assert!(prod.sub(&Mat::eye(8)).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn prism_at_least_as_fast_as_classic() {
+        let mut rng = Rng::seed_from(4);
+        let a = spd(&mut rng, 16, 1e-4);
+        let stop = StopRule::default().with_max_iters(400).with_tol(1e-6);
+        let classic = inv_root_prism(&a, &InvRootOpts::classic(2).with_stop(stop), &mut rng);
+        let prism = inv_root_prism(&a, &InvRootOpts::prism(2).with_stop(stop), &mut rng);
+        assert!(classic.log.converged && prism.log.converged);
+        let ic = classic.log.iters_to_tol(1e-6).unwrap();
+        let ip = prism.log.iters_to_tol(1e-6).unwrap();
+        assert!(ip <= ic, "prism {ip} vs classic {ic}");
+    }
+
+    #[test]
+    fn alphas_in_interval() {
+        let mut rng = Rng::seed_from(5);
+        let a = spd(&mut rng, 10, 0.01);
+        let out = inv_root_prism(&a, &InvRootOpts::prism(2), &mut rng);
+        let (lo, hi) = alpha_interval_p(2);
+        for &al in &out.log.alphas {
+            assert!((lo - 1e-12..=hi + 1e-12).contains(&al), "α={al}");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! The PRISM iteration engines — one per row of the paper's Table 1.
+//!
+//! Every engine comes in a *classic* variant (fixed Taylor coefficients,
+//! i.e. the textbook iteration) and a *PRISM* variant (Step 4+5 of the
+//! meta-algorithm: the last polynomial coefficient `α_k` is re-fitted each
+//! iteration to the sketched spectrum of the residual).
+//!
+//! | module | target | Table 1 rows |
+//! |---|---|---|
+//! | [`sign`] | sign(A) | (derivation §4) |
+//! | [`polar`] | U Vᵀ | rows 3–4 |
+//! | [`sqrt`] | A^{1/2}, A^{-1/2} | rows 1–2 |
+//! | [`inverse_newton`] | A^{-1/p} | row 5 |
+//! | [`db_newton`] | A^{1/2}, A^{-1/2} | row 6 |
+//! | [`chebyshev`] | A⁻¹ | row 7 |
+
+pub mod driver;
+pub mod fit;
+pub mod sign;
+pub mod polar;
+pub mod sqrt;
+pub mod inverse_newton;
+pub mod db_newton;
+pub mod chebyshev;
+
+pub use driver::{AlphaMode, IterationLog, StopRule};

@@ -1,0 +1,174 @@
+//! Matrix sign iteration (paper §4) and the scalar sequences of Fig. 2.
+//!
+//! `sign(A) = A (A²)^{-1/2}` for `A` with `A²` symmetric. The Newton–Schulz
+//! iteration is `X₀ = A`, `R_k = I − X_k²`, `X_{k+1} = X_k g_d(R_k; α_k)`.
+
+use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use super::fit::{select_alpha_ns, taylor_alpha, update_poly};
+use crate::linalg::gemm::matmul;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Options for a sign run.
+#[derive(Debug, Clone)]
+pub struct SignOpts {
+    pub d: usize,
+    pub alpha: AlphaMode,
+    pub stop: StopRule,
+    /// Normalise by ‖A‖_F first (paper assumes ‖A‖₂ ≤ 1).
+    pub normalize: bool,
+}
+
+impl Default for SignOpts {
+    fn default() -> Self {
+        SignOpts {
+            d: 1,
+            alpha: AlphaMode::Sketched { p: 8 },
+            stop: StopRule::default(),
+            normalize: true,
+        }
+    }
+}
+
+pub struct SignResult {
+    pub s: Mat,
+    pub log: IterationLog,
+}
+
+/// Compute `sign(A)` for square `A` with `A²` symmetric.
+pub fn sign_prism(a: &Mat, opts: &SignOpts, rng: &mut Rng) -> SignResult {
+    assert!(a.is_square(), "sign: square input required");
+    let scale = if opts.normalize { a.fro_norm().max(1e-300) } else { 1.0 };
+    let mut x = a.scaled(1.0 / scale);
+
+    let residual = |x: &Mat| -> Mat {
+        let mut r = matmul(x, x).scaled(-1.0);
+        r.add_diag(1.0);
+        r.symmetrize(); // A² symmetric ⇒ R symmetric; remove drift
+        r
+    };
+
+    let mut r = residual(&x);
+    let mut rec = RunRecorder::start(r.fro_norm());
+    for _ in 0..opts.stop.max_iters {
+        if r.fro_norm() < opts.stop.tol {
+            break;
+        }
+        let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng);
+        let r2 = if opts.d == 2 { Some(matmul(&r, &r)) } else { None };
+        let g = update_poly(&r, r2.as_ref(), opts.d, alpha);
+        x = matmul(&x, &g);
+        r = residual(&x);
+        let rn = r.fro_norm();
+        rec.step(alpha, rn);
+        if !rn.is_finite() || rn > opts.stop.diverge_above {
+            break;
+        }
+    }
+    SignResult { s: x, log: rec.finish(&opts.stop) }
+}
+
+/// Scalar Newton–Schulz sequence `x_{k+1} = x_k g_d(1 − x_k²; α)` with
+/// fixed α — generates Fig. 2's curves. Returns the residuals `1 − x_k²`.
+pub fn scalar_sequence(x0: f64, d: usize, alpha: Option<f64>, iters: usize) -> Vec<f64> {
+    let mut x = x0;
+    let mut out = Vec::with_capacity(iters + 1);
+    out.push(1.0 - x * x);
+    for _ in 0..iters {
+        let xi = 1.0 - x * x;
+        let a = alpha.unwrap_or_else(|| taylor_alpha(d));
+        let g = match d {
+            1 => 1.0 + a * xi,
+            2 => 1.0 + 0.5 * xi + a * xi * xi,
+            _ => panic!("d must be 1 or 2"),
+        };
+        x *= g;
+        out.push(1.0 - x * x);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::randmat;
+
+    #[test]
+    fn sign_of_spd_is_identity() {
+        let mut rng = Rng::seed_from(1);
+        let w: Vec<f64> = (0..12).map(|_| rng.uniform_in(0.05, 1.0)).collect();
+        let a = randmat::sym_with_spectrum(&mut rng, 12, &w);
+        let out = sign_prism(&a, &SignOpts::default(), &mut rng);
+        assert!(out.log.converged, "res={}", out.log.final_residual());
+        assert!(out.s.sub(&Mat::eye(12)).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn sign_of_indefinite_diag() {
+        // sign of a symmetric matrix with ± eigenvalues: V sign(Λ) Vᵀ.
+        let mut rng = Rng::seed_from(2);
+        let w = vec![-1.0, -0.4, 0.3, 0.9, 0.05, -0.07];
+        let a = randmat::sym_with_spectrum(&mut rng, 6, &w);
+        let opts = SignOpts { stop: StopRule::default().with_max_iters(120), ..Default::default() };
+        let out = sign_prism(&a, &opts, &mut rng);
+        assert!(out.log.converged);
+        // sign(A)² = I and sign(A) commutes with A, sign(A) A is PSD.
+        let s2 = matmul(&out.s, &out.s);
+        assert!(s2.sub(&Mat::eye(6)).max_abs() < 1e-5);
+        let sa = matmul(&out.s, &a);
+        let e = crate::linalg::eigen::symmetric_eigen(&sa);
+        assert!(e.values.iter().all(|&v| v > -1e-6), "sign(A)·A should be PSD");
+    }
+
+    #[test]
+    fn d2_matches_d1_target() {
+        let mut rng = Rng::seed_from(3);
+        let w = vec![0.9, 0.5, -0.3, -0.8];
+        let a = randmat::sym_with_spectrum(&mut rng, 4, &w);
+        let o1 = sign_prism(&a, &SignOpts { d: 1, ..Default::default() }, &mut rng);
+        let o2 = sign_prism(&a, &SignOpts { d: 2, ..Default::default() }, &mut rng);
+        assert!(o1.s.sub(&o2.s).max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn scalar_sequence_matches_paper_example() {
+        // Paper §4: with d=1, α=1/2 (classic): 1 − x_{k+1}² = ¾(1−x_k²)² + ¼(1−x_k²)³.
+        let xs = scalar_sequence(0.6, 1, None, 1);
+        let xi0: f64 = 1.0 - 0.36;
+        let want = 0.75 * xi0 * xi0 + 0.25 * xi0 * xi0 * xi0;
+        assert!((xs[1] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_alpha1_doubles_rate() {
+        // Paper Fig. 2: for x₀ = 1e-6, α=1 reaches ξ < 0.5 in roughly half
+        // the iterations of α=1/2.
+        let classic = scalar_sequence(1e-6, 1, None, 100);
+        let accel = scalar_sequence(1e-6, 1, Some(1.0), 100);
+        let hit = |v: &[f64]| v.iter().position(|&x| x < 0.5).unwrap();
+        let (ic, ia) = (hit(&classic), hit(&accel));
+        assert!(
+            (ia as f64) < 0.65 * ic as f64,
+            "alpha=1: {ia} iters vs classic {ic}"
+        );
+    }
+
+    #[test]
+    fn scalar_stays_quadratic_near_convergence() {
+        // With the classical α = 1/2 the scalar residual map is
+        // h(ξ, 1/2) = ¾ξ² + ¼ξ³ ≤ ξ², i.e. exactly quadratic. (The fitted
+        // α* also satisfies |h| ≤ 1.71 ξ² by Lemma B.1, but a *fixed* α = 1
+        // is linear near 0 — that is why PRISM clamps α via the interval.)
+        let xs = scalar_sequence(0.9, 1, None, 8);
+        for w in xs.windows(2) {
+            if w[0].abs() < 0.25 {
+                assert!(
+                    w[1].abs() <= w[0] * w[0] + 1e-15,
+                    "{} -> {}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}

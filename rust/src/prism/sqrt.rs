@@ -1,0 +1,186 @@
+//! Coupled Newton–Schulz for the matrix square root and inverse square root
+//! (Table 1 rows 1–2; Theorem 3 of the paper / Higham 1997).
+//!
+//! For SPD `A` (normalised to `Ā = A/‖A‖_F`):
+//! `X₀ = Ā`, `Y₀ = I`, `R_k = I − X_k Y_k`,
+//! `X_{k+1} = X_k g_d(R_k; α_k)`, `Y_{k+1} = g_d(R_k; α_k) Y_k`,
+//! with `X → Ā^{1/2}`, `Y → Ā^{-1/2}`; results are rescaled by `√‖A‖_F`.
+//!
+//! This is exactly the primitive Shampoo needs for its `L^{-1/2}`, `R^{-1/2}`
+//! preconditioner roots.
+
+use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use super::fit::{select_alpha_ns, update_poly};
+use crate::linalg::gemm::matmul;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SqrtOpts {
+    pub d: usize,
+    pub alpha: AlphaMode,
+    pub stop: StopRule,
+}
+
+impl SqrtOpts {
+    pub fn degree3() -> Self {
+        SqrtOpts { d: 1, alpha: AlphaMode::Sketched { p: 8 }, stop: StopRule::default() }
+    }
+    pub fn degree5() -> Self {
+        SqrtOpts { d: 2, alpha: AlphaMode::Sketched { p: 8 }, stop: StopRule::default() }
+    }
+    pub fn classic(d: usize) -> Self {
+        SqrtOpts { d, alpha: AlphaMode::Classic, stop: StopRule::default() }
+    }
+    pub fn with_stop(mut self, stop: StopRule) -> Self {
+        self.stop = stop;
+        self
+    }
+}
+
+pub struct SqrtResult {
+    /// `A^{1/2}`.
+    pub sqrt: Mat,
+    /// `A^{-1/2}`.
+    pub inv_sqrt: Mat,
+    pub log: IterationLog,
+}
+
+/// Compute `A^{1/2}` and `A^{-1/2}` for symmetric positive-definite `A`.
+pub fn sqrt_prism(a: &Mat, opts: &SqrtOpts, rng: &mut Rng) -> SqrtResult {
+    assert!(a.is_square(), "sqrt: square input required");
+    let c = a.fro_norm().max(1e-300);
+    let mut x = a.scaled(1.0 / c);
+    let mut y = Mat::eye(a.rows());
+
+    // NOTE: the residual is `I − Y X` (inverse-root times root), NOT
+    // `I − X Y`. In exact arithmetic they are equal (X and Y are commuting
+    // polynomials in Ā), but the Y-first pairing is the one Higham (1997)
+    // proves numerically *stable*; the X-first pairing slowly amplifies
+    // rounding errors after convergence (observed: ×40/iteration blow-up).
+    let residual = |x: &Mat, y: &Mat| -> Mat {
+        let mut r = matmul(y, x).scaled(-1.0);
+        r.add_diag(1.0);
+        r.symmetrize();
+        r
+    };
+
+    let mut r = residual(&x, &y);
+    let mut rec = RunRecorder::start(r.fro_norm());
+    for _ in 0..opts.stop.max_iters {
+        if r.fro_norm() < opts.stop.tol {
+            break;
+        }
+        let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng);
+        let r2 = if opts.d == 2 { Some(matmul(&r, &r)) } else { None };
+        let g = update_poly(&r, r2.as_ref(), opts.d, alpha);
+        x = matmul(&x, &g);
+        y = matmul(&g, &y);
+        r = residual(&x, &y);
+        let rn = r.fro_norm();
+        rec.step(alpha, rn);
+        if !rn.is_finite() || rn > opts.stop.diverge_above {
+            break;
+        }
+    }
+    let sc = c.sqrt();
+    SqrtResult {
+        sqrt: x.scaled(sc),
+        inv_sqrt: y.scaled(1.0 / sc),
+        log: rec.finish(&opts.stop),
+    }
+}
+
+/// The paper's Fig. D.3 error metric: `‖I − X⁻² A‖_F ≈ ‖I − Y² A‖_F`
+/// evaluated with the inverse square root (avoids an explicit inverse).
+pub fn sqrt_error(a: &Mat, inv_sqrt: &Mat) -> f64 {
+    let mut e = matmul(&matmul(inv_sqrt, inv_sqrt), a).scaled(-1.0);
+    e.add_diag(1.0);
+    e.fro_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::{gens, Prop};
+    use crate::randmat;
+
+    fn spd_with_cond(rng: &mut Rng, n: usize, wmin: f64) -> Mat {
+        let w = randmat::logspace(wmin, 1.0, n);
+        randmat::sym_with_spectrum(rng, n, &w)
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let mut rng = Rng::seed_from(1);
+        let a = spd_with_cond(&mut rng, 16, 1e-2);
+        for opts in [SqrtOpts::classic(1), SqrtOpts::degree3(), SqrtOpts::degree5()] {
+            let out = sqrt_prism(&a, &opts, &mut rng);
+            assert!(out.log.converged, "{}: res {}", opts.alpha.name(), out.log.final_residual());
+            let back = matmul(&out.sqrt, &out.sqrt);
+            assert!(back.sub(&a).max_abs() < 1e-6, "{}", opts.alpha.name());
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_is_inverse_of_sqrt() {
+        let mut rng = Rng::seed_from(2);
+        let a = spd_with_cond(&mut rng, 12, 1e-3);
+        let stop = StopRule::default().with_max_iters(150);
+        let out = sqrt_prism(&a, &SqrtOpts::degree5().with_stop(stop), &mut rng);
+        assert!(out.log.converged);
+        let prod = matmul(&out.sqrt, &out.inv_sqrt);
+        assert!(prod.sub(&Mat::eye(12)).max_abs() < 1e-6);
+        assert!(sqrt_error(&a, &out.inv_sqrt) < 1e-5);
+    }
+
+    #[test]
+    fn matches_eigen_sqrt() {
+        let mut rng = Rng::seed_from(3);
+        let a = spd_with_cond(&mut rng, 10, 0.05);
+        let out = sqrt_prism(&a, &SqrtOpts::degree5(), &mut rng);
+        let e = crate::linalg::eigen::symmetric_eigen(&a);
+        let exact = e.apply_fn(|w| w.max(0.0).sqrt());
+        assert!(out.sqrt.sub(&exact).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn prism_fewer_iters_on_ill_conditioned() {
+        let mut rng = Rng::seed_from(4);
+        // eigenvalues spanning 1e-8..1 — singular values of the sign-embed
+        // are 1e-4..1.
+        let a = spd_with_cond(&mut rng, 20, 1e-8);
+        let stop = StopRule::default().with_max_iters(300).with_tol(1e-6);
+        let classic = sqrt_prism(&a, &SqrtOpts::classic(2).with_stop(stop), &mut rng);
+        let prism = sqrt_prism(&a, &SqrtOpts::degree5().with_stop(stop), &mut rng);
+        assert!(classic.log.converged && prism.log.converged);
+        let (ic, ip) = (
+            classic.log.iters_to_tol(1e-6).unwrap(),
+            prism.log.iters_to_tol(1e-6).unwrap(),
+        );
+        assert!((ip as f64) <= 0.8 * ic as f64, "prism {ip} vs classic {ic}");
+    }
+
+    #[test]
+    fn property_sqrt_roundtrip() {
+        Prop::new("sqrt roundtrip").cases(6).run(|rng| {
+            let n = gens::usize_in(rng, 4, 14);
+            let wmin = gens::f64_log(rng, 1e-5, 0.5);
+            let a = spd_with_cond(rng, n, wmin);
+            let stop = StopRule::default().with_max_iters(200).with_tol(1e-8);
+            let out = sqrt_prism(&a, &SqrtOpts::degree5().with_stop(stop), rng);
+            assert!(out.log.converged, "wmin={wmin} res={}", out.log.final_residual());
+            let back = matmul(&out.sqrt, &out.sqrt);
+            let rel = back.sub(&a).fro_norm() / a.fro_norm();
+            assert!(rel < 1e-5, "rel={rel}");
+        });
+    }
+
+    #[test]
+    fn identity_sqrt_is_identity() {
+        let mut rng = Rng::seed_from(5);
+        let out = sqrt_prism(&Mat::eye(6), &SqrtOpts::degree3(), &mut rng);
+        assert!(out.sqrt.sub(&Mat::eye(6)).max_abs() < 1e-7);
+        assert!(out.inv_sqrt.sub(&Mat::eye(6)).max_abs() < 1e-7);
+    }
+}

@@ -1,0 +1,188 @@
+//! Property-based testing mini-framework.
+//!
+//! The offline environment has no `proptest`, so we provide the 20% that
+//! covers our needs: seeded generators, a case runner that reports the
+//! failing seed, and simple halving shrink for numeric scalars.
+//!
+//! ```
+//! use prism::ptest::{Prop, gens};
+//! Prop::new("abs is nonneg")
+//!     .cases(100)
+//!     .run(|rng| {
+//!         let x = gens::f64_in(rng, -10.0, 10.0);
+//!         assert!(x.abs() >= 0.0);
+//!     });
+//! ```
+
+use crate::rng::Rng;
+
+/// A property runner.
+pub struct Prop {
+    name: String,
+    cases: usize,
+    seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &str) -> Self {
+        Prop { name: name.to_string(), cases: 64, seed: 0x5EED }
+    }
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Run `f` for each case with an independent RNG; panics with the case
+    /// seed on failure so the case can be replayed deterministically.
+    pub fn run(self, f: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let result = std::panic::catch_unwind(|| {
+                let mut rng = Rng::seed_from(case_seed);
+                f(&mut rng);
+            });
+            if let Err(panic) = result {
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property '{}' failed at case {} (replay seed {:#x}): {}",
+                    self.name, case, case_seed, msg
+                );
+            }
+        }
+    }
+
+    /// Like [`run`] but the property returns `Result<(), String>` instead of
+    /// panicking; useful when asserting numeric bounds with context.
+    pub fn check(self, f: impl Fn(&mut Rng) -> Result<(), String>) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut rng = Rng::seed_from(case_seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property '{}' failed at case {} (replay seed {:#x}): {}",
+                    self.name, case, case_seed, msg
+                );
+            }
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gens {
+    use crate::rng::Rng;
+
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        rng.uniform_in(lo, hi)
+    }
+
+    /// Log-uniform over [lo, hi], lo > 0 — for σ_min-style magnitudes.
+    pub fn f64_log(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (rng.uniform_in(lo.ln(), hi.ln())).exp()
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Random descending spectrum in (0, 1] with σ_max = 1.
+    pub fn spectrum(rng: &mut Rng, n: usize, sigma_min: f64) -> Vec<f64> {
+        let mut s: Vec<f64> = (0..n).map(|_| f64_log(rng, sigma_min, 1.0)).collect();
+        s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        s[0] = 1.0;
+        if n > 1 {
+            s[n - 1] = sigma_min;
+        }
+        s
+    }
+
+    /// One of the listed items.
+    pub fn choice<'a, T>(rng: &mut Rng, items: &'a [T]) -> &'a T {
+        &items[rng.below(items.len())]
+    }
+}
+
+/// Halving shrink search: find a smaller `x` in [lo, x0] that still fails
+/// `fails`, assuming monotone failure. Returns the smallest failing value
+/// found within `steps` bisections.
+pub fn shrink_f64(x0: f64, lo: f64, steps: usize, fails: impl Fn(f64) -> bool) -> f64 {
+    debug_assert!(fails(x0));
+    let mut hi = x0;
+    let mut lo = lo;
+    for _ in 0..steps {
+        let mid = 0.5 * (lo + hi);
+        if fails(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_passes() {
+        Prop::new("square nonneg").cases(50).run(|rng| {
+            let x = gens::f64_in(rng, -5.0, 5.0);
+            assert!(x * x >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn prop_reports_seed_on_failure() {
+        Prop::new("always fails").cases(3).run(|_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn check_variant_works() {
+        Prop::new("sum comm").cases(20).check(|rng| {
+            let a = gens::f64_in(rng, -1.0, 1.0);
+            let b = gens::f64_in(rng, -1.0, 1.0);
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err(format!("{a} {b}"))
+            }
+        });
+    }
+
+    #[test]
+    fn spectrum_gen_shape() {
+        let mut rng = Rng::seed_from(1);
+        let s = gens::spectrum(&mut rng, 10, 1e-4);
+        assert_eq!(s[0], 1.0);
+        assert_eq!(s[9], 1e-4);
+        assert!(s.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn shrink_finds_boundary() {
+        // fails for x >= 2.0
+        let x = shrink_f64(10.0, 0.0, 40, |x| x >= 2.0);
+        assert!((x - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        let mut rng = Rng::seed_from(2);
+        for _ in 0..100 {
+            let v = gens::usize_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Random matrix generators for the paper's experiment suite.
+//!
+//! * Gaussian matrices with aspect ratio γ = n/m (Fig. 3, D.1, D.3),
+//! * prescribed-spectrum matrices `U diag(σ) Vᵀ` for the σ_min sweeps (Fig. 1),
+//! * Wishart matrices `GᵀG` (Fig. D.3),
+//! * Marchenko–Pastur spectra and the HTMP (high-temperature Marchenko–
+//!   Pastur; Hodgkinson et al. 2025) heavy-tailed family used in Figs. 4,
+//!   D.2, D.4. We realise HTMP by mixing the MP bulk with inverse-gamma
+//!   "temperature" variates: for tail parameter κ, each singular value is an
+//!   MP draw scaled by `T^{1/2}` with `T ~ InvGamma(κ+1, κ)` (mean 1), so
+//!   κ → ∞ recovers plain MP and small κ produces the heavy right tail seen
+//!   in trained-network gradient spectra.
+
+use crate::linalg::decomp::qr_householder;
+use crate::linalg::gemm::{matmul, syrk_at_a};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// iid N(0, 1/m) Gaussian matrix of shape n x m (rows x cols); σ_max ≈ 1 + √γ.
+pub fn gaussian(rng: &mut Rng, n: usize, m: usize) -> Mat {
+    Mat::gaussian(rng, n, m, 1.0 / (m as f64).sqrt())
+}
+
+/// Haar-ish orthogonal matrix (QR of a Gaussian, sign-fixed): n x k, k <= n.
+pub fn orthogonal(rng: &mut Rng, n: usize, k: usize) -> Mat {
+    assert!(k <= n);
+    let g = Mat::gaussian(rng, n, k, 1.0);
+    let (mut q, r) = qr_householder(&g);
+    // Fix signs so the distribution is Haar (diagonal of R positive).
+    for j in 0..k {
+        if r[(j, j)] < 0.0 {
+            for i in 0..n {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+/// Rectangular matrix with prescribed singular values: `A = U diag(s) Vᵀ`,
+/// shape m x n with `s.len() == n <= m`.
+pub fn with_spectrum(rng: &mut Rng, m: usize, n: usize, s: &[f64]) -> Mat {
+    assert!(n <= m && s.len() == n);
+    let u = orthogonal(rng, m, n);
+    let v = orthogonal(rng, n, n);
+    let mut us = u;
+    for j in 0..n {
+        for i in 0..m {
+            us[(i, j)] *= s[j];
+        }
+    }
+    matmul(&us, &v.transpose())
+}
+
+/// Symmetric PSD matrix with prescribed eigenvalues.
+pub fn sym_with_spectrum(rng: &mut Rng, n: usize, w: &[f64]) -> Mat {
+    assert_eq!(w.len(), n);
+    let q = orthogonal(rng, n, n);
+    let mut qs = q.clone();
+    for j in 0..n {
+        for i in 0..n {
+            qs[(i, j)] *= w[j];
+        }
+    }
+    let mut a = matmul(&qs, &q.transpose());
+    a.symmetrize();
+    a
+}
+
+/// Log-spaced values in [lo, hi] (inclusive), length n — the σ sweeps.
+pub fn logspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > 0.0 && n >= 1);
+    if n == 1 {
+        return vec![hi];
+    }
+    let (llo, lhi) = (lo.ln(), hi.ln());
+    (0..n)
+        .map(|i| (llo + (lhi - llo) * i as f64 / (n - 1) as f64).exp())
+        .collect()
+}
+
+/// Wishart matrix `A = GᵀG / n` with `G` an n x m iid Gaussian (A is m x m).
+pub fn wishart(rng: &mut Rng, n: usize, m: usize) -> Mat {
+    let g = Mat::gaussian(rng, n, m, 1.0);
+    let mut a = syrk_at_a(&g);
+    a.scale(1.0 / n as f64);
+    a
+}
+
+/// Sample `count` points from the Marchenko–Pastur squared-singular-value
+/// law with ratio q = m/n ∈ (0, 1], via inverse-CDF on a numeric table.
+pub fn marchenko_pastur_eigs(rng: &mut Rng, count: usize, q: f64) -> Vec<f64> {
+    assert!(q > 0.0 && q <= 1.0);
+    let lo = (1.0 - q.sqrt()).powi(2);
+    let hi = (1.0 + q.sqrt()).powi(2);
+    // Build density table and CDF.
+    let grid = 512;
+    let mut xs = Vec::with_capacity(grid);
+    let mut cdf = Vec::with_capacity(grid);
+    let mut acc = 0.0;
+    for i in 0..grid {
+        let x = lo + (hi - lo) * (i as f64 + 0.5) / grid as f64;
+        let dens = ((hi - x) * (x - lo)).max(0.0).sqrt() / (2.0 * std::f64::consts::PI * q * x);
+        acc += dens;
+        xs.push(x);
+        cdf.push(acc);
+    }
+    for c in cdf.iter_mut() {
+        *c /= acc;
+    }
+    (0..count)
+        .map(|_| {
+            let u = rng.uniform();
+            let idx = match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i.min(grid - 1),
+            };
+            xs[idx]
+        })
+        .collect()
+}
+
+/// HTMP (high-temperature Marchenko–Pastur) heavy-tailed singular values.
+/// κ is the tail parameter: small κ = heavy tail; κ → ∞ recovers MP.
+pub fn htmp_singular_values(rng: &mut Rng, count: usize, q: f64, kappa: f64) -> Vec<f64> {
+    let mp = marchenko_pastur_eigs(rng, count, q);
+    mp.into_iter()
+        .map(|lam| {
+            // Temperature T ~ InvGamma(kappa + 1, kappa), E[T] = 1.
+            let t = rng.inverse_gamma(kappa + 1.0, kappa);
+            (lam * t).sqrt()
+        })
+        .collect()
+}
+
+/// HTMP random matrix of shape n x m (n >= m): heavy-tailed singular values
+/// planted on Haar singular vectors, normalised to σ_max = 1.
+pub fn htmp(rng: &mut Rng, n: usize, m: usize, kappa: f64) -> Mat {
+    assert!(n >= m);
+    let q = m as f64 / n as f64;
+    let mut s = htmp_singular_values(rng, m, q, kappa);
+    let smax = s.iter().cloned().fold(0.0_f64, f64::max).max(1e-300);
+    for x in s.iter_mut() {
+        *x /= smax;
+    }
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    with_spectrum(rng, n, m, &s)
+}
+
+/// Estimate the tail index of a sample by the Hill estimator on the top-k
+/// order statistics (diagnostic used by tests to verify HTMP heaviness).
+pub fn hill_tail_index(sample: &[f64], k: usize) -> f64 {
+    let mut v: Vec<f64> = sample.iter().cloned().filter(|x| *x > 0.0).collect();
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let k = k.min(v.len().saturating_sub(1)).max(1);
+    let xk = v[k];
+    let mean_log: f64 = v[..k].iter().map(|x| (x / xk).ln()).sum::<f64>() / k as f64;
+    1.0 / mean_log.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_at_b;
+    use crate::linalg::svd::svd;
+
+    #[test]
+    fn orthogonal_is_orthogonal() {
+        let mut rng = Rng::seed_from(1);
+        let q = orthogonal(&mut rng, 20, 12);
+        let qtq = matmul_at_b(&q, &q);
+        assert!(qtq.sub(&Mat::eye(12)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn with_spectrum_has_it() {
+        let mut rng = Rng::seed_from(2);
+        let s_target = vec![2.0, 1.0, 0.5, 0.1];
+        let a = with_spectrum(&mut rng, 10, 4, &s_target);
+        let d = svd(&a);
+        for i in 0..4 {
+            assert!((d.s[i] - s_target[i]).abs() < 1e-8, "s[{i}]={}", d.s[i]);
+        }
+    }
+
+    #[test]
+    fn sym_with_spectrum_eigs() {
+        let mut rng = Rng::seed_from(3);
+        let w = vec![0.1, 1.0, 3.0];
+        let a = sym_with_spectrum(&mut rng, 3, &w);
+        let e = crate::linalg::eigen::symmetric_eigen(&a);
+        for i in 0..3 {
+            assert!((e.values[i] - w[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn logspace_endpoints() {
+        let v = logspace(1e-3, 1.0, 4);
+        assert!((v[0] - 1e-3).abs() < 1e-12);
+        assert!((v[3] - 1.0).abs() < 1e-12);
+        assert!(v.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn gaussian_sigma_max_near_mp_edge() {
+        let mut rng = Rng::seed_from(4);
+        let (n, m) = (120, 60); // gamma = 2
+        let a = gaussian(&mut rng, n, m);
+        let d = svd(&a);
+        let edge = 1.0 + (n as f64 / m as f64).sqrt(); // rows scaled by 1/sqrt(m)
+        assert!((d.s[0] - edge).abs() / edge < 0.25, "smax={} edge={edge}", d.s[0]);
+    }
+
+    #[test]
+    fn wishart_is_psd() {
+        let mut rng = Rng::seed_from(5);
+        let a = wishart(&mut rng, 30, 15);
+        let e = crate::linalg::eigen::symmetric_eigen(&a);
+        assert!(e.values.iter().all(|&w| w > -1e-10));
+    }
+
+    #[test]
+    fn mp_eigs_in_support() {
+        let mut rng = Rng::seed_from(6);
+        let q: f64 = 0.5;
+        let lo = (1.0 - q.sqrt()).powi(2);
+        let hi = (1.0 + q.sqrt()).powi(2);
+        for lam in marchenko_pastur_eigs(&mut rng, 500, q) {
+            assert!(lam >= lo - 1e-9 && lam <= hi + 1e-9);
+        }
+    }
+
+    #[test]
+    fn htmp_small_kappa_heavier_tail() {
+        let mut rng = Rng::seed_from(7);
+        let heavy = htmp_singular_values(&mut rng, 3000, 0.5, 0.1);
+        let light = htmp_singular_values(&mut rng, 3000, 0.5, 100.0);
+        // Heavy tail => smaller Hill index.
+        let hi_heavy = hill_tail_index(&heavy, 150);
+        let hi_light = hill_tail_index(&light, 150);
+        assert!(
+            hi_heavy < hi_light,
+            "hill heavy={hi_heavy:.2} light={hi_light:.2}"
+        );
+        // And a much larger max/median ratio.
+        let ratio = |v: &[f64]| {
+            let mut s = v.to_vec();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[s.len() - 1] / s[s.len() / 2]
+        };
+        assert!(ratio(&heavy) > 2.0 * ratio(&light));
+    }
+
+    #[test]
+    fn htmp_matrix_normalised() {
+        let mut rng = Rng::seed_from(8);
+        let a = htmp(&mut rng, 40, 20, 0.5);
+        let d = svd(&a);
+        assert!((d.s[0] - 1.0).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,320 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment provides no `rand` crate, so we implement
+//! the standard xoshiro256++ generator (Blackman & Vigna) seeded through
+//! SplitMix64, plus the samplers the paper's experiments need: uniform,
+//! standard normal (Box–Muller with caching), gamma (Marsaglia–Tsang),
+//! inverse-gamma, Zipf and categorical draws.
+//!
+//! Everything is deterministic given a seed, which is what makes the
+//! benchmark tables reproducible run-to-run.
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal from Box–Muller
+    cached_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed the generator deterministically from a single u64.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent stream (for per-worker RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seed_from(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our purposes (bias < 2^-64 * n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Avoid u == 0.
+        let u = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Vector of iid standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang; valid for k > 0.
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        if k < 1.0 {
+            // Boost: Gamma(k) = Gamma(k+1) * U^{1/k}
+            let g = self.gamma(k + 1.0);
+            let u = loop {
+                let u = self.uniform();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Inverse-gamma(shape a, scale b): 1 / Gamma(a, 1/b).
+    pub fn inverse_gamma(&mut self, a: f64, b: f64) -> f64 {
+        b / self.gamma(a)
+    }
+
+    /// Zipf-like rank draw over [0, n): P(i) ∝ 1/(i+1)^s, via inverse CDF on a
+    /// precomputed table — used by the synthetic LM corpus generator.
+    pub fn zipf(&mut self, cdf: &[f64]) -> usize {
+        let u = self.uniform();
+        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+
+    /// Categorical draw from unnormalised weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Build the CDF table for [`Rng::zipf`].
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+    let total: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    for x in w.iter_mut() {
+        acc += *x / total;
+        *x = acc;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seed_from(7);
+        let mut b = Rng::seed_from(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Rng::seed_from(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from(4);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut rng = Rng::seed_from(5);
+        for &k in &[0.5, 1.0, 2.5, 8.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| rng.gamma(k)).sum::<f64>() / n as f64;
+            assert!((mean - k).abs() / k < 0.08, "k={k} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn inverse_gamma_positive() {
+        let mut rng = Rng::seed_from(6);
+        for _ in 0..1000 {
+            assert!(rng.inverse_gamma(2.0, 1.0) > 0.0);
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut rng = Rng::seed_from(8);
+        for _ in 0..1000 {
+            assert!(rng.below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn zipf_prefers_low_ranks() {
+        let mut rng = Rng::seed_from(9);
+        let cdf = zipf_cdf(100, 1.2);
+        let n = 10_000;
+        let low = (0..n).filter(|_| rng.zipf(&cdf) < 10).count();
+        assert!(low > n / 2, "low-rank draws: {low}/{n}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Rng::seed_from(10);
+        let w = [0.0, 1.0, 3.0];
+        let n = 30_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::seed_from(11);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Rng::seed_from(12);
+        let idx = rng.sample_indices(20, 10);
+        assert_eq!(idx.len(), 10);
+        let mut s = idx.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut base = Rng::seed_from(13);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,159 @@
+//! Artifact manifest: the JSON contract between `python/compile/aot.py`
+//! (writer) and the Rust runtime (reader).
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "artifacts": [
+//!     {"name": "polar_step_d2", "file": "polar_step_d2.hlo.txt",
+//!      "inputs":  [{"name": "x", "shape": [256, 128], "dtype": "f32"}],
+//!      "outputs": [{"name": "x_next", "shape": [256, 128], "dtype": "f32"}],
+//!      "meta": {"alpha_lo": 0.375, "alpha_hi": 1.45}}
+//!   ]
+//! }
+//! ```
+
+use crate::configfmt::{parse_json, Value};
+use crate::util::{Error, Result};
+use std::path::Path;
+
+/// One named tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub dtype: String,
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (hyper-parameters baked at lowering time).
+    pub meta: std::collections::BTreeMap<String, Value>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: i64,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn tensor_specs(v: &Value, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .as_array()
+        .ok_or_else(|| Error::Parse(format!("manifest: {what} must be an array")))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .get_path("name")
+                .and_then(|x| x.as_str())
+                .unwrap_or("unnamed")
+                .to_string();
+            let shape = t
+                .get_path("shape")
+                .and_then(|x| x.as_array())
+                .ok_or_else(|| Error::Parse(format!("manifest: {what}.{name}: no shape")))?
+                .iter()
+                .map(|d| d.as_int().unwrap_or(0))
+                .collect();
+            let dtype = t
+                .get_path("dtype")
+                .and_then(|x| x.as_str())
+                .unwrap_or("f32")
+                .to_string();
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let v = parse_json(src)?;
+        let version = v.get_path("version").and_then(|x| x.as_int()).unwrap_or(1);
+        let arts = v
+            .get_path("artifacts")
+            .and_then(|x| x.as_array())
+            .ok_or_else(|| Error::Parse("manifest: missing 'artifacts'".into()))?;
+        let mut entries = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get_path("name")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::Parse("manifest: artifact without name".into()))?
+                .to_string();
+            let file = a
+                .get_path("file")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::Parse(format!("manifest: {name}: no file")))?
+                .to_string();
+            let inputs = tensor_specs(
+                a.get_path("inputs").unwrap_or(&Value::Array(vec![])),
+                "inputs",
+            )?;
+            let outputs = tensor_specs(
+                a.get_path("outputs").unwrap_or(&Value::Array(vec![])),
+                "outputs",
+            )?;
+            let meta = a
+                .get_path("meta")
+                .and_then(|x| x.as_table())
+                .cloned()
+                .unwrap_or_default();
+            entries.push(ArtifactEntry { name, file, inputs, outputs, meta });
+        }
+        Ok(Manifest { version, entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        Manifest::parse(&src)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "polar_step_d2", "file": "polar_step_d2.hlo.txt",
+         "inputs":  [{"name": "x", "shape": [16, 8], "dtype": "f32"},
+                     {"name": "alpha", "shape": [], "dtype": "f32"}],
+         "outputs": [{"name": "x_next", "shape": [16, 8], "dtype": "f32"}],
+         "meta": {"alpha_lo": 0.375, "alpha_hi": 1.45}},
+        {"name": "train_step", "file": "train_step.hlo.txt",
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("polar_step_d2").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![16, 8]);
+        assert_eq!(e.inputs[1].shape, Vec::<i64>::new());
+        assert_eq!(e.outputs[0].name, "x_next");
+        assert_eq!(e.meta.get("alpha_hi").unwrap().as_float(), Some(1.45));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"file": "x"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them from Rust. Python never runs on
+//! this path — the artifacts are produced once by `make artifacts`.
+//!
+//! The interchange format is HLO **text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly.
+
+pub mod manifest;
+
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+/// A loaded, compiled artifact plus its metadata.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+}
+
+/// PJRT client + executable cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, usize>>,
+    loaded: Mutex<Vec<std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("pjrt cpu client: {e}")))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            loaded: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch cached) an executable by manifest name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(&idx) = cache.get(name) {
+                return Ok(self.loaded.lock().unwrap()[idx].clone());
+            }
+        }
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        let arc = std::sync::Arc::new(Executable { name: name.to_string(), exe, entry });
+        let mut loaded = self.loaded.lock().unwrap();
+        loaded.push(arc.clone());
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.len() - 1);
+        Ok(arc)
+    }
+}
+
+impl Executable {
+    /// Execute with f32 buffers; `inputs[i]` must match the manifest's i-th
+    /// input shape. Returns the tuple elements as flat f32 vectors.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.entry.inputs) {
+            let expect: usize = spec.shape.iter().product::<i64>() as usize;
+            if buf.len() != expect {
+                return Err(Error::Runtime(format!(
+                    "{}: input '{}' expects {} elems, got {}",
+                    self.name,
+                    spec.name,
+                    expect,
+                    buf.len()
+                )));
+            }
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&spec.shape)
+                .map_err(|e| Error::Runtime(format!("reshape input '{}': {e}", spec.name)))?;
+            lits.push(lit);
+        }
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
+        // aot.py lowers with return_tuple=True.
+        let elems = result
+            .decompose_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {}: {e}", self.name)))?;
+        let mut out = Vec::with_capacity(elems.len());
+        for (i, el) in elems.into_iter().enumerate() {
+            out.push(
+                el.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("output {i} of {}: {e}", self.name)))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// f64 `Mat` → f32 buffer (row-major).
+pub fn mat_to_f32(m: &Mat) -> Vec<f32> {
+    m.as_slice().iter().map(|&x| x as f32).collect()
+}
+
+/// f32 buffer → f64 `Mat`.
+pub fn f32_to_mat(rows: usize, cols: usize, buf: &[f32]) -> Result<Mat> {
+    Mat::from_vec(rows, cols, buf.iter().map(|&x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_f32_roundtrip() {
+        let mut rng = crate::rng::Rng::seed_from(1);
+        let m = Mat::gaussian(&mut rng, 3, 4, 1.0);
+        let buf = mat_to_f32(&m);
+        let back = f32_to_mat(3, 4, &buf).unwrap();
+        assert!(m.sub(&back).max_abs() < 1e-6);
+        assert!(f32_to_mat(2, 2, &buf).is_err());
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs — they
+    // need `make artifacts` to have run first.
+}

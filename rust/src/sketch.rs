@@ -1,0 +1,384 @@
+//! Randomized sketching (Step 5 of the PRISM meta-algorithm).
+//!
+//! A Gaussian sketch `S ∈ R^{p×n}` is an oblivious subspace embedding; the
+//! quantities PRISM needs are the *sketched power traces*
+//! `T_i = tr(S R^i Sᵀ)`, i = 1..q, computed by applying `R` repeatedly to the
+//! p sketched rows — `O(n² p)` total, never forming `R^i`.
+//!
+//! The module also provides exact traces (for tests and the ablation bench)
+//! and a Hutchinson estimator for comparison.
+
+use crate::linalg::gemm::matmul_a_bt;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Gaussian sketch matrix `S` with iid N(0, 1/p) entries (scaling keeps
+/// `E[tr(S M Sᵀ)] = tr(M)`).
+pub struct GaussianSketch {
+    pub s: Mat, // p x n
+}
+
+impl GaussianSketch {
+    pub fn draw(rng: &mut Rng, p: usize, n: usize) -> Self {
+        GaussianSketch { s: Mat::gaussian(rng, p, n, 1.0 / (p as f64).sqrt()) }
+    }
+
+    pub fn p(&self) -> usize {
+        self.s.rows()
+    }
+    pub fn n(&self) -> usize {
+        self.s.cols()
+    }
+
+    /// Sketched power traces `[tr(S R¹ Sᵀ), ..., tr(S R^q Sᵀ)]` for symmetric
+    /// `R`, computed right-to-left: `Y_0 = Sᵀ`, `Y_i = R Y_{i-1}`, and
+    /// `tr(S R^i Sᵀ) = sum_jk S[j,k] * Y_i[k,j]`.
+    ///
+    /// Cost: q multiplications of (n x n) by (n x p) = O(q n² p).
+    pub fn power_traces(&self, r: &Mat, q: usize) -> Vec<f64> {
+        assert!(r.is_square());
+        assert_eq!(r.rows(), self.n(), "sketch width mismatch");
+        // Keep the panel TRANSPOSED (p × n): because R is symmetric,
+        // Yᵀ_{i} = Yᵀ_{i-1} · R, and a (p × n)·(n × n) product gives the
+        // GEMM kernel full n-wide inner loops — the natural (n × p) panel
+        // has p-wide (≈8-element) inner loops that cannot vectorise well
+        // (§Perf change 7: 2.7x on the trace path at n = 512, p = 8).
+        let mut yt = self.s.clone();
+        let mut traces = Vec::with_capacity(q);
+        for _ in 0..q {
+            yt = mat_times(&yt, r);
+            // tr(S R^i Sᵀ) = Σ_{j,k} S[j,k] · Yᵀ[j,k] — an elementwise dot.
+            let t: f64 = self
+                .s
+                .as_slice()
+                .iter()
+                .zip(yt.as_slice())
+                .map(|(a, b)| a * b)
+                .sum();
+            traces.push(t);
+        }
+        traces
+    }
+}
+
+/// Alternative sketch families — the paper notes "there are many plausible
+/// choices for the sketch matrix S, and here simple random Gaussian matrices
+/// appear to be sufficient"; these let us verify that claim empirically
+/// (ablation bench `ablation_sketch`) and give users cheaper options.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchKind {
+    /// iid N(0, 1/p) — the paper's default.
+    Gaussian,
+    /// iid ±1/√p — same first two moments, no Box–Muller cost.
+    Rademacher,
+    /// Sparse embedding (Clarkson–Woodruff): one ±1 per column, hashed to a
+    /// random row. Stored dense here (the R·Y sweep dominates cost anyway);
+    /// the statistical behaviour is what the ablation compares.
+    CountSketch,
+    /// Subsampled randomized Hadamard transform: rows of `√(1/p)·H D` with D
+    /// a random sign flip and H the ±1 Walsh–Hadamard pattern of size padded
+    /// to a power of two (truncated back to n columns).
+    Srht,
+}
+
+impl SketchKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SketchKind::Gaussian => "gaussian",
+            SketchKind::Rademacher => "rademacher",
+            SketchKind::CountSketch => "countsketch",
+            SketchKind::Srht => "srht",
+        }
+    }
+
+    /// Draw a p×n sketch of this kind (dense representation, shared
+    /// [`GaussianSketch`] container so `power_traces` works unchanged).
+    pub fn draw(&self, rng: &mut Rng, p: usize, n: usize) -> GaussianSketch {
+        let s = match self {
+            SketchKind::Gaussian => Mat::gaussian(rng, p, n, 1.0 / (p as f64).sqrt()),
+            SketchKind::Rademacher => {
+                let v = 1.0 / (p as f64).sqrt();
+                let mut s = Mat::zeros(p, n);
+                for i in 0..p {
+                    for j in 0..n {
+                        s[(i, j)] = if rng.uniform() < 0.5 { -v } else { v };
+                    }
+                }
+                s
+            }
+            SketchKind::CountSketch => {
+                // One ±1 per column in a uniformly random row: E[SᵀS] = I,
+                // so tr(S M Sᵀ) is unbiased for tr(M).
+                let mut s = Mat::zeros(p, n);
+                for j in 0..n {
+                    let row = rng.below(p);
+                    s[(row, j)] = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                }
+                s
+            }
+            SketchKind::Srht => srht_dense(rng, p, n),
+        };
+        GaussianSketch { s }
+    }
+}
+
+/// Dense SRHT rows. Row i is `H[r_i, ·] ⊙ signs / √p` where `r_i` is a
+/// sampled row index of the n2×n2 Walsh–Hadamard pattern
+/// `H[i,j] = (−1)^{popcount(i & j)}`, n2 = next power of two ≥ n. The
+/// 1/√n2 Hadamard normalization and the √(n2/p) subsampling correction
+/// combine to 1/√p, keeping `E[tr(S M Sᵀ)] = tr(M)`.
+fn srht_dense(rng: &mut Rng, p: usize, n: usize) -> Mat {
+    let n2 = n.next_power_of_two();
+    let signs: Vec<f64> = (0..n)
+        .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+        .collect();
+    let scale = 1.0 / (p as f64).sqrt();
+    let mut s = Mat::zeros(p, n);
+    for i in 0..p {
+        let ri = rng.below(n2);
+        for j in 0..n {
+            let h = if (ri & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+            s[(i, j)] = h * signs[j] * scale;
+        }
+    }
+    s
+}
+
+/// `R * Y` helper; plain GEMM via crate kernel (counts toward GEMM stats,
+/// matching how the paper accounts sketch cost).
+fn mat_times(r: &Mat, y: &Mat) -> Mat {
+    // Reuse the packed kernel through A·Bᵀ with pre-transposed Y to avoid
+    // a second transpose: matmul(r, y) is fine; y is n x p with p small.
+    crate::linalg::gemm::matmul(r, y)
+}
+
+/// Exact power traces `tr(R^i)` for i = 1..q — O(q n³); test/ablation only.
+pub fn exact_power_traces(r: &Mat, q: usize) -> Vec<f64> {
+    assert!(r.is_square());
+    let mut acc = r.clone();
+    let mut out = Vec::with_capacity(q);
+    out.push(acc.trace());
+    for _ in 1..q {
+        acc = crate::linalg::gemm::matmul(&acc, r);
+        out.push(acc.trace());
+    }
+    out
+}
+
+/// Hutchinson trace estimates `tr(R^i)` via `z ~ Rademacher`, for reference.
+pub fn hutchinson_power_traces(rng: &mut Rng, r: &Mat, q: usize, probes: usize) -> Vec<f64> {
+    let n = r.rows();
+    let mut out = vec![0.0; q];
+    for _ in 0..probes {
+        let z: Vec<f64> = (0..n)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let mut y = z.clone();
+        for t in out.iter_mut().take(q) {
+            y = r.matvec(&y);
+            let dot: f64 = z.iter().zip(&y).map(|(a, b)| a * b).sum();
+            *t += dot / probes as f64;
+        }
+    }
+    out
+}
+
+/// Sketched squared Frobenius norm `‖S M‖_F²` (used by tests to validate the
+/// OSE property on our Gaussian sketches).
+pub fn sketched_fro_sq(s: &GaussianSketch, m: &Mat) -> f64 {
+    let sm = matmul_a_bt(&s.s, &m.transpose());
+    sm.fro_norm_sq()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::syrk_at_a;
+    use crate::ptest::Prop;
+
+    fn sym(rng: &mut Rng, n: usize) -> Mat {
+        let g = Mat::gaussian(rng, n + 2, n, 1.0 / (n as f64).sqrt());
+        syrk_at_a(&g)
+    }
+
+    #[test]
+    fn sketched_traces_close_to_exact() {
+        let mut rng = Rng::seed_from(1);
+        let n = 48;
+        let r = sym(&mut rng, n);
+        let exact = exact_power_traces(&r, 6);
+        // Average several sketches: unbiasedness check.
+        let reps = 40;
+        let mut mean = vec![0.0; 6];
+        for _ in 0..reps {
+            let s = GaussianSketch::draw(&mut rng, 8, n);
+            let t = s.power_traces(&r, 6);
+            for i in 0..6 {
+                mean[i] += t[i] / reps as f64;
+            }
+        }
+        for i in 0..6 {
+            let rel = (mean[i] - exact[i]).abs() / exact[i].abs().max(1e-12);
+            assert!(rel < 0.25, "i={i} mean={} exact={} rel={rel}", mean[i], exact[i]);
+        }
+    }
+
+    #[test]
+    fn single_sketch_concentrates_reasonably() {
+        // The paper uses p as small as 5; verify a single draw with p=8 is
+        // within a factor useful for the α fit (coefficients are ratios of
+        // traces, so moderate error is tolerated).
+        let mut rng = Rng::seed_from(2);
+        let n = 64;
+        let r = sym(&mut rng, n);
+        let exact = exact_power_traces(&r, 6);
+        let s = GaussianSketch::draw(&mut rng, 8, n);
+        let t = s.power_traces(&r, 6);
+        for i in 0..6 {
+            let rel = (t[i] - exact[i]).abs() / exact[i].abs().max(1e-12);
+            // Variance grows with the power i (T₆ is dominated by the top
+            // eigenvalues); a single p=8 draw stays within a small constant
+            // factor, which is all the α fit needs (tested end-to-end in
+            // prism::fit::sketched_close_to_exact_alpha).
+            let tol = if i < 3 { 0.6 } else { 1.5 };
+            assert!(rel < tol, "i={i} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn power_traces_match_definition_small() {
+        // Verify tr(S R^i Sᵀ) literally on a tiny case.
+        let mut rng = Rng::seed_from(3);
+        let n = 6;
+        let r = sym(&mut rng, n);
+        let s = GaussianSketch::draw(&mut rng, 3, n);
+        let t = s.power_traces(&r, 3);
+        // Direct: S R^i Sᵀ.
+        let mut ri = r.clone();
+        for i in 0..3 {
+            let srs = crate::linalg::gemm::matmul(
+                &crate::linalg::gemm::matmul(&s.s, &ri),
+                &s.s.transpose(),
+            );
+            assert!((srs.trace() - t[i]).abs() < 1e-9, "i={i}");
+            ri = crate::linalg::gemm::matmul(&ri, &r);
+        }
+    }
+
+    #[test]
+    fn hutchinson_unbiased() {
+        let mut rng = Rng::seed_from(4);
+        let n = 32;
+        let r = sym(&mut rng, n);
+        let exact = exact_power_traces(&r, 3);
+        let est = hutchinson_power_traces(&mut rng, &r, 3, 300);
+        for i in 0..3 {
+            let rel = (est[i] - exact[i]).abs() / exact[i].abs().max(1e-12);
+            assert!(rel < 0.25, "i={i} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn ose_preserves_column_norms() {
+        // Johnson–Lindenstrauss flavour: ‖S M‖_F² ≈ ‖M‖_F² on average.
+        Prop::new("ose frobenius").cases(10).run(|rng| {
+            let n = 40;
+            let m = Mat::gaussian(rng, n, 5, 1.0);
+            let reps = 30;
+            let mut mean = 0.0;
+            for _ in 0..reps {
+                let s = GaussianSketch::draw(rng, 10, n);
+                mean += sketched_fro_sq(&s, &m) / reps as f64;
+            }
+            let rel = (mean - m.fro_norm_sq()).abs() / m.fro_norm_sq();
+            assert!(rel < 0.35, "rel={rel}");
+        });
+    }
+
+    #[test]
+    fn all_sketch_kinds_unbiased() {
+        // E[tr(S R^i Sᵀ)] = tr(R^i) for every family.
+        let mut rng = Rng::seed_from(6);
+        let n = 40;
+        let r = sym(&mut rng, n);
+        let exact = exact_power_traces(&r, 4);
+        for kind in [
+            SketchKind::Gaussian,
+            SketchKind::Rademacher,
+            SketchKind::CountSketch,
+            SketchKind::Srht,
+        ] {
+            let reps = 60;
+            let mut mean = vec![0.0; 4];
+            for _ in 0..reps {
+                let s = kind.draw(&mut rng, 8, n);
+                let t = s.power_traces(&r, 4);
+                for i in 0..4 {
+                    mean[i] += t[i] / reps as f64;
+                }
+            }
+            for i in 0..4 {
+                let rel = (mean[i] - exact[i]).abs() / exact[i].abs().max(1e-12);
+                assert!(rel < 0.35, "{} i={i} rel={rel}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn countsketch_is_one_nonzero_per_column() {
+        let mut rng = Rng::seed_from(7);
+        let s = SketchKind::CountSketch.draw(&mut rng, 6, 30);
+        for j in 0..30 {
+            let nz: Vec<f64> =
+                (0..6).map(|i| s.s[(i, j)]).filter(|v| *v != 0.0).collect();
+            assert_eq!(nz.len(), 1, "column {j}");
+            assert!(nz[0] == 1.0 || nz[0] == -1.0);
+        }
+    }
+
+    #[test]
+    fn srht_rows_have_unit_scaled_entries() {
+        let mut rng = Rng::seed_from(8);
+        let p = 5;
+        let s = SketchKind::Srht.draw(&mut rng, p, 24);
+        let v = 1.0 / (p as f64).sqrt();
+        for i in 0..p {
+            for j in 0..24 {
+                assert!((s.s[(i, j)].abs() - v).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn rademacher_entries_pm_inv_sqrt_p() {
+        let mut rng = Rng::seed_from(9);
+        let p = 4;
+        let s = SketchKind::Rademacher.draw(&mut rng, p, 16);
+        let v = 1.0 / (p as f64).sqrt();
+        let mut plus = 0;
+        for i in 0..p {
+            for j in 0..16 {
+                assert!((s.s[(i, j)].abs() - v).abs() < 1e-12);
+                if s.s[(i, j)] > 0.0 {
+                    plus += 1;
+                }
+            }
+        }
+        // roughly balanced signs
+        assert!(plus > 16 && plus < 48, "plus={plus}");
+    }
+
+    #[test]
+    fn traces_of_identity() {
+        let mut rng = Rng::seed_from(5);
+        let n = 24;
+        let r = Mat::eye(n);
+        let s = GaussianSketch::draw(&mut rng, 64, n);
+        let t = s.power_traces(&r, 4);
+        // tr(S I^i Sᵀ) = ‖S‖_F² ≈ n for all i.
+        for i in 0..4 {
+            assert!((t[i] - n as f64).abs() / (n as f64) < 0.4, "i={i} t={}", t[i]);
+            assert!((t[i] - t[0]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! A small fixed-size thread pool (no rayon offline).
+//!
+//! Used by the coordinator's worker pool and available to parallelise GEMM
+//! panels on multi-core machines. On the single-core CI box the pool degrades
+//! gracefully to sequential execution.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool with a shared queue.
+pub struct ThreadPool {
+    workers: Vec<JoinHandle<()>>,
+    tx: Sender<Message>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(size);
+        for _ in 0..size {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(Message::Run(job)) => {
+                        job();
+                        let (lock, cv) = &*pending;
+                        let mut p = lock.lock().unwrap();
+                        *p -= 1;
+                        if *p == 0 {
+                            cv.notify_all();
+                        }
+                    }
+                    Ok(Message::Shutdown) | Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool { workers, tx, pending }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn for_machine() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.send(Message::Run(Box::new(job))).expect("pool closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for i in 0..n across `pool`, collecting results in order.
+/// Results are computed into a pre-sized buffer guarded by a mutex of slots.
+pub fn parallel_map<T: Send + 'static>(
+    pool: &ThreadPool,
+    n: usize,
+    f: impl Fn(usize) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    let f = Arc::new(f);
+    let (tx, rx): (Sender<(usize, T)>, Receiver<(usize, T)>) = channel();
+    for i in 0..n {
+        let f = Arc::clone(&f);
+        let tx = tx.clone();
+        pool.execute(move || {
+            let v = f(i);
+            let _ = tx.send((i, v));
+        });
+    }
+    drop(tx);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in rx.iter() {
+        slots[i] = Some(v);
+    }
+    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let pool = ThreadPool::new(3);
+        let out = parallel_map(&pool, 20, |i| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let pool = ThreadPool::new(1);
+        let out = parallel_map(&pool, 5, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn wait_idle_no_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not deadlock
+        assert!(pool.size() == 2);
+    }
+}

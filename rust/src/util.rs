@@ -1,0 +1,216 @@
+//! Small shared utilities: errors, timing, float comparison, lightweight logging.
+
+use std::fmt;
+use std::time::Instant;
+
+/// Crate-wide error type. We deliberately keep a single enum rather than
+/// per-module error types: almost every failure in this library is either a
+/// shape/argument problem, a numerical breakdown, or an I/O / runtime issue.
+#[derive(Debug)]
+pub enum Error {
+    /// Dimension or argument mismatch (programmer error surfaced politely).
+    Shape(String),
+    /// Numerical failure (non-convergence, non-SPD input to Cholesky, ...).
+    Numerical(String),
+    /// Config/CLI parse problems.
+    Parse(String),
+    /// Filesystem or PJRT runtime problems.
+    Runtime(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[macro_export]
+macro_rules! shape_err {
+    ($($arg:tt)*) => { $crate::util::Error::Shape(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! numerical_err {
+    ($($arg:tt)*) => { $crate::util::Error::Numerical(format!($($arg)*)) };
+}
+
+/// Wall-clock stopwatch in seconds.
+#[derive(Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Relative closeness check used across the numerical tests.
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let d = (a - b).abs();
+    d <= abs || d <= rel * a.abs().max(b.abs())
+}
+
+/// `assert!(approx_eq(..))` with a useful message.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr, $rel:expr, $abs:expr) => {{
+        let (a, b) = ($a, $b);
+        assert!(
+            $crate::util::approx_eq(a, b, $rel, $abs),
+            "assert_close failed: {} vs {} (rel={}, abs={})",
+            a,
+            b,
+            $rel,
+            $abs
+        );
+    }};
+    ($a:expr, $b:expr) => {
+        $crate::assert_close!($a, $b, 1e-9, 1e-12)
+    };
+}
+
+/// Verbosity-gated logging to stderr. Level 0 = silent, 1 = info, 2 = debug.
+/// The level is process-global; set once from the CLI.
+use std::sync::atomic::{AtomicU8, Ordering};
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_level() -> u8 {
+    LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 1 { eprintln!("[info] {}", format!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 { eprintln!("[debug] {}", format!($($arg)*)); }
+    };
+}
+
+/// Pretty-print seconds with an adaptive unit.
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Median of a slice (copies + sorts; fine for bench-sized inputs).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Percentile (0..=100) with linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * ((v.len() - 1) as f64);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basic() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!approx_eq(1.0, 1.1, 1e-3, 1e-3));
+        assert!(approx_eq(0.0, 1e-15, 0.0, 1e-12));
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!((percentile(&xs, 25.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.0).ends_with('s'));
+        assert!(fmt_duration(2e-3).ends_with("ms"));
+        assert!(fmt_duration(2e-6).ends_with("us"));
+        assert!(fmt_duration(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn error_display() {
+        let e = Error::Shape("2x3 vs 4x5".into());
+        assert!(format!("{e}").contains("shape"));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+        assert!(sw.elapsed_ms() >= 0.0);
+        assert!(sw.elapsed_us() >= 0.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Synthetic workloads for the training and service experiments.
+//!
+//! * `BlobsDataset` — image-like classification data (the Fig. 5 stand-in for
+//!   CIFAR: 3072-dim inputs, k Gaussian class clusters with overlapping
+//!   covariance, so training accuracy has headroom and preconditioning
+//!   matters).
+//! * `MarkovCorpus` — byte-level language-modelling corpus with Zipf-ish
+//!   unigram statistics and order-1 Markov structure (the Fig. 6 stand-in
+//!   for FineWeb at CPU scale).
+//! * `GradientStream` — a stream of synthetic gradient matrices with
+//!   HTMP-style spectra, driving the preconditioner-service benches.
+
+use crate::linalg::Mat;
+use crate::randmat;
+use crate::rng::{zipf_cdf, Rng};
+
+/// Gaussian-blob classification dataset.
+pub struct BlobsDataset {
+    pub dim: usize,
+    pub classes: usize,
+    pub xs: Vec<Vec<f64>>,
+    pub ys: Vec<usize>,
+}
+
+impl BlobsDataset {
+    /// `n` samples, `dim` features, `classes` clusters. Cluster centers at
+    /// distance `sep`; within-cluster anisotropic noise so gradient
+    /// covariances are ill-conditioned (this is what makes Shampoo shine).
+    pub fn generate(rng: &mut Rng, n: usize, dim: usize, classes: usize, sep: f64) -> Self {
+        let centers: Vec<Vec<f64>> = (0..classes)
+            .map(|_| rng.normal_vec(dim).iter().map(|x| x * sep).collect())
+            .collect();
+        // Anisotropic scales shared across clusters: log-spaced 1.0 .. 0.05.
+        let scales = randmat::logspace(0.05, 1.0, dim);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % classes;
+            let mut x = centers[c].clone();
+            for (j, v) in x.iter_mut().enumerate() {
+                *v += rng.normal() * scales[dim - 1 - (j % dim)];
+            }
+            xs.push(x);
+            ys.push(c);
+        }
+        BlobsDataset { dim, classes, xs, ys }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Deterministic train/val split (last `frac` goes to val).
+    pub fn split(&self, val_frac: f64) -> (Vec<usize>, Vec<usize>) {
+        let n = self.len();
+        let nval = ((n as f64) * val_frac) as usize;
+        let train: Vec<usize> = (0..n - nval).collect();
+        let val: Vec<usize> = (n - nval..n).collect();
+        (train, val)
+    }
+
+    /// Gather a batch as (X [b x dim], labels).
+    pub fn batch(&self, idx: &[usize]) -> (Mat, Vec<usize>) {
+        let b = idx.len();
+        let mut x = Mat::zeros(b, self.dim);
+        let mut y = Vec::with_capacity(b);
+        for (r, &i) in idx.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(&self.xs[i]);
+            y.push(self.ys[i]);
+        }
+        (x, y)
+    }
+}
+
+/// Byte-level synthetic corpus with Zipf unigram + order-1 Markov structure.
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    pub tokens: Vec<u32>,
+}
+
+impl MarkovCorpus {
+    pub fn generate(rng: &mut Rng, vocab: usize, len: usize) -> Self {
+        // Each state prefers a small random successor set (Markov), weighted
+        // by a global Zipf prior — gives LM-like bigram statistics.
+        let cdf = zipf_cdf(vocab, 1.1);
+        let succ: Vec<[u32; 4]> = (0..vocab)
+            .map(|_| {
+                [
+                    rng.zipf(&cdf) as u32,
+                    rng.zipf(&cdf) as u32,
+                    rng.zipf(&cdf) as u32,
+                    rng.zipf(&cdf) as u32,
+                ]
+            })
+            .collect();
+        let mut tokens = Vec::with_capacity(len);
+        let mut state = rng.zipf(&cdf) as u32;
+        for _ in 0..len {
+            tokens.push(state);
+            state = if rng.uniform() < 0.75 {
+                succ[state as usize][rng.below(4)]
+            } else {
+                rng.zipf(&cdf) as u32
+            };
+        }
+        MarkovCorpus { vocab, tokens }
+    }
+
+    /// Sample a batch of (input, target) windows: inputs `[b][t]`, targets
+    /// shifted by one.
+    pub fn sample_batch(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        seq_len: usize,
+    ) -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
+        let max_start = self.tokens.len() - seq_len - 1;
+        let mut xs = Vec::with_capacity(batch);
+        let mut ys = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let s = rng.below(max_start);
+            xs.push(self.tokens[s..s + seq_len].to_vec());
+            ys.push(self.tokens[s + 1..s + seq_len + 1].to_vec());
+        }
+        (xs, ys)
+    }
+
+    /// Empirical unigram entropy in nats (lower bound on achievable loss is
+    /// the conditional entropy; unigram entropy is an upper reference).
+    pub fn unigram_entropy(&self) -> f64 {
+        let mut counts = vec![0usize; self.vocab];
+        for &t in &self.tokens {
+            counts[t as usize] += 1;
+        }
+        let n = self.tokens.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    }
+}
+
+/// A stream of synthetic "gradient matrices" with controllable spectra, used
+/// to load-test the preconditioner service the way training would.
+pub struct GradientStream {
+    rng: Rng,
+    pub shapes: Vec<(usize, usize)>,
+    pub kappa: f64,
+    i: usize,
+}
+
+impl GradientStream {
+    pub fn new(seed: u64, shapes: Vec<(usize, usize)>, kappa: f64) -> Self {
+        GradientStream { rng: Rng::seed_from(seed), shapes, kappa, i: 0 }
+    }
+
+    /// Next (layer_id, matrix).
+    pub fn next_grad(&mut self) -> (usize, Mat) {
+        let layer = self.i % self.shapes.len();
+        self.i += 1;
+        let (n, m) = self.shapes[layer];
+        let g = if n >= m {
+            randmat::htmp(&mut self.rng, n, m, self.kappa)
+        } else {
+            randmat::htmp(&mut self.rng, m, n, self.kappa).transpose()
+        };
+        (layer, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shapes_and_labels() {
+        let mut rng = Rng::seed_from(1);
+        let ds = BlobsDataset::generate(&mut rng, 100, 16, 4, 3.0);
+        assert_eq!(ds.len(), 100);
+        assert!(ds.ys.iter().all(|&y| y < 4));
+        let (train, val) = ds.split(0.2);
+        assert_eq!(train.len(), 80);
+        assert_eq!(val.len(), 20);
+        let (x, y) = ds.batch(&[0, 5, 7]);
+        assert_eq!(x.shape(), (3, 16));
+        assert_eq!(y.len(), 3);
+    }
+
+    #[test]
+    fn blobs_classes_separable() {
+        let mut rng = Rng::seed_from(2);
+        let ds = BlobsDataset::generate(&mut rng, 200, 8, 2, 8.0);
+        // Nearest-center classifier should beat chance comfortably.
+        let mut centers = vec![vec![0.0; 8]; 2];
+        let mut counts = [0usize; 2];
+        for (x, &y) in ds.xs.iter().zip(&ds.ys) {
+            for j in 0..8 {
+                centers[y][j] += x[j];
+            }
+            counts[y] += 1;
+        }
+        for c in 0..2 {
+            for j in 0..8 {
+                centers[c][j] /= counts[c] as f64;
+            }
+        }
+        let correct = ds
+            .xs
+            .iter()
+            .zip(&ds.ys)
+            .filter(|(x, &y)| {
+                let d0: f64 = x.iter().zip(&centers[0]).map(|(a, b)| (a - b) * (a - b)).sum();
+                let d1: f64 = x.iter().zip(&centers[1]).map(|(a, b)| (a - b) * (a - b)).sum();
+                (if d0 < d1 { 0 } else { 1 }) == y
+            })
+            .count();
+        assert!(correct > 150, "correct={correct}/200");
+    }
+
+    #[test]
+    fn corpus_tokens_in_vocab() {
+        let mut rng = Rng::seed_from(3);
+        let c = MarkovCorpus::generate(&mut rng, 64, 5000);
+        assert!(c.tokens.iter().all(|&t| (t as usize) < 64));
+        let h = c.unigram_entropy();
+        assert!(h > 0.5 && h < (64f64).ln(), "H={h}");
+    }
+
+    #[test]
+    fn corpus_batches_shifted() {
+        let mut rng = Rng::seed_from(4);
+        let c = MarkovCorpus::generate(&mut rng, 32, 2000);
+        let (xs, ys) = c.sample_batch(&mut rng, 4, 16);
+        assert_eq!(xs.len(), 4);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(x.len(), 16);
+            assert_eq!(y.len(), 16);
+            // y is x shifted by one within the original stream:
+            assert_eq!(&x[1..], &y[..15]);
+        }
+    }
+
+    #[test]
+    fn gradient_stream_cycles_shapes() {
+        let mut gs = GradientStream::new(5, vec![(32, 16), (16, 32)], 1.0);
+        let (l0, g0) = gs.next_grad();
+        let (l1, g1) = gs.next_grad();
+        let (l2, _) = gs.next_grad();
+        assert_eq!((l0, l1, l2), (0, 1, 0));
+        assert_eq!(g0.shape(), (32, 16));
+        assert_eq!(g1.shape(), (16, 32));
+    }
+}

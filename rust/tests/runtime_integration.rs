@@ -1,0 +1,166 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they self-skip (with a loud
+//! message) when `artifacts/manifest.json` is absent so `cargo test` stays
+//! usable in a fresh checkout.
+
+use prism::linalg::Mat;
+use prism::prism::polar::orthogonality_error;
+use prism::rng::Rng;
+use prism::runtime::{f32_to_mat, mat_to_f32, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "init_params",
+        "train_step",
+        "polar_step_d1",
+        "polar_step_d2",
+        "polar_residual_traces",
+    ] {
+        assert!(rt.manifest.get(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn polar_step_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("polar_step_d2").expect("load");
+    let (m, n) = {
+        let s = &exe.entry.inputs[0].shape;
+        (s[0] as usize, s[1] as usize)
+    };
+    let mut rng = Rng::seed_from(42);
+    let mut a = Mat::gaussian(&mut rng, m, n, 1.0);
+    let fro = a.fro_norm();
+    a.scale(1.0 / fro);
+    let alpha = 1.2_f32;
+
+    let out = exe
+        .run_f32(&[&mat_to_f32(&a), &[alpha]])
+        .expect("execute polar_step_d2");
+    let got = f32_to_mat(m, n, &out[0]).unwrap();
+
+    // Rust-native reference of the same update: R = I − XᵀX; X(I + R/2 + αR²).
+    let r = {
+        let mut r = prism::linalg::gemm::syrk_at_a(&a).scaled(-1.0);
+        r.add_diag(1.0);
+        r
+    };
+    let r2 = prism::linalg::gemm::matmul(&r, &r);
+    let mut g = r.scaled(0.5);
+    g.axpy(alpha as f64, &r2);
+    g.add_diag(1.0);
+    let want = prism::linalg::gemm::matmul(&a, &g);
+
+    let err = got.sub(&want).max_abs();
+    assert!(err < 1e-4, "pallas-HLO vs rust mismatch: {err}");
+}
+
+#[test]
+fn iterated_polar_step_orthogonalizes() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("polar_step_d2").expect("load");
+    let (m, n) = {
+        let s = &exe.entry.inputs[0].shape;
+        (s[0] as usize, s[1] as usize)
+    };
+    let mut rng = Rng::seed_from(7);
+    let mut a = Mat::gaussian(&mut rng, m, n, 1.0);
+    let fro = a.fro_norm();
+    a.scale(1.0 / fro);
+    let mut x = mat_to_f32(&a);
+    for k in 0..30 {
+        // α schedule: aggressive early, Taylor-like later (what the Rust
+        // coordinator does via the sketch fit).
+        let alpha: f32 = if k < 10 { 1.45 } else { 0.375 };
+        let out = exe.run_f32(&[&x, &[alpha]]).expect("step");
+        x = out.into_iter().next().unwrap();
+    }
+    let q = f32_to_mat(m, n, &x).unwrap();
+    let err = orthogonality_error(&q);
+    assert!(err < 1e-2, "orthogonality after 30 pallas steps: {err}");
+}
+
+#[test]
+fn residual_traces_artifact_matches_rust_sketch() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("polar_residual_traces").expect("load");
+    let (m, n) = {
+        let s = &exe.entry.inputs[0].shape;
+        (s[0] as usize, s[1] as usize)
+    };
+    let p = exe.entry.inputs[1].shape[0] as usize;
+    let q = exe.entry.outputs[0].shape[0] as usize;
+    let mut rng = Rng::seed_from(9);
+    let mut a = Mat::gaussian(&mut rng, m, n, 1.0);
+    let fro = a.fro_norm();
+    a.scale(1.0 / fro);
+    let s = Mat::gaussian(&mut rng, p, n, 1.0 / (p as f64).sqrt());
+
+    let out = exe
+        .run_f32(&[&mat_to_f32(&a), &mat_to_f32(&s)])
+        .expect("execute traces");
+    let traces_pallas = &out[0];
+    let fro_pallas = out[1][0] as f64;
+
+    // Rust-native computation.
+    let r = {
+        let mut r = prism::linalg::gemm::syrk_at_a(&a).scaled(-1.0);
+        r.add_diag(1.0);
+        r
+    };
+    let sk = prism::sketch::GaussianSketch { s };
+    let traces_rust = sk.power_traces(&r, q);
+    for i in 0..q {
+        let rel = (traces_pallas[i] as f64 - traces_rust[i]).abs()
+            / traces_rust[i].abs().max(1e-6);
+        assert!(rel < 1e-3, "trace {i}: pallas={} rust={}", traces_pallas[i], traces_rust[i]);
+    }
+    assert!((fro_pallas - r.fro_norm()).abs() / r.fro_norm() < 1e-4);
+}
+
+#[test]
+fn train_step_loss_reasonable_and_finite_grads() {
+    let Some(rt) = runtime() else { return };
+    let step = rt.load("train_step").expect("load step");
+    let init = rt.load("init_params").expect("load init");
+    let params = init.run_f32(&[&[0.5f32]]).expect("init params");
+    let nparams = step.entry.inputs.len() - 2;
+    assert_eq!(params.len(), nparams);
+
+    let batch = step.entry.meta.get("batch").unwrap().as_int().unwrap() as usize;
+    let seq = step.entry.meta.get("seq_len").unwrap().as_int().unwrap() as usize;
+    let vocab = step.entry.meta.get("vocab").unwrap().as_int().unwrap() as f64;
+
+    let mut rng = Rng::seed_from(3);
+    let tokens: Vec<f32> = (0..batch * seq)
+        .map(|_| rng.below(vocab as usize) as f32)
+        .collect();
+    let mut inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+    inputs.push(&tokens);
+    inputs.push(&tokens);
+    let out = step.run_f32(&inputs).expect("train step");
+    let loss = out[0][0] as f64;
+    assert!(loss.is_finite());
+    assert!((loss - vocab.ln()).abs() < 1.0, "init loss {loss} vs ln V {}", vocab.ln());
+    // All grads finite, most non-zero.
+    let mut nonzero = 0;
+    for g in &out[1..] {
+        assert!(g.iter().all(|x| x.is_finite()));
+        if g.iter().any(|&x| x != 0.0) {
+            nonzero += 1;
+        }
+    }
+    assert!(nonzero >= nparams - 1);
+}

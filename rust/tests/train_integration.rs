@@ -1,0 +1,110 @@
+//! End-to-end: TrainDriver + Muon over the AOT transformer artifacts.
+//! Self-skips without `make artifacts`.
+
+use prism::config::Backend;
+use prism::coordinator::TrainDriver;
+use prism::optim::adamw::AdamW;
+use prism::optim::muon::Muon;
+use prism::rng::Rng;
+use prism::runtime::Runtime;
+use prism::workload::MarkovCorpus;
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+fn batches(
+    corpus: &MarkovCorpus,
+    rng: &mut Rng,
+    batch: usize,
+    seq: usize,
+) -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
+    corpus.sample_batch(rng, batch, seq)
+}
+
+#[test]
+fn muon_training_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut driver = TrainDriver::new(&rt, 0.25).expect("driver");
+    assert!(driver.num_params() > 50_000, "params: {}", driver.num_params());
+    let mut rng = Rng::seed_from(11);
+    let corpus = MarkovCorpus::generate(&mut rng, driver.vocab, 20_000);
+    let mut opt = Muon::paper_default(Backend::Prism5, 1);
+    opt.lr = 0.02;
+
+    let (ex, ey) = batches(&corpus, &mut rng, driver.batch, driver.seq_len);
+    let loss0 = driver.eval(&ex, &ey).expect("eval");
+    for _ in 0..12 {
+        let (xs, ys) = batches(&corpus, &mut rng, driver.batch, driver.seq_len);
+        driver.step(&xs, &ys, &mut opt).expect("step");
+    }
+    let loss1 = driver.eval(&ex, &ey).expect("eval");
+    assert!(
+        loss1 < loss0 - 0.15,
+        "muon-prism5 did not learn: {loss0} -> {loss1}"
+    );
+}
+
+#[test]
+fn adamw_training_also_works() {
+    let Some(rt) = runtime() else { return };
+    let mut driver = TrainDriver::new(&rt, 0.5).expect("driver");
+    let mut rng = Rng::seed_from(12);
+    let corpus = MarkovCorpus::generate(&mut rng, driver.vocab, 20_000);
+    let mut opt = AdamW::new(3e-3, 0.0);
+    let (ex, ey) = batches(&corpus, &mut rng, driver.batch, driver.seq_len);
+    let loss0 = driver.eval(&ex, &ey).expect("eval");
+    for _ in 0..12 {
+        let (xs, ys) = batches(&corpus, &mut rng, driver.batch, driver.seq_len);
+        driver.step(&xs, &ys, &mut opt).expect("step");
+    }
+    let loss1 = driver.eval(&ex, &ey).expect("eval");
+    assert!(loss1 < loss0 - 0.1, "adamw did not learn: {loss0} -> {loss1}");
+}
+
+#[test]
+fn step_rejects_wrong_batch_size() {
+    let Some(rt) = runtime() else { return };
+    let mut driver = TrainDriver::new(&rt, 0.1).expect("driver");
+    let mut opt = AdamW::new(1e-3, 0.0);
+    let xs = vec![vec![0u32; driver.seq_len]; driver.batch + 1];
+    assert!(driver.step(&xs, &xs, &mut opt).is_err());
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    let Some(rt) = runtime() else { return };
+    let mut driver = TrainDriver::new(&rt, 0.5).expect("driver");
+    let mut rng = Rng::seed_from(21);
+    let corpus = MarkovCorpus::generate(&mut rng, driver.vocab, 20_000);
+    let mut opt = AdamW::paper_default();
+
+    // Train a few steps, checkpoint, train one more and note the loss.
+    for _ in 0..3 {
+        let (xs, ys) = batches(&corpus, &mut rng, driver.batch, driver.seq_len);
+        driver.step(&xs, &ys, &mut opt).expect("step");
+    }
+    let path = std::env::temp_dir().join("prism_train_ckpt.bin");
+    driver.save_checkpoint(&path).expect("save");
+    let (ex, ey) = batches(&corpus, &mut rng, driver.batch, driver.seq_len);
+    let loss_after_save = driver.eval(&ex, &ey).expect("eval");
+
+    // Fresh driver (different init seed) must diverge from the trained one,
+    // then match exactly after restoring the checkpoint.
+    let mut fresh = TrainDriver::new(&rt, 0.9).expect("driver2");
+    let loss_fresh = fresh.eval(&ex, &ey).expect("eval fresh");
+    assert!((loss_fresh - loss_after_save).abs() > 1e-4, "fresh driver should differ");
+    let step = fresh.load_checkpoint(&path).expect("load");
+    assert_eq!(step, 3);
+    let loss_restored = fresh.eval(&ex, &ey).expect("eval restored");
+    assert!(
+        (loss_restored - loss_after_save).abs() < 1e-6,
+        "restored {loss_restored} vs saved {loss_after_save}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
