@@ -48,6 +48,7 @@ fn run_load(
         sketch_p: 8,
         max_iters: 60,
         tol: 1e-7,
+        gemm_threads: 1,
     };
     // Mixed shapes: square covariance blocks (InvSqrt) and tall gradient
     // panels (Polar) — same-shape jobs batch together, mixed shapes don't.
@@ -133,6 +134,7 @@ fn main() {
         sketch_p: 8,
         max_iters: 40,
         tol: 1e-7,
+        gemm_threads: 1,
     };
     let svc = Service::start(cfg, Backend::Prism5, seed);
     let mut opt = AsyncShampoo::new(0.05, 1e-6, 5, &svc);

@@ -1,14 +1,17 @@
-//! L3 substrate roofline: blocked GEMM / SYRK throughput across sizes.
+//! L3 substrate roofline: blocked GEMM / SYRK throughput across sizes,
+//! sequential vs the row-panel parallel engine.
 //!
 //! Everything PRISM does is GEMM-dominated, so the linalg substrate's
 //! GFLOP/s sets the scale of every other benchmark. We track it here to (a)
-//! catch regressions and (b) anchor the §Perf roofline analysis in
-//! EXPERIMENTS.md (single-core f64; target = practical scalar/auto-vec
-//! roofline, not BLAS).
+//! catch regressions, (b) anchor the §Perf roofline analysis in
+//! EXPERIMENTS.md, and (c) verify the parallel engine's scaling — the
+//! acceptance bar is ≥ 2× at n = 512 with 4 threads over the sequential
+//! kernel, with bit-identical output (asserted below on every shape).
 
 use prism::benchkit::{banner, Bench, SeriesWriter, Table};
 use prism::configfmt::Value;
-use prism::linalg::gemm::{matmul, matmul_at_b, syrk_at_a};
+use prism::linalg::gemm::{matmul_at_b, GemmEngine};
+use prism::linalg::Mat;
 use prism::randmat;
 use prism::rng::Rng;
 
@@ -18,25 +21,54 @@ fn main() {
     let mut rng = Rng::seed_from(42);
     let mut series = SeriesWriter::create("bench_out/perf_gemm.jsonl");
 
-    let mut t = Table::new(&["op", "n", "median ms", "GFLOP/s"]);
+    let seq = GemmEngine::sequential();
+    let par = GemmEngine::with_threads(4);
+
+    let mut t = Table::new(&["op", "n", "median ms", "GFLOP/s", "4T ms", "4T GFLOP/s", "speedup"]);
+    let mut speedup_512 = 0.0;
     for n in [64usize, 128, 256, 512] {
         let a = randmat::gaussian(&mut rng, n, n);
         let b = randmat::gaussian(&mut rng, n, n);
         let flops = 2.0 * (n as f64).powi(3);
 
-        let s = bench.run(&format!("matmul_{n}"), || {
-            std::hint::black_box(matmul(&a, &b));
+        // Determinism check before timing: the parallel engine must be
+        // bit-identical to the sequential kernel.
+        assert_eq!(
+            seq.matmul(&a, &b).as_slice(),
+            par.matmul(&a, &b).as_slice(),
+            "parallel engine output differs at n={n}"
+        );
+
+        // Allocation-free timing loop: `matmul_into` on a reused buffer.
+        let mut c = Mat::zeros(n, n);
+        let s_seq = bench.run(&format!("matmul_{n}"), || {
+            seq.matmul_into(&mut c, &a, &b);
+            std::hint::black_box(&c);
         });
+        let mut c2 = Mat::zeros(n, n);
+        let s_par = bench.run(&format!("matmul_{n}_4t"), || {
+            par.matmul_into(&mut c2, &a, &b);
+            std::hint::black_box(&c2);
+        });
+        let speedup = s_seq.median_s() / s_par.median_s();
+        if n == 512 {
+            speedup_512 = speedup;
+        }
         t.row(&[
             "C = A·B".into(),
             n.to_string(),
-            format!("{:.2}", s.median_s() * 1e3),
-            format!("{:.2}", flops / s.median_s() / 1e9),
+            format!("{:.2}", s_seq.median_s() * 1e3),
+            format!("{:.2}", flops / s_seq.median_s() / 1e9),
+            format!("{:.2}", s_par.median_s() * 1e3),
+            format!("{:.2}", flops / s_par.median_s() / 1e9),
+            format!("{:.2}x", speedup),
         ]);
         series.point(&[
             ("op", Value::Str("matmul".into())),
             ("n", Value::Int(n as i64)),
-            ("gflops", Value::Float(flops / s.median_s() / 1e9)),
+            ("gflops", Value::Float(flops / s_seq.median_s() / 1e9)),
+            ("gflops_4t", Value::Float(flops / s_par.median_s() / 1e9)),
+            ("speedup_4t", Value::Float(speedup)),
         ]);
 
         let s = bench.run(&format!("matmul_at_b_{n}"), || {
@@ -47,26 +79,43 @@ fn main() {
             n.to_string(),
             format!("{:.2}", s.median_s() * 1e3),
             format!("{:.2}", flops / s.median_s() / 1e9),
+            "-".into(),
+            "-".into(),
+            "-".into(),
         ]);
 
         // SYRK does half the FLOPs of a full GEMM (symmetric result).
-        let s = bench.run(&format!("syrk_{n}"), || {
-            std::hint::black_box(syrk_at_a(&a));
+        let mut cs = Mat::zeros(n, n);
+        let s_syrk = bench.run(&format!("syrk_{n}"), || {
+            seq.syrk_at_a_into(&mut cs, &a);
+            std::hint::black_box(&cs);
+        });
+        let mut cs2 = Mat::zeros(n, n);
+        let s_syrk_par = bench.run(&format!("syrk_{n}_4t"), || {
+            par.syrk_at_a_into(&mut cs2, &a);
+            std::hint::black_box(&cs2);
         });
         t.row(&[
             "C = Aᵀ·A".into(),
             n.to_string(),
-            format!("{:.2}", s.median_s() * 1e3),
-            format!("{:.2}", flops / s.median_s() / 1e9),
+            format!("{:.2}", s_syrk.median_s() * 1e3),
+            format!("{:.2}", flops / s_syrk.median_s() / 1e9),
+            format!("{:.2}", s_syrk_par.median_s() * 1e3),
+            format!("{:.2}", flops / s_syrk_par.median_s() / 1e9),
+            format!("{:.2}x", s_syrk.median_s() / s_syrk_par.median_s()),
         ]);
         series.point(&[
             ("op", Value::Str("syrk".into())),
             ("n", Value::Int(n as i64)),
-            ("gflops", Value::Float(flops / s.median_s() / 1e9)),
+            ("gflops", Value::Float(flops / s_syrk.median_s() / 1e9)),
+            ("gflops_4t", Value::Float(flops / s_syrk_par.median_s() / 1e9)),
+            ("speedup_4t", Value::Float(s_syrk.median_s() / s_syrk_par.median_s())),
         ]);
     }
     t.print();
     println!("\n(GFLOP/s computed on the full 2n³ count; syrk exploits symmetry so its");
-    println!("effective rate appears ~2x the work it actually does.)");
+    println!("effective rate appears ~2x the work it actually does. 4T columns run the");
+    println!("same kernel over 4 row panels — output is asserted bit-identical.)");
+    println!("n=512 matmul speedup with 4 threads: {speedup_512:.2}x (target ≥ 2x)");
     println!("series → bench_out/perf_gemm.jsonl");
 }

@@ -5,7 +5,7 @@
 //! mapping for the *upper* edge; unlike PRISM it does nothing for σ_min,
 //! which is why it helps less on spectra with tiny singular values.
 
-use crate::linalg::gemm::{matmul, syrk_at_a};
+use crate::linalg::gemm::{global_engine, GemmEngine};
 use crate::linalg::norms::spectral_norm_est;
 use crate::linalg::Mat;
 use crate::prism::driver::{IterationLog, RunRecorder, StopRule};
@@ -34,13 +34,16 @@ pub fn polar_cans(a: &Mat, opts: &CansOpts, rng: &mut Rng) -> (Mat, IterationLog
         let (q, log) = polar_cans(&a.transpose(), opts, rng);
         return (q.transpose(), log);
     }
+    let eng = global_engine();
     let mut x = a.scaled(1.0 / a.fro_norm().max(1e-300));
-    let residual = |x: &Mat| -> Mat {
-        let mut r = syrk_at_a(x).scaled(-1.0);
-        r.add_diag(1.0);
-        r
-    };
-    let mut r = residual(&x);
+
+    // Ping-pong buffers — allocation-free after iteration 0.
+    let mut xn = Mat::zeros(m, n);
+    let mut r = Mat::zeros(n, n);
+    let mut r2 = Mat::zeros(n, n);
+    let mut g = Mat::zeros(n, n);
+
+    residual_into(&eng, &mut r, &x);
     let mut rec = RunRecorder::start(r.fro_norm());
     for k in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
@@ -51,15 +54,17 @@ pub fn polar_cans(a: &Mat, opts: &CansOpts, rng: &mut Rng) -> (Mat, IterationLog
             // slightly inflated to stay below the NS convergence bound).
             let smax = spectral_norm_est(&x, opts.norm_iters, rng).max(1e-300);
             x.scale(1.0 / (smax * 1.0001));
-            r = residual(&x);
+            residual_into(&eng, &mut r, &x);
         }
         // Classical degree-5 step: X ← X(I + R/2 + 3R²/8).
-        let r2 = matmul(&r, &r);
-        let mut g = r.scaled(0.5);
+        eng.matmul_into(&mut r2, &r, &r);
+        g.copy_from(&r);
+        g.scale(0.5);
         g.axpy(0.375, &r2);
         g.add_diag(1.0);
-        x = matmul(&x, &g);
-        r = residual(&x);
+        eng.matmul_into(&mut xn, &x, &g);
+        std::mem::swap(&mut x, &mut xn);
+        residual_into(&eng, &mut r, &x);
         let rn = r.fro_norm();
         rec.step(0.375, rn);
         if !rn.is_finite() || rn > opts.stop.diverge_above {
@@ -67,6 +72,13 @@ pub fn polar_cans(a: &Mat, opts: &CansOpts, rng: &mut Rng) -> (Mat, IterationLog
         }
     }
     (x, rec.finish(&opts.stop))
+}
+
+/// `R = I − XᵀX` into a reused buffer.
+fn residual_into(eng: &GemmEngine, r: &mut Mat, x: &Mat) {
+    eng.syrk_at_a_into(r, x);
+    r.scale(-1.0);
+    r.add_diag(1.0);
 }
 
 #[cfg(test)]

@@ -13,7 +13,7 @@
 //! reproduction must (and does) exhibit.
 
 use crate::linalg::decomp::lu_solve;
-use crate::linalg::gemm::{matmul, syrk_at_a};
+use crate::linalg::gemm::{global_engine, matmul, syrk_at_a, GemmEngine};
 use crate::linalg::Mat;
 use crate::prism::driver::{IterationLog, RunRecorder, StopRule};
 use crate::util::{Error, Result};
@@ -199,27 +199,40 @@ impl PolarExpress {
         matmul(x, &q)
     }
 
-    /// Full polar run: `X₀ = A/‖A‖_F`, iterate stages until `stop`.
+    /// Full polar run: `X₀ = A/‖A‖_F`, iterate stages until `stop`. The
+    /// loop holds ping-pong buffers and runs allocation-free after
+    /// iteration 0, like the PRISM engines it is benchmarked against.
     pub fn polar(&self, a: &Mat, stop: &StopRule) -> (Mat, IterationLog) {
         let (m, n) = a.shape();
         if m < n {
             let (q, log) = self.polar(&a.transpose(), stop);
             return (q.transpose(), log);
         }
+        let eng = global_engine();
         let mut x = a.scaled(1.0 / a.fro_norm().max(1e-300));
-        let res = |x: &Mat| {
-            let mut r = syrk_at_a(x).scaled(-1.0);
-            r.add_diag(1.0);
-            r.fro_norm()
-        };
-        let mut rec = RunRecorder::start(res(&x));
+        let mut xn = Mat::zeros(m, n);
+        let mut g = Mat::zeros(n, n);
+        let mut g2 = Mat::zeros(n, n);
+        let mut q = Mat::zeros(n, n);
+        let mut rbuf = Mat::zeros(n, n);
+
+        let mut rn = polar_res(&eng, &mut rbuf, &x);
+        let mut rec = RunRecorder::start(rn);
         for k in 0..stop.max_iters {
-            if res(&x) < stop.tol {
+            if rn < stop.tol {
                 break;
             }
-            x = self.apply(&x, k);
-            let rn = res(&x);
-            rec.step(self.stage(k).a, rn);
+            let p = self.stage(k);
+            eng.syrk_at_a_into(&mut g, &x);
+            eng.matmul_into(&mut g2, &g, &g);
+            q.copy_from(&g);
+            q.scale(p.b);
+            q.axpy(p.c, &g2);
+            q.add_diag(p.a);
+            eng.matmul_into(&mut xn, &x, &q);
+            std::mem::swap(&mut x, &mut xn);
+            rn = polar_res(&eng, &mut rbuf, &x);
+            rec.step(p.a, rn);
             if !rn.is_finite() || rn > stop.diverge_above {
                 break;
             }
@@ -231,28 +244,36 @@ impl PolarExpress {
     /// `X₀ = Ā`, `Y₀ = I`, `M = Y X`, `X ← X q(M)`, `Y ← q(M) Y` with
     /// `q(t) = aI + b t + c t²`; `X → Ā^{1/2}`, `Y → Ā^{-1/2}`.
     pub fn sqrt_coupled(&self, a: &Mat, stop: &StopRule) -> (Mat, Mat, IterationLog) {
+        let eng = global_engine();
+        let n = a.rows();
         let c = a.fro_norm().max(1e-300);
         let mut x = a.scaled(1.0 / c);
-        let mut y = Mat::eye(a.rows());
-        let res = |x: &Mat, y: &Mat| {
-            let mut r = matmul(x, y).scaled(-1.0);
-            r.add_diag(1.0);
-            r.fro_norm()
-        };
-        let mut rec = RunRecorder::start(res(&x, &y));
+        let mut y = Mat::eye(n);
+        let mut xn = Mat::zeros(n, n);
+        let mut yn = Mat::zeros(n, n);
+        let mut m = Mat::zeros(n, n);
+        let mut m2 = Mat::zeros(n, n);
+        let mut q = Mat::zeros(n, n);
+        let mut rbuf = Mat::zeros(n, n);
+
+        let mut rn = coupled_res(&eng, &mut rbuf, &x, &y);
+        let mut rec = RunRecorder::start(rn);
         for k in 0..stop.max_iters {
-            if res(&x, &y) < stop.tol {
+            if rn < stop.tol {
                 break;
             }
             let p = self.stage(k);
-            let m = matmul(&y, &x);
-            let m2 = matmul(&m, &m);
-            let mut q = m.scaled(p.b);
+            eng.matmul_into(&mut m, &y, &x);
+            eng.matmul_into(&mut m2, &m, &m);
+            q.copy_from(&m);
+            q.scale(p.b);
             q.axpy(p.c, &m2);
             q.add_diag(p.a);
-            x = matmul(&x, &q);
-            y = matmul(&q, &y);
-            let rn = res(&x, &y);
+            eng.matmul_into(&mut xn, &x, &q);
+            std::mem::swap(&mut x, &mut xn);
+            eng.matmul_into(&mut yn, &q, &y);
+            std::mem::swap(&mut y, &mut yn);
+            rn = coupled_res(&eng, &mut rbuf, &x, &y);
             rec.step(p.a, rn);
             if !rn.is_finite() || rn > stop.diverge_above {
                 break;
@@ -261,6 +282,22 @@ impl PolarExpress {
         let sc = c.sqrt();
         (x.scaled(sc), y.scaled(1.0 / sc), rec.finish(stop))
     }
+}
+
+/// `‖I − XᵀX‖_F` into a reused residual buffer.
+fn polar_res(eng: &GemmEngine, rbuf: &mut Mat, x: &Mat) -> f64 {
+    eng.syrk_at_a_into(rbuf, x);
+    rbuf.scale(-1.0);
+    rbuf.add_diag(1.0);
+    rbuf.fro_norm()
+}
+
+/// `‖I − X Y‖_F` into a reused residual buffer.
+fn coupled_res(eng: &GemmEngine, rbuf: &mut Mat, x: &Mat, y: &Mat) -> f64 {
+    eng.matmul_into(rbuf, x, y);
+    rbuf.scale(-1.0);
+    rbuf.add_diag(1.0);
+    rbuf.fro_norm()
 }
 
 #[cfg(test)]

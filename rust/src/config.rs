@@ -128,6 +128,14 @@ pub struct ServiceConfig {
     pub sketch_p: usize,
     pub max_iters: usize,
     pub tol: f64,
+    /// GEMM pool size shared by the engines (`--threads` on the CLI,
+    /// `service.gemm_threads` in TOML). Any value produces bit-identical
+    /// results, so this is purely a speed knob. Values > 1 are installed
+    /// process-globally by [`crate::coordinator::service::Service::start`];
+    /// the default 1 means "unspecified" and leaves any pool already
+    /// installed (e.g. via `--threads`) untouched — call
+    /// [`crate::linalg::gemm::set_global_threads`]`(1)` to force sequential.
+    pub gemm_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -139,6 +147,7 @@ impl Default for ServiceConfig {
             sketch_p: 8,
             max_iters: 30,
             tol: 1e-7,
+            gemm_threads: 1,
         }
     }
 }
@@ -155,6 +164,7 @@ impl ServiceConfig {
         c.sketch_p = geti("service.sketch_p", c.sketch_p);
         c.max_iters = geti("service.max_iters", c.max_iters);
         c.tol = v.get_path("service.tol").and_then(|x| x.as_float()).unwrap_or(c.tol);
+        c.gemm_threads = geti("service.gemm_threads", c.gemm_threads);
         c
     }
 }
@@ -202,6 +212,14 @@ backend = "prism3"
         let c = ServiceConfig::from_value(&v);
         assert_eq!(c.workers, 3);
         assert_eq!(c.max_batch, 8);
+        assert_eq!(c.gemm_threads, 1);
+    }
+
+    #[test]
+    fn service_config_gemm_threads_parses() {
+        let v = parse_toml("[service]\ngemm_threads = 4\n").unwrap();
+        let c = ServiceConfig::from_value(&v);
+        assert_eq!(c.gemm_threads, 4);
     }
 }
 

@@ -258,6 +258,7 @@ mod tests {
             sketch_p: 8,
             max_iters: 40,
             tol: 1e-7,
+            gemm_threads: 1,
         };
         Service::start(cfg, Backend::Prism5, 9)
     }

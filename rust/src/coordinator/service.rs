@@ -85,8 +85,15 @@ pub struct Service {
 
 impl Service {
     /// Start the service with `cfg.workers` threads using `backend` for the
-    /// matrix functions.
+    /// matrix functions. When `cfg.gemm_threads > 1` this also installs the
+    /// process-global GEMM pool the engines run their panels on (results are
+    /// bit-identical at any pool size, so this only changes speed). The
+    /// default value 1 means "unspecified" and deliberately does NOT tear
+    /// down a pool installed earlier (e.g. by the CLI's `--threads`).
     pub fn start(cfg: ServiceConfig, backend: Backend, seed: u64) -> Service {
+        if cfg.gemm_threads > 1 {
+            crate::linalg::gemm::set_global_threads(cfg.gemm_threads);
+        }
         let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_capacity);
         let rx = Arc::new(Mutex::new(rx));
         let (res_tx, res_rx): (Sender<JobResult>, Receiver<JobResult>) =
@@ -276,6 +283,7 @@ mod tests {
             sketch_p: 8,
             max_iters: 40,
             tol: 1e-7,
+            gemm_threads: 1,
         }
     }
 

@@ -10,6 +10,12 @@
 //! 1. **Substrates** (everything built from scratch — the build environment is
 //!    fully offline): [`rng`], [`threads`], [`cli`], [`configfmt`], [`ptest`],
 //!    [`metrics`], [`benchkit`], [`linalg`], [`randmat`], [`workload`].
+//!    The GEMM layer ([`linalg::gemm`]) is a parallel, workspace-reusing
+//!    engine: row-panel dispatch over the [`threads::ThreadPool`] with
+//!    bit-identical results at every pool size (`--threads` on the CLI,
+//!    `service.gemm_threads` in configs), `*_into` out-parameter kernels,
+//!    and a [`linalg::gemm::Workspace`] buffer pool so every iteration
+//!    engine below runs allocation-free after its first iteration.
 //! 2. **PRISM core**: [`sketch`] (oblivious subspace embeddings + sketched
 //!    power traces), [`polyfit`] (constrained minimisation of the degree-4
 //!    fitting objective `m(α)`), [`coeffs`] (closed-form coefficient

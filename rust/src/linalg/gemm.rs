@@ -1,133 +1,400 @@
-//! Blocked GEMM and symmetric rank-k kernels.
+//! Parallel, workspace-reusing GEMM and symmetric rank-k engine.
 //!
-//! This is the O(n³) hot path of every Newton–Schulz-like iteration, so it is
-//! the module the §Perf pass optimises. The current kernel (post-§Perf, see
-//! EXPERIMENTS.md) is a **broadcast-FMA** design:
+//! This is the O(n³) hot path of every Newton–Schulz-like iteration. The
+//! layer has three pieces:
 //!
-//! * loop order (jc, kc, i, t, j) whose innermost loop is a dependence-free
-//!   `c[j] += a·b[j]` stream — auto-vectorised to AVX-512 FMAs (dot-product
-//!   reductions cannot be, without float-reassociation licence);
-//! * a 4-row micro-tile so each B panel row read from L2 feeds four C rows;
-//! * SYRK via rank-1 updates on the upper triangle, mirrored at the end.
+//! 1. **The kernel** — a sequential **broadcast-FMA** design (post-§Perf,
+//!    see EXPERIMENTS.md): loop order (jc, kc, i, t, j) whose innermost loop
+//!    is a dependence-free `c[j] += a·b[j]` stream, auto-vectorised to
+//!    AVX-512 FMAs; a 4-row micro-tile so each B panel row read from L2
+//!    feeds four C rows; SYRK via rank-1 updates on the upper triangle,
+//!    mirrored at the end.
+//! 2. **The engine** — [`GemmEngine`] partitions the rows of C into
+//!    contiguous panels and runs the kernel on each panel over the crate's
+//!    [`crate::threads::ThreadPool`] (via [`crate::threads::scoped`]). Each
+//!    output row's floating-point operation sequence is identical in every
+//!    partition (the micro-tile variants interleave rows but never reorder a
+//!    single row's accumulation), so results are **bit-identical for every
+//!    pool size** — pool-of-8 output equals sequential output exactly. With
+//!    `threads() == 1` (the default global engine) no pool is touched and
+//!    the call degrades to the plain sequential kernel.
+//! 3. **The workspace API** — `*_into` variants write into caller-owned
+//!    output buffers (reshaped in place, allocation reused), and
+//!    [`Workspace`] is a small buffer pool for the transposes/temporaries a
+//!    call needs. The iteration engines hold ping-pong buffers for their
+//!    whole run, so after iteration 0 the hot loop performs **zero heap
+//!    allocation**.
 //!
-//! The previous packed dot-product kernel is kept as `gemm_packed` for the
-//! ablation and as an independent implementation for cross-checking tests.
+//! The previous packed dot-product kernel is kept as [`gemm_packed`]: it is
+//! the §Perf ablation subject and the independent reference implementation
+//! the conformance property tests cross-check against.
 //!
 //! GEMM-call counting: the PRISM paper reports costs in units of GEMMs; the
-//! engines count their GEMM invocations through [`GemmCounter`].
+//! engines count their invocations through [`GemmCounter`]. Counts are kept
+//! both process-globally and per-thread; [`GemmScope`] reads the per-thread
+//! counters so concurrent runs (service workers, parallel tests) never see
+//! each other's calls. SYRK records its true n²k flop count, not the 2mnk
+//! of a general GEMM.
 
 use super::Mat;
+use crate::threads::{scoped, ThreadPool};
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
-/// Global GEMM counter (process-wide, cheap relaxed atomics). The iteration
-/// logs snapshot it before/after so per-algorithm GEMM counts can be reported
-/// exactly as the paper does.
+/// Process-wide GEMM counters (cheap relaxed atomics) plus thread-local
+/// shadows for race-free per-run accounting.
 static GEMM_CALLS: AtomicU64 = AtomicU64::new(0);
 static GEMM_FLOPS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TL_CALLS: Cell<u64> = Cell::new(0);
+    static TL_FLOPS: Cell<u64> = Cell::new(0);
+}
 
 pub struct GemmCounter;
 
 impl GemmCounter {
+    /// Process-wide call count (all threads).
     pub fn calls() -> u64 {
         GEMM_CALLS.load(Ordering::Relaxed)
     }
+    /// Process-wide flop count (all threads).
     pub fn flops() -> u64 {
         GEMM_FLOPS.load(Ordering::Relaxed)
     }
+    fn add(calls: u64, flops: u64) {
+        GEMM_CALLS.fetch_add(calls, Ordering::Relaxed);
+        GEMM_FLOPS.fetch_add(flops, Ordering::Relaxed);
+        TL_CALLS.with(|c| c.set(c.get() + calls));
+        TL_FLOPS.with(|c| c.set(c.get() + flops));
+    }
+    /// One general GEMM: 2mnk flops.
     fn record(m: usize, n: usize, k: usize) {
-        GEMM_CALLS.fetch_add(1, Ordering::Relaxed);
-        GEMM_FLOPS.fetch_add((2 * m * n * k) as u64, Ordering::Relaxed);
+        Self::add(1, 2 * (m as u64) * (n as u64) * (k as u64));
+    }
+    /// One SYRK: the symmetric result costs n²k flops (half a GEMM).
+    fn record_syrk(n: usize, k: usize) {
+        Self::add(1, (n as u64) * (n as u64) * (k as u64));
     }
 }
 
-const MC: usize = 64; // rows of A per block
-const KC: usize = 256; // shared dim per block
+/// Scoped snapshot of the **current thread's** GEMM counters. Deltas are
+/// immune to concurrent GEMMs on other threads (recording happens on the
+/// calling thread even when the kernel itself runs on the pool), so
+/// iteration logs and parallel tests never race on the globals.
+pub struct GemmScope {
+    calls0: u64,
+    flops0: u64,
+}
+
+impl GemmScope {
+    pub fn begin() -> GemmScope {
+        GemmScope { calls0: TL_CALLS.with(|c| c.get()), flops0: TL_FLOPS.with(|c| c.get()) }
+    }
+    /// GEMM calls made by this thread since [`GemmScope::begin`].
+    pub fn calls(&self) -> u64 {
+        TL_CALLS.with(|c| c.get()) - self.calls0
+    }
+    /// Flops recorded by this thread since [`GemmScope::begin`].
+    pub fn flops(&self) -> u64 {
+        TL_FLOPS.with(|c| c.get()) - self.flops0
+    }
+}
+
+// ───────────────────────── workspace ──────────────────────────
+
+/// A small pool of reusable matrix buffers. `take` pops (and reshapes) a
+/// previously returned buffer or allocates a fresh one; `put` returns a
+/// buffer for reuse. Contents of a taken buffer are unspecified — every
+/// `*_into` kernel overwrites its full output.
+#[derive(Default)]
+pub struct Workspace {
+    free: Vec<Mat>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { free: Vec::new() }
+    }
+
+    /// Take a rows×cols buffer (contents unspecified).
+    pub fn take(&mut self, rows: usize, cols: usize) -> Mat {
+        match self.free.pop() {
+            Some(mut m) => {
+                m.reset(rows, cols);
+                m
+            }
+            None => Mat::zeros(rows, cols),
+        }
+    }
+
+    /// Return a buffer to the pool for later reuse.
+    pub fn put(&mut self, m: Mat) {
+        self.free.push(m);
+    }
+
+    /// Number of idle buffers held.
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
+    }
+}
+
+// ───────────────────────── engine ──────────────────────────
+
+/// Minimum C rows per parallel panel — below this the dispatch overhead
+/// beats the kernel time, so small products stay sequential.
+const MIN_PANEL_ROWS: usize = 16;
+
+/// A GEMM execution context: either purely sequential (`pool == None`) or
+/// row-panel parallel over a fixed [`ThreadPool`]. Cloning shares the pool.
+///
+/// Determinism: results are bit-identical for every thread count (see the
+/// module docs); the engine exists so callers can *choose* their
+/// parallelism, not so they can get different answers.
+#[derive(Clone, Default)]
+pub struct GemmEngine {
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl GemmEngine {
+    /// Sequential engine (no pool, no dispatch overhead).
+    pub fn sequential() -> GemmEngine {
+        GemmEngine { pool: None }
+    }
+
+    /// Engine with its own pool of `threads` workers (1 → sequential).
+    pub fn with_threads(threads: usize) -> GemmEngine {
+        if threads <= 1 {
+            GemmEngine::sequential()
+        } else {
+            GemmEngine { pool: Some(Arc::new(ThreadPool::new(threads))) }
+        }
+    }
+
+    /// Worker count (1 for the sequential engine).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.size()).unwrap_or(1)
+    }
+
+    /// `C = A·B` into a caller-owned buffer (reshaped in place).
+    pub fn matmul_into(&self, c: &mut Mat, a: &Mat, b: &Mat) {
+        assert_eq!(a.cols(), b.rows(), "matmul: {:?} x {:?}", a.shape(), b.shape());
+        let (m, k) = a.shape();
+        let n = b.cols();
+        GemmCounter::record(m, n, k);
+        c.reset(m, n);
+        c.fill_with(0.0);
+        self.gemm(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
+    }
+
+    /// `C = Aᵀ·B` into `c` (one O(mk) transpose through `ws`).
+    pub fn matmul_at_b_into(&self, c: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
+        assert_eq!(a.rows(), b.rows(), "matmul_at_b: {:?}ᵀ x {:?}", a.shape(), b.shape());
+        let mut at = ws.take(a.cols(), a.rows());
+        a.transpose_into(&mut at);
+        let (m, k) = at.shape();
+        let n = b.cols();
+        GemmCounter::record(m, n, k);
+        c.reset(m, n);
+        c.fill_with(0.0);
+        self.gemm(at.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
+        ws.put(at);
+    }
+
+    /// `C = A·Bᵀ` into `c` (one O(nk) transpose through `ws`).
+    pub fn matmul_a_bt_into(&self, c: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
+        assert_eq!(a.cols(), b.cols(), "matmul_a_bt: {:?} x {:?}ᵀ", a.shape(), b.shape());
+        let mut bt = ws.take(b.cols(), b.rows());
+        b.transpose_into(&mut bt);
+        let (m, k) = a.shape();
+        let n = bt.cols();
+        GemmCounter::record(m, n, k);
+        c.reset(m, n);
+        c.fill_with(0.0);
+        self.gemm(a.as_slice(), bt.as_slice(), c.as_mut_slice(), m, n, k);
+        ws.put(bt);
+    }
+
+    /// Symmetric rank-k `C = AᵀA` into `c` (exactly symmetric by
+    /// construction; records n²k flops).
+    pub fn syrk_at_a_into(&self, c: &mut Mat, a: &Mat) {
+        let (k, n) = a.shape();
+        GemmCounter::record_syrk(n, k);
+        c.reset(n, n);
+        c.fill_with(0.0);
+        self.syrk_upper(a, c.as_mut_slice(), n);
+        mirror_upper(c);
+    }
+
+    /// Symmetric rank-k `C = A·Aᵀ` into `c` (via the rank-1 kernel on Aᵀ's
+    /// rows; one O(mk) transpose through `ws` keeps the hot loop contiguous).
+    pub fn syrk_a_at_into(&self, c: &mut Mat, a: &Mat, ws: &mut Workspace) {
+        let (m, k) = a.shape();
+        GemmCounter::record_syrk(m, k);
+        let mut at = ws.take(k, m);
+        a.transpose_into(&mut at);
+        c.reset(m, m);
+        c.fill_with(0.0);
+        self.syrk_upper(&at, c.as_mut_slice(), m);
+        mirror_upper(c);
+        ws.put(at);
+    }
+
+    /// Allocating convenience forms of the `*_into` calls.
+    pub fn matmul(&self, a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(0, 0);
+        self.matmul_into(&mut c, a, b);
+        c
+    }
+    pub fn matmul_at_b(&self, a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(0, 0);
+        self.matmul_at_b_into(&mut c, a, b, &mut Workspace::new());
+        c
+    }
+    pub fn matmul_a_bt(&self, a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(0, 0);
+        self.matmul_a_bt_into(&mut c, a, b, &mut Workspace::new());
+        c
+    }
+    pub fn syrk_at_a(&self, a: &Mat) -> Mat {
+        let mut c = Mat::zeros(0, 0);
+        self.syrk_at_a_into(&mut c, a);
+        c
+    }
+    pub fn syrk_a_at(&self, a: &Mat) -> Mat {
+        let mut c = Mat::zeros(0, 0);
+        self.syrk_a_at_into(&mut c, a, &mut Workspace::new());
+        c
+    }
+
+    /// `C += A·B`, dispatched over row panels of C. Each panel is a plain
+    /// sequential kernel run over its own rows of A and C, so the partition
+    /// (and hence the thread count) cannot change any output bit.
+    fn gemm(&self, a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        // Floor division: never split below MIN_PANEL_ROWS rows per panel
+        // (a sub-minimum panel pays dispatch overhead for no kernel time).
+        let blocks = self.threads().min(m / MIN_PANEL_ROWS).max(1);
+        match &self.pool {
+            Some(pool) if blocks > 1 => {
+                let rows_per = (m + blocks - 1) / blocks;
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = c
+                    .chunks_mut(rows_per * n)
+                    .enumerate()
+                    .map(|(bi, cpanel)| {
+                        let i0 = bi * rows_per;
+                        let rows = cpanel.len() / n;
+                        let apanel = &a[i0 * k..(i0 + rows) * k];
+                        Box::new(move || gemm_broadcast(apanel, b, cpanel, rows, n, k))
+                            as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                scoped(pool, jobs);
+            }
+            _ => gemm_broadcast(a, b, c, m, n, k),
+        }
+    }
+
+    /// Upper-triangle SYRK (`c[i, i..] += Σ_t a[t,i]·a[t, i..]`), dispatched
+    /// over row panels of C with the same determinism argument as `gemm`.
+    fn syrk_upper(&self, a: &Mat, c: &mut [f64], n: usize) {
+        if n == 0 {
+            return;
+        }
+        let blocks = self.threads().min(n / MIN_PANEL_ROWS).max(1);
+        match &self.pool {
+            Some(pool) if blocks > 1 => {
+                let rows_per = (n + blocks - 1) / blocks;
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = c
+                    .chunks_mut(rows_per * n)
+                    .enumerate()
+                    .map(|(bi, cpanel)| {
+                        let i0 = bi * rows_per;
+                        let rows = cpanel.len() / n;
+                        Box::new(move || syrk_rank1_rows(a, cpanel, i0, i0 + rows, n))
+                            as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                scoped(pool, jobs);
+            }
+            _ => syrk_rank1_rows(a, c, 0, n, n),
+        }
+    }
+}
+
+// ───────────────────────── global engine ──────────────────────────
+
+/// The process-global engine behind the free functions below. Defaults to
+/// sequential; [`set_global_threads`] (driven by `--threads` /
+/// `service.gemm_threads`) installs a shared pool.
+static GLOBAL_ENGINE: Mutex<Option<GemmEngine>> = Mutex::new(None);
+
+/// Snapshot of the process-global engine. Engines grab this once per run and
+/// reuse it, so the mutex is off the per-GEMM path.
+pub fn global_engine() -> GemmEngine {
+    GLOBAL_ENGINE.lock().unwrap().clone().unwrap_or_default()
+}
+
+/// Install a process-global GEMM pool of `threads` workers (1 tears the pool
+/// down). Safe to call at any time: results are bit-identical for every
+/// thread count, so in-flight callers at the old size stay consistent.
+pub fn set_global_threads(threads: usize) {
+    let mut g = GLOBAL_ENGINE.lock().unwrap();
+    let current = g.as_ref().map(|e| e.threads()).unwrap_or(1);
+    if current != threads.max(1) {
+        *g = Some(GemmEngine::with_threads(threads));
+    }
+}
+
+/// Current global GEMM thread count.
+pub fn global_threads() -> usize {
+    GLOBAL_ENGINE.lock().unwrap().as_ref().map(|e| e.threads()).unwrap_or(1)
+}
+
+// ─────────────── free-function API (global engine) ───────────────
 
 /// `C = A · B`.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.rows(), "matmul: {:?} x {:?}", a.shape(), b.shape());
-    let (m, k) = a.shape();
-    let n = b.cols();
-    GemmCounter::record(m, n, k);
-    let mut c = Mat::zeros(m, n);
-    gemm_broadcast(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
-    c
+    global_engine().matmul(a, b)
 }
 
 /// `C = Aᵀ · B` (one O(mk) transpose, then the broadcast kernel).
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows(), b.rows(), "matmul_at_b: {:?}ᵀ x {:?}", a.shape(), b.shape());
-    let at = a.transpose();
-    let (m, k) = at.shape();
-    let n = b.cols();
-    GemmCounter::record(m, n, k);
-    let mut c = Mat::zeros(m, n);
-    gemm_broadcast(at.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
-    c
+    global_engine().matmul_at_b(a, b)
 }
 
 /// `C = A · Bᵀ` (one O(nk) transpose, then the broadcast kernel).
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: {:?} x {:?}ᵀ", a.shape(), b.shape());
-    let (m, k) = a.shape();
-    let n = b.rows();
-    GemmCounter::record(m, n, k);
-    let bn = b.transpose();
-    let mut c = Mat::zeros(m, n);
-    gemm_broadcast(a.as_slice(), bn.as_slice(), c.as_mut_slice(), m, n, k);
-    c
+    global_engine().matmul_a_bt(a, b)
 }
 
 /// Symmetric rank-k: `C = Aᵀ A` (exactly symmetric by construction).
-///
-/// Rank-1 accumulation over rows of A: for each row `r`,
-/// `C[i, i..] += r[i]·r[i..]` — the inner stream is contiguous and
-/// dependence-free, so it vectorises like the GEMM kernel (§Perf change 3;
-/// the old dot-product triangle ran at half the broadcast kernel's rate).
 pub fn syrk_at_a(a: &Mat) -> Mat {
-    let (k, n) = a.shape();
-    GemmCounter::record(n, n, k);
-    let mut c = Mat::zeros(n, n);
-    {
-        let cs = c.as_mut_slice();
-        for t in 0..k {
-            let row = a.row(t);
-            for i in 0..n {
-                let av = row[i];
-                let (ci, ri) = (&mut cs[i * n + i..(i + 1) * n], &row[i..]);
-                for (cv, rv) in ci.iter_mut().zip(ri) {
-                    *cv += av * rv;
-                }
-            }
-        }
-    }
-    mirror_upper(&mut c);
-    c
+    global_engine().syrk_at_a(a)
 }
 
-/// Symmetric rank-k: `C = A Aᵀ` (via the same rank-1 kernel on Aᵀ's rows,
-/// i.e. A's columns — one O(mk) transpose keeps the hot loop contiguous).
+/// Symmetric rank-k: `C = A Aᵀ`.
 pub fn syrk_a_at(a: &Mat) -> Mat {
-    let (m, k) = a.shape();
-    GemmCounter::record(m, m, k);
-    let at = a.transpose(); // k x m
-    let mut c = Mat::zeros(m, m);
-    {
-        let cs = c.as_mut_slice();
-        for t in 0..k {
-            let row = at.row(t);
-            for i in 0..m {
-                let av = row[i];
-                let (ci, ri) = (&mut cs[i * m + i..(i + 1) * m], &row[i..]);
-                for (cv, rv) in ci.iter_mut().zip(ri) {
-                    *cv += av * rv;
-                }
-            }
-        }
-    }
-    mirror_upper(&mut c);
-    c
+    global_engine().syrk_a_at(a)
 }
+
+/// `C = A·B` into a reused buffer, on the global engine.
+pub fn matmul_into(c: &mut Mat, a: &Mat, b: &Mat) {
+    global_engine().matmul_into(c, a, b)
+}
+
+/// `C = AᵀA` into a reused buffer, on the global engine.
+pub fn syrk_at_a_into(c: &mut Mat, a: &Mat) {
+    global_engine().syrk_at_a_into(c, a)
+}
+
+// ───────────────────────── kernels ──────────────────────────
 
 /// Copy the upper triangle into the lower one (exact symmetry).
 fn mirror_upper(c: &mut Mat) {
@@ -135,6 +402,25 @@ fn mirror_upper(c: &mut Mat) {
     for i in 1..n {
         for j in 0..i {
             c[(i, j)] = c[(j, i)];
+        }
+    }
+}
+
+/// Rank-1 SYRK rows: for C rows `i0..i1` (passed as the slice `c_rows`),
+/// accumulate `C[i, i..] += a[t, i] · a[t, i..]` over every row t of `a`.
+/// The inner stream is contiguous and dependence-free, so it vectorises
+/// like the GEMM kernel (§Perf change 3).
+fn syrk_rank1_rows(a: &Mat, c_rows: &mut [f64], i0: usize, i1: usize, n: usize) {
+    let k = a.rows();
+    for t in 0..k {
+        let row = a.row(t);
+        for i in i0..i1 {
+            let av = row[i];
+            let off = (i - i0) * n;
+            let ci = &mut c_rows[off + i..off + n];
+            for (cv, rv) in ci.iter_mut().zip(&row[i..]) {
+                *cv += av * rv;
+            }
         }
     }
 }
@@ -147,6 +433,11 @@ fn mirror_upper(c: &mut Mat) {
 /// float-reassociation licence). The (KC2 × NC) B panel stays hot in L2
 /// across the whole i sweep, and each C row segment stays in L1 across the
 /// t loop. §Perf change 2: 1.6–2.4x over the packed dot-product kernel.
+///
+/// Per-row determinism invariant (what makes the parallel dispatch exact):
+/// for any fixed output row, the 4-/2-/1-row micro-tile variants all execute
+/// the same `(j0, k0, t, j)` accumulation sequence — tiles interleave rows
+/// but never reorder within one. Callers may therefore split `m` anywhere.
 fn gemm_broadcast(a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
     const NC: usize = 512; // B-panel columns (NC·KC2·8B = 512 KiB ≤ L2)
     const KC2: usize = 256; // B-panel rows
@@ -217,10 +508,13 @@ fn gemm_broadcast(a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: us
     }
 }
 
+const MC: usize = 64; // rows of A per block (packed reference kernel)
+const KC: usize = 256; // shared dim per block (packed reference kernel)
+
 /// Former core kernel (packed dot-product): kept for the §Perf ablation and
-/// as a second implementation the property tests cross-check against.
-#[allow(dead_code)]
-pub(crate) fn gemm_packed(a: &[f64], bt: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+/// as the independent reference implementation the conformance property
+/// tests cross-check against. `bt` is B **pre-transposed** (n × k row-major).
+pub fn gemm_packed(a: &[f64], bt: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
     for i0 in (0..m).step_by(MC) {
         let i1 = (i0 + MC).min(m);
         for k0 in (0..k).step_by(KC) {
@@ -347,5 +641,83 @@ mod tests {
         let _ = matmul(&a, &a);
         assert!(GemmCounter::calls() > before);
         assert!(GemmCounter::flops() > 0);
+    }
+
+    #[test]
+    fn into_calls_record_once_and_syrk_counts_half() {
+        let mut rng = Rng::seed_from(6);
+        let a = Mat::gaussian(&mut rng, 6, 4, 1.0);
+        let b = Mat::gaussian(&mut rng, 4, 3, 1.0);
+        let eng = GemmEngine::sequential();
+        let mut c = Mat::zeros(0, 0);
+
+        let scope = GemmScope::begin();
+        eng.matmul_into(&mut c, &a, &b);
+        assert_eq!(scope.calls(), 1);
+        assert_eq!(scope.flops(), 2 * 6 * 3 * 4);
+
+        let scope = GemmScope::begin();
+        eng.syrk_at_a_into(&mut c, &a); // AᵀA: n=4, k=6 → n²k flops
+        assert_eq!(scope.calls(), 1);
+        assert_eq!(scope.flops(), 4 * 4 * 6);
+
+        let scope = GemmScope::begin();
+        let mut ws = Workspace::new();
+        eng.syrk_a_at_into(&mut c, &a, &mut ws); // AAᵀ: m=6, k=4 → m²k flops
+        assert_eq!(scope.calls(), 1);
+        assert_eq!(scope.flops(), 6 * 6 * 4);
+    }
+
+    #[test]
+    fn into_reuses_buffers_across_shapes() {
+        let mut rng = Rng::seed_from(7);
+        let eng = GemmEngine::sequential();
+        let mut c = Mat::zeros(0, 0);
+        for &(m, k, n) in &[(5, 7, 3), (2, 2, 2), (9, 4, 11)] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            eng.matmul_into(&mut c, &a, &b);
+            assert!(close(&c, &matmul_naive(&a, &b), 1e-10), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn parallel_engine_bit_identical_to_sequential() {
+        let mut rng = Rng::seed_from(8);
+        let seq = GemmEngine::sequential();
+        let par = GemmEngine::with_threads(4);
+        // Sizes straddling the MIN_PANEL_ROWS threshold and ragged splits.
+        for &(m, k, n) in &[(1, 3, 2), (16, 16, 16), (33, 17, 29), (70, 40, 55)] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            let c_seq = seq.matmul(&a, &b);
+            let c_par = par.matmul(&a, &b);
+            assert_eq!(c_seq, c_par, "matmul {m}x{k}x{n} not bit-identical");
+            let s_seq = seq.syrk_at_a(&a);
+            let s_par = par.syrk_at_a(&a);
+            assert_eq!(s_seq, s_par, "syrk {m}x{k} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn workspace_recycles() {
+        let mut ws = Workspace::new();
+        let m1 = ws.take(4, 4);
+        assert!(ws.is_empty());
+        ws.put(m1);
+        assert_eq!(ws.len(), 1);
+        let m2 = ws.take(2, 6); // reshaped reuse
+        assert_eq!(m2.shape(), (2, 6));
+        assert!(ws.is_empty());
+    }
+
+    #[test]
+    fn global_threads_roundtrip() {
+        // Default is sequential; setting 1 keeps it sequential. (Setting >1
+        // here would leak a pool into unrelated unit tests' timing, so the
+        // parallel paths are covered by the local-engine tests above.)
+        set_global_threads(1);
+        assert_eq!(global_threads(), 1);
+        assert_eq!(global_engine().threads(), 1);
     }
 }

@@ -7,7 +7,11 @@
 //!
 //! The layout is deliberately simple (one contiguous `Vec<f64>` per matrix);
 //! the performance-critical kernels (GEMM and friends) live in [`gemm`] and
-//! are written to be auto-vectorisable.
+//! are written to be auto-vectorisable. The GEMM layer is a configurable
+//! engine ([`gemm::GemmEngine`]): row-panel parallel over the crate's
+//! [`crate::threads::ThreadPool`], with `*_into` out-parameter variants and a
+//! [`gemm::Workspace`] buffer pool so iterative engines run allocation-free
+//! in their hot loops.
 
 pub mod gemm;
 pub mod decomp;
@@ -15,7 +19,7 @@ pub mod eigen;
 pub mod svd;
 pub mod norms;
 
-pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_at_a, syrk_a_at};
+pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_at_a, syrk_a_at, GemmEngine, Workspace};
 pub use decomp::{cholesky, cholesky_inverse, lu_inverse, lu_solve, qr_householder};
 pub use eigen::{symmetric_eigen, SymEigen};
 pub use norms::{spectral_norm_est, spectral_norm_sym};
@@ -120,18 +124,48 @@ impl Mat {
     /// Out-of-place transpose.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into `dst`, reshaping it to cols×rows and reusing its
+    /// allocation — the workspace-friendly form of [`Mat::transpose`].
+    pub fn transpose_into(&self, dst: &mut Mat) {
+        dst.reset(self.cols, self.rows);
         // Blocked to keep both sides cache-friendly for large matrices.
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
                 for i in ib..(ib + B).min(self.rows) {
                     for j in jb..(jb + B).min(self.cols) {
-                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                        dst.data[j * self.rows + i] = self.data[i * self.cols + j];
                     }
                 }
             }
         }
-        t
+    }
+
+    /// Reshape in place to rows×cols, reusing the existing allocation when
+    /// it is large enough. Contents are **unspecified** afterwards — this is
+    /// the buffer-recycling primitive behind [`gemm::Workspace`]; every
+    /// `*_into` kernel overwrites the full output before reading it.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Set every entry to `v` (no allocation).
+    pub fn fill_with(&mut self, v: f64) {
+        for x in self.data.iter_mut() {
+            *x = v;
+        }
+    }
+
+    /// Become a copy of `src` (shape and contents), reusing the allocation.
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.reset(src.rows, src.cols);
+        self.data.copy_from_slice(&src.data);
     }
 
     /// Elementwise in-place scale.
@@ -357,6 +391,32 @@ mod tests {
         let a = Mat::gaussian(&mut rng, 37, 53, 1.0);
         let att = a.transpose().transpose();
         assert_eq!(a, att);
+    }
+
+    #[test]
+    fn transpose_into_reuses_buffer() {
+        let mut rng = Rng::seed_from(7);
+        let a = Mat::gaussian(&mut rng, 9, 5, 1.0);
+        let mut dst = Mat::zeros(1, 1);
+        a.transpose_into(&mut dst);
+        assert_eq!(dst.shape(), (5, 9));
+        assert_eq!(dst, a.transpose());
+        // And again with a bigger source into the now-larger buffer.
+        let b = Mat::gaussian(&mut rng, 3, 4, 1.0);
+        b.transpose_into(&mut dst);
+        assert_eq!(dst, b.transpose());
+    }
+
+    #[test]
+    fn reset_fill_copy_from() {
+        let mut m = Mat::zeros(2, 3);
+        m.reset(4, 2);
+        assert_eq!(m.shape(), (4, 2));
+        m.fill_with(1.5);
+        assert_eq!(m[(3, 1)], 1.5);
+        let src = Mat::eye(3);
+        m.copy_from(&src);
+        assert_eq!(m, src);
     }
 
     #[test]

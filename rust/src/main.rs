@@ -55,6 +55,8 @@ SUBCOMMANDS:
   info      artifact manifest + PJRT platform
 
 COMMON FLAGS:
+  --threads T      GEMM pool size (default 1 = sequential kernels;
+                   any T gives bit-identical results — speed knob only)
   --n / --m        matrix shape             (default 256 / 128)
   --spectrum S     gaussian|logspace|htmp|wishart|mp (default gaussian)
   --smin X         smallest singular value for logspace (default 1e-6)
@@ -70,6 +72,19 @@ COMMON FLAGS:
 
 fn main() {
     let args = Args::from_env(true);
+    // Install the global GEMM pool before any engine runs. Results are
+    // bit-identical at every pool size, so this only changes wall time.
+    match args.get_usize("threads", 1) {
+        Ok(t) => {
+            if t > 1 {
+                prism::linalg::gemm::set_global_threads(t);
+            }
+        }
+        Err(e) => {
+            eprintln!("prism: error: {e}");
+            std::process::exit(1);
+        }
+    }
     let code = match args.subcommand.as_deref() {
         Some("polar") => cmd_polar(&args),
         Some("sqrt") => cmd_sqrt(&args),
@@ -288,6 +303,7 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
         sketch_p: args.get_usize("sketch", 8)?,
         max_iters: args.get_usize("iters", 60)?,
         tol: args.get_f64("tol", 1e-7)?,
+        gemm_threads: args.get_usize("threads", 1)?,
     };
     let backend = Backend::parse(&args.get_string("backend", "prism5"))?;
     let kappa = args.get_f64("kappa", 0.5)?;

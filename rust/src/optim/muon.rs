@@ -69,8 +69,8 @@ impl Optimizer for Muon {
                     let (m, n) = o.shape();
                     let scale = 0.2 * (m.max(n) as f64).sqrt();
                     if self.weight_decay > 0.0 {
-                        let w = p.w.clone();
-                        p.w.axpy(-self.lr * self.weight_decay, &w);
+                        // Decoupled decay, W ← (1 − ηλ)W — no clone needed.
+                        p.w.scale(1.0 - self.lr * self.weight_decay);
                     }
                     p.w.axpy(-self.lr * scale, &o);
                 }

@@ -10,7 +10,7 @@
 use super::matfn::InvRootBackend;
 use super::Optimizer;
 use crate::config::Backend;
-use crate::linalg::gemm::{matmul, syrk_a_at, syrk_at_a};
+use crate::linalg::gemm::{global_engine, Workspace};
 use crate::linalg::Mat;
 use crate::nn::{Param, ParamKind};
 use crate::rng::Rng;
@@ -34,6 +34,9 @@ pub struct Shampoo {
     rng: Rng,
     states: Vec<Option<LayerState>>,
     bufs: Vec<Mat>,
+    /// Reused GEMM temporaries: the per-step accumulator/update products run
+    /// allocation-free after the first step.
+    scratch: Workspace,
     t: usize,
 }
 
@@ -56,6 +59,7 @@ impl Shampoo {
             rng: Rng::seed_from(seed ^ 0x5368616D), // "Sham"
             states: Vec::new(),
             bufs: Vec::new(),
+            scratch: Workspace::new(),
             t: 0,
         }
     }
@@ -74,59 +78,71 @@ impl Optimizer for Shampoo {
             self.states = params.iter().map(|_| None).collect();
             self.bufs = params.iter().map(|p| Mat::zeros(p.w.rows(), p.w.cols())).collect();
         }
+        let eng = global_engine();
         let refresh = self.t % self.precond_interval == 0;
         self.t += 1;
         for (i, p) in params.iter_mut().enumerate() {
-            // Momentum on the raw gradient.
-            let buf = &mut self.bufs[i];
-            buf.scale(self.momentum);
-            buf.axpy(1.0, &p.g);
-            let g = buf.clone();
-            let update = match p.kind {
-                ParamKind::Matrix if p.w.rows() > 1 && p.w.cols() > 1 => {
-                    let (m, n) = g.shape();
-                    let st = self.states[i].get_or_insert_with(|| LayerState {
-                        l: Mat::zeros(m, m),
-                        r: Mat::zeros(n, n),
-                        l_inv: Mat::eye(m),
-                        r_inv: Mat::eye(n),
-                        initialized: false,
-                    });
-                    // Accumulate second-moment factors.
-                    st.l.axpy(1.0, &syrk_a_at(&g));
-                    st.r.axpy(1.0, &syrk_at_a(&g));
-                    if refresh || !st.initialized {
-                        // Normalise accumulators so damping is scale-free.
-                        let lt = st.l.trace().max(1e-30) / m as f64;
-                        let rt = st.r.trace().max(1e-30) / n as f64;
-                        let ln = st.l.scaled(1.0 / lt);
-                        let rn = st.r.scaled(1.0 / rt);
-                        st.l_inv = self
-                            .backend
-                            .inv_sqrt(&ln, self.damping, &mut self.rng)
-                            .scaled(1.0 / lt.sqrt());
-                        st.r_inv = self
-                            .backend
-                            .inv_sqrt(&rn, self.damping, &mut self.rng)
-                            .scaled(1.0 / rt.sqrt());
-                        st.initialized = true;
-                    }
-                    let mut u = matmul(&matmul(&st.l_inv, &g), &st.r_inv);
-                    if self.grafting {
-                        // SGD grafting: give the preconditioned direction the
-                        // raw gradient's Frobenius norm.
-                        let un = u.fro_norm().max(1e-30);
-                        u.scale(g.fro_norm() / un);
-                    }
-                    u
-                }
-                _ => g, // vectors: plain momentum-SGD
-            };
+            // Momentum on the raw gradient (in place — no clone).
+            self.bufs[i].scale(self.momentum);
+            self.bufs[i].axpy(1.0, &p.g);
+            let is_matrix =
+                matches!(p.kind, ParamKind::Matrix) && p.w.rows() > 1 && p.w.cols() > 1;
             if self.weight_decay > 0.0 {
-                let w = p.w.clone();
-                p.w.axpy(-self.lr * self.weight_decay, &w);
+                // Decoupled decay, W ← (1 − ηλ)W — no clone needed.
+                p.w.scale(1.0 - self.lr * self.weight_decay);
             }
-            p.w.axpy(-self.lr, &update);
+            if is_matrix {
+                let (m, n) = self.bufs[i].shape();
+                let st = self.states[i].get_or_insert_with(|| LayerState {
+                    l: Mat::zeros(m, m),
+                    r: Mat::zeros(n, n),
+                    l_inv: Mat::eye(m),
+                    r_inv: Mat::eye(n),
+                    initialized: false,
+                });
+                // Accumulate second-moment factors through scratch buffers.
+                let mut tmp = self.scratch.take(m, m);
+                eng.syrk_a_at_into(&mut tmp, &self.bufs[i], &mut self.scratch);
+                st.l.axpy(1.0, &tmp);
+                eng.syrk_at_a_into(&mut tmp, &self.bufs[i]);
+                st.r.axpy(1.0, &tmp);
+                self.scratch.put(tmp);
+                if refresh || !st.initialized {
+                    // Normalise accumulators so damping is scale-free (the
+                    // refresh path is cold — every `precond_interval` steps —
+                    // so the backend's allocations are acceptable).
+                    let lt = st.l.trace().max(1e-30) / m as f64;
+                    let rt = st.r.trace().max(1e-30) / n as f64;
+                    let ln = st.l.scaled(1.0 / lt);
+                    let rn = st.r.scaled(1.0 / rt);
+                    st.l_inv = self
+                        .backend
+                        .inv_sqrt(&ln, self.damping, &mut self.rng)
+                        .scaled(1.0 / lt.sqrt());
+                    st.r_inv = self
+                        .backend
+                        .inv_sqrt(&rn, self.damping, &mut self.rng)
+                        .scaled(1.0 / rt.sqrt());
+                    st.initialized = true;
+                }
+                // U = L^{-1/2} G R^{-1/2}.
+                let mut lg = self.scratch.take(m, n);
+                eng.matmul_into(&mut lg, &st.l_inv, &self.bufs[i]);
+                let mut u = self.scratch.take(m, n);
+                eng.matmul_into(&mut u, &lg, &st.r_inv);
+                self.scratch.put(lg);
+                if self.grafting {
+                    // SGD grafting: give the preconditioned direction the
+                    // raw gradient's Frobenius norm.
+                    let un = u.fro_norm().max(1e-30);
+                    u.scale(self.bufs[i].fro_norm() / un);
+                }
+                p.w.axpy(-self.lr, &u);
+                self.scratch.put(u);
+            } else {
+                // Vectors: plain momentum-SGD.
+                p.w.axpy(-self.lr, &self.bufs[i]);
+            }
         }
     }
 

@@ -7,7 +7,7 @@
 
 use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
 use crate::coeffs::chebyshev_coeffs;
-use crate::linalg::gemm::matmul;
+use crate::linalg::gemm::global_engine;
 use crate::linalg::Mat;
 use crate::polyfit::minimize_on_interval;
 use crate::rng::Rng;
@@ -67,17 +67,23 @@ fn select_alpha(r: &Mat, mode: AlphaMode, rng: &mut Rng) -> f64 {
 /// Compute `A⁻¹` for a full-rank square `A` (not necessarily symmetric).
 pub fn chebyshev_inverse(a: &Mat, opts: &ChebyshevOpts, rng: &mut Rng) -> ChebyshevResult {
     assert!(a.is_square());
+    let eng = global_engine();
+    let n = a.rows();
     let c = a.fro_norm().max(1e-300);
     let abar = a.scaled(1.0 / c);
     let mut x = abar.transpose();
 
-    let residual = |x: &Mat| -> Mat {
-        let mut r = matmul(&abar, x).scaled(-1.0);
-        r.add_diag(1.0);
-        r
-    };
+    // Ping-pong buffers — the loop is allocation-free after iteration 0.
+    let mut xn = Mat::zeros(n, n);
+    let mut r = Mat::zeros(n, n);
+    let mut r_sym = Mat::zeros(n, n);
+    let mut r2 = Mat::zeros(n, n);
+    let mut g = Mat::zeros(n, n);
 
-    let mut r = residual(&x);
+    eng.matmul_into(&mut r, &abar, &x);
+    r.scale(-1.0);
+    r.add_diag(1.0);
+
     let mut rec = RunRecorder::start(r.fro_norm());
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
@@ -86,16 +92,19 @@ pub fn chebyshev_inverse(a: &Mat, opts: &ChebyshevOpts, rng: &mut Rng) -> Chebys
         // NOTE: R here is symmetric iff A is normal; the α fit uses the
         // symmetric part's traces which is exact for the symmetric inputs
         // the paper covers and a controlled heuristic otherwise.
-        let mut r_sym = r.clone();
+        r_sym.copy_from(&r);
         r_sym.symmetrize();
         let alpha = select_alpha(&r_sym, opts.alpha, rng);
-        let r2 = matmul(&r, &r);
+        eng.matmul_into(&mut r2, &r, &r);
         // G = I + R + αR²
-        let mut g = r.clone();
+        g.copy_from(&r);
         g.axpy(alpha, &r2);
         g.add_diag(1.0);
-        x = matmul(&x, &g);
-        r = residual(&x);
+        eng.matmul_into(&mut xn, &x, &g);
+        std::mem::swap(&mut x, &mut xn);
+        eng.matmul_into(&mut r, &abar, &x);
+        r.scale(-1.0);
+        r.add_diag(1.0);
         let rn = r.fro_norm();
         rec.step(alpha, rn);
         if !rn.is_finite() || rn > opts.stop.diverge_above {
@@ -108,6 +117,7 @@ pub fn chebyshev_inverse(a: &Mat, opts: &ChebyshevOpts, rng: &mut Rng) -> Chebys
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm::matmul;
     use crate::randmat;
 
     #[test]

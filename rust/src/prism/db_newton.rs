@@ -14,9 +14,9 @@
 use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
 use crate::coeffs::db_newton_coeffs;
 use crate::linalg::decomp::cholesky_inverse;
+use crate::linalg::gemm::global_engine;
 use crate::linalg::Mat;
 use crate::polyfit::minimize_quartic;
-use crate::linalg::gemm::matmul;
 
 #[derive(Debug, Clone)]
 pub struct DbNewtonOpts {
@@ -52,21 +52,25 @@ const ALPHA_HI: f64 = 0.95;
 pub fn db_newton_prism(a: &Mat, opts: &DbNewtonOpts, rng_unused: &mut crate::rng::Rng) -> DbNewtonResult {
     let _ = rng_unused; // signature symmetry with the other engines
     assert!(a.is_square());
+    let eng = global_engine();
+    let n = a.rows();
     let c = a.fro_norm().max(1e-300);
     let mut m = a.scaled(1.0 / c);
     m.symmetrize();
     let mut x = m.clone();
-    let mut y = Mat::eye(a.rows());
+    let mut y = Mat::eye(n);
 
-    let res_norm = |m: &Mat| -> f64 {
-        let mut r = m.scaled(-1.0);
-        r.add_diag(1.0);
-        r.fro_norm()
-    };
+    // Ping-pong buffers; only the Cholesky inverse still allocates (it is a
+    // decomposition, not a GEMM, and M changes every iteration).
+    let mut xm = Mat::zeros(n, n);
+    let mut ym = Mat::zeros(n, n);
+    let mut xn = Mat::zeros(n, n);
+    let mut yn = Mat::zeros(n, n);
+    let mut mn = Mat::zeros(n, n);
 
-    let mut rec = RunRecorder::start(res_norm(&m));
+    let mut rec = RunRecorder::start(eye_minus_fro(&m));
     for _ in 0..opts.stop.max_iters {
-        if res_norm(&m) < opts.stop.tol {
+        if eye_minus_fro(&m) < opts.stop.tol {
             break;
         }
         // M⁻¹ via Cholesky (M stays SPD along the iteration).
@@ -90,21 +94,24 @@ pub fn db_newton_prism(a: &Mat, opts: &DbNewtonOpts, rng_unused: &mut crate::rng
         };
         let one_m = 1.0 - alpha;
         // X ← (1−α)X + α X M⁻¹ ; Y likewise.
-        let xm = matmul(&x, &m_inv);
-        let ym = matmul(&y, &m_inv);
-        let mut xn = x.scaled(one_m);
+        eng.matmul_into(&mut xm, &x, &m_inv);
+        eng.matmul_into(&mut ym, &y, &m_inv);
+        xn.copy_from(&x);
+        xn.scale(one_m);
         xn.axpy(alpha, &xm);
-        let mut yn = y.scaled(one_m);
+        std::mem::swap(&mut x, &mut xn);
+        yn.copy_from(&y);
+        yn.scale(one_m);
         yn.axpy(alpha, &ym);
-        x = xn;
-        y = yn;
+        std::mem::swap(&mut y, &mut yn);
         // M ← 2α(1−α)I + (1−α)²M + α²M⁻¹
-        let mut mn = m.scaled(one_m * one_m);
+        mn.copy_from(&m);
+        mn.scale(one_m * one_m);
         mn.axpy(alpha * alpha, &m_inv);
         mn.add_diag(2.0 * alpha * one_m);
         mn.symmetrize();
-        m = mn;
-        let rn = res_norm(&m);
+        std::mem::swap(&mut m, &mut mn);
+        let rn = eye_minus_fro(&m);
         rec.step(alpha, rn);
         if !rn.is_finite() || rn > opts.stop.diverge_above {
             break;
@@ -118,9 +125,25 @@ pub fn db_newton_prism(a: &Mat, opts: &DbNewtonOpts, rng_unused: &mut crate::rng
     }
 }
 
+/// `‖I − M‖_F` without materialising the residual (same summation order as
+/// `(−M + I).fro_norm()`, so the value is bit-identical to the old path).
+fn eye_minus_fro(m: &Mat) -> f64 {
+    let n = m.rows();
+    let mut acc = 0.0;
+    for i in 0..n {
+        let row = m.row(i);
+        for (j, &v) in row.iter().enumerate() {
+            let e = if i == j { 1.0 - v } else { -v };
+            acc += e * e;
+        }
+    }
+    acc.sqrt()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm::matmul;
     use crate::randmat;
     use crate::rng::Rng;
 

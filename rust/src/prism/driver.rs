@@ -1,6 +1,6 @@
 //! Shared iteration bookkeeping: logs, stopping rules, α-selection modes.
 
-use crate::linalg::gemm::GemmCounter;
+use crate::linalg::gemm::GemmScope;
 use crate::util::Stopwatch;
 
 /// How the update coefficient α_k is chosen each iteration.
@@ -100,10 +100,12 @@ impl IterationLog {
     }
 }
 
-/// Records GEMM-count + time around an iteration loop.
+/// Records GEMM-count + time around an iteration loop. GEMMs are counted
+/// through a thread-local [`GemmScope`], so runs on concurrent service
+/// workers never inflate each other's `gemm_calls`.
 pub struct RunRecorder {
     sw: Stopwatch,
-    gemm_start: u64,
+    gemm: GemmScope,
     pub log: IterationLog,
 }
 
@@ -111,7 +113,7 @@ impl RunRecorder {
     pub fn start(initial_residual: f64) -> Self {
         let mut log = IterationLog::default();
         log.residuals.push(initial_residual);
-        RunRecorder { sw: Stopwatch::start(), gemm_start: GemmCounter::calls(), log }
+        RunRecorder { sw: Stopwatch::start(), gemm: GemmScope::begin(), log }
     }
 
     /// Record one completed iteration.
@@ -123,7 +125,7 @@ impl RunRecorder {
 
     pub fn finish(mut self, stop: &StopRule) -> IterationLog {
         self.log.wall_s = self.sw.elapsed_s();
-        self.log.gemm_calls = GemmCounter::calls() - self.gemm_start;
+        self.log.gemm_calls = self.gemm.calls();
         let fin = self.log.final_residual();
         self.log.converged = fin < stop.tol;
         self.log.diverged = !fin.is_finite() || fin > stop.diverge_above;

@@ -63,6 +63,31 @@ pub fn apply_update(x: &Mat, r: &Mat, r2: Option<&Mat>, d: usize, alpha: f64) ->
     crate::linalg::gemm::matmul(x, &g)
 }
 
+/// Write `g_d(R; α)` into a caller-owned buffer (reshaped in place) — the
+/// allocation-free form the iteration engines use in their hot loops. For
+/// d ≤ 2 no heap allocation happens at all; the general-degree path still
+/// allocates its explicit R-powers (it is the ablation-only exotic case).
+pub fn update_poly_into(g: &mut Mat, r: &Mat, r2: Option<&Mat>, d: usize, alpha: f64) {
+    match d {
+        1 => {
+            g.copy_from(r);
+            g.scale(alpha);
+            g.add_diag(1.0);
+        }
+        2 => {
+            let r2 = r2.expect("d=2 needs R²");
+            g.copy_from(r);
+            g.scale(0.5);
+            g.axpy(alpha, r2);
+            g.add_diag(1.0);
+        }
+        _ => {
+            let full = update_poly(r, r2, d, alpha);
+            g.copy_from(&full);
+        }
+    }
+}
+
 /// The polynomial matrix `g_d(R; α)` itself (for coupled iterations that
 /// also need `g · Y`).
 pub fn update_poly(r: &Mat, r2: Option<&Mat>, d: usize, alpha: f64) -> Mat {
@@ -155,6 +180,24 @@ mod tests {
         let r = Mat::zeros(5, 5);
         let out = apply_update(&x, &r, None, 1, 0.7);
         assert!(out.sub(&x).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_poly_into_matches_allocating() {
+        let mut rng = Rng::seed_from(6);
+        let r = {
+            let g = Mat::gaussian(&mut rng, 5, 5, 0.3);
+            let mut s = g.add(&g.transpose());
+            s.scale(0.5);
+            s
+        };
+        let r2 = matmul(&r, &r);
+        let mut g = Mat::zeros(0, 0);
+        for (d, r2opt, alpha) in [(1, None, 0.8), (2, Some(&r2), 1.2)] {
+            update_poly_into(&mut g, &r, r2opt, d, alpha);
+            let want = update_poly(&r, r2opt, d, alpha);
+            assert!(g.sub(&want).max_abs() < 1e-15, "d={d}");
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
 use crate::coeffs::inverse_newton_coeffs;
-use crate::linalg::gemm::matmul;
+use crate::linalg::gemm::global_engine;
 use crate::linalg::Mat;
 use crate::polyfit::minimize_on_interval;
 use crate::rng::Rng;
@@ -80,16 +80,28 @@ pub fn inv_root_prism(a: &Mat, opts: &InvRootOpts, rng: &mut Rng) -> InvRootResu
     assert!(a.is_square());
     let p = opts.p;
     assert!(p >= 1);
+    let eng = global_engine();
     let n = a.rows();
     let c = (2.0 * a.fro_norm() / (p as f64 + 1.0)).powf(1.0 / p as f64);
     let mut x = Mat::eye(n).scaled(1.0 / c);
     let mut m = a.scaled(1.0 / c.powi(p as i32));
 
-    let mut r = {
-        let mut r = m.scaled(-1.0);
-        r.add_diag(1.0);
-        r
+    // Ping-pong buffers — the loop is allocation-free after iteration 0.
+    let mut xn = Mat::zeros(n, n);
+    let mut mn = Mat::zeros(n, n);
+    let mut g = Mat::zeros(n, n);
+    let mut r = Mat::zeros(n, n);
+    // G-power scratch, only needed for p ≥ 2.
+    let (mut gp, mut gpn) = if p > 1 {
+        (Mat::zeros(n, n), Mat::zeros(n, n))
+    } else {
+        (Mat::zeros(0, 0), Mat::zeros(0, 0))
     };
+
+    r.copy_from(&m);
+    r.scale(-1.0);
+    r.add_diag(1.0);
+
     let mut rec = RunRecorder::start(r.fro_norm());
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
@@ -97,21 +109,27 @@ pub fn inv_root_prism(a: &Mat, opts: &InvRootOpts, rng: &mut Rng) -> InvRootResu
         }
         let alpha = select_alpha(&r, p, opts.alpha, rng);
         // G = I + αR
-        let mut g = r.scaled(alpha);
+        g.copy_from(&r);
+        g.scale(alpha);
         g.add_diag(1.0);
-        x = matmul(&x, &g);
+        eng.matmul_into(&mut xn, &x, &g);
+        std::mem::swap(&mut x, &mut xn);
         // M ← Gᵖ M  (p-1 extra multiplications; p is tiny)
-        let mut gp = g.clone();
-        for _ in 1..p {
-            gp = matmul(&gp, &g);
+        if p == 1 {
+            eng.matmul_into(&mut mn, &g, &m);
+        } else {
+            gp.copy_from(&g);
+            for _ in 1..p {
+                eng.matmul_into(&mut gpn, &gp, &g);
+                std::mem::swap(&mut gp, &mut gpn);
+            }
+            eng.matmul_into(&mut mn, &gp, &m);
         }
-        m = matmul(&gp, &m);
+        std::mem::swap(&mut m, &mut mn);
         m.symmetrize();
-        r = {
-            let mut r = m.scaled(-1.0);
-            r.add_diag(1.0);
-            r
-        };
+        r.copy_from(&m);
+        r.scale(-1.0);
+        r.add_diag(1.0);
         let rn = r.fro_norm();
         rec.step(alpha, rn);
         if !rn.is_finite() || rn > opts.stop.diverge_above {
@@ -125,6 +143,7 @@ pub fn inv_root_prism(a: &Mat, opts: &InvRootOpts, rng: &mut Rng) -> InvRootResu
 mod tests {
     use super::*;
     use crate::linalg::eigen::symmetric_eigen;
+    use crate::linalg::gemm::matmul;
     use crate::randmat;
 
     fn spd(rng: &mut Rng, n: usize, wmin: f64) -> Mat {

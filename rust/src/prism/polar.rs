@@ -7,8 +7,8 @@
 //! D.1, D.2.
 
 use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
-use super::fit::{select_alpha_ns, update_poly};
-use crate::linalg::gemm::{matmul, syrk_at_a};
+use super::fit::{select_alpha_ns, update_poly_into};
+use crate::linalg::gemm::{global_engine, syrk_at_a};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -62,27 +62,37 @@ pub fn polar_prism(a: &Mat, opts: &PolarOpts, rng: &mut Rng) -> PolarResult {
         let r = polar_prism(&a.transpose(), opts, rng);
         return PolarResult { q: r.q.transpose(), log: r.log, transposed: true };
     }
+    let eng = global_engine();
     let fro = a.fro_norm().max(1e-300);
     let mut x = a.scaled(1.0 / fro);
 
-    // R = I − XᵀX.
-    let residual = |x: &Mat| -> Mat {
-        let mut r = syrk_at_a(x).scaled(-1.0);
-        r.add_diag(1.0);
-        r
-    };
+    // Ping-pong buffers, allocated once: the loop below is allocation-free
+    // after iteration 0 (the α fit's O(np) sketch draw aside).
+    let mut xn = Mat::zeros(m, n);
+    let mut g = Mat::zeros(n, n);
+    let mut r = Mat::zeros(n, n);
+    let mut r2 = if opts.d == 2 { Some(Mat::zeros(n, n)) } else { None };
 
-    let mut r = residual(&x);
+    // R = I − XᵀX.
+    eng.syrk_at_a_into(&mut r, &x);
+    r.scale(-1.0);
+    r.add_diag(1.0);
+
     let mut rec = RunRecorder::start(r.fro_norm());
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
         }
         let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng);
-        let r2 = if opts.d == 2 { Some(matmul(&r, &r)) } else { None };
-        let g = update_poly(&r, r2.as_ref(), opts.d, alpha);
-        x = matmul(&x, &g);
-        r = residual(&x);
+        if let Some(r2buf) = r2.as_mut() {
+            eng.matmul_into(r2buf, &r, &r);
+        }
+        update_poly_into(&mut g, &r, r2.as_ref(), opts.d, alpha);
+        eng.matmul_into(&mut xn, &x, &g);
+        std::mem::swap(&mut x, &mut xn);
+        eng.syrk_at_a_into(&mut r, &x);
+        r.scale(-1.0);
+        r.add_diag(1.0);
         let rn = r.fro_norm();
         rec.step(alpha, rn);
         if !rn.is_finite() || rn > opts.stop.diverge_above {

@@ -4,8 +4,8 @@
 //! iteration is `X₀ = A`, `R_k = I − X_k²`, `X_{k+1} = X_k g_d(R_k; α_k)`.
 
 use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
-use super::fit::{select_alpha_ns, taylor_alpha, update_poly};
-use crate::linalg::gemm::matmul;
+use super::fit::{select_alpha_ns, taylor_alpha, update_poly_into};
+use crate::linalg::gemm::global_engine;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -38,27 +38,39 @@ pub struct SignResult {
 /// Compute `sign(A)` for square `A` with `A²` symmetric.
 pub fn sign_prism(a: &Mat, opts: &SignOpts, rng: &mut Rng) -> SignResult {
     assert!(a.is_square(), "sign: square input required");
+    let eng = global_engine();
+    let n = a.rows();
     let scale = if opts.normalize { a.fro_norm().max(1e-300) } else { 1.0 };
     let mut x = a.scaled(1.0 / scale);
 
-    let residual = |x: &Mat| -> Mat {
-        let mut r = matmul(x, x).scaled(-1.0);
-        r.add_diag(1.0);
-        r.symmetrize(); // A² symmetric ⇒ R symmetric; remove drift
-        r
-    };
+    // Ping-pong buffers — the loop is allocation-free after iteration 0.
+    let mut xn = Mat::zeros(n, n);
+    let mut g = Mat::zeros(n, n);
+    let mut r = Mat::zeros(n, n);
+    let mut r2 = if opts.d == 2 { Some(Mat::zeros(n, n)) } else { None };
 
-    let mut r = residual(&x);
+    // R = I − X²; A² symmetric ⇒ R symmetric; symmetrize removes drift.
+    eng.matmul_into(&mut r, &x, &x);
+    r.scale(-1.0);
+    r.add_diag(1.0);
+    r.symmetrize();
+
     let mut rec = RunRecorder::start(r.fro_norm());
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
         }
         let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng);
-        let r2 = if opts.d == 2 { Some(matmul(&r, &r)) } else { None };
-        let g = update_poly(&r, r2.as_ref(), opts.d, alpha);
-        x = matmul(&x, &g);
-        r = residual(&x);
+        if let Some(r2buf) = r2.as_mut() {
+            eng.matmul_into(r2buf, &r, &r);
+        }
+        update_poly_into(&mut g, &r, r2.as_ref(), opts.d, alpha);
+        eng.matmul_into(&mut xn, &x, &g);
+        std::mem::swap(&mut x, &mut xn);
+        eng.matmul_into(&mut r, &x, &x);
+        r.scale(-1.0);
+        r.add_diag(1.0);
+        r.symmetrize();
         let rn = r.fro_norm();
         rec.step(alpha, rn);
         if !rn.is_finite() || rn > opts.stop.diverge_above {
@@ -91,6 +103,7 @@ pub fn scalar_sequence(x0: f64, d: usize, alpha: Option<f64>, iters: usize) -> V
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm::matmul;
     use crate::randmat;
 
     #[test]

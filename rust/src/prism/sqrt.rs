@@ -10,8 +10,8 @@
 //! preconditioner roots.
 
 use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
-use super::fit::{select_alpha_ns, update_poly};
-use crate::linalg::gemm::matmul;
+use super::fit::{select_alpha_ns, update_poly_into};
+use crate::linalg::gemm::{global_engine, matmul};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -49,34 +49,47 @@ pub struct SqrtResult {
 /// Compute `A^{1/2}` and `A^{-1/2}` for symmetric positive-definite `A`.
 pub fn sqrt_prism(a: &Mat, opts: &SqrtOpts, rng: &mut Rng) -> SqrtResult {
     assert!(a.is_square(), "sqrt: square input required");
+    let eng = global_engine();
+    let n = a.rows();
     let c = a.fro_norm().max(1e-300);
     let mut x = a.scaled(1.0 / c);
-    let mut y = Mat::eye(a.rows());
+    let mut y = Mat::eye(n);
+
+    // Ping-pong buffers — the loop is allocation-free after iteration 0.
+    let mut xn = Mat::zeros(n, n);
+    let mut yn = Mat::zeros(n, n);
+    let mut g = Mat::zeros(n, n);
+    let mut r = Mat::zeros(n, n);
+    let mut r2 = if opts.d == 2 { Some(Mat::zeros(n, n)) } else { None };
 
     // NOTE: the residual is `I − Y X` (inverse-root times root), NOT
     // `I − X Y`. In exact arithmetic they are equal (X and Y are commuting
     // polynomials in Ā), but the Y-first pairing is the one Higham (1997)
     // proves numerically *stable*; the X-first pairing slowly amplifies
     // rounding errors after convergence (observed: ×40/iteration blow-up).
-    let residual = |x: &Mat, y: &Mat| -> Mat {
-        let mut r = matmul(y, x).scaled(-1.0);
-        r.add_diag(1.0);
-        r.symmetrize();
-        r
-    };
+    eng.matmul_into(&mut r, &y, &x);
+    r.scale(-1.0);
+    r.add_diag(1.0);
+    r.symmetrize();
 
-    let mut r = residual(&x, &y);
     let mut rec = RunRecorder::start(r.fro_norm());
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
         }
         let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng);
-        let r2 = if opts.d == 2 { Some(matmul(&r, &r)) } else { None };
-        let g = update_poly(&r, r2.as_ref(), opts.d, alpha);
-        x = matmul(&x, &g);
-        y = matmul(&g, &y);
-        r = residual(&x, &y);
+        if let Some(r2buf) = r2.as_mut() {
+            eng.matmul_into(r2buf, &r, &r);
+        }
+        update_poly_into(&mut g, &r, r2.as_ref(), opts.d, alpha);
+        eng.matmul_into(&mut xn, &x, &g);
+        std::mem::swap(&mut x, &mut xn);
+        eng.matmul_into(&mut yn, &g, &y);
+        std::mem::swap(&mut y, &mut yn);
+        eng.matmul_into(&mut r, &y, &x);
+        r.scale(-1.0);
+        r.add_diag(1.0);
+        r.symmetrize();
         let rn = r.fro_norm();
         rec.step(alpha, rn);
         if !rn.is_finite() || rn > opts.stop.diverge_above {

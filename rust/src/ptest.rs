@@ -73,6 +73,58 @@ impl Prop {
             }
         }
     }
+
+    /// Like [`run`], but the property takes a matrix dimension drawn
+    /// uniformly from `[lo, hi]`. On failure, smaller dimensions are retried
+    /// with the *same* case seed and the smallest still-failing dimension is
+    /// reported — per-case shrink, so matrix counterexamples arrive at
+    /// debuggable size.
+    pub fn run_dim(
+        self,
+        lo: usize,
+        hi: usize,
+        f: impl Fn(&mut Rng, usize) + std::panic::RefUnwindSafe,
+    ) {
+        assert!(1 <= lo && lo <= hi, "run_dim: bad range [{lo}, {hi}]");
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let dim = {
+                let mut rng = Rng::seed_from(case_seed);
+                lo + rng.below(hi - lo + 1)
+            };
+            let try_dim = |d: usize| -> Result<(), String> {
+                let result = std::panic::catch_unwind(|| {
+                    let mut rng = Rng::seed_from(case_seed);
+                    // Burn the dimension draw so the entry stream matches
+                    // what the original case saw.
+                    let _ = rng.below(hi - lo + 1);
+                    f(&mut rng, d);
+                });
+                match result {
+                    Ok(()) => Ok(()),
+                    Err(panic) => Err(panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<non-string panic>".to_string())),
+                }
+            };
+            if let Err(first_msg) = try_dim(dim) {
+                // Shrink: smallest dimension (same seed) that still fails.
+                let mut shrunk = (dim, first_msg);
+                for d in lo..dim {
+                    if let Err(msg) = try_dim(d) {
+                        shrunk = (d, msg);
+                        break;
+                    }
+                }
+                panic!(
+                    "property '{}' failed at case {} (replay seed {:#x}, dim {} shrunk to {}): {}",
+                    self.name, case, case_seed, dim, shrunk.0, shrunk.1
+                );
+            }
+        }
+    }
 }
 
 /// Generator helpers.
@@ -107,6 +159,28 @@ pub mod gens {
     /// One of the listed items.
     pub fn choice<'a, T>(rng: &mut Rng, items: &'a [T]) -> &'a T {
         &items[rng.below(items.len())]
+    }
+
+    /// Random rows×cols matrix with iid N(0, 1/cols) entries (σ_max ≈
+    /// 1 + √(cols/rows)) — the generic rectangular test input.
+    pub fn gaussian_mat(rng: &mut Rng, rows: usize, cols: usize) -> crate::linalg::Mat {
+        crate::randmat::gaussian(rng, rows, cols)
+    }
+
+    /// Random n×n SPD matrix with eigenvalues log-spaced in [wmin, 1]
+    /// (condition number exactly 1/wmin), random eigenbasis.
+    pub fn spd(rng: &mut Rng, n: usize, wmin: f64) -> crate::linalg::Mat {
+        assert!(wmin > 0.0 && wmin <= 1.0);
+        let w = crate::randmat::logspace(wmin, 1.0, n);
+        crate::randmat::sym_with_spectrum(rng, n, &w)
+    }
+
+    /// Random m×n (m ≥ n) matrix with singular values log-spaced in
+    /// [1/κ, 1] — condition number exactly `kappa`.
+    pub fn ill_conditioned(rng: &mut Rng, m: usize, n: usize, kappa: f64) -> crate::linalg::Mat {
+        assert!(kappa >= 1.0 && n <= m);
+        let s = crate::randmat::logspace(1.0 / kappa, 1.0, n);
+        crate::randmat::with_spectrum(rng, m, n, &s)
     }
 }
 
@@ -184,5 +258,57 @@ mod tests {
             let v = gens::usize_in(&mut rng, 3, 7);
             assert!((3..=7).contains(&v));
         }
+    }
+
+    #[test]
+    fn spd_gen_is_spd_with_requested_condition() {
+        let mut rng = Rng::seed_from(3);
+        let a = gens::spd(&mut rng, 8, 1e-2);
+        assert_eq!(a.shape(), (8, 8));
+        assert_eq!(a.symmetry_defect(), 0.0);
+        let e = crate::linalg::eigen::symmetric_eigen(&a);
+        let (mut wmin, mut wmax) = (f64::MAX, f64::MIN);
+        for &w in &e.values {
+            assert!(w > 0.0, "non-positive eigenvalue {w}");
+            wmin = wmin.min(w);
+            wmax = wmax.max(w);
+        }
+        assert!((wmax - 1.0).abs() < 1e-8, "wmax={wmax}");
+        assert!((wmin - 1e-2).abs() < 1e-8, "wmin={wmin}");
+    }
+
+    #[test]
+    fn ill_conditioned_gen_hits_kappa() {
+        let mut rng = Rng::seed_from(4);
+        let a = gens::ill_conditioned(&mut rng, 12, 7, 1e3);
+        assert_eq!(a.shape(), (12, 7));
+        let d = crate::linalg::svd::svd(&a);
+        let cond = d.s[0] / d.s[d.s.len() - 1];
+        assert!((cond - 1e3).abs() / 1e3 < 1e-6, "cond={cond}");
+    }
+
+    #[test]
+    fn gaussian_mat_gen_shape_and_finite() {
+        let mut rng = Rng::seed_from(5);
+        let a = gens::gaussian_mat(&mut rng, 6, 9);
+        assert_eq!(a.shape(), (6, 9));
+        assert!(!a.has_non_finite());
+        assert!(a.fro_norm() > 0.0);
+    }
+
+    #[test]
+    fn run_dim_passes_dims_in_range() {
+        Prop::new("dims in range").cases(20).run_dim(3, 9, |_rng, n| {
+            assert!((3..=9).contains(&n));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk to 5")]
+    fn run_dim_shrinks_to_smallest_failing() {
+        // Fails for every dim ≥ 5 ⇒ the shrink must land exactly on 5.
+        Prop::new("fails at >=5").cases(40).run_dim(2, 12, |_rng, n| {
+            assert!(n < 5, "dim {n} too big");
+        });
     }
 }

@@ -34,7 +34,8 @@ impl GaussianSketch {
     /// `R`, computed right-to-left: `Y_0 = Sᵀ`, `Y_i = R Y_{i-1}`, and
     /// `tr(S R^i Sᵀ) = sum_jk S[j,k] * Y_i[k,j]`.
     ///
-    /// Cost: q multiplications of (n x n) by (n x p) = O(q n² p).
+    /// Cost: q multiplications of (n x n) by (n x p) = O(q n² p), done as a
+    /// ping-pong over two reused p × n panels (no per-power allocation).
     pub fn power_traces(&self, r: &Mat, q: usize) -> Vec<f64> {
         assert!(r.is_square());
         assert_eq!(r.rows(), self.n(), "sketch width mismatch");
@@ -43,10 +44,13 @@ impl GaussianSketch {
         // GEMM kernel full n-wide inner loops — the natural (n × p) panel
         // has p-wide (≈8-element) inner loops that cannot vectorise well
         // (§Perf change 7: 2.7x on the trace path at n = 512, p = 8).
+        let eng = crate::linalg::gemm::global_engine();
         let mut yt = self.s.clone();
+        let mut yn = Mat::zeros(self.p(), self.n());
         let mut traces = Vec::with_capacity(q);
         for _ in 0..q {
-            yt = mat_times(&yt, r);
+            eng.matmul_into(&mut yn, &yt, r);
+            std::mem::swap(&mut yt, &mut yn);
             // tr(S R^i Sᵀ) = Σ_{j,k} S[j,k] · Yᵀ[j,k] — an elementwise dot.
             let t: f64 = self
                 .s
@@ -144,22 +148,17 @@ fn srht_dense(rng: &mut Rng, p: usize, n: usize) -> Mat {
     s
 }
 
-/// `R * Y` helper; plain GEMM via crate kernel (counts toward GEMM stats,
-/// matching how the paper accounts sketch cost).
-fn mat_times(r: &Mat, y: &Mat) -> Mat {
-    // Reuse the packed kernel through A·Bᵀ with pre-transposed Y to avoid
-    // a second transpose: matmul(r, y) is fine; y is n x p with p small.
-    crate::linalg::gemm::matmul(r, y)
-}
-
 /// Exact power traces `tr(R^i)` for i = 1..q — O(q n³); test/ablation only.
 pub fn exact_power_traces(r: &Mat, q: usize) -> Vec<f64> {
     assert!(r.is_square());
+    let eng = crate::linalg::gemm::global_engine();
     let mut acc = r.clone();
+    let mut nxt = Mat::zeros(r.rows(), r.cols());
     let mut out = Vec::with_capacity(q);
     out.push(acc.trace());
     for _ in 1..q {
-        acc = crate::linalg::gemm::matmul(&acc, r);
+        eng.matmul_into(&mut nxt, &acc, r);
+        std::mem::swap(&mut acc, &mut nxt);
         out.push(acc.trace());
     }
     out

@@ -1,9 +1,11 @@
 //! A small fixed-size thread pool (no rayon offline).
 //!
-//! Used by the coordinator's worker pool and available to parallelise GEMM
-//! panels on multi-core machines. On the single-core CI box the pool degrades
-//! gracefully to sequential execution.
+//! Used by the coordinator's worker pool and by the GEMM engine to run
+//! row-panel kernels in parallel ([`scoped`]). On the single-core CI box the
+//! pool degrades gracefully to sequential execution.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -95,6 +97,60 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Run borrowed jobs on `pool` and block until every one has completed —
+/// "scoped" execution, the primitive the parallel GEMM panels are built on.
+///
+/// Unlike [`ThreadPool::execute`] + [`ThreadPool::wait_idle`], completion is
+/// tracked per *call*, so concurrent callers (e.g. several service workers
+/// sharing one GEMM pool) never wait on each other's jobs.
+///
+/// Jobs may borrow from the caller's stack; this function does not return
+/// until all of them have run, which is what makes the lifetime erasure in
+/// the implementation sound. A panic inside any job is caught at the worker
+/// (so a failed parallel kernel cannot wedge the pool) and the **original
+/// payload** is re-raised here after the barrier, preserving the assertion
+/// message for the test harness.
+pub fn scoped<'scope>(pool: &ThreadPool, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    let total = jobs.len();
+    if total == 0 {
+        return;
+    }
+    let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+    let panic_slot: Arc<Mutex<Option<Box<dyn Any + Send>>>> = Arc::new(Mutex::new(None));
+    for job in jobs {
+        // SAFETY: only the lifetime is erased. We block on `done` below until
+        // every job has finished, so borrows inside `job` cannot outlive the
+        // data they reference.
+        let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Box<dyn FnOnce() + Send + 'static>>(job)
+        };
+        let done = Arc::clone(&done);
+        let panic_slot = Arc::clone(&panic_slot);
+        pool.execute(move || {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                let mut slot = panic_slot.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let (lock, cv) = &*done;
+            let mut d = lock.lock().unwrap();
+            *d += 1;
+            cv.notify_all();
+        });
+    }
+    let (lock, cv) = &*done;
+    let mut d = lock.lock().unwrap();
+    while *d < total {
+        d = cv.wait(d).unwrap();
+    }
+    drop(d);
+    let payload = panic_slot.lock().unwrap().take();
+    if let Some(payload) = payload {
+        resume_unwind(payload);
+    }
+}
+
 /// Run `f(i)` for i in 0..n across `pool`, collecting results in order.
 /// Results are computed into a pre-sized buffer guarded by a mutex of slots.
 pub fn parallel_map<T: Send + 'static>(
@@ -158,5 +214,43 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.wait_idle(); // must not deadlock
         assert!(pool.size() == 2);
+    }
+
+    #[test]
+    fn scoped_runs_borrowed_jobs() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0usize; 12];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                .chunks_mut(4)
+                .enumerate()
+                .map(|(b, chunk)| {
+                    Box::new(move || {
+                        for (i, x) in chunk.iter_mut().enumerate() {
+                            *x = b * 4 + i;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            scoped(&pool, jobs);
+        }
+        assert_eq!(data, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        scoped(&pool, Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn scoped_propagates_original_panic_payload() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("boom")), Box::new(|| {})];
+        scoped(&pool, jobs);
+        // The pool must still be usable afterwards (checked implicitly by
+        // Drop joining the workers).
     }
 }

@@ -1,0 +1,212 @@
+//! GEMM cross-check property suite: the broadcast-FMA engine (sequential
+//! and parallel) against the retained packed dot-product reference kernel
+//! (`gemm_packed`) on ragged shapes, plus the determinism contract —
+//! bit-identical output for pool sizes 1, 2 and 8.
+
+use prism::linalg::gemm::{
+    gemm_packed, matmul, matmul_a_bt, matmul_at_b, syrk_a_at, syrk_at_a, GemmEngine, GemmScope,
+    Workspace,
+};
+use prism::linalg::Mat;
+use prism::ptest::{gens, Prop};
+use prism::rng::Rng;
+
+/// `A·B` through the independent packed reference kernel.
+fn packed_ref(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let bt = b.transpose();
+    let mut c = Mat::zeros(m, n);
+    gemm_packed(a.as_slice(), bt.as_slice(), c.as_mut_slice(), m, n, k);
+    c
+}
+
+fn assert_close(got: &Mat, want: &Mat, tol: f64, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape");
+    let err = got.sub(want).max_abs();
+    assert!(err < tol, "{what}: err {err}");
+}
+
+/// Shapes that straddle every blocking boundary: the 4-row micro-tile, the
+/// packed kernel's MC=64/KC=256 blocks, and the broadcast kernel's NC=512
+/// column panel.
+const EDGE_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 1),
+    (1, 3, 9),
+    (5, 1, 3),
+    (2, 4, 2),
+    (3, 4, 1),
+    (63, 17, 5),
+    (64, 256, 8),
+    (65, 257, 9),
+    (66, 130, 33),
+    (3, 5, 513),
+];
+
+#[test]
+fn matmul_matches_packed_on_edge_shapes() {
+    let mut rng = Rng::seed_from(1);
+    for &(m, k, n) in EDGE_SHAPES {
+        let a = Mat::gaussian(&mut rng, m, k, 1.0);
+        let b = Mat::gaussian(&mut rng, k, n, 1.0);
+        assert_close(&matmul(&a, &b), &packed_ref(&a, &b), 1e-9, &format!("{m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn property_matmul_matches_packed_ragged() {
+    Prop::new("broadcast vs packed").cases(64).run(|rng| {
+        let m = gens::usize_in(rng, 1, 70);
+        let k = gens::usize_in(rng, 1, 70);
+        let n = gens::usize_in(rng, 1, 70);
+        let a = Mat::gaussian(rng, m, k, 1.0);
+        let b = Mat::gaussian(rng, k, n, 1.0);
+        assert_close(&matmul(&a, &b), &packed_ref(&a, &b), 1e-9, &format!("{m}x{k}x{n}"));
+    });
+}
+
+#[test]
+fn property_transposed_forms_match_packed() {
+    Prop::new("at_b/a_bt vs packed").cases(64).run(|rng| {
+        let m = gens::usize_in(rng, 1, 40);
+        let k = gens::usize_in(rng, 1, 40);
+        let n = gens::usize_in(rng, 1, 40);
+        // Aᵀ·B with A: k×m, B: k×n.
+        let a = Mat::gaussian(rng, k, m, 1.0);
+        let b = Mat::gaussian(rng, k, n, 1.0);
+        let want = packed_ref(&a.transpose(), &b);
+        assert_close(&matmul_at_b(&a, &b), &want, 1e-9, "at_b");
+        // A·Bᵀ with A: m×k, B: n×k.
+        let a2 = Mat::gaussian(rng, m, k, 1.0);
+        let b2 = Mat::gaussian(rng, n, k, 1.0);
+        let want2 = packed_ref(&a2, &b2.transpose());
+        assert_close(&matmul_a_bt(&a2, &b2), &want2, 1e-9, "a_bt");
+    });
+}
+
+#[test]
+fn property_syrk_matches_packed() {
+    Prop::new("syrk vs packed").cases(64).run(|rng| {
+        let k = gens::usize_in(rng, 1, 40);
+        let n = gens::usize_in(rng, 1, 40);
+        let a = Mat::gaussian(rng, k, n, 1.0);
+        let got = syrk_at_a(&a);
+        assert_close(&got, &packed_ref(&a.transpose(), &a), 1e-9, "syrk_at_a");
+        assert_eq!(got.symmetry_defect(), 0.0);
+        let got2 = syrk_a_at(&a);
+        assert_close(&got2, &packed_ref(&a, &a.transpose()), 1e-9, "syrk_a_at");
+        assert_eq!(got2.symmetry_defect(), 0.0);
+    });
+}
+
+#[test]
+fn pool_sizes_1_2_8_bit_identical() {
+    let engines = [
+        GemmEngine::with_threads(1),
+        GemmEngine::with_threads(2),
+        GemmEngine::with_threads(8),
+    ];
+    assert_eq!(engines[0].threads(), 1);
+    assert_eq!(engines[1].threads(), 2);
+    assert_eq!(engines[2].threads(), 8);
+    let mut rng = Rng::seed_from(2);
+    // Shapes below, at, and well above the parallel dispatch threshold,
+    // including panel splits that leave ragged remainders.
+    for &(m, k, n) in &[(3, 5, 4), (16, 16, 16), (17, 33, 29), (70, 41, 67), (128, 64, 96)] {
+        let a = Mat::gaussian(&mut rng, m, k, 1.0);
+        let b = Mat::gaussian(&mut rng, k, n, 1.0);
+        let mut ws = Workspace::new();
+        let base_mm = engines[0].matmul(&a, &b);
+        let base_syrk = engines[0].syrk_at_a(&a);
+        let base_syrk2 = engines[0].syrk_a_at(&a);
+        let base_atb = engines[0].matmul_at_b(&a, &a);
+        for e in &engines[1..] {
+            assert_eq!(
+                base_mm.as_slice(),
+                e.matmul(&a, &b).as_slice(),
+                "matmul {m}x{k}x{n} differs at {} threads",
+                e.threads()
+            );
+            assert_eq!(
+                base_syrk.as_slice(),
+                e.syrk_at_a(&a).as_slice(),
+                "syrk_at_a {m}x{k} differs at {} threads",
+                e.threads()
+            );
+            assert_eq!(
+                base_syrk2.as_slice(),
+                e.syrk_a_at(&a).as_slice(),
+                "syrk_a_at {m}x{k} differs at {} threads",
+                e.threads()
+            );
+            let mut c = Mat::zeros(0, 0);
+            e.matmul_at_b_into(&mut c, &a, &a, &mut ws);
+            assert_eq!(
+                base_atb.as_slice(),
+                c.as_slice(),
+                "matmul_at_b differs at {} threads",
+                e.threads()
+            );
+        }
+    }
+}
+
+#[test]
+fn into_apis_match_allocating_apis() {
+    let mut rng = Rng::seed_from(3);
+    let eng = GemmEngine::sequential();
+    let mut ws = Workspace::new();
+    let a = Mat::gaussian(&mut rng, 13, 7, 1.0);
+    let b = Mat::gaussian(&mut rng, 7, 11, 1.0);
+    let mut c = Mat::zeros(0, 0);
+
+    eng.matmul_into(&mut c, &a, &b);
+    assert_eq!(c.as_slice(), matmul(&a, &b).as_slice());
+
+    eng.syrk_at_a_into(&mut c, &a);
+    assert_eq!(c.as_slice(), syrk_at_a(&a).as_slice());
+
+    eng.syrk_a_at_into(&mut c, &a, &mut ws);
+    assert_eq!(c.as_slice(), syrk_a_at(&a).as_slice());
+
+    eng.matmul_a_bt_into(&mut c, &b.transpose(), &a, &mut ws);
+    assert_eq!(c.as_slice(), matmul_a_bt(&b.transpose(), &a).as_slice());
+}
+
+#[test]
+fn gemm_scope_is_thread_local() {
+    let mut rng = Rng::seed_from(4);
+    let a = Mat::gaussian(&mut rng, 8, 8, 1.0);
+    // Concurrent GEMM traffic on other threads must not leak into this
+    // thread's scope.
+    let outer = GemmScope::begin();
+    let handles: Vec<_> = (0..4u64)
+        .map(|s| {
+            let a = a.clone();
+            std::thread::spawn(move || {
+                let scope = GemmScope::begin();
+                let mut rng = Rng::seed_from(s);
+                let b = Mat::gaussian(&mut rng, 8, 8, 1.0);
+                for _ in 0..5 {
+                    let _ = matmul(&a, &b);
+                }
+                assert_eq!(scope.calls(), 5);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(outer.calls(), 0, "other threads' GEMMs leaked into this scope");
+    let _ = matmul(&a, &a);
+    assert_eq!(outer.calls(), 1);
+    // And flop accounting distinguishes SYRK (n²k) from GEMM (2mnk).
+    let scope = GemmScope::begin();
+    let g = Mat::gaussian(&mut rng, 7, 5, 1.0);
+    let _ = syrk_at_a(&g); // n=5, k=7
+    assert_eq!(scope.flops(), 5 * 5 * 7);
+    let _ = matmul(&g, &syrk_at_a(&g)); // 7x5 · 5x5 → 2·7·5·5 (+ the syrk)
+    assert_eq!(scope.flops(), 5 * 5 * 7 + 5 * 5 * 7 + 2 * 7 * 5 * 5);
+}

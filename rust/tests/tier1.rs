@@ -1,0 +1,89 @@
+//! Tier-1 smoke target: one bounded, fast pass over the critical paths —
+//! substrate (GEMM engine, determinism, counters), one engine per Table-1
+//! family against ground truth, and a service round trip — so a plain
+//! `cargo build --release && cargo test -q` always exercises the whole
+//! stack even if the heavier property suites are filtered out.
+//!
+//! Budget: every test here is O(small-n³) with single-digit case counts.
+
+use prism::baselines::eigen_fn;
+use prism::config::{Backend, ServiceConfig};
+use prism::coordinator::service::{JobKind, Service};
+use prism::linalg::gemm::{matmul, matmul_naive, GemmEngine, GemmScope};
+use prism::linalg::Mat;
+use prism::prism::driver::StopRule;
+use prism::prism::polar::{polar_prism, PolarOpts};
+use prism::prism::sqrt::{sqrt_prism, SqrtOpts};
+use prism::ptest::gens;
+use prism::randmat;
+use prism::rng::Rng;
+
+#[test]
+fn smoke_gemm_engine_correct_and_deterministic() {
+    let mut rng = Rng::seed_from(1);
+    let a = Mat::gaussian(&mut rng, 21, 13, 1.0);
+    let b = Mat::gaussian(&mut rng, 13, 17, 1.0);
+    let want = matmul_naive(&a, &b);
+    assert!(matmul(&a, &b).sub(&want).max_abs() < 1e-10);
+    let par = GemmEngine::with_threads(4);
+    assert_eq!(par.matmul(&a, &b).as_slice(), GemmEngine::sequential().matmul(&a, &b).as_slice());
+}
+
+#[test]
+fn smoke_gemm_counter_scoped() {
+    let mut rng = Rng::seed_from(2);
+    let a = Mat::gaussian(&mut rng, 6, 6, 1.0);
+    let scope = GemmScope::begin();
+    let _ = matmul(&a, &a);
+    assert_eq!(scope.calls(), 1);
+    assert_eq!(scope.flops(), 2 * 6 * 6 * 6);
+}
+
+#[test]
+fn smoke_polar_prism_vs_svd() {
+    let mut rng = Rng::seed_from(3);
+    let a = gens::ill_conditioned(&mut rng, 16, 10, 50.0);
+    let exact = eigen_fn::polar_eigen(&a);
+    let stop = StopRule::default().with_max_iters(200).with_tol(1e-8);
+    let out = polar_prism(&a, &PolarOpts::degree5().with_stop(stop), &mut rng);
+    assert!(out.log.converged, "res={}", out.log.final_residual());
+    assert!(out.q.sub(&exact).max_abs() < 1e-5);
+    assert_eq!(out.log.alphas.len(), out.log.iters());
+}
+
+#[test]
+fn smoke_sqrt_prism_vs_eigen() {
+    let mut rng = Rng::seed_from(4);
+    let a = gens::spd(&mut rng, 10, 1e-2);
+    let exact = eigen_fn::sqrt_eigen(&a);
+    let stop = StopRule::default().with_max_iters(200).with_tol(1e-9);
+    let out = sqrt_prism(&a, &SqrtOpts::degree5().with_stop(stop), &mut rng);
+    assert!(out.log.converged);
+    assert!(out.sqrt.sub(&exact).max_abs() < 1e-5);
+}
+
+#[test]
+fn smoke_service_round_trip() {
+    let mut rng = Rng::seed_from(5);
+    let cfg = ServiceConfig {
+        workers: 2,
+        queue_capacity: 16,
+        max_batch: 2,
+        sketch_p: 8,
+        max_iters: 40,
+        tol: 1e-7,
+        gemm_threads: 1,
+    };
+    let svc = Service::start(cfg, Backend::Prism5, 7);
+    let w = randmat::logspace(0.05, 1.0, 6);
+    for layer in 0..2 {
+        let a = randmat::sym_with_spectrum(&mut rng, 6, &w);
+        svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+    }
+    let results = svc.drain().unwrap();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert!(!r.result.has_non_finite());
+        assert_eq!(r.result.shape(), (6, 6));
+    }
+}
