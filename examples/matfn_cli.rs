@@ -8,15 +8,16 @@
 //! design interval; PRISM stays flat. Also prints the alpha_k traces, the
 //! paper's "fingerprint" of spectrum adaptivity (Figs. 3-4 right panels).
 //!
+//! Every algorithm is a `matfn` registry name, and each solver is planned
+//! once and reused across the whole sweep — the persistent-workspace path.
+//!
 //! ```sh
 //! cargo run --release --example matfn_cli -- [--n 128] [--decades 10]
 //! ```
 
-use prism::baselines::polar_express::PolarExpress;
 use prism::cli::Args;
 use prism::linalg::gemm::syrk_at_a;
-use prism::prism::polar::{polar_prism, PolarOpts};
-use prism::prism::sqrt::{sqrt_prism, SqrtOpts};
+use prism::matfn::registry;
 use prism::prism::StopRule;
 use prism::randmat;
 use prism::rng::Rng;
@@ -29,13 +30,24 @@ fn main() {
     let seed = args.get_u64("seed", 42).unwrap();
     let tol = 1e-6;
     let stop = StopRule::default().with_max_iters(400).with_tol(tol);
-    let pe = PolarExpress::paper_default();
+
+    // Plan each solver once; the sweep below reuses their workspaces.
+    let plan = |name: &str| {
+        let mut s = registry::resolve(name).expect("registry name");
+        s.set_stop(stop);
+        s
+    };
+    let mut classic_polar = plan("ns-polar");
+    let mut pe_polar = plan("pe-polar");
+    let mut prism_polar = plan("prism5-polar");
+    let mut classic_sqrt = plan("ns-sqrt");
+    let mut prism_sqrt = plan("prism5-sqrt");
 
     println!("matfn_cli (Fig. 1 analog): {n}x{m}, sigma_min sweep, tol {tol:.0e}\n");
     println!("POLAR  — iterations to ‖I − XᵀX‖_F < tol");
     println!(
         "{:>10} {:>12} {:>14} {:>10} {:>18}",
-        "sigma_min", "classic-NS", "PolarExpress", "PRISM-5", "PRISM speedup(it)"
+        "sigma_min", "ns-polar", "pe-polar", "prism5", "PRISM speedup(it)"
     );
 
     let mut rng = Rng::seed_from(seed);
@@ -45,9 +57,9 @@ fn main() {
         let s = randmat::logspace(smin, 1.0, m);
         let a = randmat::with_spectrum(&mut rng, n, m, &s);
 
-        let classic = polar_prism(&a, &PolarOpts::classic(2).with_stop(stop), &mut rng);
-        let (_, pe_log) = pe.polar(&a, &stop);
-        let fast = polar_prism(&a, &PolarOpts::degree5().with_stop(stop), &mut rng);
+        let classic = classic_polar.solve(&a, &mut rng);
+        let pe = pe_polar.solve(&a, &mut rng);
+        let fast = prism_polar.solve(&a, &mut rng);
         let it = |l: &prism::prism::IterationLog| {
             l.iters_to_tol(tol).map(|k| k.to_string()).unwrap_or_else(|| "—".into())
         };
@@ -59,7 +71,7 @@ fn main() {
             "{:>10.0e} {:>12} {:>14} {:>10} {:>18}",
             smin,
             it(&classic.log),
-            it(&pe_log),
+            it(&pe.log),
             it(&fast.log),
             speedup
         );
@@ -67,21 +79,26 @@ fn main() {
     }
 
     println!("\nSQRT   — iterations to coupled residual < tol (A = GᵀG)");
-    println!("{:>10} {:>12} {:>10}", "sigma_min", "classic-NS", "PRISM-5");
+    println!("{:>10} {:>12} {:>10}", "sigma_min", "ns-sqrt", "prism5");
     for dec in 0..decades / 2 {
         // sqrt squares the condition number: sweep fewer decades.
         let smin = 10f64.powi(-(dec as i32 + 1));
         let s = randmat::logspace(smin, 1.0, m);
         let g = randmat::with_spectrum(&mut rng, n, m, &s);
         let a = syrk_at_a(&g);
-        let classic = sqrt_prism(&a, &SqrtOpts::classic(2).with_stop(stop), &mut rng);
-        let fast = sqrt_prism(&a, &SqrtOpts::degree5().with_stop(stop), &mut rng);
+        let classic = classic_sqrt.solve(&a, &mut rng);
+        let fast = prism_sqrt.solve(&a, &mut rng);
         let it = |l: &prism::prism::IterationLog| {
             l.iters_to_tol(tol).map(|k| k.to_string()).unwrap_or_else(|| "—".into())
         };
         println!("{:>10.0e} {:>12} {:>10}", smin, it(&classic.log), it(&fast.log));
     }
 
+    println!(
+        "\nworkspace: prism5-polar ran {} decades with {} buffer allocations total",
+        decades,
+        prism_polar.workspace_allocations()
+    );
     println!("\nPRISM-5 alpha_k trace for the hardest polar instance (adapts, then");
     println!("relaxes to the Taylor coefficient 0.375 as the spectrum contracts):");
     let pts: Vec<String> = last_alphas.iter().map(|a| format!("{a:.3}")).collect();

@@ -49,6 +49,7 @@ fn run_load(
         max_iters: 60,
         tol: 1e-7,
         gemm_threads: 1,
+        stream_residuals: false,
     };
     // Mixed shapes: square covariance blocks (InvSqrt) and tall gradient
     // panels (Polar) — same-shape jobs batch together, mixed shapes don't.
@@ -135,6 +136,9 @@ fn main() {
         max_iters: 40,
         tol: 1e-7,
         gemm_threads: 1,
+        // Stream per-iteration residuals from the workers (matfn Observer
+        // hook) so convergence is visible while refreshes are in flight.
+        stream_residuals: true,
     };
     let svc = Service::start(cfg, Backend::Prism5, seed);
     let mut opt = AsyncShampoo::new(0.05, 1e-6, 5, &svc);
@@ -165,6 +169,15 @@ fn main() {
         }
     }
     opt.sync();
+    let mut streamed = 0usize;
+    let mut last_res = f64::NAN;
+    while let Some(ev) = svc.try_recv_progress() {
+        streamed += 1;
+        last_res = ev.residual;
+    }
+    println!(
+        "  streamed {streamed} per-iteration residuals from the workers (last {last_res:.1e})"
+    );
     println!(
         "  done in {:.2}s — train loop never blocked after warmup (staleness ≤ interval + service lag)",
         sw.elapsed_s()

@@ -1,8 +1,9 @@
-//! Quickstart: the 60-second tour of the PRISM public API.
+//! Quickstart: the 60-second tour of the unified `matfn` solver API.
 //!
-//! Computes each matrix function from the paper's Table 1 on a small
-//! ill-conditioned test matrix and shows the PRISM speedup over the classic
-//! iteration — no artifacts or configuration required.
+//! Every matrix function from the paper's Table 1 goes through the same
+//! three steps — pick a registry name, plan a `Solver`, call `solve` — and a
+//! planned solver is *persistent*: repeated same-shape calls reuse its
+//! workspace and perform zero heap allocations in the hot loop.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -10,11 +11,8 @@
 
 use prism::linalg::gemm::{matmul, syrk_at_a};
 use prism::linalg::Mat;
-use prism::prism::chebyshev::{chebyshev_inverse, ChebyshevOpts};
-use prism::prism::db_newton::{db_newton_prism, DbNewtonOpts};
-use prism::prism::inverse_newton::{inv_root_prism, InvRootOpts};
-use prism::prism::polar::{orthogonality_error, polar_prism, PolarOpts};
-use prism::prism::sqrt::{sqrt_prism, SqrtOpts};
+use prism::matfn::registry;
+use prism::prism::polar::orthogonality_error;
 use prism::prism::StopRule;
 use prism::randmat;
 use prism::rng::Rng;
@@ -28,51 +26,70 @@ fn main() {
     let s = randmat::logspace(1e-6, 1.0, 48);
     let a = randmat::with_spectrum(&mut rng, 96, 48, &s);
     let stop = StopRule::default().with_max_iters(200).with_tol(1e-8);
+    // One helper: resolve a registry name, apply the stop rule, solve.
+    let run = |name: &str, input: &Mat, rng: &mut Rng| {
+        let mut solver = registry::resolve(name).expect("registry name");
+        solver.set_stop(stop);
+        solver.solve(input, rng)
+    };
 
-    println!("PRISM quickstart — A in R^(96x48), sigma in [1e-6, 1]\n");
+    println!("matfn quickstart — A in R^(96x48), sigma in [1e-6, 1]");
+    println!("registry exposes {} named solvers\n", registry::names().len());
 
     // ── 1. Orthogonalization (polar factor, the Muon primitive) ───────────
-    let classic = polar_prism(&a, &PolarOpts::classic(2).with_stop(stop), &mut rng);
-    let fast = polar_prism(&a, &PolarOpts::degree5().with_stop(stop), &mut rng);
-    println!("polar factor U Vᵀ (5th-order Newton–Schulz):");
+    let classic = run("ns-polar", &a, &mut rng);
+    let fast = run("prism5-polar", &a, &mut rng);
+    println!("polar factor U Vᵀ  (ns-polar vs prism5-polar):");
     println!(
         "  classic : {:>3} iters   PRISM-5 : {:>3} iters   ({:.2}x fewer)",
         classic.log.iters(),
         fast.log.iters(),
         classic.log.iters() as f64 / fast.log.iters() as f64
     );
-    println!("  orthogonality error ‖I − QᵀQ‖_F = {:.2e}\n", orthogonality_error(&fast.q));
+    println!(
+        "  orthogonality error ‖I − QᵀQ‖_F = {:.2e}\n",
+        orthogonality_error(&fast.primary)
+    );
 
     // ── 2. Square root + inverse square root (the Shampoo primitive) ──────
     let spd = syrk_at_a(&a); // SPD 48x48 with squared spectrum
-    let c_sqrt = sqrt_prism(&spd, &SqrtOpts::classic(2).with_stop(stop), &mut rng);
-    let p_sqrt = sqrt_prism(&spd, &SqrtOpts::degree5().with_stop(stop), &mut rng);
-    let check = matmul(&p_sqrt.sqrt, &p_sqrt.sqrt).sub(&spd).max_abs();
-    println!("square root A^(1/2), inverse root A^(-1/2) (coupled NS):");
+    let c_sqrt = run("ns-sqrt", &spd, &mut rng);
+    let p_sqrt = run("prism5-sqrt", &spd, &mut rng);
+    let check = matmul(&p_sqrt.primary, &p_sqrt.primary).sub(&spd).max_abs();
+    println!("square root A^(1/2)  (ns-sqrt vs prism5-sqrt, coupled NS):");
     println!(
-        "  classic : {:>3} iters   PRISM-5 : {:>3} iters   ‖X² − A‖_max = {:.2e}\n",
+        "  classic : {:>3} iters   PRISM-5 : {:>3} iters   ‖X² − A‖_max = {:.2e}",
         c_sqrt.log.iters(),
         p_sqrt.log.iters(),
         check
     );
+    println!("  (secondary output is the coupled A^(-1/2) for free)\n");
 
     // ── 3. Inverse p-th root (general Shampoo p) ───────────────────────────
-    let c_ir = inv_root_prism(&spd, &InvRootOpts::classic(2).with_stop(stop), &mut rng);
-    let p_ir = inv_root_prism(&spd, &InvRootOpts::prism(2).with_stop(stop), &mut rng);
+    let c_ir = run("invnewton-classic-invroot2", &spd, &mut rng);
+    let p_ir = run("invnewton-invroot2", &spd, &mut rng);
     println!("inverse root A^(-1/2) via coupled inverse Newton:");
-    println!("  classic : {:>3} iters   PRISM   : {:>3} iters\n", c_ir.log.iters(), p_ir.log.iters());
+    println!(
+        "  classic : {:>3} iters   PRISM   : {:>3} iters\n",
+        c_ir.log.iters(),
+        p_ir.log.iters()
+    );
 
     // ── 4. DB Newton (globally convergent sqrt, O(n²) α fit) ──────────────
-    let c_db = db_newton_prism(&spd, &DbNewtonOpts::classic().with_stop(stop), &mut rng);
-    let p_db = db_newton_prism(&spd, &DbNewtonOpts::prism().with_stop(stop), &mut rng);
+    let c_db = run("newton-classic-sqrt", &spd, &mut rng);
+    let p_db = run("newton-sqrt", &spd, &mut rng);
     println!("DB Newton square root (product form):");
-    println!("  classic : {:>3} iters   PRISM   : {:>3} iters\n", c_db.log.iters(), p_db.log.iters());
+    println!(
+        "  classic : {:>3} iters   PRISM   : {:>3} iters\n",
+        c_db.log.iters(),
+        p_db.log.iters()
+    );
 
     // ── 5. Matrix inverse via Chebyshev ────────────────────────────────────
     let sq = randmat::sym_with_spectrum(&mut rng, 48, &randmat::logspace(1e-3, 1.0, 48));
-    let c_inv = chebyshev_inverse(&sq, &ChebyshevOpts::classic().with_stop(stop), &mut rng);
-    let p_inv = chebyshev_inverse(&sq, &ChebyshevOpts::prism().with_stop(stop), &mut rng);
-    let id_err = matmul(&sq, &p_inv.inverse).sub(&Mat::eye(48)).max_abs();
+    let c_inv = run("cheb-classic-inverse", &sq, &mut rng);
+    let p_inv = run("cheb-inverse", &sq, &mut rng);
+    let id_err = matmul(&sq, &p_inv.primary).sub(&Mat::eye(48)).max_abs();
     println!("matrix inverse A⁻¹ via Chebyshev iteration:");
     println!(
         "  classic : {:>3} iters   PRISM   : {:>3} iters   ‖AX − I‖_max = {:.2e}\n",
@@ -81,10 +98,43 @@ fn main() {
         id_err
     );
 
-    // ── 6. The adaptive α_k trace — PRISM's fingerprint ────────────────────
+    // ── 6. Persistent solvers: reuse + warm start + observer ───────────────
+    let mut solver = registry::resolve("prism5-polar").unwrap();
+    solver.set_stop(stop);
+    let cold = solver.solve(&a, &mut rng);
+    let allocs_after_cold = solver.workspace_allocations();
+    let _ = solver.solve(&a, &mut rng);
+    println!("persistent solver (prism5-polar):");
+    println!(
+        "  cold call: {} workspace allocations; warm call: {} new",
+        allocs_after_cold,
+        solver.workspace_allocations() - allocs_after_cold
+    );
+    // Warm start (paper §C): hand the previous polar factor back as x0.
+    let warm = solver.solve_from(&a, &cold.primary, &mut rng);
+    println!(
+        "  warm-started from previous result: {} iters (vs {} cold)",
+        warm.log.iters(),
+        cold.log.iters()
+    );
+    // Observer: stream per-iteration residuals instead of waiting for the log.
+    use std::sync::{Arc, Mutex};
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&trace);
+    solver.set_observer(Some(Box::new(move |ev| {
+        sink.lock().unwrap().push((ev.iter, ev.residual));
+    })));
+    let _ = solver.solve(&a, &mut rng);
+    solver.set_observer(None);
+    let trace = trace.lock().unwrap();
+    let head: Vec<String> =
+        trace.iter().take(4).map(|(k, r)| format!("({k}, {r:.1e})")).collect();
+    println!("  streamed {} residual events: [{}, …]\n", trace.len(), head.join(", "));
+
+    // ── 7. The adaptive α_k trace — PRISM's fingerprint ────────────────────
     println!("PRISM-5 polar α_k trace (adapts to the spectrum, no σ_min input):");
-    let trace: Vec<String> = fast.log.alphas.iter().map(|x| format!("{x:.3}")).collect();
-    println!("  [{}]", trace.join(", "));
-    println!("\nAll engines share one knob set: degree d, sketch size p, stop rule.");
+    let pts: Vec<String> = fast.log.alphas.iter().map(|x| format!("{x:.3}")).collect();
+    println!("  [{}]", pts.join(", "));
+    println!("\nEverything above is one API: registry::resolve(name) → Solver::solve.");
     println!("See `prism --help` (the binary) and examples/ for the full system.");
 }

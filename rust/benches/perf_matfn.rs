@@ -1,0 +1,76 @@
+//! Cross-call workspace reuse: cold-constructed vs reused `matfn::Solver`.
+//!
+//! The Shampoo/Muon pattern calls the same matrix function on same-shaped
+//! matrices every optimizer step. A cold path plans a fresh `Solver` per
+//! call (every n×n ping-pong buffer is reallocated); the persistent path
+//! plans once and reuses the workspace, so from the second call onward the
+//! hot loop performs zero heap allocations. This bench reports wall time
+//! and workspace allocation counts for both at n ∈ {64, 256, 1024}.
+//!
+//! Run: `cargo bench --bench perf_matfn [-- --full]`
+
+use prism::benchkit::{banner, Bench, Table};
+use prism::matfn::registry;
+use prism::prism::StopRule;
+use prism::randmat;
+use prism::rng::Rng;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    banner(
+        "perf_matfn — persistent Solver vs cold construction",
+        "matfn API: workspace reuse across same-shape calls",
+    );
+    let bench = if full { Bench::default() } else { Bench::quick() };
+    // A fixed, small iteration budget: the point is per-call overhead, not
+    // convergence, and it keeps n = 1024 tractable.
+    let stop = StopRule::default().with_max_iters(8).with_tol(1e-30);
+    let sizes: &[usize] = if full { &[64, 256, 1024] } else { &[64, 256] };
+
+    let mut t = Table::new(&[
+        "solver", "n", "cold ms", "reused ms", "speedup", "allocs/call cold", "allocs/call reused",
+    ]);
+    for &n in sizes {
+        let mut rng = Rng::seed_from(7);
+        let s = randmat::logspace(1e-4, 1.0, n / 2);
+        let a = randmat::with_spectrum(&mut rng, n, n / 2, &s);
+
+        // Cold: plan + solve every call, like the old free-function API.
+        let cold = bench.run(&format!("cold_{n}"), || {
+            let mut solver = registry::resolve("prism5-polar").unwrap();
+            solver.set_stop(stop);
+            std::hint::black_box(solver.solve(&a, &mut rng).log.iters());
+        });
+        let cold_allocs = {
+            let mut solver = registry::resolve("prism5-polar").unwrap();
+            solver.set_stop(stop);
+            let _ = solver.solve(&a, &mut rng);
+            solver.workspace_allocations()
+        };
+
+        // Reused: plan once, warm the workspace, then measure steady state.
+        let mut solver = registry::resolve("prism5-polar").unwrap();
+        solver.set_stop(stop);
+        let _ = solver.solve(&a, &mut rng);
+        let warm_base = solver.workspace_allocations();
+        let reused = bench.run(&format!("reused_{n}"), || {
+            std::hint::black_box(solver.solve(&a, &mut rng).log.iters());
+        });
+        let warm_allocs = solver.workspace_allocations() - warm_base;
+
+        t.row(&[
+            "prism5-polar".into(),
+            n.to_string(),
+            format!("{:.2}", cold.median_s() * 1e3),
+            format!("{:.2}", reused.median_s() * 1e3),
+            format!("{:.2}x", cold.median_s() / reused.median_s()),
+            cold_allocs.to_string(),
+            warm_allocs.to_string(),
+        ]);
+        assert_eq!(warm_allocs, 0, "reused solver must not touch the allocator");
+    }
+    t.print();
+    println!("\nNotes: 'allocs/call' counts workspace-pool misses (heap allocations for");
+    println!("iteration buffers). The reused column must be 0 — that is the persistent");
+    println!("solver contract the optimizer/service hot paths rely on.");
+}

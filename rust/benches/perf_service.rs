@@ -24,6 +24,7 @@ fn run(workers: usize, max_batch: usize, backend: Backend, jobs: usize, n: usize
         max_iters: 60,
         tol: 1e-7,
         gemm_threads: 1,
+        stream_residuals: false,
     };
     let shapes = vec![(n, n), (n, n / 2)];
     let mut stream = GradientStream::new(42, shapes, 0.5);

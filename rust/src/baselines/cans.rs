@@ -5,10 +5,10 @@
 //! mapping for the *upper* edge; unlike PRISM it does nothing for σ_min,
 //! which is why it helps less on spectra with tiny singular values.
 
-use crate::linalg::gemm::{global_engine, GemmEngine};
+use crate::linalg::gemm::{global_engine, GemmEngine, Workspace};
 use crate::linalg::norms::spectral_norm_est;
 use crate::linalg::Mat;
-use crate::prism::driver::{IterationLog, RunRecorder, StopRule};
+use crate::prism::driver::{EngineHooks, IterationLog, RunRecorder, StopRule};
 use crate::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -28,23 +28,75 @@ impl Default for CansOpts {
 }
 
 /// Polar factor by rescaled classical degree-5 Newton–Schulz.
+///
+/// Thin wrapper over [`polar_cans_in`] with a throwaway workspace;
+/// persistent callers go through [`crate::matfn::Solver`].
 pub fn polar_cans(a: &Mat, opts: &CansOpts, rng: &mut Rng) -> (Mat, IterationLog) {
+    polar_cans_in(a, opts, rng, &mut Workspace::new(), EngineHooks::none())
+}
+
+/// Workspace-pooled core. `hooks.x0` warm-starts at `X₀ = x0` (the rescale
+/// phase still runs, so a near-orthogonal start is mapped onto σ_max ≈ 1 and
+/// polished from there).
+pub(crate) fn polar_cans_in(
+    a: &Mat,
+    opts: &CansOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> (Mat, IterationLog) {
     let (m, n) = a.shape();
     if m < n {
-        let (q, log) = polar_cans(&a.transpose(), opts, rng);
+        let EngineHooks { x0, observer, event_base } = hooks;
+        let mut at = ws.take(n, m);
+        a.transpose_into(&mut at);
+        let x0t = x0.map(|x0| {
+            assert_eq!(x0.shape(), (m, n), "cans: x0 shape mismatch");
+            let mut t = ws.take(n, m);
+            x0.transpose_into(&mut t);
+            t
+        });
+        // The `match` re-coerces the observer's trait-object lifetime for
+        // the shorter-lived recursive hooks (Option's variance cannot).
+        let hooks_t = EngineHooks {
+            x0: x0t.as_ref(),
+            observer: match observer {
+                Some(o) => Some(o),
+                None => None,
+            },
+            event_base,
+        };
+        let (q, log) = polar_cans_in(&at, opts, rng, ws, hooks_t);
+        ws.put(at);
+        if let Some(t) = x0t {
+            ws.put(t);
+        }
         return (q.transpose(), log);
     }
     let eng = global_engine();
-    let mut x = a.scaled(1.0 / a.fro_norm().max(1e-300));
+    let mut x = ws.take(m, n);
+    match hooks.x0 {
+        Some(x0) => {
+            assert_eq!(x0.shape(), (m, n), "cans: x0 shape mismatch");
+            x.copy_from(x0);
+        }
+        None => {
+            x.copy_from(a);
+            x.scale(1.0 / a.fro_norm().max(1e-300));
+        }
+    }
 
-    // Ping-pong buffers — allocation-free after iteration 0.
-    let mut xn = Mat::zeros(m, n);
-    let mut r = Mat::zeros(n, n);
-    let mut r2 = Mat::zeros(n, n);
-    let mut g = Mat::zeros(n, n);
+    // Ping-pong buffers from the pool — allocation-free from the second
+    // same-shape call onward.
+    let mut xn = ws.take(m, n);
+    let mut r = ws.take(n, n);
+    let mut r2 = ws.take(n, n);
+    let mut g = ws.take(n, n);
 
     residual_into(&eng, &mut r, &x);
-    let mut rec = RunRecorder::start(r.fro_norm());
+    let mut rec = RunRecorder::start(r.fro_norm())
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base);
     for k in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
@@ -65,13 +117,17 @@ pub fn polar_cans(a: &Mat, opts: &CansOpts, rng: &mut Rng) -> (Mat, IterationLog
         eng.matmul_into(&mut xn, &x, &g);
         std::mem::swap(&mut x, &mut xn);
         residual_into(&eng, &mut r, &x);
-        let rn = r.fro_norm();
-        rec.step(0.375, rn);
-        if !rn.is_finite() || rn > opts.stop.diverge_above {
+        if rec.step_guard(&opts.stop, 0.375, r.fro_norm()) {
             break;
         }
     }
-    (x, rec.finish(&opts.stop))
+    let out = (x.clone(), rec.finish(&opts.stop));
+    ws.put(x);
+    ws.put(xn);
+    ws.put(r);
+    ws.put(r2);
+    ws.put(g);
+    out
 }
 
 /// `R = I − XᵀX` into a reused buffer.

@@ -40,6 +40,11 @@ pub fn sign_eigen(a: &Mat) -> Mat {
     symmetric_eigen(a).apply_fn(|w| if w >= 0.0 { 1.0 } else { -1.0 })
 }
 
+/// `A⁻¹` for symmetric full-rank `A`.
+pub fn inverse_eigen(a: &Mat) -> Mat {
+    symmetric_eigen(a).apply_fn(|w| 1.0 / w)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +100,15 @@ mod tests {
             };
             assert!(g.sub(&Mat::eye(k)).max_abs() < 1e-8);
         }
+    }
+
+    #[test]
+    fn inverse_eigen_matches_identity() {
+        let mut rng = Rng::seed_from(6);
+        let w = randmat::logspace(0.05, 1.0, 7);
+        let a = randmat::sym_with_spectrum(&mut rng, 7, &w);
+        let inv = inverse_eigen(&a);
+        assert!(matmul(&a, &inv).sub(&Mat::eye(7)).max_abs() < 1e-8);
     }
 
     #[test]

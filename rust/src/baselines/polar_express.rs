@@ -13,9 +13,9 @@
 //! reproduction must (and does) exhibit.
 
 use crate::linalg::decomp::lu_solve;
-use crate::linalg::gemm::{global_engine, matmul, syrk_at_a, GemmEngine};
+use crate::linalg::gemm::{global_engine, matmul, syrk_at_a, GemmEngine, Workspace};
 use crate::linalg::Mat;
-use crate::prism::driver::{IterationLog, RunRecorder, StopRule};
+use crate::prism::driver::{EngineHooks, IterationLog, RunRecorder, StopRule};
 use crate::util::{Error, Result};
 
 /// One stage's odd polynomial `p(x) = a x + b x³ + c x⁵`.
@@ -199,25 +199,75 @@ impl PolarExpress {
         matmul(x, &q)
     }
 
-    /// Full polar run: `X₀ = A/‖A‖_F`, iterate stages until `stop`. The
-    /// loop holds ping-pong buffers and runs allocation-free after
-    /// iteration 0, like the PRISM engines it is benchmarked against.
+    /// Full polar run: `X₀ = A/‖A‖_F`, iterate stages until `stop`. Thin
+    /// wrapper over [`PolarExpress::polar_in`] with a throwaway workspace.
     pub fn polar(&self, a: &Mat, stop: &StopRule) -> (Mat, IterationLog) {
+        self.polar_in(a, stop, &mut Workspace::new(), EngineHooks::none())
+    }
+
+    /// Workspace-pooled polar core; runs allocation-free from the second
+    /// same-shape call onward, like the PRISM engines it is benchmarked
+    /// against. `hooks.x0` warm-starts at `X₀ = x0`, but note the schedule is
+    /// *precomputed* — stage k still assumes the design interval, so warm
+    /// starts mainly skip the lift-off phase on near-orthogonal inputs.
+    pub(crate) fn polar_in(
+        &self,
+        a: &Mat,
+        stop: &StopRule,
+        ws: &mut Workspace,
+        hooks: EngineHooks<'_>,
+    ) -> (Mat, IterationLog) {
         let (m, n) = a.shape();
         if m < n {
-            let (q, log) = self.polar(&a.transpose(), stop);
+            let EngineHooks { x0, observer, event_base } = hooks;
+            let mut at = ws.take(n, m);
+            a.transpose_into(&mut at);
+            let x0t = x0.map(|x0| {
+                assert_eq!(x0.shape(), (m, n), "polar-express: x0 shape mismatch");
+                let mut t = ws.take(n, m);
+                x0.transpose_into(&mut t);
+                t
+            });
+            // The `match` re-coerces the observer's trait-object lifetime
+            // for the shorter-lived recursive hooks (Option's variance
+            // cannot).
+            let hooks_t = EngineHooks {
+                x0: x0t.as_ref(),
+                observer: match observer {
+                    Some(o) => Some(o),
+                    None => None,
+                },
+                event_base,
+            };
+            let (q, log) = self.polar_in(&at, stop, ws, hooks_t);
+            ws.put(at);
+            if let Some(t) = x0t {
+                ws.put(t);
+            }
             return (q.transpose(), log);
         }
         let eng = global_engine();
-        let mut x = a.scaled(1.0 / a.fro_norm().max(1e-300));
-        let mut xn = Mat::zeros(m, n);
-        let mut g = Mat::zeros(n, n);
-        let mut g2 = Mat::zeros(n, n);
-        let mut q = Mat::zeros(n, n);
-        let mut rbuf = Mat::zeros(n, n);
+        let mut x = ws.take(m, n);
+        match hooks.x0 {
+            Some(x0) => {
+                assert_eq!(x0.shape(), (m, n), "polar-express: x0 shape mismatch");
+                x.copy_from(x0);
+            }
+            None => {
+                x.copy_from(a);
+                x.scale(1.0 / a.fro_norm().max(1e-300));
+            }
+        }
+        let mut xn = ws.take(m, n);
+        let mut g = ws.take(n, n);
+        let mut g2 = ws.take(n, n);
+        let mut q = ws.take(n, n);
+        let mut rbuf = ws.take(n, n);
 
         let mut rn = polar_res(&eng, &mut rbuf, &x);
-        let mut rec = RunRecorder::start(rn);
+        let mut rec = RunRecorder::start(rn)
+            .with_observer(hooks.observer)
+            .with_event_base(hooks.event_base);
         for k in 0..stop.max_iters {
             if rn < stop.tol {
                 break;
@@ -232,32 +282,56 @@ impl PolarExpress {
             eng.matmul_into(&mut xn, &x, &q);
             std::mem::swap(&mut x, &mut xn);
             rn = polar_res(&eng, &mut rbuf, &x);
-            rec.step(p.a, rn);
-            if !rn.is_finite() || rn > stop.diverge_above {
+            if rec.step_guard(stop, p.a, rn) {
                 break;
             }
         }
-        (x, rec.finish(stop))
+        let out = (x.clone(), rec.finish(stop));
+        ws.put(x);
+        ws.put(xn);
+        ws.put(g);
+        ws.put(g2);
+        ws.put(q);
+        ws.put(rbuf);
+        out
     }
 
     /// Coupled form for SPD `A` (paper footnote 2, via Theorem 3):
     /// `X₀ = Ā`, `Y₀ = I`, `M = Y X`, `X ← X q(M)`, `Y ← q(M) Y` with
     /// `q(t) = aI + b t + c t²`; `X → Ā^{1/2}`, `Y → Ā^{-1/2}`.
     pub fn sqrt_coupled(&self, a: &Mat, stop: &StopRule) -> (Mat, Mat, IterationLog) {
+        self.sqrt_coupled_in(a, stop, &mut Workspace::new(), EngineHooks::none())
+    }
+
+    /// Workspace-pooled coupled-sqrt core (`hooks.x0` is ignored — the
+    /// coupled pair cannot resume from `X` alone).
+    pub(crate) fn sqrt_coupled_in(
+        &self,
+        a: &Mat,
+        stop: &StopRule,
+        ws: &mut Workspace,
+        hooks: EngineHooks<'_>,
+    ) -> (Mat, Mat, IterationLog) {
         let eng = global_engine();
         let n = a.rows();
         let c = a.fro_norm().max(1e-300);
-        let mut x = a.scaled(1.0 / c);
-        let mut y = Mat::eye(n);
-        let mut xn = Mat::zeros(n, n);
-        let mut yn = Mat::zeros(n, n);
-        let mut m = Mat::zeros(n, n);
-        let mut m2 = Mat::zeros(n, n);
-        let mut q = Mat::zeros(n, n);
-        let mut rbuf = Mat::zeros(n, n);
+        let mut x = ws.take(n, n);
+        x.copy_from(a);
+        x.scale(1.0 / c);
+        let mut y = ws.take(n, n);
+        y.fill_with(0.0);
+        y.add_diag(1.0);
+        let mut xn = ws.take(n, n);
+        let mut yn = ws.take(n, n);
+        let mut m = ws.take(n, n);
+        let mut m2 = ws.take(n, n);
+        let mut q = ws.take(n, n);
+        let mut rbuf = ws.take(n, n);
 
         let mut rn = coupled_res(&eng, &mut rbuf, &x, &y);
-        let mut rec = RunRecorder::start(rn);
+        let mut rec = RunRecorder::start(rn)
+            .with_observer(hooks.observer)
+            .with_event_base(hooks.event_base);
         for k in 0..stop.max_iters {
             if rn < stop.tol {
                 break;
@@ -274,13 +348,21 @@ impl PolarExpress {
             eng.matmul_into(&mut yn, &q, &y);
             std::mem::swap(&mut y, &mut yn);
             rn = coupled_res(&eng, &mut rbuf, &x, &y);
-            rec.step(p.a, rn);
-            if !rn.is_finite() || rn > stop.diverge_above {
+            if rec.step_guard(stop, p.a, rn) {
                 break;
             }
         }
         let sc = c.sqrt();
-        (x.scaled(sc), y.scaled(1.0 / sc), rec.finish(stop))
+        let out = (x.scaled(sc), y.scaled(1.0 / sc), rec.finish(stop));
+        ws.put(x);
+        ws.put(y);
+        ws.put(xn);
+        ws.put(yn);
+        ws.put(m);
+        ws.put(m2);
+        ws.put(q);
+        ws.put(rbuf);
+        out
     }
 }
 

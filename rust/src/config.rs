@@ -136,6 +136,11 @@ pub struct ServiceConfig {
     /// installed (e.g. via `--threads`) untouched — call
     /// [`crate::linalg::gemm::set_global_threads`]`(1)` to force sequential.
     pub gemm_threads: usize,
+    /// Stream per-iteration residuals from the workers over the service's
+    /// progress channel (`service.stream_residuals` in TOML, `--stream` on
+    /// the CLI). Off by default: the channel is unbounded, so someone must
+    /// drain [`crate::coordinator::service::Service::try_recv_progress`].
+    pub stream_residuals: bool,
 }
 
 impl Default for ServiceConfig {
@@ -148,6 +153,7 @@ impl Default for ServiceConfig {
             max_iters: 30,
             tol: 1e-7,
             gemm_threads: 1,
+            stream_residuals: false,
         }
     }
 }
@@ -165,6 +171,10 @@ impl ServiceConfig {
         c.max_iters = geti("service.max_iters", c.max_iters);
         c.tol = v.get_path("service.tol").and_then(|x| x.as_float()).unwrap_or(c.tol);
         c.gemm_threads = geti("service.gemm_threads", c.gemm_threads);
+        c.stream_residuals = v
+            .get_path("service.stream_residuals")
+            .and_then(|x| x.as_bool())
+            .unwrap_or(c.stream_residuals);
         c
     }
 }
@@ -220,6 +230,14 @@ backend = "prism3"
         let v = parse_toml("[service]\ngemm_threads = 4\n").unwrap();
         let c = ServiceConfig::from_value(&v);
         assert_eq!(c.gemm_threads, 4);
+    }
+
+    #[test]
+    fn service_config_stream_residuals_parses() {
+        let v = parse_toml("[service]\nstream_residuals = true\n").unwrap();
+        let c = ServiceConfig::from_value(&v);
+        assert!(c.stream_residuals);
+        assert!(!ServiceConfig::default().stream_residuals);
     }
 }
 

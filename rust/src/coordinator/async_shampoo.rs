@@ -259,6 +259,7 @@ mod tests {
             max_iters: 40,
             tol: 1e-7,
             gemm_threads: 1,
+            stream_residuals: false,
         };
         Service::start(cfg, Backend::Prism5, 9)
     }

@@ -4,20 +4,26 @@
 //! Training integrations submit gradient/covariance matrices tagged by layer
 //! and function kind; the router groups same-shape, same-kind jobs into
 //! batches (shared sketch draws amortise PRISM's fitting overhead within a
-//! batch), workers run the PRISM engines, and results flow back over a
-//! completion channel. Staleness scheduling lets Shampoo keep training on
+//! batch), workers run the jobs through the unified [`crate::matfn`] solver
+//! API, and results flow back over a completion channel. Each worker keeps
+//! one persistent [`Solver`] per (kind, shape) route, so a steady stream of
+//! same-shaped preconditioner jobs runs allocation-free — the Shampoo/Muon
+//! hot path. With `stream_residuals` set, workers attach a per-iteration
+//! observer and stream [`ResidualEvent`]s over a progress channel while jobs
+//! are still running, instead of making clients wait for the final
+//! `IterationLog`. Staleness scheduling lets Shampoo keep training on
 //! slightly-old preconditioners while refreshes are in flight — the pattern
 //! of Distributed Shampoo/DION.
 
 use crate::config::{Backend, ServiceConfig};
 use crate::linalg::Mat;
+use crate::matfn::{MatFnTask, Solver};
 use crate::metrics::Registry;
-use crate::optim::matfn::{InvRootBackend, PolarBackend};
 use crate::rng::Rng;
 use crate::util::{Error, Result, Stopwatch};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -58,6 +64,20 @@ pub struct JobResult {
     /// Queue wait + service time, seconds.
     pub latency_s: f64,
     pub batch_size: usize,
+    /// Iterations the solver ran.
+    pub iters: usize,
+    /// Final residual Frobenius norm.
+    pub final_residual: f64,
+}
+
+/// One per-iteration progress report, streamed while a job is running
+/// (only when [`ServiceConfig::stream_residuals`] is set).
+#[derive(Debug, Clone, Copy)]
+pub struct ResidualEvent {
+    pub id: u64,
+    pub layer: usize,
+    pub iter: usize,
+    pub residual: f64,
 }
 
 enum WorkerMsg {
@@ -69,6 +89,7 @@ enum WorkerMsg {
 pub struct Service {
     tx: SyncSender<WorkerMsg>,
     results_rx: Mutex<Receiver<JobResult>>,
+    progress_rx: Mutex<Receiver<ResidualEvent>>,
     workers: Vec<JoinHandle<()>>,
     pending: Arc<Mutex<BTreeMap<(u8, usize, usize), Vec<Job>>>>,
     cfg: ServiceConfig,
@@ -98,17 +119,23 @@ impl Service {
         let rx = Arc::new(Mutex::new(rx));
         let (res_tx, res_rx): (Sender<JobResult>, Receiver<JobResult>) =
             std::sync::mpsc::channel();
+        let (prog_tx, prog_rx): (Sender<ResidualEvent>, Receiver<ResidualEvent>) = channel();
         let metrics = Arc::new(Registry::default());
         let mut workers = Vec::new();
         for w in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
             let res_tx = res_tx.clone();
+            let prog_tx = prog_tx.clone();
             let metrics = Arc::clone(&metrics);
             let iters = cfg.max_iters;
+            let stream = cfg.stream_residuals;
             workers.push(std::thread::spawn(move || {
                 let mut rng = Rng::seed_from(seed ^ (w as u64 + 1));
-                let inv = InvRootBackend::new(backend, iters);
-                let pol = PolarBackend::new(backend, iters);
+                // One persistent solver per (kind, shape) route: same-shape
+                // jobs reuse the solver's workspace, so the steady-state
+                // preconditioner stream runs allocation-free.
+                let mut solvers: BTreeMap<(u8, usize, usize), Solver> = BTreeMap::new();
+                let mut damped = Mat::zeros(0, 0);
                 let service_time = metrics.histogram("service.exec_s");
                 let done = metrics.counter("service.jobs_done");
                 loop {
@@ -117,22 +144,50 @@ impl Service {
                         Ok(WorkerMsg::Batch(jobs)) => {
                             let bsize = jobs.len();
                             for job in jobs {
+                                let key = job.kind.route_key(job.matrix.shape());
+                                let solver = solvers.entry(key).or_insert_with(|| {
+                                    let task = match job.kind {
+                                        JobKind::InvSqrt { .. } => MatFnTask::InvSqrt,
+                                        JobKind::Polar => MatFnTask::Polar,
+                                    };
+                                    Solver::for_backend(backend, task, iters)
+                                        .expect("service backends always have polar/invsqrt forms")
+                                });
+                                if stream {
+                                    let ptx = prog_tx.clone();
+                                    let (id, layer) = (job.id, job.layer);
+                                    solver.set_observer(Some(Box::new(move |ev| {
+                                        let _ = ptx.send(ResidualEvent {
+                                            id,
+                                            layer,
+                                            iter: ev.iter,
+                                            residual: ev.residual,
+                                        });
+                                    })));
+                                }
                                 let sw = Stopwatch::start();
-                                let result = match job.kind {
+                                let out = match job.kind {
                                     JobKind::InvSqrt { eps } => {
-                                        inv.inv_sqrt(&job.matrix, eps, &mut rng)
+                                        damped.copy_from(&job.matrix);
+                                        damped.add_diag(eps);
+                                        solver.solve(&damped, &mut rng)
                                     }
-                                    JobKind::Polar => pol.polar(&job.matrix, &mut rng),
+                                    JobKind::Polar => solver.solve(&job.matrix, &mut rng),
                                 };
+                                if stream {
+                                    solver.set_observer(None);
+                                }
                                 service_time.observe(sw.elapsed_s());
                                 done.inc();
                                 let latency_s = job.submitted.elapsed().as_secs_f64();
                                 let _ = res_tx.send(JobResult {
                                     id: job.id,
                                     layer: job.layer,
-                                    result,
+                                    result: out.primary,
                                     latency_s,
                                     batch_size: bsize,
+                                    iters: out.log.iters(),
+                                    final_residual: out.log.final_residual(),
                                 });
                             }
                         }
@@ -144,6 +199,7 @@ impl Service {
         Service {
             tx,
             results_rx: Mutex::new(res_rx),
+            progress_rx: Mutex::new(prog_rx),
             workers,
             pending: Arc::new(Mutex::new(BTreeMap::new())),
             cfg,
@@ -226,6 +282,14 @@ impl Service {
         Ok(r)
     }
 
+    /// Non-blocking receive of the next streamed per-iteration residual.
+    /// Only produces events when [`ServiceConfig::stream_residuals`] is set;
+    /// clients poll this to watch convergence while jobs are in flight
+    /// instead of waiting for the final `IterationLog`.
+    pub fn try_recv_progress(&self) -> Option<ResidualEvent> {
+        self.progress_rx.lock().unwrap().try_recv().ok()
+    }
+
     /// Non-blocking receive: returns `None` when no result is ready yet.
     /// Used by staleness-tolerant callers (e.g. [`super::async_shampoo`])
     /// that keep working with old results while refreshes are in flight.
@@ -284,6 +348,7 @@ mod tests {
             max_iters: 40,
             tol: 1e-7,
             gemm_threads: 1,
+            stream_residuals: false,
         }
     }
 
@@ -358,6 +423,45 @@ mod tests {
             let n = if r.layer % 2 == 0 { 5 } else { 7 };
             assert_eq!(r.result.shape(), (n, n));
         }
+    }
+
+    #[test]
+    fn streams_residual_trajectory_when_enabled() {
+        let mut rng = Rng::seed_from(6);
+        let mut c = cfg(1, 1);
+        c.stream_residuals = true;
+        let svc = Service::start(c, Backend::Prism5, 9);
+        let w = randmat::logspace(1e-2, 1.0, 8);
+        let a = randmat::sym_with_spectrum(&mut rng, 8, &w);
+        svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        let results = svc.drain().unwrap();
+        assert_eq!(results.len(), 1);
+        // Once the job is done, its full trajectory has been streamed.
+        let mut events = Vec::new();
+        while let Some(ev) = svc.try_recv_progress() {
+            events.push(ev);
+        }
+        assert_eq!(events.len(), results[0].iters, "one event per iteration");
+        assert!(events.iter().all(|e| e.layer == 0));
+        for (k, ev) in events.iter().enumerate() {
+            assert_eq!(ev.iter, k);
+        }
+        let last = events.last().expect("at least one iteration");
+        assert!(
+            (last.residual - results[0].final_residual).abs() <= 1e-12,
+            "stream tail must match the final residual"
+        );
+    }
+
+    #[test]
+    fn no_progress_events_by_default() {
+        let mut rng = Rng::seed_from(7);
+        let svc = Service::start(cfg(1, 1), Backend::Prism5, 11);
+        let w = randmat::logspace(0.1, 1.0, 6);
+        let a = randmat::sym_with_spectrum(&mut rng, 6, &w);
+        svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        let _ = svc.drain().unwrap();
+        assert!(svc.try_recv_progress().is_none());
     }
 
     #[test]

@@ -24,22 +24,30 @@
 //! 3. **Baselines**: [`baselines`] — classical Newton–Schulz, PolarExpress
 //!    (minimax/equioscillation), CANS-style Chebyshev acceleration, and
 //!    eigendecomposition-based matrix functions.
-//! 4. **Application layer**: [`optim`] (Muon, Shampoo, AdamW, SGD with
+//! 4. **The solver API**: [`matfn`] — the single public surface over every
+//!    engine and baseline: a typed task + spec request, a string-keyed
+//!    [`matfn::registry`] for CLI/config/service dispatch, and a stateful
+//!    [`matfn::Solver`] whose cross-call workspace makes repeated same-shape
+//!    solves allocation-free (warm-start and per-iteration observer hooks
+//!    included).
+//! 5. **Application layer**: [`optim`] (Muon, Shampoo, AdamW, SGD with
 //!    pluggable matrix-function backends), [`nn`] (manual-backprop networks
 //!    for the Fig. 5 experiments), [`runtime`] (PJRT loading of AOT-compiled
 //!    JAX/Pallas artifacts) and [`coordinator`] (the L3 preconditioner
-//!    service + training driver).
+//!    service + training driver) — all dispatching through [`matfn`].
 //!
 //! ## Quick start
 //!
 //! ```
-//! use prism::randmat;
-//! use prism::rng::Rng;
-//! use prism::prism::polar::{polar_prism, PolarOpts};
+//! use prism::matfn::{registry, MatFnSolver};
+//! use prism::{randmat, Rng};
 //!
 //! let mut rng = Rng::seed_from(42);
 //! let a = randmat::gaussian(&mut rng, 96, 48);
-//! let out = polar_prism(&a, &PolarOpts::degree5(), &mut rng);
+//! // Plan once (any name from `registry::names()`), execute many times —
+//! // the solver reuses its iteration buffers across same-shape calls.
+//! let mut solver = registry::resolve("prism5-polar").unwrap();
+//! let out = solver.solve(&a, &mut rng);
 //! assert!(out.log.final_residual() < 1e-6);
 //! ```
 #![allow(clippy::needless_range_loop)]
@@ -61,10 +69,12 @@ pub mod polyfit;
 pub mod coeffs;
 pub mod prism;
 pub mod baselines;
+pub mod matfn;
 pub mod optim;
 pub mod nn;
 pub mod runtime;
 pub mod coordinator;
 
 pub use linalg::Mat;
+pub use matfn::{MatFnSolver, MatFnTask, Solver};
 pub use rng::Rng;

@@ -108,6 +108,13 @@ impl Mat {
     pub fn as_slice(&self) -> &[f64] {
         &self.data
     }
+    /// Element capacity of the backing allocation (≥ rows·cols). Used by
+    /// [`gemm::Workspace`] to hand out buffers that can be reshaped to a
+    /// requested size without reallocating.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data

@@ -16,22 +16,19 @@
 //!
 //! Run with no args for usage.
 
-use prism::baselines::polar_express::PolarExpress;
 use prism::cli::Args;
 use prism::config::{Backend, ServiceConfig, TrainConfig};
 use prism::coordinator::service::{JobKind, Service};
 use prism::coordinator::train::TrainDriver;
 use prism::linalg::Mat;
+use prism::matfn::{registry, MatFnOutput, MatFnTask};
 use prism::optim::adamw::AdamW;
 use prism::optim::muon::Muon;
 use prism::optim::shampoo::Shampoo;
 use prism::optim::Optimizer;
-use prism::prism::chebyshev::{chebyshev_inverse, ChebyshevOpts};
-use prism::prism::inverse_newton::{inv_root_prism, InvRootOpts};
-use prism::prism::polar::{orthogonality_error, polar_prism, PolarOpts};
-use prism::prism::sign::{sign_prism, SignOpts};
-use prism::prism::sqrt::{sqrt_error, sqrt_prism, SqrtOpts};
-use prism::prism::{AlphaMode, IterationLog, StopRule};
+use prism::prism::polar::orthogonality_error;
+use prism::prism::sqrt::sqrt_error;
+use prism::prism::{IterationLog, StopRule};
 use prism::randmat;
 use prism::rng::Rng;
 use prism::runtime::Runtime;
@@ -66,8 +63,14 @@ COMMON FLAGS:
   --tol T          residual tolerance       (default 1e-7)
   --d D            polynomial degree 1|2    (default 2)
   --sketch P       sketch rows p            (default 8)
-  --backends LIST  comma list: classic,prism,polarexpress,exact
+  --backends LIST  comma list of matfn methods: classic,prism,exact,
+                   polarexpress,cans,newton,eigen (per-command defaults)
+  --stream         serve: stream per-iteration residuals from the workers
   --artifacts DIR  artifact directory       (default artifacts)
+
+All subcommands dispatch through the matfn solver registry; any
+`<method>-<task>` name from `prism::matfn::registry::names()` (e.g.
+prism5-polar, newton-sqrt, cheb-inverse) is also accepted in --backends.
 ";
 
 fn main() {
@@ -140,6 +143,63 @@ fn stop_rule(args: &Args) -> prism::util::Result<StopRule> {
         .with_tol(args.get_f64("tol", 1e-7)?))
 }
 
+/// Resolve a registry name into a solver with the CLI's stop rule and sketch
+/// size applied, then run it. Every subcommand dispatches through here — the
+/// engines are never called directly.
+fn solve_named(
+    name: &str,
+    stop: StopRule,
+    d: usize,
+    sketch_p: usize,
+    a: &Mat,
+    rng: &mut Rng,
+) -> prism::util::Result<(String, MatFnOutput)> {
+    let mut solver = registry::resolve(name)?;
+    solver.set_stop(stop);
+    // `--d` applies only to Newton–Schulz solvers whose name does NOT encode
+    // an order (ns-*, prism-exact-*); an explicit `prismN-*` name keeps its
+    // own degree — otherwise `--backends prism3-polar` would silently run
+    // (and be labelled as) a different order.
+    let sketched = matches!(
+        solver.spec().alpha,
+        prism::prism::AlphaMode::Sketched { .. } | prism::prism::AlphaMode::SketchedKind { .. }
+    );
+    if solver.spec().method == prism::matfn::Method::NewtonSchulz && !sketched {
+        solver.spec_mut().d = d;
+    }
+    if sketch_p != 8 {
+        if let prism::prism::AlphaMode::Sketched { .. } = solver.spec().alpha {
+            solver.spec_mut().alpha = prism::prism::AlphaMode::Sketched { p: sketch_p };
+        }
+    }
+    let label = solver.name();
+    let out = solver.solve(a, rng);
+    Ok((label, out))
+}
+
+/// Map a CLI `--backends` token to a registry name for `task`: the short
+/// tokens keep their historical meaning, anything containing `-` is taken as
+/// a full registry name, and any other bare method token is paired with the
+/// task (`eigen` → `eigen-polar`).
+fn registry_name(token: &str, task: MatFnTask, d: usize) -> String {
+    match token {
+        "classic" | "ns" => match task {
+            MatFnTask::InvRoot { .. } => format!("invnewton-classic-{}", task.name()),
+            MatFnTask::Inverse => format!("cheb-classic-{}", task.name()),
+            _ => format!("ns-{}", task.name()),
+        },
+        "prism" => match task {
+            MatFnTask::InvRoot { .. } => format!("invnewton-{}", task.name()),
+            MatFnTask::Inverse => format!("cheb-{}", task.name()),
+            _ => format!("prism{}-{}", 2 * d + 1, task.name()),
+        },
+        "exact" => format!("prism-exact-{}", task.name()),
+        "polarexpress" | "pe" => format!("pe-{}", task.name()),
+        full if full.contains('-') => full.to_string(),
+        method => format!("{method}-{}", task.name()),
+    }
+}
+
 fn print_log(name: &str, log: &IterationLog, extra: &str) {
     println!(
         "  {name:<14} iters={:<4} residual={:<12.3e} time={:>8.2}ms {}",
@@ -172,44 +232,15 @@ fn cmd_polar(args: &Args) -> prism::util::Result<()> {
         a.cols(),
         args.get_string("spectrum", "gaussian")
     );
-    for b in backends.split(',') {
-        match b.trim() {
-            "classic" => {
-                let out = polar_prism(&a, &PolarOpts::classic(d).with_stop(stop), &mut rng);
-                print_log(
-                    "classic-NS",
-                    &out.log,
-                    &format!("orth-err={:.2e}", orthogonality_error(&out.q)),
-                );
-            }
-            "prism" => {
-                let opts = PolarOpts { d, alpha: AlphaMode::Sketched { p }, stop };
-                let out = polar_prism(&a, &opts, &mut rng);
-                print_log(
-                    &format!("PRISM-{}", 2 * d + 1),
-                    &out.log,
-                    &format!("orth-err={:.2e}", orthogonality_error(&out.q)),
-                );
-            }
-            "exact" => {
-                let opts = PolarOpts { d, alpha: AlphaMode::Exact, stop };
-                let out = polar_prism(&a, &opts, &mut rng);
-                print_log(
-                    "PRISM-exact",
-                    &out.log,
-                    &format!("orth-err={:.2e}", orthogonality_error(&out.q)),
-                );
-            }
-            "polarexpress" => {
-                let pe = PolarExpress::paper_default();
-                let (q, log) = pe.polar(&a, &stop);
-                print_log(
-                    "PolarExpress",
-                    &log,
-                    &format!("orth-err={:.2e}", orthogonality_error(&q)),
-                );
-            }
-            other => eprintln!("  (unknown backend '{other}', skipped)"),
+    for tok in backends.split(',') {
+        let name = registry_name(tok.trim(), MatFnTask::Polar, d);
+        match solve_named(&name, stop, d, p, &a, &mut rng) {
+            Ok((label, out)) => print_log(
+                &label,
+                &out.log,
+                &format!("orth-err={:.2e}", orthogonality_error(&out.primary)),
+            ),
+            Err(e) => eprintln!("  (skipping '{}': {e})", tok.trim()),
         }
     }
     Ok(())
@@ -222,16 +253,24 @@ fn cmd_sqrt(args: &Args) -> prism::util::Result<()> {
     let a = prism::linalg::gemm::syrk_at_a(&g);
     let stop = stop_rule(args)?;
     let d = args.get_usize("d", 2)?;
+    let p = args.get_usize("sketch", 8)?;
+    let backends = args.get_string("backends", "classic,prism");
     println!("sqrt: A = GᵀG is {}x{}", a.rows(), a.cols());
-    for (name, opts) in [
-        ("classic-NS", SqrtOpts::classic(d).with_stop(stop)),
-        (
-            "PRISM",
-            if d == 1 { SqrtOpts::degree3() } else { SqrtOpts::degree5() }.with_stop(stop),
-        ),
-    ] {
-        let out = sqrt_prism(&a, &opts, &mut rng);
-        print_log(name, &out.log, &format!("‖I−YAY‖={:.2e}", sqrt_error(&a, &out.inv_sqrt)));
+    for tok in backends.split(',') {
+        let name = registry_name(tok.trim(), MatFnTask::Sqrt, d);
+        match solve_named(&name, stop, d, p, &a, &mut rng) {
+            Ok((label, out)) => {
+                // The coupled methods return A^{-1/2} as the secondary
+                // output; use it for the paper's Fig. D.3 error metric.
+                let extra = out
+                    .secondary
+                    .as_ref()
+                    .map(|y| format!("‖I−YAY‖={:.2e}", sqrt_error(&a, y)))
+                    .unwrap_or_default();
+                print_log(&label, &out.log, &extra);
+            }
+            Err(e) => eprintln!("  (skipping '{}': {e})", tok.trim()),
+        }
     }
     Ok(())
 }
@@ -242,13 +281,16 @@ fn cmd_invroot(args: &Args) -> prism::util::Result<()> {
     let a = prism::linalg::gemm::syrk_at_a(&g);
     let stop = stop_rule(args)?;
     let p = args.get_usize("p", 2)?;
+    let sketch = args.get_usize("sketch", 8)?;
+    let d = args.get_usize("d", 2)?;
+    let backends = args.get_string("backends", "classic,prism");
     println!("invroot: A^(-1/{p}), A is {}x{}", a.rows(), a.cols());
-    for (name, opts) in [
-        ("classic", InvRootOpts::classic(p).with_stop(stop)),
-        ("PRISM", InvRootOpts::prism(p).with_stop(stop)),
-    ] {
-        let out = inv_root_prism(&a, &opts, &mut rng);
-        print_log(name, &out.log, "");
+    for tok in backends.split(',') {
+        let name = registry_name(tok.trim(), MatFnTask::InvRoot { p }, d);
+        match solve_named(&name, stop, d, sketch, &a, &mut rng) {
+            Ok((label, out)) => print_log(&label, &out.log, ""),
+            Err(e) => eprintln!("  (skipping '{}': {e})", tok.trim()),
+        }
     }
     Ok(())
 }
@@ -257,13 +299,16 @@ fn cmd_inverse(args: &Args) -> prism::util::Result<()> {
     let mut rng = Rng::seed_from(args.get_u64("seed", 42)?);
     let a = test_matrix(args, &mut rng, true)?;
     let stop = stop_rule(args)?;
+    let sketch = args.get_usize("sketch", 8)?;
+    let d = args.get_usize("d", 2)?;
+    let backends = args.get_string("backends", "classic,prism");
     println!("inverse: A is {}x{}", a.rows(), a.cols());
-    for (name, opts) in [
-        ("classic-Cheb", ChebyshevOpts::classic().with_stop(stop)),
-        ("PRISM-Cheb", ChebyshevOpts::prism().with_stop(stop)),
-    ] {
-        let out = chebyshev_inverse(&a, &opts, &mut rng);
-        print_log(name, &out.log, "");
+    for tok in backends.split(',') {
+        let name = registry_name(tok.trim(), MatFnTask::Inverse, d);
+        match solve_named(&name, stop, d, sketch, &a, &mut rng) {
+            Ok((label, out)) => print_log(&label, &out.log, ""),
+            Err(e) => eprintln!("  (skipping '{}': {e})", tok.trim()),
+        }
     }
     Ok(())
 }
@@ -281,14 +326,15 @@ fn cmd_sign(args: &Args) -> prism::util::Result<()> {
     let a = randmat::sym_with_spectrum(&mut rng, n, &w);
     let stop = stop_rule(args)?;
     let d = args.get_usize("d", 1)?;
+    let sketch = args.get_usize("sketch", 8)?;
+    let backends = args.get_string("backends", "classic,prism,exact");
     println!("sign: A is {n}x{n}, eigenvalues in ±[{smin:.1e}, 1]");
-    for (name, alpha) in [
-        ("classic-NS", AlphaMode::Classic),
-        ("PRISM", AlphaMode::Sketched { p: args.get_usize("sketch", 8)? }),
-        ("PRISM-exact", AlphaMode::Exact),
-    ] {
-        let out = sign_prism(&a, &SignOpts { d, alpha, stop, normalize: true }, &mut rng);
-        print_log(name, &out.log, "");
+    for tok in backends.split(',') {
+        let name = registry_name(tok.trim(), MatFnTask::Sign, d);
+        match solve_named(&name, stop, d, sketch, &a, &mut rng) {
+            Ok((label, out)) => print_log(&label, &out.log, ""),
+            Err(e) => eprintln!("  (skipping '{}': {e})", tok.trim()),
+        }
     }
     Ok(())
 }
@@ -296,6 +342,7 @@ fn cmd_sign(args: &Args) -> prism::util::Result<()> {
 fn cmd_serve(args: &Args) -> prism::util::Result<()> {
     let seed = args.get_u64("seed", 42)?;
     let jobs = args.get_usize("jobs", 64)?;
+    let stream_res = args.has_switch("stream");
     let cfg = ServiceConfig {
         workers: args.get_usize("workers", 4)?,
         queue_capacity: 128,
@@ -304,6 +351,7 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
         max_iters: args.get_usize("iters", 60)?,
         tol: args.get_f64("tol", 1e-7)?,
         gemm_threads: args.get_usize("threads", 1)?,
+        stream_residuals: stream_res,
     };
     let backend = Backend::parse(&args.get_string("backend", "prism5"))?;
     let kappa = args.get_f64("kappa", 0.5)?;
@@ -336,6 +384,22 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
         wall,
         results.len() as f64 / wall
     );
+    if stream_res {
+        // Drain the per-iteration residual stream the workers emitted while
+        // the jobs were running (the Observer hook through the matfn API).
+        let mut events = 0usize;
+        let mut last: Option<prism::coordinator::service::ResidualEvent> = None;
+        while let Some(ev) = svc.try_recv_progress() {
+            events += 1;
+            last = Some(ev);
+        }
+        if let Some(ev) = last {
+            println!(
+                "  streamed {events} residual points (last: job {} iter {} residual {:.2e})",
+                ev.id, ev.iter, ev.residual
+            );
+        }
+    }
     println!("{}", svc.report());
     Ok(())
 }

@@ -1,0 +1,236 @@
+//! # `matfn` — the unified matrix-function solver API
+//!
+//! One request/plan/execute surface over every iteration engine in the
+//! crate: the six PRISM engines (Table 1 of the paper) *and* the baselines
+//! (PolarExpress, CANS, eigendecomposition) are reachable through a single
+//! typed entry point, so CLI flags, TOML configs, the coordinator service
+//! and the optimizers all dispatch the same way.
+//!
+//! The three pieces:
+//!
+//! * **Request** — a [`MatFnTask`] (*what* to compute: `A^{1/2}`, `A^{-1/p}`,
+//!   the polar factor, …) plus a [`SolverSpec`] (*how*: method, degree,
+//!   [`AlphaMode`], [`StopRule`]).
+//! * **Plan** — [`Solver::new`] validates the (task, method) pair and builds
+//!   a stateful [`Solver`]; [`registry::resolve`] does the same from a
+//!   string key like `"prism5-polar"`, for config/CLI/service dispatch.
+//! * **Execute** — [`MatFnSolver::solve`] runs the iteration. The solver
+//!   **owns its ping-pong buffers** (a [`crate::linalg::gemm::Workspace`])
+//!   and reuses them across calls, so from the second same-shape call onward
+//!   the hot loop performs zero heap allocations — exactly the
+//!   Shampoo/Muon pattern of calling the same function on same-shaped
+//!   matrices thousands of times. [`MatFnSolver::solve_from`] warm-starts
+//!   from a previous result (paper §C), and [`MatFnSolver::set_observer`]
+//!   streams per-iteration residuals instead of waiting for the final
+//!   [`IterationLog`].
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use prism::matfn::{registry, MatFnSolver};
+//! use prism::{randmat, Rng};
+//!
+//! let mut rng = Rng::seed_from(42);
+//! let a = randmat::gaussian(&mut rng, 96, 48);
+//! let mut solver = registry::resolve("prism5-polar").unwrap();
+//! let out = solver.solve(&a, &mut rng);        // cold call: allocates buffers
+//! assert!(out.log.final_residual() < 1e-6);
+//! let allocs = solver.workspace_allocations();
+//! let _ = solver.solve(&a, &mut rng);          // warm call: zero allocations
+//! assert_eq!(solver.workspace_allocations(), allocs);
+//! ```
+
+pub mod registry;
+mod solver;
+
+pub use solver::Solver;
+
+use crate::linalg::Mat;
+use crate::prism::driver::{AlphaMode, IterEvent, IterationLog, StopRule};
+use crate::rng::Rng;
+
+/// *What* to compute — one variant per matrix function the repo serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatFnTask {
+    /// `A^{1/2}` for SPD `A` (coupled methods also return `A^{-1/2}`).
+    Sqrt,
+    /// `A^{-1/2}` for SPD `A` — Shampoo's preconditioner root.
+    InvSqrt,
+    /// `A^{-1/p}` for SPD `A`, `p ≥ 1`.
+    InvRoot { p: usize },
+    /// The polar factor `U Vᵀ` (any orientation) — Muon's primitive.
+    Polar,
+    /// `sign(A)` for `A` with `A²` symmetric.
+    Sign,
+    /// `A⁻¹` for full-rank `A`.
+    Inverse,
+}
+
+impl MatFnTask {
+    /// Canonical task token used in registry keys (`"invroot4"`, `"polar"`).
+    pub fn name(&self) -> String {
+        match self {
+            MatFnTask::Sqrt => "sqrt".into(),
+            MatFnTask::InvSqrt => "invsqrt".into(),
+            MatFnTask::InvRoot { p } => format!("invroot{p}"),
+            MatFnTask::Polar => "polar".into(),
+            MatFnTask::Sign => "sign".into(),
+            MatFnTask::Inverse => "inverse".into(),
+        }
+    }
+}
+
+/// *How* to compute it — the iteration family and its knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Newton–Schulz family (polar/sign/coupled-sqrt); classic or PRISM
+    /// depending on the [`AlphaMode`].
+    NewtonSchulz,
+    /// Coupled inverse Newton for `A^{-1/p}` (Table 1 row 5).
+    InverseNewton,
+    /// Denman–Beavers product-form Newton for the square root (row 6).
+    DbNewton,
+    /// Chebyshev iteration for the inverse (row 7).
+    Chebyshev,
+    /// PolarExpress minimax polynomials (baseline, σ_min = 1e-3 tuning).
+    PolarExpress,
+    /// CANS-style rescaled Newton–Schulz (baseline).
+    Cans,
+    /// Exact eigendecomposition / SVD (baseline and oracle).
+    Eigen,
+}
+
+/// A full solver specification: method, degree `d` (Newton–Schulz order
+/// `2d+1`), α-selection mode, stopping rule, and the Muon warm-α phase
+/// length (paper §C; 0 disables it).
+#[derive(Debug, Clone, Copy)]
+pub struct SolverSpec {
+    pub method: Method,
+    pub d: usize,
+    pub alpha: AlphaMode,
+    pub stop: StopRule,
+    pub warm_iters: usize,
+}
+
+impl SolverSpec {
+    fn base(method: Method) -> SolverSpec {
+        SolverSpec {
+            method,
+            d: 2,
+            alpha: AlphaMode::Sketched { p: 8 },
+            stop: StopRule::default(),
+            warm_iters: 0,
+        }
+    }
+
+    /// PRISM Newton–Schulz of order `2d+1` with the default sketch (p = 8).
+    pub fn prism(d: usize) -> SolverSpec {
+        SolverSpec { d, ..Self::base(Method::NewtonSchulz) }
+    }
+    /// Classical Newton–Schulz of order `2d+1` (fixed Taylor coefficients).
+    pub fn ns_classic(d: usize) -> SolverSpec {
+        SolverSpec { d, alpha: AlphaMode::Classic, ..Self::base(Method::NewtonSchulz) }
+    }
+    /// PRISM with exact O(n³) traces (ablation).
+    pub fn prism_exact(d: usize) -> SolverSpec {
+        SolverSpec { d, alpha: AlphaMode::Exact, ..Self::base(Method::NewtonSchulz) }
+    }
+    /// DB-Newton; `prism` selects the exact O(n²) α fit vs. classical α = ½.
+    pub fn db_newton(prism: bool) -> SolverSpec {
+        let alpha = if prism { AlphaMode::Exact } else { AlphaMode::Classic };
+        SolverSpec { alpha, ..Self::base(Method::DbNewton) }
+    }
+    /// Chebyshev inverse; `prism` selects the sketched α fit vs. α = 1.
+    pub fn chebyshev(prism: bool) -> SolverSpec {
+        let alpha = if prism { AlphaMode::Sketched { p: 8 } } else { AlphaMode::Classic };
+        SolverSpec { alpha, ..Self::base(Method::Chebyshev) }
+    }
+    /// Coupled inverse Newton; `prism` selects the sketched α fit vs. α = 1/p.
+    pub fn inverse_newton(prism: bool) -> SolverSpec {
+        let alpha = if prism { AlphaMode::Sketched { p: 8 } } else { AlphaMode::Classic };
+        SolverSpec { alpha, ..Self::base(Method::InverseNewton) }
+    }
+    /// PolarExpress with the paper's σ_min = 1e-3 schedule.
+    pub fn polar_express() -> SolverSpec {
+        Self::base(Method::PolarExpress)
+    }
+    /// CANS-style rescaled classical Newton–Schulz.
+    pub fn cans() -> SolverSpec {
+        Self::base(Method::Cans)
+    }
+    /// Exact eigendecomposition / SVD.
+    pub fn eigen() -> SolverSpec {
+        Self::base(Method::Eigen)
+    }
+
+    pub fn with_stop(mut self, stop: StopRule) -> SolverSpec {
+        self.stop = stop;
+        self
+    }
+    pub fn with_alpha(mut self, alpha: AlphaMode) -> SolverSpec {
+        self.alpha = alpha;
+        self
+    }
+    pub fn with_warm_iters(mut self, warm_iters: usize) -> SolverSpec {
+        self.warm_iters = warm_iters;
+        self
+    }
+}
+
+/// Result of one solve: the requested function value, a coupled by-product
+/// when the method computes one for free (e.g. `A^{-1/2}` alongside
+/// `A^{1/2}`), and the full iteration log.
+#[derive(Debug)]
+pub struct MatFnOutput {
+    pub primary: Mat,
+    pub secondary: Option<Mat>,
+    pub log: IterationLog,
+}
+
+/// Boxed per-iteration callback installed via [`MatFnSolver::set_observer`].
+pub type BoxObserver = Box<dyn FnMut(&IterEvent) + Send>;
+
+/// The trait every solver — PRISM engine or baseline — is served through.
+///
+/// `solve` takes `&mut self` because a solver owns its cross-call workspace;
+/// reusing one solver for a stream of same-shape inputs is the intended
+/// (and fastest) usage.
+pub trait MatFnSolver {
+    /// The task this solver was planned for.
+    fn task(&self) -> MatFnTask;
+
+    /// Registry-style name, e.g. `"prism5-polar"`. For every registered
+    /// configuration, `registry::resolve(self.name())` rebuilds an
+    /// equivalent solver.
+    fn name(&self) -> String;
+
+    /// Compute the matrix function of `a`.
+    fn solve(&mut self, a: &Mat, rng: &mut Rng) -> MatFnOutput;
+
+    /// Warm-start from `x0`, a previous result for the same or a nearby
+    /// input (paper §C). Semantics differ by engine family:
+    ///
+    /// * **Chebyshev inverse / inverse Newton** re-reference `a` every
+    ///   iteration, so this is a true warm start: the iteration polishes
+    ///   `x0` *towards the new input's* answer (re-solving after a small
+    ///   drift takes a couple of iterations instead of a full run).
+    /// * **Polar / sign** (Newton–Schulz family and the polar baselines)
+    ///   are self-contained in the iterate — the input enters only through
+    ///   `X₀` — so `solve_from` orthogonally polishes `x0` itself. That is
+    ///   exact when `a` is the matrix that produced `x0` and a first-order
+    ///   approximation (error `O(‖ΔA‖)`) under drift — the optimizer-step
+    ///   trade Muon makes when gradients barely change between steps.
+    /// * **Coupled square-root methods** cannot resume from `X` alone and
+    ///   fall back to a cold [`MatFnSolver::solve`].
+    fn solve_from(&mut self, a: &Mat, x0: &Mat, rng: &mut Rng) -> MatFnOutput {
+        let _ = x0;
+        self.solve(a, rng)
+    }
+
+    /// Install (`Some`) or remove (`None`) a per-iteration observer; the
+    /// coordinator service uses this to stream residual trajectories while a
+    /// job is still running.
+    fn set_observer(&mut self, observer: Option<BoxObserver>) {
+        let _ = observer;
+    }
+}

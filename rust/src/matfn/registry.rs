@@ -1,0 +1,199 @@
+//! String-keyed solver registry: `"<method>-<task>"` → [`Solver`].
+//!
+//! This is the dispatch surface for CLI flags, TOML configs and the
+//! coordinator service. A key's *method* half reuses the vocabulary of
+//! [`crate::config::Backend::parse`] (`ns`, `prism3`, `prism5`, `pe`,
+//! `eigen`, `newton`, …) extended with the solver families that are not
+//! optimizer backends (`cans`, `cheb`, `invnewton`, classic variants); the
+//! *task* half is a [`MatFnTask`] token (`polar`, `sign`, `sqrt`,
+//! `invsqrt`, `invrootN`, `inverse`).
+//!
+//! [`resolve`] also accepts aliases (`"polar-express-polar"`,
+//! `"classic-sqrt"`, any odd `"prismN"`, any `"invrootN"`); [`names`] lists
+//! the canonical keys, and unknown keys produce an error that enumerates
+//! them.
+
+use super::{MatFnTask, Solver, SolverSpec};
+use crate::util::{Error, Result};
+
+/// Canonical registry keys: every entry resolves, and for each the resolved
+/// solver's [`Solver::name`] equals the key (asserted by the round-trip
+/// tests).
+pub const NAMES: &[&str] = &[
+    // polar (Muon's primitive; Figs. 1, 3, 4)
+    "ns-polar",
+    "prism3-polar",
+    "prism5-polar",
+    "prism-exact-polar",
+    "pe-polar",
+    "cans-polar",
+    "eigen-polar",
+    // sign (§4 case study)
+    "ns-sign",
+    "prism3-sign",
+    "prism5-sign",
+    "prism-exact-sign",
+    "eigen-sign",
+    // sqrt (Figs. D.3–D.5)
+    "ns-sqrt",
+    "prism3-sqrt",
+    "prism5-sqrt",
+    "newton-sqrt",
+    "newton-classic-sqrt",
+    "pe-sqrt",
+    "eigen-sqrt",
+    // inverse sqrt (Shampoo's primitive; Fig. 5)
+    "ns-invsqrt",
+    "prism3-invsqrt",
+    "prism5-invsqrt",
+    "newton-invsqrt",
+    "newton-classic-invsqrt",
+    "invnewton-invsqrt",
+    "invnewton-classic-invsqrt",
+    "pe-invsqrt",
+    "eigen-invsqrt",
+    // general inverse roots (Table 1 row 5)
+    "invnewton-invroot2",
+    "invnewton-classic-invroot2",
+    "invnewton-invroot4",
+    "eigen-invroot2",
+    "eigen-invroot4",
+    // inverse (Table 1 row 7)
+    "cheb-inverse",
+    "cheb-classic-inverse",
+    "invnewton-inverse",
+    "eigen-inverse",
+];
+
+/// The canonical registry keys.
+pub fn names() -> &'static [&'static str] {
+    NAMES
+}
+
+fn unknown(name: &str) -> Error {
+    Error::Parse(format!(
+        "unknown matfn solver '{name}' (want <method>-<task>); valid names: {}",
+        NAMES.join(", ")
+    ))
+}
+
+fn parse_task(tok: &str) -> Option<MatFnTask> {
+    match tok {
+        "polar" => Some(MatFnTask::Polar),
+        "sign" => Some(MatFnTask::Sign),
+        "sqrt" => Some(MatFnTask::Sqrt),
+        "invsqrt" => Some(MatFnTask::InvSqrt),
+        "inverse" | "inv" => Some(MatFnTask::Inverse),
+        t if t.starts_with("invroot") => {
+            let rest = &t["invroot".len()..];
+            if rest.is_empty() {
+                Some(MatFnTask::InvRoot { p: 2 })
+            } else {
+                rest.parse::<usize>().ok().filter(|&p| p >= 1).map(|p| MatFnTask::InvRoot { p })
+            }
+        }
+        _ => None,
+    }
+}
+
+fn parse_method(tok: &str) -> Option<SolverSpec> {
+    match tok {
+        "ns" | "classic" | "newton-schulz" | "newton_schulz" => Some(SolverSpec::ns_classic(2)),
+        "prism-exact" => Some(SolverSpec::prism_exact(2)),
+        "newton" | "prism-newton" | "prismnewton" | "db-newton" => {
+            Some(SolverSpec::db_newton(true))
+        }
+        "newton-classic" | "db-newton-classic" => Some(SolverSpec::db_newton(false)),
+        "cheb" | "chebyshev" => Some(SolverSpec::chebyshev(true)),
+        "cheb-classic" | "chebyshev-classic" => Some(SolverSpec::chebyshev(false)),
+        "invnewton" | "inverse-newton" => Some(SolverSpec::inverse_newton(true)),
+        "invnewton-classic" => Some(SolverSpec::inverse_newton(false)),
+        "pe" | "polar-express" | "polarexpress" => Some(SolverSpec::polar_express()),
+        "cans" => Some(SolverSpec::cans()),
+        "eigen" | "eig" | "svd" => Some(SolverSpec::eigen()),
+        t if t.starts_with("prism") => {
+            // Accept both "prismN" and the Backend::name form "prism-N".
+            let rest = t["prism".len()..].trim_start_matches('-');
+            if rest.is_empty() {
+                Some(SolverSpec::prism(2))
+            } else {
+                // Odd order 2d+1 ≥ 3 → degree d.
+                rest.parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 3 && n % 2 == 1)
+                    .map(|n| SolverSpec::prism((n - 1) / 2))
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Resolve a `"<method>-<task>"` key into a planned [`Solver`]. Unknown keys
+/// name the offender and list every valid canonical name; method/task pairs
+/// the method cannot serve surface [`Solver::new`]'s validation error.
+pub fn resolve(name: &str) -> Result<Solver> {
+    let s = name.trim().to_ascii_lowercase();
+    let (mtok, ttok) = s.rsplit_once('-').ok_or_else(|| unknown(name))?;
+    let task = parse_task(ttok).ok_or_else(|| unknown(name))?;
+    let spec = parse_method(mtok).ok_or_else(|| unknown(name))?;
+    Solver::new(task, spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_canonical_name_round_trips() {
+        for &name in names() {
+            let s = resolve(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(s.name(), name, "canonical name must round-trip");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_solvers() {
+        for (alias, canon) in [
+            ("polar-express-polar", "pe-polar"),
+            ("classic-polar", "ns-polar"),
+            ("newton-schulz-polar", "ns-polar"),
+            ("prism-polar", "prism5-polar"),
+            ("prism-newton-sqrt", "newton-sqrt"),
+            ("eig-invsqrt", "eigen-invsqrt"),
+            ("svd-polar", "eigen-polar"),
+            ("chebyshev-inverse", "cheb-inverse"),
+            ("eigen-invroot", "eigen-invroot2"), // bare invroot defaults to p = 2
+            ("PRISM5-Polar", "prism5-polar"),    // case-insensitive
+        ] {
+            // The first component of the tuple may itself contain '-', which
+            // is exactly what the last-dash split must handle.
+            let s = resolve(alias).unwrap_or_else(|e| panic!("{alias}: {e}"));
+            let c = resolve(canon).unwrap();
+            assert_eq!(s.name(), c.name(), "{alias} != {canon}");
+        }
+    }
+
+    #[test]
+    fn generalized_orders_parse() {
+        assert_eq!(resolve("prism7-polar").unwrap().spec().d, 3);
+        assert_eq!(resolve("invnewton-invroot3").unwrap().name(), "invnewton-invroot3");
+        assert!(resolve("prism4-polar").is_err(), "even order is not a NS iteration");
+        assert!(resolve("eigen-invroot0").is_err(), "p = 0 is rejected");
+    }
+
+    #[test]
+    fn unknown_name_lists_valid_options() {
+        for bad in ["florb", "florb-polar", "prism5-florb", "prism5"] {
+            let msg = resolve(bad).unwrap_err().to_string();
+            assert!(msg.contains(bad), "{msg}");
+            assert!(msg.contains("prism5-polar"), "error must list valid names: {msg}");
+            assert!(msg.contains("cheb-inverse"), "error must list valid names: {msg}");
+        }
+    }
+
+    #[test]
+    fn incompatible_pair_is_a_method_error_not_unknown() {
+        let msg = resolve("cans-sqrt").unwrap_err().to_string();
+        assert!(msg.contains("cannot compute"), "{msg}");
+    }
+}

@@ -1,0 +1,549 @@
+//! The stateful [`Solver`]: plan once, execute many times.
+//!
+//! A `Solver` binds a ([`MatFnTask`], [`SolverSpec`]) pair to a persistent
+//! [`Workspace`] and dispatches into the engine cores (`*_in` functions)
+//! that draw every ping-pong buffer from that pool — the second same-shape
+//! `solve` performs zero heap allocations in the iteration hot loop.
+
+use super::{BoxObserver, MatFnOutput, MatFnSolver, MatFnTask, Method, SolverSpec};
+use crate::baselines::cans::{polar_cans_in, CansOpts};
+use crate::baselines::eigen_fn;
+use crate::baselines::polar_express::PolarExpress;
+use crate::config::Backend;
+use crate::linalg::gemm::Workspace;
+use crate::linalg::Mat;
+use crate::prism::chebyshev::{chebyshev_inverse_in, ChebyshevOpts};
+use crate::prism::db_newton::{db_newton_prism_in, DbNewtonOpts};
+use crate::prism::driver::{AlphaMode, EngineHooks, IterEvent, IterationLog, RunRecorder, StopRule};
+use crate::prism::inverse_newton::{inv_root_prism_in, InvRootOpts};
+use crate::prism::polar::{polar_prism_in, PolarOpts};
+use crate::prism::sign::{sign_prism_in, SignOpts};
+use crate::prism::sqrt::{sqrt_prism_in, SqrtOpts};
+use crate::rng::Rng;
+use crate::util::{Error, Result};
+
+/// A planned, reusable matrix-function solver. See the module docs of
+/// [`crate::matfn`] for the quickstart.
+pub struct Solver {
+    task: MatFnTask,
+    spec: SolverSpec,
+    ws: Workspace,
+    observer: Option<BoxObserver>,
+    /// Remez schedule, built once when the method is PolarExpress.
+    pe: Option<PolarExpress>,
+}
+
+/// Registry-style method token for a spec (the half before the task in a
+/// name like `"prism5-polar"`). Kept in sync with `registry::parse_method`.
+pub(super) fn method_token(spec: &SolverSpec) -> String {
+    let classic = matches!(spec.alpha, AlphaMode::Classic);
+    match spec.method {
+        Method::NewtonSchulz => match spec.alpha {
+            AlphaMode::Classic => "ns".into(),
+            AlphaMode::Exact => "prism-exact".into(),
+            AlphaMode::Fixed(_) => "ns-fixed".into(),
+            AlphaMode::Sketched { .. } | AlphaMode::SketchedKind { .. } => {
+                format!("prism{}", 2 * spec.d + 1)
+            }
+        },
+        Method::InverseNewton => {
+            if classic { "invnewton-classic".into() } else { "invnewton".into() }
+        }
+        Method::DbNewton => {
+            if classic { "newton-classic".into() } else { "newton".into() }
+        }
+        Method::Chebyshev => {
+            if classic { "cheb-classic".into() } else { "cheb".into() }
+        }
+        Method::PolarExpress => "pe".into(),
+        Method::Cans => "cans".into(),
+        Method::Eigen => "eigen".into(),
+    }
+}
+
+fn validate(task: MatFnTask, spec: &SolverSpec) -> Result<()> {
+    if let MatFnTask::InvRoot { p } = task {
+        if p == 0 {
+            return Err(Error::Parse("matfn: invroot needs p >= 1".into()));
+        }
+    }
+    if spec.method == Method::NewtonSchulz && spec.d == 0 {
+        return Err(Error::Parse("matfn: newton-schulz needs degree d >= 1".into()));
+    }
+    let ok = match spec.method {
+        Method::NewtonSchulz => matches!(
+            task,
+            MatFnTask::Polar | MatFnTask::Sign | MatFnTask::Sqrt | MatFnTask::InvSqrt
+        ),
+        Method::InverseNewton => matches!(
+            task,
+            MatFnTask::InvRoot { .. } | MatFnTask::InvSqrt | MatFnTask::Inverse
+        ),
+        Method::DbNewton => matches!(task, MatFnTask::Sqrt | MatFnTask::InvSqrt),
+        Method::Chebyshev => matches!(task, MatFnTask::Inverse),
+        Method::PolarExpress => {
+            matches!(task, MatFnTask::Polar | MatFnTask::Sqrt | MatFnTask::InvSqrt)
+        }
+        Method::Cans => matches!(task, MatFnTask::Polar),
+        Method::Eigen => true,
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::Parse(format!(
+            "matfn: method {:?} cannot compute task '{}'",
+            spec.method,
+            task.name()
+        )))
+    }
+}
+
+/// Concatenate two runs of the same iteration (warm-α phase + fitted phase).
+/// The second run's initial residual equals the first run's final one (same
+/// iterate, same residual formula), so the duplicate entry is dropped.
+fn chain_logs(mut a: IterationLog, b: IterationLog) -> IterationLog {
+    let base_t = a.wall_s;
+    a.alphas.extend(b.alphas);
+    a.residuals.extend(b.residuals.into_iter().skip(1));
+    a.times_s.extend(b.times_s.iter().map(|t| t + base_t));
+    a.gemm_calls += b.gemm_calls;
+    a.wall_s += b.wall_s;
+    a.converged = b.converged;
+    a.diverged = b.diverged;
+    a
+}
+
+/// Re-borrow the solver's boxed observer as the engine-facing hook type.
+/// (The `match` is a coercion site: it drops the box's `Send` bound and
+/// shortens the trait-object lifetime, which `Option::map` cannot.)
+fn hooks<'a>(observer: &'a mut Option<BoxObserver>, x0: Option<&'a Mat>) -> EngineHooks<'a> {
+    hooks_based(observer, x0, (0, 0.0))
+}
+
+/// Like [`hooks`], with an event offset for chained engine calls (warm-α
+/// phase 2), keeping streamed iteration indices and times continuous with
+/// the chained log.
+fn hooks_based<'a>(
+    observer: &'a mut Option<BoxObserver>,
+    x0: Option<&'a Mat>,
+    event_base: (usize, f64),
+) -> EngineHooks<'a> {
+    let observer: Option<&'a mut dyn FnMut(&IterEvent)> = match observer.as_mut() {
+        Some(b) => Some(&mut **b),
+        None => None,
+    };
+    EngineHooks { x0, observer, event_base }
+}
+
+impl Solver {
+    /// Plan a solver; rejects (task, method) pairs the method cannot serve,
+    /// naming both halves in the error.
+    pub fn new(task: MatFnTask, spec: SolverSpec) -> Result<Solver> {
+        validate(task, &spec)?;
+        let pe = if spec.method == Method::PolarExpress {
+            Some(PolarExpress::paper_default())
+        } else {
+            None
+        };
+        Ok(Solver { task, spec, ws: Workspace::new(), observer: None, pe })
+    }
+
+    /// Plan a solver for an optimizer/service [`Backend`] selection with an
+    /// iteration budget — the dispatch previously hand-rolled by every
+    /// consumer. `PrismNewton` has no polar form, so for [`MatFnTask::Polar`]
+    /// it stands in with PRISM-5 (the same orthogonalization role), exactly
+    /// as the old `PolarBackend` did.
+    pub fn for_backend(backend: Backend, task: MatFnTask, iters: usize) -> Result<Solver> {
+        let tol = match task {
+            MatFnTask::Polar | MatFnTask::Sign => 1e-7,
+            _ => 1e-9,
+        };
+        let stop = StopRule::default().with_max_iters(iters).with_tol(tol);
+        let spec = match backend {
+            Backend::NewtonSchulz => SolverSpec::ns_classic(2),
+            Backend::PolarExpress => SolverSpec::polar_express(),
+            Backend::Prism3 => SolverSpec::prism(1),
+            Backend::Prism5 => SolverSpec::prism(2),
+            Backend::Eigen => SolverSpec::eigen(),
+            Backend::PrismNewton => {
+                if task == MatFnTask::Polar {
+                    SolverSpec::prism(2)
+                } else {
+                    SolverSpec::db_newton(true)
+                }
+            }
+        }
+        .with_stop(stop);
+        Solver::new(task, spec)
+    }
+
+    pub fn task(&self) -> MatFnTask {
+        self.task
+    }
+
+    /// Registry-style name; `registry::resolve(name)` round-trips for every
+    /// registered configuration.
+    pub fn name(&self) -> String {
+        format!("{}-{}", method_token(&self.spec), self.task.name())
+    }
+
+    pub fn spec(&self) -> &SolverSpec {
+        &self.spec
+    }
+
+    /// Mutable spec access for in-place re-planning (stop rule, α mode,
+    /// warm-iters). The workspace is kept — same-shape buffers stay warm.
+    pub fn spec_mut(&mut self) -> &mut SolverSpec {
+        &mut self.spec
+    }
+
+    /// Replace the stopping rule (builder-style convenience).
+    pub fn set_stop(&mut self, stop: StopRule) {
+        self.spec.stop = stop;
+    }
+
+    /// Workspace misses so far (see [`Workspace::allocations`]). Flat across
+    /// two same-shape solves ⇔ the second ran allocation-free.
+    pub fn workspace_allocations(&self) -> usize {
+        self.ws.allocations()
+    }
+
+    /// Install or remove the per-iteration observer.
+    pub fn set_observer(&mut self, observer: Option<BoxObserver>) {
+        self.observer = observer;
+    }
+
+    /// Compute the matrix function of `a` (see [`MatFnSolver::solve`]).
+    pub fn solve(&mut self, a: &Mat, rng: &mut Rng) -> MatFnOutput {
+        self.run(a, None, rng)
+    }
+
+    /// Warm-start from `x0` (see [`MatFnSolver::solve_from`]).
+    pub fn solve_from(&mut self, a: &Mat, x0: &Mat, rng: &mut Rng) -> MatFnOutput {
+        self.run(a, Some(x0), rng)
+    }
+
+    fn run(&mut self, a: &Mat, x0: Option<&Mat>, rng: &mut Rng) -> MatFnOutput {
+        let spec = self.spec;
+        match spec.method {
+            Method::NewtonSchulz => self.run_ns(a, x0, rng),
+            Method::InverseNewton => {
+                let p = match self.task {
+                    MatFnTask::InvRoot { p } => p,
+                    MatFnTask::InvSqrt => 2,
+                    MatFnTask::Inverse => 1,
+                    _ => unreachable!("validated"),
+                };
+                let opts = InvRootOpts { p, alpha: spec.alpha, stop: spec.stop };
+                let out =
+                    inv_root_prism_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, x0));
+                MatFnOutput { primary: out.inv_root, secondary: None, log: out.log }
+            }
+            Method::DbNewton => {
+                let opts = DbNewtonOpts { alpha: spec.alpha, stop: spec.stop };
+                let out =
+                    db_newton_prism_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, None));
+                let (primary, secondary) = if self.task == MatFnTask::Sqrt {
+                    (out.sqrt, Some(out.inv_sqrt))
+                } else {
+                    (out.inv_sqrt, Some(out.sqrt))
+                };
+                MatFnOutput { primary, secondary, log: out.log }
+            }
+            Method::Chebyshev => {
+                let opts = ChebyshevOpts { alpha: spec.alpha, stop: spec.stop };
+                let out = chebyshev_inverse_in(
+                    a,
+                    &opts,
+                    rng,
+                    &mut self.ws,
+                    hooks(&mut self.observer, x0),
+                );
+                MatFnOutput { primary: out.inverse, secondary: None, log: out.log }
+            }
+            Method::PolarExpress => {
+                let pe = self.pe.as_ref().expect("pe schedule built in Solver::new");
+                match self.task {
+                    MatFnTask::Polar => {
+                        let (q, log) = pe.polar_in(
+                            a,
+                            &spec.stop,
+                            &mut self.ws,
+                            hooks(&mut self.observer, x0),
+                        );
+                        MatFnOutput { primary: q, secondary: None, log }
+                    }
+                    _ => {
+                        let (sq, isq, log) = pe.sqrt_coupled_in(
+                            a,
+                            &spec.stop,
+                            &mut self.ws,
+                            hooks(&mut self.observer, None),
+                        );
+                        let (primary, secondary) = if self.task == MatFnTask::Sqrt {
+                            (sq, Some(isq))
+                        } else {
+                            (isq, Some(sq))
+                        };
+                        MatFnOutput { primary, secondary, log }
+                    }
+                }
+            }
+            Method::Cans => {
+                let opts = CansOpts { stop: spec.stop, ..CansOpts::default() };
+                let (q, log) =
+                    polar_cans_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, x0));
+                MatFnOutput { primary: q, secondary: None, log }
+            }
+            Method::Eigen => {
+                // Direct method: the log records wall time and GEMM count of
+                // the decomposition, with a zero "residual".
+                let rec = RunRecorder::start(0.0);
+                let (primary, secondary) = match self.task {
+                    MatFnTask::Sqrt => {
+                        (eigen_fn::sqrt_eigen(a), Some(eigen_fn::inv_sqrt_eigen(a, 0.0)))
+                    }
+                    MatFnTask::InvSqrt => {
+                        (eigen_fn::inv_sqrt_eigen(a, 0.0), Some(eigen_fn::sqrt_eigen(a)))
+                    }
+                    MatFnTask::InvRoot { p } => {
+                        (eigen_fn::inv_root_eigen(a, p, 0.0).expect("p >= 1 validated"), None)
+                    }
+                    MatFnTask::Polar => (eigen_fn::polar_eigen(a), None),
+                    MatFnTask::Sign => (eigen_fn::sign_eigen(a), None),
+                    MatFnTask::Inverse => (eigen_fn::inverse_eigen(a), None),
+                };
+                MatFnOutput { primary, secondary, log: rec.finish(&spec.stop) }
+            }
+        }
+    }
+
+    /// Newton–Schulz dispatch, including the Muon warm-α phase (paper §C):
+    /// pin α at the interval's upper bound for `warm_iters` iterations (no
+    /// fit cost while the residual is still large), then continue with the
+    /// fitted α from the warm iterate.
+    fn run_ns(&mut self, a: &Mat, x0: Option<&Mat>, rng: &mut Rng) -> MatFnOutput {
+        let spec = self.spec;
+        let warm_capable = matches!(self.task, MatFnTask::Polar | MatFnTask::Sign);
+        let sketched = matches!(
+            spec.alpha,
+            AlphaMode::Sketched { .. } | AlphaMode::SketchedKind { .. }
+        );
+        if warm_capable && sketched && spec.warm_iters > 0 {
+            let (_, hi) = crate::coeffs::alpha_interval(spec.d);
+            if spec.warm_iters >= spec.stop.max_iters {
+                return self.run_ns_once(a, x0, AlphaMode::Fixed(hi), spec.stop, rng);
+            }
+            let warm_stop = StopRule { max_iters: spec.warm_iters, ..spec.stop };
+            let warm = self.run_ns_once(a, x0, AlphaMode::Fixed(hi), warm_stop, rng);
+            let rest =
+                StopRule { max_iters: spec.stop.max_iters - spec.warm_iters, ..spec.stop };
+            let warm_iterate = warm.primary;
+            // Phase 2 streams observer events offset by phase 1's iteration
+            // count and wall time, so the trajectory stays continuous.
+            let base = (warm.log.iters(), warm.log.wall_s);
+            let fine =
+                self.run_ns_chained(a, Some(&warm_iterate), spec.alpha, rest, base, rng);
+            return MatFnOutput {
+                log: chain_logs(warm.log, fine.log),
+                primary: fine.primary,
+                secondary: fine.secondary,
+            };
+        }
+        self.run_ns_once(a, x0, spec.alpha, spec.stop, rng)
+    }
+
+    fn run_ns_once(
+        &mut self,
+        a: &Mat,
+        x0: Option<&Mat>,
+        alpha: AlphaMode,
+        stop: StopRule,
+        rng: &mut Rng,
+    ) -> MatFnOutput {
+        self.run_ns_chained(a, x0, alpha, stop, (0, 0.0), rng)
+    }
+
+    fn run_ns_chained(
+        &mut self,
+        a: &Mat,
+        x0: Option<&Mat>,
+        alpha: AlphaMode,
+        stop: StopRule,
+        base: (usize, f64),
+        rng: &mut Rng,
+    ) -> MatFnOutput {
+        let d = self.spec.d;
+        match self.task {
+            MatFnTask::Polar => {
+                let opts = PolarOpts { d, alpha, stop };
+                let out = polar_prism_in(
+                    a,
+                    &opts,
+                    rng,
+                    &mut self.ws,
+                    hooks_based(&mut self.observer, x0, base),
+                );
+                MatFnOutput { primary: out.q, secondary: None, log: out.log }
+            }
+            MatFnTask::Sign => {
+                let opts = SignOpts { d, alpha, stop, normalize: true };
+                let out = sign_prism_in(
+                    a,
+                    &opts,
+                    rng,
+                    &mut self.ws,
+                    hooks_based(&mut self.observer, x0, base),
+                );
+                MatFnOutput { primary: out.s, secondary: None, log: out.log }
+            }
+            MatFnTask::Sqrt | MatFnTask::InvSqrt => {
+                let opts = SqrtOpts { d, alpha, stop };
+                let out =
+                    sqrt_prism_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, None));
+                let (primary, secondary) = if self.task == MatFnTask::Sqrt {
+                    (out.sqrt, Some(out.inv_sqrt))
+                } else {
+                    (out.inv_sqrt, Some(out.sqrt))
+                };
+                MatFnOutput { primary, secondary, log: out.log }
+            }
+            _ => unreachable!("validated"),
+        }
+    }
+}
+
+impl MatFnSolver for Solver {
+    fn task(&self) -> MatFnTask {
+        Solver::task(self)
+    }
+    fn name(&self) -> String {
+        Solver::name(self)
+    }
+    fn solve(&mut self, a: &Mat, rng: &mut Rng) -> MatFnOutput {
+        Solver::solve(self, a, rng)
+    }
+    fn solve_from(&mut self, a: &Mat, x0: &Mat, rng: &mut Rng) -> MatFnOutput {
+        Solver::solve_from(self, a, x0, rng)
+    }
+    fn set_observer(&mut self, observer: Option<BoxObserver>) {
+        Solver::set_observer(self, observer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_at_b};
+    use crate::randmat;
+
+    #[test]
+    fn invalid_combo_rejected_with_both_halves_named() {
+        let err = Solver::new(MatFnTask::Sign, SolverSpec::cans()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("Cans") && msg.contains("sign"), "{msg}");
+        assert!(Solver::new(MatFnTask::InvRoot { p: 0 }, SolverSpec::eigen()).is_err());
+        assert!(Solver::new(MatFnTask::Polar, SolverSpec::prism(0)).is_err());
+    }
+
+    #[test]
+    fn solver_reuse_is_deterministic_and_allocation_free() {
+        let mut rng = Rng::seed_from(1);
+        let a = randmat::gaussian(&mut rng, 24, 12);
+        // Classic α — no sketch draws, so repeat solves are bit-identical.
+        let mut s = Solver::new(MatFnTask::Polar, SolverSpec::ns_classic(2)).unwrap();
+        let first = s.solve(&a, &mut rng);
+        let allocs = s.workspace_allocations();
+        assert!(allocs > 0);
+        for _ in 0..3 {
+            let again = s.solve(&a, &mut rng);
+            assert_eq!(again.primary, first.primary, "reused buffers changed the result");
+        }
+        assert_eq!(s.workspace_allocations(), allocs, "warm solves must not allocate");
+    }
+
+    #[test]
+    fn warm_alpha_phase_matches_paper_muon_shape() {
+        let mut rng = Rng::seed_from(2);
+        let s_spec = randmat::logspace(1e-3, 1.0, 16);
+        let a = randmat::with_spectrum(&mut rng, 24, 16, &s_spec);
+        let stop = StopRule::default().with_max_iters(5).with_tol(1e-9);
+        let mut s = Solver::new(
+            MatFnTask::Polar,
+            SolverSpec::prism(1).with_stop(stop).with_warm_iters(3),
+        )
+        .unwrap();
+        // Observer events must stay continuous across the two internal
+        // phases: iteration indices 0..5, no restart at the fitted phase.
+        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = std::sync::Arc::clone(&seen);
+        s.set_observer(Some(Box::new(move |ev| {
+            sink.lock().unwrap().push((ev.iter, ev.elapsed_s));
+        })));
+        let out = s.solve(&a, &mut rng);
+        s.set_observer(None);
+        {
+            let seen = seen.lock().unwrap();
+            let iters: Vec<usize> = seen.iter().map(|&(k, _)| k).collect();
+            assert_eq!(iters, vec![0, 1, 2, 3, 4], "chained phases must not restart");
+            for w in seen.windows(2) {
+                assert!(w[1].1 >= w[0].1, "elapsed_s must be monotone across phases");
+            }
+        }
+        assert_eq!(out.log.iters(), 5, "warm (3) + fitted (2) iterations");
+        let (_, hi) = crate::coeffs::alpha_interval(1);
+        for &al in &out.log.alphas[..3] {
+            assert_eq!(al, hi, "warm phase pins α at the upper bound");
+        }
+        assert_eq!(out.log.residuals.len(), out.log.iters() + 1);
+        let q = &out.primary;
+        let before = crate::prism::polar::orthogonality_error(&a.scaled(1.0 / a.fro_norm()));
+        let after = crate::prism::polar::orthogonality_error(q);
+        assert!(after < before, "{before} -> {after}");
+    }
+
+    #[test]
+    fn secondary_output_is_the_coupled_partner() {
+        let mut rng = Rng::seed_from(3);
+        let w = randmat::logspace(1e-2, 1.0, 10);
+        let a = randmat::sym_with_spectrum(&mut rng, 10, &w);
+        let stop = StopRule::default().with_max_iters(200);
+        let mut s = Solver::new(MatFnTask::InvSqrt, SolverSpec::prism(2).with_stop(stop)).unwrap();
+        let out = s.solve(&a, &mut rng);
+        assert!(out.log.converged);
+        let sqrt = out.secondary.expect("coupled sqrt");
+        let prod = matmul(&sqrt, &out.primary);
+        assert!(prod.sub(&Mat::eye(10)).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn for_backend_covers_service_tasks() {
+        for b in [
+            Backend::NewtonSchulz,
+            Backend::PolarExpress,
+            Backend::Prism3,
+            Backend::Prism5,
+            Backend::Eigen,
+            Backend::PrismNewton,
+        ] {
+            for task in [MatFnTask::Polar, MatFnTask::InvSqrt] {
+                let s = Solver::for_backend(b, task, 30).unwrap();
+                assert_eq!(MatFnSolver::task(&s), task);
+            }
+        }
+        // PrismNewton's polar fallback is PRISM-5, as documented.
+        let s = Solver::for_backend(Backend::PrismNewton, MatFnTask::Polar, 10).unwrap();
+        assert_eq!(s.name(), "prism5-polar");
+    }
+
+    #[test]
+    fn trait_object_dispatch_works() {
+        let mut rng = Rng::seed_from(4);
+        let a = randmat::gaussian(&mut rng, 16, 8);
+        let mut s: Box<dyn MatFnSolver> =
+            Box::new(Solver::new(MatFnTask::Polar, SolverSpec::prism(2)).unwrap());
+        let out = s.solve(&a, &mut rng);
+        assert!(out.log.converged);
+        assert!(matmul_at_b(&out.primary, &out.primary).sub(&Mat::eye(8)).max_abs() < 1e-6);
+    }
+}

@@ -1,152 +1,92 @@
-//! Pluggable matrix-function backends for the optimizers.
+//! Optimizer-facing matrix-function backends — thin wrappers over the
+//! unified [`crate::matfn`] solver API.
 //!
 //! Muon needs a **polar** backend (orthogonalize the momentum matrix);
 //! Shampoo needs an **inverse-root** backend (precondition with `L^{-1/2}`,
-//! `R^{-1/2}`). Each backend maps to one algorithm compared in the paper's
-//! Figs. 5–6: exact eigendecomposition, PolarExpress, classical
-//! Newton–Schulz, PRISM-3/PRISM-5, or PRISM-DB-Newton.
+//! `R^{-1/2}`). Each [`crate::config::Backend`] value maps to one algorithm
+//! compared in the paper's Figs. 5–6 (exact eigendecomposition,
+//! PolarExpress, classical Newton–Schulz, PRISM-3/PRISM-5, PRISM-DB-Newton);
+//! the mapping itself now lives in [`Solver::for_backend`], and these
+//! wrappers only add the optimizer conventions (damping for Shampoo, the
+//! paper's Muon iteration budget and warm-α phase).
+//!
+//! ```
+//! use prism::config::Backend;
+//! use prism::optim::matfn::PolarBackend;
+//! use prism::{randmat, Rng};
+//!
+//! let mut rng = Rng::seed_from(1);
+//! let g = randmat::gaussian(&mut rng, 32, 16);
+//! let mut polar = PolarBackend::paper_muon(Backend::Prism5);
+//! let q = polar.polar(&g, &mut rng);        // same-shape calls reuse buffers
+//! assert_eq!(q.shape(), (32, 16));
+//! ```
 
-use crate::baselines::eigen_fn;
-use crate::baselines::polar_express::PolarExpress;
 use crate::config::Backend;
 use crate::linalg::Mat;
-use crate::prism::db_newton::{db_newton_prism, DbNewtonOpts};
-use crate::prism::driver::{AlphaMode, StopRule};
-use crate::prism::polar::{polar_prism, PolarOpts};
-use crate::prism::sqrt::{sqrt_prism, SqrtOpts};
+use crate::matfn::{MatFnTask, Solver};
 use crate::rng::Rng;
 
-/// Polar-factor backend (Muon's orthogonalization step).
+/// Polar-factor backend (Muon's orthogonalization step). Owns a persistent
+/// [`Solver`], so the per-step calls on same-shaped momentum matrices run
+/// allocation-free after the first.
 pub struct PolarBackend {
-    backend: Backend,
-    iters: usize,
-    pe: Option<PolarExpress>,
-    /// Muon warm-start (paper §C): pin α at the interval's upper bound for
-    /// the first `warm_iters` iterations instead of fitting.
-    pub warm_iters: usize,
+    solver: Solver,
 }
 
 impl PolarBackend {
     pub fn new(backend: Backend, iters: usize) -> Self {
-        let pe = if backend == Backend::PolarExpress {
-            Some(PolarExpress::paper_default())
-        } else {
-            None
-        };
-        PolarBackend { backend, iters, pe, warm_iters: 0 }
+        let solver = Solver::for_backend(backend, MatFnTask::Polar, iters)
+            .expect("every Backend has a polar form");
+        PolarBackend { solver }
     }
 
     /// The paper's Muon configuration: 5 iterations for PolarExpress and
-    /// PRISM-3, 3 iterations for PRISM-5; α pinned high for the first 3.
+    /// PRISM-3, 3 iterations for PRISM-5; α pinned at the interval's upper
+    /// bound for the first 3 (the §C warm-start trick).
     pub fn paper_muon(backend: Backend) -> Self {
         let iters = match backend {
             Backend::Prism5 => 3,
             _ => 5,
         };
         let mut b = Self::new(backend, iters);
-        b.warm_iters = 3;
+        b.solver.spec_mut().warm_iters = 3;
         b
     }
 
-    pub fn name(&self) -> &'static str {
-        self.backend.name()
+    pub fn name(&self) -> String {
+        self.solver.name()
     }
 
     /// Orthogonalize `g` (any orientation).
-    pub fn polar(&self, g: &Mat, rng: &mut Rng) -> Mat {
-        let stop = StopRule {
-            max_iters: self.iters,
-            tol: 1e-7,
-            diverge_above: 1e12,
-        };
-        match self.backend {
-            Backend::Eigen => eigen_fn::polar_eigen(g),
-            Backend::PolarExpress => self.pe.as_ref().unwrap().polar(g, &stop).0,
-            Backend::NewtonSchulz => {
-                polar_prism(g, &PolarOpts::classic(2).with_stop(stop), rng).q
-            }
-            Backend::Prism3 | Backend::Prism5 => {
-                let d = if self.backend == Backend::Prism3 { 1 } else { 2 };
-                let (_, hi) = crate::coeffs::alpha_interval(d);
-                if self.warm_iters > 0 && self.warm_iters < self.iters {
-                    // Warm phase: α pinned at the upper bound (no fit cost),
-                    // then fitted for the remaining iterations.
-                    let warm_stop = StopRule { max_iters: self.warm_iters, ..stop };
-                    let opts =
-                        PolarOpts { d, alpha: AlphaMode::Fixed(hi), stop: warm_stop };
-                    let warm = polar_prism(g, &opts, rng);
-                    let rest = StopRule { max_iters: self.iters - self.warm_iters, ..stop };
-                    let opts2 = PolarOpts {
-                        d,
-                        alpha: AlphaMode::Sketched { p: 8 },
-                        stop: rest,
-                    };
-                    polar_prism(&warm.q, &opts2, rng).q
-                } else if self.warm_iters >= self.iters {
-                    let opts = PolarOpts { d, alpha: AlphaMode::Fixed(hi), stop };
-                    polar_prism(g, &opts, rng).q
-                } else {
-                    let opts =
-                        PolarOpts { d, alpha: AlphaMode::Sketched { p: 8 }, stop };
-                    polar_prism(g, &opts, rng).q
-                }
-            }
-            Backend::PrismNewton => {
-                // Polar via sign-like Newton is out of scope; fall back to
-                // PRISM-5 which shares the orthogonalization role.
-                let opts = PolarOpts { d: 2, alpha: AlphaMode::Sketched { p: 8 }, stop };
-                polar_prism(g, &opts, rng).q
-            }
-        }
+    pub fn polar(&mut self, g: &Mat, rng: &mut Rng) -> Mat {
+        self.solver.solve(g, rng).primary
     }
 }
 
-/// Inverse-root backend (Shampoo's `A^{-1/2}` with damping).
+/// Inverse-root backend (Shampoo's `A^{-1/2}` with damping). Owns a
+/// persistent [`Solver`] plus a damping scratch buffer.
 pub struct InvRootBackend {
-    backend: Backend,
-    iters: usize,
-    pe: Option<PolarExpress>,
+    solver: Solver,
+    damped: Mat,
 }
 
 impl InvRootBackend {
     pub fn new(backend: Backend, iters: usize) -> Self {
-        let pe = if backend == Backend::PolarExpress {
-            // Coupled square-root form: the σ_min = 1e-3 polar tuning becomes
-            // an eigenvalue-min 1e-6 tuning (paper Fig. 1 caption).
-            Some(PolarExpress::paper_default())
-        } else {
-            None
-        };
-        InvRootBackend { backend, iters, pe }
+        let solver = Solver::for_backend(backend, MatFnTask::InvSqrt, iters)
+            .expect("every Backend has an inverse-sqrt form");
+        InvRootBackend { solver, damped: Mat::zeros(0, 0) }
     }
 
-    pub fn name(&self) -> &'static str {
-        self.backend.name()
+    pub fn name(&self) -> String {
+        self.solver.name()
     }
 
     /// `(A + εI)^{-1/2}` for symmetric PSD `A`.
-    pub fn inv_sqrt(&self, a: &Mat, eps: f64, rng: &mut Rng) -> Mat {
-        let mut ad = a.clone();
-        ad.add_diag(eps);
-        let stop = StopRule { max_iters: self.iters, tol: 1e-9, diverge_above: 1e12 };
-        match self.backend {
-            Backend::Eigen => eigen_fn::inv_sqrt_eigen(a, eps),
-            Backend::PolarExpress => self.pe.as_ref().unwrap().sqrt_coupled(&ad, &stop).1,
-            Backend::NewtonSchulz => {
-                sqrt_prism(&ad, &SqrtOpts::classic(2).with_stop(stop), rng).inv_sqrt
-            }
-            Backend::Prism3 => {
-                let opts = SqrtOpts { d: 1, alpha: AlphaMode::Sketched { p: 8 }, stop };
-                sqrt_prism(&ad, &opts, rng).inv_sqrt
-            }
-            Backend::Prism5 => {
-                let opts = SqrtOpts { d: 2, alpha: AlphaMode::Sketched { p: 8 }, stop };
-                sqrt_prism(&ad, &opts, rng).inv_sqrt
-            }
-            Backend::PrismNewton => {
-                db_newton_prism(&ad, &DbNewtonOpts::prism().with_stop(stop), rng).inv_sqrt
-            }
-        }
+    pub fn inv_sqrt(&mut self, a: &Mat, eps: f64, rng: &mut Rng) -> Mat {
+        self.damped.copy_from(a);
+        self.damped.add_diag(eps);
+        self.solver.solve(&self.damped, rng).primary
     }
 }
 
@@ -168,7 +108,7 @@ mod tests {
             Backend::Prism3,
             Backend::Prism5,
         ] {
-            let pb = PolarBackend::new(b, 30);
+            let mut pb = PolarBackend::new(b, 30);
             let q = pb.polar(&a, &mut rng);
             let err = matmul_at_b(&q, &q).sub(&Mat::eye(12)).max_abs();
             assert!(err < 1e-4, "{}: err={err}", pb.name());
@@ -192,7 +132,7 @@ mod tests {
             // PRISM-5 gets just 3 iterations in the paper's Muon setup.
             (Backend::Prism5, 0.85),
         ] {
-            let pb = PolarBackend::paper_muon(b);
+            let mut pb = PolarBackend::paper_muon(b);
             let q = pb.polar(&a, &mut rng);
             let after = crate::prism::polar::orthogonality_error(&q);
             assert!(after < factor * before, "{}: {before} -> {after}", pb.name());
@@ -211,7 +151,7 @@ mod tests {
             Backend::Prism5,
             Backend::PrismNewton,
         ] {
-            let ib = InvRootBackend::new(b, 60);
+            let mut ib = InvRootBackend::new(b, 60);
             let is = ib.inv_sqrt(&a, 0.0, &mut rng);
             let prod = matmul(&matmul(&is, &a), &is);
             let err = prod.sub(&Mat::eye(10)).max_abs();
@@ -225,9 +165,21 @@ mod tests {
         let g = Mat::gaussian(&mut rng, 12, 3, 1.0);
         let a = crate::linalg::gemm::syrk_a_at(&g); // rank 3 of 12
         for b in [Backend::Eigen, Backend::Prism5, Backend::PrismNewton] {
-            let ib = InvRootBackend::new(b, 60);
+            let mut ib = InvRootBackend::new(b, 60);
             let is = ib.inv_sqrt(&a, 1e-4, &mut rng);
             assert!(!is.has_non_finite(), "{}", ib.name());
         }
+    }
+
+    #[test]
+    fn repeated_backend_calls_are_allocation_free() {
+        let mut rng = Rng::seed_from(5);
+        let mut pb = PolarBackend::new(Backend::Prism5, 20);
+        let a = randmat::gaussian(&mut rng, 24, 12);
+        let _ = pb.polar(&a, &mut rng);
+        let allocs = pb.solver.workspace_allocations();
+        let _ = pb.polar(&a, &mut rng);
+        let _ = pb.polar(&a, &mut rng);
+        assert_eq!(pb.solver.workspace_allocations(), allocs);
     }
 }

@@ -5,9 +5,9 @@
 //! PRISM fits α ∈ [1/2, 2] from the sketched quadratic.
 //! The result is rescaled: `A⁻¹ = Ā⁻¹ / ‖A‖_F`.
 
-use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use super::driver::{AlphaMode, EngineHooks, IterationLog, RunRecorder, StopRule};
 use crate::coeffs::chebyshev_coeffs;
-use crate::linalg::gemm::global_engine;
+use crate::linalg::gemm::{global_engine, Workspace};
 use crate::linalg::Mat;
 use crate::polyfit::minimize_on_interval;
 use crate::rng::Rng;
@@ -65,26 +65,55 @@ fn select_alpha(r: &Mat, mode: AlphaMode, rng: &mut Rng) -> f64 {
 }
 
 /// Compute `A⁻¹` for a full-rank square `A` (not necessarily symmetric).
+///
+/// Thin wrapper over [`chebyshev_inverse_in`] with a throwaway workspace;
+/// persistent callers go through [`crate::matfn::Solver`].
 pub fn chebyshev_inverse(a: &Mat, opts: &ChebyshevOpts, rng: &mut Rng) -> ChebyshevResult {
+    chebyshev_inverse_in(a, opts, rng, &mut Workspace::new(), EngineHooks::none())
+}
+
+/// Workspace-pooled core. `hooks.x0` warm-starts at `X₀ = ‖A‖_F · x0`
+/// (pass the previous *unscaled* inverse estimate; the internal iteration
+/// works on `Ā = A/‖A‖_F`, whose inverse is `‖A‖_F · A⁻¹`).
+pub(crate) fn chebyshev_inverse_in(
+    a: &Mat,
+    opts: &ChebyshevOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> ChebyshevResult {
     assert!(a.is_square());
     let eng = global_engine();
     let n = a.rows();
     let c = a.fro_norm().max(1e-300);
-    let abar = a.scaled(1.0 / c);
-    let mut x = abar.transpose();
+    let mut abar = ws.take(n, n);
+    abar.copy_from(a);
+    abar.scale(1.0 / c);
+    let mut x = ws.take(n, n);
+    match hooks.x0 {
+        Some(x0) => {
+            assert_eq!(x0.shape(), (n, n), "inverse: x0 shape mismatch");
+            x.copy_from(x0);
+            x.scale(c);
+        }
+        None => abar.transpose_into(&mut x),
+    }
 
-    // Ping-pong buffers — the loop is allocation-free after iteration 0.
-    let mut xn = Mat::zeros(n, n);
-    let mut r = Mat::zeros(n, n);
-    let mut r_sym = Mat::zeros(n, n);
-    let mut r2 = Mat::zeros(n, n);
-    let mut g = Mat::zeros(n, n);
+    // Ping-pong buffers from the pool — the loop is allocation-free, and so
+    // is the whole call from the second same-shape solve onward.
+    let mut xn = ws.take(n, n);
+    let mut r = ws.take(n, n);
+    let mut r_sym = ws.take(n, n);
+    let mut r2 = ws.take(n, n);
+    let mut g = ws.take(n, n);
 
     eng.matmul_into(&mut r, &abar, &x);
     r.scale(-1.0);
     r.add_diag(1.0);
 
-    let mut rec = RunRecorder::start(r.fro_norm());
+    let mut rec = RunRecorder::start(r.fro_norm())
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base);
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
@@ -105,13 +134,19 @@ pub fn chebyshev_inverse(a: &Mat, opts: &ChebyshevOpts, rng: &mut Rng) -> Chebys
         eng.matmul_into(&mut r, &abar, &x);
         r.scale(-1.0);
         r.add_diag(1.0);
-        let rn = r.fro_norm();
-        rec.step(alpha, rn);
-        if !rn.is_finite() || rn > opts.stop.diverge_above {
+        if rec.step_guard(&opts.stop, alpha, r.fro_norm()) {
             break;
         }
     }
-    ChebyshevResult { inverse: x.scaled(1.0 / c), log: rec.finish(&opts.stop) }
+    let out = ChebyshevResult { inverse: x.scaled(1.0 / c), log: rec.finish(&opts.stop) };
+    ws.put(abar);
+    ws.put(x);
+    ws.put(xn);
+    ws.put(r);
+    ws.put(r_sym);
+    ws.put(r2);
+    ws.put(g);
+    out
 }
 
 #[cfg(test)]

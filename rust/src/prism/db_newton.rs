@@ -11,10 +11,10 @@
 //! `M²`, `M⁻¹`, `M⁻²` norms and the iteration computes `M⁻¹` anyway, via
 //! Cholesky since `M_k` stays SPD). Classical DB-Newton fixes α = 1/2.
 
-use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use super::driver::{AlphaMode, EngineHooks, IterationLog, RunRecorder, StopRule};
 use crate::coeffs::db_newton_coeffs;
 use crate::linalg::decomp::cholesky_inverse;
-use crate::linalg::gemm::global_engine;
+use crate::linalg::gemm::{global_engine, Workspace};
 use crate::linalg::Mat;
 use crate::polyfit::minimize_quartic;
 
@@ -49,26 +49,49 @@ const ALPHA_LO: f64 = 0.05;
 const ALPHA_HI: f64 = 0.95;
 
 /// Compute `A^{1/2}`, `A^{-1/2}` for SPD `A` with (PRISM-)DB-Newton.
+///
+/// Thin wrapper over [`db_newton_prism_in`] with a throwaway workspace;
+/// persistent callers go through [`crate::matfn::Solver`].
 pub fn db_newton_prism(a: &Mat, opts: &DbNewtonOpts, rng_unused: &mut crate::rng::Rng) -> DbNewtonResult {
+    db_newton_prism_in(a, opts, rng_unused, &mut Workspace::new(), EngineHooks::none())
+}
+
+/// Workspace-pooled core. The product-form Newton iteration cannot resume
+/// from `X` alone (the `(M, X, Y)` triple is coupled), so `hooks.x0` is
+/// ignored. The per-iteration Cholesky inverse still allocates (it is a
+/// decomposition, not a GEMM, and `M` changes every iteration).
+pub(crate) fn db_newton_prism_in(
+    a: &Mat,
+    opts: &DbNewtonOpts,
+    rng_unused: &mut crate::rng::Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> DbNewtonResult {
     let _ = rng_unused; // signature symmetry with the other engines
     assert!(a.is_square());
     let eng = global_engine();
     let n = a.rows();
     let c = a.fro_norm().max(1e-300);
-    let mut m = a.scaled(1.0 / c);
+    let mut m = ws.take(n, n);
+    m.copy_from(a);
+    m.scale(1.0 / c);
     m.symmetrize();
-    let mut x = m.clone();
-    let mut y = Mat::eye(n);
+    let mut x = ws.take(n, n);
+    x.copy_from(&m);
+    let mut y = ws.take(n, n);
+    y.fill_with(0.0);
+    y.add_diag(1.0);
 
-    // Ping-pong buffers; only the Cholesky inverse still allocates (it is a
-    // decomposition, not a GEMM, and M changes every iteration).
-    let mut xm = Mat::zeros(n, n);
-    let mut ym = Mat::zeros(n, n);
-    let mut xn = Mat::zeros(n, n);
-    let mut yn = Mat::zeros(n, n);
-    let mut mn = Mat::zeros(n, n);
+    // Ping-pong buffers from the pool.
+    let mut xm = ws.take(n, n);
+    let mut ym = ws.take(n, n);
+    let mut xn = ws.take(n, n);
+    let mut yn = ws.take(n, n);
+    let mut mn = ws.take(n, n);
 
-    let mut rec = RunRecorder::start(eye_minus_fro(&m));
+    let mut rec = RunRecorder::start(eye_minus_fro(&m))
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base);
     for _ in 0..opts.stop.max_iters {
         if eye_minus_fro(&m) < opts.stop.tol {
             break;
@@ -111,18 +134,25 @@ pub fn db_newton_prism(a: &Mat, opts: &DbNewtonOpts, rng_unused: &mut crate::rng
         mn.add_diag(2.0 * alpha * one_m);
         mn.symmetrize();
         std::mem::swap(&mut m, &mut mn);
-        let rn = eye_minus_fro(&m);
-        rec.step(alpha, rn);
-        if !rn.is_finite() || rn > opts.stop.diverge_above {
+        if rec.step_guard(&opts.stop, alpha, eye_minus_fro(&m)) {
             break;
         }
     }
     let sc = c.sqrt();
-    DbNewtonResult {
+    let out = DbNewtonResult {
         sqrt: x.scaled(sc),
         inv_sqrt: y.scaled(1.0 / sc),
         log: rec.finish(&opts.stop),
-    }
+    };
+    ws.put(m);
+    ws.put(x);
+    ws.put(y);
+    ws.put(xm);
+    ws.put(ym);
+    ws.put(xn);
+    ws.put(yn);
+    ws.put(mn);
+    out
 }
 
 /// `‖I − M‖_F` without materialising the residual (same summation order as

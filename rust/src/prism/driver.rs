@@ -1,6 +1,9 @@
-//! Shared iteration bookkeeping: logs, stopping rules, α-selection modes.
+//! Shared iteration bookkeeping: logs, stopping rules, α-selection modes,
+//! and the per-iteration [`Observer`] / warm-start hooks every engine loop
+//! threads through its [`RunRecorder`].
 
 use crate::linalg::gemm::GemmScope;
+use crate::linalg::Mat;
 use crate::util::Stopwatch;
 
 /// How the update coefficient α_k is chosen each iteration.
@@ -56,6 +59,49 @@ impl StopRule {
         self.tol = t;
         self
     }
+    pub fn with_diverge_above(mut self, d: f64) -> Self {
+        self.diverge_above = d;
+        self
+    }
+}
+
+/// One completed iteration, as seen by an [`Observer`].
+#[derive(Debug, Clone, Copy)]
+pub struct IterEvent {
+    /// 0-based iteration index within the current run.
+    pub iter: usize,
+    /// The α chosen for this iteration.
+    pub alpha: f64,
+    /// Residual Frobenius norm *after* the update.
+    pub residual: f64,
+    /// Wall-clock seconds since the run started.
+    pub elapsed_s: f64,
+}
+
+/// Per-iteration callback: streamed residual trajectories for the
+/// coordinator service, live plotting, etc. The engine invokes it once per
+/// completed iteration, before the divergence check.
+pub type Observer<'a> = &'a mut dyn FnMut(&IterEvent);
+
+/// Optional per-run extensions threaded through an engine call: a warm-start
+/// iterate `x0` (paper §C — e.g. the previous optimizer step's factor) and a
+/// per-iteration [`Observer`]. Engines that cannot exploit a hook simply
+/// ignore it; which engines honour `x0` is documented on
+/// [`crate::matfn::MatFnSolver::solve_from`].
+pub struct EngineHooks<'a> {
+    pub x0: Option<&'a Mat>,
+    pub observer: Option<Observer<'a>>,
+    /// `(iterations, seconds)` added to every observer event — non-zero when
+    /// one logical run is executed as chained engine calls (the warm-α
+    /// phase), so streamed events stay continuous with the chained log.
+    pub event_base: (usize, f64),
+}
+
+impl<'a> EngineHooks<'a> {
+    /// No hooks — the plain free-function entry points use this.
+    pub fn none() -> EngineHooks<'static> {
+        EngineHooks { x0: None, observer: None, event_base: (0, 0.0) }
+    }
 }
 
 /// Per-run record: residual trajectory, chosen α's, GEMM counts, wall time.
@@ -102,25 +148,65 @@ impl IterationLog {
 
 /// Records GEMM-count + time around an iteration loop. GEMMs are counted
 /// through a thread-local [`GemmScope`], so runs on concurrent service
-/// workers never inflate each other's `gemm_calls`.
-pub struct RunRecorder {
+/// workers never inflate each other's `gemm_calls`. Optionally forwards each
+/// iteration to an [`Observer`].
+pub struct RunRecorder<'a> {
     sw: Stopwatch,
     gemm: GemmScope,
     pub log: IterationLog,
+    observer: Option<Observer<'a>>,
+    event_base: (usize, f64),
 }
 
-impl RunRecorder {
-    pub fn start(initial_residual: f64) -> Self {
+impl<'a> RunRecorder<'a> {
+    pub fn start(initial_residual: f64) -> RunRecorder<'a> {
         let mut log = IterationLog::default();
         log.residuals.push(initial_residual);
-        RunRecorder { sw: Stopwatch::start(), gemm: GemmScope::begin(), log }
+        RunRecorder {
+            sw: Stopwatch::start(),
+            gemm: GemmScope::begin(),
+            log,
+            observer: None,
+            event_base: (0, 0.0),
+        }
     }
 
-    /// Record one completed iteration.
+    /// Attach (or not) a per-iteration observer.
+    pub fn with_observer(mut self, observer: Option<Observer<'a>>) -> Self {
+        self.observer = observer;
+        self
+    }
+
+    /// Offset observer events (see [`EngineHooks::event_base`]). Affects
+    /// only what observers see, never the log itself.
+    pub fn with_event_base(mut self, event_base: (usize, f64)) -> Self {
+        self.event_base = event_base;
+        self
+    }
+
+    /// Record one completed iteration and notify the observer.
     pub fn step(&mut self, alpha: f64, post_residual: f64) {
         self.log.alphas.push(alpha);
         self.log.residuals.push(post_residual);
-        self.log.times_s.push(self.sw.elapsed_s());
+        let elapsed_s = self.sw.elapsed_s();
+        self.log.times_s.push(elapsed_s);
+        if let Some(obs) = self.observer.as_mut() {
+            let ev = IterEvent {
+                iter: self.event_base.0 + self.log.alphas.len() - 1,
+                alpha,
+                residual: post_residual,
+                elapsed_s: self.event_base.1 + elapsed_s,
+            };
+            obs(&ev);
+        }
+    }
+
+    /// Record one completed iteration and report whether the loop must stop:
+    /// `true` on a non-finite or diverging residual. This is the shared
+    /// tail-of-loop check every engine used to hand-roll.
+    pub fn step_guard(&mut self, stop: &StopRule, alpha: f64, post_residual: f64) -> bool {
+        self.step(alpha, post_residual);
+        !post_residual.is_finite() || post_residual > stop.diverge_above
     }
 
     pub fn finish(mut self, stop: &StopRule) -> IterationLog {
@@ -172,8 +258,32 @@ mod tests {
 
     #[test]
     fn stop_rule_builders() {
-        let s = StopRule::default().with_max_iters(5).with_tol(1e-3);
+        let s = StopRule::default().with_max_iters(5).with_tol(1e-3).with_diverge_above(1e6);
         assert_eq!(s.max_iters, 5);
         assert_eq!(s.tol, 1e-3);
+        assert_eq!(s.diverge_above, 1e6);
+    }
+
+    #[test]
+    fn step_guard_detects_divergence_and_nan() {
+        let stop = StopRule::default().with_diverge_above(10.0);
+        let mut rec = RunRecorder::start(1.0);
+        assert!(!rec.step_guard(&stop, 0.5, 2.0));
+        assert!(rec.step_guard(&stop, 0.5, 11.0));
+        let mut rec2 = RunRecorder::start(1.0);
+        assert!(rec2.step_guard(&stop, 0.5, f64::NAN));
+    }
+
+    #[test]
+    fn observer_sees_every_iteration() {
+        let mut events: Vec<(usize, f64)> = Vec::new();
+        let mut obs = |ev: &IterEvent| events.push((ev.iter, ev.residual));
+        let stop = StopRule::default();
+        let mut rec = RunRecorder::start(1.0).with_observer(Some(&mut obs));
+        rec.step_guard(&stop, 0.5, 0.5);
+        rec.step_guard(&stop, 0.6, 0.25);
+        let log = rec.finish(&stop);
+        assert_eq!(log.iters(), 2);
+        assert_eq!(events, vec![(0, 0.5), (1, 0.25)]);
     }
 }

@@ -9,9 +9,9 @@
 //! PRISM chooses `α_k` by minimising the sketched next-residual (degree-2p
 //! polynomial in α); the classical iteration fixes `α = 1/p`.
 
-use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use super::driver::{AlphaMode, EngineHooks, IterationLog, RunRecorder, StopRule};
 use crate::coeffs::inverse_newton_coeffs;
-use crate::linalg::gemm::global_engine;
+use crate::linalg::gemm::{global_engine, Workspace};
 use crate::linalg::Mat;
 use crate::polyfit::minimize_on_interval;
 use crate::rng::Rng;
@@ -76,33 +76,78 @@ fn select_alpha(r: &Mat, p: usize, mode: AlphaMode, rng: &mut Rng) -> f64 {
 }
 
 /// Compute `A^{-1/p}` for SPD `A`.
+///
+/// Thin wrapper over [`inv_root_prism_in`] with a throwaway workspace;
+/// persistent callers go through [`crate::matfn::Solver`].
 pub fn inv_root_prism(a: &Mat, opts: &InvRootOpts, rng: &mut Rng) -> InvRootResult {
+    inv_root_prism_in(a, opts, rng, &mut Workspace::new(), EngineHooks::none())
+}
+
+/// Workspace-pooled core. `hooks.x0` warm-starts the coupled iteration at
+/// `X₀ = x0` with `M₀ = X₀ᵖ A` — valid because every iterate is a commuting
+/// polynomial in `A`, so passing the previous step's `A^{-1/p}` estimate for
+/// a nearby `A` resumes with `M₀ ≈ I`.
+pub(crate) fn inv_root_prism_in(
+    a: &Mat,
+    opts: &InvRootOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> InvRootResult {
     assert!(a.is_square());
     let p = opts.p;
     assert!(p >= 1);
     let eng = global_engine();
     let n = a.rows();
     let c = (2.0 * a.fro_norm() / (p as f64 + 1.0)).powf(1.0 / p as f64);
-    let mut x = Mat::eye(n).scaled(1.0 / c);
-    let mut m = a.scaled(1.0 / c.powi(p as i32));
+    let mut x = ws.take(n, n);
+    let mut m = ws.take(n, n);
 
-    // Ping-pong buffers — the loop is allocation-free after iteration 0.
-    let mut xn = Mat::zeros(n, n);
-    let mut mn = Mat::zeros(n, n);
-    let mut g = Mat::zeros(n, n);
-    let mut r = Mat::zeros(n, n);
+    // Ping-pong buffers from the pool — the loop is allocation-free, and so
+    // is the whole call from the second same-shape solve onward.
+    let mut xn = ws.take(n, n);
+    let mut mn = ws.take(n, n);
+    let mut g = ws.take(n, n);
+    let mut r = ws.take(n, n);
     // G-power scratch, only needed for p ≥ 2.
     let (mut gp, mut gpn) = if p > 1 {
-        (Mat::zeros(n, n), Mat::zeros(n, n))
+        (ws.take(n, n), ws.take(n, n))
     } else {
         (Mat::zeros(0, 0), Mat::zeros(0, 0))
     };
+
+    match hooks.x0 {
+        Some(x0) => {
+            assert_eq!(x0.shape(), (n, n), "invroot: x0 shape mismatch");
+            x.copy_from(x0);
+            // M₀ = X₀ᵖ A.
+            if p == 1 {
+                eng.matmul_into(&mut m, &x, a);
+            } else {
+                gp.copy_from(&x);
+                for _ in 1..p {
+                    eng.matmul_into(&mut gpn, &gp, &x);
+                    std::mem::swap(&mut gp, &mut gpn);
+                }
+                eng.matmul_into(&mut m, &gp, a);
+            }
+            m.symmetrize();
+        }
+        None => {
+            x.fill_with(0.0);
+            x.add_diag(1.0 / c);
+            m.copy_from(a);
+            m.scale(1.0 / c.powi(p as i32));
+        }
+    }
 
     r.copy_from(&m);
     r.scale(-1.0);
     r.add_diag(1.0);
 
-    let mut rec = RunRecorder::start(r.fro_norm());
+    let mut rec = RunRecorder::start(r.fro_norm())
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base);
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
@@ -130,13 +175,22 @@ pub fn inv_root_prism(a: &Mat, opts: &InvRootOpts, rng: &mut Rng) -> InvRootResu
         r.copy_from(&m);
         r.scale(-1.0);
         r.add_diag(1.0);
-        let rn = r.fro_norm();
-        rec.step(alpha, rn);
-        if !rn.is_finite() || rn > opts.stop.diverge_above {
+        if rec.step_guard(&opts.stop, alpha, r.fro_norm()) {
             break;
         }
     }
-    InvRootResult { inv_root: x, log: rec.finish(&opts.stop) }
+    let out = InvRootResult { inv_root: x.clone(), log: rec.finish(&opts.stop) };
+    ws.put(x);
+    ws.put(m);
+    ws.put(xn);
+    ws.put(mn);
+    ws.put(g);
+    ws.put(r);
+    if p > 1 {
+        ws.put(gp);
+        ws.put(gpn);
+    }
+    out
 }
 
 #[cfg(test)]

@@ -1,18 +1,41 @@
 //! The PRISM iteration engines — one per row of the paper's Table 1.
 //!
+//! **Consumers should not call these engines directly.** The supported
+//! surface is [`crate::matfn`]: plan a [`crate::matfn::Solver`] (by spec or
+//! by registry name) and call `solve` — the solver owns the ping-pong
+//! buffers and reuses them across same-shape calls, supports warm starts
+//! (paper §C) and streams per-iteration residuals to an observer:
+//!
+//! ```
+//! use prism::matfn::{registry, MatFnSolver};
+//! use prism::{randmat, Rng};
+//!
+//! let mut rng = Rng::seed_from(7);
+//! let a = randmat::gaussian(&mut rng, 64, 32);
+//! let mut solver = registry::resolve("prism5-polar").unwrap();
+//! assert!(solver.solve(&a, &mut rng).log.converged);
+//! ```
+//!
+//! The free functions in these modules (`polar_prism`, `sqrt_prism`, …)
+//! remain as thin wrappers that allocate a throwaway workspace per call;
+//! the bench harnesses and unit tests use them, new code should not. Each
+//! engine's real body is a `pub(crate)` `*_in` core that draws its buffers
+//! from a caller-owned [`crate::linalg::gemm::Workspace`] and honours the
+//! [`driver::EngineHooks`] (warm start + observer).
+//!
 //! Every engine comes in a *classic* variant (fixed Taylor coefficients,
 //! i.e. the textbook iteration) and a *PRISM* variant (Step 4+5 of the
 //! meta-algorithm: the last polynomial coefficient `α_k` is re-fitted each
 //! iteration to the sketched spectrum of the residual).
 //!
-//! | module | target | Table 1 rows |
-//! |---|---|---|
-//! | [`sign`] | sign(A) | (derivation §4) |
-//! | [`polar`] | U Vᵀ | rows 3–4 |
-//! | [`sqrt`] | A^{1/2}, A^{-1/2} | rows 1–2 |
-//! | [`inverse_newton`] | A^{-1/p} | row 5 |
-//! | [`db_newton`] | A^{1/2}, A^{-1/2} | row 6 |
-//! | [`chebyshev`] | A⁻¹ | row 7 |
+//! | module | target | Table 1 rows | registry keys |
+//! |---|---|---|---|
+//! | [`sign`] | sign(A) | (derivation §4) | `prism5-sign`, `ns-sign`, … |
+//! | [`polar`] | U Vᵀ | rows 3–4 | `prism5-polar`, `pe-polar`, … |
+//! | [`sqrt`] | A^{1/2}, A^{-1/2} | rows 1–2 | `prism5-sqrt`, `prism5-invsqrt`, … |
+//! | [`inverse_newton`] | A^{-1/p} | row 5 | `invnewton-invroot2`, … |
+//! | [`db_newton`] | A^{1/2}, A^{-1/2} | row 6 | `newton-sqrt`, `newton-invsqrt`, … |
+//! | [`chebyshev`] | A⁻¹ | row 7 | `cheb-inverse`, … |
 
 pub mod driver;
 pub mod fit;
@@ -23,4 +46,4 @@ pub mod inverse_newton;
 pub mod db_newton;
 pub mod chebyshev;
 
-pub use driver::{AlphaMode, IterationLog, StopRule};
+pub use driver::{AlphaMode, EngineHooks, IterEvent, IterationLog, Observer, StopRule};

@@ -6,9 +6,9 @@
 //! This is the primitive inside Muon and the subject of Figs. 1, 3, 4,
 //! D.1, D.2.
 
-use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use super::driver::{AlphaMode, EngineHooks, IterationLog, RunRecorder, StopRule};
 use super::fit::{select_alpha_ns, update_poly_into};
-use crate::linalg::gemm::{global_engine, syrk_at_a};
+use crate::linalg::gemm::{global_engine, syrk_at_a, Workspace};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -55,30 +55,80 @@ pub struct PolarResult {
 
 /// Compute the polar factor of `A` with PRISM/classic Newton–Schulz.
 ///
-/// Handles both orientations; tall (m ≥ n) is the native case.
+/// Handles both orientations; tall (m ≥ n) is the native case. Thin wrapper
+/// over [`polar_prism_in`] with a throwaway workspace; persistent callers go
+/// through [`crate::matfn::Solver`].
 pub fn polar_prism(a: &Mat, opts: &PolarOpts, rng: &mut Rng) -> PolarResult {
+    polar_prism_in(a, opts, rng, &mut Workspace::new(), EngineHooks::none())
+}
+
+/// Workspace-pooled core. `hooks.x0` warm-starts the iteration at `X₀ = x0`
+/// (paper §C — pass the previous step's polar factor when orthogonalizing a
+/// slowly-drifting matrix); the caller guarantees `‖x0‖₂ ≲ 1`.
+pub(crate) fn polar_prism_in(
+    a: &Mat,
+    opts: &PolarOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> PolarResult {
     let (m, n) = a.shape();
     if m < n {
-        let r = polar_prism(&a.transpose(), opts, rng);
+        let EngineHooks { x0, observer, event_base } = hooks;
+        let mut at = ws.take(n, m);
+        a.transpose_into(&mut at);
+        let x0t = x0.map(|x0| {
+            assert_eq!(x0.shape(), (m, n), "polar: x0 shape mismatch");
+            let mut t = ws.take(n, m);
+            x0.transpose_into(&mut t);
+            t
+        });
+        // The `match` re-coerces the observer's trait-object lifetime for
+        // the shorter-lived recursive hooks (Option's variance cannot).
+        let hooks_t = EngineHooks {
+            x0: x0t.as_ref(),
+            observer: match observer {
+                Some(o) => Some(o),
+                None => None,
+            },
+            event_base,
+        };
+        let r = polar_prism_in(&at, opts, rng, ws, hooks_t);
+        ws.put(at);
+        if let Some(t) = x0t {
+            ws.put(t);
+        }
         return PolarResult { q: r.q.transpose(), log: r.log, transposed: true };
     }
     let eng = global_engine();
-    let fro = a.fro_norm().max(1e-300);
-    let mut x = a.scaled(1.0 / fro);
+    let mut x = ws.take(m, n);
+    match hooks.x0 {
+        Some(x0) => {
+            assert_eq!(x0.shape(), (m, n), "polar: x0 shape mismatch");
+            x.copy_from(x0);
+        }
+        None => {
+            x.copy_from(a);
+            x.scale(1.0 / a.fro_norm().max(1e-300));
+        }
+    }
 
-    // Ping-pong buffers, allocated once: the loop below is allocation-free
-    // after iteration 0 (the α fit's O(np) sketch draw aside).
-    let mut xn = Mat::zeros(m, n);
-    let mut g = Mat::zeros(n, n);
-    let mut r = Mat::zeros(n, n);
-    let mut r2 = if opts.d == 2 { Some(Mat::zeros(n, n)) } else { None };
+    // Ping-pong buffers from the pool: the loop below is allocation-free
+    // (the α fit's O(np) sketch draw aside), and so is the whole call from
+    // the second same-shape solve onward.
+    let mut xn = ws.take(m, n);
+    let mut g = ws.take(n, n);
+    let mut r = ws.take(n, n);
+    let mut r2 = if opts.d == 2 { Some(ws.take(n, n)) } else { None };
 
     // R = I − XᵀX.
     eng.syrk_at_a_into(&mut r, &x);
     r.scale(-1.0);
     r.add_diag(1.0);
 
-    let mut rec = RunRecorder::start(r.fro_norm());
+    let mut rec = RunRecorder::start(r.fro_norm())
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base);
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
@@ -93,13 +143,19 @@ pub fn polar_prism(a: &Mat, opts: &PolarOpts, rng: &mut Rng) -> PolarResult {
         eng.syrk_at_a_into(&mut r, &x);
         r.scale(-1.0);
         r.add_diag(1.0);
-        let rn = r.fro_norm();
-        rec.step(alpha, rn);
-        if !rn.is_finite() || rn > opts.stop.diverge_above {
+        if rec.step_guard(&opts.stop, alpha, r.fro_norm()) {
             break;
         }
     }
-    PolarResult { q: x, log: rec.finish(&opts.stop), transposed: false }
+    let out = PolarResult { q: x.clone(), log: rec.finish(&opts.stop), transposed: false };
+    ws.put(x);
+    ws.put(xn);
+    ws.put(g);
+    ws.put(r);
+    if let Some(b) = r2 {
+        ws.put(b);
+    }
+    out
 }
 
 /// Orthogonality error ‖I − QᵀQ‖_F of a candidate polar factor.

@@ -3,9 +3,9 @@
 //! `sign(A) = A (A²)^{-1/2}` for `A` with `A²` symmetric. The Newton–Schulz
 //! iteration is `X₀ = A`, `R_k = I − X_k²`, `X_{k+1} = X_k g_d(R_k; α_k)`.
 
-use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use super::driver::{AlphaMode, EngineHooks, IterationLog, RunRecorder, StopRule};
 use super::fit::{select_alpha_ns, taylor_alpha, update_poly_into};
-use crate::linalg::gemm::global_engine;
+use crate::linalg::gemm::{global_engine, Workspace};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -36,18 +36,45 @@ pub struct SignResult {
 }
 
 /// Compute `sign(A)` for square `A` with `A²` symmetric.
+///
+/// Thin wrapper over [`sign_prism_in`] with a throwaway workspace;
+/// persistent callers go through [`crate::matfn::Solver`].
 pub fn sign_prism(a: &Mat, opts: &SignOpts, rng: &mut Rng) -> SignResult {
+    sign_prism_in(a, opts, rng, &mut Workspace::new(), EngineHooks::none())
+}
+
+/// Workspace-pooled core. `hooks.x0` warm-starts at `X₀ = x0` (pass a
+/// previous sign estimate; it is used as-is, without renormalisation).
+pub(crate) fn sign_prism_in(
+    a: &Mat,
+    opts: &SignOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> SignResult {
     assert!(a.is_square(), "sign: square input required");
     let eng = global_engine();
     let n = a.rows();
-    let scale = if opts.normalize { a.fro_norm().max(1e-300) } else { 1.0 };
-    let mut x = a.scaled(1.0 / scale);
+    let mut x = ws.take(n, n);
+    match hooks.x0 {
+        Some(x0) => {
+            assert_eq!(x0.shape(), (n, n), "sign: x0 shape mismatch");
+            x.copy_from(x0);
+        }
+        None => {
+            x.copy_from(a);
+            if opts.normalize {
+                x.scale(1.0 / a.fro_norm().max(1e-300));
+            }
+        }
+    }
 
-    // Ping-pong buffers — the loop is allocation-free after iteration 0.
-    let mut xn = Mat::zeros(n, n);
-    let mut g = Mat::zeros(n, n);
-    let mut r = Mat::zeros(n, n);
-    let mut r2 = if opts.d == 2 { Some(Mat::zeros(n, n)) } else { None };
+    // Ping-pong buffers from the pool — the loop is allocation-free, and so
+    // is the whole call from the second same-shape solve onward.
+    let mut xn = ws.take(n, n);
+    let mut g = ws.take(n, n);
+    let mut r = ws.take(n, n);
+    let mut r2 = if opts.d == 2 { Some(ws.take(n, n)) } else { None };
 
     // R = I − X²; A² symmetric ⇒ R symmetric; symmetrize removes drift.
     eng.matmul_into(&mut r, &x, &x);
@@ -55,7 +82,9 @@ pub fn sign_prism(a: &Mat, opts: &SignOpts, rng: &mut Rng) -> SignResult {
     r.add_diag(1.0);
     r.symmetrize();
 
-    let mut rec = RunRecorder::start(r.fro_norm());
+    let mut rec = RunRecorder::start(r.fro_norm())
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base);
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
@@ -71,13 +100,19 @@ pub fn sign_prism(a: &Mat, opts: &SignOpts, rng: &mut Rng) -> SignResult {
         r.scale(-1.0);
         r.add_diag(1.0);
         r.symmetrize();
-        let rn = r.fro_norm();
-        rec.step(alpha, rn);
-        if !rn.is_finite() || rn > opts.stop.diverge_above {
+        if rec.step_guard(&opts.stop, alpha, r.fro_norm()) {
             break;
         }
     }
-    SignResult { s: x, log: rec.finish(&opts.stop) }
+    let out = SignResult { s: x.clone(), log: rec.finish(&opts.stop) };
+    ws.put(x);
+    ws.put(xn);
+    ws.put(g);
+    ws.put(r);
+    if let Some(b) = r2 {
+        ws.put(b);
+    }
+    out
 }
 
 /// Scalar Newton–Schulz sequence `x_{k+1} = x_k g_d(1 − x_k²; α)` with

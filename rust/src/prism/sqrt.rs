@@ -9,9 +9,9 @@
 //! This is exactly the primitive Shampoo needs for its `L^{-1/2}`, `R^{-1/2}`
 //! preconditioner roots.
 
-use super::driver::{AlphaMode, IterationLog, RunRecorder, StopRule};
+use super::driver::{AlphaMode, EngineHooks, IterationLog, RunRecorder, StopRule};
 use super::fit::{select_alpha_ns, update_poly_into};
-use crate::linalg::gemm::{global_engine, matmul};
+use crate::linalg::gemm::{global_engine, matmul, Workspace};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -47,20 +47,41 @@ pub struct SqrtResult {
 }
 
 /// Compute `A^{1/2}` and `A^{-1/2}` for symmetric positive-definite `A`.
+///
+/// Thin wrapper over [`sqrt_prism_in`] with a throwaway workspace; persistent
+/// callers go through [`crate::matfn::Solver`], which reuses one
+/// [`Workspace`] across same-shape calls.
 pub fn sqrt_prism(a: &Mat, opts: &SqrtOpts, rng: &mut Rng) -> SqrtResult {
+    sqrt_prism_in(a, opts, rng, &mut Workspace::new(), EngineHooks::none())
+}
+
+/// Workspace-pooled core. The coupled iteration cannot warm-start from `X`
+/// alone (`Y` must satisfy the coupling invariant), so `hooks.x0` is ignored.
+pub(crate) fn sqrt_prism_in(
+    a: &Mat,
+    opts: &SqrtOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> SqrtResult {
     assert!(a.is_square(), "sqrt: square input required");
     let eng = global_engine();
     let n = a.rows();
     let c = a.fro_norm().max(1e-300);
-    let mut x = a.scaled(1.0 / c);
-    let mut y = Mat::eye(n);
+    let mut x = ws.take(n, n);
+    x.copy_from(a);
+    x.scale(1.0 / c);
+    let mut y = ws.take(n, n);
+    y.fill_with(0.0);
+    y.add_diag(1.0);
 
-    // Ping-pong buffers — the loop is allocation-free after iteration 0.
-    let mut xn = Mat::zeros(n, n);
-    let mut yn = Mat::zeros(n, n);
-    let mut g = Mat::zeros(n, n);
-    let mut r = Mat::zeros(n, n);
-    let mut r2 = if opts.d == 2 { Some(Mat::zeros(n, n)) } else { None };
+    // Ping-pong buffers from the pool — the loop is allocation-free, and so
+    // is the whole call from the second same-shape solve onward.
+    let mut xn = ws.take(n, n);
+    let mut yn = ws.take(n, n);
+    let mut g = ws.take(n, n);
+    let mut r = ws.take(n, n);
+    let mut r2 = if opts.d == 2 { Some(ws.take(n, n)) } else { None };
 
     // NOTE: the residual is `I − Y X` (inverse-root times root), NOT
     // `I − X Y`. In exact arithmetic they are equal (X and Y are commuting
@@ -72,7 +93,9 @@ pub fn sqrt_prism(a: &Mat, opts: &SqrtOpts, rng: &mut Rng) -> SqrtResult {
     r.add_diag(1.0);
     r.symmetrize();
 
-    let mut rec = RunRecorder::start(r.fro_norm());
+    let mut rec = RunRecorder::start(r.fro_norm())
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base);
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;
@@ -90,18 +113,26 @@ pub fn sqrt_prism(a: &Mat, opts: &SqrtOpts, rng: &mut Rng) -> SqrtResult {
         r.scale(-1.0);
         r.add_diag(1.0);
         r.symmetrize();
-        let rn = r.fro_norm();
-        rec.step(alpha, rn);
-        if !rn.is_finite() || rn > opts.stop.diverge_above {
+        if rec.step_guard(&opts.stop, alpha, r.fro_norm()) {
             break;
         }
     }
     let sc = c.sqrt();
-    SqrtResult {
+    let out = SqrtResult {
         sqrt: x.scaled(sc),
         inv_sqrt: y.scaled(1.0 / sc),
         log: rec.finish(&opts.stop),
+    };
+    ws.put(x);
+    ws.put(y);
+    ws.put(xn);
+    ws.put(yn);
+    ws.put(g);
+    ws.put(r);
+    if let Some(b) = r2 {
+        ws.put(b);
     }
+    out
 }
 
 /// The paper's Fig. D.3 error metric: `‖I − X⁻² A‖_F ≈ ‖I − Y² A‖_F`

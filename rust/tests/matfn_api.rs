@@ -1,0 +1,253 @@
+//! Integration suite for the unified `matfn` API surface: registry
+//! round-trips (including from optimizer `Backend`/config strings), helpful
+//! unknown-name errors, the zero-allocation persistent-workspace contract,
+//! warm starts, and per-iteration observers.
+
+use prism::config::Backend;
+use prism::linalg::gemm::matmul_at_b;
+use prism::linalg::Mat;
+use prism::matfn::{registry, MatFnSolver, MatFnTask, Solver};
+use prism::prism::driver::StopRule;
+use prism::randmat;
+use prism::rng::Rng;
+use std::sync::{Arc, Mutex};
+
+// ───────────────────────── registry round-trips ─────────────────────────
+
+#[test]
+fn every_registry_name_resolves_and_round_trips() {
+    for &name in registry::names() {
+        let solver = registry::resolve(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(solver.name(), name, "resolve(name).name() must equal the key");
+    }
+}
+
+#[test]
+fn backend_strings_round_trip_through_the_registry() {
+    // Every optimizer/config Backend, for both service tasks: Backend →
+    // Solver → name → registry → same name. This is the config-file path:
+    // a TOML `backend = "prism5"` ends up at the same solver as the
+    // registry key "prism5-polar"/"prism5-invsqrt".
+    for b in [
+        Backend::NewtonSchulz,
+        Backend::PolarExpress,
+        Backend::Prism3,
+        Backend::Prism5,
+        Backend::Eigen,
+        Backend::PrismNewton,
+    ] {
+        for task in [MatFnTask::Polar, MatFnTask::InvSqrt] {
+            let s = Solver::for_backend(b, task, 25).unwrap();
+            let name = s.name();
+            let re = registry::resolve(&name)
+                .unwrap_or_else(|e| panic!("{:?}/{}: '{name}': {e}", b, task.name()));
+            assert_eq!(re.name(), name);
+            // The backend string itself parses back too (registry method
+            // vocabulary ⊇ Backend::parse vocabulary). The one exception is
+            // prism-newton×polar: DB-Newton has no polar form, which is
+            // exactly why for_backend substitutes PRISM-5 there.
+            if !(b == Backend::PrismNewton && task == MatFnTask::Polar) {
+                let via_string =
+                    registry::resolve(&format!("{}-{}", b.name(), task.name())).unwrap();
+                assert_eq!(via_string.task(), task);
+            }
+        }
+    }
+}
+
+#[test]
+fn unknown_names_list_the_valid_options() {
+    let err = registry::resolve("prism6-polar").unwrap_err().to_string();
+    assert!(err.contains("prism6-polar"), "{err}");
+    for expected in ["prism5-polar", "newton-sqrt", "cheb-inverse", "eigen-invroot2"] {
+        assert!(err.contains(expected), "error must list '{expected}': {err}");
+    }
+}
+
+// ───────────────── persistent workspace: zero allocations ─────────────────
+
+#[test]
+fn reused_solvers_run_allocation_free_for_every_engine() {
+    let mut rng = Rng::seed_from(1);
+    let tall = randmat::gaussian(&mut rng, 20, 10);
+    let w = randmat::logspace(1e-2, 1.0, 12);
+    let spd = randmat::sym_with_spectrum(&mut rng, 12, &w);
+    // (registry name, input) per engine family — PRISM engines and both
+    // iterative baselines.
+    let cases: &[(&str, &Mat)] = &[
+        ("prism5-polar", &tall),
+        ("prism3-sign", &spd),
+        ("prism5-sqrt", &spd),
+        ("prism5-invsqrt", &spd),
+        ("invnewton-invroot2", &spd),
+        ("newton-sqrt", &spd),
+        ("cheb-inverse", &spd),
+        ("pe-polar", &tall),
+    ];
+    for &(name, input) in cases {
+        let mut s = registry::resolve(name).unwrap();
+        s.set_stop(StopRule::default().with_max_iters(20));
+        let _ = s.solve(input, &mut rng);
+        let allocs = s.workspace_allocations();
+        assert!(allocs > 0, "{name}: cold call should populate the pool");
+        for _ in 0..2 {
+            let _ = s.solve(input, &mut rng);
+        }
+        assert_eq!(
+            s.workspace_allocations(),
+            allocs,
+            "{name}: same-shape reuse must be allocation-free"
+        );
+    }
+}
+
+#[test]
+fn shape_change_grows_pool_then_stabilizes() {
+    let mut rng = Rng::seed_from(2);
+    let small = randmat::gaussian(&mut rng, 12, 6);
+    let big = randmat::gaussian(&mut rng, 24, 12);
+    let mut s = registry::resolve("prism5-polar").unwrap();
+    let _ = s.solve(&small, &mut rng);
+    let _ = s.solve(&big, &mut rng); // grows buffers (counted)
+    let after_big = s.workspace_allocations();
+    let _ = s.solve(&big, &mut rng);
+    let _ = s.solve(&small, &mut rng); // big buffers serve small shapes
+    assert_eq!(s.workspace_allocations(), after_big);
+}
+
+// ───────────────────────── warm start (§C) ─────────────────────────
+
+#[test]
+fn polar_warm_start_polishes_previous_factor() {
+    // Polar warm starts are first-order (see MatFnSolver::solve_from docs):
+    // the iteration polishes x0, which is exact for the same input and
+    // O(‖ΔA‖)-accurate under drift — the Muon optimizer-step trade.
+    let mut rng = Rng::seed_from(3);
+    let spec = randmat::logspace(1e-2, 1.0, 16);
+    let a = randmat::with_spectrum(&mut rng, 24, 16, &spec);
+    let mut s = registry::resolve("prism5-polar").unwrap();
+    s.set_stop(StopRule::default().with_max_iters(100).with_tol(1e-8));
+    let cold = s.solve(&a, &mut rng);
+    assert!(cold.log.converged);
+
+    // Same input: the previous factor is already the answer — ~no work.
+    let again = s.solve_from(&a, &cold.primary, &mut rng);
+    assert!(again.log.converged);
+    assert!(
+        again.log.iters() <= 1,
+        "re-solve from own factor took {} iters",
+        again.log.iters()
+    );
+
+    // Drifted input: far fewer iterations than a cold solve, result still
+    // orthogonal and within O(drift) of the drifted input's true factor.
+    let mut a2 = a.clone();
+    let noise = Mat::gaussian(&mut rng, 24, 16, 1e-8);
+    a2.axpy(1.0, &noise);
+    let warm = s.solve_from(&a2, &cold.primary, &mut rng);
+    let cold2 = s.solve(&a2, &mut rng);
+    assert!(warm.log.converged && cold2.log.converged);
+    assert!(
+        warm.log.iters() < cold2.log.iters(),
+        "warm {} vs cold {}",
+        warm.log.iters(),
+        cold2.log.iters()
+    );
+    assert!(matmul_at_b(&warm.primary, &warm.primary).sub(&Mat::eye(16)).max_abs() < 1e-6);
+    let exact2 = prism::baselines::eigen_fn::polar_eigen(&a2);
+    assert!(
+        warm.primary.sub(&exact2).max_abs() < 1e-3,
+        "warm result must track the drifted factor to first order"
+    );
+}
+
+#[test]
+fn inverse_warm_start_polishes_previous_result() {
+    let mut rng = Rng::seed_from(4);
+    let w = randmat::logspace(1e-2, 1.0, 10);
+    let a = randmat::sym_with_spectrum(&mut rng, 10, &w);
+    for name in ["cheb-inverse", "invnewton-invroot2"] {
+        let mut s = registry::resolve(name).unwrap();
+        s.set_stop(StopRule::default().with_max_iters(200).with_tol(1e-9));
+        let cold = s.solve(&a, &mut rng);
+        assert!(cold.log.converged, "{name}");
+        let warm = s.solve_from(&a, &cold.primary, &mut rng);
+        assert!(warm.log.converged, "{name}");
+        assert!(
+            warm.log.iters() <= 3,
+            "{name}: restarting from the answer should be ~instant, took {}",
+            warm.log.iters()
+        );
+    }
+}
+
+#[test]
+fn sqrt_warm_start_falls_back_to_cold_solve() {
+    // Coupled square-root methods cannot resume from X alone; solve_from is
+    // documented to fall back to a full solve and must still be correct.
+    let mut rng = Rng::seed_from(5);
+    let w = randmat::logspace(1e-2, 1.0, 8);
+    let a = randmat::sym_with_spectrum(&mut rng, 8, &w);
+    let mut s = registry::resolve("prism5-sqrt").unwrap();
+    let cold = s.solve(&a, &mut rng);
+    let warm = s.solve_from(&a, &cold.primary, &mut rng);
+    assert!(warm.log.converged);
+    let back = prism::linalg::gemm::matmul(&warm.primary, &warm.primary);
+    assert!(back.sub(&a).max_abs() < 1e-6);
+}
+
+// ───────────────────────── observer streaming ─────────────────────────
+
+#[test]
+fn observer_streams_one_event_per_iteration() {
+    let mut rng = Rng::seed_from(6);
+    let a = randmat::gaussian(&mut rng, 20, 10);
+    let mut s = registry::resolve("prism5-polar").unwrap();
+    let events: Arc<Mutex<Vec<(usize, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&events);
+    s.set_observer(Some(Box::new(move |ev| {
+        sink.lock().unwrap().push((ev.iter, ev.residual));
+    })));
+    let out = s.solve(&a, &mut rng);
+    s.set_observer(None);
+    let n_events = {
+        let seen = events.lock().unwrap();
+        assert_eq!(seen.len(), out.log.iters());
+        for (k, (iter, res)) in seen.iter().enumerate() {
+            assert_eq!(*iter, k);
+            assert_eq!(*res, out.log.residuals[k + 1], "stream must mirror the log");
+        }
+        seen.len()
+    };
+    // Removing the observer stops the stream but not the solver.
+    let out2 = s.solve(&a, &mut rng);
+    assert!(out2.log.converged);
+    assert_eq!(events.lock().unwrap().len(), n_events, "no events after removal");
+}
+
+// ───────────────────── trait-object service pattern ─────────────────────
+
+#[test]
+fn solvers_compose_as_trait_objects() {
+    let mut rng = Rng::seed_from(7);
+    let w = randmat::logspace(1e-2, 1.0, 9);
+    let spd = randmat::sym_with_spectrum(&mut rng, 9, &w);
+    let mut bank: Vec<Box<dyn MatFnSolver>> = vec![
+        Box::new(registry::resolve("prism5-invsqrt").unwrap()),
+        Box::new(registry::resolve("newton-invsqrt").unwrap()),
+        Box::new(registry::resolve("eigen-invsqrt").unwrap()),
+    ];
+    for s in bank.iter_mut() {
+        let out = s.solve(&spd, &mut rng);
+        assert!(out.log.converged, "{}", s.name());
+        let prod = prism::linalg::gemm::matmul(
+            &prism::linalg::gemm::matmul(&out.primary, &spd),
+            &out.primary,
+        );
+        assert!(
+            prod.sub(&Mat::eye(9)).max_abs() < 1e-4,
+            "{}: not an inverse sqrt",
+            s.name()
+        );
+    }
+}

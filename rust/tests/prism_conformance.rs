@@ -1,30 +1,47 @@
 //! Conformance property suite: every Table-1 iteration engine — classic and
-//! PRISM variants — plus the two matmul-only baselines, checked against
-//! eigendecomposition/SVD ground truth (`baselines::eigen_fn`) on randomly
-//! drawn spectra, with the `IterationLog` invariants asserted on every run.
+//! PRISM variants — plus the baselines, checked against eigendecomposition /
+//! SVD ground truth (`baselines::eigen_fn`) on randomly drawn spectra, with
+//! the `IterationLog` invariants asserted on every run.
+//!
+//! All engines are reached exclusively through the unified `matfn` API
+//! (registry names / `Solver::new` specs), so this suite is also the
+//! conformance check for the solver surface itself: per-variant the solver
+//! is planned **once** and reused across every case, exercising the
+//! cross-call workspace path on mixed shapes.
 //!
 //! Dimensions are kept small (n ≤ 14) and iteration budgets generous so the
 //! 64-case-per-engine suite stays CI-sized while still sweeping condition
 //! numbers across several orders of magnitude.
 
-use prism::baselines::cans::{polar_cans, CansOpts};
 use prism::baselines::eigen_fn;
-use prism::baselines::polar_express::PolarExpress;
 use prism::linalg::eigen::symmetric_eigen;
 use prism::linalg::gemm::matmul;
 use prism::linalg::Mat;
-use prism::prism::chebyshev::{chebyshev_inverse, ChebyshevOpts};
-use prism::prism::db_newton::{db_newton_prism, DbNewtonOpts};
-use prism::prism::driver::{AlphaMode, IterationLog, StopRule};
-use prism::prism::inverse_newton::{inv_root_prism, InvRootOpts};
-use prism::prism::polar::{polar_prism, PolarOpts};
-use prism::prism::sign::{sign_prism, SignOpts};
-use prism::prism::sqrt::{sqrt_prism, SqrtOpts};
+use prism::matfn::{registry, MatFnTask, Solver, SolverSpec};
+use prism::prism::driver::{IterationLog, StopRule};
 use prism::ptest::{gens, Prop};
 use prism::randmat;
 use prism::rng::Rng;
+use std::sync::Mutex;
 
 const CASES: usize = 64;
+
+/// Plan solvers from registry names with a common stop rule; panics on a bad
+/// name so conformance failures point at the registry, not the harness.
+/// Behind a `Mutex` because `Prop::run` takes an `Fn` closure while a
+/// reused `Solver` needs `&mut` for its workspace.
+fn solvers(names: &[&str], stop: StopRule) -> Mutex<Vec<Solver>> {
+    Mutex::new(
+        names
+            .iter()
+            .map(|n| {
+                let mut s = registry::resolve(n).unwrap_or_else(|e| panic!("{n}: {e}"));
+                s.set_stop(stop);
+                s
+            })
+            .collect(),
+    )
+}
 
 /// Structural invariants every run must satisfy; when `monotone` is set (the
 /// contraction-style engines) the residual trajectory of a *converged* run
@@ -54,25 +71,26 @@ fn spd(rng: &mut Rng, n: usize, wmin: f64) -> Mat {
 
 #[test]
 fn conformance_polar_vs_svd() {
-    let variants: &[(&str, usize, AlphaMode)] = &[
-        ("classic-d1", 1, AlphaMode::Classic),
-        ("classic-d2", 2, AlphaMode::Classic),
-        ("prism-3", 1, AlphaMode::Sketched { p: 8 }),
-        ("prism-5", 2, AlphaMode::Sketched { p: 8 }),
-    ];
+    let stop = StopRule::default().with_max_iters(300).with_tol(1e-8);
+    // "ns-polar" is classic degree-5; classic degree-3 needs an explicit spec.
+    let variants = solvers(&["ns-polar", "prism3-polar", "prism5-polar"], stop);
+    variants.lock().unwrap().push(
+        Solver::new(MatFnTask::Polar, SolverSpec::ns_classic(1).with_stop(stop)).unwrap(),
+    );
     Prop::new("polar vs svd").cases(CASES).run(|rng| {
+        let mut variants = variants.lock().unwrap();
         let n = gens::usize_in(rng, 4, 12);
         let m = n + gens::usize_in(rng, 0, 6);
         let kappa = gens::f64_log(rng, 2.0, 1e2);
         let a = gens::ill_conditioned(rng, m, n, kappa);
         let exact = eigen_fn::polar_eigen(&a);
-        let stop = StopRule::default().with_max_iters(300).with_tol(1e-8);
-        for &(name, d, alpha) in variants {
-            let out = polar_prism(&a, &PolarOpts { d, alpha, stop }, rng);
+        for s in variants.iter_mut() {
+            let name = s.name();
+            let out = s.solve(&a, rng);
             assert!(out.log.converged, "{name}: κ={kappa} res={}", out.log.final_residual());
-            let err = out.q.sub(&exact).max_abs();
+            let err = out.primary.sub(&exact).max_abs();
             assert!(err < 1e-4, "{name}: κ={kappa} polar err {err}");
-            log_invariants(&out.log, true, name);
+            log_invariants(&out.log, true, &name);
         }
     });
 }
@@ -81,25 +99,25 @@ fn conformance_polar_vs_svd() {
 
 #[test]
 fn conformance_sqrt_vs_eigen() {
+    let stop = StopRule::default().with_max_iters(300).with_tol(1e-9);
+    let variants = solvers(&["ns-sqrt", "prism3-sqrt", "prism5-sqrt"], stop);
     Prop::new("sqrt vs eigen").cases(CASES).run(|rng| {
+        let mut variants = variants.lock().unwrap();
         let n = gens::usize_in(rng, 4, 12);
         let wmin = gens::f64_log(rng, 1e-3, 0.5);
         let a = spd(rng, n, wmin);
         let exact_sqrt = eigen_fn::sqrt_eigen(&a);
         let exact_inv = eigen_fn::inv_sqrt_eigen(&a, 0.0);
-        let stop = StopRule::default().with_max_iters(300).with_tol(1e-9);
-        for (name, opts) in [
-            ("classic-ns", SqrtOpts::classic(2).with_stop(stop)),
-            ("prism-3", SqrtOpts { d: 1, alpha: AlphaMode::Sketched { p: 8 }, stop }),
-            ("prism-5", SqrtOpts { d: 2, alpha: AlphaMode::Sketched { p: 8 }, stop }),
-        ] {
-            let out = sqrt_prism(&a, &opts, rng);
+        for s in variants.iter_mut() {
+            let name = s.name();
+            let out = s.solve(&a, rng);
             assert!(out.log.converged, "{name}: wmin={wmin} res={}", out.log.final_residual());
-            let es = out.sqrt.sub(&exact_sqrt).max_abs();
+            let es = out.primary.sub(&exact_sqrt).max_abs();
             assert!(es < 1e-4, "{name}: sqrt err {es} (wmin={wmin})");
-            let ei = out.inv_sqrt.sub(&exact_inv).max_abs();
+            let inv = out.secondary.as_ref().expect("coupled inverse root");
+            let ei = inv.sub(&exact_inv).max_abs();
             assert!(ei < 1e-3, "{name}: inv-sqrt err {ei} (wmin={wmin})");
-            log_invariants(&out.log, true, name);
+            log_invariants(&out.log, true, &name);
         }
     });
 }
@@ -108,7 +126,14 @@ fn conformance_sqrt_vs_eigen() {
 
 #[test]
 fn conformance_sign_vs_eigen() {
+    let stop = StopRule::default().with_max_iters(300).with_tol(1e-8);
+    let variants = solvers(&["ns-sign", "prism3-sign", "prism5-sign"], stop);
+    variants
+        .lock()
+        .unwrap()
+        .push(Solver::new(MatFnTask::Sign, SolverSpec::ns_classic(1).with_stop(stop)).unwrap());
     Prop::new("sign vs eigen").cases(CASES).run(|rng| {
+        let mut variants = variants.lock().unwrap();
         let n = gens::usize_in(rng, 4, 12);
         let lmin = gens::f64_log(rng, 1e-2, 0.5);
         // Symmetric with eigenvalues of both signs, |λ| ∈ [lmin, 1].
@@ -119,22 +144,17 @@ fn conformance_sign_vs_eigen() {
             .collect();
         let a = randmat::sym_with_spectrum(rng, n, &w);
         let exact = eigen_fn::sign_eigen(&a);
-        let stop = StopRule::default().with_max_iters(300).with_tol(1e-8);
-        for d in [1usize, 2] {
-            for (name, alpha) in
-                [("classic", AlphaMode::Classic), ("prism", AlphaMode::Sketched { p: 8 })]
-            {
-                let opts = SignOpts { d, alpha, stop, normalize: true };
-                let out = sign_prism(&a, &opts, rng);
-                assert!(
-                    out.log.converged,
-                    "sign {name} d={d}: lmin={lmin} res={}",
-                    out.log.final_residual()
-                );
-                let err = out.s.sub(&exact).max_abs();
-                assert!(err < 1e-4, "sign {name} d={d}: err {err} (lmin={lmin})");
-                log_invariants(&out.log, true, name);
-            }
+        for s in variants.iter_mut() {
+            let name = s.name();
+            let out = s.solve(&a, rng);
+            assert!(
+                out.log.converged,
+                "sign {name}: lmin={lmin} res={}",
+                out.log.final_residual()
+            );
+            let err = out.primary.sub(&exact).max_abs();
+            assert!(err < 1e-4, "sign {name}: err {err} (lmin={lmin})");
+            log_invariants(&out.log, true, &name);
         }
     });
 }
@@ -143,26 +163,26 @@ fn conformance_sign_vs_eigen() {
 
 #[test]
 fn conformance_inv_root_vs_eigen() {
+    let stop = StopRule::default().with_max_iters(500).with_tol(1e-9);
     Prop::new("inv root vs eigen").cases(CASES).run(|rng| {
         let n = gens::usize_in(rng, 4, 12);
         let wmin = gens::f64_log(rng, 1e-2, 0.5);
         let p = *gens::choice(rng, &[1usize, 2, 4]);
         let a = spd(rng, n, wmin);
         let exact = eigen_fn::inv_root_eigen(&a, p, 0.0).unwrap();
-        let stop = StopRule::default().with_max_iters(500).with_tol(1e-9);
-        for (name, opts) in [
-            ("classic", InvRootOpts::classic(p).with_stop(stop)),
-            ("prism", InvRootOpts::prism(p).with_stop(stop)),
-        ] {
-            let out = inv_root_prism(&a, &opts, rng);
+        for method in ["invnewton-classic", "invnewton"] {
+            let name = format!("{method}-invroot{p}");
+            let mut s = registry::resolve(&name).unwrap();
+            s.set_stop(stop);
+            let out = s.solve(&a, rng);
             assert!(
                 out.log.converged,
-                "invroot {name} p={p}: wmin={wmin} res={}",
+                "{name}: wmin={wmin} res={}",
                 out.log.final_residual()
             );
-            let err = out.inv_root.sub(&exact).max_abs();
-            assert!(err < 1e-3, "invroot {name} p={p}: err {err} (wmin={wmin})");
-            log_invariants(&out.log, true, name);
+            let err = out.primary.sub(&exact).max_abs();
+            assert!(err < 1e-3, "{name}: err {err} (wmin={wmin})");
+            log_invariants(&out.log, true, &name);
         }
     });
 }
@@ -171,30 +191,31 @@ fn conformance_inv_root_vs_eigen() {
 
 #[test]
 fn conformance_db_newton_vs_eigen() {
+    let stop = StopRule::default().with_max_iters(150).with_tol(1e-10);
+    let variants = solvers(&["newton-classic-sqrt", "newton-sqrt"], stop);
     Prop::new("db-newton vs eigen").cases(CASES).run(|rng| {
+        let mut variants = variants.lock().unwrap();
         let n = gens::usize_in(rng, 4, 12);
         let wmin = gens::f64_log(rng, 1e-4, 0.5);
         let a = spd(rng, n, wmin);
         let exact_sqrt = eigen_fn::sqrt_eigen(&a);
-        let stop = StopRule::default().with_max_iters(150).with_tol(1e-10);
-        for (name, opts) in [
-            ("classic", DbNewtonOpts::classic().with_stop(stop)),
-            ("prism", DbNewtonOpts::prism().with_stop(stop)),
-        ] {
-            let out = db_newton_prism(&a, &opts, rng);
+        for s in variants.iter_mut() {
+            let name = s.name();
+            let out = s.solve(&a, rng);
             assert!(
                 out.log.converged,
                 "db-newton {name}: wmin={wmin} res={}",
                 out.log.final_residual()
             );
-            let err = out.sqrt.sub(&exact_sqrt).max_abs();
+            let err = out.primary.sub(&exact_sqrt).max_abs();
             assert!(err < 1e-5, "db-newton {name}: sqrt err {err} (wmin={wmin})");
-            let prod = matmul(&out.sqrt, &out.inv_sqrt);
+            let inv = out.secondary.as_ref().expect("coupled inverse root");
+            let prod = matmul(&out.primary, inv);
             assert!(
                 prod.sub(&Mat::eye(n)).max_abs() < 1e-5,
                 "db-newton {name}: X·Y ≠ I (wmin={wmin})"
             );
-            log_invariants(&out.log, false, name);
+            log_invariants(&out.log, false, &name);
         }
     });
 }
@@ -203,27 +224,27 @@ fn conformance_db_newton_vs_eigen() {
 
 #[test]
 fn conformance_chebyshev_vs_eigen() {
+    let stop = StopRule::default().with_max_iters(500).with_tol(1e-8);
+    let variants = solvers(&["cheb-classic-inverse", "cheb-inverse"], stop);
     Prop::new("chebyshev vs eigen").cases(CASES).run(|rng| {
+        let mut variants = variants.lock().unwrap();
         let n = gens::usize_in(rng, 4, 12);
         let wmin = gens::f64_log(rng, 1e-2, 0.5);
         let a = spd(rng, n, wmin);
         let exact = symmetric_eigen(&a).apply_fn(|w| 1.0 / w);
-        let stop = StopRule::default().with_max_iters(500).with_tol(1e-8);
-        for (name, opts) in [
-            ("classic", ChebyshevOpts::classic().with_stop(stop)),
-            ("prism", ChebyshevOpts::prism().with_stop(stop)),
-        ] {
-            let out = chebyshev_inverse(&a, &opts, rng);
+        for s in variants.iter_mut() {
+            let name = s.name();
+            let out = s.solve(&a, rng);
             assert!(
                 out.log.converged,
                 "chebyshev {name}: wmin={wmin} res={}",
                 out.log.final_residual()
             );
-            let err = out.inverse.sub(&exact).max_abs();
+            let err = out.primary.sub(&exact).max_abs();
             // ‖A⁻¹‖ grows like 1/wmin, so bound the error relative to it.
             let tol = 1e-5 / wmin;
             assert!(err < tol, "chebyshev {name}: err {err} > {tol} (wmin={wmin})");
-            log_invariants(&out.log, false, name);
+            log_invariants(&out.log, false, &name);
         }
     });
 }
@@ -232,10 +253,12 @@ fn conformance_chebyshev_vs_eigen() {
 
 #[test]
 fn conformance_polar_express_vs_svd() {
-    // Build the Remez schedule once; it is deterministic and reused across
-    // cases (the per-case work is the iteration itself).
-    let pe = PolarExpress::paper_default();
+    // One solver for the whole suite: the Remez schedule is built once in
+    // Solver::new and the workspace is reused across every case.
+    let pe = solvers(&["pe-polar"], StopRule::default().with_max_iters(60).with_tol(1e-8));
     Prop::new("polar-express vs svd").cases(CASES).run(|rng| {
+        let mut pe = pe.lock().unwrap();
+        let pe = &mut pe[0];
         let n = gens::usize_in(rng, 4, 12);
         let m = n + gens::usize_in(rng, 0, 6);
         // Stay on the schedule's design interval σ_min ≥ 1e-3 (paper tuning);
@@ -244,32 +267,50 @@ fn conformance_polar_express_vs_svd() {
         let s = randmat::logspace(smin, 1.0, n);
         let a = randmat::with_spectrum(rng, m, n, &s);
         let exact = eigen_fn::polar_eigen(&a);
-        let stop = StopRule::default().with_max_iters(60).with_tol(1e-8);
-        let (q, log) = pe.polar(&a, &stop);
-        assert!(log.converged, "pe: smin={smin} res={}", log.final_residual());
-        let err = q.sub(&exact).max_abs();
+        let out = pe.solve(&a, rng);
+        assert!(out.log.converged, "pe: smin={smin} res={}", out.log.final_residual());
+        let err = out.primary.sub(&exact).max_abs();
         assert!(err < 1e-4, "pe: err {err} (smin={smin})");
-        log_invariants(&log, false, "polar-express");
+        log_invariants(&out.log, false, "polar-express");
     });
 }
 
 #[test]
 fn conformance_cans_vs_svd() {
+    let cans = solvers(&["cans-polar"], StopRule::default().with_max_iters(200).with_tol(1e-8));
     Prop::new("cans vs svd").cases(CASES).run(|rng| {
+        let mut cans = cans.lock().unwrap();
+        let cans = &mut cans[0];
         let n = gens::usize_in(rng, 4, 12);
         let m = n + gens::usize_in(rng, 0, 6);
         let kappa = gens::f64_log(rng, 2.0, 1e2);
         let a = gens::ill_conditioned(rng, m, n, kappa);
         let exact = eigen_fn::polar_eigen(&a);
-        let opts = CansOpts {
-            stop: StopRule::default().with_max_iters(200).with_tol(1e-8),
-            ..Default::default()
-        };
-        let (q, log) = polar_cans(&a, &opts, rng);
-        assert!(log.converged, "cans: κ={kappa} res={}", log.final_residual());
-        let err = q.sub(&exact).max_abs();
+        let out = cans.solve(&a, rng);
+        assert!(out.log.converged, "cans: κ={kappa} res={}", out.log.final_residual());
+        let err = out.primary.sub(&exact).max_abs();
         assert!(err < 1e-4, "cans: err {err} (κ={kappa})");
         // The early rescale phase may bump the residual, so no monotonicity.
-        log_invariants(&log, false, "cans");
+        log_invariants(&out.log, false, "cans");
     });
+}
+
+// ───────────── eigen baseline through the same trait ─────────────
+
+#[test]
+fn conformance_eigen_solvers_are_exact() {
+    let mut rng = Rng::seed_from(99);
+    let w = randmat::logspace(1e-2, 1.0, 9);
+    let a = randmat::sym_with_spectrum(&mut rng, 9, &w);
+    for name in ["eigen-sqrt", "eigen-invsqrt", "eigen-inverse", "eigen-sign"] {
+        let mut s = registry::resolve(name).unwrap();
+        let out = s.solve(&a, &mut rng);
+        assert!(out.log.converged, "{name}");
+        assert!(!out.primary.has_non_finite(), "{name}");
+    }
+    let mut s = registry::resolve("eigen-polar").unwrap();
+    let g = randmat::gaussian(&mut rng, 12, 7);
+    let out = s.solve(&g, &mut rng);
+    let exact = eigen_fn::polar_eigen(&g);
+    assert!(out.primary.sub(&exact).max_abs() < 1e-10);
 }

@@ -11,9 +11,8 @@ use prism::config::{Backend, ServiceConfig};
 use prism::coordinator::service::{JobKind, Service};
 use prism::linalg::gemm::{matmul, matmul_naive, GemmEngine, GemmScope};
 use prism::linalg::Mat;
+use prism::matfn::{registry, SolverSpec};
 use prism::prism::driver::StopRule;
-use prism::prism::polar::{polar_prism, PolarOpts};
-use prism::prism::sqrt::{sqrt_prism, SqrtOpts};
 use prism::ptest::gens;
 use prism::randmat;
 use prism::rng::Rng;
@@ -44,10 +43,11 @@ fn smoke_polar_prism_vs_svd() {
     let mut rng = Rng::seed_from(3);
     let a = gens::ill_conditioned(&mut rng, 16, 10, 50.0);
     let exact = eigen_fn::polar_eigen(&a);
-    let stop = StopRule::default().with_max_iters(200).with_tol(1e-8);
-    let out = polar_prism(&a, &PolarOpts::degree5().with_stop(stop), &mut rng);
+    let mut solver = registry::resolve("prism5-polar").unwrap();
+    solver.set_stop(StopRule::default().with_max_iters(200).with_tol(1e-8));
+    let out = solver.solve(&a, &mut rng);
     assert!(out.log.converged, "res={}", out.log.final_residual());
-    assert!(out.q.sub(&exact).max_abs() < 1e-5);
+    assert!(out.primary.sub(&exact).max_abs() < 1e-5);
     assert_eq!(out.log.alphas.len(), out.log.iters());
 }
 
@@ -57,9 +57,27 @@ fn smoke_sqrt_prism_vs_eigen() {
     let a = gens::spd(&mut rng, 10, 1e-2);
     let exact = eigen_fn::sqrt_eigen(&a);
     let stop = StopRule::default().with_max_iters(200).with_tol(1e-9);
-    let out = sqrt_prism(&a, &SqrtOpts::degree5().with_stop(stop), &mut rng);
+    let mut solver =
+        prism::matfn::Solver::new(prism::matfn::MatFnTask::Sqrt, SolverSpec::prism(2).with_stop(stop))
+            .unwrap();
+    let out = solver.solve(&a, &mut rng);
     assert!(out.log.converged);
-    assert!(out.sqrt.sub(&exact).max_abs() < 1e-5);
+    assert!(out.primary.sub(&exact).max_abs() < 1e-5);
+}
+
+#[test]
+fn smoke_reused_solver_is_allocation_free() {
+    // The persistent-solver contract: from the second same-shape call
+    // onward, the workspace pool serves every iteration buffer.
+    let mut rng = Rng::seed_from(6);
+    let a = gens::ill_conditioned(&mut rng, 24, 12, 30.0);
+    let mut solver = registry::resolve("prism5-polar").unwrap();
+    let _ = solver.solve(&a, &mut rng);
+    let allocs = solver.workspace_allocations();
+    assert!(allocs > 0);
+    let out = solver.solve(&a, &mut rng);
+    assert!(out.log.converged);
+    assert_eq!(solver.workspace_allocations(), allocs);
 }
 
 #[test]
@@ -73,6 +91,7 @@ fn smoke_service_round_trip() {
         max_iters: 40,
         tol: 1e-7,
         gemm_threads: 1,
+        stream_residuals: false,
     };
     let svc = Service::start(cfg, Backend::Prism5, 7);
     let w = randmat::logspace(0.05, 1.0, 6);
