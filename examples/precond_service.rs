@@ -50,6 +50,7 @@ fn run_load(
         tol: 1e-7,
         gemm_threads: 1,
         stream_residuals: false,
+        gemm_block: None,
     };
     // Mixed shapes: square covariance blocks (InvSqrt) and tall gradient
     // panels (Polar) — same-shape jobs batch together, mixed shapes don't.
@@ -139,6 +140,7 @@ fn main() {
         // Stream per-iteration residuals from the workers (matfn Observer
         // hook) so convergence is visible while refreshes are in flight.
         stream_residuals: true,
+        gemm_block: None,
     };
     let svc = Service::start(cfg, Backend::Prism5, seed);
     let mut opt = AsyncShampoo::new(0.05, 1e-6, 5, &svc);

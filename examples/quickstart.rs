@@ -5,6 +5,11 @@
 //! planned solver is *persistent*: repeated same-shape calls reuse its
 //! workspace and perform zero heap allocations in the hot loop.
 //!
+//! Under the hood every solve runs on the packed cache-blocked GEMM engine
+//! (`prism::linalg::gemm` — tune with `--gemm-block MCxKCxNC` on the CLI),
+//! and general-degree updates evaluate their polynomials by
+//! Paterson–Stockmeyer in ≈ 2√d GEMMs instead of d − 1 explicit powers.
+//!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```

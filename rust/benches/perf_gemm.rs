@@ -1,121 +1,156 @@
-//! L3 substrate roofline: blocked GEMM / SYRK throughput across sizes,
-//! sequential vs the row-panel parallel engine.
+//! L3 substrate roofline: packed cache-blocked GEMM / SYRK throughput vs the
+//! seed broadcast kernel, sequential and row-panel parallel.
 //!
 //! Everything PRISM does is GEMM-dominated, so the linalg substrate's
-//! GFLOP/s sets the scale of every other benchmark. We track it here to (a)
-//! catch regressions, (b) anchor the §Perf roofline analysis in
-//! EXPERIMENTS.md, and (c) verify the parallel engine's scaling — the
-//! acceptance bar is ≥ 2× at n = 512 with 4 threads over the sequential
-//! kernel, with bit-identical output (asserted below on every shape).
+//! GFLOP/s sets the scale of every other benchmark. This bench (a) reports
+//! the single-thread **packed-kernel speedup over the seed broadcast
+//! kernel** at n ∈ {256, 512, 1024} — the PR-over-PR trajectory metric —
+//! (b) verifies the parallel engine's scaling (target ≥ 2× at n = 512 with
+//! 4 threads) with bit-identical output asserted on every shape, and (c)
+//! emits the machine-readable `bench_out/BENCH_gemm.json` CI uploads as an
+//! artifact.
+//!
+//! Run: `cargo bench --bench perf_gemm [-- --smoke]` (`--smoke`: tiny sizes
+//! for the CI smoke step).
 
-use prism::benchkit::{banner, Bench, SeriesWriter, Table};
+use prism::benchkit::{banner, Bench, JsonReport, Table};
 use prism::configfmt::Value;
-use prism::linalg::gemm::{matmul_at_b, GemmEngine};
+use prism::linalg::gemm::{gemm_broadcast, matmul_naive, GemmEngine};
 use prism::linalg::Mat;
 use prism::randmat;
 use prism::rng::Rng;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     banner("perf — GEMM/SYRK substrate throughput", "EXPERIMENTS.md §Perf (L3)");
-    let bench = Bench { min_time_s: 0.3, max_samples: 15, warmup: 1 };
+    let bench = if smoke {
+        Bench::quick()
+    } else {
+        Bench { min_time_s: 0.3, max_samples: 15, warmup: 1 }
+    };
+    let sizes: &[usize] = if smoke { &[32, 64] } else { &[256, 512, 1024] };
     let mut rng = Rng::seed_from(42);
-    let mut series = SeriesWriter::create("bench_out/perf_gemm.jsonl");
+    let mut report = JsonReport::create("bench_out/BENCH_gemm.json", "perf_gemm");
 
     let seq = GemmEngine::sequential();
     let par = GemmEngine::with_threads(4);
 
-    let mut t = Table::new(&["op", "n", "median ms", "GFLOP/s", "4T ms", "4T GFLOP/s", "speedup"]);
-    let mut speedup_512 = 0.0;
-    for n in [64usize, 128, 256, 512] {
+    let mut t = Table::new(&[
+        "op",
+        "n",
+        "packed ms",
+        "packed GFLOP/s",
+        "broadcast ms",
+        "vs broadcast",
+        "4T ms",
+        "4T speedup",
+    ]);
+    let mut speedup_512_4t = 0.0;
+    for &n in sizes {
         let a = randmat::gaussian(&mut rng, n, n);
         let b = randmat::gaussian(&mut rng, n, n);
         let flops = 2.0 * (n as f64).powi(3);
 
-        // Determinism check before timing: the parallel engine must be
-        // bit-identical to the sequential kernel.
+        // Correctness guards before timing: the packed kernel must match the
+        // naive reference, and the parallel engine must be bit-identical to
+        // the sequential one.
+        if n <= 256 {
+            let err = seq.matmul(&a, &b).sub(&matmul_naive(&a, &b)).max_abs();
+            assert!(err < 1e-9, "packed kernel diverges from naive at n={n}: {err}");
+        }
         assert_eq!(
             seq.matmul(&a, &b).as_slice(),
             par.matmul(&a, &b).as_slice(),
             "parallel engine output differs at n={n}"
         );
 
-        // Allocation-free timing loop: `matmul_into` on a reused buffer.
+        // Sequential packed engine (allocation-free loop on a reused buffer).
         let mut c = Mat::zeros(n, n);
-        let s_seq = bench.run(&format!("matmul_{n}"), || {
+        let s_packed = bench.run(&format!("matmul_{n}"), || {
             seq.matmul_into(&mut c, &a, &b);
             std::hint::black_box(&c);
         });
-        let mut c2 = Mat::zeros(n, n);
-        let s_par = bench.run(&format!("matmul_{n}_4t"), || {
-            par.matmul_into(&mut c2, &a, &b);
-            std::hint::black_box(&c2);
+        // The seed broadcast kernel on the same operands (same zero-fill as
+        // matmul_into performs, so the comparison is like for like).
+        let mut cb = Mat::zeros(n, n);
+        let s_bcast = bench.run(&format!("matmul_broadcast_{n}"), || {
+            cb.fill_with(0.0);
+            gemm_broadcast(a.as_slice(), b.as_slice(), cb.as_mut_slice(), n, n, n);
+            std::hint::black_box(&cb);
         });
-        let speedup = s_seq.median_s() / s_par.median_s();
+        // Row-panel parallel packed engine, 4 threads.
+        let mut c4 = Mat::zeros(n, n);
+        let s_par = bench.run(&format!("matmul_{n}_4t"), || {
+            par.matmul_into(&mut c4, &a, &b);
+            std::hint::black_box(&c4);
+        });
+        let vs_broadcast = s_bcast.median_s() / s_packed.median_s();
+        let speedup_4t = s_packed.median_s() / s_par.median_s();
         if n == 512 {
-            speedup_512 = speedup;
+            speedup_512_4t = speedup_4t;
         }
         t.row(&[
             "C = A·B".into(),
             n.to_string(),
-            format!("{:.2}", s_seq.median_s() * 1e3),
-            format!("{:.2}", flops / s_seq.median_s() / 1e9),
+            format!("{:.2}", s_packed.median_s() * 1e3),
+            format!("{:.2}", flops / s_packed.median_s() / 1e9),
+            format!("{:.2}", s_bcast.median_s() * 1e3),
+            format!("{vs_broadcast:.2}x"),
             format!("{:.2}", s_par.median_s() * 1e3),
-            format!("{:.2}", flops / s_par.median_s() / 1e9),
-            format!("{:.2}x", speedup),
+            format!("{speedup_4t:.2}x"),
         ]);
-        series.point(&[
+        report.entry(&[
             ("op", Value::Str("matmul".into())),
             ("n", Value::Int(n as i64)),
-            ("gflops", Value::Float(flops / s_seq.median_s() / 1e9)),
-            ("gflops_4t", Value::Float(flops / s_par.median_s() / 1e9)),
-            ("speedup_4t", Value::Float(speedup)),
+            ("packed_ms", Value::Float(s_packed.median_s() * 1e3)),
+            ("packed_gflops", Value::Float(flops / s_packed.median_s() / 1e9)),
+            ("broadcast_ms", Value::Float(s_bcast.median_s() * 1e3)),
+            ("broadcast_gflops", Value::Float(flops / s_bcast.median_s() / 1e9)),
+            ("speedup_packed_vs_broadcast", Value::Float(vs_broadcast)),
+            ("ms_4t", Value::Float(s_par.median_s() * 1e3)),
+            ("speedup_4t", Value::Float(speedup_4t)),
         ]);
 
-        let s = bench.run(&format!("matmul_at_b_{n}"), || {
-            std::hint::black_box(matmul_at_b(&a, &b));
-        });
-        t.row(&[
-            "C = Aᵀ·B".into(),
-            n.to_string(),
-            format!("{:.2}", s.median_s() * 1e3),
-            format!("{:.2}", flops / s.median_s() / 1e9),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-        ]);
-
-        // SYRK does half the FLOPs of a full GEMM (symmetric result).
+        // SYRK: half the flops of a general GEMM (upper triangle + mirror).
         let mut cs = Mat::zeros(n, n);
         let s_syrk = bench.run(&format!("syrk_{n}"), || {
             seq.syrk_at_a_into(&mut cs, &a);
             std::hint::black_box(&cs);
         });
-        let mut cs2 = Mat::zeros(n, n);
+        let mut cs4 = Mat::zeros(n, n);
         let s_syrk_par = bench.run(&format!("syrk_{n}_4t"), || {
-            par.syrk_at_a_into(&mut cs2, &a);
-            std::hint::black_box(&cs2);
+            par.syrk_at_a_into(&mut cs4, &a);
+            std::hint::black_box(&cs4);
         });
         t.row(&[
             "C = Aᵀ·A".into(),
             n.to_string(),
             format!("{:.2}", s_syrk.median_s() * 1e3),
             format!("{:.2}", flops / s_syrk.median_s() / 1e9),
+            "-".into(),
+            "-".into(),
             format!("{:.2}", s_syrk_par.median_s() * 1e3),
-            format!("{:.2}", flops / s_syrk_par.median_s() / 1e9),
             format!("{:.2}x", s_syrk.median_s() / s_syrk_par.median_s()),
         ]);
-        series.point(&[
+        report.entry(&[
             ("op", Value::Str("syrk".into())),
             ("n", Value::Int(n as i64)),
-            ("gflops", Value::Float(flops / s_syrk.median_s() / 1e9)),
-            ("gflops_4t", Value::Float(flops / s_syrk_par.median_s() / 1e9)),
+            ("packed_ms", Value::Float(s_syrk.median_s() * 1e3)),
+            ("packed_gflops", Value::Float(flops / s_syrk.median_s() / 1e9)),
+            ("ms_4t", Value::Float(s_syrk_par.median_s() * 1e3)),
             ("speedup_4t", Value::Float(s_syrk.median_s() / s_syrk_par.median_s())),
         ]);
     }
     t.print();
-    println!("\n(GFLOP/s computed on the full 2n³ count; syrk exploits symmetry so its");
-    println!("effective rate appears ~2x the work it actually does. 4T columns run the");
-    println!("same kernel over 4 row panels — output is asserted bit-identical.)");
-    println!("n=512 matmul speedup with 4 threads: {speedup_512:.2}x (target ≥ 2x)");
-    println!("series → bench_out/perf_gemm.jsonl");
+    println!("\n(GFLOP/s on the full 2n³ count; syrk computes the upper triangle only, so");
+    println!("its effective rate appears ~2x the work it does. 'vs broadcast' is the");
+    println!("single-thread packed kernel against the seed broadcast kernel on identical");
+    println!("operands; 4T columns are asserted bit-identical to sequential.)");
+    if !smoke {
+        println!("n=512 matmul 4-thread speedup: {speedup_512_4t:.2}x (target ≥ 2x)");
+    }
+    match report.finish() {
+        Some(path) => println!("report → {path}"),
+        None => println!("report → (unwritable bench_out/, skipped)"),
+    }
 }

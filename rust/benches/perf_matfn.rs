@@ -5,11 +5,14 @@
 //! call (every n×n ping-pong buffer is reallocated); the persistent path
 //! plans once and reuses the workspace, so from the second call onward the
 //! hot loop performs zero heap allocations. This bench reports wall time
-//! and workspace allocation counts for both at n ∈ {64, 256, 1024}.
+//! and workspace allocation counts for both, and emits the machine-readable
+//! `bench_out/BENCH_matfn.json` CI uploads as an artifact.
 //!
-//! Run: `cargo bench --bench perf_matfn [-- --full]`
+//! Run: `cargo bench --bench perf_matfn [-- --full | -- --smoke]`
+//! (`--full`: adds n = 1024; `--smoke`: tiny size for the CI smoke step).
 
-use prism::benchkit::{banner, Bench, Table};
+use prism::benchkit::{banner, Bench, JsonReport, Table};
+use prism::configfmt::Value;
 use prism::matfn::registry;
 use prism::prism::StopRule;
 use prism::randmat;
@@ -17,6 +20,7 @@ use prism::rng::Rng;
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
+    let smoke = std::env::args().any(|a| a == "--smoke");
     banner(
         "perf_matfn — persistent Solver vs cold construction",
         "matfn API: workspace reuse across same-shape calls",
@@ -25,7 +29,14 @@ fn main() {
     // A fixed, small iteration budget: the point is per-call overhead, not
     // convergence, and it keeps n = 1024 tractable.
     let stop = StopRule::default().with_max_iters(8).with_tol(1e-30);
-    let sizes: &[usize] = if full { &[64, 256, 1024] } else { &[64, 256] };
+    let sizes: &[usize] = if smoke {
+        &[48]
+    } else if full {
+        &[64, 256, 1024]
+    } else {
+        &[64, 256]
+    };
+    let mut report = JsonReport::create("bench_out/BENCH_matfn.json", "perf_matfn");
 
     let mut t = Table::new(&[
         "solver", "n", "cold ms", "reused ms", "speedup", "allocs/call cold", "allocs/call reused",
@@ -67,10 +78,23 @@ fn main() {
             cold_allocs.to_string(),
             warm_allocs.to_string(),
         ]);
+        report.entry(&[
+            ("solver", Value::Str("prism5-polar".into())),
+            ("n", Value::Int(n as i64)),
+            ("cold_ms", Value::Float(cold.median_s() * 1e3)),
+            ("reused_ms", Value::Float(reused.median_s() * 1e3)),
+            ("speedup_reused", Value::Float(cold.median_s() / reused.median_s())),
+            ("allocs_cold", Value::Int(cold_allocs as i64)),
+            ("allocs_reused", Value::Int(warm_allocs as i64)),
+        ]);
         assert_eq!(warm_allocs, 0, "reused solver must not touch the allocator");
     }
     t.print();
     println!("\nNotes: 'allocs/call' counts workspace-pool misses (heap allocations for");
     println!("iteration buffers). The reused column must be 0 — that is the persistent");
     println!("solver contract the optimizer/service hot paths rely on.");
+    match report.finish() {
+        Some(path) => println!("report → {path}"),
+        None => println!("report → (unwritable bench_out/, skipped)"),
+    }
 }

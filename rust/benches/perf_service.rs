@@ -25,6 +25,7 @@ fn run(workers: usize, max_batch: usize, backend: Backend, jobs: usize, n: usize
         tol: 1e-7,
         gemm_threads: 1,
         stream_residuals: false,
+        gemm_block: None,
     };
     let shapes = vec![(n, n), (n, n / 2)];
     let mut stream = GradientStream::new(42, shapes, 0.5);

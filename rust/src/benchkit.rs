@@ -1,8 +1,10 @@
 //! Micro-benchmark harness (no `criterion` offline).
 //!
 //! Provides warmup + adaptive iteration timing with median/IQR reporting, a
-//! fixed-width table printer for the paper-figure benches, and JSONL series
-//! output so plots can be regenerated outside Rust.
+//! fixed-width table printer for the paper-figure benches, JSONL series
+//! output so plots can be regenerated outside Rust, and [`JsonReport`] —
+//! the machine-readable `BENCH_*.json` artifact the perf benches emit so CI
+//! can record the performance trajectory PR over PR.
 
 use crate::configfmt::{to_json, Value};
 use crate::util::{fmt_duration, median, percentile, Stopwatch};
@@ -146,6 +148,57 @@ impl SeriesWriter {
     }
 }
 
+/// Machine-readable bench report: one JSON document per bench run, of the
+/// shape `{"bench": <name>, "results": [ {...}, ... ]}`. The perf benches
+/// (`perf_gemm`, `perf_matfn`) write these as `bench_out/BENCH_<name>.json`
+/// and CI uploads them as artifacts, so the perf trajectory is recorded
+/// from the first packed-kernel PR onward.
+pub struct JsonReport {
+    path: String,
+    bench: String,
+    results: Vec<Value>,
+}
+
+impl JsonReport {
+    /// Report writing to `path` on [`JsonReport::finish`].
+    pub fn create(path: &str, bench: &str) -> JsonReport {
+        JsonReport { path: path.to_string(), bench: bench.to_string(), results: Vec::new() }
+    }
+
+    /// Append one result object.
+    pub fn entry(&mut self, fields: &[(&str, Value)]) {
+        let mut map = BTreeMap::new();
+        for (k, v) in fields {
+            map.insert(k.to_string(), v.clone());
+        }
+        self.results.push(Value::Table(map));
+    }
+
+    /// Number of result objects recorded so far.
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    /// Write the document; returns the path on success (None when the file
+    /// could not be written — benches keep running, matching
+    /// [`SeriesWriter`]'s tolerance of read-only checkouts).
+    pub fn finish(self) -> Option<String> {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Value::Str(self.bench));
+        doc.insert("results".to_string(), Value::Array(self.results));
+        if let Some(parent) = std::path::Path::new(&self.path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        match std::fs::write(&self.path, to_json(&Value::Table(doc))) {
+            Ok(()) => Some(self.path),
+            Err(_) => None,
+        }
+    }
+}
+
 /// Convenience: render one bench stat line.
 pub fn stat_line(s: &Stats) -> String {
     format!(
@@ -222,5 +275,24 @@ mod tests {
     fn stat_line_contains_name() {
         let s = Stats { name: "t".into(), samples: vec![0.001, 0.002, 0.003] };
         assert!(stat_line(&s).contains('t'));
+    }
+
+    #[test]
+    fn json_report_writes_document() {
+        let path = "/tmp/prism_test_BENCH_x.json";
+        let mut r = JsonReport::create(path, "perf_x");
+        assert!(r.is_empty());
+        r.entry(&[("n", Value::Int(256)), ("gflops", Value::Float(3.5))]);
+        r.entry(&[("n", Value::Int(512)), ("gflops", Value::Float(3.1))]);
+        assert_eq!(r.len(), 2);
+        let written = r.finish().expect("writable tmp");
+        let content = std::fs::read_to_string(&written).unwrap();
+        assert!(content.contains("\"bench\":\"perf_x\""));
+        assert!(content.contains("\"results\":["));
+        assert!(content.contains("\"n\":256"));
+        // Round-trips through the crate's own JSON parser.
+        let v = crate::configfmt::parse_json(&content).unwrap();
+        assert_eq!(v.get_path("bench").and_then(|x| x.as_str()), Some("perf_x"));
+        let _ = std::fs::remove_file(written);
     }
 }

@@ -4,6 +4,7 @@
 //! present fall back to defaults so configs stay short.
 
 use crate::configfmt::{parse_toml, Value};
+use crate::linalg::gemm::GemmBlocking;
 use crate::util::{Error, Result};
 
 /// Which polar/inverse-root backend an optimizer uses.
@@ -141,6 +142,13 @@ pub struct ServiceConfig {
     /// the CLI). Off by default: the channel is unbounded, so someone must
     /// drain [`crate::coordinator::service::Service::try_recv_progress`].
     pub stream_residuals: bool,
+    /// GEMM cache-block sizes (`service.gemm_block = "MCxKCxNC"` in TOML,
+    /// `--gemm-block` on the CLI). `None` keeps whatever is already
+    /// installed (the built-in default or an earlier CLI setting). Applied
+    /// process-globally by `Service::start` — a startup-time tuning knob:
+    /// changing KC/NC regroups reductions and can change low-order result
+    /// bits of later computations.
+    pub gemm_block: Option<GemmBlocking>,
 }
 
 impl Default for ServiceConfig {
@@ -154,6 +162,7 @@ impl Default for ServiceConfig {
             tol: 1e-7,
             gemm_threads: 1,
             stream_residuals: false,
+            gemm_block: None,
         }
     }
 }
@@ -175,6 +184,12 @@ impl ServiceConfig {
             .get_path("service.stream_residuals")
             .and_then(|x| x.as_bool())
             .unwrap_or(c.stream_residuals);
+        if let Some(s) = v.get_path("service.gemm_block").and_then(|x| x.as_str()) {
+            // Config parsing is infallible-by-default elsewhere in this
+            // struct; a malformed blocking spec falls back to None (keep the
+            // installed default) rather than aborting service start.
+            c.gemm_block = GemmBlocking::parse(s).ok();
+        }
         c
     }
 }
@@ -238,6 +253,17 @@ backend = "prism3"
         let c = ServiceConfig::from_value(&v);
         assert!(c.stream_residuals);
         assert!(!ServiceConfig::default().stream_residuals);
+    }
+
+    #[test]
+    fn service_config_gemm_block_parses() {
+        let v = parse_toml("[service]\ngemm_block = \"64x128x256\"\n").unwrap();
+        let c = ServiceConfig::from_value(&v);
+        assert_eq!(c.gemm_block, Some(GemmBlocking { mc: 64, kc: 128, nc: 256 }));
+        // Malformed specs degrade to "keep the installed default".
+        let v = parse_toml("[service]\ngemm_block = \"banana\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).gemm_block, None);
+        assert_eq!(ServiceConfig::default().gemm_block, None);
     }
 }
 

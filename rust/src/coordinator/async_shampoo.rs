@@ -260,6 +260,7 @@ mod tests {
             tol: 1e-7,
             gemm_threads: 1,
             stream_residuals: false,
+            gemm_block: None,
         };
         Service::start(cfg, Backend::Prism5, 9)
     }

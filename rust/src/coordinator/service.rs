@@ -111,9 +111,15 @@ impl Service {
     /// bit-identical at any pool size, so this only changes speed). The
     /// default value 1 means "unspecified" and deliberately does NOT tear
     /// down a pool installed earlier (e.g. by the CLI's `--threads`).
+    /// `cfg.gemm_block`, when set, likewise installs the process-global
+    /// GEMM cache-block sizes (a startup-time tuning knob — see
+    /// [`crate::linalg::gemm::set_global_blocking`]).
     pub fn start(cfg: ServiceConfig, backend: Backend, seed: u64) -> Service {
         if cfg.gemm_threads > 1 {
             crate::linalg::gemm::set_global_threads(cfg.gemm_threads);
+        }
+        if let Some(blk) = cfg.gemm_block {
+            crate::linalg::gemm::set_global_blocking(blk);
         }
         let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_capacity);
         let rx = Arc::new(Mutex::new(rx));
@@ -349,6 +355,7 @@ mod tests {
             tol: 1e-7,
             gemm_threads: 1,
             stream_residuals: false,
+            gemm_block: None,
         }
     }
 

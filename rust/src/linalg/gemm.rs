@@ -1,61 +1,84 @@
-//! Parallel, workspace-reusing GEMM and symmetric rank-k engine.
+//! Packed, cache-blocked, parallel GEMM and symmetric rank-k engine.
 //!
 //! This is the O(n³) hot path of every Newton–Schulz-like iteration. The
-//! layer has three pieces:
+//! layer has four pieces:
 //!
-//! 1. **The kernel** — a sequential **broadcast-FMA** design (post-§Perf,
-//!    see EXPERIMENTS.md): loop order (jc, kc, i, t, j) whose innermost loop
-//!    is a dependence-free `c[j] += a·b[j]` stream, auto-vectorised to
-//!    AVX-512 FMAs; a 4-row micro-tile so each B panel row read from L2
-//!    feeds four C rows; SYRK via rank-1 updates on the upper triangle,
-//!    mirrored at the end.
-//! 2. **The engine** — [`GemmEngine`] partitions the rows of C into
-//!    contiguous panels and runs the kernel on each panel over the crate's
-//!    [`crate::threads::ThreadPool`] (via [`crate::threads::scoped`]). Each
-//!    output row's floating-point operation sequence is identical in every
-//!    partition (the micro-tile variants interleave rows but never reorder a
-//!    single row's accumulation), so results are **bit-identical for every
-//!    pool size** — pool-of-8 output equals sequential output exactly. With
-//!    `threads() == 1` (the default global engine) no pool is touched and
-//!    the call degrades to the plain sequential kernel.
-//! 3. **The workspace API** — `*_into` variants write into caller-owned
-//!    output buffers (reshaped in place, allocation reused), and
-//!    [`Workspace`] is a small buffer pool for the transposes/temporaries a
-//!    call needs. The iteration engines hold ping-pong buffers for their
-//!    whole run, so after iteration 0 the hot loop performs **zero heap
-//!    allocation**.
+//! 1. **The kernel** — a BLIS-style **packed, cache-blocked** design:
+//!    three blocking loops (NC columns of B × KC rows of B × MC rows of A)
+//!    wrap an 8×4 register-tiled microkernel. Before the microkernel runs,
+//!    the current A block is packed into MR(=8)-row panels and the current
+//!    B block into NR(=4)-column panels, both laid out k-major and
+//!    zero-padded to full tiles, so the innermost loop streams two
+//!    contiguous buffers and performs 32 independent `acc += a·b` updates
+//!    per k step — a dependence-free form LLVM auto-vectorises into FMAs.
+//!    Packing reads the source through (row, col) strides, so the
+//!    transposed products `AᵀB`, `ABᵀ` and both SYRKs are served by the
+//!    same kernel **without materialising any transpose**.
+//! 2. **The blocking knobs** — [`GemmBlocking`] holds the `(MC, KC, NC)`
+//!    cache-block sizes (defaults 128×256×512: an MC×KC A block is 256 KiB
+//!    ≈ L2, a KC×NC B block is 1 MiB ≈ L2/L3, an MR×KC A panel is 16 KiB
+//!    ≈ half of L1). Tune per machine via
+//!    [`set_global_blocking`] (`--gemm-block MCxKCxNC` on the CLI,
+//!    `service.gemm_block` in TOML) or per engine via
+//!    [`GemmEngine::with_blocking`]. Results are deterministic for a fixed
+//!    blocking; changing KC or NC regroups the reduction and may change
+//!    low-order bits (a startup-time knob, not a per-call one).
+//! 3. **The engine** — [`GemmEngine`] partitions the rows of C into
+//!    contiguous panels and runs the packed kernel on each panel over the
+//!    crate's [`crate::threads::ThreadPool`] (via
+//!    [`crate::threads::scoped`]). For any fixed output element, the
+//!    accumulation order is `(NC block, KC block, k)` with one
+//!    register-accumulated partial sum per KC block — independent of how
+//!    the rows were partitioned — so results are **bit-identical for every
+//!    pool size**. With `threads() == 1` (the default global engine) no
+//!    pool is touched and the call degrades to the sequential kernel.
+//!    SYRK runs the same kernel restricted to micro-tiles that touch the
+//!    upper triangle (≈ half the flops) and mirrors the result, staying
+//!    exactly symmetric by construction.
+//! 4. **The workspace API** — `*_into` variants write into caller-owned
+//!    output buffers (reshaped in place, allocation reused). [`Workspace`]
+//!    is a small buffer pool for iteration temporaries; the A/B packing
+//!    buffers are drawn from a per-thread [`Workspace`] of their own and
+//!    reused across calls, so steady-state GEMM traffic performs **zero
+//!    heap allocation** (the iteration engines' ping-pong buffers are
+//!    likewise pooled, asserted by the tier-1/matfn allocation tests).
 //!
-//! The previous packed dot-product kernel is kept as [`gemm_packed`]: it is
-//! the §Perf ablation subject and the independent reference implementation
-//! the conformance property tests cross-check against.
+//! The seed's broadcast-FMA kernel is kept as [`gemm_broadcast`]: it is the
+//! §Perf ablation baseline (`perf_gemm` reports packed-vs-broadcast
+//! speedups) and a second independent implementation the conformance suite
+//! can cross-check against, next to [`matmul_naive`].
 //!
 //! GEMM-call counting: the PRISM paper reports costs in units of GEMMs; the
 //! engines count their invocations through [`GemmCounter`]. Counts are kept
 //! both process-globally and per-thread; [`GemmScope`] reads the per-thread
 //! counters so concurrent runs (service workers, parallel tests) never see
-//! each other's calls. SYRK records its true n²k flop count, not the 2mnk
-//! of a general GEMM.
+//! each other's calls. SYRK records its true n²k flop count — the mirrored
+//! half is a copy, not recomputation — and is additionally tallied under
+//! [`GemmCounter::syrk_calls`] so cost models can separate the two shapes.
 
 use super::Mat;
 use crate::threads::{scoped, ThreadPool};
-use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::{Error, Result};
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Process-wide GEMM counters (cheap relaxed atomics) plus thread-local
 /// shadows for race-free per-run accounting.
 static GEMM_CALLS: AtomicU64 = AtomicU64::new(0);
 static GEMM_FLOPS: AtomicU64 = AtomicU64::new(0);
+static SYRK_CALLS: AtomicU64 = AtomicU64::new(0);
 
 thread_local! {
-    static TL_CALLS: Cell<u64> = Cell::new(0);
-    static TL_FLOPS: Cell<u64> = Cell::new(0);
+    static TL_CALLS: Cell<u64> = const { Cell::new(0) };
+    static TL_FLOPS: Cell<u64> = const { Cell::new(0) };
+    static TL_SYRK: Cell<u64> = const { Cell::new(0) };
 }
 
 pub struct GemmCounter;
 
 impl GemmCounter {
-    /// Process-wide call count (all threads).
+    /// Process-wide call count (all threads, GEMM + SYRK).
     pub fn calls() -> u64 {
         GEMM_CALLS.load(Ordering::Relaxed)
     }
@@ -63,19 +86,28 @@ impl GemmCounter {
     pub fn flops() -> u64 {
         GEMM_FLOPS.load(Ordering::Relaxed)
     }
-    fn add(calls: u64, flops: u64) {
+    /// Process-wide SYRK call count (a subset of [`GemmCounter::calls`]).
+    pub fn syrk_calls() -> u64 {
+        SYRK_CALLS.load(Ordering::Relaxed)
+    }
+    fn add(calls: u64, flops: u64, syrk: u64) {
         GEMM_CALLS.fetch_add(calls, Ordering::Relaxed);
         GEMM_FLOPS.fetch_add(flops, Ordering::Relaxed);
+        if syrk > 0 {
+            SYRK_CALLS.fetch_add(syrk, Ordering::Relaxed);
+            TL_SYRK.with(|c| c.set(c.get() + syrk));
+        }
         TL_CALLS.with(|c| c.set(c.get() + calls));
         TL_FLOPS.with(|c| c.set(c.get() + flops));
     }
     /// One general GEMM: 2mnk flops.
     fn record(m: usize, n: usize, k: usize) {
-        Self::add(1, 2 * (m as u64) * (n as u64) * (k as u64));
+        Self::add(1, 2 * (m as u64) * (n as u64) * (k as u64), 0);
     }
-    /// One SYRK: the symmetric result costs n²k flops (half a GEMM).
+    /// One SYRK: the symmetric result costs n²k flops (half a GEMM — the
+    /// mirrored half is produced by copying the upper triangle).
     fn record_syrk(n: usize, k: usize) {
-        Self::add(1, (n as u64) * (n as u64) * (k as u64));
+        Self::add(1, (n as u64) * (n as u64) * (k as u64), 1);
     }
 }
 
@@ -86,19 +118,29 @@ impl GemmCounter {
 pub struct GemmScope {
     calls0: u64,
     flops0: u64,
+    syrk0: u64,
 }
 
 impl GemmScope {
     pub fn begin() -> GemmScope {
-        GemmScope { calls0: TL_CALLS.with(|c| c.get()), flops0: TL_FLOPS.with(|c| c.get()) }
+        GemmScope {
+            calls0: TL_CALLS.with(|c| c.get()),
+            flops0: TL_FLOPS.with(|c| c.get()),
+            syrk0: TL_SYRK.with(|c| c.get()),
+        }
     }
-    /// GEMM calls made by this thread since [`GemmScope::begin`].
+    /// GEMM + SYRK calls made by this thread since [`GemmScope::begin`].
     pub fn calls(&self) -> u64 {
         TL_CALLS.with(|c| c.get()) - self.calls0
     }
     /// Flops recorded by this thread since [`GemmScope::begin`].
     pub fn flops(&self) -> u64 {
         TL_FLOPS.with(|c| c.get()) - self.flops0
+    }
+    /// SYRK calls made by this thread since [`GemmScope::begin`] (each is
+    /// also included in [`GemmScope::calls`]).
+    pub fn syrk_calls(&self) -> u64 {
+        TL_SYRK.with(|c| c.get()) - self.syrk0
     }
 }
 
@@ -164,27 +206,146 @@ impl Workspace {
     }
 }
 
+thread_local! {
+    /// Per-thread pool for the A/B packing buffers: each pool worker (and
+    /// the caller, on the sequential path) reuses its own pair across every
+    /// GEMM it runs, so steady-state packing is allocation-free without any
+    /// cross-thread sharing.
+    static PACK_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+// ───────────────────────── blocking knobs ──────────────────────────
+
+/// Microkernel register tile: MR rows of A × NR columns of B per inner-loop
+/// step (MR·NR = 32 independent FMA accumulators).
+const MR: usize = 8;
+const NR: usize = 4;
+
+/// Cache-block sizes of the packed kernel (see the module docs for the
+/// cache-level rationale behind the defaults).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmBlocking {
+    /// Rows of A per packed block (L2 resident together with one B panel).
+    pub mc: usize,
+    /// Shared-dimension extent per packed block. **Changing KC regroups the
+    /// reduction** (one register-accumulated partial sum per KC block), so
+    /// it may change low-order result bits; fix it once at startup.
+    pub kc: usize,
+    /// Columns of B per packed block (same bit-level caveat as `kc`).
+    pub nc: usize,
+}
+
+impl Default for GemmBlocking {
+    fn default() -> Self {
+        GemmBlocking { mc: 128, kc: 256, nc: 512 }
+    }
+}
+
+impl GemmBlocking {
+    /// Parse a `MCxKCxNC` spec, e.g. `128x256x512` (`,` also accepted as the
+    /// separator). All three must be ≥ 1.
+    pub fn parse(s: &str) -> Result<GemmBlocking> {
+        let parts: Vec<&str> = s.split(['x', 'X', ',']).map(str::trim).collect();
+        if parts.len() != 3 {
+            return Err(Error::Parse(format!(
+                "gemm blocking '{s}': expected MCxKCxNC (e.g. 128x256x512)"
+            )));
+        }
+        let mut v = [0usize; 3];
+        for (slot, p) in v.iter_mut().zip(&parts) {
+            *slot = p
+                .parse::<usize>()
+                .ok()
+                .filter(|&x| x >= 1)
+                .ok_or_else(|| Error::Parse(format!("gemm blocking '{s}': bad size '{p}'")))?;
+        }
+        Ok(GemmBlocking { mc: v[0], kc: v[1], nc: v[2] })
+    }
+
+    /// Render back to the `MCxKCxNC` form `parse` accepts.
+    pub fn display(&self) -> String {
+        format!("{}x{}x{}", self.mc, self.kc, self.nc)
+    }
+
+    /// Blocking with the micro-tile minimums enforced (MC ≥ MR, NC ≥ NR).
+    fn clamped(self) -> GemmBlocking {
+        GemmBlocking { mc: self.mc.max(MR), kc: self.kc.max(1), nc: self.nc.max(NR) }
+    }
+}
+
+/// Process-global blocking, stored as three atomics so reading it is free of
+/// locks on the per-GEMM path. Each kernel invocation snapshots it once.
+static GLOBAL_MC: AtomicUsize = AtomicUsize::new(128);
+static GLOBAL_KC: AtomicUsize = AtomicUsize::new(256);
+static GLOBAL_NC: AtomicUsize = AtomicUsize::new(512);
+
+/// Install process-global cache-block sizes (`--gemm-block` on the CLI,
+/// `service.gemm_block` in TOML). A startup-time tuning knob: changing KC/NC
+/// regroups reductions and may change low-order bits of later results, so
+/// set it before computing anything you intend to compare bitwise.
+pub fn set_global_blocking(b: GemmBlocking) {
+    let b = b.clamped();
+    GLOBAL_MC.store(b.mc, Ordering::Relaxed);
+    GLOBAL_KC.store(b.kc, Ordering::Relaxed);
+    GLOBAL_NC.store(b.nc, Ordering::Relaxed);
+}
+
+/// Current process-global cache-block sizes.
+pub fn global_blocking() -> GemmBlocking {
+    GemmBlocking {
+        mc: GLOBAL_MC.load(Ordering::Relaxed),
+        kc: GLOBAL_KC.load(Ordering::Relaxed),
+        nc: GLOBAL_NC.load(Ordering::Relaxed),
+    }
+}
+
 // ───────────────────────── engine ──────────────────────────
 
 /// Minimum C rows per parallel panel — below this the dispatch overhead
 /// beats the kernel time, so small products stay sequential.
 const MIN_PANEL_ROWS: usize = 16;
 
+/// A strided read-only view of one GEMM operand: element `(i, j)` lives at
+/// `data[i·rs + j·cs]`. Lets the packing routines serve `A`, `Aᵀ`, `B`, `Bᵀ`
+/// from the original buffers — no transpose is ever materialised.
+#[derive(Clone, Copy)]
+struct Operand<'a> {
+    data: &'a [f64],
+    rs: usize,
+    cs: usize,
+}
+
+impl<'a> Operand<'a> {
+    fn normal(m: &'a Mat) -> Operand<'a> {
+        Operand { data: m.as_slice(), rs: m.cols(), cs: 1 }
+    }
+    fn transposed(m: &'a Mat) -> Operand<'a> {
+        Operand { data: m.as_slice(), rs: 1, cs: m.cols() }
+    }
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
 /// A GEMM execution context: either purely sequential (`pool == None`) or
 /// row-panel parallel over a fixed [`ThreadPool`]. Cloning shares the pool.
 ///
-/// Determinism: results are bit-identical for every thread count (see the
-/// module docs); the engine exists so callers can *choose* their
-/// parallelism, not so they can get different answers.
+/// Determinism: results are bit-identical for every thread count at a fixed
+/// [`GemmBlocking`] (see the module docs); the engine exists so callers can
+/// *choose* their parallelism, not so they can get different answers.
 #[derive(Clone, Default)]
 pub struct GemmEngine {
     pool: Option<Arc<ThreadPool>>,
+    /// Engine-local blocking override; `None` reads [`global_blocking`] at
+    /// each call.
+    blocking: Option<GemmBlocking>,
 }
 
 impl GemmEngine {
     /// Sequential engine (no pool, no dispatch overhead).
     pub fn sequential() -> GemmEngine {
-        GemmEngine { pool: None }
+        GemmEngine { pool: None, blocking: None }
     }
 
     /// Engine with its own pool of `threads` workers (1 → sequential).
@@ -192,13 +353,25 @@ impl GemmEngine {
         if threads <= 1 {
             GemmEngine::sequential()
         } else {
-            GemmEngine { pool: Some(Arc::new(ThreadPool::new(threads))) }
+            GemmEngine { pool: Some(Arc::new(ThreadPool::new(threads))), blocking: None }
         }
+    }
+
+    /// Pin this engine to fixed cache-block sizes instead of the global
+    /// knob (benchmark sweeps, tests isolating themselves from the global).
+    pub fn with_blocking(mut self, blk: GemmBlocking) -> GemmEngine {
+        self.blocking = Some(blk.clamped());
+        self
     }
 
     /// Worker count (1 for the sequential engine).
     pub fn threads(&self) -> usize {
         self.pool.as_ref().map(|p| p.size()).unwrap_or(1)
+    }
+
+    /// The blocking this engine's kernels run with.
+    pub fn blocking(&self) -> GemmBlocking {
+        self.blocking.unwrap_or_else(global_blocking)
     }
 
     /// `C = A·B` into a caller-owned buffer (reshaped in place).
@@ -209,60 +382,53 @@ impl GemmEngine {
         GemmCounter::record(m, n, k);
         c.reset(m, n);
         c.fill_with(0.0);
-        self.gemm(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
+        self.dispatch(Operand::normal(a), Operand::normal(b), c.as_mut_slice(), m, n, k, false);
     }
 
-    /// `C = Aᵀ·B` into `c` (one O(mk) transpose through `ws`).
-    pub fn matmul_at_b_into(&self, c: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
+    /// `C = Aᵀ·B` into `c`. The packing stage reads A column-major, so no
+    /// transpose is materialised (and no workspace is needed).
+    pub fn matmul_at_b_into(&self, c: &mut Mat, a: &Mat, b: &Mat) {
         assert_eq!(a.rows(), b.rows(), "matmul_at_b: {:?}ᵀ x {:?}", a.shape(), b.shape());
-        let mut at = ws.take(a.cols(), a.rows());
-        a.transpose_into(&mut at);
-        let (m, k) = at.shape();
+        let (k, m) = a.shape();
         let n = b.cols();
         GemmCounter::record(m, n, k);
         c.reset(m, n);
         c.fill_with(0.0);
-        self.gemm(at.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
-        ws.put(at);
+        self.dispatch(Operand::transposed(a), Operand::normal(b), c.as_mut_slice(), m, n, k, false);
     }
 
-    /// `C = A·Bᵀ` into `c` (one O(nk) transpose through `ws`).
-    pub fn matmul_a_bt_into(&self, c: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
+    /// `C = A·Bᵀ` into `c` (B read column-major by the packer — no
+    /// transpose, no workspace).
+    pub fn matmul_a_bt_into(&self, c: &mut Mat, a: &Mat, b: &Mat) {
         assert_eq!(a.cols(), b.cols(), "matmul_a_bt: {:?} x {:?}ᵀ", a.shape(), b.shape());
-        let mut bt = ws.take(b.cols(), b.rows());
-        b.transpose_into(&mut bt);
         let (m, k) = a.shape();
-        let n = bt.cols();
+        let n = b.rows();
         GemmCounter::record(m, n, k);
         c.reset(m, n);
         c.fill_with(0.0);
-        self.gemm(a.as_slice(), bt.as_slice(), c.as_mut_slice(), m, n, k);
-        ws.put(bt);
+        self.dispatch(Operand::normal(a), Operand::transposed(b), c.as_mut_slice(), m, n, k, false);
     }
 
-    /// Symmetric rank-k `C = AᵀA` into `c` (exactly symmetric by
-    /// construction; records n²k flops).
+    /// Symmetric rank-k `C = AᵀA` into `c`: the packed kernel restricted to
+    /// upper-triangle micro-tiles (≈ n²k flops), mirrored afterwards —
+    /// exactly symmetric by construction.
     pub fn syrk_at_a_into(&self, c: &mut Mat, a: &Mat) {
         let (k, n) = a.shape();
         GemmCounter::record_syrk(n, k);
         c.reset(n, n);
         c.fill_with(0.0);
-        self.syrk_upper(a, c.as_mut_slice(), n);
+        self.dispatch(Operand::transposed(a), Operand::normal(a), c.as_mut_slice(), n, n, k, true);
         mirror_upper(c);
     }
 
-    /// Symmetric rank-k `C = A·Aᵀ` into `c` (via the rank-1 kernel on Aᵀ's
-    /// rows; one O(mk) transpose through `ws` keeps the hot loop contiguous).
-    pub fn syrk_a_at_into(&self, c: &mut Mat, a: &Mat, ws: &mut Workspace) {
+    /// Symmetric rank-k `C = A·Aᵀ` into `c` (same upper-triangle scheme).
+    pub fn syrk_a_at_into(&self, c: &mut Mat, a: &Mat) {
         let (m, k) = a.shape();
         GemmCounter::record_syrk(m, k);
-        let mut at = ws.take(k, m);
-        a.transpose_into(&mut at);
         c.reset(m, m);
         c.fill_with(0.0);
-        self.syrk_upper(&at, c.as_mut_slice(), m);
+        self.dispatch(Operand::normal(a), Operand::transposed(a), c.as_mut_slice(), m, m, k, true);
         mirror_upper(c);
-        ws.put(at);
     }
 
     /// Allocating convenience forms of the `*_into` calls.
@@ -273,12 +439,12 @@ impl GemmEngine {
     }
     pub fn matmul_at_b(&self, a: &Mat, b: &Mat) -> Mat {
         let mut c = Mat::zeros(0, 0);
-        self.matmul_at_b_into(&mut c, a, b, &mut Workspace::new());
+        self.matmul_at_b_into(&mut c, a, b);
         c
     }
     pub fn matmul_a_bt(&self, a: &Mat, b: &Mat) -> Mat {
         let mut c = Mat::zeros(0, 0);
-        self.matmul_a_bt_into(&mut c, a, b, &mut Workspace::new());
+        self.matmul_a_bt_into(&mut c, a, b);
         c
     }
     pub fn syrk_at_a(&self, a: &Mat) -> Mat {
@@ -288,63 +454,51 @@ impl GemmEngine {
     }
     pub fn syrk_a_at(&self, a: &Mat) -> Mat {
         let mut c = Mat::zeros(0, 0);
-        self.syrk_a_at_into(&mut c, a, &mut Workspace::new());
+        self.syrk_a_at_into(&mut c, a);
         c
     }
 
-    /// `C += A·B`, dispatched over row panels of C. Each panel is a plain
-    /// sequential kernel run over its own rows of A and C, so the partition
-    /// (and hence the thread count) cannot change any output bit.
-    fn gemm(&self, a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+    /// `C += op(A)·op(B)`, dispatched over row panels of C. Each panel runs
+    /// the packed kernel over its own rows; for any fixed output element the
+    /// accumulation order depends only on the (global) blocking grid, never
+    /// on the partition, so the thread count cannot change any output bit.
+    /// With `upper_only`, micro-tiles strictly below the diagonal are
+    /// skipped (the caller mirrors the upper triangle afterwards).
+    fn dispatch(
+        &self,
+        a: Operand<'_>,
+        b: Operand<'_>,
+        c: &mut [f64],
+        m: usize,
+        n: usize,
+        k: usize,
+        upper_only: bool,
+    ) {
         if m == 0 || n == 0 || k == 0 {
             return;
         }
+        // Snapshot the blocking once so every panel of this call agrees.
+        let blk = self.blocking().clamped();
         // Floor division: never split below MIN_PANEL_ROWS rows per panel
         // (a sub-minimum panel pays dispatch overhead for no kernel time).
         let blocks = self.threads().min(m / MIN_PANEL_ROWS).max(1);
         match &self.pool {
             Some(pool) if blocks > 1 => {
-                let rows_per = (m + blocks - 1) / blocks;
+                let rows_per = m.div_ceil(blocks);
                 let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = c
                     .chunks_mut(rows_per * n)
                     .enumerate()
                     .map(|(bi, cpanel)| {
                         let i0 = bi * rows_per;
                         let rows = cpanel.len() / n;
-                        let apanel = &a[i0 * k..(i0 + rows) * k];
-                        Box::new(move || gemm_broadcast(apanel, b, cpanel, rows, n, k))
-                            as Box<dyn FnOnce() + Send + '_>
+                        Box::new(move || {
+                            gemm_panel(a, b, cpanel, i0, i0 + rows, n, k, blk, upper_only)
+                        }) as Box<dyn FnOnce() + Send + '_>
                     })
                     .collect();
                 scoped(pool, jobs);
             }
-            _ => gemm_broadcast(a, b, c, m, n, k),
-        }
-    }
-
-    /// Upper-triangle SYRK (`c[i, i..] += Σ_t a[t,i]·a[t, i..]`), dispatched
-    /// over row panels of C with the same determinism argument as `gemm`.
-    fn syrk_upper(&self, a: &Mat, c: &mut [f64], n: usize) {
-        if n == 0 {
-            return;
-        }
-        let blocks = self.threads().min(n / MIN_PANEL_ROWS).max(1);
-        match &self.pool {
-            Some(pool) if blocks > 1 => {
-                let rows_per = (n + blocks - 1) / blocks;
-                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = c
-                    .chunks_mut(rows_per * n)
-                    .enumerate()
-                    .map(|(bi, cpanel)| {
-                        let i0 = bi * rows_per;
-                        let rows = cpanel.len() / n;
-                        Box::new(move || syrk_rank1_rows(a, cpanel, i0, i0 + rows, n))
-                            as Box<dyn FnOnce() + Send + '_>
-                    })
-                    .collect();
-                scoped(pool, jobs);
-            }
-            _ => syrk_rank1_rows(a, c, 0, n, n),
+            _ => gemm_panel(a, b, c, 0, m, n, k, blk, upper_only),
         }
     }
 }
@@ -385,12 +539,12 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     global_engine().matmul(a, b)
 }
 
-/// `C = Aᵀ · B` (one O(mk) transpose, then the broadcast kernel).
+/// `C = Aᵀ · B` (A packed column-major — no transpose materialised).
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     global_engine().matmul_at_b(a, b)
 }
 
-/// `C = A · Bᵀ` (one O(nk) transpose, then the broadcast kernel).
+/// `C = A · Bᵀ` (B packed column-major — no transpose materialised).
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     global_engine().matmul_a_bt(a, b)
 }
@@ -415,7 +569,162 @@ pub fn syrk_at_a_into(c: &mut Mat, a: &Mat) {
     global_engine().syrk_at_a_into(c, a)
 }
 
-// ───────────────────────── kernels ──────────────────────────
+// ───────────────────────── packed kernel ──────────────────────────
+
+/// Pack rows `i0..i1`, cols `k0..k1` of `a` into MR-row panels, k-major:
+/// panel `p` holds rows `i0+p·MR ..`, stored as `buf[p·kb·MR + t·MR + r]`
+/// for k index `t` (0-based within the block) and panel row `r`. Rows past
+/// `i1` are zero-padded so the microkernel always runs a full tile.
+fn pack_a(buf: &mut [f64], a: Operand<'_>, i0: usize, i1: usize, k0: usize, k1: usize) {
+    let kb = k1 - k0;
+    let mut off = 0;
+    let mut ti = i0;
+    while ti < i1 {
+        let h = MR.min(i1 - ti);
+        for t in 0..kb {
+            let dst = &mut buf[off + t * MR..off + t * MR + MR];
+            for r in 0..MR {
+                dst[r] = if r < h { a.at(ti + r, k0 + t) } else { 0.0 };
+            }
+        }
+        off += kb * MR;
+        ti += MR;
+    }
+}
+
+/// Pack rows `k0..k1`, cols `j0..j1` of `b` into NR-column panels, k-major:
+/// panel `p` holds cols `j0+p·NR ..`, stored as `buf[p·kb·NR + t·NR + j]`.
+/// Columns past `j1` are zero-padded.
+fn pack_b(buf: &mut [f64], b: Operand<'_>, k0: usize, k1: usize, j0: usize, j1: usize) {
+    let kb = k1 - k0;
+    let mut off = 0;
+    let mut js = j0;
+    while js < j1 {
+        let w = NR.min(j1 - js);
+        for t in 0..kb {
+            let dst = &mut buf[off + t * NR..off + t * NR + NR];
+            for j in 0..NR {
+                dst[j] = if j < w { b.at(k0 + t, js + j) } else { 0.0 };
+            }
+        }
+        off += kb * NR;
+        js += NR;
+    }
+}
+
+/// The 8×4 register microkernel: one packed A panel × one packed B panel
+/// over `kb` k-steps. All 32 accumulators are independent and the two
+/// operand streams are contiguous, so LLVM keeps `acc` in vector registers
+/// and turns the inner `j` loop into FMAs (no float-reassociation licence
+/// needed — each `acc[r][j]` is its own serial chain).
+#[inline(always)]
+fn micro_tile(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
+    let mut acc = [0.0f64; MR * NR];
+    let ap = &ap[..kb * MR];
+    let bp = &bp[..kb * NR];
+    for t in 0..kb {
+        let at = &ap[t * MR..t * MR + MR];
+        let bt = &bp[t * NR..t * NR + NR];
+        for r in 0..MR {
+            let ar = at[r];
+            for j in 0..NR {
+                acc[r * NR + j] += ar * bt[j];
+            }
+        }
+    }
+    acc
+}
+
+/// Sequential packed kernel over one row panel of C (`rows pi0..pi1`, all n
+/// columns; `c` is that panel's row-major storage). `upper_only` skips
+/// micro-tiles strictly below the diagonal — used by SYRK; the skipped
+/// entries (and any sub-diagonal entries a straddling tile does produce)
+/// are overwritten by the caller's mirror pass.
+///
+/// Determinism invariant (what makes the parallel row split exact): for any
+/// fixed element `(i, j)`, the accumulation is "for each (NC, KC) block in
+/// grid order: add a register-accumulated k-ordered partial sum". The row
+/// partition and the MC/MR grids decide only *which tile* computes an
+/// element, never the order of its additions, so callers may split rows
+/// anywhere. Zero-padding keeps edge tiles on the same code path.
+fn gemm_panel(
+    a: Operand<'_>,
+    b: Operand<'_>,
+    c: &mut [f64],
+    pi0: usize,
+    pi1: usize,
+    n: usize,
+    k: usize,
+    blk: GemmBlocking,
+    upper_only: bool,
+) {
+    if pi0 >= pi1 || n == 0 || k == 0 {
+        return;
+    }
+    let GemmBlocking { mc, kc, nc } = blk;
+    PACK_WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let mut apack = ws.take(1, mc.div_ceil(MR) * MR * kc);
+        let mut bpack = ws.take(1, nc.div_ceil(NR) * NR * kc);
+        for jc in (0..n).step_by(nc) {
+            let j1 = (jc + nc).min(n);
+            // SYRK: a row panel entirely below this column block has no
+            // upper-triangle work at all — skip before packing any B panel.
+            if upper_only && pi0 >= j1 {
+                continue;
+            }
+            for k0 in (0..k).step_by(kc) {
+                let k1 = (k0 + kc).min(k);
+                let kb = k1 - k0;
+                pack_b(bpack.as_mut_slice(), b, k0, k1, jc, j1);
+                for ic in (pi0..pi1).step_by(mc) {
+                    let i1 = (ic + mc).min(pi1);
+                    // SYRK: a whole A block strictly below this column block
+                    // contributes no upper-triangle element — skip it before
+                    // paying for the pack.
+                    if upper_only && ic >= j1 {
+                        continue;
+                    }
+                    pack_a(apack.as_mut_slice(), a, ic, i1, k0, k1);
+                    let mut si = 0;
+                    let mut js = jc;
+                    while js < j1 {
+                        let w = NR.min(j1 - js);
+                        let bstrip = &bpack.as_slice()[si * kb * NR..(si + 1) * kb * NR];
+                        let mut tile = 0;
+                        let mut ti = ic;
+                        while ti < i1 {
+                            let h = MR.min(i1 - ti);
+                            // Upper-triangle filter at micro-tile grain: a
+                            // tile whose first row is past the strip's last
+                            // column holds no (i ≤ j) element. The test uses
+                            // global indices, so every upper element is
+                            // computed under any row partition.
+                            if !upper_only || ti < js + NR {
+                                let astrip =
+                                    &apack.as_slice()[tile * kb * MR..(tile + 1) * kb * MR];
+                                let acc = micro_tile(kb, astrip, bstrip);
+                                for r in 0..h {
+                                    let base = (ti - pi0 + r) * n + js;
+                                    let row = &mut c[base..base + w];
+                                    for j in 0..w {
+                                        row[j] += acc[r * NR + j];
+                                    }
+                                }
+                            }
+                            tile += 1;
+                            ti += MR;
+                        }
+                        si += 1;
+                        js += NR;
+                    }
+                }
+            }
+        }
+        ws.put(apack);
+        ws.put(bpack);
+    });
+}
 
 /// Copy the upper triangle into the lower one (exact symmetry).
 fn mirror_upper(c: &mut Mat) {
@@ -427,47 +736,27 @@ fn mirror_upper(c: &mut Mat) {
     }
 }
 
-/// Rank-1 SYRK rows: for C rows `i0..i1` (passed as the slice `c_rows`),
-/// accumulate `C[i, i..] += a[t, i] · a[t, i..]` over every row t of `a`.
-/// The inner stream is contiguous and dependence-free, so it vectorises
-/// like the GEMM kernel (§Perf change 3).
-fn syrk_rank1_rows(a: &Mat, c_rows: &mut [f64], i0: usize, i1: usize, n: usize) {
-    let k = a.rows();
-    for t in 0..k {
-        let row = a.row(t);
-        for i in i0..i1 {
-            let av = row[i];
-            let off = (i - i0) * n;
-            let ci = &mut c_rows[off + i..off + n];
-            for (cv, rv) in ci.iter_mut().zip(&row[i..]) {
-                *cv += av * rv;
-            }
-        }
-    }
-}
+// ───────────────── reference / ablation kernels ──────────────────
 
-/// Broadcast-FMA kernel: `C[m x n] += A[m x k] · B[k x n]`, both row-major.
+/// The seed's broadcast-FMA kernel: `C[m x n] += A[m x k] · B[k x n]`, both
+/// row-major. Kept as the §Perf ablation baseline (`perf_gemm` reports the
+/// packed kernel's speedup over it) and as a second independent
+/// implementation for conformance cross-checks.
 ///
 /// Loop order (jc, kc, i, t, j): the innermost `crow[j] += a_it * brow[j]`
-/// has no cross-iteration dependence, so rustc vectorises it into AVX-512
-/// FMAs (a dot-product reduction kernel cannot be auto-vectorised without
-/// float-reassociation licence). The (KC2 × NC) B panel stays hot in L2
-/// across the whole i sweep, and each C row segment stays in L1 across the
-/// t loop. §Perf change 2: 1.6–2.4x over the packed dot-product kernel.
-///
-/// Per-row determinism invariant (what makes the parallel dispatch exact):
-/// for any fixed output row, the 4-/2-/1-row micro-tile variants all execute
-/// the same `(j0, k0, t, j)` accumulation sequence — tiles interleave rows
-/// but never reorder within one. Callers may therefore split `m` anywhere.
-fn gemm_broadcast(a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+/// has no cross-iteration dependence, so rustc vectorises it into FMAs. The
+/// (KC2 × NC) B panel stays hot in L2 across the whole i sweep; a 4-row
+/// micro-tile quarters the B bandwidth. Unlike the packed kernel it never
+/// copies its operands — which is exactly what costs it at large n: A and C
+/// rows are touched with stride n, so TLB/cache-line utilisation degrades
+/// where the packed kernel keeps streaming contiguous panels.
+pub fn gemm_broadcast(a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
     const NC: usize = 512; // B-panel columns (NC·KC2·8B = 512 KiB ≤ L2)
     const KC2: usize = 256; // B-panel rows
     for j0 in (0..n).step_by(NC) {
         let j1 = (j0 + NC).min(n);
         for k0 in (0..k).step_by(KC2) {
             let k1 = (k0 + KC2).min(k);
-            // 4-row micro-tile: each B row loaded from L2 feeds four C rows'
-            // FMA streams (§Perf changes 4/5 — B bandwidth quartered).
             let mut i = 0;
             while i + 4 <= m {
                 let (rows01, rows23) = (&mut c[i * n..(i + 4) * n]).split_at_mut(2 * n);
@@ -523,59 +812,6 @@ fn gemm_broadcast(a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: us
                     for (cv, bv) in crow.iter_mut().zip(brow) {
                         *cv += av * bv;
                     }
-                }
-            }
-        }
-    }
-}
-
-const MC: usize = 64; // rows of A per block (packed reference kernel)
-const KC: usize = 256; // shared dim per block (packed reference kernel)
-
-/// Former core kernel (packed dot-product): kept for the §Perf ablation and
-/// as the independent reference implementation the conformance property
-/// tests cross-check against. `bt` is B **pre-transposed** (n × k row-major).
-pub fn gemm_packed(a: &[f64], bt: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
-    for i0 in (0..m).step_by(MC) {
-        let i1 = (i0 + MC).min(m);
-        for k0 in (0..k).step_by(KC) {
-            let k1 = (k0 + KC).min(k);
-            for i in i0..i1 {
-                let arow = &a[i * k + k0..i * k + k1];
-                let crow = &mut c[i * n..(i + 1) * n];
-                let mut j = 0;
-                // 2-column unroll: amortises the A-row reload.
-                while j + 2 <= n {
-                    let b0 = &bt[j * k + k0..j * k + k1];
-                    let b1 = &bt[(j + 1) * k + k0..(j + 1) * k + k1];
-                    let (mut s0a, mut s0b) = (0.0, 0.0);
-                    let (mut s1a, mut s1b) = (0.0, 0.0);
-                    let len = arow.len();
-                    let mut t = 0;
-                    while t + 2 <= len {
-                        s0a += arow[t] * b0[t];
-                        s0b += arow[t + 1] * b0[t + 1];
-                        s1a += arow[t] * b1[t];
-                        s1b += arow[t + 1] * b1[t + 1];
-                        t += 2;
-                    }
-                    while t < len {
-                        s0a += arow[t] * b0[t];
-                        s1a += arow[t] * b1[t];
-                        t += 1;
-                    }
-                    crow[j] += s0a + s0b;
-                    crow[j + 1] += s1a + s1b;
-                    j += 2;
-                }
-                while j < n {
-                    let brow = &bt[j * k + k0..j * k + k1];
-                    let mut acc = 0.0;
-                    for t in 0..arow.len() {
-                        acc += arow[t] * brow[t];
-                    }
-                    crow[j] += acc;
-                    j += 1;
                 }
             }
         }
@@ -675,17 +911,19 @@ mod tests {
         let scope = GemmScope::begin();
         eng.matmul_into(&mut c, &a, &b);
         assert_eq!(scope.calls(), 1);
+        assert_eq!(scope.syrk_calls(), 0);
         assert_eq!(scope.flops(), 2 * 6 * 3 * 4);
 
         let scope = GemmScope::begin();
         eng.syrk_at_a_into(&mut c, &a); // AᵀA: n=4, k=6 → n²k flops
         assert_eq!(scope.calls(), 1);
+        assert_eq!(scope.syrk_calls(), 1);
         assert_eq!(scope.flops(), 4 * 4 * 6);
 
         let scope = GemmScope::begin();
-        let mut ws = Workspace::new();
-        eng.syrk_a_at_into(&mut c, &a, &mut ws); // AAᵀ: m=6, k=4 → m²k flops
+        eng.syrk_a_at_into(&mut c, &a); // AAᵀ: m=6, k=4 → m²k flops
         assert_eq!(scope.calls(), 1);
+        assert_eq!(scope.syrk_calls(), 1);
         assert_eq!(scope.flops(), 6 * 6 * 4);
     }
 
@@ -717,6 +955,69 @@ mod tests {
             let s_seq = seq.syrk_at_a(&a);
             let s_par = par.syrk_at_a(&a);
             assert_eq!(s_seq, s_par, "syrk {m}x{k} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn custom_blocking_stays_correct() {
+        // Tiny blocks force every edge path (ragged tiles, many KC/NC
+        // blocks) without touching the process-global knob.
+        let mut rng = Rng::seed_from(9);
+        let blk = GemmBlocking { mc: 8, kc: 5, nc: 7 };
+        let eng = GemmEngine::sequential().with_blocking(blk);
+        assert_eq!(eng.blocking(), blk.clamped());
+        for &(m, k, n) in &[(1, 1, 1), (13, 11, 9), (40, 23, 31)] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            assert!(
+                close(&eng.matmul(&a, &b), &matmul_naive(&a, &b), 1e-10),
+                "blocked {m}x{k}x{n}"
+            );
+            let sa = Mat::gaussian(&mut rng, k, n, 1.0);
+            assert!(close(
+                &eng.syrk_at_a(&sa),
+                &matmul_naive(&sa.transpose(), &sa),
+                1e-10
+            ));
+        }
+        // And a parallel engine at the same blocking stays bit-identical.
+        let par = GemmEngine::with_threads(3).with_blocking(blk);
+        let a = Mat::gaussian(&mut rng, 70, 19, 1.0);
+        let b = Mat::gaussian(&mut rng, 19, 26, 1.0);
+        assert_eq!(eng.matmul(&a, &b), par.matmul(&a, &b));
+    }
+
+    #[test]
+    fn blocking_parse_roundtrip() {
+        let b = GemmBlocking::parse("64x128x256").unwrap();
+        assert_eq!(b, GemmBlocking { mc: 64, kc: 128, nc: 256 });
+        assert_eq!(GemmBlocking::parse(&b.display()).unwrap(), b);
+        assert_eq!(
+            GemmBlocking::parse("64,128,256").unwrap(),
+            GemmBlocking { mc: 64, kc: 128, nc: 256 }
+        );
+        assert!(GemmBlocking::parse("64x128").is_err());
+        assert!(GemmBlocking::parse("64x0x256").is_err());
+        assert!(GemmBlocking::parse("axbxc").is_err());
+    }
+
+    #[test]
+    fn global_blocking_roundtrip() {
+        // Only ever set the default value here: the global knob is
+        // bit-level observable, and unit tests run concurrently.
+        set_global_blocking(GemmBlocking::default());
+        assert_eq!(global_blocking(), GemmBlocking::default());
+    }
+
+    #[test]
+    fn broadcast_kernel_matches_packed() {
+        let mut rng = Rng::seed_from(10);
+        for &(m, k, n) in &[(5, 9, 3), (33, 20, 41)] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            let mut c = Mat::zeros(m, n);
+            gemm_broadcast(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
+            assert!(close(&c, &matmul(&a, &b), 1e-10), "{m}x{k}x{n}");
         }
     }
 

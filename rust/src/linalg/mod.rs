@@ -6,12 +6,13 @@
 //! symmetric eigensolver, SVD).
 //!
 //! The layout is deliberately simple (one contiguous `Vec<f64>` per matrix);
-//! the performance-critical kernels (GEMM and friends) live in [`gemm`] and
-//! are written to be auto-vectorisable. The GEMM layer is a configurable
-//! engine ([`gemm::GemmEngine`]): row-panel parallel over the crate's
-//! [`crate::threads::ThreadPool`], with `*_into` out-parameter variants and a
-//! [`gemm::Workspace`] buffer pool so iterative engines run allocation-free
-//! in their hot loops.
+//! the performance-critical kernels (GEMM and friends) live in [`gemm`]: a
+//! packed, cache-blocked engine ([`gemm::GemmEngine`]) with an 8×4
+//! register-tiled microkernel, tunable block sizes ([`gemm::GemmBlocking`],
+//! `--gemm-block` on the CLI), row-panel parallelism over the crate's
+//! [`crate::threads::ThreadPool`] (bit-identical at every pool size),
+//! `*_into` out-parameter variants and a [`gemm::Workspace`] buffer pool so
+//! iterative engines run allocation-free in their hot loops.
 
 pub mod gemm;
 pub mod decomp;
@@ -19,7 +20,9 @@ pub mod eigen;
 pub mod svd;
 pub mod norms;
 
-pub use gemm::{matmul, matmul_at_b, matmul_a_bt, syrk_at_a, syrk_a_at, GemmEngine, Workspace};
+pub use gemm::{
+    matmul, matmul_a_bt, matmul_at_b, syrk_a_at, syrk_at_a, GemmBlocking, GemmEngine, Workspace,
+};
 pub use decomp::{cholesky, cholesky_inverse, lu_inverse, lu_solve, qr_householder};
 pub use eigen::{symmetric_eigen, SymEigen};
 pub use norms::{spectral_norm_est, spectral_norm_sym};

@@ -54,6 +54,9 @@ SUBCOMMANDS:
 COMMON FLAGS:
   --threads T      GEMM pool size (default 1 = sequential kernels;
                    any T gives bit-identical results — speed knob only)
+  --gemm-block B   GEMM cache-block sizes as MCxKCxNC (default 128x256x512;
+                   startup-time tuning knob — changing KC/NC regroups the
+                   reduction and can change low-order result bits)
   --n / --m        matrix shape             (default 256 / 128)
   --spectrum S     gaussian|logspace|htmp|wishart|mp (default gaussian)
   --smin X         smallest singular value for logspace (default 1e-6)
@@ -86,6 +89,17 @@ fn main() {
         Err(e) => {
             eprintln!("prism: error: {e}");
             std::process::exit(1);
+        }
+    }
+    // Install the GEMM cache-block sizes before any engine runs (tuning
+    // knob; see USAGE for the bit-level caveat on changing it mid-run).
+    if let Some(spec) = args.get("gemm-block") {
+        match prism::linalg::gemm::GemmBlocking::parse(spec) {
+            Ok(b) => prism::linalg::gemm::set_global_blocking(b),
+            Err(e) => {
+                eprintln!("prism: error: {e}");
+                std::process::exit(1);
+            }
         }
     }
     let code = match args.subcommand.as_deref() {
@@ -352,6 +366,10 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
         tol: args.get_f64("tol", 1e-7)?,
         gemm_threads: args.get_usize("threads", 1)?,
         stream_residuals: stream_res,
+        gemm_block: match args.get("gemm-block") {
+            Some(spec) => Some(prism::linalg::gemm::GemmBlocking::parse(spec)?),
+            None => None,
+        },
     };
     let backend = Backend::parse(&args.get_string("backend", "prism5"))?;
     let kappa = args.get_f64("kappa", 0.5)?;

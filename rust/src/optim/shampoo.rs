@@ -102,7 +102,7 @@ impl Optimizer for Shampoo {
                 });
                 // Accumulate second-moment factors through scratch buffers.
                 let mut tmp = self.scratch.take(m, m);
-                eng.syrk_a_at_into(&mut tmp, &self.bufs[i], &mut self.scratch);
+                eng.syrk_a_at_into(&mut tmp, &self.bufs[i]);
                 st.l.axpy(1.0, &tmp);
                 eng.syrk_at_a_into(&mut tmp, &self.bufs[i]);
                 st.r.axpy(1.0, &tmp);

@@ -4,6 +4,7 @@
 
 use super::driver::AlphaMode;
 use crate::coeffs::{alpha_interval, ns_d1_coeffs, ns_d2_coeffs, traces_needed};
+use crate::linalg::gemm::{GemmEngine, Workspace};
 use crate::linalg::Mat;
 use crate::polyfit::minimize_quartic;
 use crate::rng::Rng;
@@ -63,11 +64,33 @@ pub fn apply_update(x: &Mat, r: &Mat, r2: Option<&Mat>, d: usize, alpha: f64) ->
     crate::linalg::gemm::matmul(x, &g)
 }
 
+/// The polynomial coefficient `c_k` of `g_d(R; α) = Σ_{k≤d} c_k R^k`: the
+/// Taylor coefficients `a_k` below the top, and the fitted α on top.
+#[inline]
+fn update_coeff(k: usize, d: usize, alpha: f64) -> f64 {
+    if k == d {
+        alpha
+    } else {
+        taylor_alpha(k)
+    }
+}
+
 /// Write `g_d(R; α)` into a caller-owned buffer (reshaped in place) — the
 /// allocation-free form the iteration engines use in their hot loops. For
-/// d ≤ 2 no heap allocation happens at all; the general-degree path still
-/// allocates its explicit R-powers (it is the ablation-only exotic case).
-pub fn update_poly_into(g: &mut Mat, r: &Mat, r2: Option<&Mat>, d: usize, alpha: f64) {
+/// d ≤ 2 this is pure elementwise work (no GEMMs, no allocation); for d ≥ 3
+/// the polynomial is evaluated by **Paterson–Stockmeyer** in ≈ 2√d GEMMs
+/// with every matrix intermediate drawn from `ws` — from the second
+/// same-shape call onward the only heap traffic is an O(√d)-pointer table
+/// `Vec`, never a matrix buffer.
+pub fn update_poly_into(
+    g: &mut Mat,
+    r: &Mat,
+    r2: Option<&Mat>,
+    d: usize,
+    alpha: f64,
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) {
     match d {
         1 => {
             g.copy_from(r);
@@ -81,48 +104,99 @@ pub fn update_poly_into(g: &mut Mat, r: &Mat, r2: Option<&Mat>, d: usize, alpha:
             g.axpy(alpha, r2);
             g.add_diag(1.0);
         }
-        _ => {
-            let full = update_poly(r, r2, d, alpha);
-            g.copy_from(&full);
+        _ => paterson_stockmeyer_into(g, r, r2, d, alpha, eng, ws),
+    }
+}
+
+/// The power `R^j` for `j ≥ 1`, given the precomputed table `pows[i] =
+/// R^{i+2}`.
+fn power<'a>(r: &'a Mat, pows: &'a [Mat], j: usize) -> &'a Mat {
+    if j == 1 {
+        r
+    } else {
+        &pows[j - 2]
+    }
+}
+
+/// Paterson–Stockmeyer evaluation of `g_d(R; α) = Σ_{k≤d} c_k R^k` into `g`.
+///
+/// With `s = ⌈√d⌉`, the polynomial splits into base-`R^s` chunks
+/// `g = Σ_{i≤v} B_i(R) · (R^s)^i`, `v = ⌊d/s⌋`, where each `B_i` is a
+/// degree-< s polynomial assembled by cheap O(n²) axpys from the power
+/// table `R², …, R^s`. Building the table costs `s − 1` GEMMs and the
+/// Horner recurrence over `R^s` costs `v` more — `s − 1 + v ≈ 2√d` total,
+/// versus the `d − 1` explicit-power GEMMs this replaces (e.g. d = 16:
+/// 7 instead of 15). Every matrix buffer (the power table and the Horner
+/// ping-pong) is drawn from `ws`, preserving the engines'
+/// [`Workspace::allocations`] steady-state invariant; the only per-call
+/// heap traffic is the `s − 1`-entry `Vec` holding the table's handles
+/// (O(√d) pointers, not matrix data).
+///
+/// `r2`, when provided, seeds the `R²` table entry and saves one GEMM.
+fn paterson_stockmeyer_into(
+    g: &mut Mat,
+    r: &Mat,
+    r2: Option<&Mat>,
+    d: usize,
+    alpha: f64,
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) {
+    debug_assert!(d >= 3);
+    let n = r.rows();
+    let mut s = 1usize;
+    while s * s < d {
+        s += 1;
+    }
+    let v = d / s;
+
+    // Power table R^2..R^s (s − 1 GEMMs, minus one if R² was supplied).
+    let mut pows: Vec<Mat> = Vec::with_capacity(s - 1);
+    for j in 2..=s {
+        let mut p = ws.take(n, n);
+        if j == 2 {
+            match r2 {
+                Some(r2) => p.copy_from(r2),
+                None => eng.matmul_into(&mut p, r, r),
+            }
+        } else {
+            eng.matmul_into(&mut p, &pows[j - 3], r);
         }
+        pows.push(p);
+    }
+
+    // Top chunk B_v (possibly shorter than s terms): degree d − v·s.
+    g.reset(n, n);
+    g.fill_with(0.0);
+    g.add_diag(update_coeff(v * s, d, alpha));
+    for j in 1..=(d - v * s) {
+        g.axpy(update_coeff(v * s + j, d, alpha), power(r, &pows, j));
+    }
+
+    // Horner over R^s: g ← g·R^s + B_i for i = v−1 … 0 (v GEMMs).
+    let mut tmp = ws.take(n, n);
+    for i in (0..v).rev() {
+        eng.matmul_into(&mut tmp, g, power(r, &pows, s));
+        std::mem::swap(g, &mut tmp);
+        g.add_diag(update_coeff(i * s, d, alpha));
+        for j in 1..s {
+            g.axpy(update_coeff(i * s + j, d, alpha), power(r, &pows, j));
+        }
+    }
+    ws.put(tmp);
+    for p in pows {
+        ws.put(p);
     }
 }
 
 /// The polynomial matrix `g_d(R; α)` itself (for coupled iterations that
-/// also need `g · Y`).
+/// also need `g · Y`). Allocating convenience wrapper over
+/// [`update_poly_into`] with a throwaway workspace and the global engine.
 pub fn update_poly(r: &Mat, r2: Option<&Mat>, d: usize, alpha: f64) -> Mat {
-    let n = r.rows();
-    match d {
-        1 => {
-            let mut g = r.scaled(alpha);
-            g.add_diag(1.0);
-            g
-        }
-        2 => {
-            let r2 = r2.expect("d=2 needs R²");
-            let mut g = r.scaled(0.5);
-            g.axpy(alpha, r2);
-            g.add_diag(1.0);
-            debug_assert_eq!(g.rows(), n);
-            g
-        }
-        _ => {
-            // General degree: g = Σ_{k<d} a_k R^k + α R^d by Horner-free
-            // accumulation over explicit powers (d−1 extra GEMMs — the
-            // (2d+1)-order iteration's intrinsic cost).
-            let mut g = Mat::zeros(n, n);
-            g.add_diag(taylor_alpha(0)); // a₀ = 1
-            let mut pow = r.clone();
-            for k in 1..=d {
-                let coef = if k == d { alpha } else { taylor_alpha(k) };
-                g.axpy(coef, &pow);
-                if k < d {
-                    pow = crate::linalg::gemm::matmul(&pow, r);
-                }
-            }
-            g
-        }
-    }
+    let mut g = Mat::zeros(0, 0);
+    let eng = crate::linalg::gemm::global_engine();
+    update_poly_into(&mut g, r, r2, d, alpha, &eng, &mut Workspace::new());
+    g
 }
 
 #[cfg(test)]
@@ -193,11 +267,101 @@ mod tests {
         };
         let r2 = matmul(&r, &r);
         let mut g = Mat::zeros(0, 0);
-        for (d, r2opt, alpha) in [(1, None, 0.8), (2, Some(&r2), 1.2)] {
-            update_poly_into(&mut g, &r, r2opt, d, alpha);
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = Workspace::new();
+        for (d, r2opt, alpha) in [(1, None, 0.8), (2, Some(&r2), 1.2), (5, None, 0.4)] {
+            update_poly_into(&mut g, &r, r2opt, d, alpha, &eng, &mut ws);
             let want = update_poly(&r, r2opt, d, alpha);
-            assert!(g.sub(&want).max_abs() < 1e-15, "d={d}");
+            assert!(g.sub(&want).max_abs() < 1e-13, "d={d}");
         }
+    }
+
+    /// Explicit-powers reference: `Σ_{k<d} a_k R^k + α R^d`, one GEMM per
+    /// power — the pre-Paterson–Stockmeyer evaluation, kept as the oracle.
+    fn explicit_powers_ref(r: &Mat, d: usize, alpha: f64) -> Mat {
+        let n = r.rows();
+        let mut g = Mat::zeros(n, n);
+        g.add_diag(1.0);
+        let mut pow = r.clone();
+        for k in 1..=d {
+            let coef = if k == d { alpha } else { taylor_alpha(k) };
+            g.axpy(coef, &pow);
+            if k < d {
+                pow = matmul(&pow, r);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn paterson_stockmeyer_matches_explicit_powers() {
+        let mut rng = Rng::seed_from(7);
+        let r = {
+            let g = Mat::gaussian(&mut rng, 8, 8, 0.2);
+            let mut s = g.add(&g.transpose());
+            s.scale(0.5 / g.fro_norm().max(1.0)); // keep ‖R‖ < 1
+            s
+        };
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = Workspace::new();
+        let mut g = Mat::zeros(0, 0);
+        for d in [3usize, 4, 5, 6, 8, 11, 16] {
+            update_poly_into(&mut g, &r, None, d, 0.7, &eng, &mut ws);
+            let want = explicit_powers_ref(&r, d, 0.7);
+            let err = g.sub(&want).max_abs();
+            assert!(err < 1e-13, "d={d}: err {err}");
+        }
+    }
+
+    #[test]
+    fn paterson_stockmeyer_gemm_budget() {
+        // The satellite contract: a degree-d update costs ≤ ⌈2√d⌉ + 2 GEMMs
+        // (it actually costs ⌈√d⌉ − 1 + ⌊d/⌈√d⌉⌋), strictly fewer than the
+        // d − 1 explicit powers it replaced. GemmScope is thread-local, so
+        // the count is deterministic even under parallel test execution.
+        use crate::linalg::gemm::GemmScope;
+        let mut rng = Rng::seed_from(8);
+        let r = {
+            let g = Mat::gaussian(&mut rng, 6, 6, 0.2);
+            let mut s = g.add(&g.transpose());
+            s.scale(0.25);
+            s
+        };
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = Workspace::new();
+        let mut g = Mat::zeros(0, 0);
+        for d in [5usize, 8, 16] {
+            let scope = GemmScope::begin();
+            update_poly_into(&mut g, &r, None, d, 0.9, &eng, &mut ws);
+            let calls = scope.calls();
+            let budget = (2.0 * (d as f64).sqrt()).ceil() as u64 + 2;
+            assert!(calls <= budget, "d={d}: {calls} GEMMs > budget {budget}");
+            assert!(calls < (d as u64) - 1, "d={d}: {calls} not better than explicit powers");
+            // Exact count: (s − 1) power GEMMs + ⌊d/s⌋ Horner GEMMs.
+            let s = (1usize..).find(|&s| s * s >= d).unwrap();
+            assert_eq!(calls, (s - 1 + d / s) as u64, "d={d}");
+        }
+        // Supplying R² saves exactly one power GEMM.
+        let r2 = matmul(&r, &r);
+        let scope = GemmScope::begin();
+        update_poly_into(&mut g, &r, Some(&r2), 5, 0.9, &eng, &mut ws);
+        assert_eq!(scope.calls(), 2);
+    }
+
+    #[test]
+    fn paterson_stockmeyer_is_allocation_free_when_warm() {
+        let mut rng = Rng::seed_from(9);
+        let r = Mat::gaussian(&mut rng, 7, 7, 0.1);
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = Workspace::new();
+        let mut g = Mat::zeros(0, 0);
+        update_poly_into(&mut g, &r, None, 9, 0.5, &eng, &mut ws);
+        let allocs = ws.allocations();
+        assert!(allocs > 0);
+        for _ in 0..3 {
+            update_poly_into(&mut g, &r, None, 9, 0.5, &eng, &mut ws);
+        }
+        assert_eq!(ws.allocations(), allocs, "warm PS must not allocate matrix buffers");
     }
 
     #[test]

@@ -104,7 +104,7 @@ pub(crate) fn sqrt_prism_in(
         if let Some(r2buf) = r2.as_mut() {
             eng.matmul_into(r2buf, &r, &r);
         }
-        update_poly_into(&mut g, &r, r2.as_ref(), opts.d, alpha);
+        update_poly_into(&mut g, &r, r2.as_ref(), opts.d, alpha, &eng, ws);
         eng.matmul_into(&mut xn, &x, &g);
         std::mem::swap(&mut x, &mut xn);
         eng.matmul_into(&mut yn, &g, &y);

@@ -1,24 +1,25 @@
-//! GEMM cross-check property suite: the broadcast-FMA engine (sequential
-//! and parallel) against the retained packed dot-product reference kernel
-//! (`gemm_packed`) on ragged shapes, plus the determinism contract —
-//! bit-identical output for pool sizes 1, 2 and 8.
+//! GEMM cross-check suite for the packed cache-blocked engine: every packed
+//! path (plain, transposed forms, both SYRKs) against `matmul_naive` on an
+//! adversarial shape grid straddling all blocking boundaries, plus the
+//! determinism contract — bit-identical output at pool sizes 1/2/4 (and 8)
+//! — and a cross-check against the independent seed broadcast kernel.
 
 use prism::linalg::gemm::{
-    gemm_packed, matmul, matmul_a_bt, matmul_at_b, syrk_a_at, syrk_at_a, GemmEngine, GemmScope,
-    Workspace,
+    gemm_broadcast, matmul, matmul_a_bt, matmul_at_b, matmul_naive, syrk_a_at, syrk_at_a,
+    GemmBlocking, GemmEngine, GemmScope, Workspace,
 };
 use prism::linalg::Mat;
 use prism::ptest::{gens, Prop};
 use prism::rng::Rng;
 
-/// `A·B` through the independent packed reference kernel.
-fn packed_ref(a: &Mat, b: &Mat) -> Mat {
+/// `A·B` through the seed broadcast kernel — an independent implementation
+/// (no packing, different tiling) retained for cross-checks.
+fn broadcast_ref(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.rows());
     let (m, k) = a.shape();
     let n = b.cols();
-    let bt = b.transpose();
     let mut c = Mat::zeros(m, n);
-    gemm_packed(a.as_slice(), bt.as_slice(), c.as_mut_slice(), m, n, k);
+    gemm_broadcast(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, n, k);
     c
 }
 
@@ -28,75 +29,194 @@ fn assert_close(got: &Mat, want: &Mat, tol: f64, what: &str) {
     assert!(err < tol, "{what}: err {err}");
 }
 
-/// Shapes that straddle every blocking boundary: the 4-row micro-tile, the
-/// packed kernel's MC=64/KC=256 blocks, and the broadcast kernel's NC=512
-/// column panel.
-const EDGE_SHAPES: &[(usize, usize, usize)] = &[
-    (1, 1, 1),
-    (1, 7, 1),
-    (1, 3, 9),
-    (5, 1, 3),
-    (2, 4, 2),
-    (3, 4, 1),
-    (63, 17, 5),
-    (64, 256, 8),
-    (65, 257, 9),
-    (66, 130, 33),
-    (3, 5, 513),
-];
+/// The satellite's adversarial grid: every m, n, k drawn from this set. The
+/// values straddle the 8-row/4-col micro-tile, the MIN_PANEL_ROWS parallel
+/// threshold (16), and force ragged edges on every packing path.
+const ADVERSARIAL: &[usize] = &[1, 3, 7, 17, 63, 65, 100];
 
+/// Full m×k×n cross product of the adversarial grid: the packed kernel vs
+/// the naive reference within 1e-12, and (where the parallel dispatch can
+/// engage) pool sizes 1/2/4 bit-identical.
 #[test]
-fn matmul_matches_packed_on_edge_shapes() {
+fn adversarial_shapes_match_naive_and_pools_agree() {
+    let engines =
+        [GemmEngine::with_threads(1), GemmEngine::with_threads(2), GemmEngine::with_threads(4)];
     let mut rng = Rng::seed_from(1);
-    for &(m, k, n) in EDGE_SHAPES {
-        let a = Mat::gaussian(&mut rng, m, k, 1.0);
-        let b = Mat::gaussian(&mut rng, k, n, 1.0);
-        assert_close(&matmul(&a, &b), &packed_ref(&a, &b), 1e-9, &format!("{m}x{k}x{n}"));
+    for &m in ADVERSARIAL {
+        for &k in ADVERSARIAL {
+            for &n in ADVERSARIAL {
+                let a = Mat::gaussian(&mut rng, m, k, 1.0);
+                let b = Mat::gaussian(&mut rng, k, n, 1.0);
+                let base = engines[0].matmul(&a, &b);
+                assert_close(&base, &matmul_naive(&a, &b), 1e-12, &format!("{m}x{k}x{n}"));
+                for e in &engines[1..] {
+                    assert_eq!(
+                        base.as_slice(),
+                        e.matmul(&a, &b).as_slice(),
+                        "matmul {m}x{k}x{n} differs at {} threads",
+                        e.threads()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Transposed packing paths (`AᵀB`, `ABᵀ`) over the adversarial (m, n) grid
+/// against naive-on-explicit-transpose, with pool-size determinism.
+#[test]
+fn adversarial_transposed_forms_match_naive() {
+    let engines =
+        [GemmEngine::with_threads(1), GemmEngine::with_threads(2), GemmEngine::with_threads(4)];
+    let mut rng = Rng::seed_from(2);
+    let k = 17; // one mid-grid shared dim keeps the suite O(seconds)
+    for &m in ADVERSARIAL {
+        for &n in ADVERSARIAL {
+            // Aᵀ·B with A: k×m, B: k×n.
+            let a = Mat::gaussian(&mut rng, k, m, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            let base_atb = engines[0].matmul_at_b(&a, &b);
+            assert_close(
+                &base_atb,
+                &matmul_naive(&a.transpose(), &b),
+                1e-12,
+                &format!("at_b {m}x{k}x{n}"),
+            );
+            // A·Bᵀ with A: m×k, B: n×k.
+            let a2 = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b2 = Mat::gaussian(&mut rng, n, k, 1.0);
+            let base_abt = engines[0].matmul_a_bt(&a2, &b2);
+            assert_close(
+                &base_abt,
+                &matmul_naive(&a2, &b2.transpose()),
+                1e-12,
+                &format!("a_bt {m}x{k}x{n}"),
+            );
+            for e in &engines[1..] {
+                assert_eq!(base_atb.as_slice(), e.matmul_at_b(&a, &b).as_slice());
+                assert_eq!(base_abt.as_slice(), e.matmul_a_bt(&a2, &b2).as_slice());
+            }
+        }
+    }
+}
+
+/// Both SYRK forms over the adversarial (k, n) grid: exact value vs naive,
+/// exact symmetry, and pool-size determinism for the triangle-restricted
+/// packed path (the skipped-tile filter must be partition-independent).
+#[test]
+fn adversarial_syrk_matches_naive() {
+    let engines =
+        [GemmEngine::with_threads(1), GemmEngine::with_threads(2), GemmEngine::with_threads(4)];
+    let mut rng = Rng::seed_from(3);
+    for &k in ADVERSARIAL {
+        for &n in ADVERSARIAL {
+            let a = Mat::gaussian(&mut rng, k, n, 1.0);
+            let base_at = engines[0].syrk_at_a(&a);
+            assert_close(
+                &base_at,
+                &matmul_naive(&a.transpose(), &a),
+                1e-12,
+                &format!("syrk_at_a {k}x{n}"),
+            );
+            assert_eq!(base_at.symmetry_defect(), 0.0);
+            let base_aat = engines[0].syrk_a_at(&a);
+            assert_close(
+                &base_aat,
+                &matmul_naive(&a, &a.transpose()),
+                1e-12,
+                &format!("syrk_a_at {k}x{n}"),
+            );
+            assert_eq!(base_aat.symmetry_defect(), 0.0);
+            for e in &engines[1..] {
+                assert_eq!(
+                    base_at.as_slice(),
+                    e.syrk_at_a(&a).as_slice(),
+                    "syrk_at_a {k}x{n} differs at {} threads",
+                    e.threads()
+                );
+                assert_eq!(
+                    base_aat.as_slice(),
+                    e.syrk_a_at(&a).as_slice(),
+                    "syrk_a_at {k}x{n} differs at {} threads",
+                    e.threads()
+                );
+            }
+        }
+    }
+}
+
+/// Non-default blockings exercise every ragged-edge path in the packers and
+/// stay correct; a parallel engine at the same blocking stays bit-identical.
+#[test]
+fn custom_blockings_conform() {
+    let mut rng = Rng::seed_from(4);
+    for blk in [
+        GemmBlocking { mc: 8, kc: 4, nc: 4 },
+        GemmBlocking { mc: 16, kc: 7, nc: 13 },
+        GemmBlocking { mc: 24, kc: 32, nc: 20 },
+    ] {
+        let seq = GemmEngine::sequential().with_blocking(blk);
+        let par = GemmEngine::with_threads(4).with_blocking(blk);
+        for &(m, k, n) in &[(5, 9, 3), (33, 33, 33), (65, 40, 51)] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            let got = seq.matmul(&a, &b);
+            assert_close(
+                &got,
+                &matmul_naive(&a, &b),
+                1e-12,
+                &format!("blk {} {m}x{k}x{n}", blk.display()),
+            );
+            assert_eq!(got.as_slice(), par.matmul(&a, &b).as_slice());
+            let s = seq.syrk_at_a(&a);
+            assert_close(&s, &matmul_naive(&a.transpose(), &a), 1e-12, "blk syrk");
+            assert_eq!(s.as_slice(), par.syrk_at_a(&a).as_slice());
+        }
     }
 }
 
 #[test]
-fn property_matmul_matches_packed_ragged() {
-    Prop::new("broadcast vs packed").cases(64).run(|rng| {
+fn property_matmul_matches_broadcast_ragged() {
+    Prop::new("packed vs broadcast").cases(64).run(|rng| {
         let m = gens::usize_in(rng, 1, 70);
         let k = gens::usize_in(rng, 1, 70);
         let n = gens::usize_in(rng, 1, 70);
         let a = Mat::gaussian(rng, m, k, 1.0);
         let b = Mat::gaussian(rng, k, n, 1.0);
-        assert_close(&matmul(&a, &b), &packed_ref(&a, &b), 1e-9, &format!("{m}x{k}x{n}"));
+        assert_close(&matmul(&a, &b), &broadcast_ref(&a, &b), 1e-9, &format!("{m}x{k}x{n}"));
     });
 }
 
 #[test]
-fn property_transposed_forms_match_packed() {
-    Prop::new("at_b/a_bt vs packed").cases(64).run(|rng| {
+fn property_transposed_forms_match_broadcast() {
+    Prop::new("at_b/a_bt vs broadcast").cases(64).run(|rng| {
         let m = gens::usize_in(rng, 1, 40);
         let k = gens::usize_in(rng, 1, 40);
         let n = gens::usize_in(rng, 1, 40);
         // Aᵀ·B with A: k×m, B: k×n.
         let a = Mat::gaussian(rng, k, m, 1.0);
         let b = Mat::gaussian(rng, k, n, 1.0);
-        let want = packed_ref(&a.transpose(), &b);
+        let want = broadcast_ref(&a.transpose(), &b);
         assert_close(&matmul_at_b(&a, &b), &want, 1e-9, "at_b");
         // A·Bᵀ with A: m×k, B: n×k.
         let a2 = Mat::gaussian(rng, m, k, 1.0);
         let b2 = Mat::gaussian(rng, n, k, 1.0);
-        let want2 = packed_ref(&a2, &b2.transpose());
+        let want2 = broadcast_ref(&a2, &b2.transpose());
         assert_close(&matmul_a_bt(&a2, &b2), &want2, 1e-9, "a_bt");
     });
 }
 
 #[test]
-fn property_syrk_matches_packed() {
-    Prop::new("syrk vs packed").cases(64).run(|rng| {
+fn property_syrk_matches_broadcast() {
+    Prop::new("syrk vs broadcast").cases(64).run(|rng| {
         let k = gens::usize_in(rng, 1, 40);
         let n = gens::usize_in(rng, 1, 40);
         let a = Mat::gaussian(rng, k, n, 1.0);
         let got = syrk_at_a(&a);
-        assert_close(&got, &packed_ref(&a.transpose(), &a), 1e-9, "syrk_at_a");
+        assert_close(&got, &broadcast_ref(&a.transpose(), &a), 1e-9, "syrk_at_a");
         assert_eq!(got.symmetry_defect(), 0.0);
         let got2 = syrk_a_at(&a);
-        assert_close(&got2, &packed_ref(&a, &a.transpose()), 1e-9, "syrk_a_at");
+        assert_close(&got2, &broadcast_ref(&a, &a.transpose()), 1e-9, "syrk_a_at");
         assert_eq!(got2.symmetry_defect(), 0.0);
     });
 }
@@ -117,7 +237,6 @@ fn pool_sizes_1_2_8_bit_identical() {
     for &(m, k, n) in &[(3, 5, 4), (16, 16, 16), (17, 33, 29), (70, 41, 67), (128, 64, 96)] {
         let a = Mat::gaussian(&mut rng, m, k, 1.0);
         let b = Mat::gaussian(&mut rng, k, n, 1.0);
-        let mut ws = Workspace::new();
         let base_mm = engines[0].matmul(&a, &b);
         let base_syrk = engines[0].syrk_at_a(&a);
         let base_syrk2 = engines[0].syrk_a_at(&a);
@@ -142,7 +261,7 @@ fn pool_sizes_1_2_8_bit_identical() {
                 e.threads()
             );
             let mut c = Mat::zeros(0, 0);
-            e.matmul_at_b_into(&mut c, &a, &a, &mut ws);
+            e.matmul_at_b_into(&mut c, &a, &a);
             assert_eq!(
                 base_atb.as_slice(),
                 c.as_slice(),
@@ -157,7 +276,6 @@ fn pool_sizes_1_2_8_bit_identical() {
 fn into_apis_match_allocating_apis() {
     let mut rng = Rng::seed_from(3);
     let eng = GemmEngine::sequential();
-    let mut ws = Workspace::new();
     let a = Mat::gaussian(&mut rng, 13, 7, 1.0);
     let b = Mat::gaussian(&mut rng, 7, 11, 1.0);
     let mut c = Mat::zeros(0, 0);
@@ -168,11 +286,17 @@ fn into_apis_match_allocating_apis() {
     eng.syrk_at_a_into(&mut c, &a);
     assert_eq!(c.as_slice(), syrk_at_a(&a).as_slice());
 
-    eng.syrk_a_at_into(&mut c, &a, &mut ws);
+    eng.syrk_a_at_into(&mut c, &a);
     assert_eq!(c.as_slice(), syrk_a_at(&a).as_slice());
 
-    eng.matmul_a_bt_into(&mut c, &b.transpose(), &a, &mut ws);
+    eng.matmul_a_bt_into(&mut c, &b.transpose(), &a);
     assert_eq!(c.as_slice(), matmul_a_bt(&b.transpose(), &a).as_slice());
+
+    // The output Workspace type still pools iteration buffers for engines.
+    let mut ws = Workspace::new();
+    let buf = ws.take(4, 4);
+    ws.put(buf);
+    assert_eq!(ws.allocations(), 1);
 }
 
 #[test]
@@ -202,11 +326,15 @@ fn gemm_scope_is_thread_local() {
     assert_eq!(outer.calls(), 0, "other threads' GEMMs leaked into this scope");
     let _ = matmul(&a, &a);
     assert_eq!(outer.calls(), 1);
-    // And flop accounting distinguishes SYRK (n²k) from GEMM (2mnk).
+    // And flop accounting distinguishes SYRK (n²k) from GEMM (2mnk), with
+    // the SYRK sub-counter tracking the symmetric calls.
     let scope = GemmScope::begin();
     let g = Mat::gaussian(&mut rng, 7, 5, 1.0);
     let _ = syrk_at_a(&g); // n=5, k=7
     assert_eq!(scope.flops(), 5 * 5 * 7);
+    assert_eq!(scope.syrk_calls(), 1);
     let _ = matmul(&g, &syrk_at_a(&g)); // 7x5 · 5x5 → 2·7·5·5 (+ the syrk)
     assert_eq!(scope.flops(), 5 * 5 * 7 + 5 * 5 * 7 + 2 * 7 * 5 * 5);
+    assert_eq!(scope.syrk_calls(), 2);
+    assert_eq!(scope.calls(), 3, "two syrks + one matmul since this scope began");
 }

@@ -92,6 +92,7 @@ fn smoke_service_round_trip() {
         tol: 1e-7,
         gemm_threads: 1,
         stream_residuals: false,
+        gemm_block: None,
     };
     let svc = Service::start(cfg, Backend::Prism5, 7);
     let w = randmat::logspace(0.05, 1.0, 6);
