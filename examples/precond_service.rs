@@ -51,6 +51,7 @@ fn run_load(
         gemm_threads: 1,
         stream_residuals: false,
         gemm_block: None,
+        gemm_kernel: None,
     };
     // Mixed shapes: square covariance blocks (InvSqrt) and tall gradient
     // panels (Polar) — same-shape jobs batch together, mixed shapes don't.
@@ -141,6 +142,7 @@ fn main() {
         // hook) so convergence is visible while refreshes are in flight.
         stream_residuals: true,
         gemm_block: None,
+        gemm_kernel: None,
     };
     let svc = Service::start(cfg, Backend::Prism5, seed);
     let mut opt = AsyncShampoo::new(0.05, 1e-6, 5, &svc);

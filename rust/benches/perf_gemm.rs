@@ -1,21 +1,26 @@
-//! L3 substrate roofline: packed cache-blocked GEMM / SYRK throughput vs the
-//! seed broadcast kernel, sequential and row-panel parallel.
+//! L3 substrate roofline: packed cache-blocked GEMM / SYRK throughput with
+//! a **per-microkernel ablation** (scalar vs SIMD vs the seed broadcast
+//! kernel) and a **skinny-path ablation** (sketch-shaped p×n · n×n products
+//! routed vs forced through the square-blocked path).
 //!
 //! Everything PRISM does is GEMM-dominated, so the linalg substrate's
 //! GFLOP/s sets the scale of every other benchmark. This bench (a) reports
-//! the single-thread **packed-kernel speedup over the seed broadcast
-//! kernel** at n ∈ {256, 512, 1024} — the PR-over-PR trajectory metric —
-//! (b) verifies the parallel engine's scaling (target ≥ 2× at n = 512 with
-//! 4 threads) with bit-identical output asserted on every shape, and (c)
-//! emits the machine-readable `bench_out/BENCH_gemm.json` CI uploads as an
-//! artifact.
+//! single-thread GFLOP/s at n ∈ {256, 512, 1024} for every microkernel the
+//! host can run (forced via `GemmEngine::with_kernel`; target: the SIMD
+//! kernel ≥ 2× the scalar packed kernel at n = 1024), (b) reports the
+//! skinny thin-A path against the square-blocked path on p × n · n × n
+//! with p ∈ {8, 32} (p = 8 routes skinny and must win; p = 32 routes
+//! blocked and anchors the comparison), (c) verifies the parallel engine's
+//! scaling with bit-identical output asserted per kernel, and (d) emits the
+//! machine-readable `bench_out/BENCH_gemm.json` CI uploads as an artifact,
+//! including the auto-selected kernel name.
 //!
 //! Run: `cargo bench --bench perf_gemm [-- --smoke]` (`--smoke`: tiny sizes
 //! for the CI smoke step).
 
 use prism::benchkit::{banner, Bench, JsonReport, Table};
 use prism::configfmt::Value;
-use prism::linalg::gemm::{gemm_broadcast, matmul_naive, GemmEngine};
+use prism::linalg::gemm::{gemm_broadcast, matmul_naive, GemmEngine, MicroKernel};
 use prism::linalg::Mat;
 use prism::randmat;
 use prism::rng::Rng;
@@ -32,44 +37,50 @@ fn main() {
     let mut rng = Rng::seed_from(42);
     let mut report = JsonReport::create("bench_out/BENCH_gemm.json", "perf_gemm");
 
-    let seq = GemmEngine::sequential();
-    let par = GemmEngine::with_threads(4);
+    let kernels = MicroKernel::available();
+    let selected = GemmEngine::sequential().kernel();
+    println!(
+        "kernels available: [{}]; auto-selected: {}\n",
+        kernels.iter().map(|k| k.name()).collect::<Vec<_>>().join(", "),
+        selected.name()
+    );
+    report.entry(&[
+        ("op", Value::Str("meta".into())),
+        ("selected_kernel", Value::Str(selected.name().into())),
+        (
+            "kernels_available",
+            Value::Str(kernels.iter().map(|k| k.name()).collect::<Vec<_>>().join(",")),
+        ),
+    ]);
+
+    let par = GemmEngine::with_threads(4); // auto kernel — the production path
+
+    // The SIMD side of the scalar-vs-SIMD summary: the first non-scalar
+    // kernel the host can run. Deliberately NOT `selected` — under the CI
+    // matrix's PALLAS_GEMM_KERNEL=scalar override the selected kernel is
+    // scalar, but the SIMD rows are still benchmarked and must still feed
+    // the ≥ 2x acceptance check.
+    let simd_kernel = kernels.iter().copied().find(|k| *k != MicroKernel::Scalar);
 
     let mut t = Table::new(&[
         "op",
+        "kernel",
         "n",
-        "packed ms",
-        "packed GFLOP/s",
-        "broadcast ms",
+        "ms",
+        "GFLOP/s",
         "vs broadcast",
         "4T ms",
         "4T speedup",
     ]);
+    // GFLOP/s per (kernel, n) for the ablation summary lines below.
+    let mut scalar_gflops_last = 0.0f64;
+    let mut simd_gflops_last = 0.0f64;
     let mut speedup_512_4t = 0.0;
     for &n in sizes {
         let a = randmat::gaussian(&mut rng, n, n);
         let b = randmat::gaussian(&mut rng, n, n);
         let flops = 2.0 * (n as f64).powi(3);
 
-        // Correctness guards before timing: the packed kernel must match the
-        // naive reference, and the parallel engine must be bit-identical to
-        // the sequential one.
-        if n <= 256 {
-            let err = seq.matmul(&a, &b).sub(&matmul_naive(&a, &b)).max_abs();
-            assert!(err < 1e-9, "packed kernel diverges from naive at n={n}: {err}");
-        }
-        assert_eq!(
-            seq.matmul(&a, &b).as_slice(),
-            par.matmul(&a, &b).as_slice(),
-            "parallel engine output differs at n={n}"
-        );
-
-        // Sequential packed engine (allocation-free loop on a reused buffer).
-        let mut c = Mat::zeros(n, n);
-        let s_packed = bench.run(&format!("matmul_{n}"), || {
-            seq.matmul_into(&mut c, &a, &b);
-            std::hint::black_box(&c);
-        });
         // The seed broadcast kernel on the same operands (same zero-fill as
         // matmul_into performs, so the comparison is like for like).
         let mut cb = Mat::zeros(n, n);
@@ -78,40 +89,94 @@ fn main() {
             gemm_broadcast(a.as_slice(), b.as_slice(), cb.as_mut_slice(), n, n, n);
             std::hint::black_box(&cb);
         });
-        // Row-panel parallel packed engine, 4 threads.
-        let mut c4 = Mat::zeros(n, n);
-        let s_par = bench.run(&format!("matmul_{n}_4t"), || {
-            par.matmul_into(&mut c4, &a, &b);
-            std::hint::black_box(&c4);
-        });
-        let vs_broadcast = s_bcast.median_s() / s_packed.median_s();
-        let speedup_4t = s_packed.median_s() / s_par.median_s();
-        if n == 512 {
-            speedup_512_4t = speedup_4t;
-        }
-        t.row(&[
-            "C = A·B".into(),
-            n.to_string(),
-            format!("{:.2}", s_packed.median_s() * 1e3),
-            format!("{:.2}", flops / s_packed.median_s() / 1e9),
-            format!("{:.2}", s_bcast.median_s() * 1e3),
-            format!("{vs_broadcast:.2}x"),
-            format!("{:.2}", s_par.median_s() * 1e3),
-            format!("{speedup_4t:.2}x"),
-        ]);
         report.entry(&[
-            ("op", Value::Str("matmul".into())),
+            ("op", Value::Str("matmul_broadcast".into())),
             ("n", Value::Int(n as i64)),
-            ("packed_ms", Value::Float(s_packed.median_s() * 1e3)),
-            ("packed_gflops", Value::Float(flops / s_packed.median_s() / 1e9)),
-            ("broadcast_ms", Value::Float(s_bcast.median_s() * 1e3)),
-            ("broadcast_gflops", Value::Float(flops / s_bcast.median_s() / 1e9)),
-            ("speedup_packed_vs_broadcast", Value::Float(vs_broadcast)),
-            ("ms_4t", Value::Float(s_par.median_s() * 1e3)),
-            ("speedup_4t", Value::Float(speedup_4t)),
+            ("ms", Value::Float(s_bcast.median_s() * 1e3)),
+            ("gflops", Value::Float(flops / s_bcast.median_s() / 1e9)),
         ]);
 
-        // SYRK: half the flops of a general GEMM (upper triangle + mirror).
+        for &kern in &kernels {
+            let seq = GemmEngine::sequential().with_kernel(kern);
+            // Correctness guards before timing: every kernel must match the
+            // naive reference; the parallel engine must be bit-identical to
+            // the sequential one at the same kernel.
+            if n <= 256 {
+                let err = seq.matmul(&a, &b).sub(&matmul_naive(&a, &b)).max_abs();
+                assert!(err < 1e-9, "{} kernel diverges at n={n}: {err}", kern.name());
+            }
+            let par_k = GemmEngine::with_threads(4).with_kernel(kern);
+            assert_eq!(
+                seq.matmul(&a, &b).as_slice(),
+                par_k.matmul(&a, &b).as_slice(),
+                "{} parallel output differs at n={n}",
+                kern.name()
+            );
+
+            // Sequential packed engine (allocation-free loop, reused buffer).
+            let mut c = Mat::zeros(n, n);
+            let s_packed = bench.run(&format!("matmul_{}_{n}", kern.name()), || {
+                seq.matmul_into(&mut c, &a, &b);
+                std::hint::black_box(&c);
+            });
+            let gflops = flops / s_packed.median_s() / 1e9;
+            if n == *sizes.last().unwrap() {
+                if kern == MicroKernel::Scalar {
+                    scalar_gflops_last = gflops;
+                } else if Some(kern) == simd_kernel {
+                    simd_gflops_last = gflops;
+                }
+            }
+            let vs_broadcast = s_bcast.median_s() / s_packed.median_s();
+
+            // Row-panel parallel engine, 4 threads — for the selected
+            // (production) kernel only.
+            let (ms_4t, speedup_4t) = if kern == selected {
+                let mut c4 = Mat::zeros(n, n);
+                let s_par = bench.run(&format!("matmul_{n}_4t"), || {
+                    par.matmul_into(&mut c4, &a, &b);
+                    std::hint::black_box(&c4);
+                });
+                let sp = s_packed.median_s() / s_par.median_s();
+                if n == 512 {
+                    speedup_512_4t = sp;
+                }
+                report.entry(&[
+                    ("op", Value::Str("matmul_4t".into())),
+                    ("kernel", Value::Str(kern.name().into())),
+                    ("n", Value::Int(n as i64)),
+                    ("ms", Value::Float(s_par.median_s() * 1e3)),
+                    ("speedup_4t", Value::Float(sp)),
+                ]);
+                (format!("{:.2}", s_par.median_s() * 1e3), format!("{sp:.2}x"))
+            } else {
+                ("-".into(), "-".into())
+            };
+
+            t.row(&[
+                "C = A·B".into(),
+                kern.name().into(),
+                n.to_string(),
+                format!("{:.2}", s_packed.median_s() * 1e3),
+                format!("{gflops:.2}"),
+                format!("{vs_broadcast:.2}x"),
+                ms_4t,
+                speedup_4t,
+            ]);
+            report.entry(&[
+                ("op", Value::Str("matmul".into())),
+                ("kernel", Value::Str(kern.name().into())),
+                ("selected", Value::Bool(kern == selected)),
+                ("n", Value::Int(n as i64)),
+                ("ms", Value::Float(s_packed.median_s() * 1e3)),
+                ("gflops", Value::Float(gflops)),
+                ("speedup_vs_broadcast", Value::Float(vs_broadcast)),
+            ]);
+        }
+
+        // SYRK on the selected kernel: half the flops of a general GEMM
+        // (upper triangle + mirror), with 4T scaling.
+        let seq = GemmEngine::sequential();
         let mut cs = Mat::zeros(n, n);
         let s_syrk = bench.run(&format!("syrk_{n}"), || {
             seq.syrk_at_a_into(&mut cs, &a);
@@ -124,30 +189,111 @@ fn main() {
         });
         t.row(&[
             "C = Aᵀ·A".into(),
+            selected.name().into(),
             n.to_string(),
             format!("{:.2}", s_syrk.median_s() * 1e3),
             format!("{:.2}", flops / s_syrk.median_s() / 1e9),
-            "-".into(),
             "-".into(),
             format!("{:.2}", s_syrk_par.median_s() * 1e3),
             format!("{:.2}x", s_syrk.median_s() / s_syrk_par.median_s()),
         ]);
         report.entry(&[
             ("op", Value::Str("syrk".into())),
+            ("kernel", Value::Str(selected.name().into())),
             ("n", Value::Int(n as i64)),
-            ("packed_ms", Value::Float(s_syrk.median_s() * 1e3)),
-            ("packed_gflops", Value::Float(flops / s_syrk.median_s() / 1e9)),
+            ("ms", Value::Float(s_syrk.median_s() * 1e3)),
+            ("gflops", Value::Float(flops / s_syrk.median_s() / 1e9)),
             ("ms_4t", Value::Float(s_syrk_par.median_s() * 1e3)),
             ("speedup_4t", Value::Float(s_syrk.median_s() / s_syrk_par.median_s())),
         ]);
     }
     t.print();
     println!("\n(GFLOP/s on the full 2n³ count; syrk computes the upper triangle only, so");
-    println!("its effective rate appears ~2x the work it does. 'vs broadcast' is the");
+    println!("its effective rate appears ~2x the work it does. 'vs broadcast' is each");
     println!("single-thread packed kernel against the seed broadcast kernel on identical");
-    println!("operands; 4T columns are asserted bit-identical to sequential.)");
+    println!("operands; 4T columns are asserted bit-identical to sequential per kernel.)");
+
+    // ── Skinny ablation: sketch-shaped p×n · n×n, routed vs blocked ──────
+    let skinny_ps: &[usize] = &[8, 32];
+    let skinny_ns: &[usize] = if smoke { &[64] } else { &[256, 1024] };
+    let mut ts = Table::new(&["op", "p", "n", "routed ms", "GFLOP/s", "blocked ms", "speedup"]);
+    let mut skinny_speedup_p8 = 0.0f64;
+    let eng = GemmEngine::sequential();
+    for &p in skinny_ps {
+        for &n in skinny_ns {
+            let s = randmat::gaussian(&mut rng, p, n);
+            let r = randmat::gaussian(&mut rng, n, n);
+            let flops = 2.0 * (p * n * n) as f64;
+            // Guards: BOTH timed paths must match the naive reference (fp
+            // tolerance — routed and blocked reduce in different
+            // groupings), so the speedup is never computed against a
+            // broken baseline.
+            let want = matmul_naive(&s, &r);
+            let err = eng.matmul(&s, &r).sub(&want).max_abs();
+            assert!(err < 1e-9, "skinny p={p} n={n} routed path diverges: {err}");
+            let mut blocked_check = Mat::zeros(0, 0);
+            eng.matmul_blocked_into(&mut blocked_check, &s, &r);
+            let err_b = blocked_check.sub(&want).max_abs();
+            assert!(err_b < 1e-9, "skinny p={p} n={n} blocked baseline diverges: {err_b}");
+
+            let mut c = Mat::zeros(p, n);
+            let s_routed = bench.run(&format!("skinny_{p}x{n}"), || {
+                eng.matmul_into(&mut c, &s, &r);
+                std::hint::black_box(&c);
+            });
+            let mut cb = Mat::zeros(p, n);
+            let s_blocked = bench.run(&format!("skinny_blocked_{p}x{n}"), || {
+                eng.matmul_blocked_into(&mut cb, &s, &r);
+                std::hint::black_box(&cb);
+            });
+            let speedup = s_blocked.median_s() / s_routed.median_s();
+            if p == 8 && n == *skinny_ns.last().unwrap() {
+                skinny_speedup_p8 = speedup;
+            }
+            ts.row(&[
+                "S·R (sketch)".into(),
+                p.to_string(),
+                n.to_string(),
+                format!("{:.3}", s_routed.median_s() * 1e3),
+                format!("{:.2}", flops / s_routed.median_s() / 1e9),
+                format!("{:.3}", s_blocked.median_s() * 1e3),
+                format!("{speedup:.2}x"),
+            ]);
+            report.entry(&[
+                ("op", Value::Str("skinny".into())),
+                ("p", Value::Int(p as i64)),
+                ("n", Value::Int(n as i64)),
+                ("routed_ms", Value::Float(s_routed.median_s() * 1e3)),
+                ("routed_gflops", Value::Float(flops / s_routed.median_s() / 1e9)),
+                ("blocked_ms", Value::Float(s_blocked.median_s() * 1e3)),
+                ("speedup_vs_blocked", Value::Float(speedup)),
+            ]);
+        }
+    }
+    println!();
+    ts.print();
+    println!("\n(p = 8 routes the thin-A skinny path — S packed once, R streamed with no");
+    println!("copy; p = 32 routes the square-blocked path and anchors the comparison.");
+    println!("'blocked ms' forces p = 8 through the square-blocked path via");
+    println!("matmul_blocked_into, which packs all of R per product.)");
+
     if !smoke {
-        println!("n=512 matmul 4-thread speedup: {speedup_512_4t:.2}x (target ≥ 2x)");
+        println!("\nn=512 matmul 4-thread speedup: {speedup_512_4t:.2}x (target ≥ 2x)");
+        match simd_kernel {
+            Some(sk) if scalar_gflops_last > 0.0 => {
+                let ratio = simd_gflops_last / scalar_gflops_last;
+                println!(
+                    "n={} {} vs scalar: {ratio:.2}x ({simd_gflops_last:.2} vs {scalar_gflops_last:.2} GFLOP/s; target ≥ 2x)",
+                    sizes.last().unwrap(),
+                    sk.name()
+                );
+            }
+            _ => println!("(no SIMD kernel on this host — scalar only; SIMD ablation skipped)"),
+        }
+        println!(
+            "skinny p=8 n={} speedup vs square-blocked: {skinny_speedup_p8:.2}x (target > 1x)",
+            skinny_ns.last().unwrap()
+        );
     }
     match report.finish() {
         Some(path) => println!("report → {path}"),

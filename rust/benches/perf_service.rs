@@ -26,6 +26,7 @@ fn run(workers: usize, max_batch: usize, backend: Backend, jobs: usize, n: usize
         gemm_threads: 1,
         stream_residuals: false,
         gemm_block: None,
+        gemm_kernel: None,
     };
     let shapes = vec![(n, n), (n, n / 2)];
     let mut stream = GradientStream::new(42, shapes, 0.5);

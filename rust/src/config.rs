@@ -4,7 +4,7 @@
 //! present fall back to defaults so configs stay short.
 
 use crate::configfmt::{parse_toml, Value};
-use crate::linalg::gemm::GemmBlocking;
+use crate::linalg::gemm::{GemmBlocking, MicroKernel};
 use crate::util::{Error, Result};
 
 /// Which polar/inverse-root backend an optimizer uses.
@@ -149,6 +149,13 @@ pub struct ServiceConfig {
     /// changing KC/NC regroups reductions and can change low-order result
     /// bits of later computations.
     pub gemm_block: Option<GemmBlocking>,
+    /// GEMM microkernel (`service.gemm_kernel = "auto|scalar|avx2|neon"` in
+    /// TOML, `--gemm-kernel` on the CLI). `None`/"auto" keeps whatever is
+    /// already installed (auto-detection by default). Applied
+    /// process-globally by `Service::start` when the kernel is available on
+    /// the host; like `gemm_block`, a startup-time knob — kernels agree to
+    /// fp64 round-off but not bit-for-bit (FMA fuses roundings).
+    pub gemm_kernel: Option<MicroKernel>,
 }
 
 impl Default for ServiceConfig {
@@ -163,6 +170,7 @@ impl Default for ServiceConfig {
             gemm_threads: 1,
             stream_residuals: false,
             gemm_block: None,
+            gemm_kernel: None,
         }
     }
 }
@@ -189,6 +197,11 @@ impl ServiceConfig {
             // struct; a malformed blocking spec falls back to None (keep the
             // installed default) rather than aborting service start.
             c.gemm_block = GemmBlocking::parse(s).ok();
+        }
+        if let Some(s) = v.get_path("service.gemm_kernel").and_then(|x| x.as_str()) {
+            // "auto" parses to None; malformed specs likewise degrade to
+            // "keep the installed default" (same policy as gemm_block).
+            c.gemm_kernel = MicroKernel::parse(s).ok().flatten();
         }
         c
     }
@@ -264,6 +277,20 @@ backend = "prism3"
         let v = parse_toml("[service]\ngemm_block = \"banana\"\n").unwrap();
         assert_eq!(ServiceConfig::from_value(&v).gemm_block, None);
         assert_eq!(ServiceConfig::default().gemm_block, None);
+    }
+
+    #[test]
+    fn service_config_gemm_kernel_parses() {
+        let v = parse_toml("[service]\ngemm_kernel = \"scalar\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).gemm_kernel, Some(MicroKernel::Scalar));
+        let v = parse_toml("[service]\ngemm_kernel = \"avx2\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).gemm_kernel, Some(MicroKernel::Avx2));
+        // "auto" and malformed specs keep the installed default.
+        let v = parse_toml("[service]\ngemm_kernel = \"auto\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).gemm_kernel, None);
+        let v = parse_toml("[service]\ngemm_kernel = \"sse9\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).gemm_kernel, None);
+        assert_eq!(ServiceConfig::default().gemm_kernel, None);
     }
 }
 

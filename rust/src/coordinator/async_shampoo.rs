@@ -261,6 +261,7 @@ mod tests {
             gemm_threads: 1,
             stream_residuals: false,
             gemm_block: None,
+            gemm_kernel: None,
         };
         Service::start(cfg, Backend::Prism5, 9)
     }

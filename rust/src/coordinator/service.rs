@@ -113,13 +113,25 @@ impl Service {
     /// down a pool installed earlier (e.g. by the CLI's `--threads`).
     /// `cfg.gemm_block`, when set, likewise installs the process-global
     /// GEMM cache-block sizes (a startup-time tuning knob — see
-    /// [`crate::linalg::gemm::set_global_blocking`]).
+    /// [`crate::linalg::gemm::set_global_blocking`]), and `cfg.gemm_kernel`
+    /// the process-global microkernel (skipped with a warning when the
+    /// host lacks the ISA, so a shared config stays portable).
     pub fn start(cfg: ServiceConfig, backend: Backend, seed: u64) -> Service {
         if cfg.gemm_threads > 1 {
             crate::linalg::gemm::set_global_threads(cfg.gemm_threads);
         }
         if let Some(blk) = cfg.gemm_block {
             crate::linalg::gemm::set_global_blocking(blk);
+        }
+        if let Some(kern) = cfg.gemm_kernel {
+            if kern.is_available() {
+                crate::linalg::gemm::set_global_kernel(Some(kern));
+            } else {
+                eprintln!(
+                    "service: gemm kernel '{}' not available on this host; keeping auto-detection",
+                    kern.name()
+                );
+            }
         }
         let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_capacity);
         let rx = Arc::new(Mutex::new(rx));
@@ -356,6 +368,7 @@ mod tests {
             gemm_threads: 1,
             stream_residuals: false,
             gemm_block: None,
+            gemm_kernel: None,
         }
     }
 

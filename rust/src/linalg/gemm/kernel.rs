@@ -1,0 +1,389 @@
+//! Microkernels: the innermost 8×4 register tile of the packed GEMM engine,
+//! in one portable form and one SIMD form per supported ISA, plus the
+//! reference/ablation kernels ([`gemm_broadcast`], [`matmul_naive`]).
+//!
+//! # The microkernel contract
+//!
+//! Every kernel computes the same mathematical object: an `MR×NR` tile
+//! `acc[r][j] = Σ_t ap[t·MR + r] · bp[t·NR + j]` over `kb` k-steps of two
+//! **packed, k-major, zero-padded** panels (see [`super::pack`]). Each
+//! `acc[r][j]` is a single serial accumulation chain in `t` order — no
+//! kernel reassociates the reduction — so for a fixed kernel the result is
+//! a pure function of the panels, independent of thread count or row
+//! partition. Kernels may differ from each other in low-order bits:
+//! the SIMD kernels use fused multiply-add (one rounding per step) where
+//! the scalar kernel rounds the product and the sum separately. Per-kernel
+//! determinism is guaranteed; **cross-kernel bit equality is not**.
+//!
+//! # `unsafe` invariants of the intrinsic kernels
+//!
+//! The AVX2 and NEON kernels are `unsafe fn` for exactly two reasons, and
+//! both obligations are discharged structurally:
+//!
+//! 1. **ISA availability** (`#[target_feature]`): the kernel must only run
+//!    on a CPU with the feature. [`MicroKernel::is_available`] gates every
+//!    selection site — auto-detection ([`MicroKernel::detect`]), forced
+//!    selection ([`super::GemmEngine::with_kernel`] asserts it), and the
+//!    `PALLAS_GEMM_KERNEL` env override (falls back to detection).
+//! 2. **In-bounds pointer arithmetic**: each kernel asserts
+//!    `ap.len() ≥ kb·MR` and `bp.len() ≥ kb·NR` on entry; the packers
+//!    zero-pad ragged panel tails to full `MR`/`NR` width, so every load in
+//!    the k-loop is in bounds and edge tiles take no special path. All
+//!    vector loads/stores are the unaligned variants (`loadu`/`vld1q`), so
+//!    the panels only need `f64` alignment, which `Vec<f64>` guarantees.
+
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+
+/// Microkernel register tile: MR rows of A × NR columns of B per inner-loop
+/// step (MR·NR = 32 independent accumulator chains).
+pub(crate) const MR: usize = 8;
+pub(crate) const NR: usize = 4;
+
+/// Which 8×4 microkernel the blocked GEMM path dispatches to. Selected once
+/// at engine construction (or process-globally): `auto` picks the widest
+/// kernel the host supports, `--gemm-kernel {auto,scalar,avx2,neon}` /
+/// `service.gemm_kernel` / [`super::set_global_kernel`] force one for
+/// ablations and CI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MicroKernel {
+    /// Portable Rust 8×4 kernel (LLVM auto-vectorises the NR loop).
+    Scalar,
+    /// `core::arch::x86_64` AVX2+FMA kernel: one `__m256d` accumulator per
+    /// A-row, 8 vector FMAs per k-step.
+    Avx2,
+    /// `core::arch::aarch64` NEON kernel: two `float64x2_t` accumulators per
+    /// A-row, 16 vector FMAs per k-step.
+    Neon,
+}
+
+impl MicroKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MicroKernel::Scalar => "scalar",
+            MicroKernel::Avx2 => "avx2",
+            MicroKernel::Neon => "neon",
+        }
+    }
+
+    /// Parse a `--gemm-kernel` / `service.gemm_kernel` /
+    /// `PALLAS_GEMM_KERNEL` spec. `auto` (or empty) means "detect at
+    /// startup" and parses to `None`; unknown names are errors listing the
+    /// valid options.
+    pub fn parse(s: &str) -> Result<Option<MicroKernel>> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Ok(None),
+            "scalar" | "portable" => Ok(Some(MicroKernel::Scalar)),
+            "avx2" => Ok(Some(MicroKernel::Avx2)),
+            "neon" => Ok(Some(MicroKernel::Neon)),
+            other => Err(Error::Parse(format!(
+                "unknown gemm kernel '{other}' (want auto|scalar|avx2|neon)"
+            ))),
+        }
+    }
+
+    /// Whether this kernel can run on the current host (compile-time ISA
+    /// plus, for AVX2, runtime feature detection). `Scalar` is always
+    /// available; every selection path checks this before installing a
+    /// kernel, which is what makes calling the `unsafe` intrinsics sound.
+    pub fn is_available(&self) -> bool {
+        match self {
+            MicroKernel::Scalar => true,
+            MicroKernel::Avx2 => avx2_available(),
+            // NEON is a baseline aarch64 feature — no runtime probe needed.
+            MicroKernel::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// The widest kernel available on this host.
+    pub fn detect() -> MicroKernel {
+        if MicroKernel::Avx2.is_available() {
+            MicroKernel::Avx2
+        } else if MicroKernel::Neon.is_available() {
+            MicroKernel::Neon
+        } else {
+            MicroKernel::Scalar
+        }
+    }
+
+    /// Every kernel that can run on this host (always includes `Scalar`).
+    /// The conformance suite and the `perf_gemm` ablation iterate this.
+    pub fn available() -> Vec<MicroKernel> {
+        [MicroKernel::Scalar, MicroKernel::Avx2, MicroKernel::Neon]
+            .into_iter()
+            .filter(|k| k.is_available())
+            .collect()
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Run one `MR×NR` micro-tile on the selected kernel. The match is a
+/// perfectly predicted 2–3-way branch per tile — noise next to the
+/// `kb·MR·NR` multiply-adds behind it. An ISA-gated variant that cannot be
+/// compiled on this target falls through to the scalar kernel; the
+/// availability checks at every selection site keep that arm from being
+/// reached in practice (and it would still be correct if it were).
+#[inline(always)]
+pub(super) fn micro_tile(kern: MicroKernel, kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
+    match kern {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` is only installed after `is_available()` confirmed
+        // AVX2+FMA at runtime (see the module docs); bounds are asserted
+        // inside the kernel.
+        MicroKernel::Avx2 => unsafe { micro_tile_avx2(kb, ap, bp) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `Neon` is only selectable on aarch64, where NEON is a
+        // baseline feature; bounds are asserted inside the kernel.
+        MicroKernel::Neon => unsafe { micro_tile_neon(kb, ap, bp) },
+        _ => micro_tile_scalar(kb, ap, bp),
+    }
+}
+
+/// Portable 8×4 microkernel. All 32 accumulators are independent and the
+/// two operand streams are contiguous, so LLVM keeps `acc` in vector
+/// registers and turns the inner `j` loop into FMAs (no float-reassociation
+/// licence needed — each `acc[r][j]` is its own serial chain).
+#[inline(always)]
+fn micro_tile_scalar(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
+    let mut acc = [0.0f64; MR * NR];
+    let ap = &ap[..kb * MR];
+    let bp = &bp[..kb * NR];
+    for t in 0..kb {
+        let at = &ap[t * MR..t * MR + MR];
+        let bt = &bp[t * NR..t * NR + NR];
+        for r in 0..MR {
+            let ar = at[r];
+            for j in 0..NR {
+                acc[r * NR + j] += ar * bt[j];
+            }
+        }
+    }
+    acc
+}
+
+/// AVX2+FMA 8×4 microkernel: `acc[r]` is one `__m256d` holding the tile's
+/// r-th row; each k-step broadcasts `a[r]` and issues one fused
+/// multiply-add per row (8 FMAs per step).
+///
+/// # Safety
+///
+/// Caller must ensure the host supports AVX2 and FMA (checked by
+/// [`MicroKernel::is_available`] at every selection site). In-bounds access
+/// is self-enforced: the entry assertions plus the packers' zero-padded
+/// tails guarantee every `loadu` reads `kb·MR`/`kb·NR` valid elements;
+/// unaligned loads/stores mean no alignment obligation beyond `f64`'s.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn micro_tile_avx2(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
+    use core::arch::x86_64::{
+        __m256d, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_set1_pd, _mm256_setzero_pd,
+        _mm256_storeu_pd,
+    };
+    assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
+    let zero = _mm256_setzero_pd();
+    let mut acc: [__m256d; MR] = [zero; MR];
+    for t in 0..kb {
+        let bv = _mm256_loadu_pd(bp.as_ptr().add(t * NR));
+        let at = ap.as_ptr().add(t * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            *accr = _mm256_fmadd_pd(_mm256_set1_pd(*at.add(r)), bv, *accr);
+        }
+    }
+    let mut out = [0.0f64; MR * NR];
+    for (r, accr) in acc.iter().enumerate() {
+        _mm256_storeu_pd(out.as_mut_ptr().add(r * NR), *accr);
+    }
+    out
+}
+
+/// NEON 8×4 microkernel: the tile's r-th row is a `float64x2_t` pair
+/// (`lo[r]`, `hi[r]`); each k-step issues two `vfmaq_n_f64` per row
+/// (16 vector FMAs per step).
+///
+/// # Safety
+///
+/// aarch64-only (`cfg`-gated), where NEON is a baseline feature, so the
+/// `target_feature` obligation holds on every aarch64 host. Bounds are
+/// asserted on entry and the packers zero-pad panel tails, keeping every
+/// `vld1q_f64`/`vst1q_f64` in bounds; both are unaligned-capable.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn micro_tile_neon(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
+    use core::arch::aarch64::{vdupq_n_f64, vfmaq_n_f64, vld1q_f64, vst1q_f64};
+    assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
+    let zero = vdupq_n_f64(0.0);
+    let mut lo = [zero; MR];
+    let mut hi = [zero; MR];
+    for t in 0..kb {
+        let b0 = vld1q_f64(bp.as_ptr().add(t * NR));
+        let b1 = vld1q_f64(bp.as_ptr().add(t * NR + 2));
+        let at = ap.as_ptr().add(t * MR);
+        for r in 0..MR {
+            let ar = *at.add(r);
+            lo[r] = vfmaq_n_f64(lo[r], b0, ar);
+            hi[r] = vfmaq_n_f64(hi[r], b1, ar);
+        }
+    }
+    let mut out = [0.0f64; MR * NR];
+    for r in 0..MR {
+        vst1q_f64(out.as_mut_ptr().add(r * NR), lo[r]);
+        vst1q_f64(out.as_mut_ptr().add(r * NR + 2), hi[r]);
+    }
+    out
+}
+
+// ───────────────── reference / ablation kernels ──────────────────
+
+/// The seed's broadcast-FMA kernel: `C[m x n] += A[m x k] · B[k x n]`, both
+/// row-major. Kept as the §Perf ablation baseline (`perf_gemm` reports the
+/// packed kernels' speedups over it) and as a second independent
+/// implementation for conformance cross-checks.
+///
+/// Loop order (jc, kc, i, t, j): the innermost `crow[j] += a_it * brow[j]`
+/// has no cross-iteration dependence, so rustc vectorises it into FMAs. The
+/// (KC2 × NC) B panel stays hot in L2 across the whole i sweep; a 4-row
+/// micro-tile quarters the B bandwidth. Unlike the packed kernels it never
+/// copies its operands — which is exactly what costs it at large n: A and C
+/// rows are touched with stride n, so TLB/cache-line utilisation degrades
+/// where the packed kernels keep streaming contiguous panels.
+pub fn gemm_broadcast(a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+    const NC: usize = 512; // B-panel columns (NC·KC2·8B = 512 KiB ≤ L2)
+    const KC2: usize = 256; // B-panel rows
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        for k0 in (0..k).step_by(KC2) {
+            let k1 = (k0 + KC2).min(k);
+            let mut i = 0;
+            while i + 4 <= m {
+                let (rows01, rows23) = (&mut c[i * n..(i + 4) * n]).split_at_mut(2 * n);
+                let (row0, row1) = rows01.split_at_mut(n);
+                let (row2, row3) = rows23.split_at_mut(n);
+                let c0 = &mut row0[j0..j1];
+                let c1 = &mut row1[j0..j1];
+                let c2 = &mut row2[j0..j1];
+                let c3 = &mut row3[j0..j1];
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                for t in k0..k1 {
+                    let (av0, av1, av2, av3) = (a0[t], a1[t], a2[t], a3[t]);
+                    let brow = &b[t * n + j0..t * n + j1];
+                    for ((((c0v, c1v), c2v), c3v), bv) in c0
+                        .iter_mut()
+                        .zip(c1.iter_mut())
+                        .zip(c2.iter_mut())
+                        .zip(c3.iter_mut())
+                        .zip(brow)
+                    {
+                        *c0v += av0 * bv;
+                        *c1v += av1 * bv;
+                        *c2v += av2 * bv;
+                        *c3v += av3 * bv;
+                    }
+                }
+                i += 4;
+            }
+            while i + 2 <= m {
+                let (row0, row1) = (&mut c[i * n..(i + 2) * n]).split_at_mut(n);
+                let c0 = &mut row0[j0..j1];
+                let c1 = &mut row1[j0..j1];
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                for t in k0..k1 {
+                    let (av0, av1) = (a0[t], a1[t]);
+                    let brow = &b[t * n + j0..t * n + j1];
+                    for ((c0v, c1v), bv) in c0.iter_mut().zip(c1.iter_mut()).zip(brow) {
+                        *c0v += av0 * bv;
+                        *c1v += av1 * bv;
+                    }
+                }
+                i += 2;
+            }
+            if i < m {
+                let crow = &mut c[i * n + j0..i * n + j1];
+                for t in k0..k1 {
+                    let av = a[i * k + t];
+                    let brow = &b[t * n + j0..t * n + j1];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reference (naive) matmul for tests.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for t in 0..k {
+            let av = a[(i, t)];
+            for j in 0..n {
+                c[(i, j)] += av * b[(t, j)];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        assert_eq!(MicroKernel::parse("auto").unwrap(), None);
+        assert_eq!(MicroKernel::parse("").unwrap(), None);
+        for k in [MicroKernel::Scalar, MicroKernel::Avx2, MicroKernel::Neon] {
+            assert_eq!(MicroKernel::parse(k.name()).unwrap(), Some(k));
+        }
+        assert_eq!(MicroKernel::parse("AVX2").unwrap(), Some(MicroKernel::Avx2));
+        assert!(MicroKernel::parse("sse9").is_err());
+        let err = MicroKernel::parse("sse9").unwrap_err().to_string();
+        assert!(err.contains("scalar"), "{err}");
+    }
+
+    #[test]
+    fn scalar_always_available_and_detect_is_available() {
+        assert!(MicroKernel::Scalar.is_available());
+        assert!(MicroKernel::detect().is_available());
+        let avail = MicroKernel::available();
+        assert!(avail.contains(&MicroKernel::Scalar));
+        assert!(avail.contains(&MicroKernel::detect()));
+    }
+
+    #[test]
+    fn micro_tiles_agree_with_scalar() {
+        // Every available SIMD kernel must match the scalar kernel on the
+        // same packed panels to fp64 round-off (FMA keeps them from being
+        // bit-identical — documented; cross-kernel bit equality is NOT part
+        // of the contract).
+        let mut rng = Rng::seed_from(1);
+        for kb in [1usize, 2, 7, 33] {
+            let ap: Vec<f64> = (0..kb * MR).map(|_| rng.normal()).collect();
+            let bp: Vec<f64> = (0..kb * NR).map(|_| rng.normal()).collect();
+            let want = micro_tile(MicroKernel::Scalar, kb, &ap, &bp);
+            for kern in MicroKernel::available() {
+                let got = micro_tile(kern, kb, &ap, &bp);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-12, "{} kb={kb}: {g} vs {w}", kern.name());
+                }
+            }
+        }
+    }
+}

@@ -1,52 +1,80 @@
-//! Packed, cache-blocked, parallel GEMM and symmetric rank-k engine.
+//! Packed, cache-blocked, parallel GEMM and symmetric rank-k engine with
+//! runtime-dispatched SIMD microkernels and skinny-operand fast paths.
 //!
 //! This is the O(n³) hot path of every Newton–Schulz-like iteration. The
-//! layer has four pieces:
+//! module is a small tree, one file per layer:
 //!
-//! 1. **The kernel** — a BLIS-style **packed, cache-blocked** design:
-//!    three blocking loops (NC columns of B × KC rows of B × MC rows of A)
-//!    wrap an 8×4 register-tiled microkernel. Before the microkernel runs,
-//!    the current A block is packed into MR(=8)-row panels and the current
-//!    B block into NR(=4)-column panels, both laid out k-major and
-//!    zero-padded to full tiles, so the innermost loop streams two
-//!    contiguous buffers and performs 32 independent `acc += a·b` updates
-//!    per k step — a dependence-free form LLVM auto-vectorises into FMAs.
-//!    Packing reads the source through (row, col) strides, so the
-//!    transposed products `AᵀB`, `ABᵀ` and both SYRKs are served by the
-//!    same kernel **without materialising any transpose**.
-//! 2. **The blocking knobs** — [`GemmBlocking`] holds the `(MC, KC, NC)`
-//!    cache-block sizes (defaults 128×256×512: an MC×KC A block is 256 KiB
-//!    ≈ L2, a KC×NC B block is 1 MiB ≈ L2/L3, an MR×KC A panel is 16 KiB
-//!    ≈ half of L1). Tune per machine via
-//!    [`set_global_blocking`] (`--gemm-block MCxKCxNC` on the CLI,
-//!    `service.gemm_block` in TOML) or per engine via
-//!    [`GemmEngine::with_blocking`]. Results are deterministic for a fixed
-//!    blocking; changing KC or NC regroups the reduction and may change
-//!    low-order bits (a startup-time knob, not a per-call one).
-//! 3. **The engine** — [`GemmEngine`] partitions the rows of C into
-//!    contiguous panels and runs the packed kernel on each panel over the
-//!    crate's [`crate::threads::ThreadPool`] (via
-//!    [`crate::threads::scoped`]). For any fixed output element, the
-//!    accumulation order is `(NC block, KC block, k)` with one
-//!    register-accumulated partial sum per KC block — independent of how
-//!    the rows were partitioned — so results are **bit-identical for every
-//!    pool size**. With `threads() == 1` (the default global engine) no
-//!    pool is touched and the call degrades to the sequential kernel.
-//!    SYRK runs the same kernel restricted to micro-tiles that touch the
-//!    upper triangle (≈ half the flops) and mirrors the result, staying
-//!    exactly symmetric by construction.
-//! 4. **The workspace API** — `*_into` variants write into caller-owned
-//!    output buffers (reshaped in place, allocation reused). [`Workspace`]
-//!    is a small buffer pool for iteration temporaries; the A/B packing
-//!    buffers are drawn from a per-thread [`Workspace`] of their own and
-//!    reused across calls, so steady-state GEMM traffic performs **zero
-//!    heap allocation** (the iteration engines' ping-pong buffers are
-//!    likewise pooled, asserted by the tier-1/matfn allocation tests).
+//! * **`mod.rs`** (this file) — the public API: [`GemmEngine`], the
+//!   [`Workspace`] buffer pool, the [`GemmBlocking`]/[`MicroKernel`] knobs
+//!   and their process-global defaults, GEMM-call accounting
+//!   ([`GemmCounter`]/[`GemmScope`]), and the shape-based **dispatch** that
+//!   routes each product to the blocked or skinny path.
+//! * **[`pack`]** — panel packing: cache blocks of the (possibly strided)
+//!   operands are copied into contiguous k-major panels, zero-padded to
+//!   full MR(=8)-row / NR(=4)-column tiles. Packing reads sources through
+//!   (row, col) strides, so `AᵀB`, `ABᵀ` and both SYRKs run the same
+//!   kernels **without materialising any transpose**.
+//! * **[`kernel`]** — the 8×4 microkernels behind [`MicroKernel`]: the
+//!   portable scalar kernel, an AVX2+FMA kernel (`core::arch::x86_64`),
+//!   and a NEON kernel (`core::arch::aarch64`), plus the reference
+//!   kernels [`gemm_broadcast`] and [`matmul_naive`]. The `unsafe`
+//!   invariants of the intrinsic kernels (ISA availability, zero-padded
+//!   panel bounds, no alignment requirement) are documented there.
+//! * **[`parallel`]** — row-panel scheduling: C's rows are partitioned into
+//!   contiguous panels over the crate's [`crate::threads::ThreadPool`], and
+//!   each panel runs the three blocking loops (NC × KC × MC) around the
+//!   dispatched microkernel.
+//! * **[`skinny`]** — fast paths for products whose smallest dimension fits
+//!   inside one micro-tile: a packed GEMV (`n == 1` / `m == 1`) and
+//!   thin-A/thin-B kernels that pack only the small operand and stream the
+//!   dominant one exactly once (the sketch path `p×n · n×n`, p ≤ 8).
 //!
-//! The seed's broadcast-FMA kernel is kept as [`gemm_broadcast`]: it is the
-//! §Perf ablation baseline (`perf_gemm` reports packed-vs-broadcast
-//! speedups) and a second independent implementation the conformance suite
-//! can cross-check against, next to [`matmul_naive`].
+//! # Dispatch rules
+//!
+//! Each call resolves its configuration once — blocking from
+//! [`GemmEngine::with_blocking`] or [`global_blocking`], microkernel from
+//! [`GemmEngine::with_kernel`] or [`global_kernel`] — then routes purely on
+//! shape and operand form:
+//!
+//! 1. `m == 0 || n == 0 || k == 0` → nothing to do.
+//! 2. general products with `m ≤ MR` → [`skinny::thin_a`]; `n ≤ NR` →
+//!    [`skinny::thin_b`] (SYRK always takes the blocked path — its
+//!    upper-triangle filter lives there).
+//! 3. everything else → the blocked path, row-panel parallel when the
+//!    engine has a pool and `m` is large enough to split.
+//!
+//! Routing never depends on thread count, blocking, or kernel, so every
+//! engine configuration agrees on the path taken. `GemmBlocking`'s
+//! micro-tile floors (MC ≥ MR, NC ≥ NR) therefore apply only where the
+//! blocked path's panel grid exists: a 1-column GEMV no longer packs the
+//! whole of A into MR-padded panels under an NR-widened B block — the
+//! skinny path packs only the tiny k×NR B panel (its last NR−1 lanes
+//! zero-padded; ≤ 4k doubles, cache-resident) and streams A uncopied.
+//! Tall thin-B products still split their rows over the engine's pool.
+//!
+//! # Kernel selection
+//!
+//! [`MicroKernel`] is a startup-time knob with the same contract as the
+//! blocking: `auto` (the default) picks the widest kernel the host
+//! supports via `is_x86_feature_detected!` (NEON is baseline on aarch64);
+//! `--gemm-kernel {auto,scalar,avx2,neon}` on the CLI,
+//! `service.gemm_kernel` in TOML, the `PALLAS_GEMM_KERNEL` env var (read
+//! once, for CI matrices), or [`GemmEngine::with_kernel`] per engine force
+//! a variant for ablations and tests. Results are bit-identical across
+//! pool sizes *for a fixed kernel*; kernels may differ from each other in
+//! low-order bits (FMA fuses the product-add rounding), so cross-kernel
+//! bit equality is explicitly **not** part of the contract — conformance
+//! cross-checks run at tolerance instead.
+//!
+//! # Workspaces
+//!
+//! `*_into` variants write into caller-owned output buffers (reshaped in
+//! place, allocation reused). [`Workspace`] is a best-fit buffer pool for
+//! iteration temporaries; the packing buffers are drawn from a per-thread
+//! [`Workspace`] of their own and reused across calls, so steady-state GEMM
+//! traffic performs **zero heap allocation** (the iteration engines'
+//! ping-pong buffers and the sketch panels are likewise pooled, asserted by
+//! the tier-1/matfn allocation tests).
 //!
 //! GEMM-call counting: the PRISM paper reports costs in units of GEMMs; the
 //! engines count their invocations through [`GemmCounter`]. Counts are kept
@@ -56,12 +84,20 @@
 //! half is a copy, not recomputation — and is additionally tallied under
 //! [`GemmCounter::syrk_calls`] so cost models can separate the two shapes.
 
+mod kernel;
+mod pack;
+mod parallel;
+mod skinny;
+
+pub use kernel::{gemm_broadcast, matmul_naive, MicroKernel};
+pub(crate) use kernel::{MR, NR};
+
 use super::Mat;
-use crate::threads::{scoped, ThreadPool};
+use crate::threads::ThreadPool;
 use crate::util::{Error, Result};
 use std::cell::{Cell, RefCell};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Process-wide GEMM counters (cheap relaxed atomics) plus thread-local
 /// shadows for race-free per-run accounting.
@@ -151,11 +187,15 @@ impl GemmScope {
 /// buffer for reuse. Contents of a taken buffer are unspecified — every
 /// `*_into` kernel overwrites its full output.
 ///
-/// `take` prefers a free buffer whose backing allocation already fits the
-/// requested shape, so a steady state of same-shape take/put cycles performs
-/// **zero heap allocations**. [`Workspace::allocations`] counts the takes
-/// that could *not* be served that way — the persistent-solver tests assert
-/// it stays flat from the second same-shape call onward.
+/// `take` is **best-fit**: it hands out the *smallest* free buffer whose
+/// backing allocation already fits the request, so a pool serving mixed
+/// sizes (an engine's n×n ping-pong buffers next to the sketch path's p×n
+/// panels and 1×q trace rows) never gives a large buffer to a small request
+/// and then has to grow a small buffer for a large one. A steady state of
+/// same-shape take/put cycles therefore performs **zero heap allocations**.
+/// [`Workspace::allocations`] counts the takes that could *not* be served
+/// from the pool — the persistent-solver tests assert it stays flat from
+/// the second same-shape call onward.
 #[derive(Default)]
 pub struct Workspace {
     free: Vec<Mat>,
@@ -170,15 +210,34 @@ impl Workspace {
     /// Take a rows×cols buffer (contents unspecified).
     pub fn take(&mut self, rows: usize, cols: usize) -> Mat {
         let need = rows * cols;
-        if let Some(i) = self.free.iter().position(|m| m.capacity() >= need) {
+        // Best fit: smallest free buffer that already holds `need` elems.
+        let mut best: Option<(usize, usize)> = None;
+        for (i, m) in self.free.iter().enumerate() {
+            let cap = m.capacity();
+            let better = match best {
+                None => cap >= need,
+                Some((_, c)) => cap >= need && cap < c,
+            };
+            if better {
+                best = Some((i, cap));
+            }
+        }
+        if let Some((i, _)) = best {
             let mut m = self.free.swap_remove(i);
             m.reset(rows, cols);
             return m;
         }
-        // Miss: either grow an undersized free buffer or allocate fresh.
+        // Miss: grow the largest free buffer (least new memory) or allocate.
         self.allocs += 1;
-        match self.free.pop() {
-            Some(mut m) => {
+        let grow = self
+            .free
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, m)| m.capacity())
+            .map(|(i, _)| i);
+        match grow {
+            Some(i) => {
+                let mut m = self.free.swap_remove(i);
                 m.reset(rows, cols);
                 m
             }
@@ -207,22 +266,18 @@ impl Workspace {
 }
 
 thread_local! {
-    /// Per-thread pool for the A/B packing buffers: each pool worker (and
-    /// the caller, on the sequential path) reuses its own pair across every
-    /// GEMM it runs, so steady-state packing is allocation-free without any
-    /// cross-thread sharing.
+    /// Per-thread pool for the packing buffers: each pool worker (and the
+    /// caller, on the sequential and skinny paths) reuses its own buffers
+    /// across every GEMM it runs, so steady-state packing is
+    /// allocation-free without any cross-thread sharing.
     static PACK_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
 }
 
 // ───────────────────────── blocking knobs ──────────────────────────
 
-/// Microkernel register tile: MR rows of A × NR columns of B per inner-loop
-/// step (MR·NR = 32 independent FMA accumulators).
-const MR: usize = 8;
-const NR: usize = 4;
-
-/// Cache-block sizes of the packed kernel (see the module docs for the
-/// cache-level rationale behind the defaults).
+/// Cache-block sizes of the blocked packed path (see the module docs for
+/// the cache-level rationale behind the defaults). The skinny paths ignore
+/// these — they pack at most one panel and stream the other operand.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GemmBlocking {
     /// Rows of A per packed block (L2 resident together with one B panel).
@@ -268,6 +323,10 @@ impl GemmBlocking {
     }
 
     /// Blocking with the micro-tile minimums enforced (MC ≥ MR, NC ≥ NR).
+    /// Applied only where panels exist — on the blocked path. The skinny
+    /// paths route *before* clamping, so the NC ≥ NR floor never forces a
+    /// 1-column GEMV to pack NR-padded B columns (the regression the
+    /// dims-of-one conformance tests pin down).
     fn clamped(self) -> GemmBlocking {
         GemmBlocking { mc: self.mc.max(MR), kc: self.kc.max(1), nc: self.nc.max(NR) }
     }
@@ -299,15 +358,93 @@ pub fn global_blocking() -> GemmBlocking {
     }
 }
 
+// ───────────────────────── kernel knob ──────────────────────────
+
+/// Process-global kernel override: 0 = unset (auto-detect), else the
+/// encoded [`MicroKernel`]. Read lock-free on the per-GEMM path.
+static GLOBAL_KERNEL: AtomicU8 = AtomicU8::new(0);
+
+fn encode_kernel(k: MicroKernel) -> u8 {
+    match k {
+        MicroKernel::Scalar => 1,
+        MicroKernel::Avx2 => 2,
+        MicroKernel::Neon => 3,
+    }
+}
+
+fn decode_kernel(v: u8) -> Option<MicroKernel> {
+    match v {
+        1 => Some(MicroKernel::Scalar),
+        2 => Some(MicroKernel::Avx2),
+        3 => Some(MicroKernel::Neon),
+        _ => None,
+    }
+}
+
+/// Install a process-global microkernel (`--gemm-kernel` on the CLI,
+/// `service.gemm_kernel` in TOML); `None` returns to auto-detection. Like
+/// the blocking, a startup-time knob: kernels agree to fp64 round-off but
+/// not bit-for-bit (FMA), so switch before computing anything you intend to
+/// compare bitwise.
+///
+/// # Panics
+///
+/// If the kernel is not available on this host — callers (CLI, service
+/// config) check [`MicroKernel::is_available`] first and report the error
+/// on their own channel.
+pub fn set_global_kernel(k: Option<MicroKernel>) {
+    match k {
+        Some(k) => {
+            assert!(
+                k.is_available(),
+                "gemm kernel '{}' is not available on this host",
+                k.name()
+            );
+            GLOBAL_KERNEL.store(encode_kernel(k), Ordering::Relaxed);
+        }
+        None => GLOBAL_KERNEL.store(0, Ordering::Relaxed),
+    }
+}
+
+/// The microkernel engines run with when no per-engine override is set:
+/// the global override if installed, otherwise the auto-detected default
+/// (which itself honours `PALLAS_GEMM_KERNEL`, read once per process).
+pub fn global_kernel() -> MicroKernel {
+    decode_kernel(GLOBAL_KERNEL.load(Ordering::Relaxed)).unwrap_or_else(auto_kernel)
+}
+
+/// The auto-detected kernel, resolved once per process. `PALLAS_GEMM_KERNEL`
+/// overrides detection (the CI matrix forces `scalar` through it so the
+/// portable path stays green on SIMD-capable runners); an unavailable or
+/// malformed value falls back to detection with a warning on stderr.
+fn auto_kernel() -> MicroKernel {
+    static AUTO: OnceLock<MicroKernel> = OnceLock::new();
+    *AUTO.get_or_init(|| match std::env::var("PALLAS_GEMM_KERNEL") {
+        Ok(v) => match MicroKernel::parse(&v) {
+            Ok(Some(k)) if k.is_available() => k,
+            Ok(Some(k)) => {
+                eprintln!(
+                    "PALLAS_GEMM_KERNEL={v}: kernel '{}' not available on this host; auto-detecting",
+                    k.name()
+                );
+                MicroKernel::detect()
+            }
+            Ok(None) => MicroKernel::detect(),
+            Err(e) => {
+                eprintln!("PALLAS_GEMM_KERNEL: {e}; auto-detecting");
+                MicroKernel::detect()
+            }
+        },
+        Err(_) => MicroKernel::detect(),
+    })
+}
+
 // ───────────────────────── engine ──────────────────────────
 
-/// Minimum C rows per parallel panel — below this the dispatch overhead
-/// beats the kernel time, so small products stay sequential.
-const MIN_PANEL_ROWS: usize = 16;
-
 /// A strided read-only view of one GEMM operand: element `(i, j)` lives at
-/// `data[i·rs + j·cs]`. Lets the packing routines serve `A`, `Aᵀ`, `B`, `Bᵀ`
-/// from the original buffers — no transpose is ever materialised.
+/// `data[i·rs + j·cs]`. Lets the packing routines and the skinny kernels
+/// serve `A`, `Aᵀ`, `B`, `Bᵀ` from the original buffers — no transpose is
+/// ever materialised.
 #[derive(Clone, Copy)]
 struct Operand<'a> {
     data: &'a [f64],
@@ -332,20 +469,24 @@ impl<'a> Operand<'a> {
 /// row-panel parallel over a fixed [`ThreadPool`]. Cloning shares the pool.
 ///
 /// Determinism: results are bit-identical for every thread count at a fixed
-/// [`GemmBlocking`] (see the module docs); the engine exists so callers can
-/// *choose* their parallelism, not so they can get different answers.
+/// ([`GemmBlocking`], [`MicroKernel`]) pair (see the module docs); the
+/// engine exists so callers can *choose* their parallelism and kernel, not
+/// so they can get different answers.
 #[derive(Clone, Default)]
 pub struct GemmEngine {
     pool: Option<Arc<ThreadPool>>,
     /// Engine-local blocking override; `None` reads [`global_blocking`] at
     /// each call.
     blocking: Option<GemmBlocking>,
+    /// Engine-local microkernel override; `None` reads [`global_kernel`] at
+    /// each call.
+    kernel: Option<MicroKernel>,
 }
 
 impl GemmEngine {
     /// Sequential engine (no pool, no dispatch overhead).
     pub fn sequential() -> GemmEngine {
-        GemmEngine { pool: None, blocking: None }
+        GemmEngine::default()
     }
 
     /// Engine with its own pool of `threads` workers (1 → sequential).
@@ -353,7 +494,10 @@ impl GemmEngine {
         if threads <= 1 {
             GemmEngine::sequential()
         } else {
-            GemmEngine { pool: Some(Arc::new(ThreadPool::new(threads))), blocking: None }
+            GemmEngine {
+                pool: Some(Arc::new(ThreadPool::new(threads))),
+                ..GemmEngine::default()
+            }
         }
     }
 
@@ -361,6 +505,24 @@ impl GemmEngine {
     /// knob (benchmark sweeps, tests isolating themselves from the global).
     pub fn with_blocking(mut self, blk: GemmBlocking) -> GemmEngine {
         self.blocking = Some(blk.clamped());
+        self
+    }
+
+    /// Pin this engine to a fixed microkernel instead of the global knob —
+    /// the forced-selection hook the per-kernel conformance suite and the
+    /// `perf_gemm` ablation run on.
+    ///
+    /// # Panics
+    ///
+    /// If `kern` is not available on this host; iterate
+    /// [`MicroKernel::available`] to stay portable.
+    pub fn with_kernel(mut self, kern: MicroKernel) -> GemmEngine {
+        assert!(
+            kern.is_available(),
+            "gemm kernel '{}' is not available on this host",
+            kern.name()
+        );
+        self.kernel = Some(kern);
         self
     }
 
@@ -372,6 +534,11 @@ impl GemmEngine {
     /// The blocking this engine's kernels run with.
     pub fn blocking(&self) -> GemmBlocking {
         self.blocking.unwrap_or_else(global_blocking)
+    }
+
+    /// The microkernel this engine's blocked path dispatches to.
+    pub fn kernel(&self) -> MicroKernel {
+        self.kernel.unwrap_or_else(global_kernel)
     }
 
     /// `C = A·B` into a caller-owned buffer (reshaped in place).
@@ -409,7 +576,7 @@ impl GemmEngine {
         self.dispatch(Operand::normal(a), Operand::transposed(b), c.as_mut_slice(), m, n, k, false);
     }
 
-    /// Symmetric rank-k `C = AᵀA` into `c`: the packed kernel restricted to
+    /// Symmetric rank-k `C = AᵀA` into `c`: the blocked kernel restricted to
     /// upper-triangle micro-tiles (≈ n²k flops), mirrored afterwards —
     /// exactly symmetric by construction.
     pub fn syrk_at_a_into(&self, c: &mut Mat, a: &Mat) {
@@ -429,6 +596,34 @@ impl GemmEngine {
         c.fill_with(0.0);
         self.dispatch(Operand::normal(a), Operand::transposed(a), c.as_mut_slice(), m, m, k, true);
         mirror_upper(c);
+    }
+
+    /// `C = A·B` forced through the general blocked path, skipping the
+    /// skinny routing. **§Perf ablation only** — this is the baseline the
+    /// `perf_gemm` skinny rows compare against; it is never faster than
+    /// [`GemmEngine::matmul_into`].
+    pub fn matmul_blocked_into(&self, c: &mut Mat, a: &Mat, b: &Mat) {
+        assert_eq!(a.cols(), b.rows(), "matmul: {:?} x {:?}", a.shape(), b.shape());
+        let (m, k) = a.shape();
+        let n = b.cols();
+        GemmCounter::record(m, n, k);
+        c.reset(m, n);
+        c.fill_with(0.0);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        parallel::row_panels(
+            self.pool.as_deref(),
+            Operand::normal(a),
+            Operand::normal(b),
+            c.as_mut_slice(),
+            m,
+            n,
+            k,
+            self.blocking().clamped(),
+            self.kernel(),
+            false,
+        );
     }
 
     /// Allocating convenience forms of the `*_into` calls.
@@ -458,12 +653,14 @@ impl GemmEngine {
         c
     }
 
-    /// `C += op(A)·op(B)`, dispatched over row panels of C. Each panel runs
-    /// the packed kernel over its own rows; for any fixed output element the
-    /// accumulation order depends only on the (global) blocking grid, never
-    /// on the partition, so the thread count cannot change any output bit.
-    /// With `upper_only`, micro-tiles strictly below the diagonal are
+    /// `C += op(A)·op(B)`: resolve the kernel once, route skinny shapes to
+    /// the streaming paths, and send everything else to the blocked path
+    /// (row-panel parallel when a pool is attached). See "Dispatch rules"
+    /// in the module docs; routing depends only on shape and operand form,
+    /// never on pool size, so the thread count cannot change any output
+    /// bit. With `upper_only`, micro-tiles strictly below the diagonal are
     /// skipped (the caller mirrors the upper triangle afterwards).
+    #[allow(clippy::too_many_arguments)]
     fn dispatch(
         &self,
         a: Operand<'_>,
@@ -477,29 +674,32 @@ impl GemmEngine {
         if m == 0 || n == 0 || k == 0 {
             return;
         }
-        // Snapshot the blocking once so every panel of this call agrees.
-        let blk = self.blocking().clamped();
-        // Floor division: never split below MIN_PANEL_ROWS rows per panel
-        // (a sub-minimum panel pays dispatch overhead for no kernel time).
-        let blocks = self.threads().min(m / MIN_PANEL_ROWS).max(1);
-        match &self.pool {
-            Some(pool) if blocks > 1 => {
-                let rows_per = m.div_ceil(blocks);
-                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = c
-                    .chunks_mut(rows_per * n)
-                    .enumerate()
-                    .map(|(bi, cpanel)| {
-                        let i0 = bi * rows_per;
-                        let rows = cpanel.len() / n;
-                        Box::new(move || {
-                            gemm_panel(a, b, cpanel, i0, i0 + rows, n, k, blk, upper_only)
-                        }) as Box<dyn FnOnce() + Send + '_>
-                    })
-                    .collect();
-                scoped(pool, jobs);
+        // Skinny routing: pack only the small operand, stream the dominant
+        // one. SYRK stays on the blocked path (its triangle filter lives
+        // there); a skinny SYRK output is tiny either way. thin-B gets the
+        // pool (a tall GEMV splits its rows); thin-A has ≤ MR rows, below
+        // any useful split.
+        if !upper_only {
+            if m <= MR {
+                return skinny::thin_a(a, b, c, m, n, k);
             }
-            _ => gemm_panel(a, b, c, 0, m, n, k, blk, upper_only),
+            if n <= NR {
+                return skinny::thin_b(self.pool.as_deref(), a, b, c, m, n, k);
+            }
         }
+        // Snapshot blocking + kernel once so every panel of this call agrees.
+        parallel::row_panels(
+            self.pool.as_deref(),
+            a,
+            b,
+            c,
+            m,
+            n,
+            k,
+            self.blocking().clamped(),
+            self.kernel(),
+            upper_only,
+        );
     }
 }
 
@@ -569,163 +769,6 @@ pub fn syrk_at_a_into(c: &mut Mat, a: &Mat) {
     global_engine().syrk_at_a_into(c, a)
 }
 
-// ───────────────────────── packed kernel ──────────────────────────
-
-/// Pack rows `i0..i1`, cols `k0..k1` of `a` into MR-row panels, k-major:
-/// panel `p` holds rows `i0+p·MR ..`, stored as `buf[p·kb·MR + t·MR + r]`
-/// for k index `t` (0-based within the block) and panel row `r`. Rows past
-/// `i1` are zero-padded so the microkernel always runs a full tile.
-fn pack_a(buf: &mut [f64], a: Operand<'_>, i0: usize, i1: usize, k0: usize, k1: usize) {
-    let kb = k1 - k0;
-    let mut off = 0;
-    let mut ti = i0;
-    while ti < i1 {
-        let h = MR.min(i1 - ti);
-        for t in 0..kb {
-            let dst = &mut buf[off + t * MR..off + t * MR + MR];
-            for r in 0..MR {
-                dst[r] = if r < h { a.at(ti + r, k0 + t) } else { 0.0 };
-            }
-        }
-        off += kb * MR;
-        ti += MR;
-    }
-}
-
-/// Pack rows `k0..k1`, cols `j0..j1` of `b` into NR-column panels, k-major:
-/// panel `p` holds cols `j0+p·NR ..`, stored as `buf[p·kb·NR + t·NR + j]`.
-/// Columns past `j1` are zero-padded.
-fn pack_b(buf: &mut [f64], b: Operand<'_>, k0: usize, k1: usize, j0: usize, j1: usize) {
-    let kb = k1 - k0;
-    let mut off = 0;
-    let mut js = j0;
-    while js < j1 {
-        let w = NR.min(j1 - js);
-        for t in 0..kb {
-            let dst = &mut buf[off + t * NR..off + t * NR + NR];
-            for j in 0..NR {
-                dst[j] = if j < w { b.at(k0 + t, js + j) } else { 0.0 };
-            }
-        }
-        off += kb * NR;
-        js += NR;
-    }
-}
-
-/// The 8×4 register microkernel: one packed A panel × one packed B panel
-/// over `kb` k-steps. All 32 accumulators are independent and the two
-/// operand streams are contiguous, so LLVM keeps `acc` in vector registers
-/// and turns the inner `j` loop into FMAs (no float-reassociation licence
-/// needed — each `acc[r][j]` is its own serial chain).
-#[inline(always)]
-fn micro_tile(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
-    let mut acc = [0.0f64; MR * NR];
-    let ap = &ap[..kb * MR];
-    let bp = &bp[..kb * NR];
-    for t in 0..kb {
-        let at = &ap[t * MR..t * MR + MR];
-        let bt = &bp[t * NR..t * NR + NR];
-        for r in 0..MR {
-            let ar = at[r];
-            for j in 0..NR {
-                acc[r * NR + j] += ar * bt[j];
-            }
-        }
-    }
-    acc
-}
-
-/// Sequential packed kernel over one row panel of C (`rows pi0..pi1`, all n
-/// columns; `c` is that panel's row-major storage). `upper_only` skips
-/// micro-tiles strictly below the diagonal — used by SYRK; the skipped
-/// entries (and any sub-diagonal entries a straddling tile does produce)
-/// are overwritten by the caller's mirror pass.
-///
-/// Determinism invariant (what makes the parallel row split exact): for any
-/// fixed element `(i, j)`, the accumulation is "for each (NC, KC) block in
-/// grid order: add a register-accumulated k-ordered partial sum". The row
-/// partition and the MC/MR grids decide only *which tile* computes an
-/// element, never the order of its additions, so callers may split rows
-/// anywhere. Zero-padding keeps edge tiles on the same code path.
-fn gemm_panel(
-    a: Operand<'_>,
-    b: Operand<'_>,
-    c: &mut [f64],
-    pi0: usize,
-    pi1: usize,
-    n: usize,
-    k: usize,
-    blk: GemmBlocking,
-    upper_only: bool,
-) {
-    if pi0 >= pi1 || n == 0 || k == 0 {
-        return;
-    }
-    let GemmBlocking { mc, kc, nc } = blk;
-    PACK_WS.with(|ws| {
-        let mut ws = ws.borrow_mut();
-        let mut apack = ws.take(1, mc.div_ceil(MR) * MR * kc);
-        let mut bpack = ws.take(1, nc.div_ceil(NR) * NR * kc);
-        for jc in (0..n).step_by(nc) {
-            let j1 = (jc + nc).min(n);
-            // SYRK: a row panel entirely below this column block has no
-            // upper-triangle work at all — skip before packing any B panel.
-            if upper_only && pi0 >= j1 {
-                continue;
-            }
-            for k0 in (0..k).step_by(kc) {
-                let k1 = (k0 + kc).min(k);
-                let kb = k1 - k0;
-                pack_b(bpack.as_mut_slice(), b, k0, k1, jc, j1);
-                for ic in (pi0..pi1).step_by(mc) {
-                    let i1 = (ic + mc).min(pi1);
-                    // SYRK: a whole A block strictly below this column block
-                    // contributes no upper-triangle element — skip it before
-                    // paying for the pack.
-                    if upper_only && ic >= j1 {
-                        continue;
-                    }
-                    pack_a(apack.as_mut_slice(), a, ic, i1, k0, k1);
-                    let mut si = 0;
-                    let mut js = jc;
-                    while js < j1 {
-                        let w = NR.min(j1 - js);
-                        let bstrip = &bpack.as_slice()[si * kb * NR..(si + 1) * kb * NR];
-                        let mut tile = 0;
-                        let mut ti = ic;
-                        while ti < i1 {
-                            let h = MR.min(i1 - ti);
-                            // Upper-triangle filter at micro-tile grain: a
-                            // tile whose first row is past the strip's last
-                            // column holds no (i ≤ j) element. The test uses
-                            // global indices, so every upper element is
-                            // computed under any row partition.
-                            if !upper_only || ti < js + NR {
-                                let astrip =
-                                    &apack.as_slice()[tile * kb * MR..(tile + 1) * kb * MR];
-                                let acc = micro_tile(kb, astrip, bstrip);
-                                for r in 0..h {
-                                    let base = (ti - pi0 + r) * n + js;
-                                    let row = &mut c[base..base + w];
-                                    for j in 0..w {
-                                        row[j] += acc[r * NR + j];
-                                    }
-                                }
-                            }
-                            tile += 1;
-                            ti += MR;
-                        }
-                        si += 1;
-                        js += NR;
-                    }
-                }
-            }
-        }
-        ws.put(apack);
-        ws.put(bpack);
-    });
-}
-
 /// Copy the upper triangle into the lower one (exact symmetry).
 fn mirror_upper(c: &mut Mat) {
     let n = c.rows();
@@ -734,105 +777,6 @@ fn mirror_upper(c: &mut Mat) {
             c[(i, j)] = c[(j, i)];
         }
     }
-}
-
-// ───────────────── reference / ablation kernels ──────────────────
-
-/// The seed's broadcast-FMA kernel: `C[m x n] += A[m x k] · B[k x n]`, both
-/// row-major. Kept as the §Perf ablation baseline (`perf_gemm` reports the
-/// packed kernel's speedup over it) and as a second independent
-/// implementation for conformance cross-checks.
-///
-/// Loop order (jc, kc, i, t, j): the innermost `crow[j] += a_it * brow[j]`
-/// has no cross-iteration dependence, so rustc vectorises it into FMAs. The
-/// (KC2 × NC) B panel stays hot in L2 across the whole i sweep; a 4-row
-/// micro-tile quarters the B bandwidth. Unlike the packed kernel it never
-/// copies its operands — which is exactly what costs it at large n: A and C
-/// rows are touched with stride n, so TLB/cache-line utilisation degrades
-/// where the packed kernel keeps streaming contiguous panels.
-pub fn gemm_broadcast(a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
-    const NC: usize = 512; // B-panel columns (NC·KC2·8B = 512 KiB ≤ L2)
-    const KC2: usize = 256; // B-panel rows
-    for j0 in (0..n).step_by(NC) {
-        let j1 = (j0 + NC).min(n);
-        for k0 in (0..k).step_by(KC2) {
-            let k1 = (k0 + KC2).min(k);
-            let mut i = 0;
-            while i + 4 <= m {
-                let (rows01, rows23) = (&mut c[i * n..(i + 4) * n]).split_at_mut(2 * n);
-                let (row0, row1) = rows01.split_at_mut(n);
-                let (row2, row3) = rows23.split_at_mut(n);
-                let c0 = &mut row0[j0..j1];
-                let c1 = &mut row1[j0..j1];
-                let c2 = &mut row2[j0..j1];
-                let c3 = &mut row3[j0..j1];
-                let a0 = &a[i * k..(i + 1) * k];
-                let a1 = &a[(i + 1) * k..(i + 2) * k];
-                let a2 = &a[(i + 2) * k..(i + 3) * k];
-                let a3 = &a[(i + 3) * k..(i + 4) * k];
-                for t in k0..k1 {
-                    let (av0, av1, av2, av3) = (a0[t], a1[t], a2[t], a3[t]);
-                    let brow = &b[t * n + j0..t * n + j1];
-                    for ((((c0v, c1v), c2v), c3v), bv) in c0
-                        .iter_mut()
-                        .zip(c1.iter_mut())
-                        .zip(c2.iter_mut())
-                        .zip(c3.iter_mut())
-                        .zip(brow)
-                    {
-                        *c0v += av0 * bv;
-                        *c1v += av1 * bv;
-                        *c2v += av2 * bv;
-                        *c3v += av3 * bv;
-                    }
-                }
-                i += 4;
-            }
-            while i + 2 <= m {
-                let (row0, row1) = (&mut c[i * n..(i + 2) * n]).split_at_mut(n);
-                let c0 = &mut row0[j0..j1];
-                let c1 = &mut row1[j0..j1];
-                let a0 = &a[i * k..(i + 1) * k];
-                let a1 = &a[(i + 1) * k..(i + 2) * k];
-                for t in k0..k1 {
-                    let (av0, av1) = (a0[t], a1[t]);
-                    let brow = &b[t * n + j0..t * n + j1];
-                    for ((c0v, c1v), bv) in c0.iter_mut().zip(c1.iter_mut()).zip(brow) {
-                        *c0v += av0 * bv;
-                        *c1v += av1 * bv;
-                    }
-                }
-                i += 2;
-            }
-            if i < m {
-                let crow = &mut c[i * n + j0..i * n + j1];
-                for t in k0..k1 {
-                    let av = a[i * k + t];
-                    let brow = &b[t * n + j0..t * n + j1];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += av * bv;
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Reference (naive) matmul for tests.
-pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.rows());
-    let (m, k) = a.shape();
-    let n = b.cols();
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        for t in 0..k {
-            let av = a[(i, t)];
-            for j in 0..n {
-                c[(i, j)] += av * b[(t, j)];
-            }
-        }
-    }
-    c
 }
 
 #[cfg(test)]
@@ -891,6 +835,111 @@ mod tests {
     }
 
     #[test]
+    fn every_available_kernel_matches_naive() {
+        // Forced selection through with_kernel: all paths, per kernel.
+        // Cross-kernel bit equality is NOT asserted (FMA vs separate
+        // rounding) — tolerance only, per the documented contract.
+        let mut rng = Rng::seed_from(11);
+        for kern in MicroKernel::available() {
+            let eng = GemmEngine::sequential().with_kernel(kern);
+            assert_eq!(eng.kernel(), kern);
+            for &(m, k, n) in &[(9, 12, 10), (33, 17, 29), (64, 64, 64)] {
+                let a = Mat::gaussian(&mut rng, m, k, 1.0);
+                let b = Mat::gaussian(&mut rng, k, n, 1.0);
+                assert!(
+                    close(&eng.matmul(&a, &b), &matmul_naive(&a, &b), 1e-10),
+                    "{} {m}x{k}x{n}",
+                    kern.name()
+                );
+                let s = eng.syrk_at_a(&a);
+                assert!(close(&s, &matmul_naive(&a.transpose(), &a), 1e-10), "{}", kern.name());
+                assert_eq!(s.symmetry_defect(), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn skinny_paths_match_naive_all_forms() {
+        // m ≤ MR routes thin-A, n ≤ NR routes thin-B, including the m == 1
+        // and n == 1 packed-GEMV cases and the transposed operand forms
+        // (which exercise the strided streaming branches).
+        let mut rng = Rng::seed_from(12);
+        let eng = GemmEngine::sequential();
+        for &(m, k, n) in &[
+            (1, 40, 1),
+            (1, 33, 50),
+            (50, 33, 1),
+            (8, 64, 64), // the sketch shape: p×n · n×n
+            (3, 17, 100),
+            (100, 17, 3),
+            (7, 9, 4),
+        ] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            assert!(close(&eng.matmul(&a, &b), &matmul_naive(&a, &b), 1e-10), "{m}x{k}x{n}");
+            // Aᵀ·B with A stored k-major (strided A reads).
+            let at = Mat::gaussian(&mut rng, k, m, 1.0);
+            assert!(
+                close(&eng.matmul_at_b(&at, &b), &matmul_naive(&at.transpose(), &b), 1e-10),
+                "at_b {m}x{k}x{n}"
+            );
+            // A·Bᵀ with B stored n-major (strided B reads).
+            let bt = Mat::gaussian(&mut rng, n, k, 1.0);
+            assert!(
+                close(&eng.matmul_a_bt(&a, &bt), &matmul_naive(&a, &bt.transpose()), 1e-10),
+                "a_bt {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn skinny_path_ignores_blocking() {
+        // Regression for the GemmBlocking::clamped interaction: skinny
+        // products route before any blocking applies, so their results are
+        // bit-identical across arbitrary blockings (the blocked path would
+        // regroup the reduction per KC block and differ in low bits).
+        let mut rng = Rng::seed_from(13);
+        let blks = [
+            GemmBlocking::default(),
+            GemmBlocking { mc: 8, kc: 5, nc: 7 },
+            GemmBlocking { mc: 1, kc: 1, nc: 1 }, // clamps to (MR, 1, NR)
+        ];
+        for &(m, k, n) in &[(1, 300, 1), (8, 257, 64), (40, 257, 1), (1, 64, 33)] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            let base = GemmEngine::sequential().with_blocking(blks[0]).matmul(&a, &b);
+            assert!(close(&base, &matmul_naive(&a, &b), 1e-10), "{m}x{k}x{n}");
+            for blk in &blks[1..] {
+                let got = GemmEngine::sequential().with_blocking(*blk).matmul(&a, &b);
+                assert_eq!(
+                    base.as_slice(),
+                    got.as_slice(),
+                    "skinny {m}x{k}x{n} depends on blocking {}",
+                    blk.display()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_ablation_entry_matches_routed_path() {
+        let mut rng = Rng::seed_from(14);
+        let eng = GemmEngine::sequential();
+        // Skinny shape: routed path uses thin-A, forced path uses blocks —
+        // equal to fp tolerance, not necessarily bitwise.
+        let a = Mat::gaussian(&mut rng, 8, 120, 1.0);
+        let b = Mat::gaussian(&mut rng, 120, 60, 1.0);
+        let mut c = Mat::zeros(0, 0);
+        eng.matmul_blocked_into(&mut c, &a, &b);
+        assert!(close(&c, &matmul_naive(&a, &b), 1e-10));
+        // Non-skinny shape: both entries run the identical blocked path.
+        let a2 = Mat::gaussian(&mut rng, 40, 30, 1.0);
+        let b2 = Mat::gaussian(&mut rng, 30, 20, 1.0);
+        eng.matmul_blocked_into(&mut c, &a2, &b2);
+        assert_eq!(c.as_slice(), eng.matmul(&a2, &b2).as_slice());
+    }
+
+    #[test]
     fn gemm_counter_increments() {
         let before = GemmCounter::calls();
         let mut rng = Rng::seed_from(5);
@@ -943,18 +992,21 @@ mod tests {
     #[test]
     fn parallel_engine_bit_identical_to_sequential() {
         let mut rng = Rng::seed_from(8);
-        let seq = GemmEngine::sequential();
-        let par = GemmEngine::with_threads(4);
-        // Sizes straddling the MIN_PANEL_ROWS threshold and ragged splits.
-        for &(m, k, n) in &[(1, 3, 2), (16, 16, 16), (33, 17, 29), (70, 40, 55)] {
-            let a = Mat::gaussian(&mut rng, m, k, 1.0);
-            let b = Mat::gaussian(&mut rng, k, n, 1.0);
-            let c_seq = seq.matmul(&a, &b);
-            let c_par = par.matmul(&a, &b);
-            assert_eq!(c_seq, c_par, "matmul {m}x{k}x{n} not bit-identical");
-            let s_seq = seq.syrk_at_a(&a);
-            let s_par = par.syrk_at_a(&a);
-            assert_eq!(s_seq, s_par, "syrk {m}x{k} not bit-identical");
+        // Per available kernel: sizes straddling the parallel threshold and
+        // ragged splits must be bit-identical across pool sizes.
+        for kern in MicroKernel::available() {
+            let seq = GemmEngine::sequential().with_kernel(kern);
+            let par = GemmEngine::with_threads(4).with_kernel(kern);
+            for &(m, k, n) in &[(1, 3, 2), (16, 16, 16), (33, 17, 29), (70, 40, 55)] {
+                let a = Mat::gaussian(&mut rng, m, k, 1.0);
+                let b = Mat::gaussian(&mut rng, k, n, 1.0);
+                let c_seq = seq.matmul(&a, &b);
+                let c_par = par.matmul(&a, &b);
+                assert_eq!(c_seq, c_par, "{} matmul {m}x{k}x{n} not bit-identical", kern.name());
+                let s_seq = seq.syrk_at_a(&a);
+                let s_par = par.syrk_at_a(&a);
+                assert_eq!(s_seq, s_par, "{} syrk {m}x{k} not bit-identical", kern.name());
+            }
         }
     }
 
@@ -1010,6 +1062,16 @@ mod tests {
     }
 
     #[test]
+    fn global_kernel_resolves_to_an_available_kernel() {
+        // Never install a non-default global here (concurrent tests would
+        // observe it); just check the read path. Under PALLAS_GEMM_KERNEL
+        // the resolved kernel may differ from detect() — by design — but it
+        // must always be runnable on this host.
+        assert!(global_kernel().is_available());
+        assert_eq!(GemmEngine::sequential().kernel(), global_kernel());
+    }
+
+    #[test]
     fn broadcast_kernel_matches_packed() {
         let mut rng = Rng::seed_from(10);
         for &(m, k, n) in &[(5, 9, 3), (33, 20, 41)] {
@@ -1052,6 +1114,28 @@ mod tests {
         let g = ws.take(10, 10);
         assert_eq!(g.shape(), (10, 10));
         assert_eq!(ws.allocations(), 3);
+    }
+
+    #[test]
+    fn workspace_best_fit_avoids_cross_size_thrash() {
+        // A pool holding mixed sizes (engine n×n buffers next to sketch p×n
+        // panels) must serve each request from the matching size class —
+        // first-fit would hand the big buffer to the small request and then
+        // grow the small buffer for the big one, allocating every cycle.
+        let mut ws = Workspace::new();
+        let big = ws.take(16, 16);
+        let small = ws.take(2, 2);
+        ws.put(big); // free list order: [big, small]
+        ws.put(small);
+        assert_eq!(ws.allocations(), 2);
+        for _ in 0..3 {
+            let s = ws.take(2, 2);
+            assert!(s.capacity() < 16 * 16, "small take must not consume the big buffer");
+            let b = ws.take(16, 16);
+            ws.put(s);
+            ws.put(b);
+        }
+        assert_eq!(ws.allocations(), 2, "steady mixed-size cycling must not allocate");
     }
 
     #[test]

@@ -1,0 +1,90 @@
+//! Panel packing: copy cache blocks of the (possibly strided) operands into
+//! contiguous, k-major, zero-padded panels the microkernels stream.
+//!
+//! Packing reads the source through an [`Operand`]'s (row, col) strides, so
+//! `A`, `Aᵀ`, `B` and `Bᵀ` are all served from their original buffers — no
+//! transpose is ever materialised. Ragged panel tails are zero-padded to
+//! full `MR`/`NR` width: the microkernels always run a full tile, the padded
+//! lanes contribute exact zeros, and the store-back loops simply clip them.
+//! This zero-padding is also a load-bearing **safety** property for the
+//! SIMD kernels (see [`super::kernel`]): it guarantees every panel holds
+//! `kb·MR` / `kb·NR` readable elements.
+
+use super::kernel::{MR, NR};
+use super::Operand;
+
+/// Pack rows `i0..i1`, cols `k0..k1` of `a` into MR-row panels, k-major:
+/// panel `p` holds rows `i0+p·MR ..`, stored as `buf[p·kb·MR + t·MR + r]`
+/// for k index `t` (0-based within the block) and panel row `r`. Rows past
+/// `i1` are zero-padded so the microkernel always runs a full tile.
+pub(super) fn pack_a(buf: &mut [f64], a: Operand<'_>, i0: usize, i1: usize, k0: usize, k1: usize) {
+    let kb = k1 - k0;
+    let mut off = 0;
+    let mut ti = i0;
+    while ti < i1 {
+        let h = MR.min(i1 - ti);
+        for t in 0..kb {
+            let dst = &mut buf[off + t * MR..off + t * MR + MR];
+            for r in 0..MR {
+                dst[r] = if r < h { a.at(ti + r, k0 + t) } else { 0.0 };
+            }
+        }
+        off += kb * MR;
+        ti += MR;
+    }
+}
+
+/// Pack rows `k0..k1`, cols `j0..j1` of `b` into NR-column panels, k-major:
+/// panel `p` holds cols `j0+p·NR ..`, stored as `buf[p·kb·NR + t·NR + j]`.
+/// Columns past `j1` are zero-padded.
+pub(super) fn pack_b(buf: &mut [f64], b: Operand<'_>, k0: usize, k1: usize, j0: usize, j1: usize) {
+    let kb = k1 - k0;
+    let mut off = 0;
+    let mut js = j0;
+    while js < j1 {
+        let w = NR.min(j1 - js);
+        for t in 0..kb {
+            let dst = &mut buf[off + t * NR..off + t * NR + NR];
+            for j in 0..NR {
+                dst[j] = if j < w { b.at(k0 + t, js + j) } else { 0.0 };
+            }
+        }
+        off += kb * NR;
+        js += NR;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    #[test]
+    fn pack_a_is_k_major_and_zero_padded() {
+        let mut rng = Rng::seed_from(1);
+        let a = Mat::gaussian(&mut rng, 5, 3, 1.0); // 5 rows: one ragged panel
+        let mut buf = vec![f64::NAN; 3 * MR];
+        pack_a(&mut buf, Operand::normal(&a), 0, 5, 0, 3);
+        for t in 0..3 {
+            for r in 0..MR {
+                let want = if r < 5 { a[(r, t)] } else { 0.0 };
+                assert_eq!(buf[t * MR + r], want, "t={t} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_reads_transposed_operand_without_transpose() {
+        let mut rng = Rng::seed_from(2);
+        let b = Mat::gaussian(&mut rng, 3, 6, 1.0); // used as Bᵀ: 6x3
+        let mut buf = vec![f64::NAN; 6 * NR];
+        pack_b(&mut buf, Operand::transposed(&b), 0, 6, 0, 3);
+        for t in 0..6 {
+            for j in 0..NR {
+                let want = if j < 3 { b[(j, t)] } else { 0.0 };
+                assert_eq!(buf[t * NR + j], want, "t={t} j={j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Row-panel scheduling: partition the rows of C over the engine's thread
+//! pool and drive the blocked packed kernel on each panel.
+//!
+//! Determinism invariant (what makes the parallel row split exact): for any
+//! fixed element `(i, j)`, the accumulation is "for each (NC, KC) block in
+//! grid order: add a register-accumulated k-ordered partial sum". The row
+//! partition and the MC/MR grids decide only *which tile* computes an
+//! element, never the order of its additions, so callers may split rows
+//! anywhere — results are **bit-identical for every pool size** at a fixed
+//! ([`GemmBlocking`], [`MicroKernel`]) pair. Zero-padding keeps edge tiles
+//! on the same code path.
+
+use super::kernel::{micro_tile, MicroKernel, MR, NR};
+use super::pack::{pack_a, pack_b};
+use super::{GemmBlocking, Operand, PACK_WS};
+use crate::threads::{scoped, ThreadPool};
+
+/// Minimum C rows per parallel panel — below this the dispatch overhead
+/// beats the kernel time, so small products stay sequential.
+const MIN_PANEL_ROWS: usize = 16;
+
+/// Split C's rows into contiguous panels over `pool` and run
+/// `body(cpanel, i0, rows)` on each — sequentially (one whole-C panel)
+/// when the pool is absent or the product too small to split. The one
+/// row-partition heuristic shared by the blocked path and the thin-B
+/// skinny path, so the two can never silently diverge.
+pub(super) fn split_row_panels(
+    pool: Option<&ThreadPool>,
+    c: &mut [f64],
+    m: usize,
+    n: usize,
+    body: &(dyn Fn(&mut [f64], usize, usize) + Sync),
+) {
+    // Floor division: never split below MIN_PANEL_ROWS rows per panel
+    // (a sub-minimum panel pays dispatch overhead for no kernel time).
+    let threads = pool.map(|p| p.size()).unwrap_or(1);
+    let blocks = threads.min(m / MIN_PANEL_ROWS).max(1);
+    match pool {
+        Some(pool) if blocks > 1 => {
+            let rows_per = m.div_ceil(blocks);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = c
+                .chunks_mut(rows_per * n)
+                .enumerate()
+                .map(|(bi, cpanel)| {
+                    let i0 = bi * rows_per;
+                    let rows = cpanel.len() / n;
+                    Box::new(move || body(cpanel, i0, rows))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            scoped(pool, jobs);
+        }
+        _ => body(c, 0, m),
+    }
+}
+
+/// Run the blocked packed kernel over C's rows: sequentially when `pool` is
+/// `None` (or the product is too small to split), otherwise on contiguous
+/// row panels over the pool.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn row_panels(
+    pool: Option<&ThreadPool>,
+    a: Operand<'_>,
+    b: Operand<'_>,
+    c: &mut [f64],
+    m: usize,
+    n: usize,
+    k: usize,
+    blk: GemmBlocking,
+    kern: MicroKernel,
+    upper_only: bool,
+) {
+    split_row_panels(pool, c, m, n, &|cpanel, i0, rows| {
+        gemm_panel(a, b, cpanel, i0, i0 + rows, n, k, blk, kern, upper_only)
+    });
+}
+
+/// Sequential packed kernel over one row panel of C (`rows pi0..pi1`, all n
+/// columns; `c` is that panel's row-major storage). `upper_only` skips
+/// micro-tiles strictly below the diagonal — used by SYRK; the skipped
+/// entries (and any sub-diagonal entries a straddling tile does produce)
+/// are overwritten by the caller's mirror pass.
+#[allow(clippy::too_many_arguments)]
+fn gemm_panel(
+    a: Operand<'_>,
+    b: Operand<'_>,
+    c: &mut [f64],
+    pi0: usize,
+    pi1: usize,
+    n: usize,
+    k: usize,
+    blk: GemmBlocking,
+    kern: MicroKernel,
+    upper_only: bool,
+) {
+    if pi0 >= pi1 || n == 0 || k == 0 {
+        return;
+    }
+    let GemmBlocking { mc, kc, nc } = blk;
+    PACK_WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let mut apack = ws.take(1, mc.div_ceil(MR) * MR * kc);
+        let mut bpack = ws.take(1, nc.div_ceil(NR) * NR * kc);
+        for jc in (0..n).step_by(nc) {
+            let j1 = (jc + nc).min(n);
+            // SYRK: a row panel entirely below this column block has no
+            // upper-triangle work at all — skip before packing any B panel.
+            if upper_only && pi0 >= j1 {
+                continue;
+            }
+            for k0 in (0..k).step_by(kc) {
+                let k1 = (k0 + kc).min(k);
+                let kb = k1 - k0;
+                pack_b(bpack.as_mut_slice(), b, k0, k1, jc, j1);
+                for ic in (pi0..pi1).step_by(mc) {
+                    let i1 = (ic + mc).min(pi1);
+                    // SYRK: a whole A block strictly below this column block
+                    // contributes no upper-triangle element — skip it before
+                    // paying for the pack.
+                    if upper_only && ic >= j1 {
+                        continue;
+                    }
+                    pack_a(apack.as_mut_slice(), a, ic, i1, k0, k1);
+                    let mut si = 0;
+                    let mut js = jc;
+                    while js < j1 {
+                        let w = NR.min(j1 - js);
+                        let bstrip = &bpack.as_slice()[si * kb * NR..(si + 1) * kb * NR];
+                        let mut tile = 0;
+                        let mut ti = ic;
+                        while ti < i1 {
+                            let h = MR.min(i1 - ti);
+                            // Upper-triangle filter at micro-tile grain: a
+                            // tile whose first row is past the strip's last
+                            // column holds no (i ≤ j) element. The test uses
+                            // global indices, so every upper element is
+                            // computed under any row partition.
+                            if !upper_only || ti < js + NR {
+                                let astrip =
+                                    &apack.as_slice()[tile * kb * MR..(tile + 1) * kb * MR];
+                                let acc = micro_tile(kern, kb, astrip, bstrip);
+                                for r in 0..h {
+                                    let base = (ti - pi0 + r) * n + js;
+                                    let row = &mut c[base..base + w];
+                                    for j in 0..w {
+                                        row[j] += acc[r * NR + j];
+                                    }
+                                }
+                            }
+                            tile += 1;
+                            ti += MR;
+                        }
+                        si += 1;
+                        js += NR;
+                    }
+                }
+            }
+        }
+        ws.put(apack);
+        ws.put(bpack);
+    });
+}

@@ -1,0 +1,164 @@
+//! Skinny-operand fast paths: packed GEMV and thin-A/thin-B kernels for
+//! products whose smallest dimension fits inside one micro-tile.
+//!
+//! The blocked path (see [`super::parallel`]) packs **both** operands into
+//! panels — the right trade when the O(mnk) kernel work amortises the
+//! O(mk + kn) copies. For skinny products it is exactly wrong: a `p×n ·
+//! n×n` sketch propagation with `p ≤ MR` would copy the *dominant* operand
+//! (all of B, NR-padded) to feed at most one A panel, and a 1-column GEMV
+//! would pack the whole of A (zero-padded to NR columns of B by
+//! `GemmBlocking::clamped`'s NC ≥ NR floor) to compute m dot products.
+//! These paths instead pack only the *small* operand — once, zero-padded,
+//! k-major — and stream the large one straight from its buffer, so the
+//! dominant operand is read exactly once with no copy:
+//!
+//! * [`thin_a`] (`m ≤ MR`, which includes the `m == 1` row-GEMV): A packed
+//!   into a single MR-row panel; B streamed. Used by the sketch power
+//!   traces (`p×n · n×n`) and the polyfit assembly in `prism::fit`.
+//! * [`thin_b`] (`n ≤ NR`, which includes the `n == 1` column-GEMV): B
+//!   packed into a single NR-column panel; A streamed row by row.
+//!
+//! Routing (in [`super::GemmEngine`]) depends only on the shape and operand
+//! forms — never on thread count, blocking, or the selected microkernel —
+//! so every engine configuration takes the same path and per-element
+//! accumulation stays a single k-ordered chain: results are bit-identical
+//! across pool sizes *and* across blockings for skinny shapes. [`thin_a`]
+//! has at most MR rows and runs on the calling thread; [`thin_b`] can be
+//! arbitrarily tall, so it splits C's rows over the engine's pool through
+//! the same [`split_row_panels`] partition as the blocked path — each row
+//! is an independent k-ordered dot against the shared packed B panel, so
+//! the partition cannot change any output bit. The inner loops are
+//! dependence-free over the packed lane dimension, which LLVM
+//! auto-vectorises (the [`super::MicroKernel`] choice does not apply here).
+
+use super::kernel::{MR, NR};
+use super::pack::{pack_a, pack_b};
+use super::parallel::split_row_panels;
+use super::{Operand, PACK_WS};
+use crate::threads::ThreadPool;
+
+/// `C[m×n] += op(A)·op(B)` for `m ≤ MR`. A is packed once into a single
+/// zero-padded MR-row k-major panel; B is streamed unpacked. Per-element
+/// accumulation order is pure k order in every branch.
+pub(super) fn thin_a(a: Operand<'_>, b: Operand<'_>, c: &mut [f64], m: usize, n: usize, k: usize) {
+    debug_assert!((1..=MR).contains(&m));
+    PACK_WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let mut apack = ws.take(1, k * MR);
+        pack_a(apack.as_mut_slice(), a, 0, m, 0, k);
+        let ap = apack.as_slice();
+        if b.cs == 1 {
+            // Row-major B: stream its rows once, t-outer; each k-step is m
+            // broadcast-axpys onto the L2-resident C rows.
+            for t in 0..k {
+                let at = &ap[t * MR..t * MR + MR];
+                let brow = &b.data[t * b.rs..t * b.rs + n];
+                for (r, &ar) in at.iter().enumerate().take(m) {
+                    let crow = &mut c[r * n..r * n + n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += ar * bv;
+                    }
+                }
+            }
+        } else {
+            // Column-strided B (a transposed view): walk j-major so the
+            // underlying buffer streams contiguously; the packed A panel
+            // (≤ MR·k doubles) is the only operand re-read per column.
+            for j in 0..n {
+                let mut acc = [0.0f64; MR];
+                if b.rs == 1 {
+                    let bcol = &b.data[j * b.cs..j * b.cs + k];
+                    for (t, &bv) in bcol.iter().enumerate() {
+                        let at = &ap[t * MR..t * MR + MR];
+                        for (av, &ar) in acc.iter_mut().zip(at) {
+                            *av += ar * bv;
+                        }
+                    }
+                } else {
+                    for t in 0..k {
+                        let bv = b.at(t, j);
+                        let at = &ap[t * MR..t * MR + MR];
+                        for (av, &ar) in acc.iter_mut().zip(at) {
+                            *av += ar * bv;
+                        }
+                    }
+                }
+                for (r, &av) in acc.iter().enumerate().take(m) {
+                    c[r * n + j] += av;
+                }
+            }
+        }
+        ws.put(apack);
+    });
+}
+
+/// `C[m×n] += op(A)·op(B)` for `n ≤ NR`. B is packed once into a single
+/// zero-padded NR-column k-major panel (≤ NR·k doubles, cache-resident);
+/// A is streamed one row at a time and read exactly once. The NR-wide
+/// accumulator runs full width — padded lanes carry exact zeros and are
+/// clipped at store — so the inner loop is one 4-lane FMA per k-step.
+///
+/// Unlike `thin_a`, m can be arbitrarily large (a tall GEMV), so C's rows
+/// are split over `pool` when it pays: every worker reads the same packed
+/// B panel and computes its rows' independent k-ordered dots, keeping the
+/// result bit-identical for every pool size.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn thin_b(
+    pool: Option<&ThreadPool>,
+    a: Operand<'_>,
+    b: Operand<'_>,
+    c: &mut [f64],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    debug_assert!((1..=NR).contains(&n));
+    PACK_WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let mut bpack = ws.take(1, k * NR);
+        pack_b(bpack.as_mut_slice(), b, 0, k, 0, n);
+        let bp = bpack.as_slice();
+        split_row_panels(pool, c, m, n, &|cpanel, i0, rows| {
+            thin_b_rows(a, bp, cpanel, i0, rows, n, k)
+        });
+        ws.put(bpack);
+    });
+}
+
+/// Rows `i0..i0+rows` of the thin-B product: each row of C is an NR-wide
+/// accumulation over the shared packed B panel `bp`, in pure k order.
+fn thin_b_rows(
+    a: Operand<'_>,
+    bp: &[f64],
+    c: &mut [f64],
+    i0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+) {
+    for ri in 0..rows {
+        let i = i0 + ri;
+        let mut acc = [0.0f64; NR];
+        if a.cs == 1 {
+            let arow = &a.data[i * a.rs..i * a.rs + k];
+            for (t, &av) in arow.iter().enumerate() {
+                let bt = &bp[t * NR..t * NR + NR];
+                for (cj, &bj) in acc.iter_mut().zip(bt) {
+                    *cj += av * bj;
+                }
+            }
+        } else {
+            for t in 0..k {
+                let av = a.at(i, t);
+                let bt = &bp[t * NR..t * NR + NR];
+                for (cj, &bj) in acc.iter_mut().zip(bt) {
+                    *cj += av * bj;
+                }
+            }
+        }
+        let crow = &mut c[ri * n..ri * n + n];
+        for (cv, &av) in crow.iter_mut().zip(&acc) {
+            *cv += av;
+        }
+    }
+}

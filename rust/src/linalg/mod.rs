@@ -7,11 +7,15 @@
 //!
 //! The layout is deliberately simple (one contiguous `Vec<f64>` per matrix);
 //! the performance-critical kernels (GEMM and friends) live in [`gemm`]: a
-//! packed, cache-blocked engine ([`gemm::GemmEngine`]) with an 8×4
-//! register-tiled microkernel, tunable block sizes ([`gemm::GemmBlocking`],
-//! `--gemm-block` on the CLI), row-panel parallelism over the crate's
-//! [`crate::threads::ThreadPool`] (bit-identical at every pool size),
-//! `*_into` out-parameter variants and a [`gemm::Workspace`] buffer pool so
+//! packed, cache-blocked engine ([`gemm::GemmEngine`]) with 8×4
+//! register-tiled microkernels dispatched at engine construction
+//! ([`gemm::MicroKernel`]: portable scalar, AVX2+FMA, NEON — `--gemm-kernel`
+//! on the CLI), skinny-operand fast paths (packed GEMV and thin-A/thin-B
+//! streaming kernels for the sketch shapes), tunable block sizes
+//! ([`gemm::GemmBlocking`], `--gemm-block` on the CLI), row-panel
+//! parallelism over the crate's [`crate::threads::ThreadPool`]
+//! (bit-identical at every pool size for a fixed kernel), `*_into`
+//! out-parameter variants and a [`gemm::Workspace`] buffer pool so
 //! iterative engines run allocation-free in their hot loops.
 
 pub mod gemm;
@@ -21,7 +25,8 @@ pub mod svd;
 pub mod norms;
 
 pub use gemm::{
-    matmul, matmul_a_bt, matmul_at_b, syrk_a_at, syrk_at_a, GemmBlocking, GemmEngine, Workspace,
+    matmul, matmul_a_bt, matmul_at_b, syrk_a_at, syrk_at_a, GemmBlocking, GemmEngine, MicroKernel,
+    Workspace,
 };
 pub use decomp::{cholesky, cholesky_inverse, lu_inverse, lu_solve, qr_householder};
 pub use eigen::{symmetric_eigen, SymEigen};

@@ -57,6 +57,10 @@ COMMON FLAGS:
   --gemm-block B   GEMM cache-block sizes as MCxKCxNC (default 128x256x512;
                    startup-time tuning knob — changing KC/NC regroups the
                    reduction and can change low-order result bits)
+  --gemm-kernel K  GEMM microkernel: auto|scalar|avx2|neon (default auto =
+                   widest kernel the host supports, also overridable via
+                   the PALLAS_GEMM_KERNEL env var; kernels agree to fp64
+                   round-off but not bit-for-bit — FMA fuses roundings)
   --n / --m        matrix shape             (default 256 / 128)
   --spectrum S     gaussian|logspace|htmp|wishart|mp (default gaussian)
   --smin X         smallest singular value for logspace (default 1e-6)
@@ -96,6 +100,33 @@ fn main() {
     if let Some(spec) = args.get("gemm-block") {
         match prism::linalg::gemm::GemmBlocking::parse(spec) {
             Ok(b) => prism::linalg::gemm::set_global_blocking(b),
+            Err(e) => {
+                eprintln!("prism: error: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    // Force a GEMM microkernel before any engine runs ("auto" keeps the
+    // detected default). Unavailable kernels are a hard error here — a
+    // forced ablation run must not silently fall back.
+    if let Some(spec) = args.get("gemm-kernel") {
+        match prism::linalg::gemm::MicroKernel::parse(spec) {
+            Ok(None) => {}
+            Ok(Some(k)) if k.is_available() => {
+                prism::linalg::gemm::set_global_kernel(Some(k))
+            }
+            Ok(Some(k)) => {
+                let avail: Vec<&str> = prism::linalg::gemm::MicroKernel::available()
+                    .iter()
+                    .map(|k| k.name())
+                    .collect();
+                eprintln!(
+                    "prism: error: gemm kernel '{}' is not available on this host (available: {})",
+                    k.name(),
+                    avail.join(", ")
+                );
+                std::process::exit(1);
+            }
             Err(e) => {
                 eprintln!("prism: error: {e}");
                 std::process::exit(1);
@@ -368,6 +399,10 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
         stream_residuals: stream_res,
         gemm_block: match args.get("gemm-block") {
             Some(spec) => Some(prism::linalg::gemm::GemmBlocking::parse(spec)?),
+            None => None,
+        },
+        gemm_kernel: match args.get("gemm-kernel") {
+            Some(spec) => prism::linalg::gemm::MicroKernel::parse(spec)?,
             None => None,
         },
     };

@@ -7,11 +7,11 @@
 
 use super::driver::{AlphaMode, EngineHooks, IterationLog, RunRecorder, StopRule};
 use crate::coeffs::chebyshev_coeffs;
-use crate::linalg::gemm::{global_engine, Workspace};
+use crate::linalg::gemm::{global_engine, GemmEngine, Workspace};
 use crate::linalg::Mat;
 use crate::polyfit::minimize_on_interval;
 use crate::rng::Rng;
-use crate::sketch::{exact_power_traces, GaussianSketch};
+use crate::sketch::{exact_power_traces, with_sketched_traces, SketchKind};
 
 #[derive(Debug, Clone)]
 pub struct ChebyshevOpts {
@@ -40,26 +40,28 @@ pub struct ChebyshevResult {
 const ALPHA_LO: f64 = 0.5;
 const ALPHA_HI: f64 = 2.0;
 
-fn select_alpha(r: &Mat, mode: AlphaMode, rng: &mut Rng) -> f64 {
+/// The sketched modes draw the sketch and trace scratch from `ws` and
+/// propagate through `eng`'s skinny GEMM path — allocation-free when warm.
+fn select_alpha(
+    r: &Mat,
+    mode: AlphaMode,
+    rng: &mut Rng,
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) -> f64 {
+    let fit = |t: &[f64]| {
+        let c = chebyshev_coeffs(t);
+        minimize_on_interval(&c, ALPHA_LO, ALPHA_HI).map(|(a, _)| a).unwrap_or(1.0)
+    };
     match mode {
         AlphaMode::Classic => 1.0,
         AlphaMode::Fixed(a) => a,
-        AlphaMode::Exact => {
-            let t = exact_power_traces(r, 6);
-            let c = chebyshev_coeffs(&t);
-            minimize_on_interval(&c, ALPHA_LO, ALPHA_HI).map(|(a, _)| a).unwrap_or(1.0)
-        }
+        AlphaMode::Exact => fit(&exact_power_traces(r, 6)),
         AlphaMode::Sketched { p } => {
-            let s = GaussianSketch::draw(rng, p, r.rows());
-            let t = s.power_traces(r, 6);
-            let c = chebyshev_coeffs(&t);
-            minimize_on_interval(&c, ALPHA_LO, ALPHA_HI).map(|(a, _)| a).unwrap_or(1.0)
+            with_sketched_traces(r, p, SketchKind::Gaussian, 6, rng, eng, ws, fit)
         }
         AlphaMode::SketchedKind { p, kind } => {
-            let s = kind.draw(rng, p, r.rows());
-            let t = s.power_traces(r, 6);
-            let c = chebyshev_coeffs(&t);
-            minimize_on_interval(&c, ALPHA_LO, ALPHA_HI).map(|(a, _)| a).unwrap_or(1.0)
+            with_sketched_traces(r, p, kind, 6, rng, eng, ws, fit)
         }
     }
 }
@@ -123,7 +125,7 @@ pub(crate) fn chebyshev_inverse_in(
         // the paper covers and a controlled heuristic otherwise.
         r_sym.copy_from(&r);
         r_sym.symmetrize();
-        let alpha = select_alpha(&r_sym, opts.alpha, rng);
+        let alpha = select_alpha(&r_sym, opts.alpha, rng, &eng, ws);
         eng.matmul_into(&mut r2, &r, &r);
         // G = I + R + αR²
         g.copy_from(&r);

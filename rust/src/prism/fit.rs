@@ -8,7 +8,7 @@ use crate::linalg::gemm::{GemmEngine, Workspace};
 use crate::linalg::Mat;
 use crate::polyfit::minimize_quartic;
 use crate::rng::Rng;
-use crate::sketch::{exact_power_traces, GaussianSketch};
+use crate::sketch::{exact_power_traces, with_sketched_traces, SketchKind};
 
 /// Taylor coefficient of ξ^d in f_d — the classical Newton–Schulz choice.
 /// f(ξ) = (1-ξ)^{-1/2} = 1 + ξ/2 + 3ξ²/8 + 5ξ³/16 + ...
@@ -17,7 +17,20 @@ pub fn taylor_alpha(d: usize) -> f64 {
 }
 
 /// Choose α for one Newton–Schulz iteration with residual `r` (symmetric).
-pub fn select_alpha_ns(r: &Mat, d: usize, mode: AlphaMode, rng: &mut Rng) -> f64 {
+///
+/// The sketched modes draw the p×n sketch buffer and the trace row from
+/// `ws` and propagate the sketch through `eng`'s skinny thin-A GEMM path —
+/// from the second same-shape call onward the fit performs **zero heap
+/// allocations** (the matfn allocation tests assert it through the
+/// solvers' [`Workspace::allocations`] counters).
+pub fn select_alpha_ns(
+    r: &Mat,
+    d: usize,
+    mode: AlphaMode,
+    rng: &mut Rng,
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) -> f64 {
     match mode {
         AlphaMode::Classic => taylor_alpha(d),
         AlphaMode::Fixed(a) => a,
@@ -25,15 +38,20 @@ pub fn select_alpha_ns(r: &Mat, d: usize, mode: AlphaMode, rng: &mut Rng) -> f64
             let t = exact_power_traces(r, traces_needed(d));
             alpha_from_traces(&t, d)
         }
-        AlphaMode::Sketched { p } => {
-            let s = GaussianSketch::draw(rng, p, r.rows());
-            let t = s.power_traces(r, traces_needed(d));
-            alpha_from_traces(&t, d)
-        }
+        AlphaMode::Sketched { p } => with_sketched_traces(
+            r,
+            p,
+            SketchKind::Gaussian,
+            traces_needed(d),
+            rng,
+            eng,
+            ws,
+            |t| alpha_from_traces(t, d),
+        ),
         AlphaMode::SketchedKind { p, kind } => {
-            let s = kind.draw(rng, p, r.rows());
-            let t = s.power_traces(r, traces_needed(d));
-            alpha_from_traces(&t, d)
+            with_sketched_traces(r, p, kind, traces_needed(d), rng, eng, ws, |t| {
+                alpha_from_traces(t, d)
+            })
         }
     }
 }
@@ -214,18 +232,22 @@ mod tests {
     #[test]
     fn classic_mode_returns_taylor() {
         let mut rng = Rng::seed_from(1);
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = Workspace::new();
         let r = Mat::eye(4);
-        assert_eq!(select_alpha_ns(&r, 1, AlphaMode::Classic, &mut rng), 0.5);
-        assert_eq!(select_alpha_ns(&r, 2, AlphaMode::Fixed(1.45), &mut rng), 1.45);
+        assert_eq!(select_alpha_ns(&r, 1, AlphaMode::Classic, &mut rng, &eng, &mut ws), 0.5);
+        assert_eq!(select_alpha_ns(&r, 2, AlphaMode::Fixed(1.45), &mut rng, &eng, &mut ws), 1.45);
     }
 
     #[test]
     fn exact_alpha_in_interval() {
         let mut rng = Rng::seed_from(2);
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = Workspace::new();
         for d in [1usize, 2] {
             let w: Vec<f64> = (0..12).map(|_| rng.uniform_in(0.0, 0.9)).collect();
             let r = randmat::sym_with_spectrum(&mut rng, 12, &w);
-            let a = select_alpha_ns(&r, d, AlphaMode::Exact, &mut rng);
+            let a = select_alpha_ns(&r, d, AlphaMode::Exact, &mut rng, &eng, &mut ws);
             let (lo, hi) = crate::coeffs::alpha_interval(d);
             assert!((lo..=hi).contains(&a), "d={d} a={a}");
         }
@@ -234,16 +256,36 @@ mod tests {
     #[test]
     fn sketched_close_to_exact_alpha() {
         let mut rng = Rng::seed_from(3);
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = Workspace::new();
         let w: Vec<f64> = (0..32).map(|_| rng.uniform_in(0.2, 0.95)).collect();
         let r = randmat::sym_with_spectrum(&mut rng, 32, &w);
-        let a_exact = select_alpha_ns(&r, 1, AlphaMode::Exact, &mut rng);
+        let a_exact = select_alpha_ns(&r, 1, AlphaMode::Exact, &mut rng, &eng, &mut ws);
         // Average of several sketched fits should track the exact fit.
         let reps = 20;
         let mean: f64 = (0..reps)
-            .map(|_| select_alpha_ns(&r, 1, AlphaMode::Sketched { p: 8 }, &mut rng))
+            .map(|_| select_alpha_ns(&r, 1, AlphaMode::Sketched { p: 8 }, &mut rng, &eng, &mut ws))
             .sum::<f64>()
             / reps as f64;
         assert!((mean - a_exact).abs() < 0.15, "mean={mean} exact={a_exact}");
+    }
+
+    #[test]
+    fn sketched_alpha_is_allocation_free_when_warm() {
+        let mut rng = Rng::seed_from(10);
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = Workspace::new();
+        let w: Vec<f64> = (0..24).map(|_| rng.uniform_in(0.2, 0.9)).collect();
+        let r = randmat::sym_with_spectrum(&mut rng, 24, &w);
+        let _ = select_alpha_ns(&r, 2, AlphaMode::Sketched { p: 8 }, &mut rng, &eng, &mut ws);
+        let allocs = ws.allocations();
+        assert!(allocs > 0);
+        for _ in 0..4 {
+            let a = select_alpha_ns(&r, 2, AlphaMode::Sketched { p: 8 }, &mut rng, &eng, &mut ws);
+            let (lo, hi) = crate::coeffs::alpha_interval(2);
+            assert!((lo..=hi).contains(&a));
+        }
+        assert_eq!(ws.allocations(), allocs, "warm sketched fit must not allocate");
     }
 
     #[test]

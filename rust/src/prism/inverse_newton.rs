@@ -11,11 +11,11 @@
 
 use super::driver::{AlphaMode, EngineHooks, IterationLog, RunRecorder, StopRule};
 use crate::coeffs::inverse_newton_coeffs;
-use crate::linalg::gemm::{global_engine, Workspace};
+use crate::linalg::gemm::{global_engine, GemmEngine, Workspace};
 use crate::linalg::Mat;
 use crate::polyfit::minimize_on_interval;
 use crate::rng::Rng;
-use crate::sketch::{exact_power_traces, GaussianSketch};
+use crate::sketch::{exact_power_traces, with_sketched_traces, SketchKind};
 
 #[derive(Debug, Clone)]
 pub struct InvRootOpts {
@@ -50,27 +50,30 @@ pub fn alpha_interval_p(p: usize) -> (f64, f64) {
     (1.0 / p as f64, 2.0 / p as f64)
 }
 
-fn select_alpha(r: &Mat, p: usize, mode: AlphaMode, rng: &mut Rng) -> f64 {
+/// The sketched modes draw the sketch and trace scratch from `ws` and
+/// propagate through `eng`'s skinny GEMM path — allocation-free when warm.
+fn select_alpha(
+    r: &Mat,
+    p: usize,
+    mode: AlphaMode,
+    rng: &mut Rng,
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) -> f64 {
     let (lo, hi) = alpha_interval_p(p);
+    let fit = |t: &[f64]| {
+        let c = inverse_newton_coeffs(t, p);
+        minimize_on_interval(&c, lo, hi).map(|(a, _)| a).unwrap_or(1.0 / p as f64)
+    };
     match mode {
         AlphaMode::Classic => 1.0 / p as f64,
         AlphaMode::Fixed(a) => a,
-        AlphaMode::Exact => {
-            let t = exact_power_traces(r, 2 * p + 2);
-            let c = inverse_newton_coeffs(&t, p);
-            minimize_on_interval(&c, lo, hi).map(|(a, _)| a).unwrap_or(1.0 / p as f64)
-        }
+        AlphaMode::Exact => fit(&exact_power_traces(r, 2 * p + 2)),
         AlphaMode::Sketched { p: sk } => {
-            let s = GaussianSketch::draw(rng, sk, r.rows());
-            let t = s.power_traces(r, 2 * p + 2);
-            let c = inverse_newton_coeffs(&t, p);
-            minimize_on_interval(&c, lo, hi).map(|(a, _)| a).unwrap_or(1.0 / p as f64)
+            with_sketched_traces(r, sk, SketchKind::Gaussian, 2 * p + 2, rng, eng, ws, fit)
         }
         AlphaMode::SketchedKind { p: sk, kind } => {
-            let s = kind.draw(rng, sk, r.rows());
-            let t = s.power_traces(r, 2 * p + 2);
-            let c = inverse_newton_coeffs(&t, p);
-            minimize_on_interval(&c, lo, hi).map(|(a, _)| a).unwrap_or(1.0 / p as f64)
+            with_sketched_traces(r, sk, kind, 2 * p + 2, rng, eng, ws, fit)
         }
     }
 }
@@ -152,7 +155,7 @@ pub(crate) fn inv_root_prism_in(
         if r.fro_norm() < opts.stop.tol {
             break;
         }
-        let alpha = select_alpha(&r, p, opts.alpha, rng);
+        let alpha = select_alpha(&r, p, opts.alpha, rng, &eng, ws);
         // G = I + αR
         g.copy_from(&r);
         g.scale(alpha);

@@ -113,9 +113,10 @@ pub(crate) fn polar_prism_in(
         }
     }
 
-    // Ping-pong buffers from the pool: the loop below is allocation-free
-    // (the α fit's O(np) sketch draw aside), and so is the whole call from
-    // the second same-shape solve onward.
+    // Ping-pong buffers from the pool: the loop below is allocation-free —
+    // including the α fit's sketch draw and trace propagation, which ride
+    // the same pool — and so is the whole call from the second same-shape
+    // solve onward.
     let mut xn = ws.take(m, n);
     let mut g = ws.take(n, n);
     let mut r = ws.take(n, n);
@@ -133,7 +134,7 @@ pub(crate) fn polar_prism_in(
         if r.fro_norm() < opts.stop.tol {
             break;
         }
-        let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng);
+        let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng, &eng, ws);
         if let Some(r2buf) = r2.as_mut() {
             eng.matmul_into(r2buf, &r, &r);
         }

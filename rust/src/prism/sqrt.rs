@@ -100,7 +100,7 @@ pub(crate) fn sqrt_prism_in(
         if r.fro_norm() < opts.stop.tol {
             break;
         }
-        let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng);
+        let alpha = select_alpha_ns(&r, opts.d, opts.alpha, rng, &eng, ws);
         if let Some(r2buf) = r2.as_mut() {
             eng.matmul_into(r2buf, &r, &r);
         }

@@ -8,7 +8,7 @@
 //! The module also provides exact traces (for tests and the ablation bench)
 //! and a Hutchinson estimator for comparison.
 
-use crate::linalg::gemm::matmul_a_bt;
+use crate::linalg::gemm::{global_engine, GemmEngine, Workspace};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -20,7 +20,7 @@ pub struct GaussianSketch {
 
 impl GaussianSketch {
     pub fn draw(rng: &mut Rng, p: usize, n: usize) -> Self {
-        GaussianSketch { s: Mat::gaussian(rng, p, n, 1.0 / (p as f64).sqrt()) }
+        SketchKind::Gaussian.draw(rng, p, n)
     }
 
     pub fn p(&self) -> usize {
@@ -30,39 +30,97 @@ impl GaussianSketch {
         self.s.cols()
     }
 
-    /// Sketched power traces `[tr(S R¹ Sᵀ), ..., tr(S R^q Sᵀ)]` for symmetric
-    /// `R`, computed right-to-left: `Y_0 = Sᵀ`, `Y_i = R Y_{i-1}`, and
-    /// `tr(S R^i Sᵀ) = sum_jk S[j,k] * Y_i[k,j]`.
-    ///
-    /// Cost: q multiplications of (n x n) by (n x p) = O(q n² p), done as a
-    /// ping-pong over two reused p × n panels (no per-power allocation).
+    /// Sketched power traces `[tr(S R¹ Sᵀ), ..., tr(S R^q Sᵀ)]`. Allocating
+    /// convenience wrapper over [`power_traces_into`] (throwaway workspace,
+    /// global engine); hot-loop callers — the α fits in `prism::fit` and
+    /// friends — use the `_into` form with their solver's pooled
+    /// [`Workspace`] so the steady state allocates nothing.
     pub fn power_traces(&self, r: &Mat, q: usize) -> Vec<f64> {
-        assert!(r.is_square());
-        assert_eq!(r.rows(), self.n(), "sketch width mismatch");
-        // Keep the panel TRANSPOSED (p × n): because R is symmetric,
-        // Yᵀ_{i} = Yᵀ_{i-1} · R, and a (p × n)·(n × n) product gives the
-        // GEMM kernel full n-wide inner loops — the natural (n × p) panel
-        // has p-wide (≈8-element) inner loops that cannot vectorise well
-        // (§Perf change 7: 2.7x on the trace path at n = 512, p = 8).
-        let eng = crate::linalg::gemm::global_engine();
-        let mut yt = self.s.clone();
-        let mut yn = Mat::zeros(self.p(), self.n());
-        let mut traces = Vec::with_capacity(q);
-        for _ in 0..q {
-            eng.matmul_into(&mut yn, &yt, r);
-            std::mem::swap(&mut yt, &mut yn);
-            // tr(S R^i Sᵀ) = Σ_{j,k} S[j,k] · Yᵀ[j,k] — an elementwise dot.
-            let t: f64 = self
-                .s
-                .as_slice()
-                .iter()
-                .zip(yt.as_slice())
-                .map(|(a, b)| a * b)
-                .sum();
-            traces.push(t);
-        }
-        traces
+        let mut out = vec![0.0; q];
+        power_traces_into(&self.s, r, &mut out, &global_engine(), &mut Workspace::new());
+        out
     }
+
+    /// Workspace-pooled form of [`GaussianSketch::power_traces`]: fills
+    /// `out` (length q) drawing every panel from `ws`.
+    pub fn power_traces_in(
+        &self,
+        r: &Mat,
+        out: &mut [f64],
+        eng: &GemmEngine,
+        ws: &mut Workspace,
+    ) {
+        power_traces_into(&self.s, r, out, eng, ws);
+    }
+}
+
+/// Sketched power traces `out[i-1] = tr(S R^i Sᵀ)`, i = 1..=out.len(), for
+/// symmetric `R` and a p×n sketch `s`, computed right-to-left: `Y_0 = Sᵀ`,
+/// `Y_i = R Y_{i-1}`, and `tr(S R^i Sᵀ) = Σ_{j,k} S[j,k] · Y_i[k,j]`.
+///
+/// Cost: q products of (p × n)·(n × n) = O(q n² p). The panel is kept
+/// TRANSPOSED (p × n): because R is symmetric, `Yᵀ_i = Yᵀ_{i-1} · R`, and
+/// the skinny (p × n)·(n × n) shape routes through the GEMM engine's
+/// thin-A fast path (p ≤ MR) — S is packed once per product and R streams
+/// unpacked, instead of the square-blocked path packing all of R per power
+/// (§Perf change 7 measured 2.7x for the transposed layout at n = 512,
+/// p = 8; the thin-A routing compounds it). Both ping-pong panels come from
+/// `ws`, so from the second same-shape call onward the computation performs
+/// **zero heap allocations** (asserted by the matfn allocation tests via
+/// [`Workspace::allocations`]).
+pub fn power_traces_into(
+    s: &Mat,
+    r: &Mat,
+    out: &mut [f64],
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) {
+    assert!(r.is_square());
+    assert_eq!(r.rows(), s.cols(), "sketch width mismatch");
+    let (p, n) = s.shape();
+    let mut yt = ws.take(p, n);
+    yt.copy_from(s);
+    let mut yn = ws.take(p, n);
+    for slot in out.iter_mut() {
+        eng.matmul_into(&mut yn, &yt, r);
+        std::mem::swap(&mut yt, &mut yn);
+        // tr(S R^i Sᵀ) = Σ_{j,k} S[j,k] · Yᵀ[j,k] — an elementwise dot.
+        *slot = s
+            .as_slice()
+            .iter()
+            .zip(yt.as_slice())
+            .map(|(a, b)| a * b)
+            .sum();
+    }
+    ws.put(yt);
+    ws.put(yn);
+}
+
+/// Draw a fresh p×n sketch of `kind` into pooled scratch, compute the first
+/// `q` sketched power traces of symmetric `r` through the skinny GEMM path,
+/// and hand the trace row to `f` — the shared primitive behind every
+/// PRISM α fit (`prism::fit`, inverse Newton, Chebyshev). All scratch (the
+/// sketch, the 1×q trace row, the propagation panels) comes from `ws`, so a
+/// warm same-shape steady state performs zero heap allocations.
+#[allow(clippy::too_many_arguments)]
+pub fn with_sketched_traces<T>(
+    r: &Mat,
+    p: usize,
+    kind: SketchKind,
+    q: usize,
+    rng: &mut Rng,
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+    f: impl FnOnce(&[f64]) -> T,
+) -> T {
+    let mut s = ws.take(p, r.rows());
+    kind.fill(&mut s, rng);
+    let mut t = ws.take(1, q);
+    power_traces_into(&s, r, t.as_mut_slice(), eng, ws);
+    let out = f(t.as_slice());
+    ws.put(s);
+    ws.put(t);
+    out
 }
 
 /// Alternative sketch families — the paper notes "there are many plausible
@@ -95,57 +153,78 @@ impl SketchKind {
         }
     }
 
-    /// Draw a p×n sketch of this kind (dense representation, shared
-    /// [`GaussianSketch`] container so `power_traces` works unchanged).
-    pub fn draw(&self, rng: &mut Rng, p: usize, n: usize) -> GaussianSketch {
-        let s = match self {
-            SketchKind::Gaussian => Mat::gaussian(rng, p, n, 1.0 / (p as f64).sqrt()),
+    /// Fill an existing p×n buffer with a fresh sketch of this kind — the
+    /// allocation-free primitive the α-fit hot loops use (the buffer comes
+    /// from the solver's [`Workspace`] and is reused every iteration).
+    /// Every entry of `s` is overwritten; the RNG consumption is identical
+    /// to [`SketchKind::draw`] for the same kind and shape, so pooled and
+    /// allocating callers see bit-identical sketches from equal seeds.
+    pub fn fill(&self, s: &mut Mat, rng: &mut Rng) {
+        let (p, n) = s.shape();
+        match self {
+            SketchKind::Gaussian => {
+                let v = 1.0 / (p as f64).sqrt();
+                for x in s.as_mut_slice() {
+                    *x = rng.normal() * v;
+                }
+            }
             SketchKind::Rademacher => {
                 let v = 1.0 / (p as f64).sqrt();
-                let mut s = Mat::zeros(p, n);
                 for i in 0..p {
                     for j in 0..n {
                         s[(i, j)] = if rng.uniform() < 0.5 { -v } else { v };
                     }
                 }
-                s
             }
             SketchKind::CountSketch => {
                 // One ±1 per column in a uniformly random row: E[SᵀS] = I,
                 // so tr(S M Sᵀ) is unbiased for tr(M).
-                let mut s = Mat::zeros(p, n);
+                s.fill_with(0.0);
                 for j in 0..n {
                     let row = rng.below(p);
                     s[(row, j)] = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
                 }
-                s
             }
-            SketchKind::Srht => srht_dense(rng, p, n),
-        };
+            SketchKind::Srht => srht_fill(rng, s),
+        }
+    }
+
+    /// Draw a p×n sketch of this kind (dense representation, shared
+    /// [`GaussianSketch`] container so `power_traces` works unchanged).
+    /// Allocating wrapper over [`SketchKind::fill`].
+    pub fn draw(&self, rng: &mut Rng, p: usize, n: usize) -> GaussianSketch {
+        let mut s = Mat::zeros(p, n);
+        self.fill(&mut s, rng);
         GaussianSketch { s }
     }
 }
 
-/// Dense SRHT rows. Row i is `H[r_i, ·] ⊙ signs / √p` where `r_i` is a
-/// sampled row index of the n2×n2 Walsh–Hadamard pattern
+/// Dense SRHT rows, written into `s` (p×n). Row i is `H[r_i, ·] ⊙ signs/√p`
+/// where `r_i` is a sampled row index of the n2×n2 Walsh–Hadamard pattern
 /// `H[i,j] = (−1)^{popcount(i & j)}`, n2 = next power of two ≥ n. The
 /// 1/√n2 Hadamard normalization and the √(n2/p) subsampling correction
 /// combine to 1/√p, keeping `E[tr(S M Sᵀ)] = tr(M)`.
-fn srht_dense(rng: &mut Rng, p: usize, n: usize) -> Mat {
+///
+/// Allocation-free like the other families: the sign vector is stashed in
+/// `s`'s last row (which is transformed last, element-wise read-before-
+/// write), and the RNG draw order — n sign draws, then p row samples —
+/// matches the natural two-pass formulation exactly.
+fn srht_fill(rng: &mut Rng, s: &mut Mat) {
+    let (p, n) = s.shape();
     let n2 = n.next_power_of_two();
-    let signs: Vec<f64> = (0..n)
-        .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
-        .collect();
     let scale = 1.0 / (p as f64).sqrt();
-    let mut s = Mat::zeros(p, n);
+    for j in 0..n {
+        s[(p - 1, j)] = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+    }
     for i in 0..p {
         let ri = rng.below(n2);
         for j in 0..n {
             let h = if (ri & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
-            s[(i, j)] = h * signs[j] * scale;
+            // signs[j] lives at s[(p-1, j)] until that row's own transform
+            // (i == p-1) consumes each entry exactly once.
+            s[(i, j)] = h * s[(p - 1, j)] * scale;
         }
     }
-    s
 }
 
 /// Exact power traces `tr(R^i)` for i = 1..q — O(q n³); test/ablation only.
@@ -183,9 +262,12 @@ pub fn hutchinson_power_traces(rng: &mut Rng, r: &Mat, q: usize, probes: usize) 
 }
 
 /// Sketched squared Frobenius norm `‖S M‖_F²` (used by tests to validate the
-/// OSE property on our Gaussian sketches).
+/// OSE property on our Gaussian sketches). The skinny (p × n)·(n × m)
+/// product routes through the engine's thin-A path — S packed once, M
+/// streamed, no transpose materialised (this used to go through
+/// `matmul_a_bt` on an explicitly transposed M).
 pub fn sketched_fro_sq(s: &GaussianSketch, m: &Mat) -> f64 {
-    let sm = matmul_a_bt(&s.s, &m.transpose());
+    let sm = global_engine().matmul(&s.s, m);
     sm.fro_norm_sq()
 }
 
@@ -261,6 +343,49 @@ mod tests {
             );
             assert!((srs.trace() - t[i]).abs() < 1e-9, "i={i}");
             ri = crate::linalg::gemm::matmul(&ri, &r);
+        }
+    }
+
+    #[test]
+    fn power_traces_into_is_allocation_free_when_warm() {
+        // The satellite contract: steady-state sketch power traces draw
+        // every panel from the caller's Workspace — zero heap allocations
+        // from the second same-shape call onward — and agree exactly with
+        // the allocating wrapper (same engine ⇒ same path ⇒ bitwise equal).
+        let mut rng = Rng::seed_from(10);
+        let n = 32;
+        let r = sym(&mut rng, n);
+        let s = GaussianSketch::draw(&mut rng, 8, n);
+        let eng = crate::linalg::gemm::GemmEngine::sequential();
+        let mut ws = crate::linalg::gemm::Workspace::new();
+        let mut out = [0.0; 6];
+        s.power_traces_in(&r, &mut out, &eng, &mut ws);
+        let allocs = ws.allocations();
+        assert!(allocs > 0, "cold call populates the pool");
+        for _ in 0..3 {
+            s.power_traces_in(&r, &mut out, &eng, &mut ws);
+        }
+        assert_eq!(ws.allocations(), allocs, "warm power traces must not allocate");
+        assert_eq!(out.to_vec(), s.power_traces(&r, 6), "pooled and allocating paths agree");
+    }
+
+    #[test]
+    fn fill_matches_draw_rng_stream() {
+        // fill() into a recycled buffer must produce the same sketch as a
+        // fresh draw() from an equally-seeded RNG — the engines rely on
+        // this to keep their α sequences identical to the allocating path.
+        for kind in [
+            SketchKind::Gaussian,
+            SketchKind::Rademacher,
+            SketchKind::CountSketch,
+            SketchKind::Srht,
+        ] {
+            let mut r1 = Rng::seed_from(77);
+            let mut r2 = Rng::seed_from(77);
+            let drawn = kind.draw(&mut r1, 5, 12);
+            let mut buf = Mat::gaussian(&mut Rng::seed_from(0), 5, 12, 1.0); // dirty buffer
+            kind.fill(&mut buf, &mut r2);
+            assert_eq!(buf, drawn.s, "{}", kind.name());
         }
     }
 

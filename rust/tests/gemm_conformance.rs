@@ -1,12 +1,21 @@
-//! GEMM cross-check suite for the packed cache-blocked engine: every packed
+//! GEMM cross-check suite for the packed cache-blocked engine, run **once
+//! per available microkernel** (scalar everywhere, plus AVX2/NEON where the
+//! host supports them, forced via `GemmEngine::with_kernel`): every packed
 //! path (plain, transposed forms, both SYRKs) against `matmul_naive` on an
-//! adversarial shape grid straddling all blocking boundaries, plus the
-//! determinism contract — bit-identical output at pool sizes 1/2/4 (and 8)
-//! — and a cross-check against the independent seed broadcast kernel.
+//! adversarial shape grid straddling all blocking boundaries, the skinny
+//! fast paths (thin-A / thin-B / dims-of-one GEMV), plus the determinism
+//! contract — bit-identical output at pool sizes 1/2/4 (and 8) **per
+//! kernel** — and a cross-check against the independent seed broadcast
+//! kernel.
+//!
+//! Determinism is per-kernel: the SIMD kernels use fused multiply-add (one
+//! rounding per step) where the scalar kernel rounds twice, so
+//! cross-kernel **bit equality is NOT required or asserted** — kernels are
+//! compared to the naive reference at tolerance instead.
 
 use prism::linalg::gemm::{
     gemm_broadcast, matmul, matmul_a_bt, matmul_at_b, matmul_naive, syrk_a_at, syrk_at_a,
-    GemmBlocking, GemmEngine, GemmScope, Workspace,
+    GemmBlocking, GemmEngine, GemmScope, MicroKernel, Workspace,
 };
 use prism::linalg::Mat;
 use prism::ptest::{gens, Prop};
@@ -29,31 +38,137 @@ fn assert_close(got: &Mat, want: &Mat, tol: f64, what: &str) {
     assert!(err < tol, "{what}: err {err}");
 }
 
+/// Engines at pool sizes 1/2/4 pinned to one microkernel.
+fn engines_for(kern: MicroKernel) -> [GemmEngine; 3] {
+    [
+        GemmEngine::with_threads(1).with_kernel(kern),
+        GemmEngine::with_threads(2).with_kernel(kern),
+        GemmEngine::with_threads(4).with_kernel(kern),
+    ]
+}
+
 /// The satellite's adversarial grid: every m, n, k drawn from this set. The
-/// values straddle the 8-row/4-col micro-tile, the MIN_PANEL_ROWS parallel
-/// threshold (16), and force ragged edges on every packing path.
+/// values straddle the 8-row/4-col micro-tile (and with it the thin-A /
+/// thin-B skinny routing thresholds), the MIN_PANEL_ROWS parallel threshold
+/// (16), and force ragged edges on every packing path.
 const ADVERSARIAL: &[usize] = &[1, 3, 7, 17, 63, 65, 100];
 
-/// Full m×k×n cross product of the adversarial grid: the packed kernel vs
-/// the naive reference within 1e-12, and (where the parallel dispatch can
-/// engage) pool sizes 1/2/4 bit-identical.
+/// Full m×k×n cross product of the adversarial grid, once per available
+/// kernel: the packed/skinny paths vs the naive reference within 1e-12, and
+/// (where the parallel dispatch can engage) pool sizes 1/2/4 bit-identical.
 #[test]
 fn adversarial_shapes_match_naive_and_pools_agree() {
-    let engines =
-        [GemmEngine::with_threads(1), GemmEngine::with_threads(2), GemmEngine::with_threads(4)];
-    let mut rng = Rng::seed_from(1);
-    for &m in ADVERSARIAL {
+    for kern in MicroKernel::available() {
+        let engines = engines_for(kern);
+        let mut rng = Rng::seed_from(1);
+        for &m in ADVERSARIAL {
+            for &k in ADVERSARIAL {
+                for &n in ADVERSARIAL {
+                    let a = Mat::gaussian(&mut rng, m, k, 1.0);
+                    let b = Mat::gaussian(&mut rng, k, n, 1.0);
+                    let base = engines[0].matmul(&a, &b);
+                    assert_close(
+                        &base,
+                        &matmul_naive(&a, &b),
+                        1e-12,
+                        &format!("{} {m}x{k}x{n}", kern.name()),
+                    );
+                    for e in &engines[1..] {
+                        assert_eq!(
+                            base.as_slice(),
+                            e.matmul(&a, &b).as_slice(),
+                            "{} matmul {m}x{k}x{n} differs at {} threads",
+                            kern.name(),
+                            e.threads()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Transposed packing paths (`AᵀB`, `ABᵀ`) over the adversarial (m, n) grid
+/// against naive-on-explicit-transpose, with pool-size determinism, per
+/// kernel (the skinny rows exercise the strided streaming branches).
+#[test]
+fn adversarial_transposed_forms_match_naive() {
+    for kern in MicroKernel::available() {
+        let engines = engines_for(kern);
+        let mut rng = Rng::seed_from(2);
+        let k = 17; // one mid-grid shared dim keeps the suite O(seconds)
+        for &m in ADVERSARIAL {
+            for &n in ADVERSARIAL {
+                // Aᵀ·B with A: k×m, B: k×n.
+                let a = Mat::gaussian(&mut rng, k, m, 1.0);
+                let b = Mat::gaussian(&mut rng, k, n, 1.0);
+                let base_atb = engines[0].matmul_at_b(&a, &b);
+                assert_close(
+                    &base_atb,
+                    &matmul_naive(&a.transpose(), &b),
+                    1e-12,
+                    &format!("{} at_b {m}x{k}x{n}", kern.name()),
+                );
+                // A·Bᵀ with A: m×k, B: n×k.
+                let a2 = Mat::gaussian(&mut rng, m, k, 1.0);
+                let b2 = Mat::gaussian(&mut rng, n, k, 1.0);
+                let base_abt = engines[0].matmul_a_bt(&a2, &b2);
+                assert_close(
+                    &base_abt,
+                    &matmul_naive(&a2, &b2.transpose()),
+                    1e-12,
+                    &format!("{} a_bt {m}x{k}x{n}", kern.name()),
+                );
+                for e in &engines[1..] {
+                    assert_eq!(base_atb.as_slice(), e.matmul_at_b(&a, &b).as_slice());
+                    assert_eq!(base_abt.as_slice(), e.matmul_a_bt(&a2, &b2).as_slice());
+                }
+            }
+        }
+    }
+}
+
+/// Both SYRK forms over the adversarial (k, n) grid, per kernel: exact
+/// value vs naive, exact symmetry, and pool-size determinism for the
+/// triangle-restricted packed path (the skipped-tile filter must be
+/// partition-independent).
+#[test]
+fn adversarial_syrk_matches_naive() {
+    for kern in MicroKernel::available() {
+        let engines = engines_for(kern);
+        let mut rng = Rng::seed_from(3);
         for &k in ADVERSARIAL {
             for &n in ADVERSARIAL {
-                let a = Mat::gaussian(&mut rng, m, k, 1.0);
-                let b = Mat::gaussian(&mut rng, k, n, 1.0);
-                let base = engines[0].matmul(&a, &b);
-                assert_close(&base, &matmul_naive(&a, &b), 1e-12, &format!("{m}x{k}x{n}"));
+                let a = Mat::gaussian(&mut rng, k, n, 1.0);
+                let base_at = engines[0].syrk_at_a(&a);
+                assert_close(
+                    &base_at,
+                    &matmul_naive(&a.transpose(), &a),
+                    1e-12,
+                    &format!("{} syrk_at_a {k}x{n}", kern.name()),
+                );
+                assert_eq!(base_at.symmetry_defect(), 0.0);
+                let base_aat = engines[0].syrk_a_at(&a);
+                assert_close(
+                    &base_aat,
+                    &matmul_naive(&a, &a.transpose()),
+                    1e-12,
+                    &format!("{} syrk_a_at {k}x{n}", kern.name()),
+                );
+                assert_eq!(base_aat.symmetry_defect(), 0.0);
                 for e in &engines[1..] {
                     assert_eq!(
-                        base.as_slice(),
-                        e.matmul(&a, &b).as_slice(),
-                        "matmul {m}x{k}x{n} differs at {} threads",
+                        base_at.as_slice(),
+                        e.syrk_at_a(&a).as_slice(),
+                        "{} syrk_at_a {k}x{n} differs at {} threads",
+                        kern.name(),
+                        e.threads()
+                    );
+                    assert_eq!(
+                        base_aat.as_slice(),
+                        e.syrk_a_at(&a).as_slice(),
+                        "{} syrk_a_at {k}x{n} differs at {} threads",
+                        kern.name(),
                         e.threads()
                     );
                 }
@@ -62,85 +177,70 @@ fn adversarial_shapes_match_naive_and_pools_agree() {
     }
 }
 
-/// Transposed packing paths (`AᵀB`, `ABᵀ`) over the adversarial (m, n) grid
-/// against naive-on-explicit-transpose, with pool-size determinism.
+/// Regression for the `GemmBlocking::clamped` / skinny-path interaction:
+/// products with m, n, or k = 1 must stay correct on every kernel, at every
+/// pool size, and under a blocking whose NC ≥ NR floor used to inflate a
+/// 1-column GEMV with packed zero-padding — the skinny routing bypasses
+/// the blocked path (and therefore the clamp) entirely, which the
+/// bit-identity across wildly different blockings pins down.
 #[test]
-fn adversarial_transposed_forms_match_naive() {
-    let engines =
-        [GemmEngine::with_threads(1), GemmEngine::with_threads(2), GemmEngine::with_threads(4)];
-    let mut rng = Rng::seed_from(2);
-    let k = 17; // one mid-grid shared dim keeps the suite O(seconds)
-    for &m in ADVERSARIAL {
-        for &n in ADVERSARIAL {
-            // Aᵀ·B with A: k×m, B: k×n.
-            let a = Mat::gaussian(&mut rng, k, m, 1.0);
+fn dims_of_one_conform_on_every_kernel() {
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 1, 9),
+        (1, 9, 1),
+        (9, 1, 1),
+        (1, 33, 65),
+        (65, 33, 1),
+        (64, 1, 64),
+        (1, 300, 1),
+    ];
+    for kern in MicroKernel::available() {
+        for &(m, k, n) in shapes {
+            let mut rng = Rng::seed_from(4);
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
             let b = Mat::gaussian(&mut rng, k, n, 1.0);
-            let base_atb = engines[0].matmul_at_b(&a, &b);
+            let base = GemmEngine::sequential().with_kernel(kern).matmul(&a, &b);
             assert_close(
-                &base_atb,
-                &matmul_naive(&a.transpose(), &b),
+                &base,
+                &matmul_naive(&a, &b),
                 1e-12,
-                &format!("at_b {m}x{k}x{n}"),
+                &format!("{} {m}x{k}x{n}", kern.name()),
             );
-            // A·Bᵀ with A: m×k, B: n×k.
-            let a2 = Mat::gaussian(&mut rng, m, k, 1.0);
-            let b2 = Mat::gaussian(&mut rng, n, k, 1.0);
-            let base_abt = engines[0].matmul_a_bt(&a2, &b2);
-            assert_close(
-                &base_abt,
-                &matmul_naive(&a2, &b2.transpose()),
-                1e-12,
-                &format!("a_bt {m}x{k}x{n}"),
-            );
-            for e in &engines[1..] {
-                assert_eq!(base_atb.as_slice(), e.matmul_at_b(&a, &b).as_slice());
-                assert_eq!(base_abt.as_slice(), e.matmul_a_bt(&a2, &b2).as_slice());
-            }
-        }
-    }
-}
-
-/// Both SYRK forms over the adversarial (k, n) grid: exact value vs naive,
-/// exact symmetry, and pool-size determinism for the triangle-restricted
-/// packed path (the skipped-tile filter must be partition-independent).
-#[test]
-fn adversarial_syrk_matches_naive() {
-    let engines =
-        [GemmEngine::with_threads(1), GemmEngine::with_threads(2), GemmEngine::with_threads(4)];
-    let mut rng = Rng::seed_from(3);
-    for &k in ADVERSARIAL {
-        for &n in ADVERSARIAL {
-            let a = Mat::gaussian(&mut rng, k, n, 1.0);
-            let base_at = engines[0].syrk_at_a(&a);
-            assert_close(
-                &base_at,
-                &matmul_naive(&a.transpose(), &a),
-                1e-12,
-                &format!("syrk_at_a {k}x{n}"),
-            );
-            assert_eq!(base_at.symmetry_defect(), 0.0);
-            let base_aat = engines[0].syrk_a_at(&a);
-            assert_close(
-                &base_aat,
-                &matmul_naive(&a, &a.transpose()),
-                1e-12,
-                &format!("syrk_a_at {k}x{n}"),
-            );
-            assert_eq!(base_aat.symmetry_defect(), 0.0);
-            for e in &engines[1..] {
+            // Pool sizes agree bitwise (GEMV accumulation is pure k order).
+            for threads in [2usize, 4] {
+                let par = GemmEngine::with_threads(threads).with_kernel(kern);
                 assert_eq!(
-                    base_at.as_slice(),
-                    e.syrk_at_a(&a).as_slice(),
-                    "syrk_at_a {k}x{n} differs at {} threads",
-                    e.threads()
-                );
-                assert_eq!(
-                    base_aat.as_slice(),
-                    e.syrk_a_at(&a).as_slice(),
-                    "syrk_a_at {k}x{n} differs at {} threads",
-                    e.threads()
+                    base.as_slice(),
+                    par.matmul(&a, &b).as_slice(),
+                    "{} {m}x{k}x{n} differs at {threads} threads",
+                    kern.name()
                 );
             }
+            // Blockings agree bitwise for every shape in this table: the
+            // skinny routes (m ≤ 8 or n ≤ 4) bypass the NC/KC grid
+            // entirely, and the one blocked shape (64×1×64) has k = 1, so
+            // each element is a single product no regrouping can change.
+            // Either way the clamp cannot inflate the work or the result.
+            for blk in [
+                GemmBlocking { mc: 128, kc: 256, nc: 512 },
+                GemmBlocking { mc: 1, kc: 1, nc: 1 },
+                GemmBlocking { mc: 16, kc: 7, nc: 13 },
+            ] {
+                let eng = GemmEngine::sequential().with_kernel(kern).with_blocking(blk);
+                assert_eq!(
+                    base.as_slice(),
+                    eng.matmul(&a, &b).as_slice(),
+                    "{} {m}x{k}x{n} differs under blocking {}",
+                    kern.name(),
+                    blk.display()
+                );
+            }
+            // And k = 1 / n = 1 SYRKs stay exact and symmetric.
+            let g = Mat::gaussian(&mut rng, k, n, 1.0);
+            let s = GemmEngine::sequential().with_kernel(kern).syrk_at_a(&g);
+            assert_close(&s, &matmul_naive(&g.transpose(), &g), 1e-12, "syrk dims-of-one");
+            assert_eq!(s.symmetry_defect(), 0.0);
         }
     }
 }
@@ -149,28 +249,30 @@ fn adversarial_syrk_matches_naive() {
 /// stay correct; a parallel engine at the same blocking stays bit-identical.
 #[test]
 fn custom_blockings_conform() {
-    let mut rng = Rng::seed_from(4);
-    for blk in [
-        GemmBlocking { mc: 8, kc: 4, nc: 4 },
-        GemmBlocking { mc: 16, kc: 7, nc: 13 },
-        GemmBlocking { mc: 24, kc: 32, nc: 20 },
-    ] {
-        let seq = GemmEngine::sequential().with_blocking(blk);
-        let par = GemmEngine::with_threads(4).with_blocking(blk);
-        for &(m, k, n) in &[(5, 9, 3), (33, 33, 33), (65, 40, 51)] {
-            let a = Mat::gaussian(&mut rng, m, k, 1.0);
-            let b = Mat::gaussian(&mut rng, k, n, 1.0);
-            let got = seq.matmul(&a, &b);
-            assert_close(
-                &got,
-                &matmul_naive(&a, &b),
-                1e-12,
-                &format!("blk {} {m}x{k}x{n}", blk.display()),
-            );
-            assert_eq!(got.as_slice(), par.matmul(&a, &b).as_slice());
-            let s = seq.syrk_at_a(&a);
-            assert_close(&s, &matmul_naive(&a.transpose(), &a), 1e-12, "blk syrk");
-            assert_eq!(s.as_slice(), par.syrk_at_a(&a).as_slice());
+    for kern in MicroKernel::available() {
+        let mut rng = Rng::seed_from(4);
+        for blk in [
+            GemmBlocking { mc: 8, kc: 4, nc: 4 },
+            GemmBlocking { mc: 16, kc: 7, nc: 13 },
+            GemmBlocking { mc: 24, kc: 32, nc: 20 },
+        ] {
+            let seq = GemmEngine::sequential().with_blocking(blk).with_kernel(kern);
+            let par = GemmEngine::with_threads(4).with_blocking(blk).with_kernel(kern);
+            for &(m, k, n) in &[(5, 9, 3), (33, 33, 33), (65, 40, 51)] {
+                let a = Mat::gaussian(&mut rng, m, k, 1.0);
+                let b = Mat::gaussian(&mut rng, k, n, 1.0);
+                let got = seq.matmul(&a, &b);
+                assert_close(
+                    &got,
+                    &matmul_naive(&a, &b),
+                    1e-12,
+                    &format!("{} blk {} {m}x{k}x{n}", kern.name(), blk.display()),
+                );
+                assert_eq!(got.as_slice(), par.matmul(&a, &b).as_slice());
+                let s = seq.syrk_at_a(&a);
+                assert_close(&s, &matmul_naive(&a.transpose(), &a), 1e-12, "blk syrk");
+                assert_eq!(s.as_slice(), par.syrk_at_a(&a).as_slice());
+            }
         }
     }
 }
@@ -223,51 +325,57 @@ fn property_syrk_matches_broadcast() {
 
 #[test]
 fn pool_sizes_1_2_8_bit_identical() {
-    let engines = [
-        GemmEngine::with_threads(1),
-        GemmEngine::with_threads(2),
-        GemmEngine::with_threads(8),
-    ];
-    assert_eq!(engines[0].threads(), 1);
-    assert_eq!(engines[1].threads(), 2);
-    assert_eq!(engines[2].threads(), 8);
-    let mut rng = Rng::seed_from(2);
-    // Shapes below, at, and well above the parallel dispatch threshold,
-    // including panel splits that leave ragged remainders.
-    for &(m, k, n) in &[(3, 5, 4), (16, 16, 16), (17, 33, 29), (70, 41, 67), (128, 64, 96)] {
-        let a = Mat::gaussian(&mut rng, m, k, 1.0);
-        let b = Mat::gaussian(&mut rng, k, n, 1.0);
-        let base_mm = engines[0].matmul(&a, &b);
-        let base_syrk = engines[0].syrk_at_a(&a);
-        let base_syrk2 = engines[0].syrk_a_at(&a);
-        let base_atb = engines[0].matmul_at_b(&a, &a);
-        for e in &engines[1..] {
-            assert_eq!(
-                base_mm.as_slice(),
-                e.matmul(&a, &b).as_slice(),
-                "matmul {m}x{k}x{n} differs at {} threads",
-                e.threads()
-            );
-            assert_eq!(
-                base_syrk.as_slice(),
-                e.syrk_at_a(&a).as_slice(),
-                "syrk_at_a {m}x{k} differs at {} threads",
-                e.threads()
-            );
-            assert_eq!(
-                base_syrk2.as_slice(),
-                e.syrk_a_at(&a).as_slice(),
-                "syrk_a_at {m}x{k} differs at {} threads",
-                e.threads()
-            );
-            let mut c = Mat::zeros(0, 0);
-            e.matmul_at_b_into(&mut c, &a, &a);
-            assert_eq!(
-                base_atb.as_slice(),
-                c.as_slice(),
-                "matmul_at_b differs at {} threads",
-                e.threads()
-            );
+    for kern in MicroKernel::available() {
+        let engines = [
+            GemmEngine::with_threads(1).with_kernel(kern),
+            GemmEngine::with_threads(2).with_kernel(kern),
+            GemmEngine::with_threads(8).with_kernel(kern),
+        ];
+        assert_eq!(engines[0].threads(), 1);
+        assert_eq!(engines[1].threads(), 2);
+        assert_eq!(engines[2].threads(), 8);
+        let mut rng = Rng::seed_from(2);
+        // Shapes below, at, and well above the parallel dispatch threshold,
+        // including panel splits that leave ragged remainders.
+        for &(m, k, n) in &[(3, 5, 4), (16, 16, 16), (17, 33, 29), (70, 41, 67), (128, 64, 96)] {
+            let a = Mat::gaussian(&mut rng, m, k, 1.0);
+            let b = Mat::gaussian(&mut rng, k, n, 1.0);
+            let base_mm = engines[0].matmul(&a, &b);
+            let base_syrk = engines[0].syrk_at_a(&a);
+            let base_syrk2 = engines[0].syrk_a_at(&a);
+            let base_atb = engines[0].matmul_at_b(&a, &a);
+            for e in &engines[1..] {
+                assert_eq!(
+                    base_mm.as_slice(),
+                    e.matmul(&a, &b).as_slice(),
+                    "{} matmul {m}x{k}x{n} differs at {} threads",
+                    kern.name(),
+                    e.threads()
+                );
+                assert_eq!(
+                    base_syrk.as_slice(),
+                    e.syrk_at_a(&a).as_slice(),
+                    "{} syrk_at_a {m}x{k} differs at {} threads",
+                    kern.name(),
+                    e.threads()
+                );
+                assert_eq!(
+                    base_syrk2.as_slice(),
+                    e.syrk_a_at(&a).as_slice(),
+                    "{} syrk_a_at {m}x{k} differs at {} threads",
+                    kern.name(),
+                    e.threads()
+                );
+                let mut c = Mat::zeros(0, 0);
+                e.matmul_at_b_into(&mut c, &a, &a);
+                assert_eq!(
+                    base_atb.as_slice(),
+                    c.as_slice(),
+                    "{} matmul_at_b differs at {} threads",
+                    kern.name(),
+                    e.threads()
+                );
+            }
         }
     }
 }

@@ -68,6 +68,12 @@ fn unknown_names_list_the_valid_options() {
 
 #[test]
 fn reused_solvers_run_allocation_free_for_every_engine() {
+    // This covers the *whole* hot loop, including the sketched α fits: the
+    // PRISM solvers below run AlphaMode::Sketched, whose sketch draw, 1×q
+    // trace row, and power-trace ping-pong panels all come from the same
+    // solver Workspace this test watches — so a steady-state solve performs
+    // zero heap allocations end to end (the satellite contract for
+    // `sketch::power_traces_into`).
     let mut rng = Rng::seed_from(1);
     let tall = randmat::gaussian(&mut rng, 20, 10);
     let w = randmat::logspace(1e-2, 1.0, 12);

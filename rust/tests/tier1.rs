@@ -9,7 +9,7 @@
 use prism::baselines::eigen_fn;
 use prism::config::{Backend, ServiceConfig};
 use prism::coordinator::service::{JobKind, Service};
-use prism::linalg::gemm::{matmul, matmul_naive, GemmEngine, GemmScope};
+use prism::linalg::gemm::{matmul, matmul_naive, GemmEngine, GemmScope, MicroKernel};
 use prism::linalg::Mat;
 use prism::matfn::{registry, SolverSpec};
 use prism::prism::driver::StopRule;
@@ -26,6 +26,39 @@ fn smoke_gemm_engine_correct_and_deterministic() {
     assert!(matmul(&a, &b).sub(&want).max_abs() < 1e-10);
     let par = GemmEngine::with_threads(4);
     assert_eq!(par.matmul(&a, &b).as_slice(), GemmEngine::sequential().matmul(&a, &b).as_slice());
+}
+
+#[test]
+fn smoke_every_kernel_and_skinny_path_correct() {
+    // One pass over the microkernel dispatch (scalar + whatever SIMD the
+    // host has) and the skinny routes: blocked shape, sketch shape (thin-A),
+    // and a 1-column GEMV.
+    let mut rng = Rng::seed_from(7);
+    let a = Mat::gaussian(&mut rng, 24, 20, 1.0);
+    let b = Mat::gaussian(&mut rng, 20, 18, 1.0);
+    let s = Mat::gaussian(&mut rng, 8, 24, 1.0); // sketch panel
+    let v = Mat::gaussian(&mut rng, 20, 1, 1.0); // GEMV column
+    for kern in MicroKernel::available() {
+        let eng = GemmEngine::sequential().with_kernel(kern);
+        assert!(
+            eng.matmul(&a, &b).sub(&matmul_naive(&a, &b)).max_abs() < 1e-10,
+            "{} blocked",
+            kern.name()
+        );
+        assert!(
+            eng.matmul(&s, &a).sub(&matmul_naive(&s, &a)).max_abs() < 1e-10,
+            "{} thin-A (sketch shape)",
+            kern.name()
+        );
+        assert!(
+            eng.matmul(&a, &v).sub(&matmul_naive(&a, &v)).max_abs() < 1e-10,
+            "{} gemv",
+            kern.name()
+        );
+    }
+    // The default engine resolves to a host-runnable kernel (honouring the
+    // PALLAS_GEMM_KERNEL override the CI scalar matrix job sets).
+    assert!(GemmEngine::sequential().kernel().is_available());
 }
 
 #[test]
@@ -93,6 +126,7 @@ fn smoke_service_round_trip() {
         gemm_threads: 1,
         stream_residuals: false,
         gemm_block: None,
+        gemm_kernel: None,
     };
     let svc = Service::start(cfg, Backend::Prism5, 7);
     let w = randmat::logspace(0.05, 1.0, 6);
