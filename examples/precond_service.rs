@@ -48,6 +48,7 @@ fn run_load(
         sketch_p: 8,
         max_iters: 60,
         tol: 1e-7,
+        solver_cache_cap: 32,
         gemm_threads: 1,
         stream_residuals: false,
         gemm_block: None,
@@ -137,6 +138,7 @@ fn main() {
         sketch_p: 8,
         max_iters: 40,
         tol: 1e-7,
+        solver_cache_cap: 32,
         gemm_threads: 1,
         // Stream per-iteration residuals from the workers (matfn Observer
         // hook) so convergence is visible while refreshes are in flight.

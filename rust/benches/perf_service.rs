@@ -1,36 +1,59 @@
 //! L3 coordinator throughput/latency under load — the service-side view
 //! used in EXPERIMENTS.md §Perf.
 //!
-//! Sweeps worker count, batching limit, and backend on a fixed synthetic
-//! gradient stream, reporting jobs/s and latency percentiles. The service
-//! must scale with workers until the GEMM work saturates physical cores, and
-//! batching must trade p50 latency for throughput — both are asserted
-//! qualitatively in the printed notes.
+//! Two sections:
+//!
+//! * **sweep** — worker count, batching limit, and backend on a fixed
+//!   synthetic gradient stream, reporting jobs/s and latency percentiles.
+//!   The service must scale with workers until the GEMM work saturates
+//!   physical cores, and batching must trade p50 latency for throughput.
+//! * **amortization** — a same-shape InvSqrt burst swept over `max_batch`,
+//!   counting *sketch fills*: the batched lockstep path draws one sketch
+//!   per iteration shared across the whole batch, so fills per batch stay
+//!   at O(iters) — roughly the per-job iteration count — independent of
+//!   batch size, where per-job solving would pay O(batch · iters).
+//!
+//! Both sections land in `bench_out/BENCH_service.json` (uploaded by CI
+//! next to `BENCH_gemm.json`/`BENCH_matfn.json`); `--smoke` runs tiny sizes
+//! but still writes the full report shape.
 
-use prism::benchkit::{banner, SeriesWriter, Table};
+use prism::benchkit::{banner, JsonReport, SeriesWriter, Table};
 use prism::config::{Backend, ServiceConfig};
 use prism::configfmt::Value;
 use prism::coordinator::service::{JobKind, Service};
 use prism::linalg::gemm::syrk_at_a;
+use prism::linalg::Mat;
+use prism::randmat;
+use prism::rng::Rng;
 use prism::util::Stopwatch;
 use prism::workload::GradientStream;
 
-fn run(workers: usize, max_batch: usize, backend: Backend, jobs: usize, n: usize) -> (f64, f64, f64) {
-    let cfg = ServiceConfig {
+fn service_cfg(workers: usize, max_batch: usize) -> ServiceConfig {
+    ServiceConfig {
         workers,
         queue_capacity: 256,
         max_batch,
         sketch_p: 8,
         max_iters: 60,
         tol: 1e-7,
+        solver_cache_cap: 32,
         gemm_threads: 1,
         stream_residuals: false,
         gemm_block: None,
         gemm_kernel: None,
-    };
+    }
+}
+
+fn run(
+    workers: usize,
+    max_batch: usize,
+    backend: Backend,
+    jobs: usize,
+    n: usize,
+) -> (f64, f64, f64) {
     let shapes = vec![(n, n), (n, n / 2)];
     let mut stream = GradientStream::new(42, shapes, 0.5);
-    let svc = Service::start(cfg, backend, 42);
+    let svc = Service::start(service_cfg(workers, max_batch), backend, 42);
     let sw = Stopwatch::start();
     for _ in 0..jobs {
         let (layer, g) = stream.next_grad();
@@ -49,26 +72,52 @@ fn run(workers: usize, max_batch: usize, backend: Backend, jobs: usize, n: usize
     (jobs as f64 / wall, pct(0.5), pct(0.99))
 }
 
+/// Same-shape InvSqrt burst through one worker at a given batch size.
+/// Returns (jobs/s, sketch fills, total solver iterations, batches).
+fn run_amortization(max_batch: usize, inputs: &[Mat]) -> (f64, u64, u64, usize) {
+    let jobs = inputs.len();
+    let svc = Service::start(service_cfg(1, max_batch), Backend::Prism5, 42);
+    let fills0 = prism::sketch::fills_total();
+    let sw = Stopwatch::start();
+    for (layer, a) in inputs.iter().enumerate() {
+        svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+    }
+    let results = svc.drain().unwrap();
+    let wall = sw.elapsed_s();
+    let fills = prism::sketch::fills_total() - fills0;
+    let iters: u64 = results.iter().map(|r| r.iters as u64).sum();
+    let nbatches = jobs.div_ceil(max_batch);
+    (jobs as f64 / wall, fills, iters, nbatches)
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     banner("perf — preconditioner service throughput/latency", "EXPERIMENTS.md §Perf (L3)");
-    let jobs = 64;
-    let n = 96;
+    let (jobs, n) = if smoke { (12, 24) } else { (64, 96) };
     let mut series = SeriesWriter::create("bench_out/perf_service.jsonl");
+    let mut report = JsonReport::create("bench_out/BENCH_service.json", "perf_service");
 
     let mut t = Table::new(&["workers", "max_batch", "backend", "jobs/s", "p50 ms", "p99 ms"]);
     let mut cases: Vec<(usize, usize, Backend, &str)> = Vec::new();
-    for w in [1usize, 2, 4, 8] {
+    let worker_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &w in worker_sweep {
         cases.push((w, 4, Backend::Prism5, "prism5"));
     }
-    for b in [1usize, 2, 8, 16] {
+    let batch_sweep: &[usize] = if smoke { &[1, 8] } else { &[1, 2, 8, 16] };
+    for &b in batch_sweep {
         cases.push((4, b, Backend::Prism5, "prism5"));
     }
-    for (bk, nm) in [
-        (Backend::Eigen, "eigen"),
-        (Backend::PolarExpress, "polar-express"),
-        (Backend::Prism3, "prism3"),
-        (Backend::NewtonSchulz, "newton-schulz"),
-    ] {
+    let backends: &[(Backend, &str)] = if smoke {
+        &[(Backend::Eigen, "eigen")]
+    } else {
+        &[
+            (Backend::Eigen, "eigen"),
+            (Backend::PolarExpress, "polar-express"),
+            (Backend::Prism3, "prism3"),
+            (Backend::NewtonSchulz, "newton-schulz"),
+        ]
+    };
+    for &(bk, nm) in backends {
         cases.push((4, 4, bk, nm));
     }
     for (w, b, bk, nm) in cases {
@@ -81,18 +130,69 @@ fn main() {
             format!("{p50:.1}"),
             format!("{p99:.1}"),
         ]);
-        series.point(&[
+        let fields = [
+            ("section", Value::Str("sweep".into())),
             ("workers", Value::Int(w as i64)),
             ("max_batch", Value::Int(b as i64)),
             ("backend", Value::Str(nm.into())),
             ("jobs_per_s", Value::Float(jps)),
             ("p50_ms", Value::Float(p50)),
             ("p99_ms", Value::Float(p99)),
-        ]);
+        ];
+        series.point(&fields[1..]);
+        report.entry(&fields);
     }
     println!("\n{jobs} jobs, base shape {n}x{n}, HTMP(κ=0.5):");
     t.print();
     println!("\nexpected: throughput scales with workers to core count; larger batches");
     println!("raise p50 (queueing) without throughput loss; PRISM ≥ eigen at this size.");
-    println!("series → bench_out/perf_service.jsonl");
+
+    // ── amortization: sketch fills per batch vs batch size ──────────────
+    let (burst_jobs, bn) = if smoke { (16, 16) } else { (48, 64) };
+    let mut rng = Rng::seed_from(7);
+    let w = randmat::logspace(1e-2, 1.0, bn);
+    let inputs: Vec<Mat> =
+        (0..burst_jobs).map(|_| randmat::sym_with_spectrum(&mut rng, bn, &w)).collect();
+    let mut t2 = Table::new(&[
+        "max_batch",
+        "jobs/s",
+        "batches",
+        "sketch fills",
+        "fills/batch",
+        "iters/job",
+    ]);
+    for b in [1usize, 2, 4, 8, 16] {
+        let (jps, fills, iters, nbatches) = run_amortization(b, &inputs);
+        let fills_per_batch = fills as f64 / nbatches as f64;
+        let iters_per_job = iters as f64 / burst_jobs as f64;
+        t2.row(&[
+            b.to_string(),
+            format!("{jps:.1}"),
+            nbatches.to_string(),
+            fills.to_string(),
+            format!("{fills_per_batch:.1}"),
+            format!("{iters_per_job:.1}"),
+        ]);
+        report.entry(&[
+            ("section", Value::Str("amortization".into())),
+            ("max_batch", Value::Int(b as i64)),
+            ("jobs", Value::Int(burst_jobs as i64)),
+            ("n", Value::Int(bn as i64)),
+            ("jobs_per_s", Value::Float(jps)),
+            ("batches", Value::Int(nbatches as i64)),
+            ("sketch_fills", Value::Int(fills as i64)),
+            ("fills_per_batch", Value::Float(fills_per_batch)),
+            ("total_iters", Value::Int(iters as i64)),
+            ("iters_per_job", Value::Float(iters_per_job)),
+        ]);
+    }
+    println!("\nsame-shape InvSqrt burst: {burst_jobs} jobs of {bn}x{bn}, 1 worker, prism5:");
+    t2.print();
+    println!("\nexpected: fills/batch stays at O(iters) — about iters/job, the longest");
+    println!("member's count — independent of batch size (shared lockstep sketch),");
+    println!("where per-job solving would pay batch · iters/job fills per batch.");
+    match report.finish() {
+        Some(path) => println!("report → {path}  (series → bench_out/perf_service.jsonl)"),
+        None => println!("report not written (read-only checkout?)"),
+    }
 }

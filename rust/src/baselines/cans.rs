@@ -47,7 +47,7 @@ pub(crate) fn polar_cans_in(
 ) -> (Mat, IterationLog) {
     let (m, n) = a.shape();
     if m < n {
-        let EngineHooks { x0, observer, event_base } = hooks;
+        let EngineHooks { x0, observer, event_base, job } = hooks;
         let mut at = ws.take(n, m);
         a.transpose_into(&mut at);
         let x0t = x0.map(|x0| {
@@ -65,6 +65,7 @@ pub(crate) fn polar_cans_in(
                 None => None,
             },
             event_base,
+            job,
         };
         let (q, log) = polar_cans_in(&at, opts, rng, ws, hooks_t);
         ws.put(at);
@@ -96,7 +97,8 @@ pub(crate) fn polar_cans_in(
     residual_into(&eng, &mut r, &x);
     let mut rec = RunRecorder::start(r.fro_norm())
         .with_observer(hooks.observer)
-        .with_event_base(hooks.event_base);
+        .with_event_base(hooks.event_base)
+        .with_job(hooks.job);
     for k in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;

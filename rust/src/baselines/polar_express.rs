@@ -219,7 +219,7 @@ impl PolarExpress {
     ) -> (Mat, IterationLog) {
         let (m, n) = a.shape();
         if m < n {
-            let EngineHooks { x0, observer, event_base } = hooks;
+            let EngineHooks { x0, observer, event_base, job } = hooks;
             let mut at = ws.take(n, m);
             a.transpose_into(&mut at);
             let x0t = x0.map(|x0| {
@@ -238,6 +238,7 @@ impl PolarExpress {
                     None => None,
                 },
                 event_base,
+                job,
             };
             let (q, log) = self.polar_in(&at, stop, ws, hooks_t);
             ws.put(at);
@@ -267,7 +268,8 @@ impl PolarExpress {
         let mut rn = polar_res(&eng, &mut rbuf, &x);
         let mut rec = RunRecorder::start(rn)
             .with_observer(hooks.observer)
-            .with_event_base(hooks.event_base);
+            .with_event_base(hooks.event_base)
+            .with_job(hooks.job);
         for k in 0..stop.max_iters {
             if rn < stop.tol {
                 break;
@@ -331,7 +333,8 @@ impl PolarExpress {
         let mut rn = coupled_res(&eng, &mut rbuf, &x, &y);
         let mut rec = RunRecorder::start(rn)
             .with_observer(hooks.observer)
-            .with_event_base(hooks.event_base);
+            .with_event_base(hooks.event_base)
+            .with_job(hooks.job);
         for k in 0..stop.max_iters {
             if rn < stop.tol {
                 break;

@@ -129,6 +129,12 @@ pub struct ServiceConfig {
     pub sketch_p: usize,
     pub max_iters: usize,
     pub tol: f64,
+    /// Per-worker cap on cached persistent solvers (one solver is kept per
+    /// (kind, shape) route; `service.solver_cache_cap` in TOML). Least-
+    /// recently-used routes are evicted beyond the cap, so a shape-diverse
+    /// tenant cannot grow a worker's solver map without bound. Values are
+    /// clamped to ≥ 1 at use.
+    pub solver_cache_cap: usize,
     /// GEMM pool size shared by the engines (`--threads` on the CLI,
     /// `service.gemm_threads` in TOML). Any value produces bit-identical
     /// results, so this is purely a speed knob. Values > 1 are installed
@@ -167,6 +173,7 @@ impl Default for ServiceConfig {
             sketch_p: 8,
             max_iters: 30,
             tol: 1e-7,
+            solver_cache_cap: 32,
             gemm_threads: 1,
             stream_residuals: false,
             gemm_block: None,
@@ -187,6 +194,7 @@ impl ServiceConfig {
         c.sketch_p = geti("service.sketch_p", c.sketch_p);
         c.max_iters = geti("service.max_iters", c.max_iters);
         c.tol = v.get_path("service.tol").and_then(|x| x.as_float()).unwrap_or(c.tol);
+        c.solver_cache_cap = geti("service.solver_cache_cap", c.solver_cache_cap);
         c.gemm_threads = geti("service.gemm_threads", c.gemm_threads);
         c.stream_residuals = v
             .get_path("service.stream_residuals")
@@ -251,6 +259,13 @@ backend = "prism3"
         assert_eq!(c.workers, 3);
         assert_eq!(c.max_batch, 8);
         assert_eq!(c.gemm_threads, 1);
+    }
+
+    #[test]
+    fn service_config_solver_cache_cap_parses() {
+        let v = parse_toml("[service]\nsolver_cache_cap = 4\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).solver_cache_cap, 4);
+        assert_eq!(ServiceConfig::default().solver_cache_cap, 32);
     }
 
     #[test]
@@ -321,6 +336,8 @@ mod file_tests {
         assert_eq!(svc.workers, 4);
         assert_eq!(svc.max_batch, 4);
         assert!((svc.tol - 1e-7).abs() < 1e-20);
+        assert_eq!(svc.sketch_p, 8);
+        assert_eq!(svc.solver_cache_cap, 32);
     }
 
     #[test]

@@ -258,6 +258,7 @@ mod tests {
             sketch_p: 8,
             max_iters: 40,
             tol: 1e-7,
+            solver_cache_cap: 32,
             gemm_threads: 1,
             stream_residuals: false,
             gemm_block: None,

@@ -1,24 +1,54 @@
 //! The preconditioner service: route → batch → execute matrix-function jobs
 //! on a worker pool, with bounded queues (backpressure) and full metrics.
 //!
-//! Training integrations submit gradient/covariance matrices tagged by layer
-//! and function kind; the router groups same-shape, same-kind jobs into
-//! batches (shared sketch draws amortise PRISM's fitting overhead within a
-//! batch), workers run the jobs through the unified [`crate::matfn`] solver
-//! API, and results flow back over a completion channel. Each worker keeps
-//! one persistent [`Solver`] per (kind, shape) route, so a steady stream of
-//! same-shaped preconditioner jobs runs allocation-free — the Shampoo/Muon
-//! hot path. With `stream_residuals` set, workers attach a per-iteration
-//! observer and stream [`ResidualEvent`]s over a progress channel while jobs
-//! are still running, instead of making clients wait for the final
-//! `IterationLog`. Staleness scheduling lets Shampoo keep training on
-//! slightly-old preconditioners while refreshes are in flight — the pattern
-//! of Distributed Shampoo/DION.
+//! ## Batch execution contract
+//!
+//! Training integrations submit gradient/covariance matrices tagged by
+//! layer and function kind; the router groups same-shape, same-kind jobs
+//! into batches of up to `max_batch`, and a worker executes each batch as
+//! **one** [`Solver::solve_batch`] call. Newton–Schulz-family backends
+//! (PRISM-3/5, classical NS) run the batch in lockstep, sharing one sketch
+//! fill per iteration across every member — O(iters) sketch draws per
+//! batch instead of O(batch · iters), which is what amortises PRISM's
+//! fitting overhead at service scale. Only input-independent scratch is
+//! shared (the sketch panel, the trace row, the update polynomial and the
+//! ping-pong spare); each job keeps its own iterate, residual, α sequence
+//! and iteration log. Direct/minimax backends (eigen, PolarExpress,
+//! DB-Newton) execute batch members back to back through the same
+//! per-route workspace.
+//!
+//! ## RNG stream guarantee
+//!
+//! Every batch reads the RNG stream seeded by [`batch_stream_seed`] — a
+//! pure function of the service seed and the batch's lowest job id, never
+//! of worker identity or scheduling. Batch composition is fixed by
+//! submission order (the router dispatches a route's queue when it reaches
+//! `max_batch`), so results are **bit-identical across worker counts**,
+//! and each job's result equals a sequential [`Solver::solve`] run from a
+//! clone of its batch's stream (pinned by the service conformance tests).
+//!
+//! Each worker keeps an LRU cache of persistent [`Solver`]s per
+//! (kind, shape) route, capped at `solver_cache_cap` entries, so a steady
+//! stream of same-shaped preconditioner jobs runs allocation-free — the
+//! Shampoo/Muon hot path — while shape-diverse traffic cannot grow a
+//! worker's solver map without bound. The `sketch_p`/`tol`/`max_iters`
+//! knobs are threaded into every constructed solver. With
+//! `stream_residuals` set, each cached solver carries **one persistent
+//! observer** whose per-batch job tags are swapped through a shared cell
+//! (no per-job observer boxing on the hot path), streaming
+//! [`ResidualEvent`]s over a progress channel while jobs are still
+//! running. Staleness scheduling lets Shampoo keep training on
+//! slightly-old preconditioners while refreshes are in flight — the
+//! pattern of Distributed Shampoo/DION.
+//!
+//! Dropping the [`Service`] handle first dispatches still-pending partial
+//! batches and waits for the workers to finish them — submitted work is
+//! executed (and counted in the metrics), never silently discarded.
 
 use crate::config::{Backend, ServiceConfig};
 use crate::linalg::Mat;
 use crate::matfn::{MatFnTask, Solver};
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Gauge, Registry};
 use crate::rng::Rng;
 use crate::util::{Error, Result, Stopwatch};
 use std::collections::BTreeMap;
@@ -85,6 +115,69 @@ enum WorkerMsg {
     Shutdown,
 }
 
+/// Seed of the RNG stream a batch's solves read: a pure function of the
+/// service seed and the batch's first (lowest) job id — independent of
+/// worker identity and execution order, which is what makes service results
+/// reproducible at any worker count. Exposed so tests and clients can
+/// re-run a job's exact solve out of band (see the module docs).
+pub fn batch_stream_seed(service_seed: u64, first_job_id: u64) -> u64 {
+    service_seed ^ first_job_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Per-worker LRU cache of persistent solvers keyed by (kind, shape) route.
+/// A cached solver's workspace holds the grown batch panels — the cache is
+/// what makes the steady state allocation-free — and the cap bounds memory
+/// under shape-diverse traffic. Reported through the metrics registry:
+/// counter `service.solver_cache_evictions`, gauge
+/// `service.solver_cache_size` (last-touching worker wins).
+struct SolverCache {
+    cap: usize,
+    tick: u64,
+    /// (route key, solver, last-used tick); linear scans — caps are small.
+    entries: Vec<((u8, usize, usize), Solver, u64)>,
+    evictions: Arc<Counter>,
+    size: Arc<Gauge>,
+}
+
+impl SolverCache {
+    fn new(cap: usize, metrics: &Registry) -> SolverCache {
+        SolverCache {
+            cap: cap.max(1),
+            tick: 0,
+            entries: Vec::new(),
+            evictions: metrics.counter("service.solver_cache_evictions"),
+            size: metrics.gauge("service.solver_cache_size"),
+        }
+    }
+
+    fn get_or_insert(
+        &mut self,
+        key: (u8, usize, usize),
+        make: impl FnOnce() -> Solver,
+    ) -> &mut Solver {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(i) = self.entries.iter().position(|(k, _, _)| *k == key) {
+            self.entries[i].2 = tick;
+            return &mut self.entries[i].1;
+        }
+        if self.entries.len() >= self.cap {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, _, used))| *used)
+                .map(|(i, _)| i)
+                .expect("cap >= 1 so a full cache is non-empty");
+            self.entries.swap_remove(lru);
+            self.evictions.inc();
+        }
+        self.entries.push((key, make(), tick));
+        self.size.set(self.entries.len() as i64);
+        &mut self.entries.last_mut().expect("just pushed").1
+    }
+}
+
 /// Service handle. Dropping it shuts the workers down.
 pub struct Service {
     tx: SyncSender<WorkerMsg>,
@@ -106,7 +199,11 @@ pub struct Service {
 
 impl Service {
     /// Start the service with `cfg.workers` threads using `backend` for the
-    /// matrix functions. When `cfg.gemm_threads > 1` this also installs the
+    /// matrix functions; `cfg.sketch_p`, `cfg.tol` and `cfg.max_iters` are
+    /// threaded into every solver the workers construct (via
+    /// [`Solver::for_backend_tuned`]), and `cfg.solver_cache_cap` bounds
+    /// each worker's per-route solver cache.
+    /// When `cfg.gemm_threads > 1` this also installs the
     /// process-global GEMM pool the engines run their panels on (results are
     /// bit-identical at any pool size, so this only changes speed). The
     /// default value 1 means "unspecified" and deliberately does NOT tear
@@ -140,62 +237,99 @@ impl Service {
         let (prog_tx, prog_rx): (Sender<ResidualEvent>, Receiver<ResidualEvent>) = channel();
         let metrics = Arc::new(Registry::default());
         let mut workers = Vec::new();
-        for w in 0..cfg.workers.max(1) {
+        for _w in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
             let res_tx = res_tx.clone();
             let prog_tx = prog_tx.clone();
             let metrics = Arc::clone(&metrics);
             let iters = cfg.max_iters;
+            let tol = cfg.tol;
+            let sketch_p = cfg.sketch_p;
+            let cache_cap = cfg.solver_cache_cap;
             let stream = cfg.stream_residuals;
             workers.push(std::thread::spawn(move || {
-                let mut rng = Rng::seed_from(seed ^ (w as u64 + 1));
-                // One persistent solver per (kind, shape) route: same-shape
-                // jobs reuse the solver's workspace, so the steady-state
-                // preconditioner stream runs allocation-free.
-                let mut solvers: BTreeMap<(u8, usize, usize), Solver> = BTreeMap::new();
-                let mut damped = Mat::zeros(0, 0);
-                let service_time = metrics.histogram("service.exec_s");
+                // Persistent solvers per (kind, shape) route, LRU-capped:
+                // same-route batches reuse the solver's workspace, so the
+                // steady-state preconditioner stream runs allocation-free.
+                let mut cache = SolverCache::new(cache_cap, &metrics);
+                // (id, layer) of the current batch's members, read by the
+                // persistent streaming observers (refreshed per batch; the
+                // Vec's capacity is reused, so the warm path stays
+                // allocation-free with streaming on).
+                let tags: Arc<Mutex<Vec<(u64, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+                // Execution time is recorded twice since batches became one
+                // solve call: `service.batch_exec_s` is the wall time of a
+                // whole batch, `service.exec_s` keeps its historical per-job
+                // meaning as the amortised share (batch wall / members) —
+                // comparable against `service.latency_s` at any max_batch.
+                let batch_time = metrics.histogram("service.batch_exec_s");
+                let job_time = metrics.histogram("service.exec_s");
                 let done = metrics.counter("service.jobs_done");
                 loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
-                        Ok(WorkerMsg::Batch(jobs)) => {
+                        Ok(WorkerMsg::Batch(mut jobs)) => {
                             let bsize = jobs.len();
-                            for job in jobs {
-                                let key = job.kind.route_key(job.matrix.shape());
-                                let solver = solvers.entry(key).or_insert_with(|| {
-                                    let task = match job.kind {
-                                        JobKind::InvSqrt { .. } => MatFnTask::InvSqrt,
-                                        JobKind::Polar => MatFnTask::Polar,
-                                    };
-                                    Solver::for_backend(backend, task, iters)
-                                        .expect("service backends always have polar/invsqrt forms")
-                                });
+                            if bsize == 0 {
+                                continue;
+                            }
+                            // The router groups by route key, so the whole
+                            // batch shares one (kind, shape) — one solver.
+                            let key = jobs[0].kind.route_key(jobs[0].matrix.shape());
+                            let solver = cache.get_or_insert(key, || {
+                                let task = match jobs[0].kind {
+                                    JobKind::InvSqrt { .. } => MatFnTask::InvSqrt,
+                                    JobKind::Polar => MatFnTask::Polar,
+                                };
+                                let mut s = Solver::for_backend_tuned(
+                                    backend,
+                                    task,
+                                    iters,
+                                    Some(tol),
+                                    Some(sketch_p),
+                                )
+                                .expect("service backends always have polar/invsqrt forms");
                                 if stream {
                                     let ptx = prog_tx.clone();
-                                    let (id, layer) = (job.id, job.layer);
-                                    solver.set_observer(Some(Box::new(move |ev| {
-                                        let _ = ptx.send(ResidualEvent {
-                                            id,
-                                            layer,
-                                            iter: ev.iter,
-                                            residual: ev.residual,
-                                        });
+                                    let tags = Arc::clone(&tags);
+                                    s.set_observer(Some(Box::new(move |ev| {
+                                        let tag = tags.lock().unwrap().get(ev.job).copied();
+                                        if let Some((id, layer)) = tag {
+                                            let _ = ptx.send(ResidualEvent {
+                                                id,
+                                                layer,
+                                                iter: ev.iter,
+                                                residual: ev.residual,
+                                            });
+                                        }
                                     })));
                                 }
-                                let sw = Stopwatch::start();
-                                let out = match job.kind {
-                                    JobKind::InvSqrt { eps } => {
-                                        damped.copy_from(&job.matrix);
-                                        damped.add_diag(eps);
-                                        solver.solve(&damped, &mut rng)
+                                s
+                            });
+                            if stream {
+                                let mut t = tags.lock().unwrap();
+                                t.clear();
+                                t.extend(jobs.iter().map(|j| (j.id, j.layer)));
+                            }
+                            // Damp InvSqrt inputs in place (ε may differ per
+                            // job; the route key only fixes kind and shape).
+                            for job in jobs.iter_mut() {
+                                if let JobKind::InvSqrt { eps } = job.kind {
+                                    if eps != 0.0 {
+                                        job.matrix.add_diag(eps);
                                     }
-                                    JobKind::Polar => solver.solve(&job.matrix, &mut rng),
-                                };
-                                if stream {
-                                    solver.set_observer(None);
                                 }
-                                service_time.observe(sw.elapsed_s());
+                            }
+                            let mut rng = Rng::seed_from(batch_stream_seed(seed, jobs[0].id));
+                            let sw = Stopwatch::start();
+                            let outs = {
+                                let refs: Vec<&Mat> = jobs.iter().map(|j| &j.matrix).collect();
+                                solver.solve_batch(&refs, &mut rng)
+                            };
+                            let exec_s = sw.elapsed_s();
+                            batch_time.observe(exec_s);
+                            job_time.observe(exec_s / bsize as f64);
+                            for (job, out) in jobs.into_iter().zip(outs) {
                                 done.inc();
                                 let latency_s = job.submitted.elapsed().as_secs_f64();
                                 let _ = res_tx.send(JobResult {
@@ -286,7 +420,12 @@ impl Service {
     pub fn inflight(&self) -> usize {
         let d = self.dispatched.load(Ordering::SeqCst);
         let r = self.received.load(Ordering::SeqCst);
-        (d - r) as usize
+        debug_assert!(
+            d >= r,
+            "service: {r} results received for {d} dispatched jobs — \
+             the one-result-per-job invariant is broken"
+        );
+        d.saturating_sub(r) as usize
     }
 
     /// Blocking receive of the next completed job.
@@ -342,6 +481,11 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
+        // Dispatch still-pending partial batches so submitted work is
+        // executed (and counted) rather than silently discarded; the FIFO
+        // worker channel guarantees they run before the shutdown messages
+        // queued behind them.
+        let _ = self.flush();
         for _ in &self.workers {
             let _ = self.tx.send(WorkerMsg::Shutdown);
         }
@@ -365,6 +509,7 @@ mod tests {
             sketch_p: 8,
             max_iters: 40,
             tol: 1e-7,
+            solver_cache_cap: 32,
             gemm_threads: 1,
             stream_residuals: false,
             gemm_block: None,
@@ -482,6 +627,165 @@ mod tests {
         svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
         let _ = svc.drain().unwrap();
         assert!(svc.try_recv_progress().is_none());
+    }
+
+    fn burst_results(workers: usize, max_batch: usize, seed: u64, inputs: &[Mat]) -> Vec<Mat> {
+        let svc = Service::start(cfg(workers, max_batch), Backend::Prism5, seed);
+        for (layer, a) in inputs.iter().enumerate() {
+            svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+        }
+        let mut rs = svc.drain().unwrap();
+        rs.sort_by_key(|r| r.layer);
+        rs.into_iter().map(|r| r.result).collect()
+    }
+
+    #[test]
+    fn batched_burst_bit_identical_to_per_job_solves() {
+        // The tentpole contract: a 16-job same-shape burst drained through
+        // one or many workers is bitwise identical to solving each job
+        // sequentially from a clone of its batch's RNG stream.
+        let mut rng = Rng::seed_from(10);
+        let inputs: Vec<Mat> = (0..16)
+            .map(|_| {
+                let w = randmat::logspace(1e-2, 1.0, 8);
+                randmat::sym_with_spectrum(&mut rng, 8, &w)
+            })
+            .collect();
+        let seed = 42;
+        let single = burst_results(1, 4, seed, &inputs);
+        let multi = burst_results(4, 4, seed, &inputs);
+        assert_eq!(single.len(), 16);
+        for j in 0..16 {
+            assert_eq!(single[j], multi[j], "job {j}: worker count changed result bits");
+        }
+        // Per-job sequential reference: ids are 1-based in submission order
+        // and max_batch = 4, so job j rides the batch whose first id is
+        // 4·⌊j/4⌋ + 1, and its solve reads a clone of that batch's stream.
+        for (j, a) in inputs.iter().enumerate() {
+            let first_id = (j / 4 * 4 + 1) as u64;
+            let mut r = Rng::seed_from(batch_stream_seed(seed, first_id));
+            let mut s = Solver::for_backend_tuned(
+                Backend::Prism5,
+                MatFnTask::InvSqrt,
+                40,
+                Some(1e-7),
+                Some(8),
+            )
+            .unwrap();
+            let out = s.solve(a, &mut r);
+            assert_eq!(single[j], out.primary, "job {j}: batched != sequential solve");
+        }
+    }
+
+    #[test]
+    fn tol_knob_reaches_the_solvers() {
+        // Regression for the silently-dropped config knobs: a looser
+        // service.tol must stop the iteration earlier.
+        let mut rng = Rng::seed_from(8);
+        let w = randmat::logspace(1e-3, 1.0, 10);
+        let a = randmat::sym_with_spectrum(&mut rng, 10, &w);
+        let run = |tol: f64| {
+            let mut c = cfg(1, 1);
+            c.max_iters = 60;
+            c.tol = tol;
+            let svc = Service::start(c, Backend::Prism5, 42);
+            svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+            svc.drain().unwrap()[0].iters
+        };
+        let (loose, tight) = (run(1e-2), run(1e-10));
+        assert!(loose < tight, "tol must change observed iters: loose {loose} vs tight {tight}");
+    }
+
+    #[test]
+    fn sketch_p_knob_reaches_the_solvers() {
+        // A different service.sketch_p draws different sketches, so the
+        // fitted α sequence — and hence the result bits — must change.
+        let mut rng = Rng::seed_from(9);
+        let w = randmat::logspace(1e-3, 1.0, 12);
+        let a = randmat::sym_with_spectrum(&mut rng, 12, &w);
+        let run = |p: usize| {
+            let mut c = cfg(1, 1);
+            c.sketch_p = p;
+            let svc = Service::start(c, Backend::Prism5, 42);
+            svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+            svc.drain().unwrap().remove(0).result
+        };
+        assert_ne!(run(2), run(32), "sketch_p must reach the α fits");
+    }
+
+    #[test]
+    fn solver_cache_evicts_lru_under_shape_diverse_stream() {
+        let mut rng = Rng::seed_from(11);
+        let mut c = cfg(1, 1);
+        c.solver_cache_cap = 8;
+        c.max_iters = 3; // cheap: eviction behaviour, not convergence
+        let svc = Service::start(c, Backend::Prism3, 5);
+        for k in 0..100usize {
+            // 100 distinct route keys: polar panels of width 5..=104.
+            let a = randmat::gaussian(&mut rng, 4, 5 + k);
+            svc.submit(k, JobKind::Polar, a).unwrap();
+        }
+        let results = svc.drain().unwrap();
+        assert_eq!(results.len(), 100);
+        let size = svc.metrics.gauge("service.solver_cache_size").get();
+        assert!((1..=8).contains(&size), "cache size {size} must stay within the cap");
+        let ev = svc.metrics.counter("service.solver_cache_evictions").get();
+        assert!(ev >= 92, "expected >= 92 LRU evictions under 100 shapes, saw {ev}");
+    }
+
+    #[test]
+    fn drop_flushes_pending_jobs() {
+        // Partial batches still held by the router must be executed (and
+        // counted) when the handle drops, not silently discarded.
+        let mut rng = Rng::seed_from(12);
+        let svc = Service::start(cfg(1, 8), Backend::Prism5, 6);
+        let w = randmat::logspace(0.1, 1.0, 6);
+        for layer in 0..3 {
+            let a = randmat::sym_with_spectrum(&mut rng, 6, &w);
+            svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        }
+        let metrics = Arc::clone(&svc.metrics);
+        drop(svc);
+        assert_eq!(
+            metrics.counter("service.jobs_done").get(),
+            3,
+            "drop must flush and execute pending jobs"
+        );
+    }
+
+    #[test]
+    fn streams_per_job_trajectories_for_batches() {
+        // Batched execution interleaves members' iterations; the persistent
+        // observers must still attribute every event to the right job.
+        let mut rng = Rng::seed_from(13);
+        let mut c = cfg(1, 4);
+        c.stream_residuals = true;
+        let svc = Service::start(c, Backend::Prism5, 9);
+        let w = randmat::logspace(1e-2, 1.0, 8);
+        for layer in 0..4 {
+            let a = randmat::sym_with_spectrum(&mut rng, 8, &w);
+            svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        }
+        let results = svc.drain().unwrap();
+        assert_eq!(results.len(), 4);
+        let mut per_job: BTreeMap<u64, Vec<ResidualEvent>> = BTreeMap::new();
+        while let Some(ev) = svc.try_recv_progress() {
+            per_job.entry(ev.id).or_default().push(ev);
+        }
+        for r in &results {
+            let evs = &per_job[&r.id];
+            assert_eq!(evs.len(), r.iters, "job {}: one event per iteration", r.id);
+            for (k, ev) in evs.iter().enumerate() {
+                assert_eq!(ev.iter, k, "job {}: events in iteration order", r.id);
+                assert_eq!(ev.layer, r.layer);
+            }
+            let last = evs.last().expect("at least one iteration");
+            assert!(
+                (last.residual - r.final_residual).abs() <= 1e-12,
+                "job {}: stream tail must match the final residual",
+                r.id
+            );
+        }
     }
 
     #[test]

@@ -73,6 +73,8 @@ COMMON FLAGS:
   --backends LIST  comma list of matfn methods: classic,prism,exact,
                    polarexpress,cans,newton,eigen (per-command defaults)
   --stream         serve: stream per-iteration residuals from the workers
+  --cache-cap C    serve: per-worker LRU cap on cached per-shape solvers
+                   (default 32)
   --artifacts DIR  artifact directory       (default artifacts)
 
 All subcommands dispatch through the matfn solver registry; any
@@ -395,6 +397,7 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
         sketch_p: args.get_usize("sketch", 8)?,
         max_iters: args.get_usize("iters", 60)?,
         tol: args.get_f64("tol", 1e-7)?,
+        solver_cache_cap: args.get_usize("cache-cap", 32)?,
         gemm_threads: args.get_usize("threads", 1)?,
         stream_residuals: stream_res,
         gemm_block: match args.get("gemm-block") {

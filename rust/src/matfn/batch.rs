@@ -1,0 +1,438 @@
+//! Lockstep batched execution of the Newton–Schulz-family engines — the
+//! shared-sketch path behind [`Solver::solve_batch`].
+//!
+//! A batch of same-shape, same-task jobs advances one iteration at a time,
+//! all members together. Per iteration the batch performs **one** sketch
+//! fill (`S` is drawn independently of every input, so all members may read
+//! the same draw without bias), then each live member runs its own trace
+//! propagation, α fit, polynomial update and residual refresh — per-job
+//! state (the iterate panels and the residual) stays per-job, everything
+//! else (the sketch, the trace row, the update polynomial `g`, `R²` and the
+//! ping-pong spare) is shared scratch from the solver's single
+//! [`Workspace`]. Sketch fills per batch therefore scale with the longest
+//! member's iteration count, not with `batch × iters`.
+//!
+//! **Bit-identity contract** (pinned by the matfn and service conformance
+//! tests): member `j`'s output — iterate, α sequence, residual trajectory,
+//! converged/diverged flags — is bitwise identical to a sequential
+//! [`Solver::solve`] of the same input from a clone of the batch's entry
+//! RNG state. This holds because a member's RNG consumption is exactly one
+//! sketch fill per iteration it is live for, liveness is monotone (a member
+//! that stops never resumes), and the shared fill at lockstep iteration `t`
+//! is the `(t+1)`-th fill of the common stream — precisely the fill a
+//! sequential run of that member would draw at its iteration `t`.
+
+use super::{BoxObserver, MatFnOutput, MatFnTask, Solver};
+use crate::coeffs::traces_needed;
+use crate::linalg::gemm::{global_engine, GemmEngine, Workspace};
+use crate::linalg::Mat;
+use crate::prism::driver::{AlphaMode, IterEvent, RunRecorder};
+use crate::prism::fit::{alpha_from_traces, alpha_with_sketch, taylor_alpha, update_poly_into};
+use crate::rng::Rng;
+use crate::sketch::{exact_power_traces, SketchKind};
+use crate::util::Stopwatch;
+
+/// Entry point used by [`Solver::solve_batch`] for Newton–Schulz specs
+/// without a warm-α phase. `inputs` is non-empty and shape-checked by the
+/// caller.
+pub(super) fn ns_solve_batch(
+    solver: &mut Solver,
+    inputs: &[&Mat],
+    rng: &mut Rng,
+) -> Vec<MatFnOutput> {
+    match solver.task {
+        MatFnTask::Polar => {
+            let (m, n) = inputs[0].shape();
+            if m < n {
+                // Wide inputs run the native tall iteration on transposed
+                // panels, exactly like the sequential engine.
+                let ats: Vec<Mat> = inputs
+                    .iter()
+                    .map(|a| {
+                        let mut t = solver.ws.take(n, m);
+                        a.transpose_into(&mut t);
+                        t
+                    })
+                    .collect();
+                let refs: Vec<&Mat> = ats.iter().collect();
+                let mut outs = polar_batch(solver, &refs, rng);
+                for out in outs.iter_mut() {
+                    out.primary = out.primary.transpose();
+                }
+                for t in ats {
+                    solver.ws.put(t);
+                }
+                outs
+            } else {
+                polar_batch(solver, inputs, rng)
+            }
+        }
+        MatFnTask::Sign => sign_batch(solver, inputs, rng),
+        MatFnTask::Sqrt | MatFnTask::InvSqrt => sqrt_batch(solver, inputs, rng),
+        _ => unreachable!("validated: Newton–Schulz serves polar/sign/sqrt/invsqrt"),
+    }
+}
+
+/// Shared α-fit scratch: one sketch panel and one trace row serve the whole
+/// batch. [`FitScratch::next_iteration`] performs the per-iteration shared
+/// fill; [`FitScratch::alpha`] runs one member's fit against it.
+struct FitScratch {
+    mode: AlphaMode,
+    d: usize,
+    /// `(S: p×n, traces: 1×q)` for the sketched modes, `None` otherwise.
+    sketch: Option<(Mat, Mat)>,
+}
+
+impl FitScratch {
+    fn new(mode: AlphaMode, d: usize, n: usize, ws: &mut Workspace) -> FitScratch {
+        let sketch = match mode {
+            AlphaMode::Sketched { p } | AlphaMode::SketchedKind { p, .. } => {
+                Some((ws.take(p, n), ws.take(1, traces_needed(d))))
+            }
+            _ => None,
+        };
+        FitScratch { mode, d, sketch }
+    }
+
+    fn kind(&self) -> SketchKind {
+        match self.mode {
+            AlphaMode::SketchedKind { kind, .. } => kind,
+            _ => SketchKind::Gaussian,
+        }
+    }
+
+    /// One shared sketch draw for this lockstep iteration (no-op for
+    /// non-sketched modes, which consume no randomness).
+    fn next_iteration(&mut self, rng: &mut Rng) {
+        let kind = self.kind();
+        if let Some((s, _)) = self.sketch.as_mut() {
+            kind.fill(s, rng);
+        }
+    }
+
+    /// α for one member's residual `r`. The sketched arms go through
+    /// [`alpha_with_sketch`] — the same fill-independent core the
+    /// sequential `prism::fit::select_alpha_ns` uses — so the batched and
+    /// sequential fits cannot drift apart; the remaining arms are the same
+    /// trivial one-liners (`taylor_alpha` / fixed / exact traces).
+    fn alpha(&mut self, r: &Mat, eng: &GemmEngine, ws: &mut Workspace) -> f64 {
+        match self.mode {
+            AlphaMode::Classic => taylor_alpha(self.d),
+            AlphaMode::Fixed(a) => a,
+            AlphaMode::Exact => {
+                alpha_from_traces(&exact_power_traces(r, traces_needed(self.d)), self.d)
+            }
+            AlphaMode::Sketched { .. } | AlphaMode::SketchedKind { .. } => {
+                let (s, t) = self.sketch.as_mut().expect("sketched mode has scratch");
+                alpha_with_sketch(s, r, self.d, t.as_mut_slice(), eng, ws)
+            }
+        }
+    }
+
+    fn release(self, ws: &mut Workspace) {
+        if let Some((s, t)) = self.sketch {
+            ws.put(s);
+            ws.put(t);
+        }
+    }
+}
+
+/// Fire the solver-level observer for one member's completed iteration.
+/// Lockstep recorders run observer-less (B recorders cannot share one
+/// `&mut` observer), so events are emitted here with the member index
+/// stamped on [`IterEvent::job`].
+fn notify(
+    observer: &mut Option<BoxObserver>,
+    job: usize,
+    rec: &RunRecorder<'_>,
+    alpha: f64,
+    residual: f64,
+    elapsed_s: f64,
+) {
+    if let Some(obs) = observer.as_mut() {
+        obs(&IterEvent { iter: rec.log.alphas.len() - 1, alpha, residual, elapsed_s, job });
+    }
+}
+
+/// Lockstep polar batch (tall orientation, m ≥ n): the batched form of
+/// `prism::polar::polar_prism_in`'s loop.
+fn polar_batch(solver: &mut Solver, inputs: &[&Mat], rng: &mut Rng) -> Vec<MatFnOutput> {
+    let b = inputs.len();
+    let (m, n) = inputs[0].shape();
+    let (d, alpha_mode, stop) = (solver.spec.d, solver.spec.alpha, solver.spec.stop);
+    let eng = global_engine();
+    let (ws, observer) = (&mut solver.ws, &mut solver.observer);
+
+    let mut xs: Vec<Mat> = Vec::with_capacity(b);
+    for a in inputs {
+        let mut x = ws.take(m, n);
+        x.copy_from(a);
+        x.scale(1.0 / a.fro_norm().max(1e-300));
+        xs.push(x);
+    }
+    let mut rs: Vec<Mat> = Vec::with_capacity(b);
+    for x in &xs {
+        let mut r = ws.take(n, n);
+        eng.syrk_at_a_into(&mut r, x);
+        r.scale(-1.0);
+        r.add_diag(1.0);
+        rs.push(r);
+    }
+    let mut xn = ws.take(m, n); // shared spare, rotates through the members
+    let mut g = ws.take(n, n);
+    let mut r2 = if d == 2 { Some(ws.take(n, n)) } else { None };
+    let mut fit = FitScratch::new(alpha_mode, d, n, ws);
+
+    let sw = Stopwatch::start();
+    let mut recs: Vec<RunRecorder<'_>> =
+        rs.iter().map(|r| RunRecorder::start(r.fro_norm())).collect();
+    let mut live = vec![true; b];
+    for _ in 0..stop.max_iters {
+        for j in 0..b {
+            if live[j] && rs[j].fro_norm() < stop.tol {
+                live[j] = false;
+            }
+        }
+        if live.iter().all(|l| !l) {
+            break;
+        }
+        fit.next_iteration(rng);
+        for j in 0..b {
+            if !live[j] {
+                continue;
+            }
+            let alpha = fit.alpha(&rs[j], &eng, ws);
+            if let Some(r2buf) = r2.as_mut() {
+                eng.matmul_into(r2buf, &rs[j], &rs[j]);
+            }
+            update_poly_into(&mut g, &rs[j], r2.as_ref(), d, alpha, &eng, ws);
+            eng.matmul_into(&mut xn, &xs[j], &g);
+            std::mem::swap(&mut xs[j], &mut xn);
+            eng.syrk_at_a_into(&mut rs[j], &xs[j]);
+            rs[j].scale(-1.0);
+            rs[j].add_diag(1.0);
+            let res = rs[j].fro_norm();
+            if recs[j].step_guard(&stop, alpha, res) {
+                live[j] = false;
+            }
+            notify(observer, j, &recs[j], alpha, res, sw.elapsed_s());
+        }
+    }
+
+    let mut outs = Vec::with_capacity(b);
+    for (x, rec) in xs.iter().zip(recs) {
+        outs.push(MatFnOutput { primary: x.clone(), secondary: None, log: rec.finish(&stop) });
+    }
+    for x in xs {
+        ws.put(x);
+    }
+    for r in rs {
+        ws.put(r);
+    }
+    ws.put(xn);
+    ws.put(g);
+    if let Some(buf) = r2 {
+        ws.put(buf);
+    }
+    fit.release(ws);
+    outs
+}
+
+/// Lockstep sign batch: the batched form of `prism::sign::sign_prism_in`'s
+/// loop (always normalised, as the solver path runs it).
+fn sign_batch(solver: &mut Solver, inputs: &[&Mat], rng: &mut Rng) -> Vec<MatFnOutput> {
+    let b = inputs.len();
+    assert!(inputs[0].is_square(), "sign: square input required");
+    let n = inputs[0].rows();
+    let (d, alpha_mode, stop) = (solver.spec.d, solver.spec.alpha, solver.spec.stop);
+    let eng = global_engine();
+    let (ws, observer) = (&mut solver.ws, &mut solver.observer);
+
+    let mut xs: Vec<Mat> = Vec::with_capacity(b);
+    for a in inputs {
+        let mut x = ws.take(n, n);
+        x.copy_from(a);
+        x.scale(1.0 / a.fro_norm().max(1e-300));
+        xs.push(x);
+    }
+    let mut rs: Vec<Mat> = Vec::with_capacity(b);
+    for x in &xs {
+        let mut r = ws.take(n, n);
+        eng.matmul_into(&mut r, x, x);
+        r.scale(-1.0);
+        r.add_diag(1.0);
+        r.symmetrize();
+        rs.push(r);
+    }
+    let mut xn = ws.take(n, n);
+    let mut g = ws.take(n, n);
+    let mut r2 = if d == 2 { Some(ws.take(n, n)) } else { None };
+    let mut fit = FitScratch::new(alpha_mode, d, n, ws);
+
+    let sw = Stopwatch::start();
+    let mut recs: Vec<RunRecorder<'_>> =
+        rs.iter().map(|r| RunRecorder::start(r.fro_norm())).collect();
+    let mut live = vec![true; b];
+    for _ in 0..stop.max_iters {
+        for j in 0..b {
+            if live[j] && rs[j].fro_norm() < stop.tol {
+                live[j] = false;
+            }
+        }
+        if live.iter().all(|l| !l) {
+            break;
+        }
+        fit.next_iteration(rng);
+        for j in 0..b {
+            if !live[j] {
+                continue;
+            }
+            let alpha = fit.alpha(&rs[j], &eng, ws);
+            if let Some(r2buf) = r2.as_mut() {
+                eng.matmul_into(r2buf, &rs[j], &rs[j]);
+            }
+            update_poly_into(&mut g, &rs[j], r2.as_ref(), d, alpha, &eng, ws);
+            eng.matmul_into(&mut xn, &xs[j], &g);
+            std::mem::swap(&mut xs[j], &mut xn);
+            eng.matmul_into(&mut rs[j], &xs[j], &xs[j]);
+            rs[j].scale(-1.0);
+            rs[j].add_diag(1.0);
+            rs[j].symmetrize();
+            let res = rs[j].fro_norm();
+            if recs[j].step_guard(&stop, alpha, res) {
+                live[j] = false;
+            }
+            notify(observer, j, &recs[j], alpha, res, sw.elapsed_s());
+        }
+    }
+
+    let mut outs = Vec::with_capacity(b);
+    for (x, rec) in xs.iter().zip(recs) {
+        outs.push(MatFnOutput { primary: x.clone(), secondary: None, log: rec.finish(&stop) });
+    }
+    for x in xs {
+        ws.put(x);
+    }
+    for r in rs {
+        ws.put(r);
+    }
+    ws.put(xn);
+    ws.put(g);
+    if let Some(buf) = r2 {
+        ws.put(buf);
+    }
+    fit.release(ws);
+    outs
+}
+
+/// Lockstep coupled square-root batch: the batched form of
+/// `prism::sqrt::sqrt_prism_in`'s loop. Serves both [`MatFnTask::Sqrt`] and
+/// [`MatFnTask::InvSqrt`] (primary/secondary swap, like the solver).
+fn sqrt_batch(solver: &mut Solver, inputs: &[&Mat], rng: &mut Rng) -> Vec<MatFnOutput> {
+    let b = inputs.len();
+    assert!(inputs[0].is_square(), "sqrt: square input required");
+    let n = inputs[0].rows();
+    let (d, alpha_mode, stop) = (solver.spec.d, solver.spec.alpha, solver.spec.stop);
+    let want_sqrt = solver.task == MatFnTask::Sqrt;
+    let eng = global_engine();
+    let (ws, observer) = (&mut solver.ws, &mut solver.observer);
+
+    let cs: Vec<f64> = inputs.iter().map(|a| a.fro_norm().max(1e-300)).collect();
+    let mut xs: Vec<Mat> = Vec::with_capacity(b);
+    let mut ys: Vec<Mat> = Vec::with_capacity(b);
+    for (a, &c) in inputs.iter().zip(&cs) {
+        let mut x = ws.take(n, n);
+        x.copy_from(a);
+        x.scale(1.0 / c);
+        xs.push(x);
+        let mut y = ws.take(n, n);
+        y.fill_with(0.0);
+        y.add_diag(1.0);
+        ys.push(y);
+    }
+    // Y-first residual pairing, as in the sequential engine (Higham 1997's
+    // numerically stable form).
+    let mut rs: Vec<Mat> = Vec::with_capacity(b);
+    for (x, y) in xs.iter().zip(&ys) {
+        let mut r = ws.take(n, n);
+        eng.matmul_into(&mut r, y, x);
+        r.scale(-1.0);
+        r.add_diag(1.0);
+        r.symmetrize();
+        rs.push(r);
+    }
+    let mut xn = ws.take(n, n);
+    let mut yn = ws.take(n, n);
+    let mut g = ws.take(n, n);
+    let mut r2 = if d == 2 { Some(ws.take(n, n)) } else { None };
+    let mut fit = FitScratch::new(alpha_mode, d, n, ws);
+
+    let sw = Stopwatch::start();
+    let mut recs: Vec<RunRecorder<'_>> =
+        rs.iter().map(|r| RunRecorder::start(r.fro_norm())).collect();
+    let mut live = vec![true; b];
+    for _ in 0..stop.max_iters {
+        for j in 0..b {
+            if live[j] && rs[j].fro_norm() < stop.tol {
+                live[j] = false;
+            }
+        }
+        if live.iter().all(|l| !l) {
+            break;
+        }
+        fit.next_iteration(rng);
+        for j in 0..b {
+            if !live[j] {
+                continue;
+            }
+            let alpha = fit.alpha(&rs[j], &eng, ws);
+            if let Some(r2buf) = r2.as_mut() {
+                eng.matmul_into(r2buf, &rs[j], &rs[j]);
+            }
+            update_poly_into(&mut g, &rs[j], r2.as_ref(), d, alpha, &eng, ws);
+            eng.matmul_into(&mut xn, &xs[j], &g);
+            std::mem::swap(&mut xs[j], &mut xn);
+            eng.matmul_into(&mut yn, &g, &ys[j]);
+            std::mem::swap(&mut ys[j], &mut yn);
+            eng.matmul_into(&mut rs[j], &ys[j], &xs[j]);
+            rs[j].scale(-1.0);
+            rs[j].add_diag(1.0);
+            rs[j].symmetrize();
+            let res = rs[j].fro_norm();
+            if recs[j].step_guard(&stop, alpha, res) {
+                live[j] = false;
+            }
+            notify(observer, j, &recs[j], alpha, res, sw.elapsed_s());
+        }
+    }
+
+    let mut outs = Vec::with_capacity(b);
+    for (j, rec) in recs.into_iter().enumerate() {
+        let sc = cs[j].sqrt();
+        let sqrt = xs[j].scaled(sc);
+        let inv_sqrt = ys[j].scaled(1.0 / sc);
+        let (primary, secondary) = if want_sqrt {
+            (sqrt, Some(inv_sqrt))
+        } else {
+            (inv_sqrt, Some(sqrt))
+        };
+        outs.push(MatFnOutput { primary, secondary, log: rec.finish(&stop) });
+    }
+    for x in xs {
+        ws.put(x);
+    }
+    for y in ys {
+        ws.put(y);
+    }
+    for r in rs {
+        ws.put(r);
+    }
+    ws.put(xn);
+    ws.put(yn);
+    ws.put(g);
+    if let Some(buf) = r2 {
+        ws.put(buf);
+    }
+    fit.release(ws);
+    outs
+}

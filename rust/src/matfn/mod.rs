@@ -20,9 +20,12 @@
 //!   the hot loop performs zero heap allocations — exactly the
 //!   Shampoo/Muon pattern of calling the same function on same-shaped
 //!   matrices thousands of times. [`MatFnSolver::solve_from`] warm-starts
-//!   from a previous result (paper §C), and [`MatFnSolver::set_observer`]
-//!   streams per-iteration residuals instead of waiting for the final
-//!   [`IterationLog`].
+//!   from a previous result (paper §C), [`Solver::solve_batch`] runs a
+//!   same-shape batch in lockstep with **one shared sketch fill per
+//!   iteration** (bit-identical to sequential solves at the same per-job
+//!   RNG stream — the coordinator service's amortised path), and
+//!   [`MatFnSolver::set_observer`] streams per-iteration residuals instead
+//!   of waiting for the final [`IterationLog`].
 //!
 //! ## Quickstart
 //!
@@ -40,6 +43,7 @@
 //! assert_eq!(solver.workspace_allocations(), allocs);
 //! ```
 
+mod batch;
 pub mod registry;
 mod solver;
 

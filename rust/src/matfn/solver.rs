@@ -25,10 +25,10 @@ use crate::util::{Error, Result};
 /// A planned, reusable matrix-function solver. See the module docs of
 /// [`crate::matfn`] for the quickstart.
 pub struct Solver {
-    task: MatFnTask,
-    spec: SolverSpec,
-    ws: Workspace,
-    observer: Option<BoxObserver>,
+    pub(super) task: MatFnTask,
+    pub(super) spec: SolverSpec,
+    pub(super) ws: Workspace,
+    pub(super) observer: Option<BoxObserver>,
     /// Remez schedule, built once when the method is PolarExpress.
     pe: Option<PolarExpress>,
 }
@@ -116,8 +116,14 @@ fn chain_logs(mut a: IterationLog, b: IterationLog) -> IterationLog {
 /// Re-borrow the solver's boxed observer as the engine-facing hook type.
 /// (The `match` is a coercion site: it drops the box's `Send` bound and
 /// shortens the trait-object lifetime, which `Option::map` cannot.)
-fn hooks<'a>(observer: &'a mut Option<BoxObserver>, x0: Option<&'a Mat>) -> EngineHooks<'a> {
-    hooks_based(observer, x0, (0, 0.0))
+/// `job` stamps every streamed event with a batch-member index (0 for plain
+/// solves — see [`IterEvent::job`]).
+fn hooks<'a>(
+    observer: &'a mut Option<BoxObserver>,
+    x0: Option<&'a Mat>,
+    job: usize,
+) -> EngineHooks<'a> {
+    hooks_based(observer, x0, (0, 0.0), job)
 }
 
 /// Like [`hooks`], with an event offset for chained engine calls (warm-α
@@ -127,12 +133,13 @@ fn hooks_based<'a>(
     observer: &'a mut Option<BoxObserver>,
     x0: Option<&'a Mat>,
     event_base: (usize, f64),
+    job: usize,
 ) -> EngineHooks<'a> {
     let observer: Option<&'a mut dyn FnMut(&IterEvent)> = match observer.as_mut() {
         Some(b) => Some(&mut **b),
         None => None,
     };
-    EngineHooks { x0, observer, event_base }
+    EngineHooks { x0, observer, event_base, job }
 }
 
 impl Solver {
@@ -154,10 +161,26 @@ impl Solver {
     /// it stands in with PRISM-5 (the same orthogonalization role), exactly
     /// as the old `PolarBackend` did.
     pub fn for_backend(backend: Backend, task: MatFnTask, iters: usize) -> Result<Solver> {
-        let tol = match task {
+        Self::for_backend_tuned(backend, task, iters, None, None)
+    }
+
+    /// [`Solver::for_backend`] with the service's tuning knobs threaded
+    /// through: `tol` overrides the per-task default stopping tolerance and
+    /// `sketch_p` the sketch size of sketched α specs (it is ignored by
+    /// classic/exact/direct backends, which draw no sketches). This is the
+    /// constructor the coordinator service uses so `service.tol` /
+    /// `service.sketch_p` in TOML actually reach the solvers.
+    pub fn for_backend_tuned(
+        backend: Backend,
+        task: MatFnTask,
+        iters: usize,
+        tol: Option<f64>,
+        sketch_p: Option<usize>,
+    ) -> Result<Solver> {
+        let tol = tol.unwrap_or(match task {
             MatFnTask::Polar | MatFnTask::Sign => 1e-7,
             _ => 1e-9,
-        };
+        });
         let stop = StopRule::default().with_max_iters(iters).with_tol(tol);
         let spec = match backend {
             Backend::NewtonSchulz => SolverSpec::ns_classic(2),
@@ -174,6 +197,15 @@ impl Solver {
             }
         }
         .with_stop(stop);
+        let spec = match (sketch_p, spec.alpha) {
+            (Some(p), AlphaMode::Sketched { .. }) => {
+                spec.with_alpha(AlphaMode::Sketched { p })
+            }
+            (Some(p), AlphaMode::SketchedKind { kind, .. }) => {
+                spec.with_alpha(AlphaMode::SketchedKind { p, kind })
+            }
+            _ => spec,
+        };
         Solver::new(task, spec)
     }
 
@@ -215,18 +247,77 @@ impl Solver {
 
     /// Compute the matrix function of `a` (see [`MatFnSolver::solve`]).
     pub fn solve(&mut self, a: &Mat, rng: &mut Rng) -> MatFnOutput {
-        self.run(a, None, rng)
+        self.run(a, None, rng, 0)
     }
 
     /// Warm-start from `x0` (see [`MatFnSolver::solve_from`]).
     pub fn solve_from(&mut self, a: &Mat, x0: &Mat, rng: &mut Rng) -> MatFnOutput {
-        self.run(a, Some(x0), rng)
+        self.run(a, Some(x0), rng, 0)
     }
 
-    fn run(&mut self, a: &Mat, x0: Option<&Mat>, rng: &mut Rng) -> MatFnOutput {
+    /// Solve a batch of same-shape inputs, amortising PRISM's fitting
+    /// overhead: Newton–Schulz-family solves (without a warm-α phase) run in
+    /// **lockstep**, sharing one sketch fill per iteration across the whole
+    /// batch — the sketch `S` is drawn independently of each input, so
+    /// sharing it is statistically free — with every per-job panel drawn
+    /// from this solver's single [`Workspace`] (allocation-free from the
+    /// second same-size batch onward). Other methods run the jobs back to
+    /// back through the same workspace.
+    ///
+    /// **RNG contract:** each output is bit-identical to
+    /// `self.solve(inputs[j], &mut r)` where `r` is a clone of `rng`'s state
+    /// at entry — every batch member reads the *same* per-job stream, which
+    /// is exactly what makes the per-iteration sketch shareable. `rng` is
+    /// left advanced by the longest member's consumption; batched and
+    /// sequential execution are therefore interchangeable without changing
+    /// results, and the conformance suites pin this.
+    ///
+    /// Per-job `IterationLog`s carry exact residual/α trajectories, but
+    /// `wall_s`/`times_s`/`gemm_calls` of lockstep members span the shared
+    /// batch execution (each job's recorder is live while its batch peers
+    /// iterate on the same thread).
+    pub fn solve_batch(&mut self, inputs: &[&Mat], rng: &mut Rng) -> Vec<MatFnOutput> {
+        if inputs.is_empty() {
+            return Vec::new();
+        }
+        let shape = inputs[0].shape();
+        for a in inputs {
+            assert_eq!(a.shape(), shape, "solve_batch: all inputs must share one shape");
+        }
+        if self.spec.method == Method::NewtonSchulz
+            && self.spec.warm_iters == 0
+            && inputs.len() > 1
+        {
+            return super::batch::ns_solve_batch(self, inputs, rng);
+        }
+        // Sequential fallback under the same per-job stream contract: every
+        // job sees a clone of the entry RNG state (a no-op for the methods
+        // that draw no randomness). The final `rng` state matches lockstep:
+        // advanced by the longest member's consumption.
+        let entry = rng.clone();
+        let mut consumed = entry.clone();
+        let mut most_iters = 0usize;
+        let outs: Vec<MatFnOutput> = inputs
+            .iter()
+            .enumerate()
+            .map(|(j, a)| {
+                let mut r = entry.clone();
+                let out = self.run(a, None, &mut r, j);
+                if out.log.iters() >= most_iters {
+                    most_iters = out.log.iters();
+                    consumed = r;
+                }
+                out
+            })
+            .collect();
+        *rng = consumed;
+        outs
+    }
+
+    fn run(&mut self, a: &Mat, x0: Option<&Mat>, rng: &mut Rng, job: usize) -> MatFnOutput {
         let spec = self.spec;
         match spec.method {
-            Method::NewtonSchulz => self.run_ns(a, x0, rng),
+            Method::NewtonSchulz => self.run_ns(a, x0, rng, job),
             Method::InverseNewton => {
                 let p = match self.task {
                     MatFnTask::InvRoot { p } => p,
@@ -235,14 +326,24 @@ impl Solver {
                     _ => unreachable!("validated"),
                 };
                 let opts = InvRootOpts { p, alpha: spec.alpha, stop: spec.stop };
-                let out =
-                    inv_root_prism_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, x0));
+                let out = inv_root_prism_in(
+                    a,
+                    &opts,
+                    rng,
+                    &mut self.ws,
+                    hooks(&mut self.observer, x0, job),
+                );
                 MatFnOutput { primary: out.inv_root, secondary: None, log: out.log }
             }
             Method::DbNewton => {
                 let opts = DbNewtonOpts { alpha: spec.alpha, stop: spec.stop };
-                let out =
-                    db_newton_prism_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, None));
+                let out = db_newton_prism_in(
+                    a,
+                    &opts,
+                    rng,
+                    &mut self.ws,
+                    hooks(&mut self.observer, None, job),
+                );
                 let (primary, secondary) = if self.task == MatFnTask::Sqrt {
                     (out.sqrt, Some(out.inv_sqrt))
                 } else {
@@ -257,7 +358,7 @@ impl Solver {
                     &opts,
                     rng,
                     &mut self.ws,
-                    hooks(&mut self.observer, x0),
+                    hooks(&mut self.observer, x0, job),
                 );
                 MatFnOutput { primary: out.inverse, secondary: None, log: out.log }
             }
@@ -269,7 +370,7 @@ impl Solver {
                             a,
                             &spec.stop,
                             &mut self.ws,
-                            hooks(&mut self.observer, x0),
+                            hooks(&mut self.observer, x0, job),
                         );
                         MatFnOutput { primary: q, secondary: None, log }
                     }
@@ -278,7 +379,7 @@ impl Solver {
                             a,
                             &spec.stop,
                             &mut self.ws,
-                            hooks(&mut self.observer, None),
+                            hooks(&mut self.observer, None, job),
                         );
                         let (primary, secondary) = if self.task == MatFnTask::Sqrt {
                             (sq, Some(isq))
@@ -292,7 +393,7 @@ impl Solver {
             Method::Cans => {
                 let opts = CansOpts { stop: spec.stop, ..CansOpts::default() };
                 let (q, log) =
-                    polar_cans_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, x0));
+                    polar_cans_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, x0, job));
                 MatFnOutput { primary: q, secondary: None, log }
             }
             Method::Eigen => {
@@ -322,7 +423,13 @@ impl Solver {
     /// pin α at the interval's upper bound for `warm_iters` iterations (no
     /// fit cost while the residual is still large), then continue with the
     /// fitted α from the warm iterate.
-    fn run_ns(&mut self, a: &Mat, x0: Option<&Mat>, rng: &mut Rng) -> MatFnOutput {
+    fn run_ns(
+        &mut self,
+        a: &Mat,
+        x0: Option<&Mat>,
+        rng: &mut Rng,
+        job: usize,
+    ) -> MatFnOutput {
         let spec = self.spec;
         let warm_capable = matches!(self.task, MatFnTask::Polar | MatFnTask::Sign);
         let sketched = matches!(
@@ -332,10 +439,10 @@ impl Solver {
         if warm_capable && sketched && spec.warm_iters > 0 {
             let (_, hi) = crate::coeffs::alpha_interval(spec.d);
             if spec.warm_iters >= spec.stop.max_iters {
-                return self.run_ns_once(a, x0, AlphaMode::Fixed(hi), spec.stop, rng);
+                return self.run_ns_once(a, x0, AlphaMode::Fixed(hi), spec.stop, rng, job);
             }
             let warm_stop = StopRule { max_iters: spec.warm_iters, ..spec.stop };
-            let warm = self.run_ns_once(a, x0, AlphaMode::Fixed(hi), warm_stop, rng);
+            let warm = self.run_ns_once(a, x0, AlphaMode::Fixed(hi), warm_stop, rng, job);
             let rest =
                 StopRule { max_iters: spec.stop.max_iters - spec.warm_iters, ..spec.stop };
             let warm_iterate = warm.primary;
@@ -343,16 +450,17 @@ impl Solver {
             // count and wall time, so the trajectory stays continuous.
             let base = (warm.log.iters(), warm.log.wall_s);
             let fine =
-                self.run_ns_chained(a, Some(&warm_iterate), spec.alpha, rest, base, rng);
+                self.run_ns_chained(a, Some(&warm_iterate), spec.alpha, rest, base, rng, job);
             return MatFnOutput {
                 log: chain_logs(warm.log, fine.log),
                 primary: fine.primary,
                 secondary: fine.secondary,
             };
         }
-        self.run_ns_once(a, x0, spec.alpha, spec.stop, rng)
+        self.run_ns_once(a, x0, spec.alpha, spec.stop, rng, job)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_ns_once(
         &mut self,
         a: &Mat,
@@ -360,10 +468,12 @@ impl Solver {
         alpha: AlphaMode,
         stop: StopRule,
         rng: &mut Rng,
+        job: usize,
     ) -> MatFnOutput {
-        self.run_ns_chained(a, x0, alpha, stop, (0, 0.0), rng)
+        self.run_ns_chained(a, x0, alpha, stop, (0, 0.0), rng, job)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_ns_chained(
         &mut self,
         a: &Mat,
@@ -372,6 +482,7 @@ impl Solver {
         stop: StopRule,
         base: (usize, f64),
         rng: &mut Rng,
+        job: usize,
     ) -> MatFnOutput {
         let d = self.spec.d;
         match self.task {
@@ -382,7 +493,7 @@ impl Solver {
                     &opts,
                     rng,
                     &mut self.ws,
-                    hooks_based(&mut self.observer, x0, base),
+                    hooks_based(&mut self.observer, x0, base, job),
                 );
                 MatFnOutput { primary: out.q, secondary: None, log: out.log }
             }
@@ -393,14 +504,19 @@ impl Solver {
                     &opts,
                     rng,
                     &mut self.ws,
-                    hooks_based(&mut self.observer, x0, base),
+                    hooks_based(&mut self.observer, x0, base, job),
                 );
                 MatFnOutput { primary: out.s, secondary: None, log: out.log }
             }
             MatFnTask::Sqrt | MatFnTask::InvSqrt => {
                 let opts = SqrtOpts { d, alpha, stop };
-                let out =
-                    sqrt_prism_in(a, &opts, rng, &mut self.ws, hooks(&mut self.observer, None));
+                let out = sqrt_prism_in(
+                    a,
+                    &opts,
+                    rng,
+                    &mut self.ws,
+                    hooks(&mut self.observer, None, job),
+                );
                 let (primary, secondary) = if self.task == MatFnTask::Sqrt {
                     (out.sqrt, Some(out.inv_sqrt))
                 } else {

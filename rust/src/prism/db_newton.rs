@@ -91,7 +91,8 @@ pub(crate) fn db_newton_prism_in(
 
     let mut rec = RunRecorder::start(eye_minus_fro(&m))
         .with_observer(hooks.observer)
-        .with_event_base(hooks.event_base);
+        .with_event_base(hooks.event_base)
+        .with_job(hooks.job);
     for _ in 0..opts.stop.max_iters {
         if eye_minus_fro(&m) < opts.stop.tol {
             break;

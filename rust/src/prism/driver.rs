@@ -76,6 +76,11 @@ pub struct IterEvent {
     pub residual: f64,
     /// Wall-clock seconds since the run started.
     pub elapsed_s: f64,
+    /// Index of the batch member this event belongs to when the run is part
+    /// of a [`crate::matfn::Solver::solve_batch`] call (0 for plain solves).
+    /// A solver-level observer serving a batch uses this to attribute
+    /// interleaved per-iteration events to the right job.
+    pub job: usize,
 }
 
 /// Per-iteration callback: streamed residual trajectories for the
@@ -95,12 +100,15 @@ pub struct EngineHooks<'a> {
     /// one logical run is executed as chained engine calls (the warm-α
     /// phase), so streamed events stay continuous with the chained log.
     pub event_base: (usize, f64),
+    /// Batch-member index stamped on every observer event (see
+    /// [`IterEvent::job`]); 0 outside batched solves.
+    pub job: usize,
 }
 
 impl<'a> EngineHooks<'a> {
     /// No hooks — the plain free-function entry points use this.
     pub fn none() -> EngineHooks<'static> {
-        EngineHooks { x0: None, observer: None, event_base: (0, 0.0) }
+        EngineHooks { x0: None, observer: None, event_base: (0, 0.0), job: 0 }
     }
 }
 
@@ -156,6 +164,7 @@ pub struct RunRecorder<'a> {
     pub log: IterationLog,
     observer: Option<Observer<'a>>,
     event_base: (usize, f64),
+    job: usize,
 }
 
 impl<'a> RunRecorder<'a> {
@@ -168,6 +177,7 @@ impl<'a> RunRecorder<'a> {
             log,
             observer: None,
             event_base: (0, 0.0),
+            job: 0,
         }
     }
 
@@ -184,6 +194,13 @@ impl<'a> RunRecorder<'a> {
         self
     }
 
+    /// Stamp observer events with a batch-member index (see
+    /// [`IterEvent::job`]). Affects only what observers see.
+    pub fn with_job(mut self, job: usize) -> Self {
+        self.job = job;
+        self
+    }
+
     /// Record one completed iteration and notify the observer.
     pub fn step(&mut self, alpha: f64, post_residual: f64) {
         self.log.alphas.push(alpha);
@@ -196,6 +213,7 @@ impl<'a> RunRecorder<'a> {
                 alpha,
                 residual: post_residual,
                 elapsed_s: self.event_base.1 + elapsed_s,
+                job: self.job,
             };
             obs(&ev);
         }

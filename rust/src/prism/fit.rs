@@ -8,7 +8,7 @@ use crate::linalg::gemm::{GemmEngine, Workspace};
 use crate::linalg::Mat;
 use crate::polyfit::minimize_quartic;
 use crate::rng::Rng;
-use crate::sketch::{exact_power_traces, with_sketched_traces, SketchKind};
+use crate::sketch::{exact_power_traces, power_traces_into, with_sketched_traces, SketchKind};
 
 /// Taylor coefficient of ξ^d in f_d — the classical Newton–Schulz choice.
 /// f(ξ) = (1-ξ)^{-1/2} = 1 + ξ/2 + 3ξ²/8 + 5ξ³/16 + ...
@@ -54,6 +54,26 @@ pub fn select_alpha_ns(
             })
         }
     }
+}
+
+/// α for residual `r` from an **already-drawn** sketch `s` — the batched
+/// lockstep path's core ([`crate::matfn::Solver::solve_batch`] fills one
+/// sketch per iteration and fits every batch member against it). Given the
+/// same draw this is operation-identical to the sequential
+/// [`crate::sketch::with_sketched_traces`] route above: both run
+/// [`power_traces_into`] then [`alpha_from_traces`], so the two fits cannot
+/// drift apart numerically. `traces` must have length
+/// [`traces_needed`]`(d)`.
+pub fn alpha_with_sketch(
+    s: &Mat,
+    r: &Mat,
+    d: usize,
+    traces: &mut [f64],
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) -> f64 {
+    power_traces_into(s, r, traces, eng, ws);
+    alpha_from_traces(traces, d)
 }
 
 /// Minimise the assembled quartic on the recommended interval.

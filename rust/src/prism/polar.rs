@@ -74,7 +74,7 @@ pub(crate) fn polar_prism_in(
 ) -> PolarResult {
     let (m, n) = a.shape();
     if m < n {
-        let EngineHooks { x0, observer, event_base } = hooks;
+        let EngineHooks { x0, observer, event_base, job } = hooks;
         let mut at = ws.take(n, m);
         a.transpose_into(&mut at);
         let x0t = x0.map(|x0| {
@@ -92,6 +92,7 @@ pub(crate) fn polar_prism_in(
                 None => None,
             },
             event_base,
+            job,
         };
         let r = polar_prism_in(&at, opts, rng, ws, hooks_t);
         ws.put(at);
@@ -129,7 +130,8 @@ pub(crate) fn polar_prism_in(
 
     let mut rec = RunRecorder::start(r.fro_norm())
         .with_observer(hooks.observer)
-        .with_event_base(hooks.event_base);
+        .with_event_base(hooks.event_base)
+        .with_job(hooks.job);
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;

@@ -84,7 +84,8 @@ pub(crate) fn sign_prism_in(
 
     let mut rec = RunRecorder::start(r.fro_norm())
         .with_observer(hooks.observer)
-        .with_event_base(hooks.event_base);
+        .with_event_base(hooks.event_base)
+        .with_job(hooks.job);
     for _ in 0..opts.stop.max_iters {
         if r.fro_norm() < opts.stop.tol {
             break;

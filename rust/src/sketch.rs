@@ -11,6 +11,47 @@
 use crate::linalg::gemm::{global_engine, GemmEngine, Workspace};
 use crate::linalg::Mat;
 use crate::rng::Rng;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of sketch draws ([`SketchKind::fill`] calls, which
+/// [`SketchKind::draw`] goes through too). The service bench reads deltas of
+/// this to show that batched solves share **one** sketch fill per iteration
+/// across the whole batch — O(iters) fills per batch instead of
+/// O(batch · iters) — since worker threads fill on their own threads where a
+/// thread-local scope would be invisible to the measuring thread.
+static FILLS_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static FILLS_LOCAL: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Total sketch fills performed by this process so far.
+pub fn fills_total() -> u64 {
+    FILLS_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Counts sketch fills on the *current thread* between `begin` and `fills`
+/// — race-free under parallel test execution (same pattern as
+/// [`crate::linalg::gemm::GemmScope`]).
+pub struct SketchScope {
+    start: u64,
+}
+
+impl SketchScope {
+    pub fn begin() -> SketchScope {
+        SketchScope { start: FILLS_LOCAL.with(|c| c.get()) }
+    }
+    /// Fills on this thread since `begin`.
+    pub fn fills(&self) -> u64 {
+        FILLS_LOCAL.with(|c| c.get()) - self.start
+    }
+}
+
+fn record_fill() {
+    FILLS_TOTAL.fetch_add(1, Ordering::Relaxed);
+    FILLS_LOCAL.with(|c| c.set(c.get() + 1));
+}
 
 /// Gaussian sketch matrix `S` with iid N(0, 1/p) entries (scaling keeps
 /// `E[tr(S M Sᵀ)] = tr(M)`).
@@ -160,6 +201,7 @@ impl SketchKind {
     /// to [`SketchKind::draw`] for the same kind and shape, so pooled and
     /// allocating callers see bit-identical sketches from equal seeds.
     pub fn fill(&self, s: &mut Mat, rng: &mut Rng) {
+        record_fill();
         let (p, n) = s.shape();
         match self {
             SketchKind::Gaussian => {
@@ -367,6 +409,20 @@ mod tests {
         }
         assert_eq!(ws.allocations(), allocs, "warm power traces must not allocate");
         assert_eq!(out.to_vec(), s.power_traces(&r, 6), "pooled and allocating paths agree");
+    }
+
+    #[test]
+    fn fill_counters_count_draws() {
+        // Thread-local scope is exact even with other tests filling
+        // concurrently on their own threads; the global total is monotone.
+        let scope = SketchScope::begin();
+        let before = fills_total();
+        let mut rng = Rng::seed_from(11);
+        let _ = GaussianSketch::draw(&mut rng, 4, 8);
+        let mut buf = Mat::zeros(4, 8);
+        SketchKind::Rademacher.fill(&mut buf, &mut rng);
+        assert_eq!(scope.fills(), 2);
+        assert!(fills_total() >= before + 2);
     }
 
     #[test]

@@ -121,6 +121,179 @@ fn shape_change_grows_pool_then_stabilizes() {
     assert_eq!(s.workspace_allocations(), after_big);
 }
 
+// ───────────────────── batched lockstep solves ─────────────────────
+
+/// Batched vs sequential, the `solve_batch` contract: every member's
+/// output must be bitwise identical to a sequential `solve` of the same
+/// input from a clone of the batch's entry RNG state.
+fn assert_batch_matches_sequential(name: &str, inputs: &[Mat], coupled: bool) {
+    let refs: Vec<&Mat> = inputs.iter().collect();
+    let entry = Rng::seed_from(77);
+    let mut batch_solver = registry::resolve(name).unwrap();
+    batch_solver.set_stop(StopRule::default().with_max_iters(30));
+    let outs = batch_solver.solve_batch(&refs, &mut entry.clone());
+    assert_eq!(outs.len(), inputs.len());
+    let mut seq_solver = registry::resolve(name).unwrap();
+    seq_solver.set_stop(StopRule::default().with_max_iters(30));
+    for (j, (a, out)) in inputs.iter().zip(&outs).enumerate() {
+        let want = seq_solver.solve(a, &mut entry.clone());
+        assert_eq!(out.primary, want.primary, "{name} job {j}: primary differs");
+        assert_eq!(out.log.alphas, want.log.alphas, "{name} job {j}: α sequence differs");
+        assert_eq!(out.log.residuals, want.log.residuals, "{name} job {j}: residuals differ");
+        assert_eq!(out.log.converged, want.log.converged, "{name} job {j}: converged flag");
+        assert_eq!(out.log.diverged, want.log.diverged, "{name} job {j}: diverged flag");
+        if coupled {
+            assert_eq!(
+                out.secondary.as_ref().unwrap(),
+                want.secondary.as_ref().unwrap(),
+                "{name} job {j}: coupled partner differs"
+            );
+        }
+    }
+}
+
+#[test]
+fn solve_batch_bitwise_matches_sequential_tall_polar() {
+    // Mixed conditioning → members converge at different iterations, so
+    // the lockstep liveness bookkeeping (and the shared-fill stream
+    // alignment it relies on) is exercised, not just the happy path.
+    let mut rng = Rng::seed_from(20);
+    let inputs: Vec<Mat> = (0..5)
+        .map(|k| {
+            let s = randmat::logspace(10f64.powi(-(k as i32) - 2), 1.0, 12);
+            randmat::with_spectrum(&mut rng, 18, 12, &s)
+        })
+        .collect();
+    assert_batch_matches_sequential("prism5-polar", &inputs, false);
+    assert_batch_matches_sequential("prism3-polar", &inputs, false);
+    // Classical NS consumes no randomness but runs the same lockstep loop.
+    assert_batch_matches_sequential("ns-polar", &inputs, false);
+}
+
+#[test]
+fn solve_batch_bitwise_matches_sequential_wide_polar() {
+    let mut rng = Rng::seed_from(21);
+    let inputs: Vec<Mat> = (0..3).map(|_| randmat::gaussian(&mut rng, 10, 20)).collect();
+    assert_batch_matches_sequential("prism5-polar", &inputs, false);
+}
+
+#[test]
+fn solve_batch_bitwise_matches_sequential_invsqrt_and_sign() {
+    let mut rng = Rng::seed_from(22);
+    let spd: Vec<Mat> = (0..4)
+        .map(|k| {
+            let w = randmat::logspace(10f64.powi(-(k as i32) - 1), 1.0, 10);
+            randmat::sym_with_spectrum(&mut rng, 10, &w)
+        })
+        .collect();
+    assert_batch_matches_sequential("prism5-invsqrt", &spd, true);
+    assert_batch_matches_sequential("prism5-sqrt", &spd, true);
+    let indef: Vec<Mat> = (0..4)
+        .map(|_| {
+            let w: Vec<f64> = (0..8)
+                .map(|i| if i % 2 == 0 { 0.9 - 0.1 * i as f64 } else { -0.8 + 0.1 * i as f64 })
+                .collect();
+            randmat::sym_with_spectrum(&mut rng, 8, &w)
+        })
+        .collect();
+    assert_batch_matches_sequential("prism3-sign", &indef, false);
+}
+
+#[test]
+fn solve_batch_falls_back_for_non_ns_methods() {
+    // Direct/minimax methods run members back to back but must satisfy the
+    // same per-job stream contract (trivially — they draw no randomness).
+    let mut rng = Rng::seed_from(23);
+    let tall: Vec<Mat> = (0..3).map(|_| randmat::gaussian(&mut rng, 16, 8)).collect();
+    let refs: Vec<&Mat> = tall.iter().collect();
+    for name in ["pe-polar", "eigen-polar"] {
+        let mut batch_solver = registry::resolve(name).unwrap();
+        let outs = batch_solver.solve_batch(&refs, &mut Rng::seed_from(3));
+        let mut seq_solver = registry::resolve(name).unwrap();
+        for (a, out) in tall.iter().zip(&outs) {
+            let want = seq_solver.solve(a, &mut Rng::seed_from(3));
+            assert_eq!(out.primary, want.primary, "{name}: batch != sequential");
+        }
+    }
+}
+
+#[test]
+fn solve_batch_shares_one_sketch_fill_per_iteration() {
+    // The amortisation claim itself: a lockstep batch draws one sketch per
+    // iteration of its longest member — O(iters) — while sequential solves
+    // draw one per member per iteration — O(batch · iters).
+    let mut rng = Rng::seed_from(24);
+    let w = randmat::logspace(1e-2, 1.0, 10);
+    let inputs: Vec<Mat> = (0..6).map(|_| randmat::sym_with_spectrum(&mut rng, 10, &w)).collect();
+    let refs: Vec<&Mat> = inputs.iter().collect();
+    let entry = Rng::seed_from(99);
+    let mut solver = registry::resolve("prism5-invsqrt").unwrap();
+
+    let scope = prism::sketch::SketchScope::begin();
+    let outs = solver.solve_batch(&refs, &mut entry.clone());
+    let batched_fills = scope.fills();
+    let longest = outs.iter().map(|o| o.log.iters()).max().unwrap() as u64;
+    assert_eq!(batched_fills, longest, "one shared fill per lockstep iteration");
+
+    let scope = prism::sketch::SketchScope::begin();
+    for a in &inputs {
+        let _ = solver.solve(a, &mut entry.clone());
+    }
+    let sequential_fills = scope.fills();
+    let total: u64 = outs.iter().map(|o| o.log.iters() as u64).sum();
+    assert_eq!(sequential_fills, total, "sequential fills scale with batch · iters");
+    assert!(batched_fills < sequential_fills);
+}
+
+#[test]
+fn warm_batched_solves_are_allocation_free() {
+    let mut rng = Rng::seed_from(25);
+    let w = randmat::logspace(1e-2, 1.0, 10);
+    let inputs: Vec<Mat> = (0..4).map(|_| randmat::sym_with_spectrum(&mut rng, 10, &w)).collect();
+    let refs: Vec<&Mat> = inputs.iter().collect();
+    let mut solver = registry::resolve("prism5-invsqrt").unwrap();
+    let mut r = Rng::seed_from(5);
+    let _ = solver.solve_batch(&refs, &mut r);
+    let allocs = solver.workspace_allocations();
+    assert!(allocs > 0, "cold batch populates the pool");
+    for _ in 0..2 {
+        let _ = solver.solve_batch(&refs, &mut r);
+    }
+    assert_eq!(
+        solver.workspace_allocations(),
+        allocs,
+        "warm batched solves must not allocate"
+    );
+}
+
+#[test]
+fn solve_batch_streams_job_tagged_events() {
+    // One persistent observer serves the whole batch; events carry the
+    // member index so a service can attribute interleaved trajectories.
+    let mut rng = Rng::seed_from(26);
+    let w = randmat::logspace(1e-2, 1.0, 8);
+    let inputs: Vec<Mat> = (0..3).map(|_| randmat::sym_with_spectrum(&mut rng, 8, &w)).collect();
+    let refs: Vec<&Mat> = inputs.iter().collect();
+    let mut solver = registry::resolve("prism5-invsqrt").unwrap();
+    let events: Arc<Mutex<Vec<(usize, usize, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&events);
+    solver.set_observer(Some(Box::new(move |ev| {
+        sink.lock().unwrap().push((ev.job, ev.iter, ev.residual));
+    })));
+    let outs = solver.solve_batch(&refs, &mut Rng::seed_from(7));
+    solver.set_observer(None);
+    let events = events.lock().unwrap();
+    for (j, out) in outs.iter().enumerate() {
+        let mine: Vec<&(usize, usize, f64)> =
+            events.iter().filter(|(job, _, _)| *job == j).collect();
+        assert_eq!(mine.len(), out.log.iters(), "job {j}: one event per iteration");
+        for (k, (_, iter, res)) in mine.iter().enumerate() {
+            assert_eq!(*iter, k, "job {j}: iteration order");
+            assert_eq!(*res, out.log.residuals[k + 1], "job {j}: stream mirrors the log");
+        }
+    }
+}
+
 // ───────────────────────── warm start (§C) ─────────────────────────
 
 #[test]

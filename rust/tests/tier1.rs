@@ -123,6 +123,7 @@ fn smoke_service_round_trip() {
         sketch_p: 8,
         max_iters: 40,
         tol: 1e-7,
+        solver_cache_cap: 32,
         gemm_threads: 1,
         stream_residuals: false,
         gemm_block: None,
@@ -139,5 +140,24 @@ fn smoke_service_round_trip() {
     for r in &results {
         assert!(!r.result.has_non_finite());
         assert_eq!(r.result.shape(), (6, 6));
+    }
+}
+
+#[test]
+fn smoke_batched_solve_matches_sequential() {
+    // The service's amortised path: a lockstep batch must be bit-identical
+    // to sequential solves from a clone of the entry RNG state.
+    let mut rng = Rng::seed_from(9);
+    let w = randmat::logspace(0.05, 1.0, 8);
+    let inputs: Vec<Mat> = (0..4).map(|_| randmat::sym_with_spectrum(&mut rng, 8, &w)).collect();
+    let refs: Vec<&Mat> = inputs.iter().collect();
+    let entry = Rng::seed_from(31);
+    let mut batch_solver = registry::resolve("prism5-invsqrt").unwrap();
+    let outs = batch_solver.solve_batch(&refs, &mut entry.clone());
+    let mut seq_solver = registry::resolve("prism5-invsqrt").unwrap();
+    for (a, out) in inputs.iter().zip(&outs) {
+        let want = seq_solver.solve(a, &mut entry.clone());
+        assert_eq!(out.primary, want.primary, "batched result must match sequential");
+        assert!(out.log.converged);
     }
 }
