@@ -47,7 +47,9 @@ fn run_load(
         max_batch,
         sketch_p: 8,
         max_iters: 60,
-        tol: 1e-7,
+        // None keeps the per-task defaults (1e-7 polar, 1e-9 inverse-root).
+        tol: None,
+        precision: prism::matfn::Precision::F64,
         solver_cache_cap: 32,
         gemm_threads: 1,
         stream_residuals: false,
@@ -137,7 +139,8 @@ fn main() {
         max_batch: 1,
         sketch_p: 8,
         max_iters: 40,
-        tol: 1e-7,
+        tol: None,
+        precision: prism::matfn::Precision::F64,
         solver_cache_cap: 32,
         gemm_threads: 1,
         // Stream per-iteration residuals from the workers (matfn Observer

@@ -11,17 +11,20 @@
 //! skinny thin-A path against the square-blocked path on p × n · n × n
 //! with p ∈ {8, 32} (p = 8 routes skinny and must win; p = 32 routes
 //! blocked and anchors the comparison), (c) verifies the parallel engine's
-//! scaling with bit-identical output asserted per kernel, and (d) emits the
-//! machine-readable `bench_out/BENCH_gemm.json` CI uploads as an artifact,
-//! including the auto-selected kernel name.
+//! scaling with bit-identical output asserted per kernel, (d) runs the
+//! **dtype axis** — the f32 instantiation of the packed matmul per kernel
+//! plus the f32 SYRK (target: f32 SIMD ≥ 1.5× f64 SIMD GFLOP/s at the top
+//! size — twice the lanes per register), and (e) emits the machine-readable
+//! `bench_out/BENCH_gemm.json` CI uploads as an artifact, including the
+//! auto-selected kernel name and a `dtype` key on every op row.
 //!
 //! Run: `cargo bench --bench perf_gemm [-- --smoke]` (`--smoke`: tiny sizes
 //! for the CI smoke step).
 
 use prism::benchkit::{banner, Bench, JsonReport, Table};
 use prism::configfmt::Value;
-use prism::linalg::gemm::{gemm_broadcast, matmul_naive, GemmEngine, MicroKernel};
-use prism::linalg::Mat;
+use prism::linalg::gemm::{gemm_broadcast, matmul_naive, matmul_naive32, GemmEngine, MicroKernel};
+use prism::linalg::{Mat, Mat32};
 use prism::randmat;
 use prism::rng::Rng;
 
@@ -65,6 +68,7 @@ fn main() {
     let mut t = Table::new(&[
         "op",
         "kernel",
+        "dtype",
         "n",
         "ms",
         "GFLOP/s",
@@ -75,10 +79,16 @@ fn main() {
     // GFLOP/s per (kernel, n) for the ablation summary lines below.
     let mut scalar_gflops_last = 0.0f64;
     let mut simd_gflops_last = 0.0f64;
+    // The dtype axis: f32 GFLOP/s at the last size for the mixed-precision
+    // headline (f32 SIMD vs f64 SIMD — twice the lanes per register).
+    let mut simd_gflops32_last = 0.0f64;
+    let mut scalar_gflops32_last = 0.0f64;
     let mut speedup_512_4t = 0.0;
     for &n in sizes {
         let a = randmat::gaussian(&mut rng, n, n);
         let b = randmat::gaussian(&mut rng, n, n);
+        let a32 = Mat32::from_f64(&a);
+        let b32 = Mat32::from_f64(&b);
         let flops = 2.0 * (n as f64).powi(3);
 
         // The seed broadcast kernel on the same operands (same zero-fill as
@@ -91,6 +101,7 @@ fn main() {
         });
         report.entry(&[
             ("op", Value::Str("matmul_broadcast".into())),
+            ("dtype", Value::Str("f64".into())),
             ("n", Value::Int(n as i64)),
             ("ms", Value::Float(s_bcast.median_s() * 1e3)),
             ("gflops", Value::Float(flops / s_bcast.median_s() / 1e9)),
@@ -156,6 +167,7 @@ fn main() {
             t.row(&[
                 "C = A·B".into(),
                 kern.name().into(),
+                "f64".into(),
                 n.to_string(),
                 format!("{:.2}", s_packed.median_s() * 1e3),
                 format!("{gflops:.2}"),
@@ -166,11 +178,65 @@ fn main() {
             report.entry(&[
                 ("op", Value::Str("matmul".into())),
                 ("kernel", Value::Str(kern.name().into())),
+                ("dtype", Value::Str("f64".into())),
                 ("selected", Value::Bool(kern == selected)),
                 ("n", Value::Int(n as i64)),
                 ("ms", Value::Float(s_packed.median_s() * 1e3)),
                 ("gflops", Value::Float(gflops)),
                 ("speedup_vs_broadcast", Value::Float(vs_broadcast)),
+            ]);
+
+            // ── dtype axis: the f32 instantiation of the same packed route
+            // (identical blocking, twice the SIMD lanes per register — the
+            // mixed-precision hot loop's GEMM). Guarded against the f32
+            // naive reference and the parallel engine before timing.
+            if n <= 256 {
+                let err32 = seq
+                    .matmul_f32(&a32, &b32)
+                    .to_f64()
+                    .sub(&matmul_naive32(&a32, &b32).to_f64())
+                    .max_abs();
+                assert!(err32 < 1e-3, "{} f32 kernel diverges at n={n}: {err32}", kern.name());
+            }
+            assert_eq!(
+                seq.matmul_f32(&a32, &b32).as_slice(),
+                par_k.matmul_f32(&a32, &b32).as_slice(),
+                "{} f32 parallel output differs at n={n}",
+                kern.name()
+            );
+            let mut c32 = Mat32::zeros(n, n);
+            let s_packed32 = bench.run(&format!("matmul_f32_{}_{n}", kern.name()), || {
+                seq.matmul_f32_into(&mut c32, &a32, &b32);
+                std::hint::black_box(&c32);
+            });
+            let gflops32 = flops / s_packed32.median_s() / 1e9;
+            if n == *sizes.last().unwrap() {
+                if kern == MicroKernel::Scalar {
+                    scalar_gflops32_last = gflops32;
+                } else if Some(kern) == simd_kernel {
+                    simd_gflops32_last = gflops32;
+                }
+            }
+            t.row(&[
+                "C = A·B".into(),
+                kern.name().into(),
+                "f32".into(),
+                n.to_string(),
+                format!("{:.2}", s_packed32.median_s() * 1e3),
+                format!("{gflops32:.2}"),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            report.entry(&[
+                ("op", Value::Str("matmul".into())),
+                ("kernel", Value::Str(kern.name().into())),
+                ("dtype", Value::Str("f32".into())),
+                ("selected", Value::Bool(kern == selected)),
+                ("n", Value::Int(n as i64)),
+                ("ms", Value::Float(s_packed32.median_s() * 1e3)),
+                ("gflops", Value::Float(gflops32)),
+                ("speedup_vs_f64", Value::Float(gflops32 / gflops)),
             ]);
         }
 
@@ -190,6 +256,7 @@ fn main() {
         t.row(&[
             "C = Aᵀ·A".into(),
             selected.name().into(),
+            "f64".into(),
             n.to_string(),
             format!("{:.2}", s_syrk.median_s() * 1e3),
             format!("{:.2}", flops / s_syrk.median_s() / 1e9),
@@ -200,11 +267,40 @@ fn main() {
         report.entry(&[
             ("op", Value::Str("syrk".into())),
             ("kernel", Value::Str(selected.name().into())),
+            ("dtype", Value::Str("f64".into())),
             ("n", Value::Int(n as i64)),
             ("ms", Value::Float(s_syrk.median_s() * 1e3)),
             ("gflops", Value::Float(flops / s_syrk.median_s() / 1e9)),
             ("ms_4t", Value::Float(s_syrk_par.median_s() * 1e3)),
             ("speedup_4t", Value::Float(s_syrk.median_s() / s_syrk_par.median_s())),
+        ]);
+
+        // f32 SYRK on the selected kernel — the residual R = I − XᵀX of the
+        // mixed polar loop runs through this exact entry point.
+        let mut cs32 = Mat32::zeros(n, n);
+        let s_syrk32 = bench.run(&format!("syrk_f32_{n}"), || {
+            seq.syrk_at_a_f32_into(&mut cs32, &a32);
+            std::hint::black_box(&cs32);
+        });
+        t.row(&[
+            "C = Aᵀ·A".into(),
+            selected.name().into(),
+            "f32".into(),
+            n.to_string(),
+            format!("{:.2}", s_syrk32.median_s() * 1e3),
+            format!("{:.2}", flops / s_syrk32.median_s() / 1e9),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+        report.entry(&[
+            ("op", Value::Str("syrk".into())),
+            ("kernel", Value::Str(selected.name().into())),
+            ("dtype", Value::Str("f32".into())),
+            ("n", Value::Int(n as i64)),
+            ("ms", Value::Float(s_syrk32.median_s() * 1e3)),
+            ("gflops", Value::Float(flops / s_syrk32.median_s() / 1e9)),
+            ("speedup_vs_f64", Value::Float(s_syrk.median_s() / s_syrk32.median_s())),
         ]);
     }
     t.print();
@@ -261,6 +357,7 @@ fn main() {
             ]);
             report.entry(&[
                 ("op", Value::Str("skinny".into())),
+                ("dtype", Value::Str("f64".into())),
                 ("p", Value::Int(p as i64)),
                 ("n", Value::Int(n as i64)),
                 ("routed_ms", Value::Float(s_routed.median_s() * 1e3)),
@@ -289,6 +386,27 @@ fn main() {
                 );
             }
             _ => println!("(no SIMD kernel on this host — scalar only; SIMD ablation skipped)"),
+        }
+        // The dtype headline: f32 should approach 2x the f64 rate on the
+        // SIMD kernels (twice the lanes per register; packing overhead and
+        // memory traffic keep it below the ideal).
+        match simd_kernel {
+            Some(sk) if simd_gflops_last > 0.0 => {
+                let ratio32 = simd_gflops32_last / simd_gflops_last;
+                println!(
+                    "n={} {} f32 vs f64: {ratio32:.2}x ({simd_gflops32_last:.2} vs {simd_gflops_last:.2} GFLOP/s; target ≥ 1.5x)",
+                    sizes.last().unwrap(),
+                    sk.name()
+                );
+            }
+            _ if scalar_gflops_last > 0.0 => {
+                let ratio32 = scalar_gflops32_last / scalar_gflops_last;
+                println!(
+                    "n={} scalar f32 vs f64: {ratio32:.2}x (no SIMD kernel — no ≥ 1.5x target on scalar)",
+                    sizes.last().unwrap()
+                );
+            }
+            _ => {}
         }
         println!(
             "skinny p=8 n={} speedup vs square-blocked: {skinny_speedup_p8:.2}x (target > 1x)",

@@ -1,19 +1,23 @@
-//! Cross-call workspace reuse: cold-constructed vs reused `matfn::Solver`.
+//! Cross-call workspace reuse: cold-constructed vs reused `matfn::Solver`,
+//! across the precision axis (`f64` vs `mixed`).
 //!
 //! The Shampoo/Muon pattern calls the same matrix function on same-shaped
 //! matrices every optimizer step. A cold path plans a fresh `Solver` per
 //! call (every n×n ping-pong buffer is reallocated); the persistent path
 //! plans once and reuses the workspace, so from the second call onward the
 //! hot loop performs zero heap allocations. This bench reports wall time
-//! and workspace allocation counts for both, and emits the machine-readable
-//! `bench_out/BENCH_matfn.json` CI uploads as an artifact.
+//! and workspace allocation counts for both, runs each size at `f64` and
+//! `mixed` precision (f32 iterate under the f64 residual guard — the
+//! `matfn::Precision` contract), and emits the machine-readable
+//! `bench_out/BENCH_matfn.json` CI uploads as an artifact with a `dtype`
+//! key on every row.
 //!
 //! Run: `cargo bench --bench perf_matfn [-- --full | -- --smoke]`
 //! (`--full`: adds n = 1024; `--smoke`: tiny size for the CI smoke step).
 
 use prism::benchkit::{banner, Bench, JsonReport, Table};
 use prism::configfmt::Value;
-use prism::matfn::registry;
+use prism::matfn::{registry, Precision};
 use prism::prism::StopRule;
 use prism::randmat;
 use prism::rng::Rng;
@@ -23,7 +27,7 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     banner(
         "perf_matfn — persistent Solver vs cold construction",
-        "matfn API: workspace reuse across same-shape calls",
+        "matfn API: workspace reuse across same-shape calls, f64 vs mixed",
     );
     let bench = if full { Bench::default() } else { Bench::quick() };
     // A fixed, small iteration budget: the point is per-call overhead, not
@@ -39,60 +43,83 @@ fn main() {
     let mut report = JsonReport::create("bench_out/BENCH_matfn.json", "perf_matfn");
 
     let mut t = Table::new(&[
-        "solver", "n", "cold ms", "reused ms", "speedup", "allocs/call cold", "allocs/call reused",
+        "solver",
+        "dtype",
+        "n",
+        "cold ms",
+        "reused ms",
+        "speedup",
+        "allocs/call cold",
+        "allocs/call reused",
     ]);
     for &n in sizes {
         let mut rng = Rng::seed_from(7);
         let s = randmat::logspace(1e-4, 1.0, n / 2);
         let a = randmat::with_spectrum(&mut rng, n, n / 2, &s);
 
-        // Cold: plan + solve every call, like the old free-function API.
-        let cold = bench.run(&format!("cold_{n}"), || {
+        for precision in [Precision::F64, Precision::Mixed] {
+            // Cold: plan + solve every call, like the old free-function API.
+            let cold = bench.run(&format!("cold_{}_{n}", precision.name()), || {
+                let mut solver = registry::resolve("prism5-polar").unwrap();
+                solver.set_stop(stop);
+                solver.spec_mut().precision = precision;
+                std::hint::black_box(solver.solve(&a, &mut rng).log.iters());
+            });
+            let cold_allocs = {
+                let mut solver = registry::resolve("prism5-polar").unwrap();
+                solver.set_stop(stop);
+                solver.spec_mut().precision = precision;
+                let _ = solver.solve(&a, &mut rng);
+                solver.workspace_allocations()
+            };
+
+            // Reused: plan once, warm the workspace, then measure steady
+            // state. (At `mixed` the f32 phase can stop earlier than the
+            // fixed f64 budget — its 1e-5 target is reachable — so `ms` is
+            // the real per-call cost, not a per-iteration comparison.)
             let mut solver = registry::resolve("prism5-polar").unwrap();
             solver.set_stop(stop);
-            std::hint::black_box(solver.solve(&a, &mut rng).log.iters());
-        });
-        let cold_allocs = {
-            let mut solver = registry::resolve("prism5-polar").unwrap();
-            solver.set_stop(stop);
+            solver.spec_mut().precision = precision;
             let _ = solver.solve(&a, &mut rng);
-            solver.workspace_allocations()
-        };
+            let warm_base = solver.workspace_allocations();
+            let reused = bench.run(&format!("reused_{}_{n}", precision.name()), || {
+                std::hint::black_box(solver.solve(&a, &mut rng).log.iters());
+            });
+            let warm_allocs = solver.workspace_allocations() - warm_base;
 
-        // Reused: plan once, warm the workspace, then measure steady state.
-        let mut solver = registry::resolve("prism5-polar").unwrap();
-        solver.set_stop(stop);
-        let _ = solver.solve(&a, &mut rng);
-        let warm_base = solver.workspace_allocations();
-        let reused = bench.run(&format!("reused_{n}"), || {
-            std::hint::black_box(solver.solve(&a, &mut rng).log.iters());
-        });
-        let warm_allocs = solver.workspace_allocations() - warm_base;
-
-        t.row(&[
-            "prism5-polar".into(),
-            n.to_string(),
-            format!("{:.2}", cold.median_s() * 1e3),
-            format!("{:.2}", reused.median_s() * 1e3),
-            format!("{:.2}x", cold.median_s() / reused.median_s()),
-            cold_allocs.to_string(),
-            warm_allocs.to_string(),
-        ]);
-        report.entry(&[
-            ("solver", Value::Str("prism5-polar".into())),
-            ("n", Value::Int(n as i64)),
-            ("cold_ms", Value::Float(cold.median_s() * 1e3)),
-            ("reused_ms", Value::Float(reused.median_s() * 1e3)),
-            ("speedup_reused", Value::Float(cold.median_s() / reused.median_s())),
-            ("allocs_cold", Value::Int(cold_allocs as i64)),
-            ("allocs_reused", Value::Int(warm_allocs as i64)),
-        ]);
-        assert_eq!(warm_allocs, 0, "reused solver must not touch the allocator");
+            t.row(&[
+                "prism5-polar".into(),
+                precision.name().into(),
+                n.to_string(),
+                format!("{:.2}", cold.median_s() * 1e3),
+                format!("{:.2}", reused.median_s() * 1e3),
+                format!("{:.2}x", cold.median_s() / reused.median_s()),
+                cold_allocs.to_string(),
+                warm_allocs.to_string(),
+            ]);
+            report.entry(&[
+                ("solver", Value::Str("prism5-polar".into())),
+                ("dtype", Value::Str(precision.name().into())),
+                ("n", Value::Int(n as i64)),
+                ("cold_ms", Value::Float(cold.median_s() * 1e3)),
+                ("reused_ms", Value::Float(reused.median_s() * 1e3)),
+                ("speedup_reused", Value::Float(cold.median_s() / reused.median_s())),
+                ("allocs_cold", Value::Int(cold_allocs as i64)),
+                ("allocs_reused", Value::Int(warm_allocs as i64)),
+            ]);
+            assert_eq!(
+                warm_allocs,
+                0,
+                "reused {} solver must not touch the allocator",
+                precision.name()
+            );
+        }
     }
     t.print();
     println!("\nNotes: 'allocs/call' counts workspace-pool misses (heap allocations for");
-    println!("iteration buffers). The reused column must be 0 — that is the persistent");
-    println!("solver contract the optimizer/service hot paths rely on.");
+    println!("iteration buffers). The reused column must be 0 at BOTH precisions — that");
+    println!("is the persistent solver contract the optimizer/service hot paths rely on.");
+    println!("'mixed' rows run the f32 iterate + f64 guard path (matfn::Precision docs).");
     match report.finish() {
         Some(path) => println!("report → {path}"),
         None => println!("report → (unwritable bench_out/, skipped)"),

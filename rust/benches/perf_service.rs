@@ -35,7 +35,8 @@ fn service_cfg(workers: usize, max_batch: usize) -> ServiceConfig {
         max_batch,
         sketch_p: 8,
         max_iters: 60,
-        tol: 1e-7,
+        tol: Some(1e-7),
+        precision: prism::matfn::Precision::F64,
         solver_cache_cap: 32,
         gemm_threads: 1,
         stream_residuals: false,

@@ -5,6 +5,7 @@
 
 use crate::configfmt::{parse_toml, Value};
 use crate::linalg::gemm::{GemmBlocking, MicroKernel};
+use crate::matfn::Precision;
 use crate::util::{Error, Result};
 
 /// Which polar/inverse-root backend an optimizer uses.
@@ -128,7 +129,13 @@ pub struct ServiceConfig {
     /// Sketch size p for the PRISM fits.
     pub sketch_p: usize,
     pub max_iters: usize,
-    pub tol: f64,
+    /// Stopping tolerance override (`service.tol` in TOML, `--tol` on the
+    /// CLI). `None` — the default — keeps the **per-task** solver defaults
+    /// (1e-7 for polar/sign, 1e-9 for inverse-root tasks; see
+    /// [`crate::matfn::Solver::for_backend_tuned`]). A single `Some(t)`
+    /// applies `t` to every task the service runs — deliberately one knob:
+    /// set it only when you mean to move *all* tasks off their defaults.
+    pub tol: Option<f64>,
     /// Per-worker cap on cached persistent solvers (one solver is kept per
     /// (kind, shape) route; `service.solver_cache_cap` in TOML). Least-
     /// recently-used routes are evicted beyond the cap, so a shape-diverse
@@ -162,6 +169,13 @@ pub struct ServiceConfig {
     /// the host; like `gemm_block`, a startup-time knob — kernels agree to
     /// fp64 round-off but not bit-for-bit (FMA fuses roundings).
     pub gemm_kernel: Option<MicroKernel>,
+    /// Hot-loop precision for the worker solvers (`service.precision =
+    /// "f64" | "mixed"` in TOML, `--precision` on the CLI). `mixed` runs the
+    /// Newton–Schulz iterations in f32 with an f64 residual guard and one
+    /// f64 cleanup iteration — see [`crate::matfn::Precision`] for the
+    /// accuracy contract. Malformed values degrade to `f64` (same keep-the-
+    /// default policy as `gemm_kernel`).
+    pub precision: Precision,
 }
 
 impl Default for ServiceConfig {
@@ -172,12 +186,13 @@ impl Default for ServiceConfig {
             max_batch: 8,
             sketch_p: 8,
             max_iters: 30,
-            tol: 1e-7,
+            tol: None,
             solver_cache_cap: 32,
             gemm_threads: 1,
             stream_residuals: false,
             gemm_block: None,
             gemm_kernel: None,
+            precision: Precision::F64,
         }
     }
 }
@@ -193,7 +208,7 @@ impl ServiceConfig {
         c.max_batch = geti("service.max_batch", c.max_batch);
         c.sketch_p = geti("service.sketch_p", c.sketch_p);
         c.max_iters = geti("service.max_iters", c.max_iters);
-        c.tol = v.get_path("service.tol").and_then(|x| x.as_float()).unwrap_or(c.tol);
+        c.tol = v.get_path("service.tol").and_then(|x| x.as_float()).or(c.tol);
         c.solver_cache_cap = geti("service.solver_cache_cap", c.solver_cache_cap);
         c.gemm_threads = geti("service.gemm_threads", c.gemm_threads);
         c.stream_residuals = v
@@ -210,6 +225,10 @@ impl ServiceConfig {
             // "auto" parses to None; malformed specs likewise degrade to
             // "keep the installed default" (same policy as gemm_block).
             c.gemm_kernel = MicroKernel::parse(s).ok().flatten();
+        }
+        if let Some(s) = v.get_path("service.precision").and_then(|x| x.as_str()) {
+            // Malformed values keep the f64 default (same policy as above).
+            c.precision = Precision::parse(s).unwrap_or(c.precision);
         }
         c
     }
@@ -266,6 +285,30 @@ backend = "prism3"
         let v = parse_toml("[service]\nsolver_cache_cap = 4\n").unwrap();
         assert_eq!(ServiceConfig::from_value(&v).solver_cache_cap, 4);
         assert_eq!(ServiceConfig::default().solver_cache_cap, 32);
+    }
+
+    #[test]
+    fn service_config_tol_defaults_to_per_task_none() {
+        // PR 5 regression: a blanket `tol` default of 1e-7 silently loosened
+        // the InvSqrt solvers from their 1e-9 per-task default. The default
+        // must be "no override".
+        assert_eq!(ServiceConfig::default().tol, None);
+        let v = parse_toml("[service]\nworkers = 2\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).tol, None);
+        let v = parse_toml("[service]\ntol = 1e-6\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).tol, Some(1e-6));
+    }
+
+    #[test]
+    fn service_config_precision_parses() {
+        assert_eq!(ServiceConfig::default().precision, Precision::F64);
+        let v = parse_toml("[service]\nprecision = \"mixed\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).precision, Precision::Mixed);
+        let v = parse_toml("[service]\nprecision = \"f64\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).precision, Precision::F64);
+        // Malformed values keep the f64 default.
+        let v = parse_toml("[service]\nprecision = \"f16\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).precision, Precision::F64);
     }
 
     #[test]
@@ -335,9 +378,17 @@ mod file_tests {
         let svc = ServiceConfig::from_value(&v);
         assert_eq!(svc.workers, 4);
         assert_eq!(svc.max_batch, 4);
-        assert!((svc.tol - 1e-7).abs() < 1e-20);
+        // The shipped config leaves `tol` unset: per-task solver defaults
+        // (InvSqrt at 1e-9) must survive, not a blanket override.
+        assert_eq!(svc.tol, None);
+        assert_eq!(svc.precision, Precision::F64);
         assert_eq!(svc.sketch_p, 8);
         assert_eq!(svc.solver_cache_cap, 32);
+
+        // Muon's config opts into the mixed-precision polar path.
+        let src = std::fs::read_to_string(format!("{root}/configs/muon_fig6.toml")).unwrap();
+        let v = parse_toml(&src).unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).precision, Precision::Mixed);
     }
 
     #[test]

@@ -257,7 +257,8 @@ mod tests {
             max_batch: 1, // refreshes should dispatch immediately
             sketch_p: 8,
             max_iters: 40,
-            tol: 1e-7,
+            tol: Some(1e-7),
+            precision: crate::matfn::Precision::F64,
             solver_cache_cap: 32,
             gemm_threads: 1,
             stream_residuals: false,

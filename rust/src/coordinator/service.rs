@@ -47,7 +47,7 @@
 
 use crate::config::{Backend, ServiceConfig};
 use crate::linalg::Mat;
-use crate::matfn::{MatFnTask, Solver};
+use crate::matfn::{validate_input, MatFnTask, Solver};
 use crate::metrics::{Counter, Gauge, Registry};
 use crate::rng::Rng;
 use crate::util::{Error, Result, Stopwatch};
@@ -98,6 +98,14 @@ pub struct JobResult {
     pub iters: usize,
     /// Final residual Frobenius norm.
     pub final_residual: f64,
+    /// `Some(reason)` when the job failed instead of being solved — e.g. a
+    /// non-finite matrix reached a worker (a NaN/∞ `eps` poisoning the
+    /// damping is the one route past [`Service::submit`]'s input gate). A
+    /// failed job still yields exactly one `JobResult` (the one-result-per-
+    /// job accounting holds), with `result` all zeros, `iters == 0` and a
+    /// NaN `final_residual`; it is counted in `service.jobs_rejected`, not
+    /// `service.jobs_done`.
+    pub error: Option<String>,
 }
 
 /// One per-iteration progress report, streamed while a job is running
@@ -247,6 +255,7 @@ impl Service {
             let sketch_p = cfg.sketch_p;
             let cache_cap = cfg.solver_cache_cap;
             let stream = cfg.stream_residuals;
+            let precision = cfg.precision;
             workers.push(std::thread::spawn(move || {
                 // Persistent solvers per (kind, shape) route, LRU-capped:
                 // same-route batches reuse the solver's workspace, so the
@@ -265,14 +274,58 @@ impl Service {
                 let batch_time = metrics.histogram("service.batch_exec_s");
                 let job_time = metrics.histogram("service.exec_s");
                 let done = metrics.counter("service.jobs_done");
+                let rejected = metrics.counter("service.jobs_rejected");
                 loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
                         Ok(WorkerMsg::Batch(mut jobs)) => {
-                            let bsize = jobs.len();
-                            if bsize == 0 {
+                            if jobs.is_empty() {
                                 continue;
                             }
+                            // Damp InvSqrt inputs in place (ε may differ per
+                            // job; the route key only fixes kind and shape).
+                            for job in jobs.iter_mut() {
+                                if let JobKind::InvSqrt { eps } = job.kind {
+                                    if eps != 0.0 {
+                                        job.matrix.add_diag(eps);
+                                    }
+                                }
+                            }
+                            // Boundary hardening, worker side: submit()
+                            // refuses non-finite matrices, but a non-finite
+                            // eps poisons the damping above. Fail those jobs
+                            // cleanly — exactly one error result each, so
+                            // the one-result-per-job accounting holds — and
+                            // solve the rest: a poisoned member must never
+                            // corrupt its batch peers. (When the dropped job
+                            // was the batch's first, the executed batch's
+                            // RNG stream is seeded by the lowest *surviving*
+                            // id.)
+                            let (jobs, bad): (Vec<Job>, Vec<Job>) =
+                                jobs.into_iter().partition(|j| !j.matrix.has_non_finite());
+                            for job in bad {
+                                rejected.inc();
+                                let _ = res_tx.send(JobResult {
+                                    id: job.id,
+                                    layer: job.layer,
+                                    result: Mat::zeros(
+                                        job.matrix.rows(),
+                                        job.matrix.cols(),
+                                    ),
+                                    latency_s: job.submitted.elapsed().as_secs_f64(),
+                                    batch_size: 1,
+                                    iters: 0,
+                                    final_residual: f64::NAN,
+                                    error: Some(format!(
+                                        "job {}: non-finite matrix after damping ({:?})",
+                                        job.id, job.kind
+                                    )),
+                                });
+                            }
+                            if jobs.is_empty() {
+                                continue;
+                            }
+                            let bsize = jobs.len();
                             // The router groups by route key, so the whole
                             // batch shares one (kind, shape) — one solver.
                             let key = jobs[0].kind.route_key(jobs[0].matrix.shape());
@@ -281,14 +334,19 @@ impl Service {
                                     JobKind::InvSqrt { .. } => MatFnTask::InvSqrt,
                                     JobKind::Polar => MatFnTask::Polar,
                                 };
+                                // `tol` passes through as-is: `None` keeps
+                                // the per-task defaults (InvSqrt at 1e-9,
+                                // polar at 1e-7) instead of flattening every
+                                // task onto one blanket tolerance.
                                 let mut s = Solver::for_backend_tuned(
                                     backend,
                                     task,
                                     iters,
-                                    Some(tol),
+                                    tol,
                                     Some(sketch_p),
                                 )
                                 .expect("service backends always have polar/invsqrt forms");
+                                s.spec_mut().precision = precision;
                                 if stream {
                                     let ptx = prog_tx.clone();
                                     let tags = Arc::clone(&tags);
@@ -311,15 +369,6 @@ impl Service {
                                 t.clear();
                                 t.extend(jobs.iter().map(|j| (j.id, j.layer)));
                             }
-                            // Damp InvSqrt inputs in place (ε may differ per
-                            // job; the route key only fixes kind and shape).
-                            for job in jobs.iter_mut() {
-                                if let JobKind::InvSqrt { eps } = job.kind {
-                                    if eps != 0.0 {
-                                        job.matrix.add_diag(eps);
-                                    }
-                                }
-                            }
                             let mut rng = Rng::seed_from(batch_stream_seed(seed, jobs[0].id));
                             let sw = Stopwatch::start();
                             let outs = {
@@ -340,6 +389,7 @@ impl Service {
                                     batch_size: bsize,
                                     iters: out.log.iters(),
                                     final_residual: out.log.final_residual(),
+                                    error: None,
                                 });
                             }
                         }
@@ -364,7 +414,22 @@ impl Service {
 
     /// Submit a job; same-shape jobs are held back briefly to form batches
     /// of up to `max_batch` (call [`flush`] to force dispatch).
+    ///
+    /// Non-finite matrices (any NaN/∞ entry) are rejected here at the
+    /// boundary with a typed [`Error::Numerical`] — **before** an id is
+    /// assigned (accepted ids stay dense, so batch composition and every
+    /// accepted job's RNG stream are exactly what they would have been had
+    /// the poisoned submission never happened) and before the job can
+    /// reach a batch, where its NaNs would burn `max_iters` of work
+    /// producing garbage. Rejections count in `service.jobs_rejected`, not
+    /// `service.jobs_submitted`. (A non-finite InvSqrt `eps` is the one
+    /// poisoning this gate cannot see — the workers catch it after damping
+    /// and return a [`JobResult::error`] instead.)
     pub fn submit(&self, layer: usize, kind: JobKind, matrix: Mat) -> Result<u64> {
+        if let Err(e) = validate_input(&matrix) {
+            self.metrics.counter("service.jobs_rejected").inc();
+            return Err(e);
+        }
         let id = {
             let mut n = self.next_id.lock().unwrap();
             *n += 1;
@@ -418,14 +483,22 @@ impl Service {
     /// partially-filled batches still held back by the router are *not*
     /// counted — call [`Self::flush`] first.
     pub fn inflight(&self) -> usize {
-        let d = self.dispatched.load(Ordering::SeqCst);
+        // Load order is what makes this exact with no underflow clamp:
+        // `received` is read FIRST. A result can only be received after its
+        // job was dispatched, so `received ≤ dispatched` holds at the
+        // moment of the first load, and `dispatched` only grows between the
+        // two loads — hence `d ≥ r` always. (Reading `dispatched` first
+        // admitted a race: a dispatch + recv on other threads between the
+        // loads made `r` exceed the stale `d`, and the old `saturating_sub`
+        // silently reported 0 in-flight while a result was still owed.)
         let r = self.received.load(Ordering::SeqCst);
+        let d = self.dispatched.load(Ordering::SeqCst);
         debug_assert!(
             d >= r,
             "service: {r} results received for {d} dispatched jobs — \
              the one-result-per-job invariant is broken"
         );
-        d.saturating_sub(r) as usize
+        (d - r) as usize
     }
 
     /// Blocking receive of the next completed job.
@@ -501,6 +574,8 @@ mod tests {
     use crate::linalg::gemm::{matmul, matmul_at_b};
     use crate::randmat;
 
+    use crate::matfn::Precision;
+
     fn cfg(workers: usize, max_batch: usize) -> ServiceConfig {
         ServiceConfig {
             workers,
@@ -508,12 +583,13 @@ mod tests {
             max_batch,
             sketch_p: 8,
             max_iters: 40,
-            tol: 1e-7,
+            tol: None,
             solver_cache_cap: 32,
             gemm_threads: 1,
             stream_residuals: false,
             gemm_block: None,
             gemm_kernel: None,
+            precision: Precision::F64,
         }
     }
 
@@ -668,7 +744,7 @@ mod tests {
                 Backend::Prism5,
                 MatFnTask::InvSqrt,
                 40,
-                Some(1e-7),
+                None, // per-task default, same as the service's tol: None
                 Some(8),
             )
             .unwrap();
@@ -687,7 +763,7 @@ mod tests {
         let run = |tol: f64| {
             let mut c = cfg(1, 1);
             c.max_iters = 60;
-            c.tol = tol;
+            c.tol = Some(tol);
             let svc = Service::start(c, Backend::Prism5, 42);
             svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
             svc.drain().unwrap()[0].iters
@@ -786,6 +862,218 @@ mod tests {
                 r.id
             );
         }
+    }
+
+    #[test]
+    fn submit_rejects_non_finite_matrix_before_assigning_an_id() {
+        let mut rng = Rng::seed_from(20);
+        let svc = Service::start(cfg(1, 2), Backend::Prism5, 21);
+        let mut bad = randmat::gaussian(&mut rng, 6, 6);
+        bad[(2, 4)] = f64::NAN;
+        let err = svc.submit(0, JobKind::Polar, bad).unwrap_err();
+        assert!(matches!(err, Error::Numerical(_)), "{err}");
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let mut inf = randmat::gaussian(&mut rng, 6, 6);
+        inf[(0, 0)] = f64::NEG_INFINITY;
+        assert!(svc.submit(0, JobKind::Polar, inf).is_err());
+        assert_eq!(svc.metrics.counter("service.jobs_rejected").get(), 2);
+        assert_eq!(svc.metrics.counter("service.jobs_submitted").get(), 0);
+        let w = randmat::logspace(0.1, 1.0, 6);
+        let spd = randmat::sym_with_spectrum(&mut rng, 6, &w);
+        // Rejection happened before id assignment: the first accepted job
+        // still gets id 1, so batch streams are unperturbed.
+        let id = svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, spd).unwrap();
+        assert_eq!(id, 1, "rejected submissions must not consume ids");
+        let _ = svc.drain().unwrap();
+    }
+
+    #[test]
+    fn poisoned_burst_member_fails_cleanly_others_bit_identical() {
+        // Regression: one poisoned submission inside a same-shape burst must
+        // fail at the boundary while every accepted member's result stays
+        // bit-identical to its solo solve — same ids, same batch
+        // composition, same RNG stream as a burst where the poisoned submit
+        // never happened.
+        let mut rng = Rng::seed_from(22);
+        let inputs: Vec<Mat> = (0..4)
+            .map(|_| {
+                let w = randmat::logspace(1e-2, 1.0, 8);
+                randmat::sym_with_spectrum(&mut rng, 8, &w)
+            })
+            .collect();
+        let mut poison = inputs[0].clone();
+        poison[(1, 1)] = f64::NAN;
+        let seed = 33;
+        let svc = Service::start(cfg(1, 4), Backend::Prism5, seed);
+        svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, inputs[0].clone()).unwrap();
+        svc.submit(1, JobKind::InvSqrt { eps: 0.0 }, inputs[1].clone()).unwrap();
+        assert!(svc.submit(9, JobKind::InvSqrt { eps: 0.0 }, poison).is_err());
+        svc.submit(2, JobKind::InvSqrt { eps: 0.0 }, inputs[2].clone()).unwrap();
+        svc.submit(3, JobKind::InvSqrt { eps: 0.0 }, inputs[3].clone()).unwrap();
+        let mut results = svc.drain().unwrap();
+        results.sort_by_key(|r| r.layer);
+        assert_eq!(results.len(), 4);
+        // All four accepted jobs formed one batch (ids 1..=4, stream seeded
+        // by id 1); each must equal its solo solve from that stream.
+        for (j, r) in results.iter().enumerate() {
+            assert!(r.error.is_none());
+            assert_eq!(r.batch_size, 4);
+            let mut stream = Rng::seed_from(batch_stream_seed(seed, 1));
+            let mut s = Solver::for_backend_tuned(
+                Backend::Prism5,
+                MatFnTask::InvSqrt,
+                40,
+                None,
+                Some(8),
+            )
+            .unwrap();
+            let out = s.solve(&inputs[j], &mut stream);
+            assert_eq!(r.result, out.primary, "job {j}: poisoned peer changed result bits");
+        }
+    }
+
+    #[test]
+    fn non_finite_eps_reaching_a_worker_yields_an_error_result() {
+        // eps = NaN slips past the matrix gate (the matrix itself is
+        // finite) and poisons the worker-side damping: the job must come
+        // back as exactly one error result — zero matrix, 0 iters, counted
+        // as rejected not done — without corrupting its batch peer.
+        let mut rng = Rng::seed_from(23);
+        let w = randmat::logspace(1e-2, 1.0, 8);
+        let good = randmat::sym_with_spectrum(&mut rng, 8, &w);
+        let seed = 44;
+        let svc = Service::start(cfg(1, 2), Backend::Prism5, seed);
+        let poisoned_id =
+            svc.submit(0, JobKind::InvSqrt { eps: f64::NAN }, good.clone()).unwrap();
+        let good_id = svc.submit(1, JobKind::InvSqrt { eps: 0.0 }, good.clone()).unwrap();
+        let mut results = svc.drain().unwrap();
+        assert_eq!(results.len(), 2, "one result per job, failed or not");
+        results.sort_by_key(|r| r.id);
+        let (bad_r, good_r) = (&results[0], &results[1]);
+        assert_eq!(bad_r.id, poisoned_id);
+        assert!(bad_r.error.as_deref().unwrap().contains("non-finite"));
+        assert_eq!(bad_r.iters, 0);
+        assert!(bad_r.final_residual.is_nan());
+        assert_eq!(bad_r.result, Mat::zeros(8, 8));
+        // The surviving member solves alone: its stream is seeded by the
+        // lowest *surviving* id, and its result matches that solo solve.
+        assert_eq!(good_r.id, good_id);
+        assert!(good_r.error.is_none());
+        let mut stream = Rng::seed_from(batch_stream_seed(seed, good_id));
+        let mut s =
+            Solver::for_backend_tuned(Backend::Prism5, MatFnTask::InvSqrt, 40, None, Some(8))
+                .unwrap();
+        let out = s.solve(&good, &mut stream);
+        assert_eq!(good_r.result, out.primary);
+        assert_eq!(svc.metrics.counter("service.jobs_rejected").get(), 1);
+        assert_eq!(svc.metrics.counter("service.jobs_done").get(), 1);
+    }
+
+    #[test]
+    fn invsqrt_service_tol_defaults_to_tight_per_task_value() {
+        // Regression for PR 5: ServiceConfig's old blanket tol = 1e-7
+        // silently loosened InvSqrt from its 1e-9 per-task default. With
+        // tol: None the solvers must get 1e-9 back.
+        let mut rng = Rng::seed_from(24);
+        let w = randmat::logspace(1e-2, 1.0, 10);
+        let a = randmat::sym_with_spectrum(&mut rng, 10, &w);
+        let mut c = cfg(1, 1);
+        c.max_iters = 100;
+        let svc = Service::start(c, Backend::Prism5, 42);
+        svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        let r = svc.drain().unwrap().remove(0);
+        assert!(
+            r.final_residual < 1e-9,
+            "InvSqrt default must be the tight 1e-9, stopped at {}",
+            r.final_residual
+        );
+    }
+
+    #[test]
+    fn mixed_eps_members_batch_together_and_match_solo_solves() {
+        // eps is per-job (the route key fixes only kind and shape): members
+        // with different damping must share one batch and still match their
+        // solo solves on the damped matrices.
+        let mut rng = Rng::seed_from(25);
+        let w = randmat::logspace(1e-2, 1.0, 8);
+        let a = randmat::sym_with_spectrum(&mut rng, 8, &w);
+        let epss = [0.0, 1e-3, 1e-2, 0.1];
+        let seed = 55;
+        let svc = Service::start(cfg(1, 4), Backend::Prism5, seed);
+        for (layer, &eps) in epss.iter().enumerate() {
+            svc.submit(layer, JobKind::InvSqrt { eps }, a.clone()).unwrap();
+        }
+        let mut results = svc.drain().unwrap();
+        results.sort_by_key(|r| r.layer);
+        assert_eq!(results.len(), 4);
+        assert!(results.iter().all(|r| r.batch_size == 4));
+        for (j, r) in results.iter().enumerate() {
+            let mut damped = a.clone();
+            if epss[j] != 0.0 {
+                damped.add_diag(epss[j]);
+            }
+            let mut stream = Rng::seed_from(batch_stream_seed(seed, 1));
+            let mut s = Solver::for_backend_tuned(
+                Backend::Prism5,
+                MatFnTask::InvSqrt,
+                40,
+                None,
+                Some(8),
+            )
+            .unwrap();
+            let out = s.solve(&damped, &mut stream);
+            assert_eq!(r.result, out.primary, "eps={} member diverged from solo", epss[j]);
+        }
+    }
+
+    #[test]
+    fn inflight_counts_exactly_across_dispatch_and_recv() {
+        let mut rng = Rng::seed_from(26);
+        let svc = Service::start(cfg(1, 1), Backend::Eigen, 1);
+        assert_eq!(svc.inflight(), 0);
+        let w = randmat::logspace(0.1, 1.0, 6);
+        for layer in 0..3 {
+            let a = randmat::sym_with_spectrum(&mut rng, 6, &w);
+            svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        }
+        // max_batch = 1 dispatches each submission immediately.
+        assert_eq!(svc.inflight(), 3);
+        let _ = svc.recv().unwrap();
+        assert_eq!(svc.inflight(), 2);
+        let _ = svc.recv().unwrap();
+        let _ = svc.recv().unwrap();
+        assert_eq!(svc.inflight(), 0);
+    }
+
+    #[test]
+    fn mixed_precision_service_solves_accurately() {
+        // service.precision = mixed reaches the worker solvers: results
+        // differ bit-wise from f64 (different arithmetic) but meet the same
+        // per-task tolerance thanks to the f64 guard + cleanup iteration.
+        let mut rng = Rng::seed_from(27);
+        let w = randmat::logspace(1e-2, 1.0, 8);
+        let a = randmat::sym_with_spectrum(&mut rng, 8, &w);
+        let run = |precision: Precision| {
+            let mut c = cfg(1, 1);
+            c.max_iters = 100;
+            c.precision = precision;
+            let svc = Service::start(c, Backend::Prism5, 42);
+            svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+            svc.drain().unwrap().remove(0)
+        };
+        let full = run(Precision::F64);
+        let mixed = run(Precision::Mixed);
+        assert!(full.final_residual < 1e-9);
+        assert!(
+            mixed.final_residual < 1e-9,
+            "mixed InvSqrt must still reach the 1e-9 default, got {}",
+            mixed.final_residual
+        );
+        assert_ne!(
+            full.result, mixed.result,
+            "mixed precision should change low-order bits"
+        );
+        assert!(full.result.sub(&mixed.result).max_abs() < 1e-6);
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //!    vector loads/stores are the unaligned variants (`loadu`/`vld1q`), so
 //!    the panels only need `f64` alignment, which `Vec<f64>` guarantees.
 
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Mat32};
 use crate::util::{Error, Result};
 
 /// Microkernel register tile: MR rows of A × NR columns of B per inner-loop
@@ -241,6 +241,135 @@ unsafe fn micro_tile_neon(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
     out
 }
 
+// ───────────────────── f32 microkernel family ─────────────────────
+//
+// The mixed-precision solve path iterates in f32; these are the 8×8 f32
+// twins of the kernels above, dispatched by the same `MicroKernel` enum.
+// NR32 = 8 (not 4) because one f32 SIMD register holds 8 lanes on AVX2 —
+// the whole point of the f32 path is doubling lanes per register. The
+// microkernel contract is identical: packed k-major zero-padded panels,
+// one serial accumulation chain per `acc[r][j]`, per-kernel determinism,
+// no cross-kernel (or cross-dtype) bit equality.
+
+/// f32 microkernel register tile: 8 rows × 8 columns (one full `__m256`
+/// B-vector per k-step on AVX2).
+pub(crate) const MR32: usize = 8;
+pub(crate) const NR32: usize = 8;
+
+/// Run one `MR32×NR32` f32 micro-tile on the selected kernel. Same
+/// dispatch/fallback structure as [`micro_tile`].
+#[inline(always)]
+pub(super) fn micro_tile32(
+    kern: MicroKernel,
+    kb: usize,
+    ap: &[f32],
+    bp: &[f32],
+) -> [f32; MR32 * NR32] {
+    match kern {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` is only installed after `is_available()` confirmed
+        // AVX2+FMA at runtime (see the module docs); bounds are asserted
+        // inside the kernel.
+        MicroKernel::Avx2 => unsafe { micro_tile32_avx2(kb, ap, bp) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `Neon` is only selectable on aarch64, where NEON is a
+        // baseline feature; bounds are asserted inside the kernel.
+        MicroKernel::Neon => unsafe { micro_tile32_neon(kb, ap, bp) },
+        _ => micro_tile32_scalar(kb, ap, bp),
+    }
+}
+
+/// Portable 8×8 f32 microkernel — structurally identical to
+/// [`micro_tile_scalar`] with the wider NR32 inner loop.
+#[inline(always)]
+fn micro_tile32_scalar(kb: usize, ap: &[f32], bp: &[f32]) -> [f32; MR32 * NR32] {
+    let mut acc = [0.0f32; MR32 * NR32];
+    let ap = &ap[..kb * MR32];
+    let bp = &bp[..kb * NR32];
+    for t in 0..kb {
+        let at = &ap[t * MR32..t * MR32 + MR32];
+        let bt = &bp[t * NR32..t * NR32 + NR32];
+        for r in 0..MR32 {
+            let ar = at[r];
+            for j in 0..NR32 {
+                acc[r * NR32 + j] += ar * bt[j];
+            }
+        }
+    }
+    acc
+}
+
+/// AVX2+FMA 8×8 f32 microkernel: `acc[r]` is one `__m256` (8 f32 lanes)
+/// holding the tile's r-th row; each k-step broadcasts `a[r]` and issues
+/// one fused multiply-add per row — 8 FMAs per step, each over 8 lanes,
+/// twice the per-register throughput of the f64 kernel.
+///
+/// # Safety
+///
+/// Same obligations as [`micro_tile_avx2`]: AVX2+FMA must be present
+/// (gated by [`MicroKernel::is_available`] at every selection site), and
+/// in-bounds access is self-enforced via the entry assertions plus the
+/// packers' zero-padded tails; unaligned loads/stores mean no alignment
+/// obligation beyond `f32`'s.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn micro_tile32_avx2(kb: usize, ap: &[f32], bp: &[f32]) -> [f32; MR32 * NR32] {
+    use core::arch::x86_64::{
+        __m256, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+    assert!(ap.len() >= kb * MR32 && bp.len() >= kb * NR32);
+    let zero = _mm256_setzero_ps();
+    let mut acc: [__m256; MR32] = [zero; MR32];
+    for t in 0..kb {
+        let bv = _mm256_loadu_ps(bp.as_ptr().add(t * NR32));
+        let at = ap.as_ptr().add(t * MR32);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            *accr = _mm256_fmadd_ps(_mm256_set1_ps(*at.add(r)), bv, *accr);
+        }
+    }
+    let mut out = [0.0f32; MR32 * NR32];
+    for (r, accr) in acc.iter().enumerate() {
+        _mm256_storeu_ps(out.as_mut_ptr().add(r * NR32), *accr);
+    }
+    out
+}
+
+/// NEON 8×8 f32 microkernel: the tile's r-th row is a `float32x4_t` pair
+/// (`lo[r]`, `hi[r]`); each k-step issues two `vfmaq_n_f32` per row
+/// (16 vector FMAs per step, each over 4 lanes).
+///
+/// # Safety
+///
+/// Same obligations as [`micro_tile_neon`]: aarch64-only (`cfg`-gated),
+/// bounds asserted on entry, zero-padded panel tails keep every
+/// `vld1q_f32`/`vst1q_f32` in bounds.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn micro_tile32_neon(kb: usize, ap: &[f32], bp: &[f32]) -> [f32; MR32 * NR32] {
+    use core::arch::aarch64::{vdupq_n_f32, vfmaq_n_f32, vld1q_f32, vst1q_f32};
+    assert!(ap.len() >= kb * MR32 && bp.len() >= kb * NR32);
+    let zero = vdupq_n_f32(0.0);
+    let mut lo = [zero; MR32];
+    let mut hi = [zero; MR32];
+    for t in 0..kb {
+        let b0 = vld1q_f32(bp.as_ptr().add(t * NR32));
+        let b1 = vld1q_f32(bp.as_ptr().add(t * NR32 + 4));
+        let at = ap.as_ptr().add(t * MR32);
+        for r in 0..MR32 {
+            let ar = *at.add(r);
+            lo[r] = vfmaq_n_f32(lo[r], b0, ar);
+            hi[r] = vfmaq_n_f32(hi[r], b1, ar);
+        }
+    }
+    let mut out = [0.0f32; MR32 * NR32];
+    for r in 0..MR32 {
+        vst1q_f32(out.as_mut_ptr().add(r * NR32), lo[r]);
+        vst1q_f32(out.as_mut_ptr().add(r * NR32 + 4), hi[r]);
+    }
+    out
+}
+
 // ───────────────── reference / ablation kernels ──────────────────
 
 /// The seed's broadcast-FMA kernel: `C[m x n] += A[m x k] · B[k x n]`, both
@@ -340,6 +469,25 @@ pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// Reference (naive) f32 matmul for the dtype conformance axis. Accumulates
+/// in f32 (same arithmetic class as the packed f32 kernels) so comparisons
+/// measure reassociation/FMA differences, not a precision gap.
+pub fn matmul_naive32(a: &Mat32, b: &Mat32) -> Mat32 {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Mat32::zeros(m, n);
+    for i in 0..m {
+        for t in 0..k {
+            let av = a[(i, t)];
+            for j in 0..n {
+                c[(i, j)] += av * b[(t, j)];
+            }
+        }
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,6 +513,23 @@ mod tests {
         let avail = MicroKernel::available();
         assert!(avail.contains(&MicroKernel::Scalar));
         assert!(avail.contains(&MicroKernel::detect()));
+    }
+
+    #[test]
+    fn micro_tiles32_agree_with_scalar() {
+        // f32 twin of `micro_tiles_agree_with_scalar`, at f32 round-off.
+        let mut rng = Rng::seed_from(2);
+        for kb in [1usize, 2, 7, 33] {
+            let ap: Vec<f32> = (0..kb * MR32).map(|_| rng.normal() as f32).collect();
+            let bp: Vec<f32> = (0..kb * NR32).map(|_| rng.normal() as f32).collect();
+            let want = micro_tile32(MicroKernel::Scalar, kb, &ap, &bp);
+            for kern in MicroKernel::available() {
+                let got = micro_tile32(kern, kb, &ap, &bp);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4, "{} kb={kb}: {g} vs {w}", kern.name());
+                }
+            }
+        }
     }
 
     #[test]

@@ -83,16 +83,35 @@
 //! each other's calls. SYRK records its true n²k flop count — the mirrored
 //! half is a copy, not recomputation — and is additionally tallied under
 //! [`GemmCounter::syrk_calls`] so cost models can separate the two shapes.
+//!
+//! # The f32 instantiation (dtype axis)
+//!
+//! Every layer above has an f32 twin — [`GemmEngine::matmul_f32_into`] /
+//! [`GemmEngine::syrk_at_a_f32_into`] over [`Mat32`], routed by the same
+//! shape rules through 8×8 f32 microkernels (`MR32 = NR32 = 8`: one f32
+//! SIMD register holds 8 lanes on AVX2, doubling per-register FMA
+//! throughput over the f64 kernels — the raw-speed lever behind the
+//! mixed-precision solve path). The twins share the [`MicroKernel`] /
+//! [`GemmBlocking`] knobs, the thread-local pack workspace (its f32 side),
+//! [`GemmCounter`] accounting, and the determinism contract: bit-identical
+//! across pool sizes for a fixed (blocking, kernel) pair, per-dtype.
+//! **No accuracy contract ties the two dtypes together at this layer** —
+//! an f32 product carries f32 round-off (~1e-7 relative, growing with k);
+//! the dtype conformance grid compares f32 paths against [`matmul_naive32`]
+//! at a widened tolerance, and the *solver-level* guarantee (f64-grade
+//! stopping decisions over f32 iterates) is made one level up, in
+//! `prism::mixed` / the `matfn` module docs.
 
 mod kernel;
 mod pack;
 mod parallel;
 mod skinny;
 
-pub use kernel::{gemm_broadcast, matmul_naive, MicroKernel};
+pub use kernel::{gemm_broadcast, matmul_naive, matmul_naive32, MicroKernel};
 pub(crate) use kernel::{MR, NR};
+use kernel::{MR32, NR32};
 
-use super::Mat;
+use super::{Mat, Mat32};
 use crate::threads::ThreadPool;
 use crate::util::{Error, Result};
 use std::cell::{Cell, RefCell};
@@ -199,6 +218,11 @@ impl GemmScope {
 #[derive(Default)]
 pub struct Workspace {
     free: Vec<Mat>,
+    /// f32 side of the pool (mixed-precision iterates and f32 pack panels).
+    /// Separate free list — an f32 request must never repurpose an f64
+    /// allocation or vice versa — but one shared `allocs` counter, so the
+    /// allocation-free-hot-loop assertions cover both dtypes at once.
+    free32: Vec<Mat32>,
     allocs: usize,
 }
 
@@ -248,6 +272,48 @@ impl Workspace {
     /// Return a buffer to the pool for later reuse.
     pub fn put(&mut self, m: Mat) {
         self.free.push(m);
+    }
+
+    /// Take a rows×cols **f32** buffer (contents unspecified) — same
+    /// best-fit policy as [`Workspace::take`], over the f32 free list.
+    pub fn take_f32(&mut self, rows: usize, cols: usize) -> Mat32 {
+        let need = rows * cols;
+        let mut best: Option<(usize, usize)> = None;
+        for (i, m) in self.free32.iter().enumerate() {
+            let cap = m.capacity();
+            let better = match best {
+                None => cap >= need,
+                Some((_, c)) => cap >= need && cap < c,
+            };
+            if better {
+                best = Some((i, cap));
+            }
+        }
+        if let Some((i, _)) = best {
+            let mut m = self.free32.swap_remove(i);
+            m.reset(rows, cols);
+            return m;
+        }
+        self.allocs += 1;
+        let grow = self
+            .free32
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, m)| m.capacity())
+            .map(|(i, _)| i);
+        match grow {
+            Some(i) => {
+                let mut m = self.free32.swap_remove(i);
+                m.reset(rows, cols);
+                m
+            }
+            None => Mat32::zeros(rows, cols),
+        }
+    }
+
+    /// Return an f32 buffer to the pool for later reuse.
+    pub fn put_f32(&mut self, m: Mat32) {
+        self.free32.push(m);
     }
 
     /// Number of takes that had to allocate (or grow) because no free buffer
@@ -329,6 +395,12 @@ impl GemmBlocking {
     /// dims-of-one conformance tests pin down).
     fn clamped(self) -> GemmBlocking {
         GemmBlocking { mc: self.mc.max(MR), kc: self.kc.max(1), nc: self.nc.max(NR) }
+    }
+
+    /// f32-grid variant of [`GemmBlocking::clamped`]: the f32 micro-tile is
+    /// `MR32×NR32` (8×8), so the NC floor is 8, not the f64 path's 4.
+    fn clamped32(self) -> GemmBlocking {
+        GemmBlocking { mc: self.mc.max(MR32), kc: self.kc.max(1), nc: self.nc.max(NR32) }
     }
 }
 
@@ -444,24 +516,38 @@ fn auto_kernel() -> MicroKernel {
 /// A strided read-only view of one GEMM operand: element `(i, j)` lives at
 /// `data[i·rs + j·cs]`. Lets the packing routines and the skinny kernels
 /// serve `A`, `Aᵀ`, `B`, `Bᵀ` from the original buffers — no transpose is
-/// ever materialised.
+/// ever materialised. Generic over the element type (`f64` default, `f32`
+/// for the mixed-precision path); the constructors are dtype-specific and
+/// distinctly named so call sites never rely on inference.
 #[derive(Clone, Copy)]
-struct Operand<'a> {
-    data: &'a [f64],
+struct Operand<'a, E = f64> {
+    data: &'a [E],
     rs: usize,
     cs: usize,
 }
 
-impl<'a> Operand<'a> {
-    fn normal(m: &'a Mat) -> Operand<'a> {
+impl<'a, E: Copy> Operand<'a, E> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> E {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+impl<'a> Operand<'a, f64> {
+    fn normal(m: &'a Mat) -> Operand<'a, f64> {
         Operand { data: m.as_slice(), rs: m.cols(), cs: 1 }
     }
-    fn transposed(m: &'a Mat) -> Operand<'a> {
+    fn transposed(m: &'a Mat) -> Operand<'a, f64> {
         Operand { data: m.as_slice(), rs: 1, cs: m.cols() }
     }
-    #[inline(always)]
-    fn at(&self, i: usize, j: usize) -> f64 {
-        self.data[i * self.rs + j * self.cs]
+}
+
+impl<'a> Operand<'a, f32> {
+    fn normal32(m: &'a Mat32) -> Operand<'a, f32> {
+        Operand { data: m.as_slice(), rs: m.cols(), cs: 1 }
+    }
+    fn transposed32(m: &'a Mat32) -> Operand<'a, f32> {
+        Operand { data: m.as_slice(), rs: 1, cs: m.cols() }
     }
 }
 
@@ -653,6 +739,60 @@ impl GemmEngine {
         c
     }
 
+    // ── f32 entry points (mixed-precision iterate path) ──
+
+    /// `C = A·B` over f32 operands into a caller-owned [`Mat32`] (reshaped
+    /// in place). Same routing, counters and determinism contract as
+    /// [`GemmEngine::matmul_into`]; f32 accumulation throughout.
+    pub fn matmul_f32_into(&self, c: &mut Mat32, a: &Mat32, b: &Mat32) {
+        assert_eq!(a.cols(), b.rows(), "matmul_f32: {:?} x {:?}", a.shape(), b.shape());
+        let (m, k) = a.shape();
+        let n = b.cols();
+        GemmCounter::record(m, n, k);
+        c.reset(m, n);
+        c.fill_with(0.0);
+        self.dispatch32(
+            Operand::normal32(a),
+            Operand::normal32(b),
+            c.as_mut_slice(),
+            m,
+            n,
+            k,
+            false,
+        );
+    }
+
+    /// Symmetric rank-k `C = AᵀA` over f32 into `c` (upper-triangle kernel
+    /// plus mirror — exactly symmetric by construction, like the f64 path).
+    pub fn syrk_at_a_f32_into(&self, c: &mut Mat32, a: &Mat32) {
+        let (k, n) = a.shape();
+        GemmCounter::record_syrk(n, k);
+        c.reset(n, n);
+        c.fill_with(0.0);
+        self.dispatch32(
+            Operand::transposed32(a),
+            Operand::normal32(a),
+            c.as_mut_slice(),
+            n,
+            n,
+            k,
+            true,
+        );
+        mirror_upper32(c);
+    }
+
+    /// Allocating convenience forms of the f32 `*_into` calls.
+    pub fn matmul_f32(&self, a: &Mat32, b: &Mat32) -> Mat32 {
+        let mut c = Mat32::zeros(0, 0);
+        self.matmul_f32_into(&mut c, a, b);
+        c
+    }
+    pub fn syrk_at_a_f32(&self, a: &Mat32) -> Mat32 {
+        let mut c = Mat32::zeros(0, 0);
+        self.syrk_at_a_f32_into(&mut c, a);
+        c
+    }
+
     /// `C += op(A)·op(B)`: resolve the kernel once, route skinny shapes to
     /// the streaming paths, and send everything else to the blocked path
     /// (row-panel parallel when a pool is attached). See "Dispatch rules"
@@ -697,6 +837,44 @@ impl GemmEngine {
             n,
             k,
             self.blocking().clamped(),
+            self.kernel(),
+            upper_only,
+        );
+    }
+
+    /// f32 twin of [`GemmEngine::dispatch`]: identical routing rules against
+    /// the f32 tile grid (`MR32`/`NR32`), blocking clamped to that grid.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch32(
+        &self,
+        a: Operand<'_, f32>,
+        b: Operand<'_, f32>,
+        c: &mut [f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        upper_only: bool,
+    ) {
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        if !upper_only {
+            if m <= MR32 {
+                return skinny::thin_a32(a, b, c, m, n, k);
+            }
+            if n <= NR32 {
+                return skinny::thin_b32(self.pool.as_deref(), a, b, c, m, n, k);
+            }
+        }
+        parallel::row_panels32(
+            self.pool.as_deref(),
+            a,
+            b,
+            c,
+            m,
+            n,
+            k,
+            self.blocking().clamped32(),
             self.kernel(),
             upper_only,
         );
@@ -771,6 +949,16 @@ pub fn syrk_at_a_into(c: &mut Mat, a: &Mat) {
 
 /// Copy the upper triangle into the lower one (exact symmetry).
 fn mirror_upper(c: &mut Mat) {
+    let n = c.rows();
+    for i in 1..n {
+        for j in 0..i {
+            c[(i, j)] = c[(j, i)];
+        }
+    }
+}
+
+/// f32 twin of [`mirror_upper`].
+fn mirror_upper32(c: &mut Mat32) {
     let n = c.rows();
     for i in 1..n {
         for j in 0..i {
@@ -1136,6 +1324,111 @@ mod tests {
             ws.put(b);
         }
         assert_eq!(ws.allocations(), 2, "steady mixed-size cycling must not allocate");
+    }
+
+    fn g32(rng: &mut Rng, m: usize, n: usize) -> Mat32 {
+        Mat32::from_f64(&Mat::gaussian(rng, m, n, 1.0))
+    }
+
+    fn close32(a: &Mat32, b: &Mat32, tol: f64) -> bool {
+        a.shape() == b.shape()
+            && a.as_slice()
+                .iter()
+                .zip(b.as_slice())
+                .all(|(x, y)| ((x - y).abs() as f64) < tol)
+    }
+
+    #[test]
+    fn f32_matmul_matches_naive32_every_kernel() {
+        // The dtype conformance axis at unit grain: blocked, thin-A (m ≤
+        // MR32), thin-B (n ≤ NR32) and GEMV shapes per available kernel,
+        // vs the f32 naive reference at f32-round-off tolerance.
+        let mut rng = Rng::seed_from(21);
+        for kern in MicroKernel::available() {
+            let eng = GemmEngine::sequential().with_kernel(kern);
+            for &(m, k, n) in &[
+                (1, 40, 1),
+                (8, 64, 64), // sketch shape → thin-A32
+                (50, 33, 1), // GEMV → thin-B32
+                (3, 17, 100),
+                (33, 17, 29),
+                (64, 64, 64),
+            ] {
+                let a = g32(&mut rng, m, k);
+                let b = g32(&mut rng, k, n);
+                let want = matmul_naive32(&a, &b);
+                assert!(
+                    close32(&eng.matmul_f32(&a, &b), &want, 1e-3),
+                    "{} f32 {m}x{k}x{n}",
+                    kern.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_syrk_matches_and_is_exactly_symmetric() {
+        let mut rng = Rng::seed_from(22);
+        for kern in MicroKernel::available() {
+            let eng = GemmEngine::sequential().with_kernel(kern);
+            for &(k, n) in &[(15, 8), (40, 33)] {
+                let a = g32(&mut rng, k, n);
+                let got = eng.syrk_at_a_f32(&a);
+                let at = a.to_f64().transpose();
+                let want = Mat32::from_f64(&matmul_naive(&at, &a.to_f64()));
+                assert!(close32(&got, &want, 1e-3), "{} syrk_f32 {k}x{n}", kern.name());
+                for i in 0..n {
+                    for j in 0..i {
+                        assert_eq!(got[(i, j)], got[(j, i)], "f32 syrk not exactly symmetric");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_parallel_engine_bit_identical_to_sequential() {
+        // The determinism contract holds per dtype: for a fixed kernel, the
+        // f32 path is bit-identical across pool sizes too.
+        let mut rng = Rng::seed_from(23);
+        for kern in MicroKernel::available() {
+            let seq = GemmEngine::sequential().with_kernel(kern);
+            let par = GemmEngine::with_threads(4).with_kernel(kern);
+            for &(m, k, n) in &[(1, 3, 2), (16, 16, 16), (33, 17, 29), (70, 40, 55)] {
+                let a = g32(&mut rng, m, k);
+                let b = g32(&mut rng, k, n);
+                assert!(
+                    seq.matmul_f32(&a, &b) == par.matmul_f32(&a, &b),
+                    "{} f32 matmul {m}x{k}x{n} not bit-identical",
+                    kern.name()
+                );
+                assert!(
+                    seq.syrk_at_a_f32(&a) == par.syrk_at_a_f32(&a),
+                    "{} f32 syrk {m}x{k} not bit-identical",
+                    kern.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_f32_side_recycles_and_shares_alloc_counter() {
+        let mut ws = Workspace::new();
+        let m1 = ws.take_f32(4, 4);
+        assert_eq!(ws.allocations(), 1);
+        ws.put_f32(m1);
+        let m2 = ws.take_f32(2, 6); // 12 elems fit in capacity 16
+        assert_eq!(m2.shape(), (2, 6));
+        assert_eq!(ws.allocations(), 1, "fitting f32 reuse must not count as alloc");
+        ws.put_f32(m2);
+        // The dtypes never trade buffers: an f64 take after an f32 put must
+        // allocate (and vice versa), on the one shared counter.
+        let d = ws.take(2, 2);
+        assert_eq!(ws.allocations(), 2);
+        ws.put(d);
+        let f = ws.take_f32(4, 4);
+        assert_eq!(ws.allocations(), 2, "f32 take must reuse the f32 buffer");
+        ws.put_f32(f);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! SIMD kernels (see [`super::kernel`]): it guarantees every panel holds
 //! `kb·MR` / `kb·NR` readable elements.
 
-use super::kernel::{MR, NR};
+use super::kernel::{MR, MR32, NR, NR32};
 use super::Operand;
 
 /// Pack rows `i0..i1`, cols `k0..k1` of `a` into MR-row panels, k-major:
@@ -54,10 +54,63 @@ pub(super) fn pack_b(buf: &mut [f64], b: Operand<'_>, k0: usize, k1: usize, j0: 
     }
 }
 
+/// f32 twin of [`pack_a`] over `MR32`-row panels. Kept as a duplicate
+/// rather than a generic: the panel widths differ per dtype (`MR` vs
+/// `MR32`), and the two bodies are small enough that a const-generic
+/// indirection would cost more clarity than it saves.
+pub(super) fn pack_a32(
+    buf: &mut [f32],
+    a: Operand<'_, f32>,
+    i0: usize,
+    i1: usize,
+    k0: usize,
+    k1: usize,
+) {
+    let kb = k1 - k0;
+    let mut off = 0;
+    let mut ti = i0;
+    while ti < i1 {
+        let h = MR32.min(i1 - ti);
+        for t in 0..kb {
+            let dst = &mut buf[off + t * MR32..off + t * MR32 + MR32];
+            for r in 0..MR32 {
+                dst[r] = if r < h { a.at(ti + r, k0 + t) } else { 0.0 };
+            }
+        }
+        off += kb * MR32;
+        ti += MR32;
+    }
+}
+
+/// f32 twin of [`pack_b`] over `NR32`-column panels.
+pub(super) fn pack_b32(
+    buf: &mut [f32],
+    b: Operand<'_, f32>,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let kb = k1 - k0;
+    let mut off = 0;
+    let mut js = j0;
+    while js < j1 {
+        let w = NR32.min(j1 - js);
+        for t in 0..kb {
+            let dst = &mut buf[off + t * NR32..off + t * NR32 + NR32];
+            for j in 0..NR32 {
+                dst[j] = if j < w { b.at(k0 + t, js + j) } else { 0.0 };
+            }
+        }
+        off += kb * NR32;
+        js += NR32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Mat;
+    use crate::linalg::{Mat, Mat32};
     use crate::rng::Rng;
 
     #[test]
@@ -70,6 +123,34 @@ mod tests {
             for r in 0..MR {
                 let want = if r < 5 { a[(r, t)] } else { 0.0 };
                 assert_eq!(buf[t * MR + r], want, "t={t} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_a32_is_k_major_and_zero_padded() {
+        let mut rng = Rng::seed_from(3);
+        let a = Mat32::from_f64(&Mat::gaussian(&mut rng, 5, 3, 1.0)); // ragged panel
+        let mut buf = vec![f32::NAN; 3 * MR32];
+        pack_a32(&mut buf, Operand::normal32(&a), 0, 5, 0, 3);
+        for t in 0..3 {
+            for r in 0..MR32 {
+                let want = if r < 5 { a[(r, t)] } else { 0.0 };
+                assert_eq!(buf[t * MR32 + r], want, "t={t} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b32_zero_pads_ragged_columns() {
+        let mut rng = Rng::seed_from(4);
+        let b = Mat32::from_f64(&Mat::gaussian(&mut rng, 6, 3, 1.0)); // 3 < NR32 cols
+        let mut buf = vec![f32::NAN; 6 * NR32];
+        pack_b32(&mut buf, Operand::normal32(&b), 0, 6, 0, 3);
+        for t in 0..6 {
+            for j in 0..NR32 {
+                let want = if j < 3 { b[(t, j)] } else { 0.0 };
+                assert_eq!(buf[t * NR32 + j], want, "t={t} j={j}");
             }
         }
     }

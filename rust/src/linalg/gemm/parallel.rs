@@ -10,8 +10,8 @@
 //! ([`GemmBlocking`], [`MicroKernel`]) pair. Zero-padding keeps edge tiles
 //! on the same code path.
 
-use super::kernel::{micro_tile, MicroKernel, MR, NR};
-use super::pack::{pack_a, pack_b};
+use super::kernel::{micro_tile, micro_tile32, MicroKernel, MR, MR32, NR, NR32};
+use super::pack::{pack_a, pack_a32, pack_b, pack_b32};
 use super::{GemmBlocking, Operand, PACK_WS};
 use crate::threads::{scoped, ThreadPool};
 
@@ -23,13 +23,13 @@ const MIN_PANEL_ROWS: usize = 16;
 /// `body(cpanel, i0, rows)` on each — sequentially (one whole-C panel)
 /// when the pool is absent or the product too small to split. The one
 /// row-partition heuristic shared by the blocked path and the thin-B
-/// skinny path, so the two can never silently diverge.
-pub(super) fn split_row_panels(
+/// skinny path (both dtypes), so the routes can never silently diverge.
+pub(super) fn split_row_panels<E: Send>(
     pool: Option<&ThreadPool>,
-    c: &mut [f64],
+    c: &mut [E],
     m: usize,
     n: usize,
-    body: &(dyn Fn(&mut [f64], usize, usize) + Sync),
+    body: &(dyn Fn(&mut [E], usize, usize) + Sync),
 ) {
     // Floor division: never split below MIN_PANEL_ROWS rows per panel
     // (a sub-minimum panel pays dispatch overhead for no kernel time).
@@ -158,5 +158,100 @@ fn gemm_panel(
         }
         ws.put(apack);
         ws.put(bpack);
+    });
+}
+
+/// f32 twin of [`row_panels`]: same row-partition heuristic (shared
+/// [`split_row_panels`]), same determinism invariant — bit-identical for
+/// every pool size at a fixed ([`GemmBlocking`], [`MicroKernel`]) pair.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn row_panels32(
+    pool: Option<&ThreadPool>,
+    a: Operand<'_, f32>,
+    b: Operand<'_, f32>,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    blk: GemmBlocking,
+    kern: MicroKernel,
+    upper_only: bool,
+) {
+    split_row_panels(pool, c, m, n, &|cpanel, i0, rows| {
+        gemm_panel32(a, b, cpanel, i0, i0 + rows, n, k, blk, kern, upper_only)
+    });
+}
+
+/// f32 twin of [`gemm_panel`] over `MR32×NR32` tiles. Pack buffers come
+/// from the f32 side of the thread-local [`super::Workspace`]; the blocking
+/// is the caller's (already clamped to the f32 tile grid by `dispatch32`).
+#[allow(clippy::too_many_arguments)]
+fn gemm_panel32(
+    a: Operand<'_, f32>,
+    b: Operand<'_, f32>,
+    c: &mut [f32],
+    pi0: usize,
+    pi1: usize,
+    n: usize,
+    k: usize,
+    blk: GemmBlocking,
+    kern: MicroKernel,
+    upper_only: bool,
+) {
+    if pi0 >= pi1 || n == 0 || k == 0 {
+        return;
+    }
+    let GemmBlocking { mc, kc, nc } = blk;
+    PACK_WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let mut apack = ws.take_f32(1, mc.div_ceil(MR32) * MR32 * kc);
+        let mut bpack = ws.take_f32(1, nc.div_ceil(NR32) * NR32 * kc);
+        for jc in (0..n).step_by(nc) {
+            let j1 = (jc + nc).min(n);
+            if upper_only && pi0 >= j1 {
+                continue;
+            }
+            for k0 in (0..k).step_by(kc) {
+                let k1 = (k0 + kc).min(k);
+                let kb = k1 - k0;
+                pack_b32(bpack.as_mut_slice(), b, k0, k1, jc, j1);
+                for ic in (pi0..pi1).step_by(mc) {
+                    let i1 = (ic + mc).min(pi1);
+                    if upper_only && ic >= j1 {
+                        continue;
+                    }
+                    pack_a32(apack.as_mut_slice(), a, ic, i1, k0, k1);
+                    let mut si = 0;
+                    let mut js = jc;
+                    while js < j1 {
+                        let w = NR32.min(j1 - js);
+                        let bstrip = &bpack.as_slice()[si * kb * NR32..(si + 1) * kb * NR32];
+                        let mut tile = 0;
+                        let mut ti = ic;
+                        while ti < i1 {
+                            let h = MR32.min(i1 - ti);
+                            if !upper_only || ti < js + NR32 {
+                                let astrip =
+                                    &apack.as_slice()[tile * kb * MR32..(tile + 1) * kb * MR32];
+                                let acc = micro_tile32(kern, kb, astrip, bstrip);
+                                for r in 0..h {
+                                    let base = (ti - pi0 + r) * n + js;
+                                    let row = &mut c[base..base + w];
+                                    for j in 0..w {
+                                        row[j] += acc[r * NR32 + j];
+                                    }
+                                }
+                            }
+                            tile += 1;
+                            ti += MR32;
+                        }
+                        si += 1;
+                        js += NR32;
+                    }
+                }
+            }
+        }
+        ws.put_f32(apack);
+        ws.put_f32(bpack);
     });
 }

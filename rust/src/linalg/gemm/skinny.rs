@@ -31,8 +31,8 @@
 //! dependence-free over the packed lane dimension, which LLVM
 //! auto-vectorises (the [`super::MicroKernel`] choice does not apply here).
 
-use super::kernel::{MR, NR};
-use super::pack::{pack_a, pack_b};
+use super::kernel::{MR, MR32, NR, NR32};
+use super::pack::{pack_a, pack_a32, pack_b, pack_b32};
 use super::parallel::split_row_panels;
 use super::{Operand, PACK_WS};
 use crate::threads::ThreadPool;
@@ -151,6 +151,129 @@ fn thin_b_rows(
             for t in 0..k {
                 let av = a.at(i, t);
                 let bt = &bp[t * NR..t * NR + NR];
+                for (cj, &bj) in acc.iter_mut().zip(bt) {
+                    *cj += av * bj;
+                }
+            }
+        }
+        let crow = &mut c[ri * n..ri * n + n];
+        for (cv, &av) in crow.iter_mut().zip(&acc) {
+            *cv += av;
+        }
+    }
+}
+
+// ───────────────────────── f32 twins ─────────────────────────
+//
+// Same shape thresholds against the f32 tile grid (`MR32`/`NR32`), same
+// single-k-chain accumulation order, same "pack only the small operand"
+// trade. Routed by `GemmEngine::dispatch32`.
+
+/// f32 twin of [`thin_a`]: `C[m×n] += op(A)·op(B)` for `m ≤ MR32`.
+pub(super) fn thin_a32(
+    a: Operand<'_, f32>,
+    b: Operand<'_, f32>,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    debug_assert!((1..=MR32).contains(&m));
+    PACK_WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let mut apack = ws.take_f32(1, k * MR32);
+        pack_a32(apack.as_mut_slice(), a, 0, m, 0, k);
+        let ap = apack.as_slice();
+        if b.cs == 1 {
+            for t in 0..k {
+                let at = &ap[t * MR32..t * MR32 + MR32];
+                let brow = &b.data[t * b.rs..t * b.rs + n];
+                for (r, &ar) in at.iter().enumerate().take(m) {
+                    let crow = &mut c[r * n..r * n + n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += ar * bv;
+                    }
+                }
+            }
+        } else {
+            for j in 0..n {
+                let mut acc = [0.0f32; MR32];
+                if b.rs == 1 {
+                    let bcol = &b.data[j * b.cs..j * b.cs + k];
+                    for (t, &bv) in bcol.iter().enumerate() {
+                        let at = &ap[t * MR32..t * MR32 + MR32];
+                        for (av, &ar) in acc.iter_mut().zip(at) {
+                            *av += ar * bv;
+                        }
+                    }
+                } else {
+                    for t in 0..k {
+                        let bv = b.at(t, j);
+                        let at = &ap[t * MR32..t * MR32 + MR32];
+                        for (av, &ar) in acc.iter_mut().zip(at) {
+                            *av += ar * bv;
+                        }
+                    }
+                }
+                for (r, &av) in acc.iter().enumerate().take(m) {
+                    c[r * n + j] += av;
+                }
+            }
+        }
+        ws.put_f32(apack);
+    });
+}
+
+/// f32 twin of [`thin_b`]: `C[m×n] += op(A)·op(B)` for `n ≤ NR32`, row-split
+/// over the pool through the shared [`split_row_panels`] partition.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn thin_b32(
+    pool: Option<&ThreadPool>,
+    a: Operand<'_, f32>,
+    b: Operand<'_, f32>,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    debug_assert!((1..=NR32).contains(&n));
+    PACK_WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let mut bpack = ws.take_f32(1, k * NR32);
+        pack_b32(bpack.as_mut_slice(), b, 0, k, 0, n);
+        let bp = bpack.as_slice();
+        split_row_panels(pool, c, m, n, &|cpanel, i0, rows| {
+            thin_b32_rows(a, bp, cpanel, i0, rows, n, k)
+        });
+        ws.put_f32(bpack);
+    });
+}
+
+/// f32 twin of [`thin_b_rows`].
+fn thin_b32_rows(
+    a: Operand<'_, f32>,
+    bp: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+) {
+    for ri in 0..rows {
+        let i = i0 + ri;
+        let mut acc = [0.0f32; NR32];
+        if a.cs == 1 {
+            let arow = &a.data[i * a.rs..i * a.rs + k];
+            for (t, &av) in arow.iter().enumerate() {
+                let bt = &bp[t * NR32..t * NR32 + NR32];
+                for (cj, &bj) in acc.iter_mut().zip(bt) {
+                    *cj += av * bj;
+                }
+            }
+        } else {
+            for t in 0..k {
+                let av = a.at(i, t);
+                let bt = &bp[t * NR32..t * NR32 + NR32];
                 for (cj, &bj) in acc.iter_mut().zip(bt) {
                     *cj += av * bj;
                 }

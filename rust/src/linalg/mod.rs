@@ -17,6 +17,12 @@
 //! (bit-identical at every pool size for a fixed kernel), `*_into`
 //! out-parameter variants and a [`gemm::Workspace`] buffer pool so
 //! iterative engines run allocation-free in their hot loops.
+//!
+//! A parallel `f32` instantiation ([`Mat32`], `GemmEngine::matmul_f32_into`
+//! and friends, 8×8 f32 microkernels — 8 lanes/register on AVX2) backs the
+//! mixed-precision solve path (`matfn` `Precision::Mixed`): the iteration
+//! runs in f32 while the residual/stop guard stays in f64. See the [`gemm`]
+//! and `crate::matfn` module docs for the accuracy contract.
 
 pub mod gemm;
 pub mod decomp;
@@ -342,6 +348,172 @@ impl Mat {
             let dst = (r0 + i) * self.cols + c0;
             self.data[dst..dst + b.cols].copy_from_slice(b.row(i));
         }
+    }
+}
+
+/// Dense row-major `f32` matrix — the iterate storage of the mixed-precision
+/// compute path (`Precision::Mixed`: f32 iteration, f64 residual guard).
+///
+/// Deliberately a small mirror of [`Mat`]: exactly what the f32 GEMM engine
+/// ([`gemm::GemmEngine::matmul_f32_into`] and friends) and the
+/// `prism::mixed` drivers need, plus exact up/down conversions. Every
+/// f64→f32 downcast rounds to nearest; the f32→f64 upcast is exact, so the
+/// f64 guard in the mixed drivers always sees precisely the iterate the f32
+/// kernels produced.
+#[derive(Clone, PartialEq)]
+pub struct Mat32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat32 {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Downcast an f64 matrix (round to nearest).
+    pub fn from_f64(m: &Mat) -> Self {
+        let mut out = Mat32::zeros(0, 0);
+        out.copy_from_f64(m);
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    /// Element capacity of the backing allocation (≥ rows·cols); the f32
+    /// side of [`gemm::Workspace`] uses it exactly like [`Mat::capacity`].
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// Reshape in place (contents unspecified afterwards) — the
+    /// buffer-recycling primitive, mirroring [`Mat::reset`].
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Set every entry to `v` (no allocation).
+    pub fn fill_with(&mut self, v: f32) {
+        for x in self.data.iter_mut() {
+            *x = v;
+        }
+    }
+
+    /// Become a copy of `src`, reusing the allocation.
+    pub fn copy_from(&mut self, src: &Mat32) {
+        self.reset(src.rows, src.cols);
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Become the rounded-down copy of an f64 matrix, reusing the allocation
+    /// — the workspace-friendly downcast the mixed drivers run per iteration.
+    pub fn copy_from_f64(&mut self, src: &Mat) {
+        self.reset(src.rows(), src.cols());
+        for (d, &s) in self.data.iter_mut().zip(src.as_slice()) {
+            *d = s as f32;
+        }
+    }
+
+    /// Exact upcast into a caller-owned f64 buffer (reshaped in place).
+    pub fn write_f64_into(&self, dst: &mut Mat) {
+        dst.reset(self.rows, self.cols);
+        for (d, &s) in dst.as_mut_slice().iter_mut().zip(&self.data) {
+            *d = s as f64;
+        }
+    }
+
+    /// Exact upcast as a new f64 matrix.
+    pub fn to_f64(&self) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.write_f64_into(&mut out);
+        out
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// `self + s * other` (elementwise), in place.
+    pub fn axpy(&mut self, s: f32, other: &Mat32) {
+        assert_eq!(self.shape(), other.shape(), "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Add `s` to the leading diagonal, in place.
+    pub fn add_diag(&mut self, s: f32) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += s;
+        }
+    }
+
+    /// Frobenius norm (accumulated in f64 so large matrices don't overflow
+    /// or lose the low bits the mixed stall guard watches).
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0_f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Whether any entry is NaN or infinite.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+}
+
+impl Index<(usize, usize)> for Mat32 {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat32 {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat32 {}x{}", self.rows, self.cols)
     }
 }
 

@@ -67,7 +67,12 @@ COMMON FLAGS:
   --kappa K        HTMP tail parameter      (default 0.5)
   --seed N         RNG seed                 (default 42)
   --iters K        max iterations           (default 100)
-  --tol T          residual tolerance       (default 1e-7)
+  --tol T          residual tolerance       (default 1e-7; serve: unset
+                   keeps per-task defaults — 1e-7 polar/sign, 1e-9
+                   inverse-root)
+  --precision P    serve: f64|mixed (default f64; mixed runs the hot
+                   Newton–Schulz loop in f32 under an f64 residual guard
+                   plus one f64 cleanup iteration — see matfn::Precision)
   --d D            polynomial degree 1|2    (default 2)
   --sketch P       sketch rows p            (default 8)
   --backends LIST  comma list of matfn methods: classic,prism,exact,
@@ -396,7 +401,19 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
         max_batch: args.get_usize("batch", 4)?,
         sketch_p: args.get_usize("sketch", 8)?,
         max_iters: args.get_usize("iters", 60)?,
-        tol: args.get_f64("tol", 1e-7)?,
+        // No --tol keeps the per-task solver defaults (1e-7 polar/sign,
+        // 1e-9 inverse-root); an explicit flag forces one tolerance for
+        // every task kind.
+        tol: match args.get("tol") {
+            Some(_) => Some(args.get_f64("tol", 1e-7)?),
+            None => None,
+        },
+        precision: match args.get("precision") {
+            Some(s) => prism::matfn::Precision::parse(s).ok_or_else(|| {
+                prism::util::Error::Parse(format!("--precision '{s}' (want f64|mixed)"))
+            })?,
+            None => prism::matfn::Precision::F64,
+        },
         solver_cache_cap: args.get_usize("cache-cap", 32)?,
         gemm_threads: args.get_usize("threads", 1)?,
         stream_residuals: stream_res,

@@ -48,6 +48,7 @@ pub mod registry;
 mod solver;
 
 pub use solver::Solver;
+pub(crate) use solver::validate_input;
 
 use crate::linalg::Mat;
 use crate::prism::driver::{AlphaMode, IterEvent, IterationLog, StopRule};
@@ -104,9 +105,62 @@ pub enum Method {
     Eigen,
 }
 
+/// Arithmetic precision of the solve's hot loop.
+///
+/// ## The mixed-precision accuracy contract
+///
+/// `Mixed` runs the Newton–Schulz update GEMMs, the update-polynomial
+/// assembly and the sketched α trace propagation in **f32** (twice the SIMD
+/// lanes per register), while a full **f64 guard** retains an exactly-upcast
+/// copy of the iterate and recomputes the residual `R` in f64 after every
+/// step. *Every* stopping decision — convergence, divergence, NaN,
+/// f32-floor stall — reads only that f64 residual, so the reported
+/// [`IterationLog`] carries f64-grade residuals and the `converged` flag
+/// means the same thing it means under `F64`. Once the f32 phase reaches
+/// `max(tol, 1e-5)` or its round-off floor, one optional full-f64 cleanup
+/// iteration closes the remaining gap (one NS step contracts roughly
+/// quadratically, which covers the typical f32 floor for service-sized
+/// inputs). See [`crate::prism::mixed`] for the driver itself.
+///
+/// `Mixed` applies to the Newton–Schulz family (polar / sign-free tasks:
+/// `Polar`, `Sqrt`, `InvSqrt`) with `d ≤ 2`; any other method, task or
+/// degree silently runs in full f64 — correctness first, speed second.
+/// Results are **not** bit-identical to `F64` solves (different arithmetic),
+/// but consume the identical RNG stream: sketches are drawn in f64 and
+/// downcast, so per-job reproducibility and batch/solo stream alignment are
+/// preserved. Keep `F64` when downstream logic compares iterates bit-wise
+/// across precision settings or when `tol` is tighter than one f64 cleanup
+/// step can reach from ~1e-5 (harsher than ~1e-11 for moderate sizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Everything in f64 — the default, bit-compatible with all prior runs.
+    F64,
+    /// f32 iterate + f64 guard + one f64 cleanup iteration (contract above).
+    Mixed,
+}
+
+impl Precision {
+    /// Canonical token used in configs and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a config/CLI token (`"f64"` | `"mixed"`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "mixed" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+}
+
 /// A full solver specification: method, degree `d` (Newton–Schulz order
-/// `2d+1`), α-selection mode, stopping rule, and the Muon warm-α phase
-/// length (paper §C; 0 disables it).
+/// `2d+1`), α-selection mode, stopping rule, the Muon warm-α phase
+/// length (paper §C; 0 disables it), and the hot-loop [`Precision`].
 #[derive(Debug, Clone, Copy)]
 pub struct SolverSpec {
     pub method: Method,
@@ -114,6 +168,7 @@ pub struct SolverSpec {
     pub alpha: AlphaMode,
     pub stop: StopRule,
     pub warm_iters: usize,
+    pub precision: Precision,
 }
 
 impl SolverSpec {
@@ -124,6 +179,7 @@ impl SolverSpec {
             alpha: AlphaMode::Sketched { p: 8 },
             stop: StopRule::default(),
             warm_iters: 0,
+            precision: Precision::F64,
         }
     }
 
@@ -177,6 +233,11 @@ impl SolverSpec {
     }
     pub fn with_warm_iters(mut self, warm_iters: usize) -> SolverSpec {
         self.warm_iters = warm_iters;
+        self
+    }
+    /// Select the hot-loop precision (see [`Precision`] for the contract).
+    pub fn with_precision(mut self, precision: Precision) -> SolverSpec {
+        self.precision = precision;
         self
     }
 }

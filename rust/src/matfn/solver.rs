@@ -5,7 +5,7 @@
 //! that draw every ping-pong buffer from that pool — the second same-shape
 //! `solve` performs zero heap allocations in the iteration hot loop.
 
-use super::{BoxObserver, MatFnOutput, MatFnSolver, MatFnTask, Method, SolverSpec};
+use super::{BoxObserver, MatFnOutput, MatFnSolver, MatFnTask, Method, Precision, SolverSpec};
 use crate::baselines::cans::{polar_cans_in, CansOpts};
 use crate::baselines::eigen_fn;
 use crate::baselines::polar_express::PolarExpress;
@@ -16,6 +16,7 @@ use crate::prism::chebyshev::{chebyshev_inverse_in, ChebyshevOpts};
 use crate::prism::db_newton::{db_newton_prism_in, DbNewtonOpts};
 use crate::prism::driver::{AlphaMode, EngineHooks, IterEvent, IterationLog, RunRecorder, StopRule};
 use crate::prism::inverse_newton::{inv_root_prism_in, InvRootOpts};
+use crate::prism::mixed::{polar_mixed_in, sqrt_mixed_in};
 use crate::prism::polar::{polar_prism_in, PolarOpts};
 use crate::prism::sign::{sign_prism_in, SignOpts};
 use crate::prism::sqrt::{sqrt_prism_in, SqrtOpts};
@@ -59,6 +60,24 @@ pub(super) fn method_token(spec: &SolverSpec) -> String {
         Method::Cans => "cans".into(),
         Method::Eigen => "eigen".into(),
     }
+}
+
+/// Reject non-finite inputs before they enter any iteration. A NaN or ±∞
+/// anywhere in `a` poisons every downstream GEMM, the sketched traces and
+/// the residual in one step — the iteration would spin to `max_iters`
+/// producing NaN "results" that only fail much later, far from the cause.
+/// Shared by [`Solver::try_solve`] and the coordinator service's submit
+/// path, so a poisoned matrix is refused at the boundary with a typed
+/// [`Error::Numerical`] instead of corrupting a batch.
+pub(crate) fn validate_input(a: &Mat) -> Result<()> {
+    if a.has_non_finite() {
+        return Err(crate::numerical_err!(
+            "matfn: input {}x{} contains a non-finite entry (NaN or infinity)",
+            a.rows(),
+            a.cols()
+        ));
+    }
+    Ok(())
 }
 
 fn validate(task: MatFnTask, spec: &SolverSpec) -> Result<()> {
@@ -250,6 +269,15 @@ impl Solver {
         self.run(a, None, rng, 0)
     }
 
+    /// [`Solver::solve`] with boundary validation: rejects inputs holding
+    /// NaN/±∞ entries with a typed [`Error::Numerical`] *before* any
+    /// iteration runs (and before any RNG is consumed), instead of
+    /// spinning `max_iters` on poisoned arithmetic.
+    pub fn try_solve(&mut self, a: &Mat, rng: &mut Rng) -> Result<MatFnOutput> {
+        validate_input(a)?;
+        Ok(self.solve(a, rng))
+    }
+
     /// Warm-start from `x0` (see [`MatFnSolver::solve_from`]).
     pub fn solve_from(&mut self, a: &Mat, x0: &Mat, rng: &mut Rng) -> MatFnOutput {
         self.run(a, Some(x0), rng, 0)
@@ -284,8 +312,12 @@ impl Solver {
         for a in inputs {
             assert_eq!(a.shape(), shape, "solve_batch: all inputs must share one shape");
         }
+        // Mixed-precision solves take the sequential fallback: the lockstep
+        // driver is an f64 engine, and the per-job stream contract already
+        // makes sequential execution observationally identical.
         if self.spec.method == Method::NewtonSchulz
             && self.spec.warm_iters == 0
+            && self.spec.precision == Precision::F64
             && inputs.len() > 1
         {
             return super::batch::ns_solve_batch(self, inputs, rng);
@@ -485,16 +517,19 @@ impl Solver {
         job: usize,
     ) -> MatFnOutput {
         let d = self.spec.d;
+        // The mixed drivers assemble the degree-1/2 update polynomial inline
+        // in f32; higher degrees (Paterson–Stockmeyer) and sign(A) stay on
+        // the f64 engines regardless of the spec — see [`Precision`].
+        let mixed = self.spec.precision == Precision::Mixed && d <= 2;
         match self.task {
             MatFnTask::Polar => {
                 let opts = PolarOpts { d, alpha, stop };
-                let out = polar_prism_in(
-                    a,
-                    &opts,
-                    rng,
-                    &mut self.ws,
-                    hooks_based(&mut self.observer, x0, base, job),
-                );
+                let h = hooks_based(&mut self.observer, x0, base, job);
+                let out = if mixed {
+                    polar_mixed_in(a, &opts, rng, &mut self.ws, h)
+                } else {
+                    polar_prism_in(a, &opts, rng, &mut self.ws, h)
+                };
                 MatFnOutput { primary: out.q, secondary: None, log: out.log }
             }
             MatFnTask::Sign => {
@@ -510,13 +545,12 @@ impl Solver {
             }
             MatFnTask::Sqrt | MatFnTask::InvSqrt => {
                 let opts = SqrtOpts { d, alpha, stop };
-                let out = sqrt_prism_in(
-                    a,
-                    &opts,
-                    rng,
-                    &mut self.ws,
-                    hooks(&mut self.observer, None, job),
-                );
+                let h = hooks(&mut self.observer, None, job);
+                let out = if mixed {
+                    sqrt_mixed_in(a, &opts, rng, &mut self.ws, h)
+                } else {
+                    sqrt_prism_in(a, &opts, rng, &mut self.ws, h)
+                };
                 let (primary, secondary) = if self.task == MatFnTask::Sqrt {
                     (out.sqrt, Some(out.inv_sqrt))
                 } else {
@@ -650,6 +684,99 @@ mod tests {
         // PrismNewton's polar fallback is PRISM-5, as documented.
         let s = Solver::for_backend(Backend::PrismNewton, MatFnTask::Polar, 10).unwrap();
         assert_eq!(s.name(), "prism5-polar");
+    }
+
+    #[test]
+    fn warm_iters_at_or_over_budget_runs_whole_solve_at_pinned_alpha() {
+        // warm_iters >= max_iters: the warm phase *is* the whole run — the
+        // solver must fall back to a single pinned-α pass, not chain an
+        // empty fitted phase (0 remaining iterations would underflow the
+        // phase-2 stop rule).
+        let mut rng = Rng::seed_from(11);
+        let a = randmat::gaussian(&mut rng, 20, 12);
+        let stop = StopRule::default().with_max_iters(4).with_tol(1e-12);
+        let (_, hi) = crate::coeffs::alpha_interval(2);
+        for warm in [4usize, 9] {
+            let mut s = Solver::new(
+                MatFnTask::Polar,
+                SolverSpec::prism(2).with_stop(stop).with_warm_iters(warm),
+            )
+            .unwrap();
+            let out = s.solve(&a, &mut Rng::seed_from(5));
+            assert!(out.log.iters() <= 4);
+            for &al in &out.log.alphas {
+                assert_eq!(al, hi, "whole run pins α at the upper bound");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_from_after_shape_change_resizes_cleanly() {
+        // The workspace recycles best-fit buffers; a warm start at a new
+        // shape must not reuse a stale-shaped panel.
+        let mut rng = Rng::seed_from(12);
+        let mut s = Solver::new(MatFnTask::Polar, SolverSpec::prism(2)).unwrap();
+        let a1 = randmat::gaussian(&mut rng, 24, 12);
+        let q1 = s.solve(&a1, &mut rng);
+        assert!(q1.log.converged);
+        let a2 = randmat::gaussian(&mut rng, 16, 8);
+        let cold = s.solve(&a2, &mut rng);
+        assert!(cold.log.converged);
+        let warm = s.solve_from(&a2, &cold.primary, &mut rng);
+        assert_eq!(warm.primary.shape(), (16, 8));
+        assert!(warm.log.converged);
+        assert!(
+            warm.log.iters() <= cold.log.iters(),
+            "warm start from the answer must not be slower than cold"
+        );
+        // And back to the first shape again: both directions of the resize.
+        assert!(s.solve_from(&a1, &q1.primary, &mut rng).log.converged);
+    }
+
+    #[test]
+    fn try_solve_rejects_non_finite_input_without_consuming_rng() {
+        let mut rng = Rng::seed_from(13);
+        let mut a = randmat::gaussian(&mut rng, 8, 8);
+        let mut s = Solver::new(MatFnTask::Polar, SolverSpec::prism(2)).unwrap();
+        for poison in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            a[(3, 5)] = poison;
+            let before = rng.clone();
+            let err = s.try_solve(&a, &mut rng).unwrap_err();
+            assert!(matches!(err, Error::Numerical(_)), "{err}");
+            assert!(err.to_string().contains("non-finite"), "{err}");
+            assert_eq!(
+                rng.normal(),
+                before.clone().normal(),
+                "rejection must not consume the RNG stream"
+            );
+            rng = before;
+        }
+        a[(3, 5)] = 0.0;
+        assert!(s.try_solve(&a, &mut rng).is_ok());
+    }
+
+    #[test]
+    fn mixed_precision_solver_reuse_is_allocation_free() {
+        use super::super::Precision;
+        let mut rng = Rng::seed_from(14);
+        let w = randmat::logspace(1e-2, 1.0, 12);
+        let a = randmat::sym_with_spectrum(&mut rng, 12, &w);
+        let stop = StopRule::default().with_max_iters(200);
+        let mut s = Solver::new(
+            MatFnTask::InvSqrt,
+            SolverSpec::prism(2).with_stop(stop).with_precision(Precision::Mixed),
+        )
+        .unwrap();
+        let first = s.solve(&a, &mut rng);
+        assert!(first.log.converged, "res={}", first.log.final_residual());
+        let allocs = s.workspace_allocations();
+        assert!(allocs > 0);
+        let again = s.solve(&a, &mut rng);
+        assert!(again.log.converged);
+        assert_eq!(s.workspace_allocations(), allocs, "warm mixed solves must not allocate");
+        // The coupled outputs still invert each other at mixed accuracy.
+        let prod = matmul(first.secondary.as_ref().unwrap(), &first.primary);
+        assert!(prod.sub(&Mat::eye(12)).max_abs() < 1e-6);
     }
 
     #[test]

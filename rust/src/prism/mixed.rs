@@ -1,0 +1,594 @@
+//! Mixed-precision Newton–Schulz drivers: **f32 iterate, f64 guard**.
+//!
+//! Polar Express (PAPERS.md) runs its NS-type sign iterations in bf16 on
+//! GPU; the same tolerance-to-low-precision argument applies to PRISM's
+//! polar and coupled-sqrt iterations on CPU, where f32 doubles the SIMD
+//! lanes per register (see the `linalg::gemm` module docs). These drivers
+//! are the `Precision::Mixed` backend behind `matfn::Solver`:
+//!
+//! * **What runs in f32** — the iterate storage (`X`, and `Y` for the
+//!   coupled sqrt), every update GEMM (`X·g_d(R;α)`, `g_d(R;α)·Y`, `R²`),
+//!   the update polynomial assembly, and the sketched α-fit's trace
+//!   propagation (the sketch itself is *drawn* in f64 so the RNG stream
+//!   matches the f64 path draw-for-draw, then downcast; traces accumulate
+//!   in f64).
+//! * **What stays in f64** — the residual: after every f32 update the
+//!   iterate is upcast (exactly) and `R = I − XᵀX` (polar) or `I − Y·X`
+//!   (sqrt) is recomputed entirely in f64. Every stopping decision —
+//!   convergence (`‖R‖_F < tol`), divergence (`> diverge_above` / NaN via
+//!   `RunRecorder::step_guard`), and the f32-floor stall detection — reads
+//!   only this f64 residual. The `IterationLog` therefore records f64-grade
+//!   residuals; no decision is ever made on f32 arithmetic.
+//! * **Cleanup** — f32 storage bounds how orthogonal/coupled the iterate
+//!   can get (the defect floor grows like `n · ε_f32`), so once the f32
+//!   phase converges to `max(tol, MIXED_F32_TOL)` or stalls at its floor,
+//!   one optional full-f64 iteration runs on the upcast iterate. One
+//!   NS step contracts the residual roughly quadratically, which carries
+//!   the typical f32 floor well below 1e-9 for the sizes the service
+//!   handles; the final residual and `converged` flag report whatever was
+//!   actually achieved, in f64.
+//!
+//! Only the NewtonSchulz family with `d ≤ 2` routes here (the degree-1/2
+//! update polynomial is assembled inline in f32); other methods and
+//! degrees stay on the f64 engines — `matfn::Solver` enforces that.
+
+use super::driver::{AlphaMode, EngineHooks, RunRecorder};
+use super::fit::{alpha_from_traces, select_alpha_ns, taylor_alpha, update_poly_into};
+use super::polar::{PolarOpts, PolarResult};
+use super::sqrt::{SqrtOpts, SqrtResult};
+use crate::coeffs::traces_needed;
+use crate::linalg::gemm::{global_engine, GemmEngine, Workspace};
+use crate::linalg::{Mat, Mat32};
+use crate::rng::Rng;
+use crate::sketch::SketchKind;
+
+/// The f32 phase's residual target floor. Below ~1e-5 an f32-stored
+/// iterate's defect is dominated by storage/GEMM round-off for moderate n,
+/// so pushing the f32 loop further wastes iterations — the f64 cleanup
+/// step covers the remaining decades. The effective f32-phase target is
+/// `max(stop.tol, MIXED_F32_TOL)`.
+pub const MIXED_F32_TOL: f64 = 1e-5;
+
+/// Residual level below which NS contraction is safely quadratic, so a
+/// stagnating f64 residual can only mean the f32 round-off floor — the
+/// stall guard (two consecutive < 2× improvements) engages only here,
+/// never in the slow early phase of an ill-conditioned spectrum.
+const STALL_ENGAGE_BELOW: f64 = 1e-2;
+
+/// One f32-phase α selection. Classic/Fixed are precision-free; Exact fits
+/// against exact f64 power traces of the f64 residual; the sketched modes
+/// draw the sketch **in f64 from `rng`** (identical stream consumption to
+/// the f64 path: p·n normals per fit), downcast it, and propagate the
+/// power traces through the f32 engine with f64 trace accumulation.
+#[allow(clippy::too_many_arguments)]
+fn select_alpha_mixed(
+    r32: &Mat32,
+    r64: &Mat,
+    d: usize,
+    mode: AlphaMode,
+    rng: &mut Rng,
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) -> f64 {
+    match mode {
+        AlphaMode::Classic => taylor_alpha(d),
+        AlphaMode::Fixed(a) => a,
+        AlphaMode::Exact => select_alpha_ns(r64, d, mode, rng, eng, ws),
+        AlphaMode::Sketched { p } => {
+            sketched_alpha_mixed(r32, d, p, SketchKind::Gaussian, rng, eng, ws)
+        }
+        AlphaMode::SketchedKind { p, kind } => sketched_alpha_mixed(r32, d, p, kind, rng, eng, ws),
+    }
+}
+
+/// Sketched α on the f32 residual: f64 sketch draw → downcast → f32 trace
+/// propagation ([`power_traces32_into`]) → f64 quartic fit.
+fn sketched_alpha_mixed(
+    r32: &Mat32,
+    d: usize,
+    p: usize,
+    kind: SketchKind,
+    rng: &mut Rng,
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) -> f64 {
+    let n = r32.rows();
+    let q = traces_needed(d);
+    let mut s64 = ws.take(p, n);
+    kind.fill(&mut s64, rng);
+    let mut s32 = ws.take_f32(p, n);
+    s32.copy_from_f64(&s64);
+    let mut t = ws.take(1, q);
+    power_traces32_into(&s32, r32, t.as_mut_slice(), eng, ws);
+    let alpha = alpha_from_traces(t.as_slice(), d);
+    ws.put(s64);
+    ws.put_f32(s32);
+    ws.put(t);
+    alpha
+}
+
+/// f32 twin of `sketch::power_traces_into`: propagate the p×n sketch
+/// through `R` in f32 (`Y_{j+1} = Y_j · R`, the thin-A fast path) and
+/// accumulate each trace estimate `Σ_i s_i · y_i` in **f64**, so the
+/// quartic fit sees full-precision trace values over f32-round-off
+/// iterates.
+fn power_traces32_into(
+    s: &Mat32,
+    r: &Mat32,
+    out: &mut [f64],
+    eng: &GemmEngine,
+    ws: &mut Workspace,
+) {
+    assert!(r.is_square(), "power traces: square residual required");
+    assert_eq!(r.rows(), s.cols(), "power traces: sketch width mismatch");
+    let (p, n) = s.shape();
+    let mut yt = ws.take_f32(p, n);
+    yt.copy_from(s);
+    let mut yn = ws.take_f32(p, n);
+    for slot in out.iter_mut() {
+        eng.matmul_f32_into(&mut yn, &yt, r);
+        std::mem::swap(&mut yt, &mut yn);
+        *slot = s
+            .as_slice()
+            .iter()
+            .zip(yt.as_slice())
+            .map(|(&a, &b)| (a as f64) * (b as f64))
+            .sum();
+    }
+    ws.put_f32(yt);
+    ws.put_f32(yn);
+}
+
+/// Assemble `g_d(R; α)` in f32 for d ≤ 2 (the inline twin of
+/// `fit::update_poly_into`'s elementwise arms; `r2` must be `R²` for d=2).
+fn update_poly32(g: &mut Mat32, r: &Mat32, r2: Option<&Mat32>, d: usize, alpha: f64) {
+    match d {
+        1 => {
+            g.copy_from(r);
+            g.scale(alpha as f32);
+            g.add_diag(1.0);
+        }
+        2 => {
+            let r2 = r2.expect("d=2 needs R²");
+            g.copy_from(r);
+            g.scale(0.5);
+            g.axpy(alpha as f32, r2);
+            g.add_diag(1.0);
+        }
+        _ => unreachable!("mixed precision supports d <= 2"),
+    }
+}
+
+/// Whether the f32 phase should hand over: converged to its target,
+/// or stalled at the f32 round-off floor (two consecutive sub-2×
+/// improvements while already in the quadratic regime).
+struct F32Phase {
+    target: f64,
+    prev: f64,
+    stall: usize,
+}
+
+impl F32Phase {
+    fn new(tol: f64) -> F32Phase {
+        F32Phase { target: tol.max(MIXED_F32_TOL), prev: f64::INFINITY, stall: 0 }
+    }
+    /// Called at the top of each f32 iteration with the current f64
+    /// residual; `true` ends the f32 phase.
+    fn done(&mut self, res: f64) -> bool {
+        if res < self.target {
+            return true;
+        }
+        if res < STALL_ENGAGE_BELOW {
+            if res > 0.5 * self.prev {
+                self.stall += 1;
+            } else {
+                self.stall = 0;
+            }
+            if self.stall >= 2 {
+                return true;
+            }
+        }
+        self.prev = res;
+        false
+    }
+}
+
+/// Mixed-precision polar factor: the `Precision::Mixed` backend for
+/// [`super::polar::polar_prism_in`] — same signature, same result contract,
+/// f64-grade stopping decisions (see the module docs).
+pub(crate) fn polar_mixed_in(
+    a: &Mat,
+    opts: &PolarOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> PolarResult {
+    assert!(opts.d <= 2, "mixed precision supports d <= 2");
+    let (m, n) = a.shape();
+    if m < n {
+        // Wide input: transpose, recurse, transpose back — identical to the
+        // f64 driver's orientation handling.
+        let EngineHooks { x0, observer, event_base, job } = hooks;
+        let mut at = ws.take(n, m);
+        a.transpose_into(&mut at);
+        let x0t = x0.map(|x0| {
+            assert_eq!(x0.shape(), (m, n), "polar: x0 shape mismatch");
+            let mut t = ws.take(n, m);
+            x0.transpose_into(&mut t);
+            t
+        });
+        // The `match` re-coerces the observer's trait-object lifetime for
+        // the shorter-lived recursive hooks (Option's variance cannot).
+        let hooks_t = EngineHooks {
+            x0: x0t.as_ref(),
+            observer: match observer {
+                Some(o) => Some(o),
+                None => None,
+            },
+            event_base,
+            job,
+        };
+        let r = polar_mixed_in(&at, opts, rng, ws, hooks_t);
+        ws.put(at);
+        if let Some(t) = x0t {
+            ws.put(t);
+        }
+        return PolarResult { q: r.q.transpose(), log: r.log, transposed: true };
+    }
+    let eng = global_engine();
+
+    // f64 side: the guard's iterate copy and residual.
+    let mut x64 = ws.take(m, n);
+    match hooks.x0 {
+        Some(x0) => {
+            assert_eq!(x0.shape(), (m, n), "polar: x0 shape mismatch");
+            x64.copy_from(x0);
+        }
+        None => {
+            x64.copy_from(a);
+            x64.scale(1.0 / a.fro_norm().max(1e-300));
+        }
+    }
+    let mut r64 = ws.take(n, n);
+    eng.syrk_at_a_into(&mut r64, &x64);
+    r64.scale(-1.0);
+    r64.add_diag(1.0);
+
+    // f32 side: the working iterate and its loop temporaries.
+    let mut x32 = ws.take_f32(m, n);
+    x32.copy_from_f64(&x64);
+    let mut xn32 = ws.take_f32(m, n);
+    let mut g32 = ws.take_f32(n, n);
+    let mut r32 = ws.take_f32(n, n);
+    let mut r232 = if opts.d == 2 { Some(ws.take_f32(n, n)) } else { None };
+
+    let mut rec = RunRecorder::start(r64.fro_norm())
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base)
+        .with_job(hooks.job);
+    let budget = opts.stop.max_iters.saturating_sub(1); // reserve the cleanup step
+    let mut phase = F32Phase::new(opts.stop.tol);
+    for _ in 0..budget {
+        if phase.done(r64.fro_norm()) {
+            break;
+        }
+        // Downcast the *f64* residual each iteration: the α fit and the f32
+        // update both see the guard's residual, not an f32-accumulated one.
+        r32.copy_from_f64(&r64);
+        let alpha = select_alpha_mixed(&r32, &r64, opts.d, opts.alpha, rng, &eng, ws);
+        if let Some(r2buf) = r232.as_mut() {
+            eng.matmul_f32_into(r2buf, &r32, &r32);
+        }
+        update_poly32(&mut g32, &r32, r232.as_ref(), opts.d, alpha);
+        eng.matmul_f32_into(&mut xn32, &x32, &g32);
+        std::mem::swap(&mut x32, &mut xn32);
+        // Exact upcast, then a full-f64 residual for every decision below.
+        x32.write_f64_into(&mut x64);
+        eng.syrk_at_a_into(&mut r64, &x64);
+        r64.scale(-1.0);
+        r64.add_diag(1.0);
+        if rec.step_guard(&opts.stop, alpha, r64.fro_norm()) {
+            break;
+        }
+    }
+
+    // Optional f64 cleanup: one full-precision iteration on the upcast
+    // iterate when the f32 phase stopped short of the caller's tolerance.
+    let res = r64.fro_norm();
+    if res.is_finite() && res <= opts.stop.diverge_above && res >= opts.stop.tol {
+        let mut xn64 = ws.take(m, n);
+        let mut g64 = ws.take(n, n);
+        let mut r264 = if opts.d == 2 { Some(ws.take(n, n)) } else { None };
+        let alpha = select_alpha_ns(&r64, opts.d, opts.alpha, rng, &eng, ws);
+        if let Some(r2buf) = r264.as_mut() {
+            eng.matmul_into(r2buf, &r64, &r64);
+        }
+        update_poly_into(&mut g64, &r64, r264.as_ref(), opts.d, alpha, &eng, ws);
+        eng.matmul_into(&mut xn64, &x64, &g64);
+        std::mem::swap(&mut x64, &mut xn64);
+        eng.syrk_at_a_into(&mut r64, &x64);
+        r64.scale(-1.0);
+        r64.add_diag(1.0);
+        rec.step_guard(&opts.stop, alpha, r64.fro_norm());
+        ws.put(xn64);
+        ws.put(g64);
+        if let Some(b) = r264 {
+            ws.put(b);
+        }
+    }
+
+    let out = PolarResult { q: x64.clone(), log: rec.finish(&opts.stop), transposed: false };
+    ws.put(x64);
+    ws.put(r64);
+    ws.put_f32(x32);
+    ws.put_f32(xn32);
+    ws.put_f32(g32);
+    ws.put_f32(r32);
+    if let Some(b) = r232 {
+        ws.put_f32(b);
+    }
+    out
+}
+
+/// Mixed-precision coupled sqrt/inv-sqrt: the `Precision::Mixed` backend
+/// for [`super::sqrt::sqrt_prism_in`] — same signature and result contract
+/// (including the Y-first Higham residual pairing), f64-grade stopping
+/// decisions. Like the f64 core, the coupled iteration ignores `hooks.x0`.
+pub(crate) fn sqrt_mixed_in(
+    a: &Mat,
+    opts: &SqrtOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> SqrtResult {
+    assert!(a.is_square(), "sqrt: square input required");
+    assert!(opts.d <= 2, "mixed precision supports d <= 2");
+    let eng = global_engine();
+    let n = a.rows();
+    let c = a.fro_norm().max(1e-300);
+
+    // f64 side: guard copies of both coupled iterates plus the residual.
+    let mut x64 = ws.take(n, n);
+    x64.copy_from(a);
+    x64.scale(1.0 / c);
+    let mut y64 = ws.take(n, n);
+    y64.fill_with(0.0);
+    y64.add_diag(1.0);
+    let mut r64 = ws.take(n, n);
+    // Y-first pairing (I − Y·X): the numerically stable residual — see the
+    // f64 driver's note; the guard must measure the same quantity.
+    eng.matmul_into(&mut r64, &y64, &x64);
+    r64.scale(-1.0);
+    r64.add_diag(1.0);
+    r64.symmetrize();
+
+    // f32 side.
+    let mut x32 = ws.take_f32(n, n);
+    x32.copy_from_f64(&x64);
+    let mut y32 = ws.take_f32(n, n);
+    y32.copy_from_f64(&y64);
+    let mut xn32 = ws.take_f32(n, n);
+    let mut yn32 = ws.take_f32(n, n);
+    let mut g32 = ws.take_f32(n, n);
+    let mut r32 = ws.take_f32(n, n);
+    let mut r232 = if opts.d == 2 { Some(ws.take_f32(n, n)) } else { None };
+
+    let mut rec = RunRecorder::start(r64.fro_norm())
+        .with_observer(hooks.observer)
+        .with_event_base(hooks.event_base)
+        .with_job(hooks.job);
+    let budget = opts.stop.max_iters.saturating_sub(1);
+    let mut phase = F32Phase::new(opts.stop.tol);
+    for _ in 0..budget {
+        if phase.done(r64.fro_norm()) {
+            break;
+        }
+        r32.copy_from_f64(&r64);
+        let alpha = select_alpha_mixed(&r32, &r64, opts.d, opts.alpha, rng, &eng, ws);
+        if let Some(r2buf) = r232.as_mut() {
+            eng.matmul_f32_into(r2buf, &r32, &r32);
+        }
+        update_poly32(&mut g32, &r32, r232.as_ref(), opts.d, alpha);
+        eng.matmul_f32_into(&mut xn32, &x32, &g32);
+        std::mem::swap(&mut x32, &mut xn32);
+        eng.matmul_f32_into(&mut yn32, &g32, &y32);
+        std::mem::swap(&mut y32, &mut yn32);
+        x32.write_f64_into(&mut x64);
+        y32.write_f64_into(&mut y64);
+        eng.matmul_into(&mut r64, &y64, &x64);
+        r64.scale(-1.0);
+        r64.add_diag(1.0);
+        r64.symmetrize();
+        if rec.step_guard(&opts.stop, alpha, r64.fro_norm()) {
+            break;
+        }
+    }
+
+    // Optional f64 cleanup iteration on both coupled iterates.
+    let res = r64.fro_norm();
+    if res.is_finite() && res <= opts.stop.diverge_above && res >= opts.stop.tol {
+        let mut xn64 = ws.take(n, n);
+        let mut yn64 = ws.take(n, n);
+        let mut g64 = ws.take(n, n);
+        let mut r264 = if opts.d == 2 { Some(ws.take(n, n)) } else { None };
+        let alpha = select_alpha_ns(&r64, opts.d, opts.alpha, rng, &eng, ws);
+        if let Some(r2buf) = r264.as_mut() {
+            eng.matmul_into(r2buf, &r64, &r64);
+        }
+        update_poly_into(&mut g64, &r64, r264.as_ref(), opts.d, alpha, &eng, ws);
+        eng.matmul_into(&mut xn64, &x64, &g64);
+        std::mem::swap(&mut x64, &mut xn64);
+        eng.matmul_into(&mut yn64, &g64, &y64);
+        std::mem::swap(&mut y64, &mut yn64);
+        eng.matmul_into(&mut r64, &y64, &x64);
+        r64.scale(-1.0);
+        r64.add_diag(1.0);
+        r64.symmetrize();
+        rec.step_guard(&opts.stop, alpha, r64.fro_norm());
+        ws.put(xn64);
+        ws.put(yn64);
+        ws.put(g64);
+        if let Some(b) = r264 {
+            ws.put(b);
+        }
+    }
+
+    let sc = c.sqrt();
+    let out = SqrtResult {
+        sqrt: x64.scaled(sc),
+        inv_sqrt: y64.scaled(1.0 / sc),
+        log: rec.finish(&opts.stop),
+    };
+    ws.put(x64);
+    ws.put(y64);
+    ws.put(r64);
+    ws.put_f32(x32);
+    ws.put_f32(y32);
+    ws.put_f32(xn32);
+    ws.put_f32(yn32);
+    ws.put_f32(g32);
+    ws.put_f32(r32);
+    if let Some(b) = r232 {
+        ws.put_f32(b);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::eigen_fn;
+    use crate::linalg::svd::svd;
+    use crate::prism::driver::StopRule;
+    use crate::prism::polar::{orthogonality_error, polar_prism_in};
+    use crate::prism::sqrt::sqrt_prism_in;
+    use crate::ptest::gens;
+    use crate::randmat;
+
+    fn polar_mixed(a: &Mat, opts: &PolarOpts, rng: &mut Rng) -> PolarResult {
+        polar_mixed_in(a, opts, rng, &mut Workspace::new(), EngineHooks::none())
+    }
+
+    fn sqrt_mixed(a: &Mat, opts: &SqrtOpts, rng: &mut Rng) -> SqrtResult {
+        sqrt_mixed_in(a, opts, rng, &mut Workspace::new(), EngineHooks::none())
+    }
+
+    #[test]
+    fn mixed_polar_matches_svd_ground_truth() {
+        // Conformance vs SVD at the documented mixed tolerance: the f64
+        // cleanup step carries the f32 floor below 1e-8 for these sizes.
+        let mut rng = Rng::seed_from(41);
+        let a = gens::ill_conditioned(&mut rng, 24, 16, 50.0);
+        let opts = PolarOpts::degree5()
+            .with_stop(StopRule::default().with_max_iters(200).with_tol(1e-8));
+        let out = polar_mixed(&a, &opts, &mut rng);
+        assert!(out.log.converged, "res={}", out.log.final_residual());
+        let exact = svd(&a).polar_factor();
+        assert!(out.q.sub(&exact).max_abs() < 1e-5);
+        assert!(orthogonality_error(&out.q) < 1e-6);
+    }
+
+    #[test]
+    fn mixed_polar_close_to_f64_solve() {
+        let mut rng = Rng::seed_from(42);
+        let a = randmat::gaussian(&mut rng, 32, 20);
+        let stop = StopRule::default().with_max_iters(200).with_tol(1e-8);
+        let opts = PolarOpts::degree5().with_stop(stop);
+        let mixed = polar_mixed(&a, &opts, &mut Rng::seed_from(7));
+        let full = polar_prism_in(
+            &a,
+            &opts,
+            &mut Rng::seed_from(7),
+            &mut Workspace::new(),
+            EngineHooks::none(),
+        );
+        assert!(mixed.log.converged && full.log.converged);
+        assert!(
+            mixed.q.sub(&full.q).max_abs() < 1e-5,
+            "mixed vs f64 gap {}",
+            mixed.q.sub(&full.q).max_abs()
+        );
+    }
+
+    #[test]
+    fn mixed_sqrt_matches_eigen_ground_truth() {
+        let mut rng = Rng::seed_from(43);
+        let a = gens::spd(&mut rng, 12, 1e-2);
+        let opts = SqrtOpts::degree5()
+            .with_stop(StopRule::default().with_max_iters(200).with_tol(1e-9));
+        let out = sqrt_mixed(&a, &opts, &mut rng);
+        assert!(out.log.converged, "res={}", out.log.final_residual());
+        assert!(out.sqrt.sub(&eigen_fn::sqrt_eigen(&a)).max_abs() < 1e-5);
+        assert!(out.inv_sqrt.sub(&eigen_fn::inv_sqrt_eigen(&a, 0.0)).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn mixed_sqrt_close_to_f64_solve() {
+        let mut rng = Rng::seed_from(44);
+        let a = gens::spd(&mut rng, 16, 1e-3);
+        let stop = StopRule::default().with_max_iters(200).with_tol(1e-9);
+        let opts = SqrtOpts::degree5().with_stop(stop);
+        let mixed = sqrt_mixed(&a, &opts, &mut Rng::seed_from(9));
+        let full = sqrt_prism_in(
+            &a,
+            &opts,
+            &mut Rng::seed_from(9),
+            &mut Workspace::new(),
+            EngineHooks::none(),
+        );
+        assert!(mixed.log.converged && full.log.converged);
+        assert!(mixed.inv_sqrt.sub(&full.inv_sqrt).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn mixed_wide_polar_handled_by_transpose() {
+        let mut rng = Rng::seed_from(45);
+        let a = randmat::gaussian(&mut rng, 10, 30);
+        let out = polar_mixed(&a, &PolarOpts::degree5(), &mut rng);
+        assert!(out.transposed);
+        assert_eq!(out.q.shape(), (10, 30));
+        assert!(orthogonality_error(&out.q) < 1e-4);
+    }
+
+    #[test]
+    fn guard_residuals_are_f64_grade_and_stall_guard_fires() {
+        // The log's residual trajectory comes from the f64 guard: it must
+        // end below the f32 floor (impossible to *measure* in f32-only
+        // arithmetic at this tolerance) and be finite everywhere. Also pin
+        // the f32-phase structure: once below MIXED_F32_TOL the loop hands
+        // over, so at most one iteration's residual sits in
+        // [tol, MIXED_F32_TOL) before the cleanup step ends the log.
+        let mut rng = Rng::seed_from(46);
+        let a = randmat::gaussian(&mut rng, 24, 24);
+        let opts = PolarOpts::degree5()
+            .with_stop(StopRule::default().with_max_iters(100).with_tol(1e-9));
+        let out = polar_mixed(&a, &opts, &mut rng);
+        assert!(out.log.converged);
+        assert!(out.log.final_residual() < 1e-9);
+        for &r in &out.log.residuals {
+            assert!(r.is_finite());
+        }
+        // The last recorded step is the f64 cleanup: it must jump from the
+        // f32-phase plateau (≥ tol) straight below tol in one step.
+        let k = out.log.residuals.len();
+        assert!(k >= 2);
+        assert!(out.log.residuals[k - 2] >= 1e-9, "cleanup ran from above tol");
+    }
+
+    #[test]
+    fn f32_phase_stall_detector_engages_only_in_quadratic_regime() {
+        let mut p = F32Phase::new(1e-12);
+        // Slow early-phase decrease far above the engage threshold: never
+        // a stall, no matter how slight the improvement.
+        assert!(!p.done(1.0));
+        assert!(!p.done(0.999));
+        assert!(!p.done(0.998));
+        // Quadratic regime: two consecutive sub-2× improvements stop it.
+        assert!(!p.done(1e-3));
+        assert!(!p.done(0.9e-3));
+        assert!(p.done(0.89e-3));
+        // Converged target always stops immediately.
+        let mut q = F32Phase::new(1e-6);
+        assert!(q.done(0.5e-6));
+    }
+}

@@ -36,9 +36,16 @@
 //! | [`inverse_newton`] | A^{-1/p} | row 5 | `invnewton-invroot2`, … |
 //! | [`db_newton`] | A^{1/2}, A^{-1/2} | row 6 | `newton-sqrt`, `newton-invsqrt`, … |
 //! | [`chebyshev`] | A⁻¹ | row 7 | `cheb-inverse`, … |
+//!
+//! [`mixed`] holds the f32-iterate / f64-guard twins of the polar and
+//! coupled-sqrt engines — the `Precision::Mixed` backend selected through
+//! [`crate::matfn::SolverSpec::with_precision`], not a separate engine row
+//! (same iterations, different arithmetic; see its module docs for the
+//! accuracy contract).
 
 pub mod driver;
 pub mod fit;
+pub mod mixed;
 pub mod sign;
 pub mod polar;
 pub mod sqrt;

@@ -14,10 +14,10 @@
 //! compared to the naive reference at tolerance instead.
 
 use prism::linalg::gemm::{
-    gemm_broadcast, matmul, matmul_a_bt, matmul_at_b, matmul_naive, syrk_a_at, syrk_at_a,
-    GemmBlocking, GemmEngine, GemmScope, MicroKernel, Workspace,
+    gemm_broadcast, matmul, matmul_a_bt, matmul_at_b, matmul_naive, matmul_naive32, syrk_a_at,
+    syrk_at_a, GemmBlocking, GemmEngine, GemmScope, MicroKernel, Workspace,
 };
-use prism::linalg::Mat;
+use prism::linalg::{Mat, Mat32};
 use prism::ptest::{gens, Prop};
 use prism::rng::Rng;
 
@@ -86,6 +86,109 @@ fn adversarial_shapes_match_naive_and_pools_agree() {
             }
         }
     }
+}
+
+/// Tolerance for f32-vs-f32-naive comparisons on the adversarial grid. Both
+/// sides round in f32, so the gap is pure summation-order noise: with k ≤ 100
+/// unit-Gaussian terms the worst case is ~k·ε_f32·‖row‖·‖col‖ ≈ 4e-5 — 1e-3
+/// leaves a wide margin without masking a broken kernel (a wrong tile shows
+/// up at O(1)).
+const F32_TOL: f64 = 1e-3;
+
+/// The dtype axis of the adversarial grid: the f32 instantiation of every
+/// packed/skinny matmul route vs `matmul_naive32`, once per available kernel,
+/// with pool sizes 1/2/4 bit-identical (the same partition-independence
+/// contract the f64 engine pins).
+#[test]
+fn adversarial_shapes_f32_match_naive32_and_pools_agree() {
+    for kern in MicroKernel::available() {
+        let engines = engines_for(kern);
+        let mut rng = Rng::seed_from(5);
+        for &m in ADVERSARIAL {
+            for &k in ADVERSARIAL {
+                for &n in ADVERSARIAL {
+                    let a = Mat32::from_f64(&Mat::gaussian(&mut rng, m, k, 1.0));
+                    let b = Mat32::from_f64(&Mat::gaussian(&mut rng, k, n, 1.0));
+                    let base = engines[0].matmul_f32(&a, &b);
+                    assert_close(
+                        &base.to_f64(),
+                        &matmul_naive32(&a, &b).to_f64(),
+                        F32_TOL,
+                        &format!("{} f32 {m}x{k}x{n}", kern.name()),
+                    );
+                    for e in &engines[1..] {
+                        assert_eq!(
+                            base.as_slice(),
+                            e.matmul_f32(&a, &b).as_slice(),
+                            "{} f32 matmul {m}x{k}x{n} differs at {} threads",
+                            kern.name(),
+                            e.threads()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The f32 SYRK over the adversarial (k, n) grid, per kernel: value vs the
+/// f64 naive reference at f32 tolerance, exact symmetry (the f32 mirror
+/// copies the upper triangle bit-for-bit), and pool-size determinism.
+#[test]
+fn adversarial_syrk_f32_matches_reference() {
+    for kern in MicroKernel::available() {
+        let engines = engines_for(kern);
+        let mut rng = Rng::seed_from(6);
+        for &k in ADVERSARIAL {
+            for &n in ADVERSARIAL {
+                let a64 = Mat::gaussian(&mut rng, k, n, 1.0);
+                let a = Mat32::from_f64(&a64);
+                let base = engines[0].syrk_at_a_f32(&a);
+                let up = base.to_f64();
+                assert_close(
+                    &up,
+                    &matmul_naive(&a.to_f64().transpose(), &a.to_f64()),
+                    F32_TOL,
+                    &format!("{} f32 syrk_at_a {k}x{n}", kern.name()),
+                );
+                assert_eq!(up.symmetry_defect(), 0.0, "{} f32 syrk symmetry", kern.name());
+                for e in &engines[1..] {
+                    assert_eq!(
+                        base.as_slice(),
+                        e.syrk_at_a_f32(&a).as_slice(),
+                        "{} f32 syrk {k}x{n} differs at {} threads",
+                        kern.name(),
+                        e.threads()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// f32 `_into` entry points reuse caller buffers and match the allocating
+/// APIs bit-for-bit; the f32 side of the workspace pools buffers exactly
+/// like the f64 side.
+#[test]
+fn f32_into_apis_match_allocating_apis() {
+    let mut rng = Rng::seed_from(7);
+    let eng = GemmEngine::sequential();
+    let a = Mat32::from_f64(&Mat::gaussian(&mut rng, 13, 7, 1.0));
+    let b = Mat32::from_f64(&Mat::gaussian(&mut rng, 7, 11, 1.0));
+    let mut c = Mat32::zeros(0, 0);
+
+    eng.matmul_f32_into(&mut c, &a, &b);
+    assert_eq!(c.as_slice(), eng.matmul_f32(&a, &b).as_slice());
+
+    eng.syrk_at_a_f32_into(&mut c, &a);
+    assert_eq!(c.as_slice(), eng.syrk_at_a_f32(&a).as_slice());
+
+    let mut ws = Workspace::new();
+    let buf = ws.take_f32(4, 4);
+    ws.put_f32(buf);
+    let buf = ws.take_f32(4, 4); // recycled, not a fresh allocation
+    ws.put_f32(buf);
+    assert_eq!(ws.allocations(), 1);
 }
 
 /// Transposed packing paths (`AᵀB`, `ABᵀ`) over the adversarial (m, n) grid

@@ -62,6 +62,47 @@ fn smoke_every_kernel_and_skinny_path_correct() {
 }
 
 #[test]
+fn smoke_f32_kernel_and_skinny_path_correct() {
+    // The f32 instantiation of the same dispatch: blocked, thin-A (sketch
+    // shape), and GEMV routes per available kernel, against the f32 naive
+    // reference at single-precision tolerance.
+    use prism::linalg::gemm::matmul_naive32;
+    use prism::linalg::Mat32;
+    let mut rng = Rng::seed_from(7);
+    let a = Mat32::from_f64(&Mat::gaussian(&mut rng, 24, 20, 1.0));
+    let b = Mat32::from_f64(&Mat::gaussian(&mut rng, 20, 18, 1.0));
+    let s = Mat32::from_f64(&Mat::gaussian(&mut rng, 8, 24, 1.0));
+    let v = Mat32::from_f64(&Mat::gaussian(&mut rng, 20, 1, 1.0));
+    for kern in MicroKernel::available() {
+        let eng = GemmEngine::sequential().with_kernel(kern);
+        for (lhs, rhs, route) in
+            [(&a, &b, "blocked"), (&s, &a, "thin-A (sketch shape)"), (&a, &v, "gemv")]
+        {
+            let got = eng.matmul_f32(lhs, rhs).to_f64();
+            let want = matmul_naive32(lhs, rhs).to_f64();
+            assert!(got.sub(&want).max_abs() < 1e-4, "{} {} f32", kern.name(), route);
+        }
+    }
+}
+
+#[test]
+fn smoke_mixed_precision_invsqrt_vs_eigen() {
+    // The f32-iterate / f64-guard path through the public Solver API: the
+    // f64 guard must still certify the tight inverse-root tolerance, and
+    // the iterate must match the eigendecomposition ground truth.
+    let mut rng = Rng::seed_from(8);
+    let a = gens::spd(&mut rng, 10, 1e-2);
+    let exact = eigen_fn::inv_sqrt_eigen(&a, 0.0);
+    let stop = StopRule::default().with_max_iters(200).with_tol(1e-9);
+    let spec = SolverSpec::prism(2).with_stop(stop).with_precision(prism::matfn::Precision::Mixed);
+    let mut solver = prism::matfn::Solver::new(prism::matfn::MatFnTask::InvSqrt, spec).unwrap();
+    let out = solver.solve(&a, &mut rng);
+    assert!(out.log.converged, "res={}", out.log.final_residual());
+    assert!(out.log.final_residual() < 1e-9);
+    assert!(out.primary.sub(&exact).max_abs() < 1e-4);
+}
+
+#[test]
 fn smoke_gemm_counter_scoped() {
     let mut rng = Rng::seed_from(2);
     let a = Mat::gaussian(&mut rng, 6, 6, 1.0);
@@ -122,7 +163,8 @@ fn smoke_service_round_trip() {
         max_batch: 2,
         sketch_p: 8,
         max_iters: 40,
-        tol: 1e-7,
+        tol: None, // per-task defaults (1e-9 for this InvSqrt traffic)
+        precision: prism::matfn::Precision::F64,
         solver_cache_cap: 32,
         gemm_threads: 1,
         stream_residuals: false,
