@@ -12,11 +12,17 @@
 //! `bench_out/BENCH_matfn.json` CI uploads as an artifact with a `dtype`
 //! key on every row.
 //!
+//! A second section covers the rectangular-polar subsystem: the Gram route
+//! (`prism5-rectpolar` on a tall p·aspect × p operand) against the same
+//! solve square-padded to m × m, emitted as rows with `aspect`, `route` and
+//! `speedup_vs_square` keys (the `rect` axis CI greps for).
+//!
 //! Run: `cargo bench --bench perf_matfn [-- --full | -- --smoke]`
 //! (`--full`: adds n = 1024; `--smoke`: tiny size for the CI smoke step).
 
 use prism::benchkit::{banner, Bench, JsonReport, Table};
 use prism::configfmt::Value;
+use prism::linalg::Mat;
 use prism::matfn::{registry, Precision};
 use prism::prism::StopRule;
 use prism::randmat;
@@ -120,6 +126,75 @@ fn main() {
     println!("iteration buffers). The reused column must be 0 at BOTH precisions — that");
     println!("is the persistent solver contract the optimizer/service hot paths rely on.");
     println!("'mixed' rows run the f32 iterate + f64 guard path (matfn::Precision docs).");
+
+    // --- Rectangular polar: Gram route vs the square-padded baseline -----
+    // Same fixed iteration budget; the square baseline embeds the tall
+    // operand into an identity-padded m×m matrix (the pre-subsystem way to
+    // push a rectangular param through a square-only polar solver).
+    let mut rt =
+        Table::new(&["solver", "dtype", "aspect", "route", "rect ms", "square ms", "speedup"]);
+    let p: usize = if smoke { 12 } else { 48 };
+    let aspects: &[usize] = if smoke { &[2] } else { &[2, 4, 8] };
+    for &aspect in aspects {
+        let m = p * aspect;
+        let mut rng = Rng::seed_from(11);
+        let s = randmat::logspace(0.1, 1.0, p);
+        let a = randmat::with_spectrum(&mut rng, m, p, &s);
+        // Identity-padded embedding: B[:, :p] = A, B[j, j] = 1 for j ≥ p.
+        let mut b = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..p {
+                b[(i, j)] = a[(i, j)];
+            }
+        }
+        for j in p..m {
+            b[(j, j)] = 1.0;
+        }
+
+        let mut rect = registry::resolve("prism5-rectpolar").unwrap();
+        rect.set_stop(stop);
+        let _ = rect.solve(&a, &mut rng);
+        let warm_base = rect.workspace_allocations();
+        let gram = bench.run(&format!("rect_gram_{m}x{p}"), || {
+            std::hint::black_box(rect.solve(&a, &mut rng).log.iters());
+        });
+        assert_eq!(
+            rect.workspace_allocations() - warm_base,
+            0,
+            "warm rectpolar solver must not touch the allocator"
+        );
+
+        let mut square = registry::resolve("prism5-polar").unwrap();
+        square.set_stop(stop);
+        let _ = square.solve(&b, &mut rng);
+        let sq = bench.run(&format!("rect_square_{m}"), || {
+            std::hint::black_box(square.solve(&b, &mut rng).log.iters());
+        });
+
+        rt.row(&[
+            "prism5-rectpolar".into(),
+            "f64".into(),
+            format!("{aspect}"),
+            "gram".into(), // aspect ≥ 2 always resolves to the Gram route
+            format!("{:.2}", gram.median_s() * 1e3),
+            format!("{:.2}", sq.median_s() * 1e3),
+            format!("{:.2}x", sq.median_s() / gram.median_s()),
+        ]);
+        report.entry(&[
+            ("solver", Value::Str("prism5-rectpolar".into())),
+            ("dtype", Value::Str("f64".into())),
+            ("aspect", Value::Int(aspect as i64)),
+            ("route", Value::Str("gram".into())),
+            ("rect_ms", Value::Float(gram.median_s() * 1e3)),
+            ("square_ms", Value::Float(sq.median_s() * 1e3)),
+            ("speedup_vs_square", Value::Float(sq.median_s() / gram.median_s())),
+        ]);
+    }
+    rt.print();
+    println!("\nNotes: 'square ms' solves the identity-padded m×m embedding with the");
+    println!("square polar solver; 'rect ms' takes the Gram route (syrk + p×p solve +");
+    println!("one skinny GEMM). perf_rect has the full aspect sweep with flop counts.");
+
     match report.finish() {
         Some(path) => println!("report → {path}"),
         None => println!("report → (unwritable bench_out/, skipped)"),

@@ -1,0 +1,151 @@
+//! Rectangular polar: Gram-route speedup over the square-padded baseline
+//! (the Fig. 6-style table for the rect subsystem).
+//!
+//! A tall m × p operand (aspect = m/p ∈ {2, 4, 8}) is orthogonalized two
+//! ways under the same fixed iteration budget:
+//!
+//! * **rect** — `<method>-rectpolar`: the Gram route forms G = AᵀA by SYRK
+//!   (p²m flops), iterates G^{-1/2} on the p × p Gram matrix (O(p³) per
+//!   step), and finishes with one skinny GEMM A·G^{-1/2} (2mp²).
+//! * **square** — `<method>-polar` on the identity-padded m × m embedding
+//!   (B[:, :p] = A, B[j, j] = 1 for j ≥ p): the pre-subsystem way to push a
+//!   rectangular param through a square-only solver, O(m³) per step.
+//!
+//! Besides wall time the table reports per-call GEMM flops from
+//! [`GemmScope`] — the acceptance gate: the Gram route must spend strictly
+//! fewer flops than the padded route at every aspect ≥ 2. Rows land in
+//! `bench_out/BENCH_rect.json` with an `aspect` key (CI greps `"aspect":8`).
+//!
+//! Run: `cargo bench --bench perf_rect [-- --full | -- --smoke]`
+//! (`--smoke` shrinks p, not the aspect sweep — the CI grep needs all rows).
+
+use prism::benchkit::{banner, Bench, JsonReport, Table};
+use prism::configfmt::Value;
+use prism::linalg::gemm::GemmScope;
+use prism::linalg::Mat;
+use prism::matfn::registry;
+use prism::prism::StopRule;
+use prism::randmat;
+use prism::rng::Rng;
+
+/// Identity-padded m × m embedding of a tall m × p operand.
+fn pad_square(a: &Mat) -> Mat {
+    let (m, p) = a.shape();
+    let mut b = Mat::zeros(m, m);
+    for i in 0..m {
+        for j in 0..p {
+            b[(i, j)] = a[(i, j)];
+        }
+    }
+    for j in p..m {
+        b[(j, j)] = 1.0;
+    }
+    b
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    banner(
+        "perf_rect — Gram-route rectangular polar vs square-padded baseline",
+        "aspect sweep at a fixed iteration budget; flops from GemmScope",
+    );
+    let bench = if full { Bench::default() } else { Bench::quick() };
+    // Fixed budget: the point is per-iteration cost vs shape, not
+    // convergence (both routes run the identical iteration count).
+    let stop = StopRule::default().with_max_iters(8).with_tol(1e-30);
+    let p: usize = if smoke {
+        8
+    } else if full {
+        64
+    } else {
+        32
+    };
+    let aspects: &[usize] = &[2, 4, 8];
+    let mut report = JsonReport::create("bench_out/BENCH_rect.json", "perf_rect");
+
+    let mut t = Table::new(&[
+        "solver",
+        "aspect",
+        "shape",
+        "route",
+        "rect ms",
+        "square ms",
+        "speedup",
+        "rect Mflop",
+        "square Mflop",
+    ]);
+    for method in ["ns", "prism5"] {
+        for &aspect in aspects {
+            let m = p * aspect;
+            let mut rng = Rng::seed_from(23);
+            let s = randmat::logspace(0.1, 1.0, p);
+            let a = randmat::with_spectrum(&mut rng, m, p, &s);
+            let b = pad_square(&a);
+
+            let rect_key = format!("{method}-rectpolar");
+            let square_key = format!("{method}-polar");
+
+            let mut rect = registry::resolve(&rect_key).unwrap();
+            rect.set_stop(stop);
+            let _ = rect.solve(&a, &mut rng); // warm the workspace
+            let scope = GemmScope::begin();
+            let _ = rect.solve(&a, &mut rng);
+            let rect_flops = scope.flops();
+            let rt = bench.run(&format!("{rect_key}_{m}x{p}"), || {
+                std::hint::black_box(rect.solve(&a, &mut rng).log.iters());
+            });
+
+            let mut square = registry::resolve(&square_key).unwrap();
+            square.set_stop(stop);
+            let _ = square.solve(&b, &mut rng);
+            let scope = GemmScope::begin();
+            let _ = square.solve(&b, &mut rng);
+            let square_flops = scope.flops();
+            let st = bench.run(&format!("{square_key}_pad_{m}"), || {
+                std::hint::black_box(square.solve(&b, &mut rng).log.iters());
+            });
+
+            // The acceptance gate: Gram-route work is O(p²m) + O(p³)-class,
+            // strictly below the padded route's O(m³) at aspect ≥ 2.
+            assert!(
+                rect_flops < square_flops,
+                "{rect_key} {m}x{p}: Gram route must spend fewer flops \
+                 ({rect_flops} vs {square_flops})"
+            );
+
+            t.row(&[
+                rect_key.clone(),
+                aspect.to_string(),
+                format!("{m}x{p}"),
+                "gram".into(), // aspect ≥ 2 always resolves to Gram
+                format!("{:.2}", rt.median_s() * 1e3),
+                format!("{:.2}", st.median_s() * 1e3),
+                format!("{:.2}x", st.median_s() / rt.median_s()),
+                format!("{:.1}", rect_flops as f64 / 1e6),
+                format!("{:.1}", square_flops as f64 / 1e6),
+            ]);
+            report.entry(&[
+                ("solver", Value::Str(rect_key.clone())),
+                ("aspect", Value::Int(aspect as i64)),
+                ("m", Value::Int(m as i64)),
+                ("p", Value::Int(p as i64)),
+                ("route", Value::Str("gram".into())),
+                ("rect_ms", Value::Float(rt.median_s() * 1e3)),
+                ("square_ms", Value::Float(st.median_s() * 1e3)),
+                ("speedup_vs_square", Value::Float(st.median_s() / rt.median_s())),
+                ("rect_flops", Value::Int(rect_flops as i64)),
+                ("square_flops", Value::Int(square_flops as i64)),
+            ]);
+        }
+    }
+    t.print();
+    println!("\nNotes: both routes run the same fixed iteration budget; 'square' solves");
+    println!("the identity-padded m×m embedding. Flops are per warm call (GemmScope,");
+    println!("this thread only) — the rect column must stay strictly below square at");
+    println!("every aspect ≥ 2, which the bench asserts.");
+    match report.finish() {
+        Some(path) => println!("report → {path}"),
+        None => println!("report → (unwritable bench_out/, skipped)"),
+    }
+}

@@ -5,7 +5,7 @@
 
 use crate::configfmt::{parse_toml, Value};
 use crate::linalg::gemm::{GemmBlocking, MicroKernel};
-use crate::matfn::Precision;
+use crate::matfn::{Precision, RectStrategy};
 use crate::util::{Error, Result};
 
 /// Which polar/inverse-root backend an optimizer uses.
@@ -66,6 +66,11 @@ pub struct TrainConfig {
     pub precond_interval: usize,
     /// Shampoo damping epsilon.
     pub damping: f64,
+    /// Route rectangular params take through Muon's polar backend
+    /// (`rect_strategy = "auto" | "gram" | "range<K>" | "direct"` in TOML).
+    /// See [`crate::matfn::RectStrategy`]; `auto` picks Gram at aspect ≥ 2
+    /// and the plain square iteration otherwise.
+    pub rect_strategy: RectStrategy,
     pub log_every: usize,
 }
 
@@ -82,6 +87,7 @@ impl Default for TrainConfig {
             matfn_iters: 5,
             precond_interval: 10,
             damping: 1e-6,
+            rect_strategy: RectStrategy::Auto,
             log_every: 10,
         }
     }
@@ -114,6 +120,13 @@ impl TrainConfig {
         c.log_every = geti("log_every", c.log_every);
         if let Some(s) = v.get_path("backend").and_then(|x| x.as_str()) {
             c.backend = Backend::parse(s)?;
+        }
+        if let Some(s) = v.get_path("rect_strategy").and_then(|x| x.as_str()) {
+            c.rect_strategy = RectStrategy::parse(s).ok_or_else(|| {
+                Error::Parse(format!(
+                    "unknown rect_strategy '{s}' (want auto | gram | range<K> | direct)"
+                ))
+            })?;
         }
         Ok(c)
     }
@@ -269,6 +282,23 @@ backend = "prism3"
         assert_eq!(c.backend, Backend::Prism3);
         // defaults survive
         assert_eq!(c.momentum, 0.95);
+        assert_eq!(c.rect_strategy, RectStrategy::Auto);
+    }
+
+    #[test]
+    fn train_config_rect_strategy_parses() {
+        for (tok, want) in [
+            ("auto", RectStrategy::Auto),
+            ("gram", RectStrategy::Gram),
+            ("range16", RectStrategy::RangeFinder { rank: 16 }),
+            ("direct", RectStrategy::Direct),
+        ] {
+            let v = parse_toml(&format!("rect_strategy = \"{tok}\"\n")).unwrap();
+            assert_eq!(TrainConfig::from_value(&v).unwrap().rect_strategy, want);
+        }
+        // Malformed values are a hard parse error, like `backend`.
+        let v = parse_toml("rect_strategy = \"blorp\"\n").unwrap();
+        assert!(TrainConfig::from_value(&v).is_err());
     }
 
     #[test]
@@ -365,6 +395,7 @@ mod file_tests {
         assert_eq!(muon.backend, Backend::Prism5);
         assert_eq!(muon.matfn_iters, 3);
         assert!((muon.lr - 0.006).abs() < 1e-12);
+        assert_eq!(muon.rect_strategy, RectStrategy::Auto);
 
         let sham =
             TrainConfig::from_toml_file(&format!("{root}/configs/shampoo_fig5.toml"))

@@ -65,6 +65,12 @@ pub enum JobKind {
     InvSqrt { eps: f64 },
     /// Polar factor (orthogonalization).
     Polar,
+    /// Polar factor through the rectangular routes (`matfn::rect`): Gram /
+    /// range-finder / direct, chosen per shape by the solver's
+    /// `RectStrategy::Auto`. The route key carries (rows, cols), so a
+    /// 256×64 layer and a 64×256 layer batch separately — each gets a
+    /// warm solver for its own orientation.
+    RectPolar,
 }
 
 impl JobKind {
@@ -72,6 +78,7 @@ impl JobKind {
         let tag = match self {
             JobKind::InvSqrt { .. } => 0,
             JobKind::Polar => 1,
+            JobKind::RectPolar => 2,
         };
         (tag, shape.0, shape.1)
     }
@@ -333,6 +340,7 @@ impl Service {
                                 let task = match jobs[0].kind {
                                     JobKind::InvSqrt { .. } => MatFnTask::InvSqrt,
                                     JobKind::Polar => MatFnTask::Polar,
+                                    JobKind::RectPolar => MatFnTask::RectPolar,
                                 };
                                 // `tol` passes through as-is: `None` keeps
                                 // the per-task defaults (InvSqrt at 1e-9,
@@ -629,6 +637,33 @@ mod tests {
         assert_eq!(results.len(), 1);
         let q = &results[0].result;
         assert!(matmul_at_b(q, q).sub(&Mat::eye(8)).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn rectpolar_jobs_round_trip_both_orientations() {
+        // Tall and wide layers route separately — (rows, cols) is in the
+        // route key — and each solves through the Gram route (aspect 4
+        // under Auto), landing within the service polar tolerance of the
+        // SVD polar factor.
+        let mut rng = Rng::seed_from(21);
+        let svc = Service::start(cfg(2, 2), Backend::Prism5, 17);
+        let s = randmat::logspace(0.1, 1.0, 12);
+        let tall = randmat::with_spectrum(&mut rng, 48, 12, &s);
+        let wide = tall.transpose();
+        let inputs = [tall, wide];
+        for (layer, a) in inputs.iter().enumerate() {
+            svc.submit(layer, JobKind::RectPolar, a.clone()).unwrap();
+        }
+        let results = svc.drain().unwrap();
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            let a = &inputs[r.layer];
+            assert_eq!(r.result.shape(), a.shape());
+            assert!(r.error.is_none(), "{:?}", r.error);
+            let exact = crate::baselines::eigen_fn::polar_eigen(a);
+            let err = r.result.sub(&exact).max_abs();
+            assert!(err < 1e-3, "layer {}: err {err}", r.layer);
+        }
     }
 
     #[test]

@@ -258,6 +258,63 @@ pub fn qr_householder(a: &Mat) -> (Mat, Mat) {
     (q, rr)
 }
 
+/// In-place column orthonormalization: modified Gram–Schmidt with one
+/// re-orthogonalization pass, rank-revealing. Columns that are (numerically)
+/// dependent on earlier ones are dropped; kept columns are compacted to the
+/// left, the tail is zeroed, and the kept count — the numerical rank — is
+/// returned. This is the thin-QR step of the randomized range finder, where
+/// only the orthonormal basis is wanted, never R.
+pub fn orthonormalize_columns(a: &mut Mat) -> usize {
+    let (m, n) = a.shape();
+    let mut kept = 0;
+    for j in 0..n {
+        if kept != j {
+            for i in 0..m {
+                let v = a[(i, j)];
+                a[(i, kept)] = v;
+            }
+        }
+        let mut norm0 = 0.0;
+        for i in 0..m {
+            norm0 += a[(i, kept)] * a[(i, kept)];
+        }
+        let norm0 = norm0.sqrt();
+        // Two MGS passes: the second mops up the O(eps·κ) residue the first
+        // leaves against nearly-parallel earlier columns ("twice is enough").
+        for _ in 0..2 {
+            for k in 0..kept {
+                let mut dot = 0.0;
+                for i in 0..m {
+                    dot += a[(i, k)] * a[(i, kept)];
+                }
+                for i in 0..m {
+                    let v = a[(i, k)];
+                    a[(i, kept)] -= dot * v;
+                }
+            }
+        }
+        let mut norm = 0.0;
+        for i in 0..m {
+            norm += a[(i, kept)] * a[(i, kept)];
+        }
+        let norm = norm.sqrt();
+        if norm <= 1e-10 * norm0 || norm < 1e-300 {
+            continue;
+        }
+        let inv = 1.0 / norm;
+        for i in 0..m {
+            a[(i, kept)] *= inv;
+        }
+        kept += 1;
+    }
+    for j in kept..n {
+        for i in 0..m {
+            a[(i, j)] = 0.0;
+        }
+    }
+    kept
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +397,66 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn orthonormalize_full_rank_keeps_all_columns() {
+        let mut rng = Rng::seed_from(7);
+        let mut a = Mat::gaussian(&mut rng, 20, 6, 1.0);
+        let r = orthonormalize_columns(&mut a);
+        assert_eq!(r, 6);
+        let g = matmul_at_b(&a, &a);
+        assert!(g.sub(&Mat::eye(6)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn orthonormalize_reveals_rank_and_compacts() {
+        let mut rng = Rng::seed_from(8);
+        // 3 independent columns, then exact copies: rank 3.
+        let b = Mat::gaussian(&mut rng, 16, 3, 1.0);
+        let mut a = Mat::zeros(16, 6);
+        for j in 0..6 {
+            for i in 0..16 {
+                a[(i, j)] = b[(i, j % 3)];
+            }
+        }
+        let r = orthonormalize_columns(&mut a);
+        assert_eq!(r, 3);
+        // Kept block orthonormal, tail zeroed.
+        for j in 0..3 {
+            for jj in 0..3 {
+                let mut dot = 0.0;
+                for i in 0..16 {
+                    dot += a[(i, j)] * a[(i, jj)];
+                }
+                let want = if j == jj { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-12, "({j},{jj}): {dot}");
+            }
+        }
+        for j in 3..6 {
+            for i in 0..16 {
+                assert_eq!(a[(i, j)], 0.0);
+            }
+        }
+        // Kept block spans the same space as b: b = Q(QᵀB).
+        let q = {
+            let mut q = Mat::zeros(16, 3);
+            for j in 0..3 {
+                for i in 0..16 {
+                    q[(i, j)] = a[(i, j)];
+                }
+            }
+            q
+        };
+        let proj = matmul(&q, &matmul_at_b(&q, &b));
+        assert!(proj.sub(&b).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn orthonormalize_zero_matrix_has_rank_zero() {
+        let mut a = Mat::zeros(10, 4);
+        assert_eq!(orthonormalize_columns(&mut a), 0);
+        assert_eq!(a, Mat::zeros(10, 4));
     }
 
     #[test]

@@ -34,7 +34,9 @@ pub use gemm::{
     matmul, matmul_a_bt, matmul_at_b, syrk_a_at, syrk_at_a, GemmBlocking, GemmEngine, MicroKernel,
     Workspace,
 };
-pub use decomp::{cholesky, cholesky_inverse, lu_inverse, lu_solve, qr_householder};
+pub use decomp::{
+    cholesky, cholesky_inverse, lu_inverse, lu_solve, orthonormalize_columns, qr_householder,
+};
 pub use eigen::{symmetric_eigen, SymEigen};
 pub use norms::{spectral_norm_est, spectral_norm_sym};
 pub use svd::{svd, Svd};

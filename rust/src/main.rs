@@ -498,7 +498,11 @@ fn cmd_train(args: &Args) -> prism::util::Result<()> {
         driver.vocab
     );
     let mut opt: Box<dyn Optimizer> = match opt_name.as_str() {
-        "muon" => Box::new(Muon::paper_default(backend, cfg.seed)),
+        "muon" => {
+            let mut m = Muon::paper_default(backend, cfg.seed);
+            m.set_rect_strategy(cfg.rect_strategy);
+            Box::new(m)
+        }
         "adamw" => Box::new(AdamW::paper_default()),
         "shampoo" => Box::new(Shampoo::paper_default(backend, cfg.seed)),
         other => {

@@ -27,6 +27,36 @@
 //!   [`MatFnSolver::set_observer`] streams per-iteration residuals instead
 //!   of waiting for the final [`IterationLog`].
 //!
+//! ## Rectangular polar: `RectPolar` and the route contract
+//!
+//! [`MatFnTask::RectPolar`] computes the same polar factor as
+//! [`MatFnTask::Polar`] but is planned for rectangular operands; the
+//! [`SolverSpec`]'s [`RectStrategy`] (default `Auto`) picks the route:
+//!
+//! * **`Auto`** — Gram route when `max(m,n) ≥ 2·min(m,n)`, the direct
+//!   rectangular iteration otherwise (so on near-square and square inputs a
+//!   `rectpolar` solver behaves exactly like its `polar` twin). `Auto`
+//!   never picks the range finder — rank is not visible in a shape.
+//! * **Gram** — `G = AᵀA` (or `AAᵀ`, whichever is p×p with p = min(m,n))
+//!   via SYRK, the coupled PRISM sqrt/inv-sqrt engine on `G`, one skinny
+//!   GEMM `A·G^{-1/2}` (or `G^{-1/2}·A`). O(p²·max(m,n)) one-off + O(p³)
+//!   per iteration, vs O(p²·max(m,n)) *per iteration* for direct. Since
+//!   κ(G) = κ(A)², the f64 route holds the 1e-8 conformance bar for
+//!   κ(A) ≲ 1e3 (the optimizer-gradient regime); `Precision::Mixed` holds
+//!   1e-4 under the same conditions. Rank-deficient inputs make `G`
+//!   singular — use the range finder for those.
+//! * **`RangeFinder { rank }`** — for genuinely low-rank updates: Gaussian
+//!   sketch, orthonormalize, polar-solve the small core, expand
+//!   ([`crate::prism::lowrank`]). Exact when `rank ≥ rank(A)`; the result
+//!   is the partial isometry supported on range(A) (it does **not**
+//!   fabricate null-space directions, so it differs from an SVD polar
+//!   factor on rank-deficient inputs — by design). Always f64.
+//!
+//! Registry keys: `ns-rectpolar`, `prism3-rectpolar`, `prism5-rectpolar`,
+//! `eigen-rectpolar`. Warm starts (`solve_from`) apply only when the
+//! resolved route is Direct; the Gram/range cores solve in a different
+//! space and ignore `x0`.
+//!
 //! ## Quickstart
 //!
 //! ```
@@ -44,9 +74,11 @@
 //! ```
 
 mod batch;
+pub mod rect;
 pub mod registry;
 mod solver;
 
+pub use rect::RectStrategy;
 pub use solver::Solver;
 pub(crate) use solver::validate_input;
 
@@ -65,6 +97,9 @@ pub enum MatFnTask {
     InvRoot { p: usize },
     /// The polar factor `U Vᵀ` (any orientation) — Muon's primitive.
     Polar,
+    /// The polar factor routed for rectangular/low-rank operands via
+    /// [`RectStrategy`] (module docs above) — Muon's rectangular primitive.
+    RectPolar,
     /// `sign(A)` for `A` with `A²` symmetric.
     Sign,
     /// `A⁻¹` for full-rank `A`.
@@ -79,6 +114,7 @@ impl MatFnTask {
             MatFnTask::InvSqrt => "invsqrt".into(),
             MatFnTask::InvRoot { p } => format!("invroot{p}"),
             MatFnTask::Polar => "polar".into(),
+            MatFnTask::RectPolar => "rectpolar".into(),
             MatFnTask::Sign => "sign".into(),
             MatFnTask::Inverse => "inverse".into(),
         }
@@ -160,7 +196,9 @@ impl Precision {
 
 /// A full solver specification: method, degree `d` (Newton–Schulz order
 /// `2d+1`), α-selection mode, stopping rule, the Muon warm-α phase
-/// length (paper §C; 0 disables it), and the hot-loop [`Precision`].
+/// length (paper §C; 0 disables it), the hot-loop [`Precision`], and the
+/// [`RectStrategy`] used by [`MatFnTask::RectPolar`] solves (ignored by
+/// every other task).
 #[derive(Debug, Clone, Copy)]
 pub struct SolverSpec {
     pub method: Method,
@@ -169,6 +207,7 @@ pub struct SolverSpec {
     pub stop: StopRule,
     pub warm_iters: usize,
     pub precision: Precision,
+    pub rect: RectStrategy,
 }
 
 impl SolverSpec {
@@ -180,6 +219,7 @@ impl SolverSpec {
             stop: StopRule::default(),
             warm_iters: 0,
             precision: Precision::F64,
+            rect: RectStrategy::Auto,
         }
     }
 
@@ -238,6 +278,12 @@ impl SolverSpec {
     /// Select the hot-loop precision (see [`Precision`] for the contract).
     pub fn with_precision(mut self, precision: Precision) -> SolverSpec {
         self.precision = precision;
+        self
+    }
+    /// Select the [`MatFnTask::RectPolar`] route (module docs above);
+    /// ignored by every other task.
+    pub fn with_rect_strategy(mut self, rect: RectStrategy) -> SolverSpec {
+        self.rect = rect;
         self
     }
 }

@@ -1,0 +1,307 @@
+//! Rectangular & low-rank orthogonalization: the [`MatFnTask::RectPolar`]
+//! routes (see the `matfn` module header for the accuracy contract).
+//!
+//! Every solver in the crate can orthogonalize a rectangular `A` directly —
+//! but the direct Newton–Schulz iteration on an m×n operand pays
+//! O(min(m,n)²·max(m,n)) *per iteration*. Foundation-model layers are
+//! rectangular (d_out × d_in, often 4× aspect), and "Low-rank
+//! Orthogonalization for Large-scale Matrix Optimization" observes that the
+//! polar factor factors through the small Gram matrix: for tall `A = UΣVᵀ`
+//! (m ≥ n), `G = AᵀA = VΣ²Vᵀ`, so `A·G^{-1/2} = UVᵀ` — one p×p inverse-root
+//! solve (p = min(m, n)) plus a single skinny GEMM replaces the whole
+//! rectangular iteration. [`RectStrategy`] picks between three routes:
+//!
+//! * **Gram** — `G = AᵀA` (or `AAᵀ`, whichever is smaller) via SYRK, the
+//!   existing coupled PRISM sqrt/inv-sqrt engine on the p×p Gram matrix
+//!   (mixed precision supported), then one skinny GEMM. The per-iteration
+//!   cost drops from O(p²·max(m,n)) to O(p³); forming G and applying
+//!   `G^{-1/2}` are one-off O(p²·max(m,n)) terms. Note κ(G) = κ(A)², so the
+//!   route wants a not-too-ill-conditioned (and full-rank) input — exactly
+//!   the optimizer-gradient regime.
+//! * **RangeFinder** — for genuinely low-rank updates: sketch `Y = A·Ωᵀ`
+//!   with a Gaussian test matrix, orthonormalize `Y`, project to the small
+//!   core `C = Q₁ᵀA`, polar-solve the core and expand back
+//!   ([`crate::prism::lowrank`]).
+//! * **Direct** — the ordinary rectangular Newton–Schulz iteration, the
+//!   right call for near-square shapes where the Gram detour buys nothing.
+//!
+//! `Auto` routes by aspect ratio: Gram when `max(m,n) ≥ 2·min(m,n)`, Direct
+//! otherwise (the flop crossover sits near aspect 2 — see the `perf_rect`
+//! bench). `Auto` never picks `RangeFinder`: rank is a caller-known
+//! property, not a shape-visible one.
+
+use crate::linalg::gemm::{global_engine, Workspace};
+use crate::linalg::Mat;
+use crate::prism::driver::{AlphaMode, EngineHooks, StopRule};
+use crate::prism::lowrank::{range_polar_in, RangeOpts};
+use crate::prism::mixed::{polar_mixed_in, sqrt_mixed_in};
+use crate::prism::polar::{polar_prism_in, PolarOpts, PolarResult};
+use crate::prism::sqrt::{sqrt_prism_in, SqrtOpts};
+use crate::rng::Rng;
+
+/// Route selection for [`MatFnTask::RectPolar`] solves (module docs above).
+///
+/// [`MatFnTask::RectPolar`]: super::MatFnTask::RectPolar
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RectStrategy {
+    /// Aspect-ratio heuristic: Gram at aspect ≥ 2, Direct otherwise.
+    Auto,
+    /// Always the Gram route (p×p inverse root + one skinny GEMM).
+    Gram,
+    /// Randomized range-finder with a rank-`rank` Gaussian sketch; exact
+    /// when `rank ≥ rank(A)`, a range-restricted partial isometry otherwise.
+    RangeFinder { rank: usize },
+    /// Always the direct rectangular Newton–Schulz iteration.
+    Direct,
+}
+
+impl RectStrategy {
+    /// Canonical config/CLI token (`"auto"`, `"gram"`, `"range16"`,
+    /// `"direct"`).
+    pub fn name(&self) -> String {
+        match self {
+            RectStrategy::Auto => "auto".into(),
+            RectStrategy::Gram => "gram".into(),
+            RectStrategy::RangeFinder { rank } => format!("range{rank}"),
+            RectStrategy::Direct => "direct".into(),
+        }
+    }
+
+    /// Parse a config/CLI token (`"auto"` | `"gram"` | `"direct"` |
+    /// `"range<K>"` with K ≥ 1).
+    pub fn parse(s: &str) -> Option<RectStrategy> {
+        match s {
+            "auto" => Some(RectStrategy::Auto),
+            "gram" => Some(RectStrategy::Gram),
+            "direct" => Some(RectStrategy::Direct),
+            t if t.starts_with("range") => t["range".len()..]
+                .parse::<usize>()
+                .ok()
+                .filter(|&k| k >= 1)
+                .map(|rank| RectStrategy::RangeFinder { rank }),
+            _ => None,
+        }
+    }
+}
+
+/// Options for a RectPolar run; `mixed` mirrors the solver's
+/// [`super::Precision`] decision (d ≤ 2 only — the caller gates that).
+pub(crate) struct RectPolarOpts {
+    pub d: usize,
+    pub alpha: AlphaMode,
+    pub stop: StopRule,
+    pub strategy: RectStrategy,
+    pub mixed: bool,
+}
+
+/// Resolve `Auto` against the shape; the returned strategy is never `Auto`.
+pub(crate) fn resolve_route(strategy: RectStrategy, m: usize, n: usize) -> RectStrategy {
+    match strategy {
+        RectStrategy::Auto => {
+            if m.max(n) >= 2 * m.min(n).max(1) {
+                RectStrategy::Gram
+            } else {
+                RectStrategy::Direct
+            }
+        }
+        s => s,
+    }
+}
+
+/// Workspace-pooled RectPolar core: route per [`resolve_route`], then
+/// delegate. `hooks.x0` only reaches the Direct route (the Gram core is a
+/// coupled sqrt, which cannot warm-start from a polar factor, and the
+/// range-finder core lives in a different space).
+pub(crate) fn rect_polar_in(
+    a: &Mat,
+    opts: &RectPolarOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> PolarResult {
+    let (m, n) = a.shape();
+    match resolve_route(opts.strategy, m, n) {
+        RectStrategy::Direct => {
+            let popts = PolarOpts { d: opts.d, alpha: opts.alpha, stop: opts.stop };
+            if opts.mixed {
+                polar_mixed_in(a, &popts, rng, ws, hooks)
+            } else {
+                polar_prism_in(a, &popts, rng, ws, hooks)
+            }
+        }
+        RectStrategy::RangeFinder { rank } => {
+            let ropts = RangeOpts { d: opts.d, alpha: opts.alpha, stop: opts.stop, rank };
+            range_polar_in(a, &ropts, rng, ws, hooks)
+        }
+        RectStrategy::Gram | RectStrategy::Auto => gram_polar_in(a, opts, rng, ws, hooks),
+    }
+}
+
+/// The Gram route: `G = AᵀA` (tall) or `AAᵀ` (wide) via SYRK, coupled
+/// sqrt/inv-sqrt on the p×p `G`, then `Q = A·G^{-1/2}` (tall) or
+/// `G^{-1/2}·A` (wide). The returned log is the Gram-core solve's log — its
+/// residuals are `‖I − Y X‖_F` on the normalized `G`, so `converged` means
+/// the inverse root (and hence `Q`) met the stop rule.
+fn gram_polar_in(
+    a: &Mat,
+    opts: &RectPolarOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> PolarResult {
+    let (m, n) = a.shape();
+    let eng = global_engine();
+    let tall = m >= n;
+    let mut g = ws.take(m.min(n), m.min(n));
+    if tall {
+        eng.syrk_at_a_into(&mut g, a);
+    } else {
+        eng.syrk_a_at_into(&mut g, a);
+    }
+    let sopts = SqrtOpts { d: opts.d, alpha: opts.alpha, stop: opts.stop };
+    // Drop x0 (the coupled core cannot use it); the `match` re-coerces the
+    // observer's trait-object lifetime, as in the engines' own recursions.
+    let EngineHooks { x0: _, observer, event_base, job } = hooks;
+    let core_hooks = EngineHooks {
+        x0: None,
+        observer: match observer {
+            Some(o) => Some(o),
+            None => None,
+        },
+        event_base,
+        job,
+    };
+    let sr = if opts.mixed {
+        sqrt_mixed_in(&g, &sopts, rng, ws, core_hooks)
+    } else {
+        sqrt_prism_in(&g, &sopts, rng, ws, core_hooks)
+    };
+    let mut q = ws.take(m, n);
+    if tall {
+        eng.matmul_into(&mut q, a, &sr.inv_sqrt);
+    } else {
+        eng.matmul_into(&mut q, &sr.inv_sqrt, a);
+    }
+    let out = PolarResult { q: q.clone(), log: sr.log, transposed: false };
+    ws.put(g);
+    ws.put(q);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd;
+    use crate::prism::polar::orthogonality_error;
+    use crate::randmat;
+
+    fn exact_polar(a: &Mat) -> Mat {
+        let (m, n) = a.shape();
+        if m >= n {
+            svd(a).polar_factor()
+        } else {
+            svd(&a.transpose()).polar_factor().transpose()
+        }
+    }
+
+    fn opts(strategy: RectStrategy, mixed: bool) -> RectPolarOpts {
+        RectPolarOpts {
+            d: 2,
+            alpha: AlphaMode::Sketched { p: 8 },
+            stop: StopRule::default().with_max_iters(200).with_tol(1e-12),
+            strategy,
+            mixed,
+        }
+    }
+
+    #[test]
+    fn auto_routes_by_aspect() {
+        assert_eq!(resolve_route(RectStrategy::Auto, 64, 32), RectStrategy::Gram);
+        assert_eq!(resolve_route(RectStrategy::Auto, 32, 64), RectStrategy::Gram);
+        assert_eq!(resolve_route(RectStrategy::Auto, 48, 32), RectStrategy::Direct);
+        assert_eq!(resolve_route(RectStrategy::Auto, 32, 32), RectStrategy::Direct);
+        let forced = RectStrategy::RangeFinder { rank: 4 };
+        assert_eq!(resolve_route(forced, 64, 8), forced);
+    }
+
+    #[test]
+    fn strategy_tokens_round_trip() {
+        for s in [
+            RectStrategy::Auto,
+            RectStrategy::Gram,
+            RectStrategy::Direct,
+            RectStrategy::RangeFinder { rank: 16 },
+        ] {
+            assert_eq!(RectStrategy::parse(&s.name()), Some(s), "{}", s.name());
+        }
+        assert_eq!(RectStrategy::parse("range0"), None);
+        assert_eq!(RectStrategy::parse("florb"), None);
+    }
+
+    #[test]
+    fn gram_route_matches_svd_polar_both_orientations() {
+        let mut rng = Rng::seed_from(1);
+        let s = randmat::logspace(0.1, 1.0, 12);
+        let tall = randmat::with_spectrum(&mut rng, 48, 12, &s);
+        let wide = tall.transpose();
+        for a in [&tall, &wide] {
+            let mut ws = Workspace::new();
+            let out =
+                rect_polar_in(a, &opts(RectStrategy::Gram, false), &mut rng, &mut ws, EngineHooks::none());
+            assert!(out.log.converged, "res={}", out.log.final_residual());
+            assert_eq!(out.q.shape(), a.shape());
+            let err = out.q.sub(&exact_polar(a)).max_abs();
+            assert!(err < 1e-9, "{:?}: gram polar err {err}", a.shape());
+            assert!(orthogonality_error(&out.q) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn gram_route_warm_calls_are_allocation_free() {
+        let mut rng = Rng::seed_from(2);
+        let s = randmat::logspace(0.1, 1.0, 10);
+        let a = randmat::with_spectrum(&mut rng, 40, 10, &s);
+        let mut ws = Workspace::new();
+        let o = opts(RectStrategy::Gram, false);
+        let _ = rect_polar_in(&a, &o, &mut rng, &mut ws, EngineHooks::none());
+        let allocs = ws.allocations();
+        assert!(allocs > 0, "cold call populates the pool");
+        for _ in 0..2 {
+            let _ = rect_polar_in(&a, &o, &mut rng, &mut ws, EngineHooks::none());
+        }
+        assert_eq!(ws.allocations(), allocs, "warm gram solves must not miss the pool");
+    }
+
+    #[test]
+    fn mixed_gram_route_matches_svd_at_mixed_tolerance() {
+        let mut rng = Rng::seed_from(3);
+        let s = randmat::logspace(0.1, 1.0, 10);
+        let a = randmat::with_spectrum(&mut rng, 60, 10, &s);
+        let mut ws = Workspace::new();
+        let out =
+            rect_polar_in(&a, &opts(RectStrategy::Gram, true), &mut rng, &mut ws, EngineHooks::none());
+        let err = out.q.sub(&exact_polar(&a)).max_abs();
+        assert!(err < 1e-4, "mixed gram polar err {err}");
+    }
+
+    #[test]
+    fn direct_route_is_the_plain_polar_iteration() {
+        // Same opts, same RNG stream ⇒ the Direct route must be bit-identical
+        // to polar_prism_in: it *is* that call.
+        let mut rng = Rng::seed_from(4);
+        let a = randmat::gaussian(&mut rng, 20, 16);
+        let o = opts(RectStrategy::Direct, false);
+        let mut ws = Workspace::new();
+        let via_rect =
+            rect_polar_in(&a, &o, &mut Rng::seed_from(9), &mut ws, EngineHooks::none());
+        let popts = PolarOpts { d: o.d, alpha: o.alpha, stop: o.stop };
+        let direct = polar_prism_in(
+            &a,
+            &popts,
+            &mut Rng::seed_from(9),
+            &mut Workspace::new(),
+            EngineHooks::none(),
+        );
+        assert_eq!(via_rect.q, direct.q);
+    }
+}

@@ -5,8 +5,8 @@
 //! [`crate::config::Backend::parse`] (`ns`, `prism3`, `prism5`, `pe`,
 //! `eigen`, `newton`, …) extended with the solver families that are not
 //! optimizer backends (`cans`, `cheb`, `invnewton`, classic variants); the
-//! *task* half is a [`MatFnTask`] token (`polar`, `sign`, `sqrt`,
-//! `invsqrt`, `invrootN`, `inverse`).
+//! *task* half is a [`MatFnTask`] token (`polar`, `rectpolar`, `sign`,
+//! `sqrt`, `invsqrt`, `invrootN`, `inverse`).
 //!
 //! [`resolve`] also accepts aliases (`"polar-express-polar"`,
 //! `"classic-sqrt"`, any odd `"prismN"`, any `"invrootN"`); [`names`] lists
@@ -28,6 +28,12 @@ pub const NAMES: &[&str] = &[
     "pe-polar",
     "cans-polar",
     "eigen-polar",
+    // rectangular polar (Gram / range-finder routes; Muon's rectangular
+    // primitive — see `matfn::rect`)
+    "ns-rectpolar",
+    "prism3-rectpolar",
+    "prism5-rectpolar",
+    "eigen-rectpolar",
     // sign (§4 case study)
     "ns-sign",
     "prism3-sign",
@@ -80,6 +86,7 @@ fn unknown(name: &str) -> Error {
 fn parse_task(tok: &str) -> Option<MatFnTask> {
     match tok {
         "polar" => Some(MatFnTask::Polar),
+        "rectpolar" => Some(MatFnTask::RectPolar),
         "sign" => Some(MatFnTask::Sign),
         "sqrt" => Some(MatFnTask::Sqrt),
         "invsqrt" => Some(MatFnTask::InvSqrt),

@@ -5,6 +5,7 @@
 //! that draw every ping-pong buffer from that pool — the second same-shape
 //! `solve` performs zero heap allocations in the iteration hot loop.
 
+use super::rect::{rect_polar_in, RectPolarOpts};
 use super::{BoxObserver, MatFnOutput, MatFnSolver, MatFnTask, Method, Precision, SolverSpec};
 use crate::baselines::cans::{polar_cans_in, CansOpts};
 use crate::baselines::eigen_fn;
@@ -92,7 +93,11 @@ fn validate(task: MatFnTask, spec: &SolverSpec) -> Result<()> {
     let ok = match spec.method {
         Method::NewtonSchulz => matches!(
             task,
-            MatFnTask::Polar | MatFnTask::Sign | MatFnTask::Sqrt | MatFnTask::InvSqrt
+            MatFnTask::Polar
+                | MatFnTask::RectPolar
+                | MatFnTask::Sign
+                | MatFnTask::Sqrt
+                | MatFnTask::InvSqrt
         ),
         Method::InverseNewton => matches!(
             task,
@@ -197,18 +202,27 @@ impl Solver {
         sketch_p: Option<usize>,
     ) -> Result<Solver> {
         let tol = tol.unwrap_or(match task {
-            MatFnTask::Polar | MatFnTask::Sign => 1e-7,
+            MatFnTask::Polar | MatFnTask::RectPolar | MatFnTask::Sign => 1e-7,
             _ => 1e-9,
         });
         let stop = StopRule::default().with_max_iters(iters).with_tol(tol);
+        // PolarExpress's Remez schedule is a square-polar specialist; for
+        // RectPolar it stands in with PRISM-5 (the rect routes' Gram/range
+        // cores are NS-family anyway), mirroring the PrismNewton fallback.
         let spec = match backend {
             Backend::NewtonSchulz => SolverSpec::ns_classic(2),
-            Backend::PolarExpress => SolverSpec::polar_express(),
+            Backend::PolarExpress => {
+                if task == MatFnTask::RectPolar {
+                    SolverSpec::prism(2)
+                } else {
+                    SolverSpec::polar_express()
+                }
+            }
             Backend::Prism3 => SolverSpec::prism(1),
             Backend::Prism5 => SolverSpec::prism(2),
             Backend::Eigen => SolverSpec::eigen(),
             Backend::PrismNewton => {
-                if task == MatFnTask::Polar {
+                if matches!(task, MatFnTask::Polar | MatFnTask::RectPolar) {
                     SolverSpec::prism(2)
                 } else {
                     SolverSpec::db_newton(true)
@@ -309,13 +323,22 @@ impl Solver {
             return Vec::new();
         }
         let shape = inputs[0].shape();
-        for a in inputs {
-            assert_eq!(a.shape(), shape, "solve_batch: all inputs must share one shape");
-        }
+        let uniform = inputs.iter().all(|a| a.shape() == shape);
+        // RectPolar batches may legitimately mix shapes (one job per layer);
+        // they always take the sequential path below. Every other task keeps
+        // the hard same-shape contract.
+        assert!(
+            uniform || self.task == MatFnTask::RectPolar,
+            "solve_batch: all inputs must share one shape"
+        );
         // Mixed-precision solves take the sequential fallback: the lockstep
         // driver is an f64 engine, and the per-job stream contract already
-        // makes sequential execution observationally identical.
-        if self.spec.method == Method::NewtonSchulz
+        // makes sequential execution observationally identical. RectPolar
+        // does too: its routes are chosen per shape and solved through the
+        // Gram/range cores, which the lockstep driver does not model.
+        if uniform
+            && self.task != MatFnTask::RectPolar
+            && self.spec.method == Method::NewtonSchulz
             && self.spec.warm_iters == 0
             && self.spec.precision == Precision::F64
             && inputs.len() > 1
@@ -442,7 +465,7 @@ impl Solver {
                     MatFnTask::InvRoot { p } => {
                         (eigen_fn::inv_root_eigen(a, p, 0.0).expect("p >= 1 validated"), None)
                     }
-                    MatFnTask::Polar => (eigen_fn::polar_eigen(a), None),
+                    MatFnTask::Polar | MatFnTask::RectPolar => (eigen_fn::polar_eigen(a), None),
                     MatFnTask::Sign => (eigen_fn::sign_eigen(a), None),
                     MatFnTask::Inverse => (eigen_fn::inverse_eigen(a), None),
                 };
@@ -530,6 +553,12 @@ impl Solver {
                 } else {
                     polar_prism_in(a, &opts, rng, &mut self.ws, h)
                 };
+                MatFnOutput { primary: out.q, secondary: None, log: out.log }
+            }
+            MatFnTask::RectPolar => {
+                let opts = RectPolarOpts { d, alpha, stop, strategy: self.spec.rect, mixed };
+                let h = hooks_based(&mut self.observer, x0, base, job);
+                let out = rect_polar_in(a, &opts, rng, &mut self.ws, h);
                 MatFnOutput { primary: out.q, secondary: None, log: out.log }
             }
             MatFnTask::Sign => {
@@ -676,14 +705,17 @@ mod tests {
             Backend::Eigen,
             Backend::PrismNewton,
         ] {
-            for task in [MatFnTask::Polar, MatFnTask::InvSqrt] {
+            for task in [MatFnTask::Polar, MatFnTask::RectPolar, MatFnTask::InvSqrt] {
                 let s = Solver::for_backend(b, task, 30).unwrap();
                 assert_eq!(MatFnSolver::task(&s), task);
             }
         }
-        // PrismNewton's polar fallback is PRISM-5, as documented.
+        // PrismNewton's polar fallback is PRISM-5, as documented — and so is
+        // PolarExpress's rectpolar fallback.
         let s = Solver::for_backend(Backend::PrismNewton, MatFnTask::Polar, 10).unwrap();
         assert_eq!(s.name(), "prism5-polar");
+        let s = Solver::for_backend(Backend::PolarExpress, MatFnTask::RectPolar, 10).unwrap();
+        assert_eq!(s.name(), "prism5-rectpolar");
     }
 
     #[test]

@@ -23,22 +23,41 @@
 //! ```
 
 use crate::config::Backend;
-use crate::linalg::Mat;
-use crate::matfn::{MatFnTask, Solver};
+use crate::linalg::{cholesky, Mat};
+use crate::matfn::rect::resolve_route;
+use crate::matfn::{MatFnTask, RectStrategy, Solver};
 use crate::rng::Rng;
+use crate::util::Result;
 
 /// Polar-factor backend (Muon's orthogonalization step). Owns a persistent
-/// [`Solver`], so the per-step calls on same-shaped momentum matrices run
+/// square [`Solver`] plus a `RectPolar` twin: rectangular momenta whose
+/// resolved [`RectStrategy`] route is not Direct go through the cheap
+/// Gram/range-finder path, everything else (squares, near-squares) stays on
+/// the square solver — bit-identical to the pre-rect behaviour, warm-α
+/// phase included. Per-step calls on same-shaped momentum matrices run
 /// allocation-free after the first.
 pub struct PolarBackend {
     solver: Solver,
+    /// `RectPolar` twin; `None` for PolarExpress, whose Remez schedule has
+    /// no rect form — substituting PRISM under a "pe" baseline label would
+    /// silently change the Fig. 6 comparison, so PE always solves direct.
+    rect: Option<Solver>,
+    strategy: RectStrategy,
 }
 
 impl PolarBackend {
     pub fn new(backend: Backend, iters: usize) -> Self {
         let solver = Solver::for_backend(backend, MatFnTask::Polar, iters)
             .expect("every Backend has a polar form");
-        PolarBackend { solver }
+        let rect = if backend == Backend::PolarExpress {
+            None
+        } else {
+            Some(
+                Solver::for_backend(backend, MatFnTask::RectPolar, iters)
+                    .expect("every non-PE Backend has a rectpolar form"),
+            )
+        };
+        PolarBackend { solver, rect, strategy: RectStrategy::Auto }
     }
 
     /// The paper's Muon configuration: 5 iterations for PolarExpress and
@@ -54,13 +73,55 @@ impl PolarBackend {
         b
     }
 
+    /// Select the rectangular route (default [`RectStrategy::Auto`]).
+    pub fn set_rect_strategy(&mut self, strategy: RectStrategy) {
+        self.strategy = strategy;
+        if let Some(r) = self.rect.as_mut() {
+            r.spec_mut().rect = strategy;
+        }
+    }
+
     pub fn name(&self) -> String {
         self.solver.name()
     }
 
-    /// Orthogonalize `g` (any orientation).
+    /// Total workspace misses across both solvers; flat across two
+    /// same-shape [`PolarBackend::polar_into`] calls ⇔ the second ran
+    /// allocation-free.
+    pub fn workspace_allocations(&self) -> usize {
+        self.solver.workspace_allocations()
+            + self.rect.as_ref().map_or(0, |r| r.workspace_allocations())
+    }
+
+    /// Route to the rect solver only when that changes the algorithm: a
+    /// Direct-resolved shape on the rect solver would run the same
+    /// iteration minus the warm-α phase, so it stays on the square solver.
+    fn use_rect(&self, m: usize, n: usize) -> bool {
+        self.rect.is_some()
+            && m != n
+            && resolve_route(self.strategy, m, n) != RectStrategy::Direct
+    }
+
+    /// Orthogonalize `g` (any orientation). Allocates the result; the
+    /// optimizer hot loop uses [`PolarBackend::polar_into`] instead.
     pub fn polar(&mut self, g: &Mat, rng: &mut Rng) -> Mat {
-        self.solver.solve(g, rng).primary
+        let (m, n) = g.shape();
+        if self.use_rect(m, n) {
+            self.rect.as_mut().expect("use_rect checked").solve(g, rng).primary
+        } else {
+            self.solver.solve(g, rng).primary
+        }
+    }
+
+    /// Orthogonalize `g` into a caller-held persistent buffer (resized to
+    /// match `g`). With `out` reused across steps, the per-layer polar call
+    /// stops minting a fresh `Mat` every optimizer step — the warm-path
+    /// contract the Muon tests assert via [`workspace_allocations`].
+    ///
+    /// [`workspace_allocations`]: PolarBackend::workspace_allocations
+    pub fn polar_into(&mut self, g: &Mat, out: &mut Mat, rng: &mut Rng) {
+        let q = self.polar(g, rng);
+        out.copy_from(&q);
     }
 }
 
@@ -87,6 +148,34 @@ impl InvRootBackend {
         self.damped.copy_from(a);
         self.damped.add_diag(eps);
         self.solver.solve(&self.damped, rng).primary
+    }
+
+    /// [`InvRootBackend::inv_sqrt`] with the damping validated against the
+    /// spectrum: rejects a non-finite or negative `eps`, and probes
+    /// `A + εI` with a Cholesky factorization before iterating — the tiny
+    /// p×p Gram matrices of low-rank updates can be exactly singular, and
+    /// an inverse-root iteration on a rank-deficient operand spins to
+    /// `max_iters` producing garbage that only fails far downstream.
+    /// Returns the typed [`crate::util::Error::Numerical`] at the boundary
+    /// instead; the probe costs n³/3 flops against the ~10n³ of a typical
+    /// converged solve.
+    pub fn try_inv_sqrt(&mut self, a: &Mat, eps: f64, rng: &mut Rng) -> Result<Mat> {
+        if !eps.is_finite() || eps < 0.0 {
+            return Err(crate::numerical_err!(
+                "inv_sqrt: damping eps {eps:e} must be finite and >= 0"
+            ));
+        }
+        self.damped.copy_from(a);
+        self.damped.add_diag(eps);
+        if let Err(e) = cholesky(&self.damped) {
+            return Err(crate::numerical_err!(
+                "inv_sqrt: damped operand {}x{} is not positive definite at eps={eps:.3e} — \
+                 rank-deficient Gram matrix? raise the damping ({e})",
+                a.rows(),
+                a.cols()
+            ));
+        }
+        self.solver.try_solve(&self.damped, rng).map(|out| out.primary)
     }
 }
 
@@ -181,5 +270,82 @@ mod tests {
         let _ = pb.polar(&a, &mut rng);
         let _ = pb.polar(&a, &mut rng);
         assert_eq!(pb.solver.workspace_allocations(), allocs);
+    }
+
+    #[test]
+    fn rect_shapes_orthogonalize_through_every_backend() {
+        // Aspect 4 resolves to the Gram route under Auto for the backends
+        // that carry a rect solver; PolarExpress solves direct. Either way
+        // the result must be (near-)orthogonal in both orientations.
+        let mut rng = Rng::seed_from(6);
+        let s = randmat::logspace(1e-1, 1.0, 12);
+        let tall = randmat::with_spectrum(&mut rng, 48, 12, &s);
+        let wide = tall.transpose();
+        for b in [
+            Backend::Eigen,
+            Backend::PolarExpress,
+            Backend::NewtonSchulz,
+            Backend::Prism3,
+            Backend::Prism5,
+        ] {
+            for a in [&tall, &wide] {
+                let mut pb = PolarBackend::new(b, 60);
+                let q = pb.polar(a, &mut rng);
+                assert_eq!(q.shape(), a.shape());
+                let err = crate::prism::polar::orthogonality_error(&q);
+                assert!(err < 1e-4, "{} {:?}: err={err}", pb.name(), a.shape());
+            }
+        }
+    }
+
+    #[test]
+    fn polar_into_matches_polar_and_reuses_buffers() {
+        let s = randmat::logspace(1e-1, 1.0, 10);
+        let a = randmat::with_spectrum(&mut Rng::seed_from(7), 40, 10, &s);
+        // Same entry RNG state ⇒ identical result through either surface.
+        let mut pb = PolarBackend::new(Backend::Prism5, 40);
+        let by_value = pb.polar(&a, &mut Rng::seed_from(8));
+        let mut pb2 = PolarBackend::new(Backend::Prism5, 40);
+        let mut out = Mat::zeros(0, 0);
+        pb2.polar_into(&a, &mut out, &mut Rng::seed_from(8));
+        assert_eq!(out, by_value);
+        // Warm calls into the persistent buffer stay allocation-free.
+        let allocs = pb2.workspace_allocations();
+        assert!(allocs > 0);
+        for _ in 0..3 {
+            pb2.polar_into(&a, &mut out, &mut Rng::seed_from(8));
+        }
+        assert_eq!(pb2.workspace_allocations(), allocs);
+    }
+
+    #[test]
+    fn forced_direct_strategy_keeps_rect_shapes_on_the_square_solver() {
+        let mut rng = Rng::seed_from(9);
+        let a = randmat::gaussian(&mut rng, 48, 12);
+        let mut forced = PolarBackend::new(Backend::Prism5, 30);
+        forced.set_rect_strategy(crate::matfn::RectStrategy::Direct);
+        let mut plain = PolarBackend::new(Backend::Prism5, 30);
+        let qf = forced.polar(&a, &mut Rng::seed_from(10));
+        // Under Direct the rect solver is bypassed entirely, so the result
+        // is bit-identical to the square solver's.
+        let qp = plain.solver.solve(&a, &mut Rng::seed_from(10)).primary;
+        assert_eq!(qf, qp);
+    }
+
+    #[test]
+    fn try_inv_sqrt_rejects_rank_deficient_gram_and_bad_eps() {
+        let mut rng = Rng::seed_from(11);
+        let g = Mat::gaussian(&mut rng, 12, 3, 1.0);
+        let a = crate::linalg::gemm::syrk_a_at(&g); // rank 3 of 12: singular
+        let mut ib = InvRootBackend::new(Backend::Prism5, 60);
+        let err = ib.try_inv_sqrt(&a, 0.0, &mut rng).unwrap_err();
+        assert!(matches!(err, crate::util::Error::Numerical(_)), "{err}");
+        assert!(err.to_string().contains("positive definite"), "{err}");
+        for bad_eps in [f64::NAN, f64::INFINITY, -1e-3] {
+            assert!(ib.try_inv_sqrt(&a, bad_eps, &mut rng).is_err(), "eps={bad_eps}");
+        }
+        // Adequate damping restores the SPD contract and the solve runs.
+        let is = ib.try_inv_sqrt(&a, 1e-4, &mut rng).unwrap();
+        assert!(!is.has_non_finite());
     }
 }

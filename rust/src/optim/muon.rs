@@ -9,6 +9,7 @@ use super::matfn::PolarBackend;
 use super::Optimizer;
 use crate::config::Backend;
 use crate::linalg::Mat;
+use crate::matfn::RectStrategy;
 use crate::nn::{Param, ParamKind};
 use crate::rng::Rng;
 
@@ -19,6 +20,9 @@ pub struct Muon {
     pub polar: PolarBackend,
     rng: Rng,
     bufs: Vec<Mat>,
+    // Persistent per-layer polar outputs: `polar_into` writes here, so the
+    // hot loop stops minting a fresh Mat per matrix param per step.
+    out_bufs: Vec<Mat>,
     // Adam state for vector params.
     adam_m: Vec<Mat>,
     adam_v: Vec<Mat>,
@@ -34,6 +38,7 @@ impl Muon {
             polar,
             rng: Rng::seed_from(seed ^ 0x4D756F6E), // "Muon"
             bufs: Vec::new(),
+            out_bufs: Vec::new(),
             adam_m: Vec::new(),
             adam_v: Vec::new(),
             t: 0,
@@ -44,12 +49,19 @@ impl Muon {
     pub fn paper_default(backend: Backend, seed: u64) -> Muon {
         Muon::new(6e-3, 0.95, 0.01, PolarBackend::paper_muon(backend), seed)
     }
+
+    /// Select the route rectangular params take through the polar backend
+    /// (the `rect_strategy` config knob; default [`RectStrategy::Auto`]).
+    pub fn set_rect_strategy(&mut self, strategy: RectStrategy) {
+        self.polar.set_rect_strategy(strategy);
+    }
 }
 
 impl Optimizer for Muon {
     fn step(&mut self, params: &mut [&mut Param]) {
         if self.bufs.is_empty() {
             self.bufs = params.iter().map(|p| Mat::zeros(p.w.rows(), p.w.cols())).collect();
+            self.out_bufs = self.bufs.clone();
             self.adam_m = self.bufs.clone();
             self.adam_v = self.bufs.clone();
         }
@@ -61,8 +73,11 @@ impl Optimizer for Muon {
             buf.axpy(1.0, &p.g);
             match p.kind {
                 ParamKind::Matrix if p.w.rows() > 1 && p.w.cols() > 1 => {
-                    // Orthogonalize the momentum matrix.
-                    let o = self.polar.polar(buf, &mut self.rng);
+                    // Orthogonalize the momentum matrix into this layer's
+                    // persistent output buffer — rectangular params route
+                    // through the cheap Gram/range path inside the backend.
+                    let o = &mut self.out_bufs[i];
+                    self.polar.polar_into(buf, o, &mut self.rng);
                     // RMS-preserving scale (Muon convention): the polar
                     // factor has unit singular values, so scale by
                     // √(max(m, n)) · 0.2 to match Adam-sized updates.
@@ -72,7 +87,7 @@ impl Optimizer for Muon {
                         // Decoupled decay, W ← (1 − ηλ)W — no clone needed.
                         p.w.scale(1.0 - self.lr * self.weight_decay);
                     }
-                    p.w.axpy(-self.lr * scale, &o);
+                    p.w.axpy(-self.lr * scale, o);
                 }
                 _ => {
                     // Adam path for vectors.
@@ -130,16 +145,54 @@ mod tests {
 
     #[test]
     fn muon_update_is_orthogonal_direction() {
-        let mut rng = Rng::seed_from(2);
-        let mut p = Param::matrix("w", Mat::zeros(12, 8));
-        p.g = Mat::gaussian(&mut rng, 12, 8, 1.0);
-        let mut opt = Muon::new(1.0, 0.0, 0.0, PolarBackend::new(Backend::Prism5, 30), 3);
-        opt.step(&mut [&mut p]);
-        // Update direction = −lr·scale·O with O orthogonal: check singular
-        // values of the update are all ≈ lr·scale.
-        let d = crate::linalg::svd::svd(&p.w);
-        let ratio = d.s[0] / d.s[7];
-        assert!(ratio < 1.01, "update not orthogonal: cond={ratio}");
+        // Near-square (direct route) plus both rectangular orientations
+        // (64×256 and 256×64 resolve to the Gram route under Auto): the
+        // update direction must be orthogonal regardless of the route.
+        for (m, n) in [(12usize, 8usize), (64, 256), (256, 64)] {
+            let mut rng = Rng::seed_from(2);
+            let mut p = Param::matrix("w", Mat::zeros(m, n));
+            p.g = Mat::gaussian(&mut rng, m, n, 1.0);
+            let mut opt = Muon::new(1.0, 0.0, 0.0, PolarBackend::new(Backend::Prism5, 30), 3);
+            opt.step(&mut [&mut p]);
+            // Update direction = −lr·scale·O with O orthogonal: check
+            // singular values of the update are all ≈ lr·scale.
+            let d = if m >= n {
+                crate::linalg::svd::svd(&p.w)
+            } else {
+                crate::linalg::svd::svd(&p.w.transpose())
+            };
+            let ratio = d.s[0] / d.s[m.min(n) - 1];
+            assert!(ratio < 1.01, "{m}x{n}: update not orthogonal: cond={ratio}");
+        }
+    }
+
+    #[test]
+    fn muon_steps_are_allocation_free_after_the_first() {
+        // One square-ish and one rectangular param: after the first step
+        // both the square solver and the rect solver have warm pools, and
+        // the per-layer outputs land in persistent buffers via polar_into —
+        // further steps must not miss the workspace pool.
+        let mut rng = Rng::seed_from(5);
+        let mut p1 = Param::matrix("w1", Mat::zeros(12, 8));
+        let mut p2 = Param::matrix("w2", Mat::zeros(64, 16));
+        let mut opt = Muon::new(0.01, 0.9, 0.0, PolarBackend::new(Backend::Prism5, 10), 6);
+        for _ in 0..2 {
+            p1.g = Mat::gaussian(&mut rng, 12, 8, 1.0);
+            p2.g = Mat::gaussian(&mut rng, 64, 16, 1.0);
+            opt.step(&mut [&mut p1, &mut p2]);
+        }
+        let allocs = opt.polar.workspace_allocations();
+        assert!(allocs > 0);
+        for _ in 0..3 {
+            p1.g = Mat::gaussian(&mut rng, 12, 8, 1.0);
+            p2.g = Mat::gaussian(&mut rng, 64, 16, 1.0);
+            opt.step(&mut [&mut p1, &mut p2]);
+        }
+        assert_eq!(
+            opt.polar.workspace_allocations(),
+            allocs,
+            "warm Muon steps must not miss the workspace pool"
+        );
     }
 
     #[test]

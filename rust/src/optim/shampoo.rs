@@ -110,20 +110,24 @@ impl Optimizer for Shampoo {
                 if refresh || !st.initialized {
                     // Normalise accumulators so damping is scale-free (the
                     // refresh path is cold — every `precond_interval` steps —
-                    // so the backend's allocations are acceptable).
+                    // so the backend's allocations are acceptable). The
+                    // validated solve rejects a rank-deficient damped
+                    // accumulator (possible in the first steps, when L/R
+                    // hold one low-rank gradient's worth of mass) with a
+                    // typed error; on rejection we keep the previous
+                    // preconditioner — identity before the first successful
+                    // refresh — rather than iterate on a singular operand.
                     let lt = st.l.trace().max(1e-30) / m as f64;
                     let rt = st.r.trace().max(1e-30) / n as f64;
                     let ln = st.l.scaled(1.0 / lt);
                     let rn = st.r.scaled(1.0 / rt);
-                    st.l_inv = self
-                        .backend
-                        .inv_sqrt(&ln, self.damping, &mut self.rng)
-                        .scaled(1.0 / lt.sqrt());
-                    st.r_inv = self
-                        .backend
-                        .inv_sqrt(&rn, self.damping, &mut self.rng)
-                        .scaled(1.0 / rt.sqrt());
-                    st.initialized = true;
+                    let li = self.backend.try_inv_sqrt(&ln, self.damping, &mut self.rng);
+                    let ri = self.backend.try_inv_sqrt(&rn, self.damping, &mut self.rng);
+                    if let (Ok(li), Ok(ri)) = (li, ri) {
+                        st.l_inv = li.scaled(1.0 / lt.sqrt());
+                        st.r_inv = ri.scaled(1.0 / rt.sqrt());
+                        st.initialized = true;
+                    }
                 }
                 // U = L^{-1/2} G R^{-1/2}.
                 let mut lg = self.scratch.take(m, n);
@@ -202,6 +206,25 @@ mod tests {
         let st = opt.states[0].as_ref().unwrap();
         assert!(st.initialized);
         assert!(st.l.fro_norm() > 0.0 && st.r.fro_norm() > 0.0);
+        assert!(!p.w.has_non_finite());
+    }
+
+    #[test]
+    fn refresh_rejection_keeps_previous_preconditioner() {
+        // Rank-2 gradients make L (8×8) singular; with zero damping the
+        // validated refresh must reject the solve and keep the identity
+        // preconditioner instead of iterating on a rank-deficient operand.
+        let mut rng = Rng::seed_from(7);
+        let mut p = Param::matrix("w", Mat::zeros(8, 2));
+        let mut opt = Shampoo::new(0.1, 0.0, 1, InvRootBackend::new(Backend::Prism5, 30), 4);
+        opt.momentum = 0.0;
+        for _ in 0..2 {
+            p.g = Mat::gaussian(&mut rng, 8, 2, 1.0);
+            opt.step(&mut [&mut p]);
+        }
+        let st = opt.states[0].as_ref().unwrap();
+        assert!(!st.initialized, "singular L with zero damping must be rejected");
+        assert_eq!(st.l_inv, Mat::eye(8), "previous (identity) preconditioner kept");
         assert!(!p.w.has_non_finite());
     }
 

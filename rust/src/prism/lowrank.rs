@@ -1,0 +1,209 @@
+//! Randomized range-finder orthogonalization for genuinely low-rank
+//! updates — [`RectStrategy::RangeFinder`]'s engine.
+//!
+//! For a low-rank `A` (think a rank-r gradient accumulated from r
+//! microbatches), even the Gram route wastes work: it solves a p×p inverse
+//! root when only an r-dimensional subspace is active — and worse, the Gram
+//! matrix of a rank-deficient `A` is singular, which the inverse root cannot
+//! tolerate. The Halko–Martinsson–Tropp range finder sidesteps both:
+//!
+//! 1. sketch `Y = A·Ωᵀ` with a Gaussian test matrix `Ω` (k×n, drawn through
+//!    [`crate::sketch::SketchKind::fill`] so the RNG-stream contract holds);
+//! 2. orthonormalize `Y` in place (modified Gram–Schmidt, rank-revealing) —
+//!    `Q₁` spans range(A) almost surely when `k ≥ rank(A)`;
+//! 3. project to the small core `C = Q₁ᵀA` (r×n) and polar-solve it with the
+//!    ordinary PRISM iteration;
+//! 4. expand back: `Q = Q₁·polar(C)`.
+//!
+//! Since `Q₁ᵀQ₁ = I`, the SVD of `Q₁C` is `(Q₁U_c)ΣVᵀ`, so
+//! `polar(Q₁C) = Q₁·polar(C)` exactly. When `rank(A) ≤ k` this equals the
+//! polar factor of `A` restricted to its range: a partial isometry `Q` with
+//! `QᵀA` symmetric PSD — the natural orthogonalization of a rank-deficient
+//! update (a full-rank polar factor would fabricate arbitrary directions in
+//! the null space). The core solve runs in f64; the sketch and projection
+//! are one skinny GEMM each, so there is no mixed-precision variant.
+
+use super::driver::{AlphaMode, EngineHooks, RunRecorder, StopRule};
+use super::polar::{polar_prism_in, PolarOpts, PolarResult};
+use crate::linalg::gemm::{global_engine, Workspace};
+use crate::linalg::{orthonormalize_columns, Mat};
+use crate::rng::Rng;
+use crate::sketch::SketchKind;
+
+/// Options for a range-finder polar run. `rank` is the sketch width k —
+/// exactness requires `k ≥ rank(A)`; the caller knows the rank, we don't.
+pub(crate) struct RangeOpts {
+    pub d: usize,
+    pub alpha: AlphaMode,
+    pub stop: StopRule,
+    pub rank: usize,
+}
+
+/// Workspace-pooled range-finder polar. Wide inputs recurse through the
+/// transpose like [`polar_prism_in`]; `hooks.x0` is ignored (the core lives
+/// in the sketched basis, where a previous full-size factor means nothing).
+pub(crate) fn range_polar_in(
+    a: &Mat,
+    opts: &RangeOpts,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+    hooks: EngineHooks<'_>,
+) -> PolarResult {
+    let (m, n) = a.shape();
+    if m < n {
+        let EngineHooks { x0: _, observer, event_base, job } = hooks;
+        let mut at = ws.take(n, m);
+        a.transpose_into(&mut at);
+        // The `match` re-coerces the observer's trait-object lifetime for
+        // the shorter-lived recursive hooks (Option's variance cannot).
+        let hooks_t = EngineHooks {
+            x0: None,
+            observer: match observer {
+                Some(o) => Some(o),
+                None => None,
+            },
+            event_base,
+            job,
+        };
+        let r = range_polar_in(&at, opts, rng, ws, hooks_t);
+        ws.put(at);
+        return PolarResult { q: r.q.transpose(), log: r.log, transposed: true };
+    }
+    let eng = global_engine();
+    let k = opts.rank.clamp(1, n);
+    let mut omega = ws.take(k, n);
+    SketchKind::Gaussian.fill(&mut omega, rng);
+    // Range sample Y = A·Ωᵀ (m×k) — one skinny GEMM.
+    let mut y = ws.take(m, k);
+    eng.matmul_a_bt_into(&mut y, a, &omega);
+    let r = orthonormalize_columns(&mut y);
+    if r == 0 {
+        // A annihilated the whole sketch: A is (numerically) zero on a
+        // full-measure subspace, and the zero matrix's partial-isometry
+        // polar factor is zero.
+        let out = PolarResult {
+            q: Mat::zeros(m, n),
+            log: RunRecorder::start(0.0).finish(&opts.stop),
+            transposed: false,
+        };
+        ws.put(omega);
+        ws.put(y);
+        return out;
+    }
+    // Rank-deficient sketches are compacted left by the orthonormalizer;
+    // borrow the full panel when it kept everything (the common, warm,
+    // allocation-free path) and carve the kept block otherwise.
+    let q1_store;
+    let q1: &Mat = if r == k {
+        &y
+    } else {
+        q1_store = y.block(0, 0, m, r);
+        &q1_store
+    };
+    // Core C = Q₁ᵀA (r×n): the whole action of A inside the captured range.
+    let mut c = ws.take(r, n);
+    eng.matmul_at_b_into(&mut c, q1, a);
+    let popts = PolarOpts { d: opts.d, alpha: opts.alpha, stop: opts.stop };
+    let EngineHooks { x0: _, observer, event_base, job } = hooks;
+    let core_hooks = EngineHooks {
+        x0: None,
+        observer: match observer {
+            Some(o) => Some(o),
+            None => None,
+        },
+        event_base,
+        job,
+    };
+    // The r×n core is wide for r < n; polar_prism_in's own transpose
+    // recursion handles that orientation.
+    let core = polar_prism_in(&c, &popts, rng, ws, core_hooks);
+    // Expand back: Q = Q₁ · polar(C) (m×n).
+    let mut q = ws.take(m, n);
+    eng.matmul_into(&mut q, q1, &core.q);
+    let out = PolarResult { q: q.clone(), log: core.log, transposed: false };
+    ws.put(c);
+    ws.put(q);
+    ws.put(omega);
+    ws.put(y);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::linalg::svd::svd;
+    use crate::randmat;
+
+    fn opts(rank: usize) -> RangeOpts {
+        RangeOpts {
+            d: 2,
+            alpha: AlphaMode::Sketched { p: 8 },
+            stop: StopRule::default().with_max_iters(200).with_tol(1e-12),
+            rank,
+        }
+    }
+
+    /// Rank-r A with a known clean spectrum: B (m×r) · Cᵀ (r×n).
+    fn lowrank(rng: &mut Rng, m: usize, n: usize, r: usize) -> Mat {
+        let b = randmat::orthogonal(rng, m, r);
+        let s = randmat::logspace(0.2, 1.0, r);
+        let c = randmat::with_spectrum(rng, n, r, &s);
+        matmul(&b, &c.transpose())
+    }
+
+    #[test]
+    fn full_rank_sketch_matches_svd_polar() {
+        // k = n on a full-rank tall A captures the whole row space, so the
+        // range-finder route must agree with the exact polar factor.
+        let mut rng = Rng::seed_from(11);
+        let s = randmat::logspace(0.1, 1.0, 10);
+        let a = randmat::with_spectrum(&mut rng, 30, 10, &s);
+        let mut ws = Workspace::new();
+        let out = range_polar_in(&a, &opts(10), &mut rng, &mut ws, EngineHooks::none());
+        assert!(out.log.converged);
+        let err = out.q.sub(&svd(&a).polar_factor()).max_abs();
+        assert!(err < 1e-8, "range polar err {err}");
+    }
+
+    #[test]
+    fn lowrank_polar_is_partial_isometry_with_psd_core() {
+        let mut rng = Rng::seed_from(12);
+        for (m, n) in [(40usize, 24usize), (24, 40)] {
+            let a = lowrank(&mut rng, m, n, 3);
+            let mut ws = Workspace::new();
+            let out = range_polar_in(&a, &opts(6), &mut rng, &mut ws, EngineHooks::none());
+            assert_eq!(out.q.shape(), (m, n));
+            // Q is a partial isometry on range(A): (QᵀQ)² = QᵀQ.
+            let g = matmul(&out.q.transpose(), &out.q);
+            let proj_err = matmul(&g, &g).sub(&g).max_abs();
+            assert!(proj_err < 1e-8, "({m},{n}): projector err {proj_err}");
+            // Polar property: H = QᵀA is symmetric (and Q·H reconstructs A).
+            let h = matmul(&out.q.transpose(), &a);
+            assert!(h.sub(&h.transpose()).max_abs() < 1e-8, "({m},{n}): H not symmetric");
+            let rec_err = matmul(&out.q, &h).sub(&a).max_abs();
+            assert!(rec_err < 1e-8, "({m},{n}): reconstruction err {rec_err}");
+        }
+    }
+
+    #[test]
+    fn zero_input_yields_zero_factor() {
+        let mut rng = Rng::seed_from(13);
+        let a = Mat::zeros(20, 8);
+        let mut ws = Workspace::new();
+        let out = range_polar_in(&a, &opts(4), &mut rng, &mut ws, EngineHooks::none());
+        assert_eq!(out.q, Mat::zeros(20, 8));
+        assert!(out.log.converged);
+    }
+
+    #[test]
+    fn repeated_calls_are_deterministic() {
+        let mut ws = Workspace::new();
+        let a = lowrank(&mut Rng::seed_from(14), 32, 16, 4);
+        let q1 =
+            range_polar_in(&a, &opts(8), &mut Rng::seed_from(7), &mut ws, EngineHooks::none()).q;
+        let q2 =
+            range_polar_in(&a, &opts(8), &mut Rng::seed_from(7), &mut ws, EngineHooks::none()).q;
+        assert_eq!(q1, q2);
+    }
+}

@@ -41,10 +41,13 @@
 //! coupled-sqrt engines — the `Precision::Mixed` backend selected through
 //! [`crate::matfn::SolverSpec::with_precision`], not a separate engine row
 //! (same iterations, different arithmetic; see its module docs for the
-//! accuracy contract).
+//! accuracy contract). [`lowrank`] holds the randomized range-finder used
+//! by `MatFnTask::RectPolar`'s `RectStrategy::RangeFinder` route (registry
+//! keys `prism5-rectpolar`, `ns-rectpolar`, …).
 
 pub mod driver;
 pub mod fit;
+pub mod lowrank;
 pub mod mixed;
 pub mod sign;
 pub mod polar;

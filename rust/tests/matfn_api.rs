@@ -36,17 +36,21 @@ fn backend_strings_round_trip_through_the_registry() {
         Backend::Eigen,
         Backend::PrismNewton,
     ] {
-        for task in [MatFnTask::Polar, MatFnTask::InvSqrt] {
+        for task in [MatFnTask::Polar, MatFnTask::RectPolar, MatFnTask::InvSqrt] {
             let s = Solver::for_backend(b, task, 25).unwrap();
             let name = s.name();
             let re = registry::resolve(&name)
                 .unwrap_or_else(|e| panic!("{:?}/{}: '{name}': {e}", b, task.name()));
             assert_eq!(re.name(), name);
             // The backend string itself parses back too (registry method
-            // vocabulary ⊇ Backend::parse vocabulary). The one exception is
-            // prism-newton×polar: DB-Newton has no polar form, which is
-            // exactly why for_backend substitutes PRISM-5 there.
-            if !(b == Backend::PrismNewton && task == MatFnTask::Polar) {
+            // vocabulary ⊇ Backend::parse vocabulary). The exceptions are
+            // the pairs for_backend substitutes PRISM for: DB-Newton has no
+            // (rect)polar form, and PolarExpress's minimax schedule has no
+            // rectangular form (no "pe-rectpolar" registry key).
+            let substituted = (b == Backend::PrismNewton
+                && matches!(task, MatFnTask::Polar | MatFnTask::RectPolar))
+                || (b == Backend::PolarExpress && task == MatFnTask::RectPolar);
+            if !substituted {
                 let via_string =
                     registry::resolve(&format!("{}-{}", b.name(), task.name())).unwrap();
                 assert_eq!(via_string.task(), task);
@@ -82,6 +86,7 @@ fn reused_solvers_run_allocation_free_for_every_engine() {
     // iterative baselines.
     let cases: &[(&str, &Mat)] = &[
         ("prism5-polar", &tall),
+        ("prism5-rectpolar", &tall), // aspect 2 → Gram route (syrk + p×p core)
         ("prism3-sign", &spd),
         ("prism5-sqrt", &spd),
         ("prism5-invsqrt", &spd),
@@ -214,6 +219,41 @@ fn solve_batch_falls_back_for_non_ns_methods() {
             let want = seq_solver.solve(a, &mut Rng::seed_from(3));
             assert_eq!(out.primary, want.primary, "{name}: batch != sequential");
         }
+    }
+}
+
+#[test]
+fn solve_batch_rectpolar_mixed_shapes_fall_back_sequential() {
+    // RectPolar batches legitimately mix shapes (one job per layer) and are
+    // never lockstepped — routes are chosen per shape and solved through
+    // the Gram/direct cores. The mixed-shape batch must not panic, and
+    // every member must be bitwise identical to a sequential solve from a
+    // clone of the entry RNG state (the per-job stream contract).
+    let mut rng = Rng::seed_from(27);
+    let shapes = [(32usize, 8usize), (8, 32), (24, 6), (10, 10)];
+    let inputs: Vec<Mat> = shapes
+        .iter()
+        .map(|&(m, n)| {
+            let s = randmat::logspace(0.1, 1.0, m.min(n));
+            if m >= n {
+                randmat::with_spectrum(&mut rng, m, n, &s)
+            } else {
+                randmat::with_spectrum(&mut rng, n, m, &s).transpose()
+            }
+        })
+        .collect();
+    let refs: Vec<&Mat> = inputs.iter().collect();
+    let entry = Rng::seed_from(55);
+    let mut batch_solver = registry::resolve("prism5-rectpolar").unwrap();
+    batch_solver.set_stop(StopRule::default().with_max_iters(60));
+    let outs = batch_solver.solve_batch(&refs, &mut entry.clone());
+    assert_eq!(outs.len(), inputs.len());
+    let mut seq_solver = registry::resolve("prism5-rectpolar").unwrap();
+    seq_solver.set_stop(StopRule::default().with_max_iters(60));
+    for (j, (a, out)) in inputs.iter().zip(&outs).enumerate() {
+        let want = seq_solver.solve(a, &mut entry.clone());
+        assert_eq!(out.primary, want.primary, "rectpolar job {j}: batch != sequential");
+        assert_eq!(out.log.residuals, want.log.residuals, "rectpolar job {j}: residual trail");
     }
 }
 

@@ -17,7 +17,7 @@ use prism::baselines::eigen_fn;
 use prism::linalg::eigen::symmetric_eigen;
 use prism::linalg::gemm::matmul;
 use prism::linalg::Mat;
-use prism::matfn::{registry, MatFnTask, Solver, SolverSpec};
+use prism::matfn::{registry, MatFnTask, Precision, Solver, SolverSpec};
 use prism::prism::driver::{IterationLog, StopRule};
 use prism::ptest::{gens, Prop};
 use prism::randmat;
@@ -93,6 +93,64 @@ fn conformance_polar_vs_svd() {
             log_invariants(&out.log, true, &name);
         }
     });
+}
+
+// ───────────── rectangular polar (Gram / direct routes) ─────────────
+
+/// Full-rank m × n operand with σ ∈ [0.1, 1] (κ(A) = 10 ⇒ κ(AᵀA) = 100 on
+/// the Gram route) and its SVD polar factor U·Vᵀ.
+fn rect_grid_case(rng: &mut Rng, m: usize, n: usize) -> (Mat, Mat) {
+    let s = randmat::logspace(0.1, 1.0, m.min(n));
+    let a = if m >= n {
+        randmat::with_spectrum(rng, m, n, &s)
+    } else {
+        randmat::with_spectrum(rng, n, m, &s).transpose()
+    };
+    let exact = eigen_fn::polar_eigen(&a);
+    (a, exact)
+}
+
+#[test]
+fn conformance_rectpolar_vs_svd() {
+    // Adversarial aspect grid: every (m, n) cross-combination of
+    // {8, 63, 256}. Under `RectStrategy::Auto` the squares take the direct
+    // route and every rectangular combination (aspect ≥ 2 throughout) the
+    // Gram route, so both routes and both orientations are pinned against
+    // U·Vᵀ at the f64 bar. One solver is reused across all nine shapes,
+    // exercising the cross-call workspace path on mixed rect shapes.
+    let stop = StopRule::default().with_max_iters(300).with_tol(1e-11);
+    let mut rng = Rng::seed_from(41);
+    let mut s = registry::resolve("prism5-rectpolar").unwrap();
+    s.set_stop(stop);
+    for &m in &[8usize, 63, 256] {
+        for &n in &[8usize, 63, 256] {
+            let (a, exact) = rect_grid_case(&mut rng, m, n);
+            let out = s.solve(&a, &mut rng);
+            let err = out.primary.sub(&exact).max_abs();
+            assert!(err < 1e-8, "rectpolar {m}x{n}: err {err}");
+            log_invariants(&out.log, false, &format!("rectpolar {m}x{n}"));
+        }
+    }
+}
+
+#[test]
+fn conformance_rectpolar_mixed_vs_svd() {
+    // Same grid at `Precision::Mixed` (f32 iterate under the f64 residual
+    // guard + one f64 cleanup step): the contract bar is 1e-4.
+    let stop = StopRule::default().with_max_iters(300).with_tol(1e-9);
+    let mut rng = Rng::seed_from(43);
+    let mut s = registry::resolve("prism5-rectpolar").unwrap();
+    s.set_stop(stop);
+    s.spec_mut().precision = Precision::Mixed;
+    for &m in &[8usize, 63, 256] {
+        for &n in &[8usize, 63, 256] {
+            let (a, exact) = rect_grid_case(&mut rng, m, n);
+            let out = s.solve(&a, &mut rng);
+            let err = out.primary.sub(&exact).max_abs();
+            assert!(err < 1e-4, "rectpolar mixed {m}x{n}: err {err}");
+            log_invariants(&out.log, false, &format!("rectpolar mixed {m}x{n}"));
+        }
+    }
 }
 
 // ─────────────── coupled sqrt / inverse sqrt (rows 1–2) ───────────────

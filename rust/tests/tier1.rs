@@ -140,6 +140,51 @@ fn smoke_sqrt_prism_vs_eigen() {
 }
 
 #[test]
+fn smoke_rectpolar_gram_flop_budget() {
+    // Acceptance gate for the Gram route: O(p²m) + O(p³)-class work must
+    // stay strictly below the identity-padded square embedding's O(m³) at
+    // every aspect ≥ 2. Both routes run the same fixed iteration budget
+    // with Classic α ("ns-*"), so no sketch draws muddy the accounting.
+    let stop = StopRule::default().with_max_iters(6).with_tol(1e-30);
+    for aspect in [2usize, 4] {
+        let p = 16;
+        let m = p * aspect;
+        let mut rng = Rng::seed_from(12);
+        let s = randmat::logspace(0.1, 1.0, p);
+        let a = randmat::with_spectrum(&mut rng, m, p, &s);
+        // Identity-padded square embedding: B[:, :p] = A, B[j, j] = 1 else.
+        let mut b = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..p {
+                b[(i, j)] = a[(i, j)];
+            }
+        }
+        for j in p..m {
+            b[(j, j)] = 1.0;
+        }
+
+        let mut rect = registry::resolve("ns-rectpolar").unwrap();
+        rect.set_stop(stop);
+        let scope = GemmScope::begin();
+        let _ = rect.solve(&a, &mut rng);
+        let rect_flops = scope.flops();
+
+        let mut square = registry::resolve("ns-polar").unwrap();
+        square.set_stop(stop);
+        let scope = GemmScope::begin();
+        let _ = square.solve(&b, &mut rng);
+        let square_flops = scope.flops();
+
+        assert!(rect_flops > 0 && square_flops > 0, "flop accounting must see both solves");
+        assert!(
+            rect_flops < square_flops,
+            "aspect {aspect}: Gram route must spend strictly fewer flops \
+             ({rect_flops} vs {square_flops})"
+        );
+    }
+}
+
+#[test]
 fn smoke_reused_solver_is_allocation_free() {
     // The persistent-solver contract: from the second same-shape call
     // onward, the workspace pool serves every iteration buffer.
