@@ -12,7 +12,7 @@
 //! ```
 
 use prism::cli::Args;
-use prism::config::{Backend, ServiceConfig};
+use prism::config::{Admission, Backend, ServiceConfig};
 use prism::coordinator::async_shampoo::AsyncShampoo;
 use prism::coordinator::service::{JobKind, Service};
 use prism::linalg::gemm::syrk_at_a;
@@ -43,7 +43,8 @@ fn run_load(
 ) -> LoadResult {
     let cfg = ServiceConfig {
         workers,
-        queue_capacity: 256,
+        queue_cap: 256,
+        admission: Admission::Block,
         max_batch,
         sketch_p: 8,
         max_iters: 60,
@@ -55,12 +56,13 @@ fn run_load(
         stream_residuals: false,
         gemm_block: None,
         gemm_kernel: None,
+        faults: None,
     };
     // Mixed shapes: square covariance blocks (InvSqrt) and tall gradient
     // panels (Polar) — same-shape jobs batch together, mixed shapes don't.
     let shapes = vec![(n, n), (n, n / 2), (n + n / 4, n)];
     let mut stream = GradientStream::new(seed, shapes, kappa);
-    let svc = Service::start(cfg, backend, seed);
+    let svc = Service::start(cfg, backend, seed).expect("valid service config");
     let sw = Stopwatch::start();
     for _ in 0..jobs {
         let (layer, g) = stream.next_grad();
@@ -135,7 +137,8 @@ fn main() {
     println!("\n── async Shampoo through the service (staleness-tolerant) ──");
     let cfg = ServiceConfig {
         workers: 2,
-        queue_capacity: 64,
+        queue_cap: 64,
+        admission: Admission::Block,
         max_batch: 1,
         sketch_p: 8,
         max_iters: 40,
@@ -148,8 +151,9 @@ fn main() {
         stream_residuals: true,
         gemm_block: None,
         gemm_kernel: None,
+        faults: None,
     };
-    let svc = Service::start(cfg, Backend::Prism5, seed);
+    let svc = Service::start(cfg, Backend::Prism5, seed).expect("valid service config");
     let mut opt = AsyncShampoo::new(0.05, 1e-6, 5, &svc);
     let mut rng = Rng::seed_from(seed);
     let data = BlobsDataset::generate(&mut rng, 800, 64, 8, 1.8);

@@ -31,7 +31,8 @@ use prism::workload::GradientStream;
 fn service_cfg(workers: usize, max_batch: usize) -> ServiceConfig {
     ServiceConfig {
         workers,
-        queue_capacity: 256,
+        queue_cap: 256,
+        admission: prism::config::Admission::Block,
         max_batch,
         sketch_p: 8,
         max_iters: 60,
@@ -42,6 +43,7 @@ fn service_cfg(workers: usize, max_batch: usize) -> ServiceConfig {
         stream_residuals: false,
         gemm_block: None,
         gemm_kernel: None,
+        faults: None,
     }
 }
 
@@ -54,7 +56,8 @@ fn run(
 ) -> (f64, f64, f64) {
     let shapes = vec![(n, n), (n, n / 2)];
     let mut stream = GradientStream::new(42, shapes, 0.5);
-    let svc = Service::start(service_cfg(workers, max_batch), backend, 42);
+    let svc =
+        Service::start(service_cfg(workers, max_batch), backend, 42).expect("valid bench config");
     let sw = Stopwatch::start();
     for _ in 0..jobs {
         let (layer, g) = stream.next_grad();
@@ -77,7 +80,8 @@ fn run(
 /// Returns (jobs/s, sketch fills, total solver iterations, batches).
 fn run_amortization(max_batch: usize, inputs: &[Mat]) -> (f64, u64, u64, usize) {
     let jobs = inputs.len();
-    let svc = Service::start(service_cfg(1, max_batch), Backend::Prism5, 42);
+    let svc =
+        Service::start(service_cfg(1, max_batch), Backend::Prism5, 42).expect("valid bench config");
     let fills0 = prism::sketch::fills_total();
     let sw = Stopwatch::start();
     for (layer, a) in inputs.iter().enumerate() {
@@ -192,6 +196,19 @@ fn main() {
     println!("\nexpected: fills/batch stays at O(iters) — about iters/job, the longest");
     println!("member's count — independent of batch size (shared lockstep sketch),");
     println!("where per-job solving would pay batch · iters/job fills per batch.");
+
+    // ── robustness counters: one tiny burst's full metrics report ───────
+    // CI grep-gates `service.worker_panics` and `service.jobs_escalated`
+    // in the smoke output: the supervision counters must always appear
+    // (explicit zeros on a clean run), or a metrics regression could
+    // silently hide real incidents.
+    let svc = Service::start(service_cfg(1, 4), Backend::Prism5, 42).expect("valid bench config");
+    for (layer, a) in inputs.iter().take(4).enumerate() {
+        svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+    }
+    let _ = svc.drain().unwrap();
+    println!("\nservice metrics (clean run — the fault counters report zero):");
+    println!("{}", svc.report());
     match report.finish() {
         Some(path) => println!("report → {path}  (series → bench_out/perf_service.jsonl)"),
         None => println!("report not written (read-only checkout?)"),

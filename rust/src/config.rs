@@ -49,6 +49,36 @@ impl Backend {
     }
 }
 
+/// What `Service::submit` does when the admission queue is full
+/// (pending + inflight ≥ `queue_cap`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// `submit` waits for capacity (assumes some thread is draining
+    /// results). `try_submit` never blocks regardless of this setting.
+    Block,
+    /// `submit` behaves like `try_submit`: a full queue is a typed
+    /// [`crate::util::Error::Backpressure`] the caller must handle.
+    Reject,
+}
+
+impl Admission {
+    pub fn parse(s: &str) -> Result<Admission> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" | "blocking" => Ok(Admission::Block),
+            "reject" | "rejecting" => Ok(Admission::Reject),
+            other => Err(Error::Parse(format!(
+                "unknown admission policy '{other}' (want block | reject)"
+            ))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Admission::Block => "block",
+            Admission::Reject => "reject",
+        }
+    }
+}
+
 /// Training configuration shared by the Shampoo/Muon experiments.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -136,7 +166,16 @@ impl TrainConfig {
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub workers: usize,
-    pub queue_capacity: usize,
+    /// Admission cap: the service accepts at most this many jobs in flight
+    /// (router-pending + dispatched-but-unfetched) at once. When the cap is
+    /// hit, `submit` either blocks or returns a typed
+    /// [`crate::util::Error::Backpressure`] per [`ServiceConfig::admission`]
+    /// (`service.queue_cap` in TOML; the pre-PR-8 `service.queue_capacity`
+    /// spelling is still accepted).
+    pub queue_cap: usize,
+    /// Full-queue behaviour of `submit` (`service.admission = "block" |
+    /// "reject"` in TOML, `--admission` on the CLI). Default `block`.
+    pub admission: Admission,
     /// Batch together up to this many same-shape jobs per dispatch.
     pub max_batch: usize,
     /// Sketch size p for the PRISM fits.
@@ -152,8 +191,8 @@ pub struct ServiceConfig {
     /// Per-worker cap on cached persistent solvers (one solver is kept per
     /// (kind, shape) route; `service.solver_cache_cap` in TOML). Least-
     /// recently-used routes are evicted beyond the cap, so a shape-diverse
-    /// tenant cannot grow a worker's solver map without bound. Values are
-    /// clamped to ≥ 1 at use.
+    /// tenant cannot grow a worker's solver map without bound. Must be ≥ 1
+    /// (checked by [`ServiceConfig::validate`] at service start).
     pub solver_cache_cap: usize,
     /// GEMM pool size shared by the engines (`--threads` on the CLI,
     /// `service.gemm_threads` in TOML). Any value produces bit-identical
@@ -189,13 +228,21 @@ pub struct ServiceConfig {
     /// accuracy contract. Malformed values degrade to `f64` (same keep-the-
     /// default policy as `gemm_kernel`).
     pub precision: Precision,
+    /// Deterministic fault-injection plan (`service.faults` in TOML,
+    /// `--faults` on the CLI, `PALLAS_FAULTS` in the environment). The spec
+    /// grammar is documented at [`crate::runtime::faultinject::FaultPlan`];
+    /// `None` — the default — leaves fault injection inert. This exists for
+    /// the chaos suite and for rehearsing failure drills against a live
+    /// service; it must never be set in production configs.
+    pub faults: Option<String>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-            queue_capacity: 1024,
+            queue_cap: 1024,
+            admission: Admission::Block,
             max_batch: 8,
             sketch_p: 8,
             max_iters: 30,
@@ -206,6 +253,7 @@ impl Default for ServiceConfig {
             gemm_block: None,
             gemm_kernel: None,
             precision: Precision::F64,
+            faults: None,
         }
     }
 }
@@ -217,7 +265,15 @@ impl ServiceConfig {
             v.get_path(p).and_then(|x| x.as_int()).map(|x| x as usize).unwrap_or(d)
         };
         c.workers = geti("service.workers", c.workers);
-        c.queue_capacity = geti("service.queue_capacity", c.queue_capacity);
+        // `queue_capacity` is the pre-PR-8 spelling; `queue_cap` wins if both
+        // are present.
+        c.queue_cap = geti("service.queue_capacity", c.queue_cap);
+        c.queue_cap = geti("service.queue_cap", c.queue_cap);
+        if let Some(s) = v.get_path("service.admission").and_then(|x| x.as_str()) {
+            // Malformed values keep the blocking default (same keep-the-
+            // default policy as gemm_kernel / precision below).
+            c.admission = Admission::parse(s).unwrap_or(c.admission);
+        }
         c.max_batch = geti("service.max_batch", c.max_batch);
         c.sketch_p = geti("service.sketch_p", c.sketch_p);
         c.max_iters = geti("service.max_iters", c.max_iters);
@@ -243,7 +299,31 @@ impl ServiceConfig {
             // Malformed values keep the f64 default (same policy as above).
             c.precision = Precision::parse(s).unwrap_or(c.precision);
         }
+        if let Some(s) = v.get_path("service.faults").and_then(|x| x.as_str()) {
+            // The spec is validated (hard error) at Service::start, where a
+            // typo must abort rather than silently run fault-free.
+            c.faults = Some(s.to_string());
+        }
         c
+    }
+
+    /// Range-check the knobs that the service would otherwise have to
+    /// clamp or panic on at runtime. Called by `Service::start`; callers
+    /// building configs by hand can invoke it early for a nicer error site.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers < 1 {
+            return Err(Error::Config("service.workers must be >= 1".into()));
+        }
+        if self.queue_cap < 1 {
+            return Err(Error::Config("service.queue_cap must be >= 1".into()));
+        }
+        if self.max_batch < 1 {
+            return Err(Error::Config("service.max_batch must be >= 1".into()));
+        }
+        if self.solver_cache_cap < 1 {
+            return Err(Error::Config("service.solver_cache_cap must be >= 1".into()));
+        }
+        Ok(())
     }
 }
 
@@ -315,6 +395,59 @@ backend = "prism3"
         let v = parse_toml("[service]\nsolver_cache_cap = 4\n").unwrap();
         assert_eq!(ServiceConfig::from_value(&v).solver_cache_cap, 4);
         assert_eq!(ServiceConfig::default().solver_cache_cap, 32);
+    }
+
+    #[test]
+    fn service_config_queue_cap_parses_both_spellings() {
+        assert_eq!(ServiceConfig::default().queue_cap, 1024);
+        let v = parse_toml("[service]\nqueue_cap = 64\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).queue_cap, 64);
+        // The pre-PR-8 spelling still works...
+        let v = parse_toml("[service]\nqueue_capacity = 32\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).queue_cap, 32);
+        // ...and the new key wins when both are present.
+        let v = parse_toml("[service]\nqueue_capacity = 32\nqueue_cap = 8\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).queue_cap, 8);
+    }
+
+    #[test]
+    fn service_config_admission_parses() {
+        assert_eq!(ServiceConfig::default().admission, Admission::Block);
+        let v = parse_toml("[service]\nadmission = \"reject\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).admission, Admission::Reject);
+        let v = parse_toml("[service]\nadmission = \"block\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).admission, Admission::Block);
+        // Malformed values keep the blocking default.
+        let v = parse_toml("[service]\nadmission = \"drop\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).admission, Admission::Block);
+        for a in [Admission::Block, Admission::Reject] {
+            assert_eq!(Admission::parse(a.name()).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn service_config_faults_parses() {
+        assert_eq!(ServiceConfig::default().faults, None);
+        let v = parse_toml("[service]\nfaults = \"nan:solve=0,iter=1\"\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).faults.as_deref(), Some("nan:solve=0,iter=1"));
+    }
+
+    #[test]
+    fn service_config_validate_rejects_zero_caps() {
+        assert!(ServiceConfig::default().validate().is_ok());
+        for field in ["workers", "queue_cap", "max_batch", "solver_cache_cap"] {
+            let mut c = ServiceConfig::default();
+            match field {
+                "workers" => c.workers = 0,
+                "queue_cap" => c.queue_cap = 0,
+                "max_batch" => c.max_batch = 0,
+                _ => c.solver_cache_cap = 0,
+            }
+            match c.validate() {
+                Err(Error::Config(m)) => assert!(m.contains(field), "{m} should name {field}"),
+                other => panic!("{field} = 0 must be Error::Config, got {other:?}"),
+            }
+        }
     }
 
     #[test]
@@ -415,6 +548,12 @@ mod file_tests {
         assert_eq!(svc.precision, Precision::F64);
         assert_eq!(svc.sketch_p, 8);
         assert_eq!(svc.solver_cache_cap, 32);
+        // Admission-control knobs documented in the shipped config; the
+        // fault-injection knob must ship commented out (inert).
+        assert_eq!(svc.queue_cap, 256);
+        assert_eq!(svc.admission, Admission::Block);
+        assert_eq!(svc.faults, None);
+        svc.validate().expect("shipped service config must validate");
 
         // Muon's config opts into the mixed-precision polar path.
         let src = std::fs::read_to_string(format!("{root}/configs/muon_fig6.toml")).unwrap();

@@ -253,7 +253,8 @@ mod tests {
     fn service(workers: usize) -> Service {
         let cfg = ServiceConfig {
             workers,
-            queue_capacity: 64,
+            queue_cap: 64,
+            admission: crate::config::Admission::Block,
             max_batch: 1, // refreshes should dispatch immediately
             sketch_p: 8,
             max_iters: 40,
@@ -264,8 +265,9 @@ mod tests {
             stream_residuals: false,
             gemm_block: None,
             gemm_kernel: None,
+            faults: None,
         };
-        Service::start(cfg, Backend::Prism5, 9)
+        Service::start(cfg, Backend::Prism5, 9).expect("valid service config")
     }
 
     fn train_loss_curve_with(

@@ -16,6 +16,7 @@
 
 pub mod async_shampoo;
 pub mod service;
+pub mod supervise;
 pub mod train;
 
 pub use async_shampoo::AsyncShampoo;

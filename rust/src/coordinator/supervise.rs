@@ -1,0 +1,498 @@
+//! Worker supervision for the preconditioner service: panic containment,
+//! in-thread respawn, pre-solve admission checks (deadline / cancellation /
+//! poisoned input) and the retry-with-escalation ladder.
+//!
+//! ## Supervision contract
+//!
+//! Each worker runs every batch inside [`std::panic::catch_unwind`]. A panic
+//! — whether a library bug or a scripted
+//! [`crate::runtime::faultinject::Fault::WorkerPanic`] — is converted into
+//! one typed error [`JobResult`] per batch member that had not yet reported
+//! (counted in `service.jobs_failed`, with `service.worker_panics`
+//! incremented once per incident), and the worker then **respawns in
+//! place**: it rebuilds a fresh [`SolverCache`] and observer tag cell
+//! (`service.worker_restarts`) and keeps serving the same channels on the
+//! same thread. No submitted job is ever lost and the service's
+//! one-result-per-job accounting survives arbitrary panics.
+//!
+//! ## Escalation ladder
+//!
+//! A batch member whose solve fails ([`MatFnOutput::is_failure`]: divergence
+//! or a non-finite iterate) is retried solo through a deterministic ladder —
+//! each rung a fresh cold solver reading a clone of the batch's RNG stream:
+//!
+//! 1. **`f64`** — when the service runs `precision = mixed`, retry the same
+//!    method in full f64 (the cheapest fix when the f32 iterate left the
+//!    method's basin of attraction).
+//! 2. **`damp(δ)`** — InvSqrt only: bump the diagonal by a deterministic
+//!    δ = 1e-6·‖A‖_F/√n and retry at f64. This changes the problem to
+//!    (A + δI)^{-1/2}, which the recorded fallback string makes explicit.
+//! 3. **`eigen`** — the O(n³) eigendecomposition baseline: slow, but free
+//!    of iteration-divergence failure modes.
+//!
+//! The traversed path is recorded in [`JobResult::fallback`] (e.g.
+//! `"f64→damp(1.2e-6)→eigen"`) and `service.jobs_escalated` counts jobs
+//! that entered the ladder. A job whose every rung fails still yields
+//! exactly one result — zero matrix, typed error, `service.jobs_failed`.
+
+use super::service::{batch_stream_seed, Job, JobKind, JobResult, ResidualEvent, WorkerMsg};
+use crate::config::{Backend, ServiceConfig};
+use crate::linalg::Mat;
+use crate::matfn::{MatFnOutput, MatFnTask, Precision, Solver};
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::rng::Rng;
+use crate::runtime::faultinject;
+use crate::util::{lock_or_recover, Stopwatch};
+use std::collections::BTreeSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Per-worker LRU cache of persistent solvers keyed by (kind, shape) route.
+/// A cached solver's workspace holds the grown batch panels — the cache is
+/// what makes the steady state allocation-free — and the cap bounds memory
+/// under shape-diverse traffic. Reported through the metrics registry:
+/// counter `service.solver_cache_evictions`, gauge
+/// `service.solver_cache_size` (last-touching worker wins).
+struct SolverCache {
+    cap: usize,
+    tick: u64,
+    /// (route key, solver, last-used tick); linear scans — caps are small.
+    entries: Vec<((u8, usize, usize), Solver, u64)>,
+    evictions: Arc<Counter>,
+    size: Arc<Gauge>,
+}
+
+impl SolverCache {
+    fn new(cap: usize, metrics: &Registry) -> SolverCache {
+        SolverCache {
+            cap,
+            tick: 0,
+            entries: Vec::new(),
+            evictions: metrics.counter("service.solver_cache_evictions"),
+            size: metrics.gauge("service.solver_cache_size"),
+        }
+    }
+
+    fn get_or_insert(
+        &mut self,
+        key: (u8, usize, usize),
+        make: impl FnOnce() -> Solver,
+    ) -> &mut Solver {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(i) = self.entries.iter().position(|(k, _, _)| *k == key) {
+            self.entries[i].2 = tick;
+            return &mut self.entries[i].1;
+        }
+        if self.entries.len() >= self.cap {
+            // cap >= 1 is enforced by `ServiceConfig::validate` at service
+            // start, so a full cache is non-empty; stay defensive anyway —
+            // a missing victim must not panic a worker.
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, _, used))| *used)
+                .map(|(i, _)| i);
+            if let Some(lru) = lru {
+                self.entries.swap_remove(lru);
+                self.evictions.inc();
+            }
+        }
+        self.entries.push((key, make(), tick));
+        self.size.set(self.entries.len() as i64);
+        &mut self.entries.last_mut().expect("just pushed").1
+    }
+}
+
+/// Everything a worker thread is born with: identity, channels, shared
+/// state. Bundled so [`spawn_worker`]'s signature survives growth.
+pub(super) struct WorkerSpec {
+    /// Stable worker index (0-based), used by the panic-injection hook.
+    pub index: usize,
+    pub backend: Backend,
+    pub seed: u64,
+    pub rx: Arc<Mutex<Receiver<WorkerMsg>>>,
+    pub res_tx: Sender<JobResult>,
+    pub prog_tx: Sender<ResidualEvent>,
+    pub metrics: Arc<Registry>,
+    /// Ids marked by [`super::service::Service::cancel`]; a worker that
+    /// finds a batch member here short-circuits it before solving.
+    pub cancelled: Arc<Mutex<BTreeSet<u64>>>,
+}
+
+/// The solver-tuning subset of [`ServiceConfig`] a worker needs per batch.
+#[derive(Clone, Copy)]
+struct WorkerCfg {
+    iters: usize,
+    tol: Option<f64>,
+    sketch_p: usize,
+    cache_cap: usize,
+    stream: bool,
+    precision: Precision,
+}
+
+/// Spawn one supervised worker thread serving the shared job channel.
+pub(super) fn spawn_worker(spec: WorkerSpec, cfg: &ServiceConfig) -> JoinHandle<()> {
+    let wcfg = WorkerCfg {
+        iters: cfg.max_iters,
+        tol: cfg.tol,
+        sketch_p: cfg.sketch_p,
+        cache_cap: cfg.solver_cache_cap,
+        stream: cfg.stream_residuals,
+        precision: cfg.precision,
+    };
+    std::thread::spawn(move || {
+        let mut worker = Worker::new(spec, wcfg);
+        loop {
+            let msg = { lock_or_recover(&worker.spec.rx).recv() };
+            match msg {
+                Ok(WorkerMsg::Batch(jobs)) => {
+                    if !jobs.is_empty() {
+                        worker.run_supervised(jobs);
+                    }
+                }
+                Ok(WorkerMsg::Shutdown) | Err(_) => break,
+            }
+        }
+    })
+}
+
+struct Worker {
+    spec: WorkerSpec,
+    cfg: WorkerCfg,
+    /// Persistent solvers per (kind, shape) route, LRU-capped: same-route
+    /// batches reuse the solver's workspace, so the steady-state
+    /// preconditioner stream runs allocation-free.
+    cache: SolverCache,
+    /// (id, layer) of the current batch's members, read by the persistent
+    /// streaming observers (refreshed per batch; the Vec's capacity is
+    /// reused, so the warm path stays allocation-free with streaming on).
+    tags: Arc<Mutex<Vec<(u64, usize)>>>,
+    /// Jobs this worker has accepted for solving (1-based, survives
+    /// restarts); drives the deterministic panic-injection hook.
+    jobs_accepted: u64,
+    done: Arc<Counter>,
+    failed: Arc<Counter>,
+    rejected: Arc<Counter>,
+    escalated: Arc<Counter>,
+    expired: Arc<Counter>,
+    cancelled: Arc<Counter>,
+    panics: Arc<Counter>,
+    restarts: Arc<Counter>,
+    batch_time: Arc<Histogram>,
+    job_time: Arc<Histogram>,
+}
+
+impl Worker {
+    fn new(spec: WorkerSpec, cfg: WorkerCfg) -> Worker {
+        let m = Arc::clone(&spec.metrics);
+        Worker {
+            cache: SolverCache::new(cfg.cache_cap, &m),
+            tags: Arc::new(Mutex::new(Vec::new())),
+            jobs_accepted: 0,
+            done: m.counter("service.jobs_done"),
+            failed: m.counter("service.jobs_failed"),
+            rejected: m.counter("service.jobs_rejected"),
+            escalated: m.counter("service.jobs_escalated"),
+            expired: m.counter("service.jobs_expired"),
+            cancelled: m.counter("service.jobs_cancelled"),
+            panics: m.counter("service.worker_panics"),
+            restarts: m.counter("service.worker_restarts"),
+            // Execution time is recorded twice since batches became one
+            // solve call: `service.batch_exec_s` is the wall time of a whole
+            // batch, `service.exec_s` keeps its historical per-job meaning
+            // as the amortised share (batch wall / members) — comparable
+            // against `service.latency_s` at any max_batch.
+            batch_time: m.histogram("service.batch_exec_s"),
+            job_time: m.histogram("service.exec_s"),
+            spec,
+            cfg,
+        }
+    }
+
+    /// Run one batch under a panic boundary. On unwind, synthesize a typed
+    /// error result for every member that had not reported yet, then
+    /// respawn in place: fresh solver cache and tag cell, same thread.
+    fn run_supervised(&mut self, jobs: Vec<Job>) {
+        // Metadata snapshot: enough to synthesize an error result for any
+        // member the batch panicked on before reporting it.
+        let meta: Vec<(u64, usize, usize, usize, Instant)> = jobs
+            .iter()
+            .map(|j| (j.id, j.layer, j.matrix.rows(), j.matrix.cols(), j.submitted))
+            .collect();
+        // Ids whose (success or failure) result has been sent. Behind a
+        // Mutex so a panic mid-insert cannot leave it unreadable.
+        let reported: Mutex<BTreeSet<u64>> = Mutex::new(BTreeSet::new());
+        let panicked =
+            catch_unwind(AssertUnwindSafe(|| self.execute_batch(jobs, &reported))).is_err();
+        if !panicked {
+            return;
+        }
+        self.panics.inc();
+        let reported = lock_or_recover(&reported);
+        for (id, layer, rows, cols, submitted) in meta {
+            if reported.contains(&id) {
+                continue;
+            }
+            self.failed.inc();
+            let _ = self.spec.res_tx.send(JobResult {
+                id,
+                layer,
+                result: Mat::zeros(rows, cols),
+                latency_s: submitted.elapsed().as_secs_f64(),
+                batch_size: 1,
+                iters: 0,
+                final_residual: f64::NAN,
+                fallback: None,
+                error: Some(format!(
+                    "job {id}: worker {} panicked mid-batch; worker restarted",
+                    self.spec.index
+                )),
+            });
+        }
+        // Respawn in place: the unwound solver cache and tag cell may hold
+        // arbitrary partial state, so both are rebuilt from scratch.
+        self.cache = SolverCache::new(self.cfg.cache_cap, &self.spec.metrics);
+        self.tags = Arc::new(Mutex::new(Vec::new()));
+        self.restarts.inc();
+    }
+
+    /// Send the one-and-only error result for `job` and mark it reported.
+    fn fail_job(&self, job: &Job, reported: &Mutex<BTreeSet<u64>>, why: String) {
+        let _ = self.spec.res_tx.send(JobResult {
+            id: job.id,
+            layer: job.layer,
+            result: Mat::zeros(job.matrix.rows(), job.matrix.cols()),
+            latency_s: job.submitted.elapsed().as_secs_f64(),
+            batch_size: 1,
+            iters: 0,
+            final_residual: f64::NAN,
+            fallback: None,
+            error: Some(why),
+        });
+        lock_or_recover(reported).insert(job.id);
+    }
+
+    fn execute_batch(&mut self, mut jobs: Vec<Job>, reported: &Mutex<BTreeSet<u64>>) {
+        // Damp InvSqrt inputs in place (ε may differ per job; the route key
+        // only fixes kind and shape).
+        for job in jobs.iter_mut() {
+            if let JobKind::InvSqrt { eps } = job.kind {
+                if eps != 0.0 {
+                    job.matrix.add_diag(eps);
+                }
+            }
+        }
+        // Pre-solve short-circuits. submit() refuses non-finite matrices,
+        // but a non-finite eps poisons the damping above; deadlines may
+        // have expired in the queue; ids may have been cancelled. Each
+        // dead member sends exactly one typed error result — so the
+        // one-result-per-job accounting holds — and the rest solve: a
+        // dead member must never corrupt its batch peers. (When a dropped
+        // job was the batch's first, the executed batch's RNG stream is
+        // seeded by the lowest *surviving* id.)
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            if job.matrix.has_non_finite() {
+                self.rejected.inc();
+                let why = format!(
+                    "job {}: non-finite matrix after damping ({:?})",
+                    job.id, job.kind
+                );
+                self.fail_job(&job, reported, why);
+            } else if job.deadline.is_some_and(|d| d <= now) {
+                self.expired.inc();
+                let why = format!("job {}: deadline expired before solving", job.id);
+                self.fail_job(&job, reported, why);
+            } else if lock_or_recover(&self.spec.cancelled).remove(&job.id) {
+                self.cancelled.inc();
+                let why = format!("job {}: cancelled before solving", job.id);
+                self.fail_job(&job, reported, why);
+            } else {
+                live.push(job);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let jobs = live;
+        // Deterministic panic injection: count the jobs this worker accepts
+        // for solving and unwind *before* any member reports, so the
+        // supervisor's whole-batch recovery path is exercised.
+        for _ in &jobs {
+            self.jobs_accepted += 1;
+            if faultinject::should_panic(self.spec.index, self.jobs_accepted) {
+                panic!(
+                    "faultinject: worker {} scripted to panic on its job #{}",
+                    self.spec.index, self.jobs_accepted
+                );
+            }
+        }
+        let bsize = jobs.len();
+        // The router groups by route key, so the whole batch shares one
+        // (kind, shape) — one solver.
+        let key = jobs[0].kind.route_key(jobs[0].matrix.shape());
+        let first_id = jobs[0].id;
+        let task = task_of(jobs[0].kind);
+        let cfg = self.cfg;
+        let backend = self.spec.backend;
+        let prog_tx = self.spec.prog_tx.clone();
+        let tags = Arc::clone(&self.tags);
+        let solver = self.cache.get_or_insert(key, || {
+            // `tol` passes through as-is: `None` keeps the per-task
+            // defaults (InvSqrt at 1e-9, polar at 1e-7) instead of
+            // flattening every task onto one blanket tolerance.
+            let mut s =
+                Solver::for_backend_tuned(backend, task, cfg.iters, cfg.tol, Some(cfg.sketch_p))
+                    .expect("service backends always have polar/invsqrt forms");
+            s.spec_mut().precision = cfg.precision;
+            if cfg.stream {
+                s.set_observer(Some(Box::new(move |ev| {
+                    let tag = lock_or_recover(&tags).get(ev.job).copied();
+                    if let Some((id, layer)) = tag {
+                        let _ = prog_tx.send(ResidualEvent {
+                            id,
+                            layer,
+                            iter: ev.iter,
+                            residual: ev.residual,
+                        });
+                    }
+                })));
+            }
+            s
+        });
+        if cfg.stream {
+            let mut t = lock_or_recover(&self.tags);
+            t.clear();
+            t.extend(jobs.iter().map(|j| (j.id, j.layer)));
+        }
+        let mut rng = Rng::seed_from(batch_stream_seed(self.spec.seed, first_id));
+        let sw = Stopwatch::start();
+        let outs = {
+            let refs: Vec<&Mat> = jobs.iter().map(|j| &j.matrix).collect();
+            solver.solve_batch(&refs, &mut rng)
+        };
+        let exec_s = sw.elapsed_s();
+        self.batch_time.observe(exec_s);
+        self.job_time.observe(exec_s / bsize as f64);
+        for (job, out) in jobs.into_iter().zip(outs) {
+            let latency_s = job.submitted.elapsed().as_secs_f64();
+            if !out.is_failure() {
+                self.done.inc();
+                let _ = self.spec.res_tx.send(JobResult {
+                    id: job.id,
+                    layer: job.layer,
+                    result: out.primary,
+                    latency_s,
+                    batch_size: bsize,
+                    iters: out.log.iters(),
+                    final_residual: out.log.final_residual(),
+                    fallback: None,
+                    error: None,
+                });
+            } else {
+                self.escalated.inc();
+                let (rescue, path) = self.escalate(&job, first_id);
+                match rescue {
+                    Some(ok) => {
+                        self.done.inc();
+                        let _ = self.spec.res_tx.send(JobResult {
+                            id: job.id,
+                            layer: job.layer,
+                            result: ok.primary,
+                            latency_s: job.submitted.elapsed().as_secs_f64(),
+                            batch_size: bsize,
+                            iters: ok.log.iters(),
+                            final_residual: ok.log.final_residual(),
+                            fallback: Some(path),
+                            error: None,
+                        });
+                    }
+                    None => {
+                        self.failed.inc();
+                        let _ = self.spec.res_tx.send(JobResult {
+                            id: job.id,
+                            layer: job.layer,
+                            result: Mat::zeros(job.matrix.rows(), job.matrix.cols()),
+                            latency_s: job.submitted.elapsed().as_secs_f64(),
+                            batch_size: bsize,
+                            iters: out.log.iters(),
+                            final_residual: out.log.final_residual(),
+                            fallback: Some(path),
+                            error: Some(format!(
+                                "job {}: solve diverged and every escalation failed",
+                                job.id
+                            )),
+                        });
+                    }
+                }
+            }
+            lock_or_recover(reported).insert(job.id);
+        }
+    }
+
+    /// The escalation ladder for one failed batch member (module docs).
+    /// Returns the rescuing output (if any rung succeeded) and the
+    /// traversed path, `"→"`-joined.
+    fn escalate(&self, job: &Job, first_id: u64) -> (Option<MatFnOutput>, String) {
+        let task = task_of(job.kind);
+        let mut path: Vec<String> = Vec::new();
+        if self.cfg.precision == Precision::Mixed {
+            path.push("f64".to_string());
+            if let Some(out) = self.retry(task, &job.matrix, first_id, self.spec.backend) {
+                return (Some(out), path.join("→"));
+            }
+        }
+        if matches!(job.kind, JobKind::InvSqrt { .. }) {
+            let n = job.matrix.rows().max(1);
+            let bump = 1e-6 * job.matrix.fro_norm() / (n as f64).sqrt();
+            if bump.is_finite() && bump > 0.0 {
+                path.push(format!("damp({bump:.1e})"));
+                let mut damped = job.matrix.clone();
+                damped.add_diag(bump);
+                if let Some(out) = self.retry(task, &damped, first_id, self.spec.backend) {
+                    return (Some(out), path.join("→"));
+                }
+            }
+        }
+        path.push("eigen".to_string());
+        let out = self.retry(task, &job.matrix, first_id, Backend::Eigen);
+        (out, path.join("→"))
+    }
+
+    /// One escalation rung: a fresh cold solver at full f64, reading a
+    /// clone of the failed batch's RNG stream. `None` when the rung itself
+    /// fails (unsupported form, divergence, non-finite output).
+    fn retry(
+        &self,
+        task: MatFnTask,
+        a: &Mat,
+        first_id: u64,
+        backend: Backend,
+    ) -> Option<MatFnOutput> {
+        let mut s = Solver::for_backend_tuned(
+            backend,
+            task,
+            self.cfg.iters,
+            self.cfg.tol,
+            Some(self.cfg.sketch_p),
+        )
+        .ok()?;
+        s.spec_mut().precision = Precision::F64;
+        let mut rng = Rng::seed_from(batch_stream_seed(self.spec.seed, first_id));
+        s.solve_checked(a, &mut rng).ok()
+    }
+}
+
+fn task_of(kind: JobKind) -> MatFnTask {
+    match kind {
+        JobKind::InvSqrt { .. } => MatFnTask::InvSqrt,
+        JobKind::Polar => MatFnTask::Polar,
+        JobKind::RectPolar => MatFnTask::RectPolar,
+    }
+}

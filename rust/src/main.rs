@@ -80,6 +80,12 @@ COMMON FLAGS:
   --stream         serve: stream per-iteration residuals from the workers
   --cache-cap C    serve: per-worker LRU cap on cached per-shape solvers
                    (default 32)
+  --queue-cap Q    serve: max jobs admitted but not yet fetched (default 128)
+  --admission P    serve: block|reject — what a full queue does to submit
+                   (default block; reject returns a typed Backpressure error)
+  --faults SPEC    serve: deterministic fault injection, e.g.
+                   "nan:solve=4,iter=1;panic:worker=0,job=9;delay:ms=5"
+                   (default none; PALLAS_FAULTS env var is the fallback)
   --artifacts DIR  artifact directory       (default artifacts)
 
 All subcommands dispatch through the matfn solver registry; any
@@ -397,7 +403,11 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
     let stream_res = args.has_switch("stream");
     let cfg = ServiceConfig {
         workers: args.get_usize("workers", 4)?,
-        queue_capacity: 128,
+        queue_cap: args.get_usize("queue-cap", 128)?,
+        admission: match args.get("admission") {
+            Some(s) => prism::config::Admission::parse(s)?,
+            None => prism::config::Admission::Block,
+        },
         max_batch: args.get_usize("batch", 4)?,
         sketch_p: args.get_usize("sketch", 8)?,
         max_iters: args.get_usize("iters", 60)?,
@@ -425,6 +435,13 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
             Some(spec) => prism::linalg::gemm::MicroKernel::parse(spec)?,
             None => None,
         },
+        // --faults wins; otherwise the PALLAS_FAULTS env var (if set) feeds
+        // the same validated path in Service::start. Absent both, the fault
+        // hooks stay compiled out of the hot path (one relaxed load).
+        faults: args
+            .get("faults")
+            .map(str::to_string)
+            .or_else(|| std::env::var("PALLAS_FAULTS").ok()),
     };
     let backend = Backend::parse(&args.get_string("backend", "prism5"))?;
     let kappa = args.get_f64("kappa", 0.5)?;
@@ -437,7 +454,7 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
     );
     let shapes = vec![(n, n), (n, n / 2)];
     let mut stream = GradientStream::new(seed, shapes, kappa);
-    let svc = Service::start(cfg, backend, seed);
+    let svc = Service::start(cfg, backend, seed)?;
     let sw = Stopwatch::start();
     for _ in 0..jobs {
         let (layer, g) = stream.next_grad();

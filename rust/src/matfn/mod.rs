@@ -298,6 +298,16 @@ pub struct MatFnOutput {
     pub log: IterationLog,
 }
 
+impl MatFnOutput {
+    /// True when the solve cannot be trusted: the iteration log reports
+    /// divergence (non-finite or exploding residual) or the primary result
+    /// itself carries non-finite entries. This is the trigger for the
+    /// service's retry-with-escalation ladder.
+    pub fn is_failure(&self) -> bool {
+        self.log.diverged || self.primary.has_non_finite()
+    }
+}
+
 /// Boxed per-iteration callback installed via [`MatFnSolver::set_observer`].
 pub type BoxObserver = Box<dyn FnMut(&IterEvent) + Send>;
 

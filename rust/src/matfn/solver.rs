@@ -292,6 +292,23 @@ impl Solver {
         Ok(self.solve(a, rng))
     }
 
+    /// [`Solver::try_solve`] that also converts an untrustworthy *outcome*
+    /// — divergence or non-finite entries in the result (see
+    /// [`MatFnOutput::is_failure`]) — into a typed [`Error::Numerical`], so
+    /// retry policies can branch on `Result` instead of inspecting logs.
+    pub fn solve_checked(&mut self, a: &Mat, rng: &mut Rng) -> Result<MatFnOutput> {
+        let out = self.try_solve(a, rng)?;
+        if out.is_failure() {
+            return Err(Error::Numerical(format!(
+                "{}: solve failed (diverged = {}, final residual = {:e})",
+                self.name(),
+                out.log.diverged,
+                out.log.final_residual()
+            )));
+        }
+        Ok(out)
+    }
+
     /// Warm-start from `x0` (see [`MatFnSolver::solve_from`]).
     pub fn solve_from(&mut self, a: &Mat, x0: &Mat, rng: &mut Rng) -> MatFnOutput {
         self.run(a, Some(x0), rng, 0)

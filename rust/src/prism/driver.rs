@@ -165,6 +165,11 @@ pub struct RunRecorder<'a> {
     observer: Option<Observer<'a>>,
     event_base: (usize, f64),
     job: usize,
+    /// Chaos hook: iteration whose residual is replaced with NaN, if this
+    /// run was scripted as a victim by [`crate::runtime::faultinject`].
+    /// `None` always in production (the hook is inert unless a fault plan
+    /// is installed).
+    nan_at: Option<usize>,
 }
 
 impl<'a> RunRecorder<'a> {
@@ -178,6 +183,7 @@ impl<'a> RunRecorder<'a> {
             observer: None,
             event_base: (0, 0.0),
             job: 0,
+            nan_at: crate::runtime::faultinject::begin_solve(),
         }
     }
 
@@ -203,6 +209,11 @@ impl<'a> RunRecorder<'a> {
 
     /// Record one completed iteration and notify the observer.
     pub fn step(&mut self, alpha: f64, post_residual: f64) {
+        // Injected NaN takes the same observable path as a real numerical
+        // breakdown: it lands in the log (and the observer stream), and
+        // `step_guard`/`finish` below see the poisoned value.
+        let post_residual =
+            if self.nan_at == Some(self.log.alphas.len()) { f64::NAN } else { post_residual };
         self.log.alphas.push(alpha);
         self.log.residuals.push(post_residual);
         let elapsed_s = self.sw.elapsed_s();
@@ -224,7 +235,11 @@ impl<'a> RunRecorder<'a> {
     /// tail-of-loop check every engine used to hand-roll.
     pub fn step_guard(&mut self, stop: &StopRule, alpha: f64, post_residual: f64) -> bool {
         self.step(alpha, post_residual);
-        !post_residual.is_finite() || post_residual > stop.diverge_above
+        // Guard on the *recorded* residual, which may have been poisoned by
+        // an injected fault — the loop must stop exactly when the log says
+        // the run broke down.
+        let recorded = self.log.final_residual();
+        !recorded.is_finite() || recorded > stop.diverge_above
     }
 
     pub fn finish(mut self, stop: &StopRule) -> IterationLog {

@@ -1,0 +1,244 @@
+//! Deterministic fault injection for the chaos suite.
+//!
+//! A [`FaultPlan`] is a small, seeded script of failures — "poison solve #4
+//! with a NaN iterate", "panic worker 0 on its 9th job", "delay every
+//! dispatch by 10 ms" — that the coordinator and the iteration recorder
+//! consult at well-defined points. The plan is keyed off configuration
+//! (`service.faults` in TOML, `--faults` on the CLI, `PALLAS_FAULTS` in the
+//! environment) and is **inert by default**: with nothing installed, every
+//! hook is a single relaxed atomic load and no counter advances, so the
+//! production hot path pays essentially nothing for being injectable.
+//!
+//! Determinism contract: faults address *logical* event indices, not wall
+//! clock. `nan` counts engine runs process-wide from [`install`] (every
+//! [`crate::prism::driver::RunRecorder::start`] — including escalation
+//! retries and eigen fallbacks — advances the count by one); `panic` counts
+//! the jobs a given worker has accepted for solving (1-based); `delay` is a
+//! fixed sleep before each dispatch. Under a single worker the event order
+//! is the submission order, so a chaos test that pins `workers = 1` can
+//! name the exact victim job.
+//!
+//! The state is process-global (the engines have no channel back to a
+//! specific service), so concurrent tests that install plans must
+//! serialize; `rust/tests/tier_chaos.rs` holds a suite-wide lock for this.
+
+use crate::util::{lock_or_recover, Error, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One scripted failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Replace the residual of engine run number `solve` (0-based since
+    /// [`install`]) at in-run iteration `iter` (0-based) with NaN, so the
+    /// run takes the real divergence path: the engine breaks out and the
+    /// iteration log reports `diverged`.
+    NanIterate { solve: u64, iter: usize },
+    /// Panic worker `worker` when it is about to solve the `job`-th job it
+    /// has ever accepted (1-based per-worker count).
+    WorkerPanic { worker: usize, job: u64 },
+    /// Sleep this many milliseconds before every batch dispatch.
+    DelayDispatch { ms: u64 },
+}
+
+/// A parsed fault script: `;`-separated clauses, each `kind:key=val,...`.
+///
+/// Grammar (whitespace around tokens is ignored):
+///
+/// ```text
+/// nan:solve=<N>,iter=<K>    poison engine run N at iteration K
+/// panic:worker=<W>,job=<J>  panic worker W on its J-th job (1-based)
+/// delay:ms=<M>              sleep M ms before each dispatch
+/// ```
+///
+/// Example: `nan:solve=4,iter=1;panic:worker=0,job=9;delay:ms=10`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+fn clause_err(clause: &str, why: &str) -> Error {
+    Error::Config(format!("fault clause '{clause}': {why}"))
+}
+
+impl FaultPlan {
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, rest) =
+                clause.split_once(':').ok_or_else(|| clause_err(clause, "missing ':'"))?;
+            let mut kv: BTreeMap<String, u64> = BTreeMap::new();
+            for pair in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| clause_err(clause, "expected key=value pairs"))?;
+                let n: u64 = v.trim().parse().map_err(|_| {
+                    clause_err(clause, &format!("'{}' is not a non-negative integer", v.trim()))
+                })?;
+                kv.insert(k.trim().to_string(), n);
+            }
+            let mut take = |key: &str| -> Result<u64> {
+                kv.remove(key).ok_or_else(|| clause_err(clause, &format!("missing '{key}='")))
+            };
+            let fault = match kind.trim() {
+                "nan" => Fault::NanIterate { solve: take("solve")?, iter: take("iter")? as usize },
+                "panic" => {
+                    Fault::WorkerPanic { worker: take("worker")? as usize, job: take("job")? }
+                }
+                "delay" => Fault::DelayDispatch { ms: take("ms")? },
+                other => {
+                    return Err(clause_err(
+                        clause,
+                        &format!("unknown fault kind '{other}' (want nan | panic | delay)"),
+                    ))
+                }
+            };
+            if let Some(extra) = kv.keys().next() {
+                return Err(clause_err(clause, &format!("unexpected key '{extra}='")));
+            }
+            faults.push(fault);
+        }
+        if faults.is_empty() {
+            return Err(Error::Config(format!("fault spec '{spec}': no clauses")));
+        }
+        Ok(FaultPlan { faults })
+    }
+}
+
+/// Fast-path gate: one relaxed load on every hook when nothing is installed.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// Engine runs observed since the last [`install`].
+static SOLVES: AtomicU64 = AtomicU64::new(0);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Install a plan and reset the solve counter. Replaces any previous plan.
+pub fn install(plan: FaultPlan) {
+    *lock_or_recover(&PLAN) = Some(plan);
+    SOLVES.store(0, Ordering::SeqCst);
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Deactivate fault injection and drop the installed plan.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    *lock_or_recover(&PLAN) = None;
+}
+
+/// Is a plan currently installed?
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Hook for `RunRecorder::start`: count this engine run and return the
+/// iteration index to poison with NaN, if this run is a scripted victim.
+pub fn begin_solve() -> Option<usize> {
+    if !active() {
+        return None;
+    }
+    let idx = SOLVES.fetch_add(1, Ordering::SeqCst);
+    let plan = lock_or_recover(&PLAN);
+    plan.as_ref()?.faults.iter().find_map(|f| match f {
+        Fault::NanIterate { solve, iter } if *solve == idx => Some(*iter),
+        _ => None,
+    })
+}
+
+/// Hook for the worker loop: should worker `worker` panic instead of
+/// solving its `job_seq`-th accepted job (1-based)?
+pub fn should_panic(worker: usize, job_seq: u64) -> bool {
+    if !active() {
+        return false;
+    }
+    match lock_or_recover(&PLAN).as_ref() {
+        Some(p) => p.faults.iter().any(|f| match f {
+            Fault::WorkerPanic { worker: w, job } => *w == worker && *job == job_seq,
+            _ => false,
+        }),
+        None => false,
+    }
+}
+
+/// Hook for `Service::dispatch`: how long to stall before sending, if at all.
+pub fn dispatch_delay_ms() -> Option<u64> {
+    if !active() {
+        return None;
+    }
+    let plan = lock_or_recover(&PLAN);
+    plan.as_ref()?.faults.iter().find_map(|f| match f {
+        Fault::DelayDispatch { ms } => Some(*ms),
+        _ => None,
+    })
+}
+
+/// Parse a plan from the `PALLAS_FAULTS` environment variable, if set and
+/// non-empty. Used by the `serve` CLI when no `--faults`/TOML spec is given.
+pub fn plan_from_env() -> Result<Option<FaultPlan>> {
+    match std::env::var("PALLAS_FAULTS") {
+        Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s).map(Some),
+        _ => Ok(None),
+    }
+}
+
+// The install/hook behaviour mutates process-global state, so it is tested
+// in `rust/tests/tier_chaos.rs` (its own process, suite-serialized); the
+// tests here stay pure so they cannot perturb concurrently running lib
+// tests that execute engines.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let plan = FaultPlan::parse("nan:solve=4,iter=1; panic:worker=0,job=9; delay:ms=10")
+            .expect("spec should parse");
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::NanIterate { solve: 4, iter: 1 },
+                Fault::WorkerPanic { worker: 0, job: 9 },
+                Fault::DelayDispatch { ms: 10 },
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_trailing_separator() {
+        let plan = FaultPlan::parse(" delay: ms = 3 ;").unwrap();
+        assert_eq!(plan.faults, vec![Fault::DelayDispatch { ms: 3 }]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        let bad_specs = [
+            "",
+            "  ;  ",
+            "nan",
+            "nan:solve=1",
+            "nan:solve=1,iter=2,x=3",
+            "panic:worker=a,job=1",
+            "panic:worker=-1,job=1",
+            "explode:now=1",
+            "delay:ms",
+        ];
+        for bad in bad_specs {
+            let got = FaultPlan::parse(bad);
+            assert!(
+                matches!(got, Err(Error::Config(_))),
+                "'{bad}' must be Error::Config, got {got:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn inert_by_default() {
+        // No install has happened in this test binary unless a chaos test
+        // ran first — and those live in a different binary. Every hook must
+        // be a no-op.
+        if !active() {
+            assert_eq!(begin_solve(), None);
+            assert!(!should_panic(0, 1));
+            assert_eq!(dispatch_delay_ms(), None);
+        }
+    }
+}

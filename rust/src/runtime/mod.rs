@@ -5,135 +5,216 @@
 //! The interchange format is HLO **text**, not serialized `HloModuleProto`:
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly.
+//!
+//! The PJRT execution path needs a vendored `xla` crate that not every
+//! build environment carries, so it is gated behind the off-by-default
+//! `pjrt` cargo feature. Without the feature, [`Runtime`] and
+//! [`Executable`] keep their full API surface — manifests load, shapes and
+//! metadata are inspectable — but [`Runtime::load`] and
+//! [`Executable::run_f32`] return a typed [`Error::Runtime`] explaining
+//! that execution requires `--features pjrt`. The integration tests in
+//! `rust/tests/runtime_integration.rs` self-skip when no artifacts are
+//! present, so both build flavours stay green.
 
+pub mod faultinject;
 pub mod manifest;
 
 use crate::linalg::Mat;
-use crate::util::{Error, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use crate::util::Result;
 
 pub use manifest::{ArtifactEntry, Manifest};
 
-/// A loaded, compiled artifact plus its metadata.
-pub struct Executable {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-    pub entry: ArtifactEntry,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::{ArtifactEntry, Manifest};
+    use crate::util::{Error, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-/// PJRT client + executable cache keyed by artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, usize>>,
-    loaded: Mutex<Vec<std::sync::Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Open the artifacts directory (expects `manifest.json` inside).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("pjrt cpu client: {e}")))?;
-        Ok(Runtime {
-            client,
-            dir,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-            loaded: Mutex::new(Vec::new()),
-        })
+    /// A loaded, compiled artifact plus its metadata.
+    pub struct Executable {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+        pub entry: ArtifactEntry,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// PJRT client + executable cache keyed by artifact name.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, usize>>,
+        loaded: Mutex<Vec<std::sync::Arc<Executable>>>,
     }
 
-    /// Load (or fetch cached) an executable by manifest name.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(&idx) = cache.get(name) {
-                return Ok(self.loaded.lock().unwrap()[idx].clone());
+    impl Runtime {
+        /// Open the artifacts directory (expects `manifest.json` inside).
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(&dir.join("manifest.json"))?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("pjrt cpu client: {e}")))?;
+            Ok(Runtime {
+                client,
+                dir,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+                loaded: Mutex::new(Vec::new()),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load (or fetch cached) an executable by manifest name.
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            {
+                let cache = self.cache.lock().unwrap();
+                if let Some(&idx) = cache.get(name) {
+                    return Ok(self.loaded.lock().unwrap()[idx].clone());
+                }
             }
+            let entry = self
+                .manifest
+                .entries
+                .iter()
+                .find(|e| e.name == name)
+                .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))?
+                .clone();
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+            let arc = std::sync::Arc::new(Executable { name: name.to_string(), exe, entry });
+            let mut loaded = self.loaded.lock().unwrap();
+            loaded.push(arc.clone());
+            self.cache.lock().unwrap().insert(name.to_string(), loaded.len() - 1);
+            Ok(arc)
         }
-        let entry = self
-            .manifest
-            .entries
-            .iter()
-            .find(|e| e.name == name)
-            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))?
-            .clone();
-        let path = self.dir.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
-        )
-        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
-        let arc = std::sync::Arc::new(Executable { name: name.to_string(), exe, entry });
-        let mut loaded = self.loaded.lock().unwrap();
-        loaded.push(arc.clone());
-        self.cache.lock().unwrap().insert(name.to_string(), loaded.len() - 1);
-        Ok(arc)
     }
-}
 
-impl Executable {
-    /// Execute with f32 buffers; `inputs[i]` must match the manifest's i-th
-    /// input shape. Returns the tuple elements as flat f32 vectors.
-    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        if inputs.len() != self.entry.inputs.len() {
-            return Err(Error::Runtime(format!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.entry.inputs.len(),
-                inputs.len()
-            )));
-        }
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (buf, spec) in inputs.iter().zip(&self.entry.inputs) {
-            let expect: usize = spec.shape.iter().product::<i64>() as usize;
-            if buf.len() != expect {
+    impl Executable {
+        /// Execute with f32 buffers; `inputs[i]` must match the manifest's
+        /// i-th input shape. Returns the tuple elements as flat f32 vectors.
+        pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            if inputs.len() != self.entry.inputs.len() {
                 return Err(Error::Runtime(format!(
-                    "{}: input '{}' expects {} elems, got {}",
+                    "{}: expected {} inputs, got {}",
                     self.name,
-                    spec.name,
-                    expect,
-                    buf.len()
+                    self.entry.inputs.len(),
+                    inputs.len()
                 )));
             }
-            let lit = xla::Literal::vec1(buf)
-                .reshape(&spec.shape)
-                .map_err(|e| Error::Runtime(format!("reshape input '{}': {e}", spec.name)))?;
-            lits.push(lit);
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (buf, spec) in inputs.iter().zip(&self.entry.inputs) {
+                let expect: usize = spec.shape.iter().product::<i64>() as usize;
+                if buf.len() != expect {
+                    return Err(Error::Runtime(format!(
+                        "{}: input '{}' expects {} elems, got {}",
+                        self.name,
+                        spec.name,
+                        expect,
+                        buf.len()
+                    )));
+                }
+                let lit = xla::Literal::vec1(buf)
+                    .reshape(&spec.shape)
+                    .map_err(|e| Error::Runtime(format!("reshape input '{}': {e}", spec.name)))?;
+                lits.push(lit);
+            }
+            let mut result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
+            // aot.py lowers with return_tuple=True.
+            let elems = result
+                .decompose_tuple()
+                .map_err(|e| Error::Runtime(format!("untuple {}: {e}", self.name)))?;
+            let mut out = Vec::with_capacity(elems.len());
+            for (i, el) in elems.into_iter().enumerate() {
+                out.push(
+                    el.to_vec::<f32>()
+                        .map_err(|e| Error::Runtime(format!("output {i} of {}: {e}", self.name)))?,
+                );
+            }
+            Ok(out)
         }
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
-        // aot.py lowers with return_tuple=True.
-        let elems = result
-            .decompose_tuple()
-            .map_err(|e| Error::Runtime(format!("untuple {}: {e}", self.name)))?;
-        let mut out = Vec::with_capacity(elems.len());
-        for (i, el) in elems.into_iter().enumerate() {
-            out.push(
-                el.to_vec::<f32>()
-                    .map_err(|e| Error::Runtime(format!("output {i} of {}: {e}", self.name)))?,
-            );
-        }
-        Ok(out)
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::{ArtifactEntry, Manifest};
+    use crate::util::{Error, Result};
+    use std::path::Path;
+
+    fn no_pjrt(what: &str) -> Error {
+        Error::Runtime(format!(
+            "{what}: this build lacks the PJRT execution backend — rebuild with \
+             `--features pjrt` (requires the vendored xla crate)"
+        ))
+    }
+
+    /// Manifest-only stand-in for the PJRT executable: metadata is real,
+    /// execution reports a typed error.
+    pub struct Executable {
+        pub name: String,
+        pub entry: ArtifactEntry,
+    }
+
+    /// Manifest-only stand-in for the PJRT runtime: `open` still validates
+    /// and loads `manifest.json` so `prism info` and artifact tooling work;
+    /// only `load`/execution require the `pjrt` feature.
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        /// Open the artifacts directory (expects `manifest.json` inside).
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let manifest = Manifest::load(&dir.as_ref().join("manifest.json"))?;
+            Ok(Runtime { manifest })
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the pjrt feature)".to_string()
+        }
+
+        /// Load an executable by manifest name: always a typed error here.
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            // Check the manifest first so "unknown artifact" and "no
+            // backend" stay distinguishable, matching the real runtime.
+            self.manifest
+                .entries
+                .iter()
+                .find(|e| e.name == name)
+                .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))?;
+            Err(no_pjrt(&format!("artifact '{name}'")))
+        }
+    }
+
+    impl Executable {
+        /// Execute with f32 buffers: always a typed error here.
+        pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            Err(no_pjrt(&self.name))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, Runtime};
 
 /// f64 `Mat` → f32 buffer (row-major).
 pub fn mat_to_f32(m: &Mat) -> Vec<f32> {
@@ -157,6 +238,25 @@ mod tests {
         let back = f32_to_mat(3, 4, &buf).unwrap();
         assert!(m.sub(&back).max_abs() < 1e-6);
         assert!(f32_to_mat(2, 2, &buf).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_errors_are_typed() {
+        // Without artifacts on disk `open` is a Runtime error, not a panic.
+        assert!(Runtime::open("/nonexistent/artifacts").is_err());
+        let entry = ArtifactEntry {
+            name: "train_step".into(),
+            file: "train_step.hlo.txt".into(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            meta: Default::default(),
+        };
+        let exe = Executable { name: "train_step".into(), entry };
+        match exe.run_f32(&[]) {
+            Err(crate::util::Error::Runtime(m)) => assert!(m.contains("pjrt")),
+            other => panic!("want Runtime error, got {other:?}"),
+        }
     }
 
     // PJRT-backed tests live in rust/tests/runtime_integration.rs — they

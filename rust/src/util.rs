@@ -16,6 +16,10 @@ pub enum Error {
     Parse(String),
     /// Filesystem or PJRT runtime problems.
     Runtime(String),
+    /// Admission control refused the job: the service queue is at capacity.
+    Backpressure(String),
+    /// A configuration value is out of its valid range.
+    Config(String),
 }
 
 impl fmt::Display for Error {
@@ -25,6 +29,8 @@ impl fmt::Display for Error {
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Backpressure(m) => write!(f, "backpressure: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
         }
     }
 }
@@ -41,6 +47,17 @@ macro_rules! shape_err {
 #[macro_export]
 macro_rules! numerical_err {
     ($($arg:tt)*) => { $crate::util::Error::Numerical(format!($($arg)*)) };
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// A poisoned mutex means some thread panicked while holding it — for the
+/// coordinator that thread's damage is already converted into typed error
+/// results by the supervisor, so the data behind the lock is still
+/// consistent and the right move is to keep serving rather than cascade
+/// the panic into every later `submit`/`recv`/`inflight` call.
+pub fn lock_or_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Wall-clock stopwatch in seconds.
@@ -202,6 +219,24 @@ mod tests {
     fn error_display() {
         let e = Error::Shape("2x3 vs 4x5".into());
         assert!(format!("{e}").contains("shape"));
+        assert!(format!("{}", Error::Backpressure("queue full".into())).contains("backpressure"));
+        assert!(format!("{}", Error::Config("queue_cap = 0".into())).contains("config"));
+    }
+
+    #[test]
+    fn lock_or_recover_survives_poison() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_or_recover(&m), 7);
+        *lock_or_recover(&m) = 8;
+        assert_eq!(*lock_or_recover(&m), 8);
     }
 
     #[test]

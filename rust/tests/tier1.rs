@@ -204,7 +204,8 @@ fn smoke_service_round_trip() {
     let mut rng = Rng::seed_from(5);
     let cfg = ServiceConfig {
         workers: 2,
-        queue_capacity: 16,
+        queue_cap: 16,
+        admission: prism::config::Admission::Block,
         max_batch: 2,
         sketch_p: 8,
         max_iters: 40,
@@ -215,8 +216,9 @@ fn smoke_service_round_trip() {
         stream_residuals: false,
         gemm_block: None,
         gemm_kernel: None,
+        faults: None,
     };
-    let svc = Service::start(cfg, Backend::Prism5, 7);
+    let svc = Service::start(cfg, Backend::Prism5, 7).expect("valid service config");
     let w = randmat::logspace(0.05, 1.0, 6);
     for layer in 0..2 {
         let a = randmat::sym_with_spectrum(&mut rng, 6, &w);

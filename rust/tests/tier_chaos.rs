@@ -1,0 +1,293 @@
+//! Tier-chaos: the seeded fault-injection suite for the coordinator's
+//! supervision layer (`coordinator::supervise` + `runtime::faultinject`).
+//!
+//! Every test here mutates process-global fault state (the engines consult
+//! one installed [`FaultPlan`]), so the whole suite serializes on one lock
+//! and every test clears the plan on exit — including panicking exits —
+//! via a drop guard. CI additionally runs this binary with
+//! `--test-threads=1` under a hard wall-clock timeout, because the failure
+//! mode these tests exist to catch is a *hang* (a lost job that `drain`
+//! waits on forever).
+//!
+//! The acceptance contract (ISSUE: robustness): a 16-job burst with a
+//! scripted NaN iterate, one worker panic, and one expired deadline must
+//! drain to exactly 16 results — each failure typed — and the unaffected
+//! jobs must be bit-identical to a fault-free run at the same seed and
+//! worker count.
+
+use prism::config::{Admission, Backend, ServiceConfig};
+use prism::coordinator::service::{JobKind, Service};
+use prism::linalg::Mat;
+use prism::randmat;
+use prism::rng::Rng;
+use prism::runtime::faultinject::{self, Fault, FaultPlan};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+static SUITE: Mutex<()> = Mutex::new(());
+
+/// Suite lock + cleanup: holds the serialization guard and clears any
+/// installed fault plan when dropped, so one failing test cannot leak a
+/// plan into the next (or into a later run of the same process).
+struct ChaosGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        faultinject::clear();
+    }
+}
+
+fn chaos_lock() -> ChaosGuard {
+    // A previous test panicking while holding the lock poisons it; the
+    // global fault state is re-initialized per test, so just take it.
+    ChaosGuard(SUITE.lock().unwrap_or_else(std::sync::PoisonError::into_inner))
+}
+
+fn cfg(workers: usize, max_batch: usize, faults: Option<&str>) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        queue_cap: 32,
+        admission: Admission::Block,
+        max_batch,
+        sketch_p: 8,
+        max_iters: 40,
+        tol: None,
+        precision: prism::matfn::Precision::F64,
+        solver_cache_cap: 32,
+        gemm_threads: 1,
+        stream_residuals: false,
+        gemm_block: None,
+        gemm_kernel: None,
+        faults: faults.map(str::to_string),
+    }
+}
+
+/// Same-shape SPD burst inputs (one route, so batching/seeding is the
+/// simple dense-id case the determinism argument needs).
+fn burst_inputs(n: usize, count: usize) -> Vec<Mat> {
+    let mut rng = Rng::seed_from(11);
+    let w = randmat::logspace(0.05, 1.0, n);
+    (0..count).map(|_| randmat::sym_with_spectrum(&mut rng, n, &w)).collect()
+}
+
+/// The headline acceptance test. Faults pin `workers = 1, max_batch = 1`:
+/// each batch is one job seeded by its own id (`batch_stream_seed`), and
+/// the single worker sees jobs in submission order — so the scripted event
+/// indices name exact victims, and removing a victim's solve can never
+/// perturb any other job's RNG stream.
+///
+/// Event audit (ids are dense, 1-based, in submission order; `nan` counts
+/// engine runs from install, 0-based; `panic` counts worker-accepted jobs,
+/// 1-based; job 13's zero TTL expires it before solving, so it advances
+/// neither count):
+///
+/// ```text
+/// jobs 1-4   → solves 0-3
+/// job  5     → solve 4   ← nan:solve=4,iter=1 → diverges → damp rung
+///              (rescue)  ← solve 5 (the escalation retry)
+/// jobs 6-8   → solves 6-8, accepted #6-#8
+/// job  9     → accepted #9 ← panic:worker=0,job=9 → no solve, restart
+/// jobs 10-12 → solves 9-11
+/// job  13    → expired (deadline), never accepted
+/// jobs 14-16 → solves 12-14
+/// ```
+#[test]
+fn chaos_burst_every_job_accounted_and_peers_bit_identical() {
+    let _guard = chaos_lock();
+    let inputs = burst_inputs(8, 16);
+
+    let svc = Service::start(
+        cfg(1, 1, Some("nan:solve=4,iter=1;panic:worker=0,job=9")),
+        Backend::Prism5,
+        42,
+    )
+    .expect("valid chaos config");
+    for (i, a) in inputs.iter().enumerate() {
+        if i == 12 {
+            svc.submit_with_deadline(i, JobKind::InvSqrt { eps: 0.0 }, a.clone(), Duration::ZERO)
+                .unwrap();
+        } else {
+            svc.submit(i, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+        }
+    }
+    let mut results =
+        svc.drain_timeout(Duration::from_secs(60)).expect("faulted burst must still drain");
+    assert_eq!(results.len(), 16, "exactly one result per submitted job");
+    results.sort_by_key(|r| r.id);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.id, i as u64 + 1, "accepted ids are dense in submission order");
+    }
+
+    // Job 5: the poisoned solve diverged, the escalation ladder rescued it.
+    let rescued = &results[4];
+    assert!(
+        rescued.error.is_none(),
+        "escalation must rescue the NaN-poisoned solve, got error {:?}",
+        rescued.error
+    );
+    let path = rescued.fallback.as_deref().expect("a rescued job records its escalation path");
+    assert!(path.contains("damp"), "f64 InvSqrt escalates via the damping rung, got '{path}'");
+    assert!(!rescued.result.has_non_finite());
+
+    // Job 9: its worker panicked before solving; typed error, no result lost.
+    let panicked = &results[8];
+    let err = panicked.error.as_deref().expect("the panicked job must carry a typed error");
+    assert!(err.contains("panic"), "got '{err}'");
+    assert_eq!(panicked.iters, 0);
+    assert!(panicked.final_residual.is_nan());
+
+    // Job 13: expired in the queue; typed error, counted, never solved.
+    let expired = &results[12];
+    let err = expired.error.as_deref().expect("the expired job must carry a typed error");
+    assert!(err.contains("deadline"), "got '{err}'");
+
+    let counter = |name: &str| svc.metrics.counter(name).get();
+    assert_eq!(counter("service.jobs_submitted"), 16);
+    assert_eq!(counter("service.worker_panics"), 1);
+    assert_eq!(counter("service.worker_restarts"), 1);
+    assert_eq!(counter("service.jobs_escalated"), 1);
+    assert_eq!(counter("service.jobs_expired"), 1);
+    assert_eq!(counter("service.jobs_failed"), 1, "only the panicked job is lost");
+    assert_eq!(counter("service.jobs_done"), 14, "13 clean solves + 1 rescue");
+    drop(svc);
+
+    // Fault-free run at the same seed and worker count: the 13 unaffected
+    // jobs must be bit-identical — a fault never perturbs its burst peers.
+    faultinject::clear();
+    let svc = Service::start(cfg(1, 1, None), Backend::Prism5, 42).expect("valid clean config");
+    for (i, a) in inputs.iter().enumerate() {
+        svc.submit(i, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+    }
+    let mut clean = svc.drain_timeout(Duration::from_secs(60)).expect("clean burst must drain");
+    assert_eq!(clean.len(), 16);
+    clean.sort_by_key(|r| r.id);
+    for (f, c) in results.iter().zip(&clean) {
+        assert!(c.error.is_none(), "clean run must not fail job {}", c.id);
+        if matches!(f.id, 5 | 9 | 13) {
+            continue; // the scripted victims
+        }
+        assert!(f.error.is_none());
+        assert_eq!(
+            f.result, c.result,
+            "job {}: a fault elsewhere in the burst perturbed this job's result",
+            f.id
+        );
+    }
+}
+
+/// Shutdown under load: drop the handle mid-burst — with a panic, an
+/// expired deadline, and a cancellation in flight — and check through the
+/// (shared) metrics registry that every admitted job was executed and
+/// counted rather than silently discarded. `Drop` flushes the router and
+/// joins the workers, so by the time `drop(svc)` returns the counters are
+/// final even though no result was ever fetched.
+#[test]
+fn shutdown_under_load_accounts_for_every_submitted_job() {
+    let _guard = chaos_lock();
+    let inputs = burst_inputs(8, 12);
+    let svc = Service::start(cfg(1, 1, Some("panic:worker=0,job=2;delay:ms=1")), Backend::Prism5, 7)
+        .expect("valid chaos config");
+    let metrics = Arc::clone(&svc.metrics);
+    for (i, a) in inputs.iter().enumerate() {
+        if i == 5 {
+            svc.submit_with_deadline(i, JobKind::InvSqrt { eps: 0.0 }, a.clone(), Duration::ZERO)
+                .unwrap();
+        } else {
+            svc.submit(i, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+        }
+    }
+    // Racing the worker on purpose: job 12 is either still pending (counted
+    // cancelled) or already solved (counted done) — both keep the identity.
+    assert!(svc.cancel(12), "id 12 was assigned, so the mark must be accepted");
+    assert!(!svc.cancel(99), "an id the service never assigned is refused");
+    drop(svc);
+
+    let c = |name: &str| metrics.counter(name).get();
+    assert_eq!(c("service.jobs_submitted"), 12);
+    let accounted = c("service.jobs_done")
+        + c("service.jobs_failed")
+        + c("service.jobs_expired")
+        + c("service.jobs_cancelled")
+        + c("service.jobs_rejected");
+    assert_eq!(accounted, 12, "every admitted job must be executed and counted across shutdown");
+    assert_eq!(c("service.worker_panics"), 1, "worker 0's 2nd accepted job is scripted to panic");
+    assert_eq!(c("service.worker_restarts"), 1);
+}
+
+/// The `delay` fault stalls dispatch (inside `submit`, since `max_batch=1`
+/// dispatches eagerly) by a fixed, scripted amount — widening queue-time
+/// race windows deterministically — without affecting any result.
+#[test]
+fn scripted_dispatch_delay_stalls_dispatch_measurably() {
+    let _guard = chaos_lock();
+    let inputs = burst_inputs(6, 3);
+    let svc = Service::start(cfg(1, 1, Some("delay:ms=20")), Backend::Prism5, 3)
+        .expect("valid chaos config");
+    let sw = Instant::now();
+    for (i, a) in inputs.iter().enumerate() {
+        svc.submit(i, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+    }
+    assert!(
+        sw.elapsed() >= Duration::from_millis(60),
+        "3 dispatches under delay:ms=20 must take ≥ 60 ms, took {:?}",
+        sw.elapsed()
+    );
+    let results = svc.drain_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(results.len(), 3);
+    assert!(results.iter().all(|r| r.error.is_none()), "a delay is not a failure");
+}
+
+/// Hook semantics deferred out of `faultinject`'s unit tests (they mutate
+/// the process-global plan): event counting, exact victim addressing,
+/// counter reset on re-install, and full inertness after [`clear`].
+#[test]
+fn install_hooks_count_events_and_clear_restores_inertness() {
+    let _guard = chaos_lock();
+    let plan = FaultPlan::parse("nan:solve=2,iter=3;panic:worker=1,job=4;delay:ms=7").unwrap();
+    faultinject::install(plan);
+    assert!(faultinject::active());
+    // Engine runs count 0-based from install; only run 2 is a victim.
+    assert_eq!(faultinject::begin_solve(), None);
+    assert_eq!(faultinject::begin_solve(), None);
+    assert_eq!(faultinject::begin_solve(), Some(3));
+    assert_eq!(faultinject::begin_solve(), None);
+    assert!(!faultinject::should_panic(0, 4), "wrong worker must not fire");
+    assert!(!faultinject::should_panic(1, 3), "wrong job sequence must not fire");
+    assert!(faultinject::should_panic(1, 4));
+    // The hook itself is stateless (fires on every matching query); the
+    // once-only behaviour lives in the worker's accepted-job counter, which
+    // survives the restart and never repeats a sequence number.
+    assert!(faultinject::should_panic(1, 4));
+    assert_eq!(faultinject::dispatch_delay_ms(), Some(7));
+    // Re-install resets the solve counter.
+    faultinject::install(FaultPlan::parse("nan:solve=0,iter=1").unwrap());
+    assert_eq!(faultinject::begin_solve(), Some(1));
+    faultinject::clear();
+    assert!(!faultinject::active());
+    assert_eq!(faultinject::begin_solve(), None, "cleared hooks must be inert");
+    assert!(!faultinject::should_panic(1, 4));
+    assert_eq!(faultinject::dispatch_delay_ms(), None);
+}
+
+/// `PALLAS_FAULTS` is the env-var route into the same validated parser the
+/// TOML/CLI specs use: absent/empty → no plan, well-formed → the parsed
+/// plan, malformed → a typed config error (never a silently ignored spec).
+#[test]
+fn plan_from_env_validates_like_every_other_spec_source() {
+    let _guard = chaos_lock();
+    std::env::remove_var("PALLAS_FAULTS");
+    assert_eq!(faultinject::plan_from_env().unwrap(), None);
+    std::env::set_var("PALLAS_FAULTS", "  ");
+    assert_eq!(faultinject::plan_from_env().unwrap(), None, "blank spec means no plan");
+    std::env::set_var("PALLAS_FAULTS", "delay:ms=2");
+    assert_eq!(
+        faultinject::plan_from_env().unwrap(),
+        Some(FaultPlan { faults: vec![Fault::DelayDispatch { ms: 2 }] })
+    );
+    std::env::set_var("PALLAS_FAULTS", "explode:now=1");
+    assert!(
+        matches!(faultinject::plan_from_env(), Err(prism::util::Error::Config(_))),
+        "a malformed env spec must be a typed config error"
+    );
+    std::env::remove_var("PALLAS_FAULTS");
+}
