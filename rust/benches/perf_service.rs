@@ -1,7 +1,7 @@
 //! L3 coordinator throughput/latency under load — the service-side view
 //! used in EXPERIMENTS.md §Perf.
 //!
-//! Two sections:
+//! Three sections:
 //!
 //! * **sweep** — worker count, batching limit, and backend on a fixed
 //!   synthetic gradient stream, reporting jobs/s and latency percentiles.
@@ -12,10 +12,16 @@
 //!   per iteration shared across the whole batch, so fills per batch stay
 //!   at O(iters) — roughly the per-job iteration count — independent of
 //!   batch size, where per-job solving would pay O(batch · iters).
+//! * **zoo** — a round-robin mixed-shape "model zoo" stream, the worst
+//!   case for arrival-order batching: adjacent jobs never share a shape.
+//!   FIFO cutting (emulated by flushing on every shape change) dispatches
+//!   singletons; the shape-bucketed scheduler fills full lockstep batches
+//!   per shape, multiplying batch occupancy and dividing fills/solve.
 //!
-//! Both sections land in `bench_out/BENCH_service.json` (uploaded by CI
+//! All sections land in `bench_out/BENCH_service.json` (uploaded by CI
 //! next to `BENCH_gemm.json`/`BENCH_matfn.json`); `--smoke` runs tiny sizes
-//! but still writes the full report shape.
+//! but still writes the full report shape; `--zoo` runs the zoo section
+//! alone (it always runs as part of the full and smoke sweeps too).
 
 use prism::benchkit::{banner, JsonReport, SeriesWriter, Table};
 use prism::config::{Backend, ServiceConfig};
@@ -44,6 +50,8 @@ fn service_cfg(workers: usize, max_batch: usize) -> ServiceConfig {
         gemm_block: None,
         gemm_kernel: None,
         faults: None,
+        linger: None,
+        cache_snapshot: None,
     }
 }
 
@@ -95,62 +103,91 @@ fn run_amortization(max_batch: usize, inputs: &[Mat]) -> (f64, u64, u64, usize) 
     (jobs as f64 / wall, fills, iters, nbatches)
 }
 
+/// Mixed-shape round-robin burst through one worker. `fifo` emulates the
+/// pre-bucket arrival-order cutter by flushing whenever the incoming shape
+/// differs from the previous job's (consecutive same-shape jobs still
+/// batch; any shape change cuts). Returns (jobs/s, mean batch occupancy,
+/// sketch fills).
+fn run_zoo(fifo: bool, max_batch: usize, inputs: &[(usize, Mat)]) -> (f64, f64, u64) {
+    let svc =
+        Service::start(service_cfg(1, max_batch), Backend::Prism5, 42).expect("valid bench config");
+    let fills0 = prism::sketch::fills_total();
+    let sw = Stopwatch::start();
+    let mut prev = None;
+    for (layer, a) in inputs {
+        if fifo && prev.is_some_and(|p| p != a.shape()) {
+            svc.flush().unwrap();
+        }
+        prev = Some(a.shape());
+        svc.submit(*layer, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+    }
+    let results = svc.drain().unwrap();
+    let wall = sw.elapsed_s();
+    let fills = prism::sketch::fills_total() - fills0;
+    let occupancy = svc.metrics.histogram("service.batch_size").mean();
+    (results.len() as f64 / wall, occupancy, fills)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let zoo_only = std::env::args().any(|a| a == "--zoo");
     banner("perf — preconditioner service throughput/latency", "EXPERIMENTS.md §Perf (L3)");
     let (jobs, n) = if smoke { (12, 24) } else { (64, 96) };
     let mut series = SeriesWriter::create("bench_out/perf_service.jsonl");
     let mut report = JsonReport::create("bench_out/BENCH_service.json", "perf_service");
 
-    let mut t = Table::new(&["workers", "max_batch", "backend", "jobs/s", "p50 ms", "p99 ms"]);
-    let mut cases: Vec<(usize, usize, Backend, &str)> = Vec::new();
-    let worker_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
-    for &w in worker_sweep {
-        cases.push((w, 4, Backend::Prism5, "prism5"));
+    if !zoo_only {
+        let mut t =
+            Table::new(&["workers", "max_batch", "backend", "jobs/s", "p50 ms", "p99 ms"]);
+        let mut cases: Vec<(usize, usize, Backend, &str)> = Vec::new();
+        let worker_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+        for &w in worker_sweep {
+            cases.push((w, 4, Backend::Prism5, "prism5"));
+        }
+        let batch_sweep: &[usize] = if smoke { &[1, 8] } else { &[1, 2, 8, 16] };
+        for &b in batch_sweep {
+            cases.push((4, b, Backend::Prism5, "prism5"));
+        }
+        let backends: &[(Backend, &str)] = if smoke {
+            &[(Backend::Eigen, "eigen")]
+        } else {
+            &[
+                (Backend::Eigen, "eigen"),
+                (Backend::PolarExpress, "polar-express"),
+                (Backend::Prism3, "prism3"),
+                (Backend::NewtonSchulz, "newton-schulz"),
+            ]
+        };
+        for &(bk, nm) in backends {
+            cases.push((4, 4, bk, nm));
+        }
+        for (w, b, bk, nm) in cases {
+            let (jps, p50, p99) = run(w, b, bk, jobs, n);
+            t.row(&[
+                w.to_string(),
+                b.to_string(),
+                nm.to_string(),
+                format!("{jps:.1}"),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+            ]);
+            let fields = [
+                ("section", Value::Str("sweep".into())),
+                ("workers", Value::Int(w as i64)),
+                ("max_batch", Value::Int(b as i64)),
+                ("backend", Value::Str(nm.into())),
+                ("jobs_per_s", Value::Float(jps)),
+                ("p50_ms", Value::Float(p50)),
+                ("p99_ms", Value::Float(p99)),
+            ];
+            series.point(&fields[1..]);
+            report.entry(&fields);
+        }
+        println!("\n{jobs} jobs, base shape {n}x{n}, HTMP(κ=0.5):");
+        t.print();
+        println!("\nexpected: throughput scales with workers to core count; larger batches");
+        println!("raise p50 (queueing) without throughput loss; PRISM ≥ eigen at this size.");
     }
-    let batch_sweep: &[usize] = if smoke { &[1, 8] } else { &[1, 2, 8, 16] };
-    for &b in batch_sweep {
-        cases.push((4, b, Backend::Prism5, "prism5"));
-    }
-    let backends: &[(Backend, &str)] = if smoke {
-        &[(Backend::Eigen, "eigen")]
-    } else {
-        &[
-            (Backend::Eigen, "eigen"),
-            (Backend::PolarExpress, "polar-express"),
-            (Backend::Prism3, "prism3"),
-            (Backend::NewtonSchulz, "newton-schulz"),
-        ]
-    };
-    for &(bk, nm) in backends {
-        cases.push((4, 4, bk, nm));
-    }
-    for (w, b, bk, nm) in cases {
-        let (jps, p50, p99) = run(w, b, bk, jobs, n);
-        t.row(&[
-            w.to_string(),
-            b.to_string(),
-            nm.to_string(),
-            format!("{jps:.1}"),
-            format!("{p50:.1}"),
-            format!("{p99:.1}"),
-        ]);
-        let fields = [
-            ("section", Value::Str("sweep".into())),
-            ("workers", Value::Int(w as i64)),
-            ("max_batch", Value::Int(b as i64)),
-            ("backend", Value::Str(nm.into())),
-            ("jobs_per_s", Value::Float(jps)),
-            ("p50_ms", Value::Float(p50)),
-            ("p99_ms", Value::Float(p99)),
-        ];
-        series.point(&fields[1..]);
-        report.entry(&fields);
-    }
-    println!("\n{jobs} jobs, base shape {n}x{n}, HTMP(κ=0.5):");
-    t.print();
-    println!("\nexpected: throughput scales with workers to core count; larger batches");
-    println!("raise p50 (queueing) without throughput loss; PRISM ≥ eigen at this size.");
 
     // ── amortization: sketch fills per batch vs batch size ──────────────
     let (burst_jobs, bn) = if smoke { (16, 16) } else { (48, 64) };
@@ -158,44 +195,102 @@ fn main() {
     let w = randmat::logspace(1e-2, 1.0, bn);
     let inputs: Vec<Mat> =
         (0..burst_jobs).map(|_| randmat::sym_with_spectrum(&mut rng, bn, &w)).collect();
-    let mut t2 = Table::new(&[
+    if !zoo_only {
+        let mut t2 = Table::new(&[
+            "max_batch",
+            "jobs/s",
+            "batches",
+            "sketch fills",
+            "fills/batch",
+            "iters/job",
+        ]);
+        for b in [1usize, 2, 4, 8, 16] {
+            let (jps, fills, iters, nbatches) = run_amortization(b, &inputs);
+            let fills_per_batch = fills as f64 / nbatches as f64;
+            let iters_per_job = iters as f64 / burst_jobs as f64;
+            t2.row(&[
+                b.to_string(),
+                format!("{jps:.1}"),
+                nbatches.to_string(),
+                fills.to_string(),
+                format!("{fills_per_batch:.1}"),
+                format!("{iters_per_job:.1}"),
+            ]);
+            report.entry(&[
+                ("section", Value::Str("amortization".into())),
+                ("max_batch", Value::Int(b as i64)),
+                ("jobs", Value::Int(burst_jobs as i64)),
+                ("n", Value::Int(bn as i64)),
+                ("jobs_per_s", Value::Float(jps)),
+                ("batches", Value::Int(nbatches as i64)),
+                ("sketch_fills", Value::Int(fills as i64)),
+                ("fills_per_batch", Value::Float(fills_per_batch)),
+                ("total_iters", Value::Int(iters as i64)),
+                ("iters_per_job", Value::Float(iters_per_job)),
+            ]);
+        }
+        println!("\nsame-shape InvSqrt burst: {burst_jobs} jobs of {bn}x{bn}, 1 worker, prism5:");
+        t2.print();
+        println!("\nexpected: fills/batch stays at O(iters) — about iters/job, the longest");
+        println!("member's count — independent of batch size (shared lockstep sketch),");
+        println!("where per-job solving would pay batch · iters/job fills per batch.");
+    }
+
+    // ── zoo: mixed-shape tenants, arrival-order cuts vs shape buckets ───
+    // Round-robin across shapes is the worst case for arrival-order
+    // batching: adjacent jobs never share a shape, so the FIFO emulation
+    // dispatches singletons while the bucketed scheduler fills full
+    // lockstep batches per shape.
+    let (per_shape, zoo_shapes): (usize, &[usize]) =
+        if smoke { (8, &[12, 16, 20, 24]) } else { (16, &[24, 32, 48, 64]) };
+    let mut zrng = Rng::seed_from(11);
+    let mut zoo_inputs: Vec<(usize, Mat)> = Vec::new();
+    for _ in 0..per_shape {
+        for (layer, &zn) in zoo_shapes.iter().enumerate() {
+            let zw = randmat::logspace(1e-2, 1.0, zn);
+            zoo_inputs.push((layer, randmat::sym_with_spectrum(&mut zrng, zn, &zw)));
+        }
+    }
+    let mut t3 = Table::new(&[
+        "scheduler",
         "max_batch",
         "jobs/s",
-        "batches",
+        "batch occupancy",
         "sketch fills",
-        "fills/batch",
-        "iters/job",
+        "fills/solve",
     ]);
-    for b in [1usize, 2, 4, 8, 16] {
-        let (jps, fills, iters, nbatches) = run_amortization(b, &inputs);
-        let fills_per_batch = fills as f64 / nbatches as f64;
-        let iters_per_job = iters as f64 / burst_jobs as f64;
-        t2.row(&[
-            b.to_string(),
+    for fifo in [true, false] {
+        let (jps, occ, fills) = run_zoo(fifo, 4, &zoo_inputs);
+        let mode = if fifo { "fifo" } else { "bucketed" };
+        let fills_per_solve = fills as f64 / zoo_inputs.len() as f64;
+        t3.row(&[
+            mode.to_string(),
+            "4".to_string(),
             format!("{jps:.1}"),
-            nbatches.to_string(),
+            format!("{occ:.2}"),
             fills.to_string(),
-            format!("{fills_per_batch:.1}"),
-            format!("{iters_per_job:.1}"),
+            format!("{fills_per_solve:.1}"),
         ]);
         report.entry(&[
-            ("section", Value::Str("amortization".into())),
-            ("max_batch", Value::Int(b as i64)),
-            ("jobs", Value::Int(burst_jobs as i64)),
-            ("n", Value::Int(bn as i64)),
-            ("jobs_per_s", Value::Float(jps)),
-            ("batches", Value::Int(nbatches as i64)),
+            ("section", Value::Str("zoo".into())),
+            ("scheduler", Value::Str(mode.into())),
+            ("max_batch", Value::Int(4)),
+            ("jobs", Value::Int(zoo_inputs.len() as i64)),
+            ("shapes", Value::Int(zoo_shapes.len() as i64)),
+            ("batch_occupancy", Value::Float(occ)),
             ("sketch_fills", Value::Int(fills as i64)),
-            ("fills_per_batch", Value::Float(fills_per_batch)),
-            ("total_iters", Value::Int(iters as i64)),
-            ("iters_per_job", Value::Float(iters_per_job)),
+            ("fills_per_solve", Value::Float(fills_per_solve)),
+            ("jobs_per_s", Value::Float(jps)),
         ]);
     }
-    println!("\nsame-shape InvSqrt burst: {burst_jobs} jobs of {bn}x{bn}, 1 worker, prism5:");
-    t2.print();
-    println!("\nexpected: fills/batch stays at O(iters) — about iters/job, the longest");
-    println!("member's count — independent of batch size (shared lockstep sketch),");
-    println!("where per-job solving would pay batch · iters/job fills per batch.");
+    println!(
+        "\nmodel zoo: {} jobs round-robin over {} shapes, 1 worker, prism5:",
+        zoo_inputs.len(),
+        zoo_shapes.len()
+    );
+    t3.print();
+    println!("\nexpected: bucketed occupancy reaches max_batch (>2x the fifo emulation's");
+    println!("singletons) and fills/solve drops accordingly via the shared lockstep sketch.");
 
     // ── robustness counters: one tiny burst's full metrics report ───────
     // CI grep-gates `service.worker_panics` and `service.jobs_escalated`

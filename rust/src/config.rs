@@ -7,6 +7,7 @@ use crate::configfmt::{parse_toml, Value};
 use crate::linalg::gemm::{GemmBlocking, MicroKernel};
 use crate::matfn::{Precision, RectStrategy};
 use crate::util::{Error, Result};
+use std::time::Duration;
 
 /// Which polar/inverse-root backend an optimizer uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -235,6 +236,28 @@ pub struct ServiceConfig {
     /// the chaos suite and for rehearsing failure drills against a live
     /// service; it must never be set in production configs.
     pub faults: Option<String>,
+    /// How long a partially-filled batch bucket may hold its oldest job
+    /// before the linger flusher dispatches it anyway (`service.linger_ms`
+    /// in TOML, `--linger` milliseconds on the CLI). `None` — the default —
+    /// disables the flusher and keeps the caller-driven contract: partial
+    /// buckets wait for a full cut, an explicit
+    /// [`crate::coordinator::service::Service::flush`]/`drain`, or drop.
+    /// `Some(d)` bounds the queue time of rare shapes: a bucket that cannot
+    /// fill to `max_batch` is dispatched once its oldest member has waited
+    /// `d`, so singleton odd-shape jobs never starve behind busy routes.
+    pub linger: Option<Duration>,
+    /// Warm-state snapshot path (`service.cache_snapshot` in TOML,
+    /// `--cache-snapshot` on the CLI). When set, shutdown serializes the
+    /// warm solver-cache routes plus the engine tuning to a
+    /// `runtime::manifest` JSON artifact at this path, and
+    /// [`crate::coordinator::service::Service::start`] restores it if the
+    /// file exists: every worker pre-builds the recorded route solvers and
+    /// pre-sizes their workspace pools, so the first post-restart tick runs
+    /// the warm (allocation-free) path instead of paying cold-start per
+    /// route. A missing file means a cold start; an unreadable one is
+    /// warned about and ignored (a stale snapshot must never brick a
+    /// restart).
+    pub cache_snapshot: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -254,6 +277,8 @@ impl Default for ServiceConfig {
             gemm_kernel: None,
             precision: Precision::F64,
             faults: None,
+            linger: None,
+            cache_snapshot: None,
         }
     }
 }
@@ -303,6 +328,15 @@ impl ServiceConfig {
             // The spec is validated (hard error) at Service::start, where a
             // typo must abort rather than silently run fault-free.
             c.faults = Some(s.to_string());
+        }
+        if let Some(ms) = v.get_path("service.linger_ms").and_then(|x| x.as_int()) {
+            // Negative values clamp to 0 ("dispatch partials at the next
+            // flusher sweep") rather than erroring — same lenient policy as
+            // the other service knobs.
+            c.linger = Some(Duration::from_millis(ms.max(0) as u64));
+        }
+        if let Some(s) = v.get_path("service.cache_snapshot").and_then(|x| x.as_str()) {
+            c.cache_snapshot = Some(s.to_string());
         }
         c
     }
@@ -501,6 +535,30 @@ backend = "prism3"
     }
 
     #[test]
+    fn service_config_linger_parses() {
+        // Default: no linger flusher — partial buckets are caller-driven,
+        // exactly the pre-bucketing dispatch contract.
+        assert_eq!(ServiceConfig::default().linger, None);
+        let v = parse_toml("[service]\nlinger_ms = 5\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).linger, Some(Duration::from_millis(5)));
+        let v = parse_toml("[service]\nlinger_ms = 0\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).linger, Some(Duration::ZERO));
+        // Negative values clamp to zero instead of erroring.
+        let v = parse_toml("[service]\nlinger_ms = -3\n").unwrap();
+        assert_eq!(ServiceConfig::from_value(&v).linger, Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn service_config_cache_snapshot_parses() {
+        assert_eq!(ServiceConfig::default().cache_snapshot, None);
+        let v = parse_toml("[service]\ncache_snapshot = \"warm.json\"\n").unwrap();
+        assert_eq!(
+            ServiceConfig::from_value(&v).cache_snapshot.as_deref(),
+            Some("warm.json")
+        );
+    }
+
+    #[test]
     fn service_config_gemm_kernel_parses() {
         let v = parse_toml("[service]\ngemm_kernel = \"scalar\"\n").unwrap();
         assert_eq!(ServiceConfig::from_value(&v).gemm_kernel, Some(MicroKernel::Scalar));
@@ -553,12 +611,19 @@ mod file_tests {
         assert_eq!(svc.queue_cap, 256);
         assert_eq!(svc.admission, Admission::Block);
         assert_eq!(svc.faults, None);
+        // Bucket-scheduler knobs documented in the shipped config: a 5 ms
+        // linger, with the warm-state snapshot shipped commented out.
+        assert_eq!(svc.linger, Some(Duration::from_millis(5)));
+        assert_eq!(svc.cache_snapshot, None);
         svc.validate().expect("shipped service config must validate");
 
-        // Muon's config opts into the mixed-precision polar path.
+        // Muon's config opts into the mixed-precision polar path and keeps
+        // a shorter linger for its per-width orthogonalization buckets.
         let src = std::fs::read_to_string(format!("{root}/configs/muon_fig6.toml")).unwrap();
         let v = parse_toml(&src).unwrap();
-        assert_eq!(ServiceConfig::from_value(&v).precision, Precision::Mixed);
+        let msvc = ServiceConfig::from_value(&v);
+        assert_eq!(msvc.precision, Precision::Mixed);
+        assert_eq!(msvc.linger, Some(Duration::from_millis(2)));
     }
 
     #[test]

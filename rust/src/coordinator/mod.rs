@@ -13,8 +13,12 @@
 //! * [`async_shampoo`] — **staleness-tolerant Shampoo**: preconditioner
 //!   refreshes submitted to the service asynchronously; the train loop never
 //!   blocks on a matrix function after warmup.
+//! * `schedule` (internal) — **shape-bucketed batch scheduling**: per-(task, shape,
+//!   precision) pending buckets with `max_batch` cuts and a linger deadline,
+//!   so mixed-shape tenants still fill lockstep batches.
 
 pub mod async_shampoo;
+mod schedule;
 pub mod service;
 pub mod supervise;
 pub mod train;

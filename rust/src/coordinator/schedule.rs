@@ -1,0 +1,265 @@
+//! Shape-bucketed batch scheduling for the preconditioner service.
+//!
+//! Pending jobs are routed into per-(task, shape, precision) buckets. A
+//! bucket is cut into a batch when it reaches `max_batch` (the hot full-cut
+//! path, still performed synchronously inside `submit`), when the service's
+//! linger flusher finds its oldest member has waited past
+//! [`crate::config::ServiceConfig::linger`] (so rare shapes never starve
+//! behind busy routes), or when the caller forces dispatch (`flush`/`drain`/
+//! drop). Jobs keep submission order inside their bucket, which is what
+//! pins the batch-composition half of the service's bit-identity contract:
+//! the batch a job rides — and hence the RNG stream seeded by the batch's
+//! lowest id — is a pure function of the submission sequence and `max_batch`
+//! (plus wall-clock linger cuts, which only ever *split* a bucket earlier,
+//! never reorder members).
+//!
+//! The scheduler also supports surgical removal ([`BucketScheduler::remove`]
+//! and [`BucketScheduler::prune_deadlines`]): a cancelled or expired job is
+//! taken out of its bucket *immediately*, so it can neither hold a bucket
+//! open past `linger` nor ride into a batch and perturb the surviving
+//! members' stream seed — the survivors' lowest id after an early removal
+//! is exactly the lowest id a worker-side prune would have produced.
+//!
+//! This is a plain data structure: no locks, no channels. The service owns
+//! one behind its pending mutex and the linger flusher thread sweeps it.
+
+use super::service::Job;
+use crate::matfn::Precision;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Bucket identity: one batchable class of jobs. `task`/`rows`/`cols` come
+/// from [`super::service::JobKind::route_key`]; `precision` is the service's
+/// (currently service-wide) solver precision, carried explicitly so the
+/// batching contract — only same-precision jobs share a lockstep solve —
+/// stays visible in the key even if precision ever becomes per-job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) struct BucketKey {
+    pub task: u8,
+    pub rows: usize,
+    pub cols: usize,
+    pub precision: u8,
+}
+
+// Bucket (and hence flush/drain dispatch) order: task, then shape, then
+// precision.
+impl Ord for BucketKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.task, self.rows, self.cols, self.precision).cmp(&(
+            other.task,
+            other.rows,
+            other.cols,
+            other.precision,
+        ))
+    }
+}
+
+impl PartialOrd for BucketKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+fn precision_tag(p: Precision) -> u8 {
+    match p {
+        Precision::F64 => 0,
+        Precision::Mixed => 1,
+    }
+}
+
+/// Per-(task, shape, precision) pending-job buckets with `max_batch` cuts.
+pub(super) struct BucketScheduler {
+    max_batch: usize,
+    precision: u8,
+    buckets: BTreeMap<BucketKey, Vec<Job>>,
+}
+
+impl BucketScheduler {
+    pub fn new(max_batch: usize, precision: Precision) -> BucketScheduler {
+        BucketScheduler {
+            max_batch: max_batch.max(1),
+            precision: precision_tag(precision),
+            buckets: BTreeMap::new(),
+        }
+    }
+
+    fn key_of(&self, job: &Job) -> BucketKey {
+        let (task, rows, cols) = job.kind.route_key(job.matrix.shape());
+        BucketKey { task, rows, cols, precision: self.precision }
+    }
+
+    /// Route `job` into its bucket. Returns the full batch when the push
+    /// brings the bucket to `max_batch` — the caller dispatches it outside
+    /// the pending lock, synchronously with the submission (full-bucket
+    /// dispatch latency is part of the admission path's contract).
+    pub fn push(&mut self, job: Job) -> Option<Vec<Job>> {
+        let key = self.key_of(&job);
+        let bucket = self.buckets.entry(key).or_default();
+        bucket.push(job);
+        if bucket.len() >= self.max_batch {
+            Some(std::mem::take(bucket))
+        } else {
+            None
+        }
+    }
+
+    /// Jobs currently held back (all buckets).
+    pub fn pending(&self) -> usize {
+        self.buckets.values().map(Vec::len).sum()
+    }
+
+    /// Cut every non-empty bucket, in key order (deterministic dispatch
+    /// sequence for `flush`/`drain`/drop).
+    pub fn take_all(&mut self) -> Vec<Vec<Job>> {
+        std::mem::take(&mut self.buckets)
+            .into_values()
+            .filter(|b| !b.is_empty())
+            .collect()
+    }
+
+    /// Cut the buckets whose *oldest* member has waited at least `linger`.
+    /// Members keep submission order, so the oldest is always the front.
+    pub fn take_over_linger(&mut self, now: Instant, linger: Duration) -> Vec<Vec<Job>> {
+        let ripe: Vec<BucketKey> = self
+            .buckets
+            .iter()
+            .filter(|(_, b)| {
+                b.first()
+                    .is_some_and(|j| now.saturating_duration_since(j.submitted) >= linger)
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        ripe.iter().filter_map(|k| self.buckets.remove(k)).collect()
+    }
+
+    /// Remove the pending job with this id, preserving the order of the
+    /// remaining members (the survivors' lowest id — the batch stream seed —
+    /// must equal what a worker-side prune would have left). `None` when the
+    /// id is not held back here (already dispatched, or never admitted).
+    pub fn remove(&mut self, id: u64) -> Option<Job> {
+        for bucket in self.buckets.values_mut() {
+            if let Some(pos) = bucket.iter().position(|j| j.id == id) {
+                return Some(bucket.remove(pos));
+            }
+        }
+        None
+    }
+
+    /// Remove every pending job whose deadline has already passed. Expiry
+    /// is detected here — while the job still sits in a bucket — instead of
+    /// at dispatch time, so a dead job cannot keep a bucket's linger clock
+    /// pinned to its own (stale) submission instant.
+    pub fn prune_deadlines(&mut self, now: Instant) -> Vec<Job> {
+        let mut dead = Vec::new();
+        for bucket in self.buckets.values_mut() {
+            let mut i = 0;
+            while i < bucket.len() {
+                if bucket[i].deadline.is_some_and(|d| d <= now) {
+                    dead.push(bucket.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::JobKind;
+    use crate::linalg::Mat;
+
+    fn job(id: u64, n: usize, deadline: Option<Instant>) -> Job {
+        Job {
+            id,
+            layer: id as usize,
+            kind: JobKind::InvSqrt { eps: 0.0 },
+            matrix: Mat::eye(n),
+            submitted: Instant::now(),
+            deadline,
+        }
+    }
+
+    #[test]
+    fn full_bucket_cuts_at_max_batch_in_submission_order() {
+        let mut s = BucketScheduler::new(2, Precision::F64);
+        assert!(s.push(job(1, 4, None)).is_none());
+        assert!(s.push(job(2, 6, None)).is_none(), "different shape, different bucket");
+        let batch = s.push(job(3, 4, None)).expect("4x4 bucket reached max_batch");
+        assert_eq!(batch.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(s.pending(), 1, "the 6x6 singleton is still held");
+    }
+
+    #[test]
+    fn take_all_drains_every_bucket_deterministically() {
+        let mut s = BucketScheduler::new(8, Precision::F64);
+        for (id, n) in [(1, 4), (2, 6), (3, 4), (4, 8)] {
+            assert!(s.push(job(id, n, None)).is_none());
+        }
+        let batches = s.take_all();
+        assert_eq!(batches.len(), 3);
+        // Key order: 4x4 before 6x6 before 8x8.
+        assert_eq!(batches[0].iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(batches[1][0].id, 2);
+        assert_eq!(batches[2][0].id, 4);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn linger_cut_fires_only_past_the_deadline() {
+        let mut s = BucketScheduler::new(8, Precision::F64);
+        let t0 = Instant::now();
+        assert!(s.push(job(1, 4, None)).is_none());
+        // Not ripe yet at a 1-hour linger...
+        assert!(s.take_over_linger(t0, Duration::from_secs(3600)).is_empty());
+        assert_eq!(s.pending(), 1);
+        // ...ripe once "now" is past submitted + linger.
+        let later = t0 + Duration::from_secs(7200);
+        let cut = s.take_over_linger(later, Duration::from_secs(3600));
+        assert_eq!(cut.len(), 1);
+        assert_eq!(cut[0][0].id, 1);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn remove_preserves_survivor_order() {
+        let mut s = BucketScheduler::new(8, Precision::F64);
+        for id in 1..=4 {
+            assert!(s.push(job(id, 4, None)).is_none());
+        }
+        let gone = s.remove(2).expect("id 2 is pending");
+        assert_eq!(gone.id, 2);
+        assert!(s.remove(2).is_none(), "a removed id is no longer pending");
+        assert!(s.remove(99).is_none());
+        let batches = s.take_all();
+        assert_eq!(batches.len(), 1);
+        // Survivors keep submission order; the lowest id (the stream seed)
+        // is exactly what a worker-side prune would have left.
+        assert_eq!(batches[0].iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn prune_deadlines_removes_only_expired_jobs() {
+        let mut s = BucketScheduler::new(8, Precision::F64);
+        let past = Instant::now();
+        assert!(s.push(job(1, 4, Some(past))).is_none());
+        assert!(s.push(job(2, 4, None)).is_none());
+        assert!(s.push(job(3, 4, Some(past + Duration::from_secs(3600)))).is_none());
+        let dead = s.prune_deadlines(past + Duration::from_millis(1));
+        assert_eq!(dead.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1]);
+        let batches = s.take_all();
+        assert_eq!(batches[0].iter().map(|j| j.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn mixed_precision_buckets_carry_the_precision_tag() {
+        let f64s = BucketScheduler::new(2, Precision::F64);
+        let mixed = BucketScheduler::new(2, Precision::Mixed);
+        let j = job(1, 4, None);
+        let (kf, km) = (f64s.key_of(&j), mixed.key_of(&j));
+        assert_eq!((kf.task, kf.rows, kf.cols), (km.task, km.rows, km.cols));
+        assert_ne!(kf.precision, km.precision, "precision is part of the bucket identity");
+    }
+}

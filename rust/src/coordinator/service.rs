@@ -1,19 +1,35 @@
-//! The preconditioner service: route → batch → execute matrix-function jobs
-//! on a worker pool, with bounded queues (backpressure) and full metrics.
+//! The preconditioner service: bucket → batch → execute matrix-function
+//! jobs on a worker pool, with bounded queues (backpressure), warm-state
+//! snapshots and full metrics.
 //!
-//! ## Batch execution contract
+//! ## Shape-bucketed scheduling
 //!
 //! Training integrations submit gradient/covariance matrices tagged by
-//! layer and function kind; the router groups same-shape, same-kind jobs
-//! into batches of up to `max_batch`, and a worker executes each batch as
-//! **one** [`crate::matfn::Solver::solve_batch`] call. Newton–Schulz-family
-//! backends
-//! (PRISM-3/5, classical NS) run the batch in lockstep, sharing one sketch
-//! fill per iteration across every member — O(iters) sketch draws per
-//! batch instead of O(batch · iters), which is what amortises PRISM's
-//! fitting overhead at service scale. Only input-independent scratch is
-//! shared (the sketch panel, the trace row, the update polynomial and the
-//! ping-pong spare); each job keeps its own iterate, residual, α sequence
+//! layer and function kind; the scheduler (`super::schedule`) routes each
+//! job into a per-(task, shape, precision) **bucket**. A bucket is cut
+//! into one dispatched batch when
+//!
+//! 1. it reaches `max_batch` — the hot path, cut synchronously inside the
+//!    submit call, so a full batch never waits on a timer;
+//! 2. its *oldest* member has waited past [`ServiceConfig::linger`] — a
+//!    background flusher cuts ripe buckets, so a rare-shape singleton is
+//!    delayed by at most ~`linger` while busy routes churn (with
+//!    `linger: None`, the default, partial buckets wait for the caller:
+//!    `flush`/`drain`/drop);
+//! 3. the caller forces dispatch ([`Service::flush`], [`Service::drain`],
+//!    or dropping the handle).
+//!
+//! Unlike a FIFO cut, bucketing keeps mixed-shape tenants batchable: a
+//! Shampoo tick interleaving many layer shapes still fills same-shape
+//! lockstep batches instead of collapsing to batch size 1.
+//!
+//! A worker executes each batch as **one**
+//! [`crate::matfn::Solver::solve_batch`] call. Newton–Schulz-family
+//! backends (PRISM-3/5, classical NS) run the batch in lockstep, sharing
+//! one sketch fill per iteration across every member — O(iters) sketch
+//! draws per batch instead of O(batch · iters), which is what amortises
+//! PRISM's fitting overhead at service scale. Only input-independent
+//! scratch is shared; each job keeps its own iterate, residual, α sequence
 //! and iteration log. Direct/minimax backends (eigen, PolarExpress,
 //! DB-Newton) execute batch members back to back through the same
 //! per-route workspace.
@@ -22,12 +38,15 @@
 //!
 //! Every batch reads the RNG stream seeded by [`batch_stream_seed`] — a
 //! pure function of the service seed and the batch's lowest job id, never
-//! of worker identity or scheduling. Batch composition is fixed by
-//! submission order (the router dispatches a route's queue when it reaches
-//! `max_batch`), so results are **bit-identical across worker counts**,
-//! and each job's result equals a sequential [`crate::matfn::Solver::solve`]
-//! run from a clone of its batch's stream (pinned by the service
-//! conformance tests).
+//! of worker identity or scheduling. Batch composition is a pure function
+//! of the submission sequence and `max_batch`: buckets keep submission
+//! order, linger cuts only dispatch a prefix *earlier* (never reorder),
+//! and a cancelled or expired job is removed from its bucket immediately —
+//! so the survivors' lowest id equals what a worker-side prune would have
+//! left. Results are therefore **bit-identical across worker counts and
+//! linger settings**, and each job's result equals a sequential
+//! [`crate::matfn::Solver::solve`] run from a clone of its batch's stream
+//! (pinned by the service conformance tests).
 //!
 //! Each worker keeps an LRU cache of persistent [`crate::matfn::Solver`]s per
 //! (kind, shape) route, capped at `solver_cache_cap` entries, so a steady
@@ -36,61 +55,80 @@
 //! worker's solver map without bound. The `sketch_p`/`tol`/`max_iters`
 //! knobs are threaded into every constructed solver. With
 //! `stream_residuals` set, each cached solver carries **one persistent
-//! observer** whose per-batch job tags are swapped through a shared cell
-//! (no per-job observer boxing on the hot path), streaming
-//! [`ResidualEvent`]s over a progress channel while jobs are still
-//! running. Staleness scheduling lets Shampoo keep training on
-//! slightly-old preconditioners while refreshes are in flight — the
-//! pattern of Distributed Shampoo/DION.
+//! observer** whose per-batch job tags are swapped through a shared cell,
+//! streaming [`ResidualEvent`]s over a progress channel while jobs are
+//! still running.
 //!
-//! ## Supervision & fault tolerance
+//! ## Warm-state snapshot / restore
+//!
+//! With [`ServiceConfig::cache_snapshot`] set, dropping the handle writes
+//! the warm state through [`crate::runtime::manifest`]: one artifact entry
+//! per recently-dispatched solver route (task, shape, solver tuning) plus
+//! an `engine` entry recording the GEMM tuning (threads, blocking,
+//! microkernel). `Service::start` restores a snapshot found at that path:
+//! engine tuning fills the gaps the config left unset (explicit config
+//! always wins), and every worker **prewarms** the restored routes at
+//! spawn — building each solver through the normal path and growing its
+//! batch workspace with one throwaway full-width solve — so a restarted
+//! service's first tick runs the warm path with zero allocations
+//! (`service.workspace_allocs` stays 0). A missing snapshot is a cold
+//! start; an unreadable one warns and starts cold — the snapshot is a
+//! performance hint, never a correctness input.
+//!
+//! ## Supervision, fault tolerance, admission
 //!
 //! Worker execution is supervised (see [`super::supervise`]): a panicking
 //! batch is converted into per-job typed error results and the worker
-//! respawns in place with a fresh solver cache — no submitted job is ever
-//! lost, and [`Service::drain`] always returns exactly one result per
-//! admitted job. Failed solves (divergence, non-finite iterates) are
-//! retried through a deterministic escalation ladder (mixed→f64, then
-//! damping, then the eigendecomposition baseline); the traversed path is
-//! recorded in [`JobResult::fallback`].
-//!
-//! ## Admission control
+//! respawns in place (re-prewarming restored routes) — no submitted job is
+//! ever lost, and [`Service::drain`] always returns exactly one result per
+//! admitted job. Failed solves are retried through a deterministic
+//! escalation ladder (mixed→f64, then damping, then eigen); the traversed
+//! path is recorded in [`JobResult::fallback`].
 //!
 //! The service accepts at most [`ServiceConfig::queue_cap`] jobs in flight
-//! (router-pending + dispatched-but-unfetched). At the cap,
+//! (bucket-pending + dispatched-but-unfetched). At the cap,
 //! [`Service::submit`] blocks until a result is fetched
 //! ([`Admission::Block`], the default) or returns a typed
 //! [`Error::Backpressure`] ([`Admission::Reject`]); [`Service::try_submit`]
 //! never blocks. Jobs may carry a deadline
-//! ([`Service::submit_with_deadline`]) — one whose deadline passes before a
-//! worker picks it up is short-circuited to a typed error result instead
-//! of burning solver time — and can be cancelled best-effort
-//! ([`Service::cancel`]). In every case each admitted id yields exactly
-//! one [`JobResult`].
+//! ([`Service::submit_with_deadline`]); one that expires while still in
+//! its bucket is removed immediately — it can neither hold the bucket's
+//! linger clock open nor perturb the survivors' stream seed — as is a
+//! bucket-pending job hit by [`Service::cancel`]. In every case each
+//! admitted id yields exactly one [`JobResult`].
 //!
 //! ## Metrics
 //!
-//! Counters: `service.jobs_submitted`, `jobs_done`, `jobs_rejected`
-//! (boundary rejections), `jobs_failed` (worker panics / exhausted
-//! escalations), `jobs_escalated`, `jobs_expired`, `jobs_cancelled`,
+//! Counters: `service.jobs_submitted`, `jobs_done`, `jobs_rejected`,
+//! `jobs_failed`, `jobs_escalated`, `jobs_expired`, `jobs_cancelled`,
 //! `jobs_backpressured`, `worker_panics`, `worker_restarts`,
-//! `solver_cache_evictions` — all registered eagerly at start, so a clean
-//! run reports explicit zeros. Histograms: `batch_size`, `batch_exec_s`,
-//! `exec_s`, `latency_s`; gauge: `solver_cache_size`.
+//! `solver_cache_evictions`, `bucket_flush_full` / `bucket_flush_linger`
+//! (why batches left the scheduler) and `workspace_allocs` (workspace
+//! growth on the solve path — 0 on a warm service) — all registered
+//! eagerly at start, so a clean run reports explicit zeros. Histograms:
+//! `batch_size`, `batch_occupancy` (same observations, the scheduler-level
+//! name the perf harness reads), `batch_exec_s`, `exec_s`, `latency_s`;
+//! gauges: `solver_cache_size`, `batch_occupancy` (last dispatched size).
 //!
-//! Dropping the [`Service`] handle first dispatches still-pending partial
-//! batches and waits for the workers to finish them — submitted work is
-//! executed (and counted in the metrics), never silently discarded.
+//! Dropping the [`Service`] handle stops the linger flusher, dispatches
+//! still-pending partial batches and waits for the workers to finish them —
+//! submitted work is executed (and counted in the metrics), never silently
+//! discarded — then writes the warm-state snapshot, if configured.
 
+use super::schedule::BucketScheduler;
 use super::supervise;
 use crate::config::{Admission, Backend, ServiceConfig};
+use crate::configfmt::Value;
+use crate::linalg::gemm::{GemmBlocking, MicroKernel};
 use crate::linalg::Mat;
-use crate::matfn::validate_input;
+use crate::matfn::{validate_input, Precision};
 use crate::metrics::Registry;
 use crate::runtime::faultinject::{self, FaultPlan};
+use crate::runtime::manifest::{ArtifactEntry, Manifest, TensorSpec};
 use crate::util::{lock_or_recover, Error, Result};
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -191,31 +229,60 @@ pub fn batch_stream_seed(service_seed: u64, first_job_id: u64) -> u64 {
     service_seed ^ first_job_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
+/// Why a batch left the scheduler — drives the `service.bucket_flush_*`
+/// counters so occupancy regressions are attributable to a cut path.
+#[derive(Clone, Copy)]
+enum FlushReason {
+    /// The bucket reached `max_batch` (cut synchronously inside `admit`).
+    Full,
+    /// The linger flusher cut a bucket whose oldest member waited past
+    /// [`ServiceConfig::linger`].
+    Linger,
+    /// Caller-driven: `flush`/`drain`/drop.
+    Manual,
+}
+
 /// Service handle. Dropping it shuts the workers down.
 pub struct Service {
     tx: SyncSender<WorkerMsg>,
     results_rx: Mutex<Receiver<JobResult>>,
+    /// Clone of the workers' result sender: the service itself synthesizes
+    /// the one-and-only result for jobs removed from their bucket before
+    /// dispatch (cancellation, queue-expired deadlines).
+    res_tx: Sender<JobResult>,
     progress_rx: Mutex<Receiver<ResidualEvent>>,
     workers: Vec<JoinHandle<()>>,
-    pending: Arc<Mutex<BTreeMap<(u8, usize, usize), Vec<Job>>>>,
-    /// Ids marked by [`Service::cancel`], shared with the workers (which
-    /// honour a mark before solving) and pruned when a result is fetched.
+    pending: Arc<Mutex<BucketScheduler>>,
+    /// Ids marked by [`Service::cancel`] *after* dispatch, shared with the
+    /// workers (which honour a mark before solving) and pruned when a
+    /// result is fetched. Bucket-pending cancels never land here — they
+    /// remove the job from its bucket directly.
     cancelled: Arc<Mutex<BTreeSet<u64>>>,
     cfg: ServiceConfig,
+    backend: Backend,
     next_id: Mutex<u64>,
     pub metrics: Arc<Registry>,
     /// Jobs handed to workers / results taken off the completion channel.
-    /// Both counters are only touched by service-handle callers (never by
-    /// workers), so `dispatched − received` is an exact count of results
+    /// `dispatched` is only advanced by the handle and its linger flusher
+    /// (each synthesized removal result counts as one dispatch), never by
+    /// workers, so `dispatched − received` is an exact count of results
     /// still owed and the drain loop can block on it race-free: every
     /// dispatched job sends exactly one result.
-    dispatched: AtomicU64,
+    dispatched: Arc<AtomicU64>,
     received: AtomicU64,
     /// Blocking submitters park here when the admission cap is hit; every
     /// result fetch notifies. Paired with a timeout in the wait loop, so a
     /// notify racing the re-check costs bounded staleness, never a hang.
     admission: Condvar,
     admission_lock: Mutex<()>,
+    /// Most-recently dispatched route keys, LRU-capped at
+    /// `solver_cache_cap` — the warm state the shutdown snapshot records.
+    warm_routes: Arc<Mutex<Vec<(u8, usize, usize)>>>,
+    /// The linger flusher (spawned only with `cfg.linger` set) and its stop
+    /// flag; stopped and joined in `Drop` before the final flush, so
+    /// shutdown has exactly one dispatcher.
+    flusher: Option<JoinHandle<()>>,
+    flusher_stop: Arc<AtomicBool>,
 }
 
 impl Service {
@@ -264,6 +331,24 @@ impl Service {
                 );
             }
         }
+        // Warm-state restore (the snapshot leg): decode the previous run's
+        // snapshot into routes the workers prewarm at spawn, and let its
+        // engine entry fill any GEMM-tuning gap the config left unset. A
+        // missing file is a cold start; an unreadable one warns and starts
+        // cold — a stale snapshot must never block the service.
+        let mut prewarm_routes: Vec<(u8, usize, usize)> = Vec::new();
+        if let Some(path) = cfg.cache_snapshot.as_deref() {
+            let p = Path::new(path);
+            if p.exists() {
+                match Manifest::load(p) {
+                    Ok(m) => prewarm_routes = restore_snapshot(&m, &cfg, backend),
+                    Err(e) => {
+                        eprintln!("service: cache snapshot {path}: {e}; starting cold")
+                    }
+                }
+            }
+        }
+        let prewarm = Arc::new(prewarm_routes);
         // The channel bound is queue_cap message slots plus one per worker:
         // admission (not the channel) is the limiter — at most `queue_cap`
         // jobs are in flight and a batch message carries ≥ 1 job — so
@@ -274,9 +359,10 @@ impl Service {
             std::sync::mpsc::channel();
         let (prog_tx, prog_rx): (Sender<ResidualEvent>, Receiver<ResidualEvent>) = channel();
         let metrics = Arc::new(Registry::default());
-        // Register every counter the supervision/admission layers can touch
-        // before any job runs: a clean run's report() prints explicit zeros
-        // (the CI grep-gates depend on the names always appearing).
+        // Register every counter the scheduling/supervision/admission layers
+        // can touch before any job runs: a clean run's report() prints
+        // explicit zeros (the CI grep-gates depend on the names always
+        // appearing).
         for name in [
             "service.jobs_submitted",
             "service.jobs_done",
@@ -289,10 +375,15 @@ impl Service {
             "service.worker_panics",
             "service.worker_restarts",
             "service.solver_cache_evictions",
+            "service.bucket_flush_full",
+            "service.bucket_flush_linger",
+            "service.workspace_allocs",
         ] {
             let _ = metrics.counter(name);
         }
         let _ = metrics.gauge("service.solver_cache_size");
+        let _ = metrics.histogram("service.batch_occupancy");
+        let _ = metrics.gauge("service.batch_occupancy");
         let cancelled: Arc<Mutex<BTreeSet<u64>>> = Arc::new(Mutex::new(BTreeSet::new()));
         let mut workers = Vec::new();
         for index in 0..cfg.workers {
@@ -306,24 +397,48 @@ impl Service {
                     prog_tx: prog_tx.clone(),
                     metrics: Arc::clone(&metrics),
                     cancelled: Arc::clone(&cancelled),
+                    prewarm: Arc::clone(&prewarm),
                 },
                 &cfg,
             ));
         }
+        let pending = Arc::new(Mutex::new(BucketScheduler::new(cfg.max_batch, cfg.precision)));
+        let dispatched = Arc::new(AtomicU64::new(0));
+        let warm_routes: Arc<Mutex<Vec<(u8, usize, usize)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let flusher_stop = Arc::new(AtomicBool::new(false));
+        let flusher = cfg.linger.map(|linger| {
+            spawn_flusher(FlusherShared {
+                pending: Arc::clone(&pending),
+                tx: tx.clone(),
+                res_tx: res_tx.clone(),
+                metrics: Arc::clone(&metrics),
+                dispatched: Arc::clone(&dispatched),
+                warm_routes: Arc::clone(&warm_routes),
+                warm_cap: cfg.solver_cache_cap,
+                stop: Arc::clone(&flusher_stop),
+                linger,
+            })
+        });
         Ok(Service {
             tx,
             results_rx: Mutex::new(res_rx),
+            res_tx,
             progress_rx: Mutex::new(prog_rx),
             workers,
-            pending: Arc::new(Mutex::new(BTreeMap::new())),
+            pending,
             cancelled,
             cfg,
+            backend,
             next_id: Mutex::new(0),
             metrics,
-            dispatched: AtomicU64::new(0),
+            dispatched,
             received: AtomicU64::new(0),
             admission: Condvar::new(),
             admission_lock: Mutex::new(()),
+            warm_routes,
+            flusher,
+            flusher_stop,
         })
     }
 
@@ -371,15 +486,29 @@ impl Service {
         self.admit(layer, kind, matrix, deadline, self.cfg.admission == Admission::Block)
     }
 
-    /// Best-effort cancellation: marks `id` so a worker that picks it up
-    /// *before solving* short-circuits it to a typed error result
-    /// (`service.jobs_cancelled`). A job already solving — or already done
-    /// — is not interrupted; its normal result is still delivered and the
+    /// Best-effort cancellation. A job still pending in its bucket is
+    /// removed **immediately** and its typed error result
+    /// (`service.jobs_cancelled`) synthesized on the spot — it can neither
+    /// hold the bucket open past `linger` nor ride into a batch and perturb
+    /// the surviving members' [`batch_stream_seed`]. A job already
+    /// dispatched is marked instead, so a worker that picks it up *before
+    /// solving* short-circuits it; one already solving — or already done —
+    /// is not interrupted: its normal result is still delivered and the
     /// mark is discarded when that result is fetched. Returns `false` for
     /// ids the service never assigned.
     pub fn cancel(&self, id: u64) -> bool {
         if id == 0 || id > *lock_or_recover(&self.next_id) {
             return false;
+        }
+        let held = lock_or_recover(&self.pending).remove(id);
+        if let Some(job) = held {
+            self.metrics.counter("service.jobs_cancelled").inc();
+            // Count the synthesized result as one dispatch *before* sending
+            // it, so `inflight` never undercounts what is owed.
+            self.dispatched.fetch_add(1, Ordering::SeqCst);
+            let why = format!("job {id}: cancelled while pending in its bucket");
+            let _ = self.res_tx.send(bucket_removal_result(&job, why));
+            return true;
         }
         lock_or_recover(&self.cancelled).insert(id);
         true
@@ -401,15 +530,13 @@ impl Service {
             self.metrics.counter("service.jobs_rejected").inc();
             return Err(e);
         }
-        let key = kind.route_key(matrix.shape());
         let mut job =
             Some(Job { id: 0, layer, kind, matrix, submitted: Instant::now(), deadline });
         loop {
             // Ok((id, full batch to dispatch)) | Err(jobs currently used).
             let decision: std::result::Result<(u64, Option<Vec<Job>>), usize> = {
                 let mut pend = lock_or_recover(&self.pending);
-                let used =
-                    pend.values().map(Vec::len).sum::<usize>() + self.inflight();
+                let used = pend.pending() + self.inflight();
                 if used >= self.cfg.queue_cap {
                     Err(used)
                 } else {
@@ -422,20 +549,16 @@ impl Service {
                     j.id = id;
                     j.submitted = Instant::now();
                     self.metrics.counter("service.jobs_submitted").inc();
-                    let q = pend.entry(key).or_default();
-                    q.push(j);
-                    let batch = if q.len() >= self.cfg.max_batch {
-                        Some(std::mem::take(q))
-                    } else {
-                        None
-                    };
-                    Ok((id, batch))
+                    Ok((id, pend.push(j)))
                 }
             };
             match decision {
                 Ok((id, batch)) => {
+                    // A full-bucket cut dispatches synchronously with the
+                    // admitting submit (outside the pending lock) — batch
+                    // latency is part of the admission path's contract.
                     if let Some(b) = batch {
-                        self.dispatch(b)?;
+                        self.dispatch(b, FlushReason::Full)?;
                     }
                     return Ok(id);
                 }
@@ -462,33 +585,23 @@ impl Service {
         }
     }
 
-    fn dispatch(&self, batch: Vec<Job>) -> Result<()> {
-        if batch.is_empty() {
-            return Ok(());
-        }
-        // Chaos hook: a scripted dispatch delay widens race windows (e.g.
-        // deadlines expiring in the queue) deterministically. Inert — one
-        // relaxed atomic load — unless a fault plan is installed.
-        if let Some(ms) = faultinject::dispatch_delay_ms() {
-            std::thread::sleep(Duration::from_millis(ms));
-        }
-        self.dispatched.fetch_add(batch.len() as u64, Ordering::SeqCst);
-        self.metrics
-            .histogram("service.batch_size")
-            .observe(batch.len() as f64);
-        self.tx
-            .send(WorkerMsg::Batch(batch))
-            .map_err(|_| Error::Runtime("service: workers gone".into()))
+    fn dispatch(&self, batch: Vec<Job>, reason: FlushReason) -> Result<()> {
+        dispatch_batch(
+            &self.tx,
+            &self.dispatched,
+            &self.metrics,
+            &self.warm_routes,
+            self.cfg.solver_cache_cap,
+            batch,
+            reason,
+        )
     }
 
-    /// Dispatch all partially-filled batches.
+    /// Dispatch all partially-filled buckets.
     pub fn flush(&self) -> Result<()> {
-        let batches: Vec<Vec<Job>> = {
-            let mut pend = lock_or_recover(&self.pending);
-            pend.values_mut().map(std::mem::take).collect()
-        };
+        let batches = lock_or_recover(&self.pending).take_all();
         for b in batches {
-            self.dispatch(b)?;
+            self.dispatch(b, FlushReason::Manual)?;
         }
         Ok(())
     }
@@ -619,6 +732,12 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
+        // Stop the linger flusher first, so the final flush below is the
+        // only dispatcher left (no timer cuts racing shutdown).
+        self.flusher_stop.store(true, Ordering::SeqCst);
+        if let Some(f) = self.flusher.take() {
+            let _ = f.join();
+        }
         // Dispatch still-pending partial batches so submitted work is
         // executed (and counted) rather than silently discarded; the FIFO
         // worker channel guarantees they run before the shutdown messages
@@ -630,7 +749,266 @@ impl Drop for Service {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Snapshot the warm state only after the workers are done: the
+        // recorded routes are exactly the ones whose solvers finished warm.
+        if let Some(path) = self.cfg.cache_snapshot.as_deref() {
+            let routes = lock_or_recover(&self.warm_routes).clone();
+            let m = snapshot_manifest(&routes, &self.cfg, self.backend);
+            if let Err(e) = m.save(Path::new(path)) {
+                eprintln!("service: cache snapshot {path}: {e}");
+            }
+        }
     }
+}
+
+/// The shared dispatch path — used by the service handle (full-bucket cuts,
+/// manual flushes) and the linger flusher thread. Advances `dispatched`,
+/// records the occupancy metrics and the warm-route LRU, then hands the
+/// batch to the worker channel.
+fn dispatch_batch(
+    tx: &SyncSender<WorkerMsg>,
+    dispatched: &AtomicU64,
+    metrics: &Registry,
+    warm_routes: &Mutex<Vec<(u8, usize, usize)>>,
+    warm_cap: usize,
+    batch: Vec<Job>,
+    reason: FlushReason,
+) -> Result<()> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    // Chaos hook: a scripted dispatch delay widens race windows (e.g.
+    // deadlines expiring in the queue) deterministically. Inert — one
+    // relaxed atomic load — unless a fault plan is installed.
+    if let Some(ms) = faultinject::dispatch_delay_ms() {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+    match reason {
+        FlushReason::Full => metrics.counter("service.bucket_flush_full").inc(),
+        FlushReason::Linger => metrics.counter("service.bucket_flush_linger").inc(),
+        FlushReason::Manual => {}
+    }
+    dispatched.fetch_add(batch.len() as u64, Ordering::SeqCst);
+    metrics.histogram("service.batch_size").observe(batch.len() as f64);
+    metrics.histogram("service.batch_occupancy").observe(batch.len() as f64);
+    metrics.gauge("service.batch_occupancy").set(batch.len() as i64);
+    {
+        // Warm-route LRU for the shutdown snapshot: most-recently
+        // dispatched first out, capped like the worker solver caches.
+        let key = batch[0].kind.route_key(batch[0].matrix.shape());
+        let mut warm = lock_or_recover(warm_routes);
+        if let Some(i) = warm.iter().position(|k| *k == key) {
+            warm.remove(i);
+        }
+        warm.push(key);
+        if warm.len() > warm_cap {
+            warm.remove(0);
+        }
+    }
+    tx.send(WorkerMsg::Batch(batch))
+        .map_err(|_| Error::Runtime("service: workers gone".into()))
+}
+
+/// The one-and-only typed error result for a job removed from its bucket
+/// before dispatch (cancellation, queue-expired deadline). Mirrors the
+/// worker-side failure shape: zero matrix, 0 iters, NaN residual.
+fn bucket_removal_result(job: &Job, why: String) -> JobResult {
+    JobResult {
+        id: job.id,
+        layer: job.layer,
+        result: Mat::zeros(job.matrix.rows(), job.matrix.cols()),
+        latency_s: job.submitted.elapsed().as_secs_f64(),
+        batch_size: 1,
+        iters: 0,
+        final_residual: f64::NAN,
+        fallback: None,
+        error: Some(why),
+    }
+}
+
+/// Everything the linger flusher thread owns: clones of the dispatch path's
+/// shared state plus its own stop flag.
+struct FlusherShared {
+    pending: Arc<Mutex<BucketScheduler>>,
+    tx: SyncSender<WorkerMsg>,
+    res_tx: Sender<JobResult>,
+    metrics: Arc<Registry>,
+    dispatched: Arc<AtomicU64>,
+    warm_routes: Arc<Mutex<Vec<(u8, usize, usize)>>>,
+    warm_cap: usize,
+    stop: Arc<AtomicBool>,
+    linger: Duration,
+}
+
+/// The linger flusher: periodically sweeps the bucket scheduler, removing
+/// queue-expired jobs (synthesizing their typed error results) and cutting
+/// every bucket whose oldest member has waited past `linger`. Spawned only
+/// when [`ServiceConfig::linger`] is set.
+fn spawn_flusher(sh: FlusherShared) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        // Poll at a fraction of the linger so a ripe bucket is cut within
+        // ~linger/4 of its deadline; clamped so tiny lingers don't spin and
+        // large ones still notice the stop flag promptly.
+        let poll = (sh.linger / 4)
+            .clamp(Duration::from_micros(500), Duration::from_millis(5));
+        while !sh.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(poll);
+            let now = Instant::now();
+            let (dead, ripe) = {
+                let mut pend = lock_or_recover(&sh.pending);
+                (pend.prune_deadlines(now), pend.take_over_linger(now, sh.linger))
+            };
+            for job in dead {
+                // Expiry is detected while the job still sits in its bucket,
+                // so it cannot pin the bucket's linger clock nor perturb the
+                // survivors' stream seed. One synthesized result per removed
+                // job keeps the one-result-per-job accounting exact; count
+                // it dispatched first so `inflight` never undercounts.
+                sh.metrics.counter("service.jobs_expired").inc();
+                let why =
+                    format!("job {}: deadline expired in its bucket before dispatch", job.id);
+                sh.dispatched.fetch_add(1, Ordering::SeqCst);
+                let _ = sh.res_tx.send(bucket_removal_result(&job, why));
+            }
+            for batch in ripe {
+                let sent = dispatch_batch(
+                    &sh.tx,
+                    &sh.dispatched,
+                    &sh.metrics,
+                    &sh.warm_routes,
+                    sh.warm_cap,
+                    batch,
+                    FlushReason::Linger,
+                );
+                if sent.is_err() {
+                    return; // workers gone — the service is shutting down
+                }
+            }
+        }
+    })
+}
+
+/// Encode the warm state as a [`Manifest`]: one artifact entry per
+/// recently-dispatched solver route (its solver tuning in `meta`, its input
+/// shape as a [`TensorSpec`]) plus an `engine` entry carrying the GEMM
+/// tuning. The same artifact contract `python/compile/aot.py` writes, so
+/// the snapshot round-trips through [`Manifest::parse`].
+fn snapshot_manifest(
+    routes: &[(u8, usize, usize)],
+    cfg: &ServiceConfig,
+    backend: Backend,
+) -> Manifest {
+    let precision = match cfg.precision {
+        Precision::F64 => "f64",
+        Precision::Mixed => "mixed",
+    };
+    let mut entries = Vec::with_capacity(routes.len() + 1);
+    for &(task, rows, cols) in routes {
+        let mut meta = BTreeMap::new();
+        meta.insert("task".to_string(), Value::Int(task as i64));
+        meta.insert("backend".to_string(), Value::Str(backend.name().to_string()));
+        meta.insert("max_iters".to_string(), Value::Int(cfg.max_iters as i64));
+        meta.insert("sketch_p".to_string(), Value::Int(cfg.sketch_p as i64));
+        meta.insert("tol".to_string(), cfg.tol.map_or(Value::Null, Value::Float));
+        meta.insert("precision".to_string(), Value::Str(precision.to_string()));
+        let spec = |name: &str| TensorSpec {
+            name: name.to_string(),
+            shape: vec![rows as i64, cols as i64],
+            dtype: "f64".to_string(),
+        };
+        entries.push(ArtifactEntry {
+            name: format!("route_{task}_{rows}x{cols}"),
+            file: "solver-cache".to_string(),
+            inputs: vec![spec("a")],
+            outputs: vec![spec("f_a")],
+            meta,
+        });
+    }
+    let mut meta = BTreeMap::new();
+    meta.insert("threads".to_string(), Value::Int(cfg.gemm_threads as i64));
+    if let Some(b) = cfg.gemm_block {
+        meta.insert("block".to_string(), Value::Str(b.display()));
+    }
+    if let Some(k) = cfg.gemm_kernel {
+        meta.insert("kernel".to_string(), Value::Str(k.name().to_string()));
+    }
+    entries.push(ArtifactEntry {
+        name: "engine".to_string(),
+        file: "gemm-tuning".to_string(),
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+        meta,
+    });
+    Manifest { version: 1, entries }
+}
+
+/// Decode a snapshot back into prewarmable route keys, and apply its engine
+/// entry as a gap-filler for GEMM tuning the config left unset (explicit
+/// config always wins). Only routes whose recorded solver tuning matches
+/// the *current* config are kept — a solver prewarmed under stale tuning
+/// would shadow the correctly-tuned one in the worker caches.
+fn restore_snapshot(
+    m: &Manifest,
+    cfg: &ServiceConfig,
+    backend: Backend,
+) -> Vec<(u8, usize, usize)> {
+    let want_precision = match cfg.precision {
+        Precision::F64 => "f64",
+        Precision::Mixed => "mixed",
+    };
+    let want_tol = cfg.tol.map_or(Value::Null, Value::Float);
+    let mut routes = Vec::new();
+    for e in &m.entries {
+        if e.file == "gemm-tuning" {
+            if cfg.gemm_threads <= 1 {
+                if let Some(t) = e.meta.get("threads").and_then(|v| v.as_int()) {
+                    if t > 1 {
+                        crate::linalg::gemm::set_global_threads(t as usize);
+                    }
+                }
+            }
+            if cfg.gemm_block.is_none() {
+                if let Some(b) = e.meta.get("block").and_then(|v| v.as_str()) {
+                    if let Ok(blk) = GemmBlocking::parse(b) {
+                        crate::linalg::gemm::set_global_blocking(blk);
+                    }
+                }
+            }
+            if cfg.gemm_kernel.is_none() {
+                if let Some(k) = e.meta.get("kernel").and_then(|v| v.as_str()) {
+                    if let Ok(Some(kern)) = MicroKernel::parse(k) {
+                        if kern.is_available() {
+                            crate::linalg::gemm::set_global_kernel(Some(kern));
+                        }
+                    }
+                }
+            }
+            continue;
+        }
+        if e.file != "solver-cache" {
+            continue;
+        }
+        let tuned_for_this_config = e.meta.get("backend").and_then(|v| v.as_str())
+            == Some(backend.name())
+            && e.meta.get("sketch_p").and_then(|v| v.as_int()) == Some(cfg.sketch_p as i64)
+            && e.meta.get("max_iters").and_then(|v| v.as_int()) == Some(cfg.max_iters as i64)
+            && e.meta.get("precision").and_then(|v| v.as_str()) == Some(want_precision)
+            && *e.meta.get("tol").unwrap_or(&Value::Null) == want_tol;
+        if !tuned_for_this_config {
+            continue;
+        }
+        let task = e.meta.get("task").and_then(|v| v.as_int());
+        let (rows, cols) = match e.inputs.first() {
+            Some(t) if t.shape.len() == 2 => (t.shape[0], t.shape[1]),
+            _ => continue,
+        };
+        if let Some(task) = task {
+            if (0..=2).contains(&task) && rows > 0 && cols > 0 {
+                routes.push((task as u8, rows as usize, cols as usize));
+            }
+        }
+    }
+    routes
 }
 
 #[cfg(test)]
@@ -657,6 +1035,8 @@ mod tests {
             gemm_kernel: None,
             precision: Precision::F64,
             faults: None,
+            linger: None,
+            cache_snapshot: None,
         }
     }
 
@@ -1203,6 +1583,10 @@ mod tests {
             "service.jobs_cancelled",
             "service.jobs_backpressured",
             "service.jobs_failed",
+            "service.bucket_flush_full",
+            "service.bucket_flush_linger",
+            "service.workspace_allocs",
+            "service.batch_occupancy",
         ] {
             assert!(rep.contains(name), "report() must always show {name}:\n{rep}");
         }
@@ -1352,5 +1736,185 @@ mod tests {
         }
         let results = svc.drain_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(results.len(), 4);
+    }
+
+    #[test]
+    fn mixed_shape_burst_bit_identical_across_workers_and_linger() {
+        // Tentpole contract under the bucketed scheduler: a 32-job
+        // mixed-shape burst is bit-identical across worker counts and
+        // linger settings, and every job matches a sequential solve from a
+        // clone of its bucket-chunk's RNG stream.
+        let mut rng = Rng::seed_from(40);
+        let sizes = [5usize, 6, 7, 8];
+        let inputs: Vec<Mat> = (0..32)
+            .map(|j| {
+                let n = sizes[j % sizes.len()];
+                let w = randmat::logspace(1e-2, 1.0, n);
+                randmat::sym_with_spectrum(&mut rng, n, &w)
+            })
+            .collect();
+        let seed = 91;
+        let run = |workers: usize, linger: Option<Duration>| -> Vec<Mat> {
+            let mut c = cfg(workers, 4);
+            c.linger = linger;
+            let svc = start(c, Backend::Prism5, seed);
+            for (layer, a) in inputs.iter().enumerate() {
+                svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+            }
+            let mut rs = svc.drain().unwrap();
+            assert!(rs.iter().all(|r| r.error.is_none()));
+            rs.sort_by_key(|r| r.layer);
+            rs.into_iter().map(|r| r.result).collect()
+        };
+        let base = run(1, None);
+        assert_eq!(base.len(), 32);
+        let slow = Some(Duration::from_secs(30)); // never ripens mid-burst
+        for (what, other) in [
+            ("4 workers", run(4, None)),
+            ("linger on", run(1, slow)),
+            ("4 workers + linger", run(4, slow)),
+        ] {
+            for j in 0..32 {
+                assert_eq!(base[j], other[j], "job {j}: {what} changed result bits");
+            }
+        }
+        // Sequential reference. Submission round-robins the 4 shapes, so
+        // shape bucket g holds ids {g+1, g+5, ...}; with max_batch = 4 the
+        // bucket's k-th cut is seeded by its (4k)-th member — id g+16k+1.
+        for (j, a) in inputs.iter().enumerate() {
+            let (g, p) = (j % 4, j / 4);
+            let first_id = (g + 16 * (p / 4) + 1) as u64;
+            let mut stream = Rng::seed_from(batch_stream_seed(seed, first_id));
+            let mut s = Solver::for_backend_tuned(
+                Backend::Prism5,
+                MatFnTask::InvSqrt,
+                40,
+                None,
+                Some(8),
+            )
+            .unwrap();
+            let out = s.solve(a, &mut stream);
+            assert_eq!(base[j], out.primary, "job {j}: bucketed batch != sequential solve");
+        }
+    }
+
+    #[test]
+    fn lingering_singleton_dispatches_without_flush() {
+        // Starvation regression: a rare-shape singleton must dispatch once
+        // its linger deadline passes — no max_batch peers, no explicit
+        // flush — and be attributed to the linger cut path.
+        let mut rng = Rng::seed_from(41);
+        let mut c = cfg(1, 8);
+        c.linger = Some(Duration::from_millis(50));
+        let svc = start(c, Backend::Prism5, 42);
+        let w = randmat::logspace(0.1, 1.0, 6);
+        let a = randmat::sym_with_spectrum(&mut rng, 6, &w);
+        let t0 = Instant::now();
+        svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, a).unwrap();
+        let r = svc
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect("the linger cut must dispatch the singleton");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.batch_size, 1);
+        let waited = t0.elapsed();
+        assert!(
+            waited >= Duration::from_millis(50),
+            "a bucket must not be cut before its linger deadline (waited {waited:?})"
+        );
+        assert_eq!(svc.metrics.counter("service.bucket_flush_linger").get(), 1);
+        assert_eq!(svc.metrics.counter("service.bucket_flush_full").get(), 0);
+    }
+
+    #[test]
+    fn cancelled_job_neither_holds_bucket_nor_perturbs_stream_seed() {
+        // Satellite contract: cancelling a bucket-pending job removes it
+        // immediately — its result is synthesized on the spot, and the
+        // survivors batch exactly as if it had never been admitted past id
+        // assignment: their stream seed is the lowest *surviving* id.
+        let mut rng = Rng::seed_from(43);
+        let w = randmat::logspace(1e-2, 1.0, 8);
+        let inputs: Vec<Mat> =
+            (0..3).map(|_| randmat::sym_with_spectrum(&mut rng, 8, &w)).collect();
+        let seed = 77;
+        let svc = start(cfg(1, 2), Backend::Prism5, seed);
+        let dead = svc.submit(0, JobKind::InvSqrt { eps: 0.0 }, inputs[0].clone()).unwrap();
+        assert!(svc.cancel(dead));
+        // The synthesized result is available without any flush: the
+        // cancelled job cannot hold its bucket open.
+        let r = svc.recv_timeout(Duration::from_secs(10)).unwrap().expect("synthesized");
+        assert_eq!(r.id, dead);
+        assert!(r.error.as_deref().unwrap().contains("cancelled"), "{:?}", r.error);
+        assert_eq!(svc.metrics.counter("service.jobs_cancelled").get(), 1);
+        // Survivors fill the next full cut: ids 2 and 3, seeded by id 2.
+        let id2 = svc.submit(1, JobKind::InvSqrt { eps: 0.0 }, inputs[1].clone()).unwrap();
+        let _id3 = svc.submit(2, JobKind::InvSqrt { eps: 0.0 }, inputs[2].clone()).unwrap();
+        let mut results = svc.drain().unwrap();
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.error.is_none() && r.batch_size == 2));
+        for (r, a) in results.iter().zip(&inputs[1..]) {
+            let mut stream = Rng::seed_from(batch_stream_seed(seed, id2));
+            let mut s = Solver::for_backend_tuned(
+                Backend::Prism5,
+                MatFnTask::InvSqrt,
+                40,
+                None,
+                Some(8),
+            )
+            .unwrap();
+            let out = s.solve(a, &mut stream);
+            assert_eq!(r.result, out.primary, "job {}: cancel perturbed the stream", r.id);
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_round_trip_prewarms_solver_caches() {
+        // Tentpole leg 2: shutdown writes the warm routes through
+        // runtime::manifest; a restarted service prewarms them at worker
+        // spawn, so the first post-restore batch performs zero workspace
+        // allocations and the results stay bit-identical to the cold run.
+        let mut rng = Rng::seed_from(42);
+        let inputs: Vec<Mat> = (0..2)
+            .map(|_| {
+                let w = randmat::logspace(1e-2, 1.0, 8);
+                randmat::sym_with_spectrum(&mut rng, 8, &w)
+            })
+            .collect();
+        let path = std::env::temp_dir()
+            .join(format!("prism_service_snap_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let snap = path.to_string_lossy().into_owned();
+        let run = || {
+            let mut c = cfg(1, 2);
+            c.cache_snapshot = Some(snap.clone());
+            let svc = start(c, Backend::Prism5, 42);
+            for (layer, a) in inputs.iter().enumerate() {
+                svc.submit(layer, JobKind::InvSqrt { eps: 0.0 }, a.clone()).unwrap();
+            }
+            let mut rs = svc.drain().unwrap();
+            assert!(rs.iter().all(|r| r.error.is_none()));
+            rs.sort_by_key(|r| r.layer);
+            let allocs = svc.metrics.counter("service.workspace_allocs").get();
+            (rs.into_iter().map(|r| r.result).collect::<Vec<_>>(), allocs)
+        };
+        let (cold, cold_allocs) = run();
+        assert!(cold_allocs > 0, "a cold route must grow its workspace");
+        assert!(path.exists(), "drop must write the snapshot");
+        let manifest = Manifest::load(&path).unwrap();
+        assert!(
+            manifest.get("route_0_8x8").is_some(),
+            "the 8x8 InvSqrt route must be recorded"
+        );
+        assert!(manifest.get("engine").is_some(), "engine tuning rides along");
+        let (warm, warm_allocs) = run();
+        assert_eq!(
+            warm_allocs, 0,
+            "the first post-restore batch must run the warm path allocation-free"
+        );
+        for j in 0..2 {
+            assert_eq!(cold[j], warm[j], "job {j}: restore changed result bits");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,6 +1,7 @@
 //! Worker supervision for the preconditioner service: panic containment,
-//! in-thread respawn, pre-solve admission checks (deadline / cancellation /
-//! poisoned input) and the retry-with-escalation ladder.
+//! in-thread respawn, snapshot prewarming, pre-solve admission checks
+//! (deadline / cancellation / poisoned input) and the retry-with-escalation
+//! ladder.
 //!
 //! ## Supervision contract
 //!
@@ -122,6 +123,11 @@ pub(super) struct WorkerSpec {
     /// Ids marked by [`super::service::Service::cancel`]; a worker that
     /// finds a batch member here short-circuits it before solving.
     pub cancelled: Arc<Mutex<BTreeSet<u64>>>,
+    /// Route keys restored from a warm-state snapshot: the worker
+    /// pre-builds these solvers (and pre-sizes their batch workspaces) at
+    /// spawn and after every panic-respawn, so a restored route's first
+    /// real batch runs allocation-free. Empty on a cold start.
+    pub prewarm: Arc<Vec<(u8, usize, usize)>>,
 }
 
 /// The solver-tuning subset of [`ServiceConfig`] a worker needs per batch.
@@ -133,6 +139,47 @@ struct WorkerCfg {
     cache_cap: usize,
     stream: bool,
     precision: Precision,
+    /// Service batch width — how many members a prewarmed workspace must
+    /// already hold for the first real full batch to allocate nothing.
+    max_batch: usize,
+}
+
+/// Construct one route's persistent solver exactly as a live batch would:
+/// tuning knobs threaded through, per-task default tolerances preserved
+/// (`tol: None`), and — with streaming on — the one persistent observer
+/// reading the worker's shared tag cell. Shared by the batch path and the
+/// snapshot-prewarm path, so a restored solver streams exactly like a
+/// cold-built one.
+fn build_solver(
+    backend: Backend,
+    cfg: WorkerCfg,
+    tags: &Arc<Mutex<Vec<(u64, usize)>>>,
+    prog_tx: &Sender<ResidualEvent>,
+    task: MatFnTask,
+) -> Solver {
+    // `tol` passes through as-is: `None` keeps the per-task defaults
+    // (InvSqrt at 1e-9, polar at 1e-7) instead of flattening every task
+    // onto one blanket tolerance.
+    let mut s =
+        Solver::for_backend_tuned(backend, task, cfg.iters, cfg.tol, Some(cfg.sketch_p))
+            .expect("service backends always have polar/invsqrt forms");
+    s.spec_mut().precision = cfg.precision;
+    if cfg.stream {
+        let tags = Arc::clone(tags);
+        let prog_tx = prog_tx.clone();
+        s.set_observer(Some(Box::new(move |ev| {
+            let tag = lock_or_recover(&tags).get(ev.job).copied();
+            if let Some((id, layer)) = tag {
+                let _ = prog_tx.send(ResidualEvent {
+                    id,
+                    layer,
+                    iter: ev.iter,
+                    residual: ev.residual,
+                });
+            }
+        })));
+    }
+    s
 }
 
 /// Spawn one supervised worker thread serving the shared job channel.
@@ -144,9 +191,11 @@ pub(super) fn spawn_worker(spec: WorkerSpec, cfg: &ServiceConfig) -> JoinHandle<
         cache_cap: cfg.solver_cache_cap,
         stream: cfg.stream_residuals,
         precision: cfg.precision,
+        max_batch: cfg.max_batch,
     };
     std::thread::spawn(move || {
         let mut worker = Worker::new(spec, wcfg);
+        worker.prewarm();
         loop {
             let msg = { lock_or_recover(&worker.spec.rx).recv() };
             match msg {
@@ -183,6 +232,9 @@ struct Worker {
     cancelled: Arc<Counter>,
     panics: Arc<Counter>,
     restarts: Arc<Counter>,
+    /// Workspace growth observed across the cached solvers' batch solves —
+    /// 0 on a warm (steady-state or snapshot-prewarmed) service.
+    workspace_allocs: Arc<Counter>,
     batch_time: Arc<Histogram>,
     job_time: Arc<Histogram>,
 }
@@ -202,6 +254,7 @@ impl Worker {
             cancelled: m.counter("service.jobs_cancelled"),
             panics: m.counter("service.worker_panics"),
             restarts: m.counter("service.worker_restarts"),
+            workspace_allocs: m.counter("service.workspace_allocs"),
             // Execution time is recorded twice since batches became one
             // solve call: `service.batch_exec_s` is the wall time of a whole
             // batch, `service.exec_s` keeps its historical per-job meaning
@@ -255,10 +308,60 @@ impl Worker {
             });
         }
         // Respawn in place: the unwound solver cache and tag cell may hold
-        // arbitrary partial state, so both are rebuilt from scratch.
+        // arbitrary partial state, so both are rebuilt from scratch (and
+        // the snapshot-restored routes prewarmed again — the respawned
+        // worker should be as warm as the one that died).
         self.cache = SolverCache::new(self.cfg.cache_cap, &self.spec.metrics);
         self.tags = Arc::new(Mutex::new(Vec::new()));
         self.restarts.inc();
+        self.prewarm();
+    }
+
+    /// Pre-build the snapshot-restored routes: construct each solver
+    /// through the same path a live batch would (observer wiring included)
+    /// and run one throwaway full-width batch of benign diagonal matrices
+    /// through it, so the workspace panels are grown before the first real
+    /// job arrives. The dummy solve reads a throwaway RNG stream; solver
+    /// reuse is deterministic, so later results are bit-identical to a
+    /// cold start's. Runs under its own unwind boundary — a stale snapshot
+    /// is a performance hint, never something that may kill a worker.
+    fn prewarm(&mut self) {
+        if self.spec.prewarm.is_empty() {
+            return;
+        }
+        let routes = Arc::clone(&self.spec.prewarm);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            for &(tag, rows, cols) in routes.iter() {
+                let task = match tag {
+                    0 => MatFnTask::InvSqrt,
+                    1 => MatFnTask::Polar,
+                    _ => MatFnTask::RectPolar,
+                };
+                let cfg = self.cfg;
+                let backend = self.spec.backend;
+                let prog_tx = self.spec.prog_tx.clone();
+                let tags = Arc::clone(&self.tags);
+                let solver = self
+                    .cache
+                    .get_or_insert((tag, rows, cols), || {
+                        build_solver(backend, cfg, &tags, &prog_tx, task)
+                    });
+                // Identity-like inputs converge immediately for every task,
+                // while still exercising the full batch-width workspace.
+                let dummy: Vec<Mat> = (0..cfg.max_batch.max(1))
+                    .map(|_| {
+                        let mut m = Mat::zeros(rows, cols);
+                        for i in 0..rows.min(cols) {
+                            m[(i, i)] = 1.0;
+                        }
+                        m
+                    })
+                    .collect();
+                let refs: Vec<&Mat> = dummy.iter().collect();
+                let mut rng = Rng::seed_from(0);
+                let _ = solver.solve_batch(&refs, &mut rng);
+            }
+        }));
     }
 
     /// Send the one-and-only error result for `job` and mark it reported.
@@ -343,29 +446,9 @@ impl Worker {
         let backend = self.spec.backend;
         let prog_tx = self.spec.prog_tx.clone();
         let tags = Arc::clone(&self.tags);
-        let solver = self.cache.get_or_insert(key, || {
-            // `tol` passes through as-is: `None` keeps the per-task
-            // defaults (InvSqrt at 1e-9, polar at 1e-7) instead of
-            // flattening every task onto one blanket tolerance.
-            let mut s =
-                Solver::for_backend_tuned(backend, task, cfg.iters, cfg.tol, Some(cfg.sketch_p))
-                    .expect("service backends always have polar/invsqrt forms");
-            s.spec_mut().precision = cfg.precision;
-            if cfg.stream {
-                s.set_observer(Some(Box::new(move |ev| {
-                    let tag = lock_or_recover(&tags).get(ev.job).copied();
-                    if let Some((id, layer)) = tag {
-                        let _ = prog_tx.send(ResidualEvent {
-                            id,
-                            layer,
-                            iter: ev.iter,
-                            residual: ev.residual,
-                        });
-                    }
-                })));
-            }
-            s
-        });
+        let solver = self
+            .cache
+            .get_or_insert(key, || build_solver(backend, cfg, &tags, &prog_tx, task));
         if cfg.stream {
             let mut t = lock_or_recover(&self.tags);
             t.clear();
@@ -373,11 +456,17 @@ impl Worker {
         }
         let mut rng = Rng::seed_from(batch_stream_seed(self.spec.seed, first_id));
         let sw = Stopwatch::start();
+        let allocs_before = solver.workspace_allocations();
         let outs = {
             let refs: Vec<&Mat> = jobs.iter().map(|j| &j.matrix).collect();
             solver.solve_batch(&refs, &mut rng)
         };
         let exec_s = sw.elapsed_s();
+        // Workspace growth on the solve path: non-zero only while a route
+        // warms up — the snapshot/prewarm round-trip pins this to 0 for a
+        // restored service's first batch.
+        let grown = solver.workspace_allocations().saturating_sub(allocs_before);
+        self.workspace_allocs.add(grown as u64);
         self.batch_time.observe(exec_s);
         self.job_time.observe(exec_s / bsize as f64);
         for (job, out) in jobs.into_iter().zip(outs) {

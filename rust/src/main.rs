@@ -86,6 +86,13 @@ COMMON FLAGS:
   --faults SPEC    serve: deterministic fault injection, e.g.
                    "nan:solve=4,iter=1;panic:worker=0,job=9;delay:ms=5"
                    (default none; PALLAS_FAULTS env var is the fallback)
+  --linger MS      serve: shape-bucket linger in milliseconds — how long a
+                   partial batch may wait for same-shape peers before the
+                   flusher cuts it (default unset: only full buckets and
+                   explicit flushes dispatch)
+  --cache-snapshot F  serve: warm-state manifest path — restored at start
+                   when the file exists (pre-building per-shape solver
+                   caches), rewritten at shutdown
   --artifacts DIR  artifact directory       (default artifacts)
 
 All subcommands dispatch through the matfn solver registry; any
@@ -442,6 +449,13 @@ fn cmd_serve(args: &Args) -> prism::util::Result<()> {
             .get("faults")
             .map(str::to_string)
             .or_else(|| std::env::var("PALLAS_FAULTS").ok()),
+        linger: match args.get("linger") {
+            Some(_) => {
+                Some(std::time::Duration::from_millis(args.get_u64("linger", 0)?))
+            }
+            None => None,
+        },
+        cache_snapshot: args.get("cache-snapshot").map(str::to_string),
     };
     let backend = Backend::parse(&args.get_string("backend", "prism5"))?;
     let kappa = args.get_f64("kappa", 0.5)?;

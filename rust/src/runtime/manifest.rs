@@ -1,5 +1,10 @@
 //! Artifact manifest: the JSON contract between `python/compile/aot.py`
-//! (writer) and the Rust runtime (reader).
+//! (writer) and the Rust runtime (reader) — and, since the service grew
+//! warm-state snapshots, a Rust-side **writer** too:
+//! [`Manifest::save`]/[`Manifest::to_json`] serialize a manifest back into
+//! the exact JSON shape [`Manifest::parse`] accepts, so the coordinator can
+//! persist its warm solver-cache routes on shutdown and restore them at the
+//! next start through the same artifact contract.
 //!
 //! ```json
 //! {
@@ -117,6 +122,56 @@ impl Manifest {
     pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
+
+    /// Build the [`Value`] tree `parse` reads — the writer half of the
+    /// round-trip contract (`parse(to_json(m))` reproduces `m`).
+    pub fn to_value(&self) -> Value {
+        let tensor = |t: &TensorSpec| {
+            let mut tv = std::collections::BTreeMap::new();
+            tv.insert("name".to_string(), Value::Str(t.name.clone()));
+            tv.insert(
+                "shape".to_string(),
+                Value::Array(t.shape.iter().map(|&d| Value::Int(d)).collect()),
+            );
+            tv.insert("dtype".to_string(), Value::Str(t.dtype.clone()));
+            Value::Table(tv)
+        };
+        let arts: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut ev = std::collections::BTreeMap::new();
+                ev.insert("name".to_string(), Value::Str(e.name.clone()));
+                ev.insert("file".to_string(), Value::Str(e.file.clone()));
+                ev.insert(
+                    "inputs".to_string(),
+                    Value::Array(e.inputs.iter().map(tensor).collect()),
+                );
+                ev.insert(
+                    "outputs".to_string(),
+                    Value::Array(e.outputs.iter().map(tensor).collect()),
+                );
+                ev.insert("meta".to_string(), Value::Table(e.meta.clone()));
+                Value::Table(ev)
+            })
+            .collect();
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("version".to_string(), Value::Int(self.version));
+        root.insert("artifacts".to_string(), Value::Array(arts));
+        Value::Table(root)
+    }
+
+    /// Serialize to the JSON `parse` accepts.
+    pub fn to_json(&self) -> String {
+        crate::configfmt::to_json(&self.to_value())
+    }
+
+    /// Write the manifest to `path` (atomic enough for single-writer use:
+    /// one `fs::write`, no partial-update protocol).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| Error::Runtime(format!("write {}: {e}", path.display())))
+    }
 }
 
 #[cfg(test)]
@@ -155,5 +210,32 @@ mod tests {
         assert!(Manifest::parse("{}").is_err());
         assert!(Manifest::parse(r#"{"artifacts": [{"file": "x"}]}"#).is_err());
         assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn writer_round_trips_through_parse() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let back = Manifest::parse(&m.to_json()).expect("writer output must re-parse");
+        assert_eq!(back.version, m.version);
+        assert_eq!(back.entries.len(), m.entries.len());
+        let (e0, b0) = (&m.entries[0], &back.entries[0]);
+        assert_eq!(b0.name, e0.name);
+        assert_eq!(b0.file, e0.file);
+        assert_eq!(b0.inputs.len(), e0.inputs.len());
+        assert_eq!(b0.inputs[0].shape, e0.inputs[0].shape);
+        assert_eq!(b0.inputs[0].dtype, e0.inputs[0].dtype);
+        assert_eq!(b0.meta, e0.meta);
+    }
+
+    #[test]
+    fn save_and_load_round_trip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("prism_manifest_rt_{}.json", std::process::id()));
+        m.save(&path).expect("save");
+        let back = Manifest::load(&path).expect("load");
+        assert_eq!(back.entries.len(), m.entries.len());
+        assert_eq!(back.get("train_step").unwrap().file, "train_step.hlo.txt");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -217,6 +217,8 @@ fn smoke_service_round_trip() {
         gemm_block: None,
         gemm_kernel: None,
         faults: None,
+        linger: None,
+        cache_snapshot: None,
     };
     let svc = Service::start(cfg, Backend::Prism5, 7).expect("valid service config");
     let w = randmat::logspace(0.05, 1.0, 6);

@@ -59,6 +59,8 @@ fn cfg(workers: usize, max_batch: usize, faults: Option<&str>) -> ServiceConfig 
         gemm_block: None,
         gemm_kernel: None,
         faults: faults.map(str::to_string),
+        linger: None,
+        cache_snapshot: None,
     }
 }
 
