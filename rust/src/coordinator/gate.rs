@@ -1,0 +1,173 @@
+//! Admission-control primitives extracted from the service so the loom
+//! suite can model-check the *production* state machines, not test
+//! doubles: [`InflightLedger`] is the dispatched/received accounting behind
+//! [`super::service::Service::inflight`], and [`AdmissionGate`] is the
+//! condvar blocking submitters park on when the queue cap is hit.
+//!
+//! Both are deliberately tiny. The correctness arguments they carry are
+//! easy to state and exactly the kind a test can only sample but a model
+//! checker can exhaust:
+//!
+//! * **Ledger exactness** — `inflight()` loads `received` *before*
+//!   `dispatched`, so the difference never underflows and never reports
+//!   zero while a result is still owed (the drain loop blocks on it).
+//! * **No lost wakeup** — the gate's condvar waits on the *same* mutex the
+//!   capacity check reads under (the service's pending-scheduler lock), and
+//!   every capacity-freeing path notifies while holding that mutex. A
+//!   notify therefore cannot land inside a submitter's check-to-park
+//!   window: either it happens before the submitter locks and the re-check
+//!   sees the freed capacity, or it happens after the wait has released the
+//!   lock and the wakeup is delivered. `rust/tests/loom_coordinator.rs`
+//!   checks this over every (bounded) interleaving; the 5 ms timeout the
+//!   production wait keeps is an operational backstop, not a correctness
+//!   crutch, and the model deliberately treats it as an untimed wait.
+
+use crate::runtime::sync::atomic::{AtomicU64, Ordering};
+use crate::runtime::sync::{Condvar, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Exact dispatched/received accounting. `dispatched` is only advanced by
+/// the service handle and its linger flusher (each synthesized
+/// cancellation/expiry result counts as one dispatch), never by workers, so
+/// `dispatched − received` is precisely the number of results still owed
+/// and a drain loop can block on it race-free: every dispatched job sends
+/// exactly one result.
+#[derive(Debug, Default)]
+pub struct InflightLedger {
+    dispatched: AtomicU64,
+    received: AtomicU64,
+}
+
+impl InflightLedger {
+    pub const fn new() -> InflightLedger {
+        InflightLedger { dispatched: AtomicU64::new(0), received: AtomicU64::new(0) }
+    }
+
+    /// Count `n` jobs handed to the workers (or synthesized on their
+    /// behalf). Always advanced *before* the jobs/results are sent, so
+    /// [`InflightLedger::inflight`] never undercounts what is owed.
+    pub fn note_dispatched(&self, n: u64) {
+        self.dispatched.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Count one result taken off the completion channel.
+    pub fn note_received(&self) {
+        self.received.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Results still owed (dispatched − received).
+    ///
+    /// Load order is what makes this exact with no underflow clamp:
+    /// `received` is read FIRST. A result can only be received after its
+    /// job was dispatched, so `received ≤ dispatched` holds at the moment
+    /// of the first load, and `dispatched` only grows between the two loads
+    /// — hence `d ≥ r` always. (Reading `dispatched` first admitted a race:
+    /// a dispatch + recv on other threads between the loads made `r` exceed
+    /// the stale `d`, and a `saturating_sub` silently reported 0 in-flight
+    /// while a result was still owed.)
+    pub fn inflight(&self) -> usize {
+        let r = self.received.load(Ordering::SeqCst);
+        let d = self.dispatched.load(Ordering::SeqCst);
+        debug_assert!(
+            d >= r,
+            "service: {r} results received for {d} dispatched jobs — \
+             the one-result-per-job invariant is broken"
+        );
+        (d - r) as usize
+    }
+}
+
+/// The condvar blocking submitters park on when the admission cap is hit.
+///
+/// The gate owns no lock: callers park on the guard of the mutex their
+/// capacity check read under, and capacity-freeing paths notify while
+/// holding that same mutex — the monitor discipline whose no-lost-wakeup
+/// property the module docs spell out.
+#[derive(Debug, Default)]
+pub struct AdmissionGate {
+    cv: Condvar,
+}
+
+impl AdmissionGate {
+    pub const fn new() -> AdmissionGate {
+        AdmissionGate { cv: Condvar::new() }
+    }
+
+    /// Atomically release `guard` and wait for a [`AdmissionGate::notify`]
+    /// (or the backstop timeout), then re-acquire and return the guard.
+    /// Poisoning is recovered, not propagated, matching
+    /// [`crate::util::lock_or_recover`].
+    pub fn park<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        backstop: Duration,
+    ) -> MutexGuard<'a, T> {
+        self.cv
+            .wait_timeout(guard, backstop)
+            .unwrap_or_else(PoisonError::into_inner)
+            .0
+    }
+
+    /// Wake every parked submitter. Callers hold the mutex the waiters'
+    /// capacity check reads under (see the module docs); waking all of them
+    /// is deliberate — each re-checks capacity under that lock, so spurious
+    /// wakeups cost a re-check, while `notify_one` to a waiter that loses
+    /// the race would strand the rest.
+    pub fn notify(&self) {
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sync::{Arc, Mutex};
+    use crate::util::lock_or_recover;
+
+    #[test]
+    fn ledger_counts_are_exact() {
+        let l = InflightLedger::new();
+        assert_eq!(l.inflight(), 0);
+        l.note_dispatched(3);
+        assert_eq!(l.inflight(), 3);
+        l.note_received();
+        l.note_received();
+        assert_eq!(l.inflight(), 1);
+        l.note_dispatched(1);
+        l.note_received();
+        l.note_received();
+        assert_eq!(l.inflight(), 0);
+    }
+
+    #[test]
+    fn gate_park_returns_on_notify() {
+        let shared: Arc<(Mutex<bool>, AdmissionGate)> =
+            Arc::new((Mutex::new(false), AdmissionGate::new()));
+        let waiter = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let (m, gate) = &*shared;
+                let mut freed = lock_or_recover(m);
+                while !*freed {
+                    freed = gate.park(freed, Duration::from_millis(5));
+                }
+            })
+        };
+        {
+            let (m, gate) = &*shared;
+            let mut freed = lock_or_recover(m);
+            *freed = true;
+            gate.notify();
+        }
+        waiter.join().expect("waiter exits once capacity frees");
+    }
+
+    #[test]
+    fn gate_park_backstop_times_out_without_a_notify() {
+        let shared: (Mutex<()>, AdmissionGate) = (Mutex::new(()), AdmissionGate::new());
+        let (m, gate) = &shared;
+        // No notifier exists: the backstop alone must return the guard.
+        let g = lock_or_recover(m);
+        let _g = gate.park(g, Duration::from_millis(1));
+    }
+}

@@ -13,12 +13,17 @@
 //! * [`async_shampoo`] — **staleness-tolerant Shampoo**: preconditioner
 //!   refreshes submitted to the service asynchronously; the train loop never
 //!   blocks on a matrix function after warmup.
-//! * `schedule` (internal) — **shape-bucketed batch scheduling**: per-(task, shape,
+//! * [`schedule`] — **shape-bucketed batch scheduling**: per-(task, shape,
 //!   precision) pending buckets with `max_batch` cuts and a linger deadline,
 //!   so mixed-shape tenants still fill lockstep batches.
+//! * [`gate`] — **admission-control primitives** (the inflight ledger and
+//!   the blocking-submitter condvar gate), extracted so the loom suite
+//!   (`rust/tests/loom_coordinator.rs`) model-checks the production state
+//!   machines rather than test doubles.
 
 pub mod async_shampoo;
-mod schedule;
+pub mod gate;
+pub mod schedule;
 pub mod service;
 pub mod supervise;
 pub mod train;

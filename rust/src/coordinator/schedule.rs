@@ -29,12 +29,12 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Bucket identity: one batchable class of jobs. `task`/`rows`/`cols` come
-/// from [`super::service::JobKind::route_key`]; `precision` is the service's
-/// (currently service-wide) solver precision, carried explicitly so the
-/// batching contract — only same-precision jobs share a lockstep solve —
-/// stays visible in the key even if precision ever becomes per-job.
+/// from `JobKind::route_key`; `precision` is the service's (currently
+/// service-wide) solver precision, carried explicitly so the batching
+/// contract — only same-precision jobs share a lockstep solve — stays
+/// visible in the key even if precision ever becomes per-job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub(super) struct BucketKey {
+pub struct BucketKey {
     pub task: u8,
     pub rows: usize,
     pub cols: usize,
@@ -68,7 +68,9 @@ fn precision_tag(p: Precision) -> u8 {
 }
 
 /// Per-(task, shape, precision) pending-job buckets with `max_batch` cuts.
-pub(super) struct BucketScheduler {
+/// Public (not just `pub(super)`) so the loom suite can drive the *real*
+/// scheduler through its linger-cut and cancel races.
+pub struct BucketScheduler {
     max_batch: usize,
     precision: u8,
     buckets: BTreeMap<BucketKey, Vec<Job>>,

@@ -115,6 +115,7 @@
 //! submitted work is executed (and counted in the metrics), never silently
 //! discarded — then writes the warm-state snapshot, if configured.
 
+use super::gate::{AdmissionGate, InflightLedger};
 use super::schedule::BucketScheduler;
 use super::supervise;
 use crate::config::{Admission, Backend, ServiceConfig};
@@ -125,12 +126,14 @@ use crate::matfn::{validate_input, Precision};
 use crate::metrics::Registry;
 use crate::runtime::faultinject::{self, FaultPlan};
 use crate::runtime::manifest::{ArtifactEntry, Manifest, TensorSpec};
+use crate::runtime::sync::atomic::{AtomicBool, Ordering};
+use crate::runtime::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender,
+};
+use crate::runtime::sync::{Arc, Mutex};
 use crate::util::{lock_or_recover, Error, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -262,19 +265,20 @@ pub struct Service {
     backend: Backend,
     next_id: Mutex<u64>,
     pub metrics: Arc<Registry>,
-    /// Jobs handed to workers / results taken off the completion channel.
-    /// `dispatched` is only advanced by the handle and its linger flusher
-    /// (each synthesized removal result counts as one dispatch), never by
-    /// workers, so `dispatched − received` is an exact count of results
-    /// still owed and the drain loop can block on it race-free: every
-    /// dispatched job sends exactly one result.
-    dispatched: Arc<AtomicU64>,
-    received: AtomicU64,
-    /// Blocking submitters park here when the admission cap is hit; every
-    /// result fetch notifies. Paired with a timeout in the wait loop, so a
-    /// notify racing the re-check costs bounded staleness, never a hang.
-    admission: Condvar,
-    admission_lock: Mutex<()>,
+    /// Jobs handed to workers / results taken off the completion channel
+    /// (see [`InflightLedger`]): `dispatched − received` is an exact count
+    /// of results still owed, so the drain loop can block on it race-free.
+    /// Shared with the linger flusher, which counts its own dispatches and
+    /// synthesized expiry results.
+    ledger: Arc<InflightLedger>,
+    /// Blocking submitters park here when the admission cap is hit. The
+    /// gate's condvar waits on the pending-scheduler mutex — the same lock
+    /// the capacity check reads under — and every capacity-freeing path
+    /// (result fetch, bucket-pending cancel, queue-expiry prune) notifies
+    /// while holding that lock, so a wakeup can never be lost (the monitor
+    /// discipline `rust/tests/loom_coordinator.rs` model-checks). The 5 ms
+    /// timeout in the wait loop is an operational backstop only.
+    admission: Arc<AdmissionGate>,
     /// Most-recently dispatched route keys, LRU-capped at
     /// `solver_cache_cap` — the warm state the shutdown snapshot records.
     warm_routes: Arc<Mutex<Vec<(u8, usize, usize)>>>,
@@ -355,8 +359,7 @@ impl Service {
         // `dispatch` never blocks on a full channel.
         let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_cap + cfg.workers);
         let rx = Arc::new(Mutex::new(rx));
-        let (res_tx, res_rx): (Sender<JobResult>, Receiver<JobResult>) =
-            std::sync::mpsc::channel();
+        let (res_tx, res_rx): (Sender<JobResult>, Receiver<JobResult>) = channel();
         let (prog_tx, prog_rx): (Sender<ResidualEvent>, Receiver<ResidualEvent>) = channel();
         let metrics = Arc::new(Registry::default());
         // Register every counter the scheduling/supervision/admission layers
@@ -403,7 +406,8 @@ impl Service {
             ));
         }
         let pending = Arc::new(Mutex::new(BucketScheduler::new(cfg.max_batch, cfg.precision)));
-        let dispatched = Arc::new(AtomicU64::new(0));
+        let ledger = Arc::new(InflightLedger::new());
+        let admission = Arc::new(AdmissionGate::new());
         let warm_routes: Arc<Mutex<Vec<(u8, usize, usize)>>> =
             Arc::new(Mutex::new(Vec::new()));
         let flusher_stop = Arc::new(AtomicBool::new(false));
@@ -413,7 +417,8 @@ impl Service {
                 tx: tx.clone(),
                 res_tx: res_tx.clone(),
                 metrics: Arc::clone(&metrics),
-                dispatched: Arc::clone(&dispatched),
+                ledger: Arc::clone(&ledger),
+                admission: Arc::clone(&admission),
                 warm_routes: Arc::clone(&warm_routes),
                 warm_cap: cfg.solver_cache_cap,
                 stop: Arc::clone(&flusher_stop),
@@ -432,10 +437,8 @@ impl Service {
             backend,
             next_id: Mutex::new(0),
             metrics,
-            dispatched,
-            received: AtomicU64::new(0),
-            admission: Condvar::new(),
-            admission_lock: Mutex::new(()),
+            ledger,
+            admission,
             warm_routes,
             flusher,
             flusher_stop,
@@ -500,12 +503,22 @@ impl Service {
         if id == 0 || id > *lock_or_recover(&self.next_id) {
             return false;
         }
-        let held = lock_or_recover(&self.pending).remove(id);
+        let held = {
+            let mut pend = lock_or_recover(&self.pending);
+            let held = pend.remove(id);
+            if held.is_some() {
+                // A bucket-pending removal frees admission capacity: wake
+                // parked submitters under the pending lock (the gate's
+                // no-lost-wakeup discipline).
+                self.admission.notify();
+            }
+            held
+        };
         if let Some(job) = held {
             self.metrics.counter("service.jobs_cancelled").inc();
             // Count the synthesized result as one dispatch *before* sending
             // it, so `inflight` never undercounts what is owed.
-            self.dispatched.fetch_add(1, Ordering::SeqCst);
+            self.ledger.note_dispatched(1);
             let why = format!("job {id}: cancelled while pending in its bucket");
             let _ = self.res_tx.send(bucket_removal_result(&job, why));
             return true;
@@ -518,6 +531,14 @@ impl Service {
     /// push all happen under the pending lock, so concurrent submitters
     /// serialize and the cap is never overshot (`inflight` can only shrink
     /// concurrently — results being fetched — which is the safe direction).
+    ///
+    /// A blocking submitter parks on the *pending* mutex itself (through
+    /// [`AdmissionGate`]): the wait releases exactly the lock the capacity
+    /// check read under, and every capacity-freeing path notifies while
+    /// holding it, so a wakeup cannot land in the check-to-park window and
+    /// be lost. The loom suite checks this over every bounded interleaving;
+    /// the 5 ms backstop bounds the cost of anything the model does not
+    /// cover (e.g. a future capacity-freeing path that forgets to notify).
     fn admit(
         &self,
         layer: usize,
@@ -533,62 +554,48 @@ impl Service {
         let mut job =
             Some(Job { id: 0, layer, kind, matrix, submitted: Instant::now(), deadline });
         loop {
-            // Ok((id, full batch to dispatch)) | Err(jobs currently used).
-            let decision: std::result::Result<(u64, Option<Vec<Job>>), usize> = {
-                let mut pend = lock_or_recover(&self.pending);
-                let used = pend.pending() + self.inflight();
-                if used >= self.cfg.queue_cap {
-                    Err(used)
-                } else {
-                    let id = {
-                        let mut n = lock_or_recover(&self.next_id);
-                        *n += 1;
-                        *n
-                    };
-                    let mut j = job.take().expect("job is present until admitted");
-                    j.id = id;
-                    j.submitted = Instant::now();
-                    self.metrics.counter("service.jobs_submitted").inc();
-                    Ok((id, pend.push(j)))
+            let mut pend = lock_or_recover(&self.pending);
+            let used = pend.pending() + self.inflight();
+            if used < self.cfg.queue_cap {
+                let id = {
+                    let mut n = lock_or_recover(&self.next_id);
+                    *n += 1;
+                    *n
+                };
+                let mut j = job.take().expect("job is present until admitted");
+                j.id = id;
+                j.submitted = Instant::now();
+                self.metrics.counter("service.jobs_submitted").inc();
+                let batch = pend.push(j);
+                drop(pend);
+                // A full-bucket cut dispatches synchronously with the
+                // admitting submit (outside the pending lock) — batch
+                // latency is part of the admission path's contract.
+                if let Some(b) = batch {
+                    self.dispatch(b, FlushReason::Full)?;
                 }
-            };
-            match decision {
-                Ok((id, batch)) => {
-                    // A full-bucket cut dispatches synchronously with the
-                    // admitting submit (outside the pending lock) — batch
-                    // latency is part of the admission path's contract.
-                    if let Some(b) = batch {
-                        self.dispatch(b, FlushReason::Full)?;
-                    }
-                    return Ok(id);
-                }
-                Err(_) if block => {
-                    // Park until a result fetch frees capacity. The timeout
-                    // bounds the staleness of a notify racing the re-check
-                    // above — a missed wakeup costs 5 ms, never a hang.
-                    let guard = lock_or_recover(&self.admission_lock);
-                    let (guard, _timed_out) = self
-                        .admission
-                        .wait_timeout(guard, Duration::from_millis(5))
-                        .unwrap_or_else(std::sync::PoisonError::into_inner);
-                    drop(guard);
-                }
-                Err(used) => {
-                    self.metrics.counter("service.jobs_backpressured").inc();
-                    return Err(Error::Backpressure(format!(
-                        "service: {used} jobs in flight ≥ queue_cap {} \
-                         (fetch results or raise service.queue_cap)",
-                        self.cfg.queue_cap
-                    )));
-                }
+                return Ok(id);
             }
+            if !block {
+                drop(pend);
+                self.metrics.counter("service.jobs_backpressured").inc();
+                return Err(Error::Backpressure(format!(
+                    "service: {used} jobs in flight ≥ queue_cap {} \
+                     (fetch results or raise service.queue_cap)",
+                    self.cfg.queue_cap
+                )));
+            }
+            // Park until capacity frees up; the loop re-checks under the
+            // re-acquired lock (both against spurious wakeups and because
+            // another submitter may have taken the freed slot first).
+            let _pend = self.admission.park(pend, Duration::from_millis(5));
         }
     }
 
     fn dispatch(&self, batch: Vec<Job>, reason: FlushReason) -> Result<()> {
         dispatch_batch(
             &self.tx,
-            &self.dispatched,
+            &self.ledger,
             &self.metrics,
             &self.warm_routes,
             self.cfg.solver_cache_cap,
@@ -608,34 +615,24 @@ impl Service {
 
     /// Number of results still owed (dispatched − received). Results of
     /// partially-filled batches still held back by the router are *not*
-    /// counted — call [`Self::flush`] first.
+    /// counted — call [`Self::flush`] first. The exactness argument (load
+    /// order, no underflow clamp) lives on [`InflightLedger::inflight`].
     pub fn inflight(&self) -> usize {
-        // Load order is what makes this exact with no underflow clamp:
-        // `received` is read FIRST. A result can only be received after its
-        // job was dispatched, so `received ≤ dispatched` holds at the
-        // moment of the first load, and `dispatched` only grows between the
-        // two loads — hence `d ≥ r` always. (Reading `dispatched` first
-        // admitted a race: a dispatch + recv on other threads between the
-        // loads made `r` exceed the stale `d`, and the old `saturating_sub`
-        // silently reported 0 in-flight while a result was still owed.)
-        let r = self.received.load(Ordering::SeqCst);
-        let d = self.dispatched.load(Ordering::SeqCst);
-        debug_assert!(
-            d >= r,
-            "service: {r} results received for {d} dispatched jobs — \
-             the one-result-per-job invariant is broken"
-        );
-        (d - r) as usize
+        self.ledger.inflight()
     }
 
     /// Shared bookkeeping for every fetched result: advance `received`,
-    /// record latency, discard a stale cancel mark, and wake one admission
-    /// waiter (capacity just freed up).
+    /// record latency, discard a stale cancel mark, and wake the admission
+    /// waiters (capacity just freed up). The notify happens under the
+    /// pending lock — the gate's no-lost-wakeup discipline — acquired after
+    /// the ledger update, so a woken submitter's capacity re-check already
+    /// sees the freed slot.
     fn note_received(&self, r: &JobResult) {
-        self.received.fetch_add(1, Ordering::SeqCst);
+        self.ledger.note_received();
         self.metrics.histogram("service.latency_s").observe(r.latency_s);
         lock_or_recover(&self.cancelled).remove(&r.id);
-        self.admission.notify_all();
+        let _pend = lock_or_recover(&self.pending);
+        self.admission.notify();
     }
 
     /// Blocking receive of the next completed job.
@@ -767,7 +764,7 @@ impl Drop for Service {
 /// batch to the worker channel.
 fn dispatch_batch(
     tx: &SyncSender<WorkerMsg>,
-    dispatched: &AtomicU64,
+    ledger: &InflightLedger,
     metrics: &Registry,
     warm_routes: &Mutex<Vec<(u8, usize, usize)>>,
     warm_cap: usize,
@@ -788,7 +785,7 @@ fn dispatch_batch(
         FlushReason::Linger => metrics.counter("service.bucket_flush_linger").inc(),
         FlushReason::Manual => {}
     }
-    dispatched.fetch_add(batch.len() as u64, Ordering::SeqCst);
+    ledger.note_dispatched(batch.len() as u64);
     metrics.histogram("service.batch_size").observe(batch.len() as f64);
     metrics.histogram("service.batch_occupancy").observe(batch.len() as f64);
     metrics.gauge("service.batch_occupancy").set(batch.len() as i64);
@@ -833,7 +830,8 @@ struct FlusherShared {
     tx: SyncSender<WorkerMsg>,
     res_tx: Sender<JobResult>,
     metrics: Arc<Registry>,
-    dispatched: Arc<AtomicU64>,
+    ledger: Arc<InflightLedger>,
+    admission: Arc<AdmissionGate>,
     warm_routes: Arc<Mutex<Vec<(u8, usize, usize)>>>,
     warm_cap: usize,
     stop: Arc<AtomicBool>,
@@ -856,7 +854,17 @@ fn spawn_flusher(sh: FlusherShared) -> JoinHandle<()> {
             let now = Instant::now();
             let (dead, ripe) = {
                 let mut pend = lock_or_recover(&sh.pending);
-                (pend.prune_deadlines(now), pend.take_over_linger(now, sh.linger))
+                let swept =
+                    (pend.prune_deadlines(now), pend.take_over_linger(now, sh.linger));
+                if !swept.0.is_empty() {
+                    // Queue-expiry pruning frees admission capacity without
+                    // a result fetch: notify under the pending lock (the
+                    // gate's no-lost-wakeup discipline). Linger cuts only
+                    // move jobs from pending to in-flight — no capacity
+                    // change — so they don't notify.
+                    sh.admission.notify();
+                }
+                swept
             };
             for job in dead {
                 // Expiry is detected while the job still sits in its bucket,
@@ -867,13 +875,13 @@ fn spawn_flusher(sh: FlusherShared) -> JoinHandle<()> {
                 sh.metrics.counter("service.jobs_expired").inc();
                 let why =
                     format!("job {}: deadline expired in its bucket before dispatch", job.id);
-                sh.dispatched.fetch_add(1, Ordering::SeqCst);
+                sh.ledger.note_dispatched(1);
                 let _ = sh.res_tx.send(bucket_removal_result(&job, why));
             }
             for batch in ripe {
                 let sent = dispatch_batch(
                     &sh.tx,
-                    &sh.dispatched,
+                    &sh.ledger,
                     &sh.metrics,
                     &sh.warm_routes,
                     sh.warm_cap,

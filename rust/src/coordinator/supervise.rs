@@ -43,11 +43,11 @@ use crate::matfn::{MatFnOutput, MatFnTask, Precision, Solver};
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::rng::Rng;
 use crate::runtime::faultinject;
+use crate::runtime::sync::mpsc::{Receiver, Sender};
+use crate::runtime::sync::{Arc, Mutex};
 use crate::util::{lock_or_recover, Stopwatch};
 use std::collections::BTreeSet;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 

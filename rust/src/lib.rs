@@ -50,6 +50,10 @@
 //! let out = solver.solve(&a, &mut rng);
 //! assert!(out.log.final_residual() < 1e-6);
 //! ```
+// Every unsafe operation must sit in an explicit `unsafe {}` block with its
+// own `// SAFETY:` justification, even inside `unsafe fn` (lint rule R2 in
+// `cargo xtask lint` checks the comments; this makes the blocks visible).
+#![deny(unsafe_op_in_unsafe_fn)]
 // Clippy runs in CI with `-D warnings`; these long-stable style lints fight
 // the kernel-style index arithmetic and many-operand math signatures used
 // throughout the linalg core, so they are opted out crate-wide.

@@ -89,9 +89,14 @@ impl MicroKernel {
     pub fn is_available(&self) -> bool {
         match self {
             MicroKernel::Scalar => true,
-            MicroKernel::Avx2 => avx2_available(),
+            // Miri interprets MIR and has no shims for vendor SIMD
+            // intrinsics; declaring the SIMD kernels unavailable under it
+            // routes every selection path (detect/forced/env) onto the
+            // scalar kernel, which is the path the nightly miri CI job
+            // exercises.
+            MicroKernel::Avx2 => !cfg!(miri) && avx2_available(),
             // NEON is a baseline aarch64 feature — no runtime probe needed.
-            MicroKernel::Neon => cfg!(target_arch = "aarch64"),
+            MicroKernel::Neon => !cfg!(miri) && cfg!(target_arch = "aarch64"),
         }
     }
 
@@ -189,20 +194,27 @@ unsafe fn micro_tile_avx2(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
         _mm256_storeu_pd,
     };
     assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
-    let zero = _mm256_setzero_pd();
-    let mut acc: [__m256d; MR] = [zero; MR];
-    for t in 0..kb {
-        let bv = _mm256_loadu_pd(bp.as_ptr().add(t * NR));
-        let at = ap.as_ptr().add(t * MR);
-        for (r, accr) in acc.iter_mut().enumerate() {
-            *accr = _mm256_fmadd_pd(_mm256_set1_pd(*at.add(r)), bv, *accr);
+    // SAFETY: the ISA obligation is the caller's (function-level contract
+    // above). Every pointer offset is in bounds: `t < kb`, so reads stay
+    // below `kb·MR` / `kb·NR` — covered by the entry assertion — and the
+    // stores cover exactly the `MR·NR` array; loads/stores are the
+    // unaligned variants.
+    unsafe {
+        let zero = _mm256_setzero_pd();
+        let mut acc: [__m256d; MR] = [zero; MR];
+        for t in 0..kb {
+            let bv = _mm256_loadu_pd(bp.as_ptr().add(t * NR));
+            let at = ap.as_ptr().add(t * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                *accr = _mm256_fmadd_pd(_mm256_set1_pd(*at.add(r)), bv, *accr);
+            }
         }
+        let mut out = [0.0f64; MR * NR];
+        for (r, accr) in acc.iter().enumerate() {
+            _mm256_storeu_pd(out.as_mut_ptr().add(r * NR), *accr);
+        }
+        out
     }
-    let mut out = [0.0f64; MR * NR];
-    for (r, accr) in acc.iter().enumerate() {
-        _mm256_storeu_pd(out.as_mut_ptr().add(r * NR), *accr);
-    }
-    out
 }
 
 /// NEON 8×4 microkernel: the tile's r-th row is a `float64x2_t` pair
@@ -220,25 +232,31 @@ unsafe fn micro_tile_avx2(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
 unsafe fn micro_tile_neon(kb: usize, ap: &[f64], bp: &[f64]) -> [f64; MR * NR] {
     use core::arch::aarch64::{vdupq_n_f64, vfmaq_n_f64, vld1q_f64, vst1q_f64};
     assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
-    let zero = vdupq_n_f64(0.0);
-    let mut lo = [zero; MR];
-    let mut hi = [zero; MR];
-    for t in 0..kb {
-        let b0 = vld1q_f64(bp.as_ptr().add(t * NR));
-        let b1 = vld1q_f64(bp.as_ptr().add(t * NR + 2));
-        let at = ap.as_ptr().add(t * MR);
-        for r in 0..MR {
-            let ar = *at.add(r);
-            lo[r] = vfmaq_n_f64(lo[r], b0, ar);
-            hi[r] = vfmaq_n_f64(hi[r], b1, ar);
+    // SAFETY: NEON is baseline on aarch64 (function-level contract). Every
+    // offset is in bounds per the entry assertion (`t < kb`; NR = 4, so
+    // `t·NR + 2 + 2 ≤ kb·NR`), and the stores tile the `MR·NR` array in
+    // disjoint 2-lane pairs.
+    unsafe {
+        let zero = vdupq_n_f64(0.0);
+        let mut lo = [zero; MR];
+        let mut hi = [zero; MR];
+        for t in 0..kb {
+            let b0 = vld1q_f64(bp.as_ptr().add(t * NR));
+            let b1 = vld1q_f64(bp.as_ptr().add(t * NR + 2));
+            let at = ap.as_ptr().add(t * MR);
+            for r in 0..MR {
+                let ar = *at.add(r);
+                lo[r] = vfmaq_n_f64(lo[r], b0, ar);
+                hi[r] = vfmaq_n_f64(hi[r], b1, ar);
+            }
         }
+        let mut out = [0.0f64; MR * NR];
+        for r in 0..MR {
+            vst1q_f64(out.as_mut_ptr().add(r * NR), lo[r]);
+            vst1q_f64(out.as_mut_ptr().add(r * NR + 2), hi[r]);
+        }
+        out
     }
-    let mut out = [0.0f64; MR * NR];
-    for r in 0..MR {
-        vst1q_f64(out.as_mut_ptr().add(r * NR), lo[r]);
-        vst1q_f64(out.as_mut_ptr().add(r * NR + 2), hi[r]);
-    }
-    out
 }
 
 // ───────────────────── f32 microkernel family ─────────────────────
@@ -319,20 +337,26 @@ unsafe fn micro_tile32_avx2(kb: usize, ap: &[f32], bp: &[f32]) -> [f32; MR32 * N
         _mm256_storeu_ps,
     };
     assert!(ap.len() >= kb * MR32 && bp.len() >= kb * NR32);
-    let zero = _mm256_setzero_ps();
-    let mut acc: [__m256; MR32] = [zero; MR32];
-    for t in 0..kb {
-        let bv = _mm256_loadu_ps(bp.as_ptr().add(t * NR32));
-        let at = ap.as_ptr().add(t * MR32);
-        for (r, accr) in acc.iter_mut().enumerate() {
-            *accr = _mm256_fmadd_ps(_mm256_set1_ps(*at.add(r)), bv, *accr);
+    // SAFETY: same shape as `micro_tile_avx2` — ISA is the caller's
+    // contract, offsets stay below `kb·MR32` / `kb·NR32` per the entry
+    // assertion, the stores cover exactly the `MR32·NR32` array, and all
+    // loads/stores are unaligned variants.
+    unsafe {
+        let zero = _mm256_setzero_ps();
+        let mut acc: [__m256; MR32] = [zero; MR32];
+        for t in 0..kb {
+            let bv = _mm256_loadu_ps(bp.as_ptr().add(t * NR32));
+            let at = ap.as_ptr().add(t * MR32);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                *accr = _mm256_fmadd_ps(_mm256_set1_ps(*at.add(r)), bv, *accr);
+            }
         }
+        let mut out = [0.0f32; MR32 * NR32];
+        for (r, accr) in acc.iter().enumerate() {
+            _mm256_storeu_ps(out.as_mut_ptr().add(r * NR32), *accr);
+        }
+        out
     }
-    let mut out = [0.0f32; MR32 * NR32];
-    for (r, accr) in acc.iter().enumerate() {
-        _mm256_storeu_ps(out.as_mut_ptr().add(r * NR32), *accr);
-    }
-    out
 }
 
 /// NEON 8×8 f32 microkernel: the tile's r-th row is a `float32x4_t` pair
@@ -349,25 +373,31 @@ unsafe fn micro_tile32_avx2(kb: usize, ap: &[f32], bp: &[f32]) -> [f32; MR32 * N
 unsafe fn micro_tile32_neon(kb: usize, ap: &[f32], bp: &[f32]) -> [f32; MR32 * NR32] {
     use core::arch::aarch64::{vdupq_n_f32, vfmaq_n_f32, vld1q_f32, vst1q_f32};
     assert!(ap.len() >= kb * MR32 && bp.len() >= kb * NR32);
-    let zero = vdupq_n_f32(0.0);
-    let mut lo = [zero; MR32];
-    let mut hi = [zero; MR32];
-    for t in 0..kb {
-        let b0 = vld1q_f32(bp.as_ptr().add(t * NR32));
-        let b1 = vld1q_f32(bp.as_ptr().add(t * NR32 + 4));
-        let at = ap.as_ptr().add(t * MR32);
-        for r in 0..MR32 {
-            let ar = *at.add(r);
-            lo[r] = vfmaq_n_f32(lo[r], b0, ar);
-            hi[r] = vfmaq_n_f32(hi[r], b1, ar);
+    // SAFETY: same shape as `micro_tile_neon` — NEON is baseline on
+    // aarch64; offsets are in bounds per the entry assertion (`t < kb`;
+    // NR32 = 8, so `t·NR32 + 4 + 4 ≤ kb·NR32`), and the stores tile the
+    // `MR32·NR32` array in disjoint 4-lane pairs.
+    unsafe {
+        let zero = vdupq_n_f32(0.0);
+        let mut lo = [zero; MR32];
+        let mut hi = [zero; MR32];
+        for t in 0..kb {
+            let b0 = vld1q_f32(bp.as_ptr().add(t * NR32));
+            let b1 = vld1q_f32(bp.as_ptr().add(t * NR32 + 4));
+            let at = ap.as_ptr().add(t * MR32);
+            for r in 0..MR32 {
+                let ar = *at.add(r);
+                lo[r] = vfmaq_n_f32(lo[r], b0, ar);
+                hi[r] = vfmaq_n_f32(hi[r], b1, ar);
+            }
         }
+        let mut out = [0.0f32; MR32 * NR32];
+        for r in 0..MR32 {
+            vst1q_f32(out.as_mut_ptr().add(r * NR32), lo[r]);
+            vst1q_f32(out.as_mut_ptr().add(r * NR32 + 4), hi[r]);
+        }
+        out
     }
-    let mut out = [0.0f32; MR32 * NR32];
-    for r in 0..MR32 {
-        vst1q_f32(out.as_mut_ptr().add(r * NR32), lo[r]);
-        vst1q_f32(out.as_mut_ptr().add(r * NR32 + 4), hi[r]);
-    }
-    out
 }
 
 // ───────────────── reference / ablation kernels ──────────────────

@@ -112,11 +112,14 @@ pub(crate) use kernel::{MR, NR};
 use kernel::{MR32, NR32};
 
 use super::{Mat, Mat32};
+// `Mutex` comes from the shim (not `std::sync`) so the `--cfg loom` build —
+// which swaps the shim's `Mutex` for the model checker's — still compiles
+// this module; `lock_or_recover` is typed against the shim's mutex.
+use crate::runtime::sync::{Arc, Mutex, OnceLock};
 use crate::threads::ThreadPool;
-use crate::util::{Error, Result};
+use crate::util::{lock_or_recover, Error, Result};
 use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
 
 /// Process-wide GEMM counters (cheap relaxed atomics) plus thread-local
 /// shadows for race-free per-run accounting.
@@ -891,14 +894,14 @@ static GLOBAL_ENGINE: Mutex<Option<GemmEngine>> = Mutex::new(None);
 /// Snapshot of the process-global engine. Engines grab this once per run and
 /// reuse it, so the mutex is off the per-GEMM path.
 pub fn global_engine() -> GemmEngine {
-    GLOBAL_ENGINE.lock().unwrap().clone().unwrap_or_default()
+    lock_or_recover(&GLOBAL_ENGINE).clone().unwrap_or_default()
 }
 
 /// Install a process-global GEMM pool of `threads` workers (1 tears the pool
 /// down). Safe to call at any time: results are bit-identical for every
 /// thread count, so in-flight callers at the old size stay consistent.
 pub fn set_global_threads(threads: usize) {
-    let mut g = GLOBAL_ENGINE.lock().unwrap();
+    let mut g = lock_or_recover(&GLOBAL_ENGINE);
     let current = g.as_ref().map(|e| e.threads()).unwrap_or(1);
     if current != threads.max(1) {
         *g = Some(GemmEngine::with_threads(threads));
@@ -907,7 +910,7 @@ pub fn set_global_threads(threads: usize) {
 
 /// Current global GEMM thread count.
 pub fn global_threads() -> usize {
-    GLOBAL_ENGINE.lock().unwrap().as_ref().map(|e| e.threads()).unwrap_or(1)
+    lock_or_recover(&GLOBAL_ENGINE).as_ref().map(|e| e.threads()).unwrap_or(1)
 }
 
 // ─────────────── free-function API (global engine) ───────────────

@@ -9,6 +9,10 @@
 //! anywhere — results are **bit-identical for every pool size** at a fixed
 //! ([`GemmBlocking`], [`MicroKernel`]) pair. Zero-padding keeps edge tiles
 //! on the same code path.
+// The tag below marks this file hot-path for `cargo xtask lint` (rule R3):
+// no allocating constructors or allocating matmuls may appear in it — panels
+// come from the engine's `Workspace` pool, never fresh `Vec`s.
+#![doc = "hot-path"]
 
 use super::kernel::{micro_tile, micro_tile32, MicroKernel, MR, MR32, NR, NR32};
 use super::pack::{pack_a, pack_a32, pack_b, pack_b32};

@@ -30,6 +30,10 @@
 //! the partition cannot change any output bit. The inner loops are
 //! dependence-free over the packed lane dimension, which LLVM
 //! auto-vectorises (the [`super::MicroKernel`] choice does not apply here).
+// The tag below marks this file hot-path for `cargo xtask lint` (rule R3):
+// no allocating constructors or allocating matmuls may appear in it — the
+// single small-operand panel comes from the engine's `Workspace` pool.
+#![doc = "hot-path"]
 
 use super::kernel::{MR, MR32, NR, NR32};
 use super::pack::{pack_a, pack_a32, pack_b, pack_b32};

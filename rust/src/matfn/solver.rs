@@ -671,15 +671,16 @@ mod tests {
         .unwrap();
         // Observer events must stay continuous across the two internal
         // phases: iteration indices 0..5, no restart at the fitted phase.
-        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
-        let sink = std::sync::Arc::clone(&seen);
+        let seen =
+            crate::runtime::sync::Arc::new(crate::runtime::sync::Mutex::new(Vec::new()));
+        let sink = crate::runtime::sync::Arc::clone(&seen);
         s.set_observer(Some(Box::new(move |ev| {
-            sink.lock().unwrap().push((ev.iter, ev.elapsed_s));
+            crate::util::lock_or_recover(&sink).push((ev.iter, ev.elapsed_s));
         })));
         let out = s.solve(&a, &mut rng);
         s.set_observer(None);
         {
-            let seen = seen.lock().unwrap();
+            let seen = crate::util::lock_or_recover(&seen);
             let iters: Vec<usize> = seen.iter().map(|&(k, _)| k).collect();
             assert_eq!(iters, vec![0, 1, 2, 3, 4], "chained phases must not restart");
             for w in seen.windows(2) {

@@ -2,9 +2,10 @@
 //! registry. The coordinator reports queue depths, batch sizes and per-stage
 //! latencies through this module; benches print the same tables.
 
+use crate::runtime::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use crate::runtime::sync::{Arc, Mutex, OnceLock};
+use crate::util::lock_or_recover;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
 
 /// Monotone counter.
 #[derive(Default)]
@@ -135,25 +136,19 @@ pub fn global() -> &'static Registry {
 
 impl Registry {
     pub fn counter(&self, name: &str) -> Arc<Counter> {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.counters)
             .entry(name.to_string())
             .or_insert_with(|| Arc::new(Counter::default()))
             .clone()
     }
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
-        self.gauges
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.gauges)
             .entry(name.to_string())
             .or_insert_with(|| Arc::new(Gauge::default()))
             .clone()
     }
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
-        self.histos
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.histos)
             .entry(name.to_string())
             .or_insert_with(|| Arc::new(Histogram::new()))
             .clone()
@@ -162,13 +157,13 @@ impl Registry {
     /// Render a plain-text report of everything registered.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        for (k, c) in self.counters.lock().unwrap().iter() {
+        for (k, c) in lock_or_recover(&self.counters).iter() {
             out.push_str(&format!("counter {k} = {}\n", c.get()));
         }
-        for (k, g) in self.gauges.lock().unwrap().iter() {
+        for (k, g) in lock_or_recover(&self.gauges).iter() {
             out.push_str(&format!("gauge   {k} = {}\n", g.get()));
         }
-        for (k, h) in self.histos.lock().unwrap().iter() {
+        for (k, h) in lock_or_recover(&self.histos).iter() {
             out.push_str(&format!(
                 "histo   {k}: n={} mean={:.3e} p50={:.3e} p90={:.3e} p99={:.3e}\n",
                 h.count(),

@@ -22,10 +22,10 @@
 //! specific service), so concurrent tests that install plans must
 //! serialize; `rust/tests/tier_chaos.rs` holds a suite-wide lock for this.
 
+use crate::runtime::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::runtime::sync::Mutex;
 use crate::util::{lock_or_recover, Error, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
 
 /// One scripted failure.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -18,6 +18,7 @@
 
 pub mod faultinject;
 pub mod manifest;
+pub mod sync;
 
 use crate::linalg::Mat;
 use crate::util::Result;
@@ -27,10 +28,10 @@ pub use manifest::{ArtifactEntry, Manifest};
 #[cfg(feature = "pjrt")]
 mod pjrt {
     use super::{ArtifactEntry, Manifest};
-    use crate::util::{Error, Result};
+    use crate::runtime::sync::Mutex;
+    use crate::util::{lock_or_recover, Error, Result};
     use std::collections::HashMap;
     use std::path::{Path, PathBuf};
-    use std::sync::Mutex;
 
     /// A loaded, compiled artifact plus its metadata.
     pub struct Executable {
@@ -71,9 +72,9 @@ mod pjrt {
         /// Load (or fetch cached) an executable by manifest name.
         pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
             {
-                let cache = self.cache.lock().unwrap();
+                let cache = lock_or_recover(&self.cache);
                 if let Some(&idx) = cache.get(name) {
-                    return Ok(self.loaded.lock().unwrap()[idx].clone());
+                    return Ok(lock_or_recover(&self.loaded)[idx].clone());
                 }
             }
             let entry = self
@@ -94,9 +95,9 @@ mod pjrt {
                 .compile(&comp)
                 .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
             let arc = std::sync::Arc::new(Executable { name: name.to_string(), exe, entry });
-            let mut loaded = self.loaded.lock().unwrap();
+            let mut loaded = lock_or_recover(&self.loaded);
             loaded.push(arc.clone());
-            self.cache.lock().unwrap().insert(name.to_string(), loaded.len() - 1);
+            lock_or_recover(&self.cache).insert(name.to_string(), loaded.len() - 1);
             Ok(arc)
         }
     }

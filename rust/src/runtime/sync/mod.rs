@@ -1,0 +1,51 @@
+//! The crate's one gateway to `std::sync` for concurrency-reviewed modules.
+//!
+//! Every module that participates in the coordinator's determinism contract
+//! (`coordinator/{service,gate,schedule,supervise}.rs`, `threads.rs`,
+//! `metrics.rs`, `runtime/faultinject.rs`) imports its sync primitives from
+//! here instead of `std::sync` — enforced by `cargo xtask lint` rule R4.
+//!
+//! * **Normal builds** (`cfg(not(loom))`): pure re-exports of `std::sync`.
+//!   Zero cost, zero behavior change — the shim compiles away entirely.
+//! * **Model-checking builds** (`RUSTFLAGS="--cfg loom"`): the same names
+//!   resolve to the [`model`] module's scheduler-aware types, so the state
+//!   machines behind the service's races (admission, linger cuts,
+//!   cancel-vs-dispatch, panic-respawn) can be explored exhaustively by
+//!   `rust/tests/loom_coordinator.rs`.
+//!
+//! The `cfg` name is `loom` after the crate that popularized the technique,
+//! but the model checker itself is in-tree ([`model`]): this repository
+//! builds fully offline with an empty `[dependencies]` table, so vendoring
+//! the real `loom` (or `syn`, for the linter) is not an option. The in-tree
+//! checker is a bounded-preemption DFS over sequentially-consistent
+//! interleavings — see the [`model`] docs for exactly what it does and does
+//! not cover.
+//!
+//! Discipline for new code (also in `CONTRIBUTING.md`):
+//!
+//! * Import `Mutex`/`Condvar`/atomics from `crate::runtime::sync`, never
+//!   from `std::sync`, in any module listed above (or any module you add to
+//!   the R4 list).
+//! * Lock through [`crate::util::lock_or_recover`] rather than
+//!   `.lock().unwrap()` (lint rule R1) so a panicking holder cannot cascade
+//!   poison panics through the service.
+//! * `mpsc`, `Arc` and `OnceLock` pass through to `std` in both builds: the
+//!   model checker does not interpose on them, so loom scenarios model
+//!   channels as `Mutex`-guarded queues instead.
+
+#[cfg(any(loom, test))]
+pub mod model;
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{
+    mpsc, Arc, Condvar, LockResult, Mutex, MutexGuard, OnceLock, PoisonError, WaitTimeoutResult,
+};
+
+#[cfg(loom)]
+pub use model::atomic;
+#[cfg(loom)]
+pub use model::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(loom)]
+pub use std::sync::{mpsc, Arc, LockResult, OnceLock, PoisonError};

@@ -1,0 +1,1097 @@
+//! In-tree bounded model checker behind the `cfg(loom)` face of
+//! [`crate::runtime::sync`].
+//!
+//! [`model`] (and [`Builder::check`]) runs a closure — the *scenario* — many
+//! times, exploring a different thread interleaving on each run, and panics
+//! on the first schedule under which the scenario panics (a failed assert, a
+//! poisoned invariant) or deadlocks. Scenarios spawn threads with
+//! [`thread::spawn`] and synchronize through this module's [`Mutex`],
+//! [`Condvar`] and [`atomic`] types; those are the *only* interleaving
+//! points — code between two sync operations executes atomically, which is
+//! the standard reduction for data-race-free programs.
+//!
+//! How it works: scenario threads are real OS threads, but a turn-taking
+//! scheduler serializes them so exactly one is ever runnable. Every sync
+//! operation is a *choice point*: the running thread records which threads
+//! could run next and picks one; the driver then backtracks depth-first
+//! over those recorded choices (increment the last choice with an untried
+//! alternative, truncate, replay) until the space is exhausted. Replay is
+//! what makes this sound: a scenario must therefore be deterministic apart
+//! from scheduling — no wall-clock branching, no OS randomness.
+//!
+//! What is modeled, and what is not:
+//!
+//! * Interleavings are **sequentially consistent**. Relaxed-memory
+//!   reorderings are out of scope — the coordinator's contracts all use
+//!   `SeqCst` on the counters this matters for.
+//! * The search is **preemption-bounded** (default 3): schedules with more
+//!   than N involuntary context switches are not explored. Almost all real
+//!   concurrency bugs manifest within 2 preemptions (CHESS's observation),
+//!   and the bound is configurable via [`Builder`].
+//! * [`Condvar::wait_timeout`] is modeled as an *untimed* wait. The 5 ms
+//!   production backstop exists to mask rare missed wakeups operationally;
+//!   modeling it as always-firable would both mask lost-wakeup bugs (the
+//!   model's whole point: a lost wakeup must surface as a modeled deadlock)
+//!   and make every park loop an unbounded schedule space.
+//! * `mpsc`, `Arc`, and `OnceLock` are not interposed on (see
+//!   [`crate::runtime::sync`]); scenarios model channels as `Mutex`-guarded
+//!   queues.
+//!
+//! Outside a model run (no active execution on this thread) every type
+//! here degrades to plain `std::sync` behavior, so lib code compiled with
+//! `--cfg loom` still works when called from ordinary tests.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, LockResult, PoisonError, TryLockError};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Execution state: one scheduler shared by every thread of one model run.
+// ---------------------------------------------------------------------------
+
+/// Status of one scenario thread, as the scheduler sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    /// Can be scheduled.
+    Ready,
+    /// Parked in `Mutex::lock` on the mutex at this address.
+    BlockedMutex(usize),
+    /// Parked in `Condvar::wait` (or modeled `wait_timeout`) on the condvar
+    /// at this address.
+    BlockedCond(usize),
+    /// Parked in `JoinHandle::join` on this thread id.
+    BlockedJoin(usize),
+    /// Closure returned (or unwound); never scheduled again.
+    Finished,
+}
+
+/// One recorded scheduling decision: which threads were runnable, which ran.
+#[derive(Debug, Clone)]
+struct Choice {
+    /// Runnable thread ids at this point, current-thread-first.
+    alts: Vec<usize>,
+    /// Index into `alts` actually taken on this run.
+    chosen: usize,
+}
+
+struct ExecState {
+    status: Vec<Status>,
+    /// Thread id whose turn it is.
+    current: usize,
+    /// The schedule being replayed, then extended, on this run.
+    schedule: Vec<Choice>,
+    /// Next position in `schedule` to replay; past the end means "record".
+    cursor: usize,
+    preemptions: usize,
+    preemption_bound: usize,
+    /// First real failure (assert/deadlock/divergence) observed this run.
+    failure: Option<String>,
+    /// Set on failure: parked threads must unwind instead of waiting.
+    abort: bool,
+    /// All threads finished.
+    done: bool,
+}
+
+struct Execution {
+    m: std::sync::Mutex<ExecState>,
+    cv: std::sync::Condvar,
+}
+
+/// Sentinel payload used to unwind parked threads after a failure. Raised
+/// via `resume_unwind`, so it never reaches the panic hook.
+struct ModelAbort;
+
+/// Panic payload for scenarios that *intend* to panic (e.g. the
+/// panic-respawn race): the quiet hook suppresses the per-run "thread
+/// panicked" stderr spam a deliberately-panicking scenario would otherwise
+/// produce on every explored schedule.
+pub struct Quiet(pub &'static str);
+
+fn install_quiet_hook() {
+    use std::sync::Once;
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if info.payload().is::<Quiet>() {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+thread_local! {
+    /// The execution this OS thread belongs to, plus its thread id.
+    static CURRENT: std::cell::RefCell<Option<(Arc<Execution>, usize)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn current_execution() -> Option<(Arc<Execution>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+impl Execution {
+    fn new(schedule: Vec<Choice>, preemption_bound: usize) -> Execution {
+        Execution {
+            m: std::sync::Mutex::new(ExecState {
+                status: Vec::new(),
+                current: 0,
+                schedule,
+                cursor: 0,
+                preemptions: 0,
+                preemption_bound,
+                failure: None,
+                abort: false,
+                done: false,
+            }),
+            cv: std::sync::Condvar::new(),
+        }
+    }
+
+    fn state(&self) -> std::sync::MutexGuard<'_, ExecState> {
+        // The scheduler mutex is only poisoned if the checker itself has a
+        // bug; recover so every parked thread still sees `abort` and exits.
+        self.m.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Record a failure (first one wins), wake everyone, and mark abort.
+    fn fail(&self, msg: String) -> ! {
+        {
+            let mut st = self.state();
+            if st.failure.is_none() {
+                let trace = format_schedule(&st.schedule);
+                st.failure = Some(format!("{msg}\n  schedule: {trace}"));
+            }
+            st.abort = true;
+        }
+        self.cv.notify_all();
+        panic::resume_unwind(Box::new(ModelAbort));
+    }
+
+    /// Core scheduling step. `me` sets its own status, a successor is chosen
+    /// (replayed or recorded), and the call returns once it is `me`'s turn
+    /// again. A thread that marks itself `Finished` returns immediately
+    /// after handing off.
+    fn yield_turn(self: &Arc<Self>, me: usize, my_status: Status) {
+        let mut st = self.state();
+        if st.abort {
+            drop(st);
+            panic::resume_unwind(Box::new(ModelAbort));
+        }
+        st.status[me] = my_status;
+
+        // Runnable set, current-thread-first so `chosen == 0` always means
+        // "keep running the same thread" (no preemption).
+        let mut alts: Vec<usize> = Vec::new();
+        if st.status[me] == Status::Ready {
+            alts.push(me);
+        }
+        for (tid, s) in st.status.iter().enumerate() {
+            if tid != me && *s == Status::Ready {
+                alts.push(tid);
+            }
+        }
+
+        if alts.is_empty() {
+            if st.status.iter().all(|s| *s == Status::Finished) {
+                st.done = true;
+                drop(st);
+                self.cv.notify_all();
+                return;
+            }
+            let dump = st
+                .status
+                .iter()
+                .enumerate()
+                .map(|(t, s)| format!("t{t}:{s:?}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            drop(st);
+            self.fail(format!("model deadlock: no runnable thread ({dump})"));
+        }
+
+        // Preemption bound: once spent, a runnable current thread may not be
+        // switched away from, so the choice collapses to it. The same
+        // constraint must be recomputed on replay (the preemption counter
+        // evolves identically along a replayed prefix) or replay validation
+        // would diverge from what was recorded.
+        let constrained = if st.status[me] == Status::Ready
+            && st.preemptions >= st.preemption_bound
+        {
+            vec![me]
+        } else {
+            alts
+        };
+
+        let next = if st.cursor < st.schedule.len() {
+            let c = &st.schedule[st.cursor];
+            if c.alts != constrained {
+                let (want, got) = (c.alts.clone(), constrained.clone());
+                drop(st);
+                self.fail(format!(
+                    "nondeterministic scenario: replay expected runnable set \
+                     {want:?} but found {got:?} (scenarios must not branch on \
+                     wall-clock time or other non-modeled state)"
+                ));
+            }
+            let next = c.alts[c.chosen];
+            st.cursor += 1;
+            next
+        } else {
+            let next = constrained[0];
+            st.schedule.push(Choice { alts: constrained, chosen: 0 });
+            st.cursor = st.schedule.len();
+            next
+        };
+
+        if next != me && st.status[me] == Status::Ready {
+            st.preemptions += 1;
+        }
+        st.current = next;
+        drop(st);
+        self.cv.notify_all();
+
+        if my_status == Status::Finished {
+            return;
+        }
+
+        // Wait for our turn. Another thread's action (unlock, notify,
+        // finish) may flip our status back to Ready and schedule us.
+        let mut st = self.state();
+        loop {
+            if st.abort {
+                drop(st);
+                panic::resume_unwind(Box::new(ModelAbort));
+            }
+            if st.current == me && st.status[me] == Status::Ready {
+                return;
+            }
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// A plain interleaving point: anyone runnable may go next.
+    fn yield_now(self: &Arc<Self>, me: usize) {
+        self.yield_turn(me, Status::Ready);
+    }
+
+    /// Mark threads blocked on the mutex at `addr` runnable again.
+    fn wake_mutex_waiters(&self, addr: usize) {
+        let mut st = self.state();
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedMutex(addr) {
+                *s = Status::Ready;
+            }
+        }
+    }
+
+    /// Wake condvar waiters: all of them, or just the first.
+    fn wake_cond_waiters(&self, addr: usize, all: bool) {
+        let mut st = self.state();
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedCond(addr) {
+                *s = Status::Ready;
+                if !all {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Register a new scenario thread; returns its tid.
+    fn register(&self) -> usize {
+        let mut st = self.state();
+        st.status.push(Status::Ready);
+        st.status.len() - 1
+    }
+
+    fn finish(self: &Arc<Self>, me: usize) {
+        // Wake joiners first, then hand the turn off.
+        {
+            let mut st = self.state();
+            for s in st.status.iter_mut() {
+                if *s == Status::BlockedJoin(me) {
+                    *s = Status::Ready;
+                }
+            }
+        }
+        self.yield_turn(me, Status::Finished);
+    }
+}
+
+fn format_schedule(schedule: &[Choice]) -> String {
+    let picks: Vec<String> = schedule
+        .iter()
+        .map(|c| format!("t{}", c.alts[c.chosen]))
+        .collect();
+    format!("[{}] ({} choice points)", picks.join(" "), schedule.len())
+}
+
+// ---------------------------------------------------------------------------
+// Driver: DFS over schedules.
+// ---------------------------------------------------------------------------
+
+/// Configures and runs an exhaustive (bounded) interleaving search.
+pub struct Builder {
+    /// Max involuntary context switches per schedule (default 3).
+    pub preemption_bound: usize,
+    /// Hard cap on explored schedules; exceeding it is a loud failure, not a
+    /// silent truncation (default 200 000).
+    pub max_schedules: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Builder {
+        Builder { preemption_bound: 3, max_schedules: 200_000 }
+    }
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        Builder::default()
+    }
+
+    /// Run `f` under every schedule within the bound. Panics — on the test
+    /// thread, with the offending schedule — if any run fails or deadlocks.
+    pub fn check<F>(&self, f: F)
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        install_quiet_hook();
+        let f = Arc::new(f);
+        let mut schedule: Vec<Choice> = Vec::new();
+        let mut runs = 0usize;
+        loop {
+            runs += 1;
+            if runs > self.max_schedules {
+                panic!(
+                    "model exceeded max_schedules ({}): the scenario's state \
+                     space is too large — shrink it or raise the cap via \
+                     Builder (refusing to silently truncate the search)",
+                    self.max_schedules
+                );
+            }
+            let exec = Arc::new(Execution::new(schedule, self.preemption_bound));
+            let root_tid = exec.register();
+            debug_assert_eq!(root_tid, 0);
+            let root = {
+                let exec = Arc::clone(&exec);
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&exec), 0)));
+                    let r = panic::catch_unwind(AssertUnwindSafe(|| (*f)()));
+                    if let Err(e) = r {
+                        if !e.is::<ModelAbort>() {
+                            let msg = panic_message(&e);
+                            let mut st = exec.state();
+                            if st.failure.is_none() {
+                                let trace = format_schedule(&st.schedule);
+                                st.failure = Some(format!(
+                                    "scenario panicked on t0: {msg}\n  schedule: {trace}"
+                                ));
+                            }
+                            st.abort = true;
+                            drop(st);
+                            exec.cv.notify_all();
+                        }
+                    }
+                    exec.finish(0);
+                })
+            };
+
+            // Wait for the run to finish or fail.
+            {
+                let mut st = exec.state();
+                while !st.done && st.failure.is_none() {
+                    st = exec.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+            let _ = root.join();
+
+            let (failure, mut sched) = {
+                let mut st = exec.state();
+                (st.failure.take(), std::mem::take(&mut st.schedule))
+            };
+            if let Some(msg) = failure {
+                panic!("model check failed after {runs} schedule(s):\n  {msg}");
+            }
+
+            // Depth-first advance: bump the deepest choice with an untried
+            // alternative; drop everything after it.
+            loop {
+                match sched.last_mut() {
+                    None => return, // space exhausted, all runs passed
+                    Some(c) if c.chosen + 1 < c.alts.len() => {
+                        c.chosen += 1;
+                        break;
+                    }
+                    Some(_) => {
+                        sched.pop();
+                    }
+                }
+            }
+            schedule = sched;
+        }
+    }
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(q) = e.downcast_ref::<Quiet>() {
+        format!("Quiet({})", q.0)
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Model-check `f` with default bounds. The `cfg(loom)` equivalent of
+/// `loom::model`.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::new().check(f)
+}
+
+// ---------------------------------------------------------------------------
+// Modeled thread spawn/join.
+// ---------------------------------------------------------------------------
+
+pub mod thread {
+    use super::*;
+
+    pub struct JoinHandle<T> {
+        tid: Option<usize>,
+        os: std::thread::JoinHandle<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some((exec, me)) = current_execution() {
+                let target = self.tid.expect("model JoinHandle always has a tid");
+                loop {
+                    let st = exec.state();
+                    if st.abort {
+                        drop(st);
+                        panic::resume_unwind(Box::new(ModelAbort));
+                    }
+                    let finished = st.status[target] == Status::Finished;
+                    drop(st);
+                    if finished {
+                        break;
+                    }
+                    exec.yield_turn(me, Status::BlockedJoin(target));
+                }
+                // The target has executed `finish`; its OS thread is exiting
+                // (or already gone), so this join is a bounded real wait, not
+                // a modeled one.
+                self.os.join()
+            } else {
+                self.os.join()
+            }
+        }
+    }
+
+    /// Spawn a scenario thread. Inside a model run the child participates in
+    /// the turn-taking scheduler; outside one this is `std::thread::spawn`.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        if let Some((exec, me)) = current_execution() {
+            let tid = exec.register();
+            let child_exec = Arc::clone(&exec);
+            let os = std::thread::spawn(move || {
+                CURRENT.with(|c| {
+                    *c.borrow_mut() = Some((Arc::clone(&child_exec), tid))
+                });
+                // Wait to be scheduled for the first time.
+                {
+                    let mut st = child_exec.state();
+                    loop {
+                        if st.abort {
+                            drop(st);
+                            panic::resume_unwind(Box::new(ModelAbort));
+                        }
+                        if st.current == tid && st.status[tid] == Status::Ready {
+                            break;
+                        }
+                        st = child_exec
+                            .cv
+                            .wait(st)
+                            .unwrap_or_else(PoisonError::into_inner);
+                    }
+                }
+                let r = panic::catch_unwind(AssertUnwindSafe(f));
+                match r {
+                    Ok(v) => {
+                        child_exec.finish(tid);
+                        v
+                    }
+                    Err(e) => {
+                        if !e.is::<ModelAbort>() {
+                            let msg = panic_message(&e);
+                            let mut st = child_exec.state();
+                            if st.failure.is_none() {
+                                let trace = format_schedule(&st.schedule);
+                                st.failure = Some(format!(
+                                    "scenario panicked on t{tid}: {msg}\n  schedule: {trace}"
+                                ));
+                            }
+                            st.abort = true;
+                            drop(st);
+                            child_exec.cv.notify_all();
+                            child_exec.finish(tid);
+                        }
+                        panic::resume_unwind(e);
+                    }
+                }
+            });
+            // Spawning is itself a visible event: give the scheduler the
+            // option of running the child right away.
+            exec.yield_now(me);
+            JoinHandle { tid: Some(tid), os }
+        } else {
+            JoinHandle { tid: None, os: std::thread::spawn(f) }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex / Condvar.
+// ---------------------------------------------------------------------------
+
+/// Scheduler-aware mutex. `const`-constructible (statics in `faultinject`
+/// and `gemm` depend on it); all scheduler bookkeeping is keyed by the inner
+/// mutex's address, so the type adds no fields over `std`.
+pub struct Mutex<T: ?Sized> {
+    inner: std::sync::Mutex<T>,
+}
+
+pub struct MutexGuard<'a, T: ?Sized + 'a> {
+    lock: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Mutex<T> {
+        Mutex { inner: std::sync::Mutex::new(t) }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as *const () as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some((exec, me)) = current_execution() {
+            loop {
+                // Acquiring is a choice point *before* the attempt, so a
+                // competitor can slip in between any two of our sync ops.
+                exec.yield_now(me);
+                match self.inner.try_lock() {
+                    Ok(g) => {
+                        return Ok(MutexGuard { lock: self, inner: Some(g) })
+                    }
+                    Err(TryLockError::Poisoned(p)) => {
+                        return Err(PoisonError::new(MutexGuard {
+                            lock: self,
+                            inner: Some(p.into_inner()),
+                        }))
+                    }
+                    Err(TryLockError::WouldBlock) => {
+                        // Serialized execution means the holder cannot be
+                        // mid-release: park until its guard drop wakes us.
+                        exec.yield_turn(me, Status::BlockedMutex(self.addr()));
+                    }
+                }
+            }
+        } else {
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g) }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                })),
+            }
+        }
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard accessed after release")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard accessed after release")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        let addr = self.lock.addr();
+        // Release the real lock first (possibly poisoning it if we are
+        // unwinding), then tell the scheduler; waiters only retry when
+        // scheduled, so the order cannot race.
+        self.inner = None;
+        if let Some((exec, me)) = current_execution() {
+            exec.wake_mutex_waiters(addr);
+            if !std::thread::panicking() {
+                exec.yield_now(me);
+            }
+        }
+    }
+}
+
+/// Result of a modeled [`Condvar::wait_timeout`]. `timed_out` is always
+/// `false` under the model (see the module docs: the production timeout is
+/// a backstop deliberately excluded so lost wakeups surface as deadlocks).
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Scheduler-aware condvar; `const`-constructible like [`Mutex`].
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Condvar {
+        Condvar { inner: std::sync::Condvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as usize
+    }
+
+    fn wait_model<'a, T: ?Sized>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        exec: &Arc<Execution>,
+        me: usize,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        // Atomically (w.r.t. the model: no yield in between) release the
+        // mutex and park on the condvar — the no-lost-wakeup guarantee a
+        // real condvar provides. Guard teardown is done by hand so its Drop
+        // yield does not open a wakeup window.
+        guard.inner = None;
+        exec.wake_mutex_waiters(lock.addr());
+        std::mem::forget(guard);
+        exec.yield_turn(me, Status::BlockedCond(self.addr()));
+        // Notified (we only run again once a notify flipped us to Ready).
+        lock.lock()
+    }
+
+    pub fn wait<'a, T: ?Sized>(
+        &self,
+        guard: MutexGuard<'a, T>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        if let Some((exec, me)) = current_execution() {
+            self.wait_model(guard, &exec, me)
+        } else {
+            let lock = guard.lock;
+            let mut guard = guard;
+            let std_guard = guard.inner.take().expect("guard accessed after release");
+            std::mem::forget(guard);
+            match self.inner.wait(std_guard) {
+                Ok(g) => Ok(MutexGuard { lock, inner: Some(g) }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock,
+                    inner: Some(p.into_inner()),
+                })),
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T: ?Sized>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if let Some((exec, me)) = current_execution() {
+            match self.wait_model(guard, &exec, me) {
+                Ok(g) => Ok((g, WaitTimeoutResult(false))),
+                Err(p) => Err(PoisonError::new((
+                    p.into_inner(),
+                    WaitTimeoutResult(false),
+                ))),
+            }
+        } else {
+            let lock = guard.lock;
+            let mut guard = guard;
+            let std_guard = guard.inner.take().expect("guard accessed after release");
+            std::mem::forget(guard);
+            match self.inner.wait_timeout(std_guard, dur) {
+                Ok((g, t)) => Ok((
+                    MutexGuard { lock, inner: Some(g) },
+                    WaitTimeoutResult(t.timed_out()),
+                )),
+                Err(p) => {
+                    let (g, t) = p.into_inner();
+                    Err(PoisonError::new((
+                        MutexGuard { lock, inner: Some(g) },
+                        WaitTimeoutResult(t.timed_out()),
+                    )))
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Some((exec, me)) = current_execution() {
+            exec.wake_cond_waiters(self.addr(), false);
+            exec.yield_now(me);
+        } else {
+            self.inner.notify_one();
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((exec, me)) = current_execution() {
+            exec.wake_cond_waiters(self.addr(), true);
+            exec.yield_now(me);
+        } else {
+            self.inner.notify_all();
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics: std semantics, plus a choice point before every operation.
+// ---------------------------------------------------------------------------
+
+pub mod atomic {
+    use super::current_execution;
+    pub use std::sync::atomic::Ordering;
+
+    fn interleave() {
+        if let Some((exec, me)) = current_execution() {
+            exec.yield_now(me);
+        }
+    }
+
+    macro_rules! model_atomic {
+        ($name:ident, $std:ty, $prim:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $prim) -> $name {
+                    $name { inner: <$std>::new(v) }
+                }
+                pub fn load(&self, o: Ordering) -> $prim {
+                    interleave();
+                    self.inner.load(o)
+                }
+                pub fn store(&self, v: $prim, o: Ordering) {
+                    interleave();
+                    self.inner.store(v, o)
+                }
+                pub fn swap(&self, v: $prim, o: Ordering) -> $prim {
+                    interleave();
+                    self.inner.swap(v, o)
+                }
+                pub fn compare_exchange(
+                    &self,
+                    cur: $prim,
+                    new: $prim,
+                    ok: Ordering,
+                    err: Ordering,
+                ) -> Result<$prim, $prim> {
+                    interleave();
+                    self.inner.compare_exchange(cur, new, ok, err)
+                }
+            }
+        };
+    }
+
+    macro_rules! model_atomic_int {
+        ($name:ident, $std:ty, $prim:ty) => {
+            model_atomic!($name, $std, $prim);
+
+            impl $name {
+                pub fn fetch_add(&self, v: $prim, o: Ordering) -> $prim {
+                    interleave();
+                    self.inner.fetch_add(v, o)
+                }
+                pub fn fetch_sub(&self, v: $prim, o: Ordering) -> $prim {
+                    interleave();
+                    self.inner.fetch_sub(v, o)
+                }
+                pub fn fetch_max(&self, v: $prim, o: Ordering) -> $prim {
+                    interleave();
+                    self.inner.fetch_max(v, o)
+                }
+                pub fn fetch_min(&self, v: $prim, o: Ordering) -> $prim {
+                    interleave();
+                    self.inner.fetch_min(v, o)
+                }
+            }
+        };
+    }
+
+    model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    model_atomic_int!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+    model_atomic_int!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+    model_atomic_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    model_atomic_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    model_atomic_int!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests: run under plain `cargo test` (tier-1), no `--cfg loom` needed.
+// They both pin that the checker accepts correct synchronization and that it
+// actually *finds* the bug classes the loom suite exists for.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicU64, Ordering};
+    use super::*;
+    use std::collections::VecDeque;
+
+    /// Two unsynchronized increments through load+store lose updates; the
+    /// checker must find the interleaving where one write clobbers the
+    /// other. (This is the checker's own smoke test: if it cannot find this
+    /// textbook race, every green loom scenario is meaningless.)
+    #[test]
+    fn finds_a_lost_update() {
+        let failed = panic::catch_unwind(|| {
+            model(|| {
+                let n = Arc::new(AtomicU64::new(0));
+                let mut hs = Vec::new();
+                for _ in 0..2 {
+                    let n = Arc::clone(&n);
+                    hs.push(thread::spawn(move || {
+                        let v = n.load(Ordering::SeqCst);
+                        n.store(v + 1, Ordering::SeqCst);
+                    }));
+                }
+                for h in hs {
+                    h.join().unwrap();
+                }
+                assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+            });
+        })
+        .is_err();
+        assert!(failed, "the checker must catch a load/store lost update");
+    }
+
+    /// The same counter incremented with fetch_add is race-free; the checker
+    /// must pass every interleaving.
+    #[test]
+    fn passes_atomic_increments() {
+        model(|| {
+            let n = Arc::new(AtomicU64::new(0));
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let n = Arc::clone(&n);
+                hs.push(thread::spawn(move || {
+                    n.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    /// Mutex-guarded read-modify-write never loses updates.
+    #[test]
+    fn passes_mutex_counter() {
+        model(|| {
+            let n = Arc::new(Mutex::new(0u64));
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let n = Arc::clone(&n);
+                hs.push(thread::spawn(move || {
+                    let mut g = n.lock().unwrap();
+                    *g += 1;
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+    }
+
+    /// Correct monitor discipline: the waiter re-checks the predicate under
+    /// the same mutex the condvar parks on, and the producer flips the
+    /// predicate under that mutex before notifying. No interleaving may
+    /// deadlock. This is exactly the shape the service's admission gate uses
+    /// after this PR (check + park on the pending mutex).
+    #[test]
+    fn passes_monitor_handshake() {
+        model(|| {
+            let slot: Arc<(Mutex<bool>, Condvar)> =
+                Arc::new((Mutex::new(false), Condvar::new()));
+            let waiter = {
+                let slot = Arc::clone(&slot);
+                thread::spawn(move || {
+                    let (m, cv) = &*slot;
+                    let mut ready = m.lock().unwrap();
+                    while !*ready {
+                        ready = cv.wait(ready).unwrap();
+                    }
+                })
+            };
+            let (m, cv) = &*slot;
+            {
+                let mut ready = m.lock().unwrap();
+                *ready = true;
+                cv.notify_all();
+            }
+            waiter.join().unwrap();
+        });
+    }
+
+    /// Broken discipline — predicate guarded by one mutex, condvar parked on
+    /// another, no recheck between them — has a lost-wakeup interleaving:
+    /// producer sets the flag and notifies inside the waiter's check-to-park
+    /// window. The checker must report it as a deadlock.
+    #[test]
+    fn finds_a_lost_wakeup() {
+        let failed = panic::catch_unwind(|| {
+            model(|| {
+                let flag = Arc::new(Mutex::new(false));
+                let park: Arc<(Mutex<()>, Condvar)> =
+                    Arc::new((Mutex::new(()), Condvar::new()));
+                let waiter = {
+                    let (flag, park) = (Arc::clone(&flag), Arc::clone(&park));
+                    thread::spawn(move || {
+                        let set = *flag.lock().unwrap();
+                        if !set {
+                            // Lost-wakeup window: the notify can land here.
+                            let (m, cv) = &*park;
+                            let g = m.lock().unwrap();
+                            let _g = cv.wait(g).unwrap();
+                        }
+                    })
+                };
+                *flag.lock().unwrap() = true;
+                let (_m, cv) = &*park;
+                cv.notify_all();
+                waiter.join().unwrap();
+            });
+        })
+        .is_err();
+        assert!(failed, "the checker must catch the two-lock lost wakeup");
+    }
+
+    /// A panic while holding a model mutex poisons it, and the recovered
+    /// state is the pre-panic state — the property `util::lock_or_recover`
+    /// is built on, now pinned against the *model* mutex too.
+    #[test]
+    fn poison_recovers_pre_panic_state() {
+        model(|| {
+            let log: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+            let h = {
+                let log = Arc::clone(&log);
+                thread::spawn(move || {
+                    let mut g = log.lock().unwrap();
+                    g.push(7);
+                    std::panic::panic_any(Quiet("poison the log"));
+                })
+            };
+            assert!(h.join().is_err(), "worker must have panicked");
+            let g = log
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            assert_eq!(*g, vec![7], "recovered state is the pre-panic state");
+        });
+    }
+
+    /// wait_timeout is modeled as untimed wait and reports !timed_out.
+    #[test]
+    fn wait_timeout_is_a_wait_under_the_model() {
+        model(|| {
+            let slot: Arc<(Mutex<bool>, Condvar)> =
+                Arc::new((Mutex::new(false), Condvar::new()));
+            let waiter = {
+                let slot = Arc::clone(&slot);
+                thread::spawn(move || {
+                    let (m, cv) = &*slot;
+                    let mut ready = m.lock().unwrap();
+                    while !*ready {
+                        let (g, t) = cv
+                            .wait_timeout(ready, Duration::from_millis(5))
+                            .unwrap();
+                        assert!(!t.timed_out());
+                        ready = g;
+                    }
+                })
+            };
+            let (m, cv) = &*slot;
+            {
+                let mut ready = m.lock().unwrap();
+                *ready = true;
+                cv.notify_all();
+            }
+            waiter.join().unwrap();
+        });
+    }
+
+    /// Pass-through: outside a model run the types behave like std's, so
+    /// `--cfg loom` builds still work when lib code runs under plain tests.
+    #[test]
+    fn passthrough_outside_a_model() {
+        let m = Mutex::new(1u32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 2);
+        let q: Mutex<VecDeque<u32>> = Mutex::new(VecDeque::new());
+        q.lock().unwrap().push_back(3);
+        assert_eq!(q.lock().unwrap().pop_front(), Some(3));
+        let a = AtomicU64::new(5);
+        assert_eq!(a.fetch_add(2, Ordering::SeqCst), 5);
+        assert_eq!(a.load(Ordering::SeqCst), 7);
+    }
+}

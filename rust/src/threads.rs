@@ -4,10 +4,11 @@
 //! row-panel kernels in parallel ([`scoped`]). On the single-core CI box the
 //! pool degrades gracefully to sequential execution.
 
+use crate::runtime::sync::mpsc::{channel, Receiver, Sender};
+use crate::runtime::sync::{Arc, Condvar, Mutex, PoisonError};
+use crate::util::lock_or_recover;
 use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -37,14 +38,14 @@ impl ThreadPool {
             let pending = Arc::clone(&pending);
             workers.push(std::thread::spawn(move || loop {
                 let msg = {
-                    let guard = rx.lock().unwrap();
+                    let guard = lock_or_recover(&rx);
                     guard.recv()
                 };
                 match msg {
                     Ok(Message::Run(job)) => {
                         job();
                         let (lock, cv) = &*pending;
-                        let mut p = lock.lock().unwrap();
+                        let mut p = lock_or_recover(lock);
                         *p -= 1;
                         if *p == 0 {
                             cv.notify_all();
@@ -71,7 +72,7 @@ impl ThreadPool {
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         {
             let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
+            *lock_or_recover(lock) += 1;
         }
         self.tx.send(Message::Run(Box::new(job))).expect("pool closed");
     }
@@ -79,9 +80,9 @@ impl ThreadPool {
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
         let (lock, cv) = &*self.pending;
-        let mut p = lock.lock().unwrap();
+        let mut p = lock_or_recover(lock);
         while *p > 0 {
-            p = cv.wait(p).unwrap();
+            p = cv.wait(p).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -128,24 +129,24 @@ pub fn scoped<'scope>(pool: &ThreadPool, jobs: Vec<Box<dyn FnOnce() + Send + 'sc
         let panic_slot = Arc::clone(&panic_slot);
         pool.execute(move || {
             if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
-                let mut slot = panic_slot.lock().unwrap();
+                let mut slot = lock_or_recover(&panic_slot);
                 if slot.is_none() {
                     *slot = Some(payload);
                 }
             }
             let (lock, cv) = &*done;
-            let mut d = lock.lock().unwrap();
+            let mut d = lock_or_recover(lock);
             *d += 1;
             cv.notify_all();
         });
     }
     let (lock, cv) = &*done;
-    let mut d = lock.lock().unwrap();
+    let mut d = lock_or_recover(lock);
     while *d < total {
-        d = cv.wait(d).unwrap();
+        d = cv.wait(d).unwrap_or_else(PoisonError::into_inner);
     }
     drop(d);
-    let payload = panic_slot.lock().unwrap().take();
+    let payload = lock_or_recover(&panic_slot).take();
     if let Some(payload) = payload {
         resume_unwind(payload);
     }
@@ -179,7 +180,7 @@ pub fn parallel_map<T: Send + 'static>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::runtime::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn pool_runs_all_jobs() {

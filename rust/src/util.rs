@@ -56,7 +56,15 @@ macro_rules! numerical_err {
 /// results by the supervisor, so the data behind the lock is still
 /// consistent and the right move is to keep serving rather than cascade
 /// the panic into every later `submit`/`recv`/`inflight` call.
-pub fn lock_or_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+///
+/// The mutex type is [`crate::runtime::sync::Mutex`] — identical to
+/// `std::sync::Mutex` on normal builds, and the model checker's mutex under
+/// `--cfg loom` — so poison recovery is exercised by the loom suite too.
+/// Callers therefore import `Mutex` from `crate::runtime::sync`, not
+/// `std::sync` (lint rules R1/R4).
+pub fn lock_or_recover<T>(
+    m: &crate::runtime::sync::Mutex<T>,
+) -> crate::runtime::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
@@ -225,7 +233,7 @@ mod tests {
 
     #[test]
     fn lock_or_recover_survives_poison() {
-        use std::sync::{Arc, Mutex};
+        use crate::runtime::sync::{Arc, Mutex};
         let m = Arc::new(Mutex::new(7u32));
         let m2 = Arc::clone(&m);
         let _ = std::thread::spawn(move || {
@@ -237,6 +245,27 @@ mod tests {
         assert_eq!(*lock_or_recover(&m), 7);
         *lock_or_recover(&m) = 8;
         assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn lock_or_recover_returns_pre_panic_state_after_catch_unwind() {
+        use crate::runtime::sync::Mutex;
+        // Poison on the *same* thread via catch_unwind: the holder mutates
+        // the state, then panics with the guard alive. Recovery must hand
+        // back exactly the pre-panic state — mutation included — instead of
+        // propagating the poison.
+        let m = Mutex::new(vec![1u32, 2]);
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = m.lock().unwrap();
+            g.push(3);
+            panic!("poison with the guard alive");
+        }))
+        .is_err();
+        assert!(panicked, "the closure must have panicked");
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_or_recover(&m), vec![1, 2, 3]);
+        lock_or_recover(&m).push(4);
+        assert_eq!(*lock_or_recover(&m), vec![1, 2, 3, 4]);
     }
 
     #[test]

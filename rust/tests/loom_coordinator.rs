@@ -1,0 +1,289 @@
+//! Model-checked coordinator races (`RUSTFLAGS="--cfg loom" cargo test
+//! --release --test loom_coordinator`).
+//!
+//! Each test drives the *production* admission/scheduling types —
+//! [`prism::coordinator::gate`]'s `InflightLedger` + `AdmissionGate` and
+//! [`prism::coordinator::schedule`]'s `BucketScheduler` — through the
+//! in-tree bounded model checker ([`prism::runtime::sync::model`]), which
+//! explores every thread interleaving (up to the preemption bound) and
+//! fails with the offending schedule on the first assert violation or
+//! deadlock. The four scenarios are the four coordinator races the service
+//! docs promise are closed:
+//!
+//! 1. **Bounded admission** — a blocking submitter racing a result fetch at
+//!    the queue cap. A lost condvar wakeup would park the submitter forever,
+//!    which the checker reports as a modeled deadlock ([`Condvar::
+//!    wait_timeout`] is deliberately untimed under the model, so the 5 ms
+//!    production backstop cannot mask the bug).
+//! 2. **Linger flush vs. synchronous cut** — the flusher's `take_over_linger`
+//!    racing `push`'s full-bucket cut: every job is dispatched at most once
+//!    and never dropped.
+//! 3. **Cancel vs. dispatch** — `remove` racing `take_over_linger` for the
+//!    same pending job: exactly one result per job, and the ledger's
+//!    inflight accounting returns to zero after the fetch.
+//! 4. **Panic-respawn vs. in-flight fetch** — a worker panicking mid-batch
+//!    while holding its reported-set mutex, racing a condvar-monitored
+//!    fetcher: the supervisor's poison recovery synthesizes exactly the
+//!    missing results.
+
+#![cfg(loom)]
+
+use prism::coordinator::gate::{AdmissionGate, InflightLedger};
+use prism::coordinator::schedule::BucketScheduler;
+use prism::coordinator::{Job, JobKind};
+use prism::linalg::Mat;
+use prism::matfn::Precision;
+use prism::runtime::sync::model::{model, thread, Quiet};
+use prism::runtime::sync::{Arc, Condvar, Mutex};
+use prism::util::lock_or_recover;
+use std::collections::BTreeSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
+
+fn job(id: u64) -> Job {
+    Job {
+        id,
+        layer: id as usize,
+        kind: JobKind::InvSqrt { eps: 0.0 },
+        matrix: Mat::eye(2),
+        submitted: Instant::now(),
+        deadline: None,
+    }
+}
+
+/// Race 1: blocking admission at the cap vs. a concurrent result fetch.
+///
+/// Mirrors `Service::admit` + `Service::note_received`: the capacity check
+/// and the park both happen under the pending mutex, and the capacity-freeing
+/// path notifies while holding that same mutex. Any interleaving in which the
+/// notify could land between the submitter's check and its park would strand
+/// the submitter — and surface here as a modeled deadlock.
+#[test]
+fn blocking_submit_never_misses_the_capacity_wakeup() {
+    model(|| {
+        const CAP: usize = 1;
+        let pending: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![1]));
+        let gate = Arc::new(AdmissionGate::new());
+        let ledger = Arc::new(InflightLedger::new());
+
+        // Blocking submitter: admit job 2 once capacity frees.
+        let submitter = {
+            let (pending, gate, ledger) =
+                (Arc::clone(&pending), Arc::clone(&gate), Arc::clone(&ledger));
+            thread::spawn(move || loop {
+                let mut pend = lock_or_recover(&pending);
+                if pend.len() + ledger.inflight() < CAP {
+                    pend.push(2);
+                    return;
+                }
+                let _pend = gate.park(pend, Duration::from_millis(5));
+            })
+        };
+
+        // Fetcher: dispatch job 1, receive its result, notify under the
+        // pending lock (the note_received path).
+        let fetcher = {
+            let (pending, gate, ledger) =
+                (Arc::clone(&pending), Arc::clone(&gate), Arc::clone(&ledger));
+            thread::spawn(move || {
+                {
+                    let mut pend = lock_or_recover(&pending);
+                    let got = pend.pop();
+                    assert_eq!(got, Some(1), "job 1 was pending at the start");
+                }
+                ledger.note_dispatched(1);
+                ledger.note_received();
+                let _pend = lock_or_recover(&pending);
+                gate.notify();
+            })
+        };
+
+        submitter.join().expect("submitter must terminate");
+        fetcher.join().expect("fetcher must terminate");
+        assert_eq!(*lock_or_recover(&pending), vec![2]);
+        assert_eq!(ledger.inflight(), 0);
+    });
+}
+
+/// Race 2: the linger flusher's cut racing a submitter's full-bucket cut on
+/// the same bucket. Whatever the interleaving, each job is dispatched at
+/// most once (no double dispatch) and every job is either dispatched or
+/// still pending (no drop).
+#[test]
+fn linger_flush_and_full_cut_never_double_dispatch_or_drop() {
+    model(|| {
+        let sched = Arc::new(Mutex::new(BucketScheduler::new(2, Precision::F64)));
+        let dispatched: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+
+        // Submitter: two same-bucket pushes; the second can trigger the
+        // synchronous full-bucket cut if the flusher has not already swept.
+        let submitter = {
+            let (sched, dispatched) = (Arc::clone(&sched), Arc::clone(&dispatched));
+            thread::spawn(move || {
+                for id in [1u64, 2] {
+                    let batch = lock_or_recover(&sched).push(job(id));
+                    if let Some(b) = batch {
+                        lock_or_recover(&dispatched).extend(b.iter().map(|j| j.id));
+                    }
+                }
+            })
+        };
+
+        // Flusher: one linger sweep with a zero linger — everything pending
+        // at the instant of the sweep is ripe.
+        let flusher = {
+            let (sched, dispatched) = (Arc::clone(&sched), Arc::clone(&dispatched));
+            thread::spawn(move || {
+                let ripe = lock_or_recover(&sched)
+                    .take_over_linger(Instant::now(), Duration::ZERO);
+                for b in ripe {
+                    lock_or_recover(&dispatched).extend(b.iter().map(|j| j.id));
+                }
+            })
+        };
+
+        submitter.join().expect("submitter must terminate");
+        flusher.join().expect("flusher must terminate");
+
+        let mut seen: Vec<u64> = lock_or_recover(&dispatched).clone();
+        for b in lock_or_recover(&sched).take_all() {
+            seen.extend(b.iter().map(|j| j.id));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![1, 2], "each job exactly once, dispatched or pending");
+    });
+}
+
+/// Race 3: `Service::cancel`'s surgical removal racing the flusher's
+/// dispatch of the same pending job. Exactly one of them claims the job —
+/// one result is produced either way — and the ledger drains to zero.
+#[test]
+fn cancel_racing_dispatch_keeps_inflight_accounting_exact() {
+    model(|| {
+        let sched = Arc::new(Mutex::new(BucketScheduler::new(2, Precision::F64)));
+        lock_or_recover(&sched).push(job(1));
+        let ledger = Arc::new(InflightLedger::new());
+        let cancelled: Arc<Mutex<BTreeSet<u64>>> = Arc::new(Mutex::new(BTreeSet::new()));
+        let results: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+
+        // Canceller: mirrors Service::cancel — pull the job out of its
+        // bucket if it is still pending (counting the synthesized result as
+        // a dispatch), otherwise leave a marker for the worker.
+        let canceller = {
+            let (sched, ledger, cancelled, results) = (
+                Arc::clone(&sched),
+                Arc::clone(&ledger),
+                Arc::clone(&cancelled),
+                Arc::clone(&results),
+            );
+            thread::spawn(move || {
+                let removed = lock_or_recover(&sched).remove(1).is_some();
+                if removed {
+                    ledger.note_dispatched(1);
+                    lock_or_recover(&results).push(1);
+                } else {
+                    lock_or_recover(&cancelled).insert(1);
+                }
+            })
+        };
+
+        // Flusher + worker: sweep ripe buckets, count the dispatch, then
+        // solve (or short-circuit on the cancel marker) and send the result.
+        let dispatcher = {
+            let (sched, ledger, cancelled, results) = (
+                Arc::clone(&sched),
+                Arc::clone(&ledger),
+                Arc::clone(&cancelled),
+                Arc::clone(&results),
+            );
+            thread::spawn(move || {
+                let ripe = lock_or_recover(&sched)
+                    .take_over_linger(Instant::now(), Duration::ZERO);
+                for b in ripe {
+                    ledger.note_dispatched(b.len() as u64);
+                    for j in b {
+                        let _ = lock_or_recover(&cancelled).remove(&j.id);
+                        lock_or_recover(&results).push(j.id);
+                    }
+                }
+            })
+        };
+
+        canceller.join().expect("canceller must terminate");
+        dispatcher.join().expect("dispatcher must terminate");
+
+        // Fetch loop: every result is received exactly once.
+        let got = lock_or_recover(&results).clone();
+        assert_eq!(got, vec![1], "exactly one result for job 1, whoever claimed it");
+        for _ in &got {
+            ledger.note_received();
+        }
+        assert_eq!(ledger.inflight(), 0, "the ledger drains exactly");
+    });
+}
+
+/// Race 4: a worker panicking mid-batch — with the reported-set mutex held —
+/// while a fetcher monitors the result channel. The supervisor recovers the
+/// poisoned pre-panic reported set and synthesizes results for exactly the
+/// members that had not reported; the fetcher sees one result per member in
+/// every interleaving of the unwind and the fetch.
+#[test]
+fn panic_respawn_racing_a_fetch_loses_no_result() {
+    model(|| {
+        // (results, result-arrival condvar) — the res_rx stand-in.
+        let results: Arc<(Mutex<Vec<u64>>, Condvar)> =
+            Arc::new((Mutex::new(Vec::new()), Condvar::new()));
+
+        // Worker + supervisor for the 2-member batch [1, 2].
+        let worker = {
+            let results = Arc::clone(&results);
+            thread::spawn(move || {
+                let reported: Mutex<BTreeSet<u64>> = Mutex::new(BTreeSet::new());
+                let panicked = catch_unwind(AssertUnwindSafe(|| {
+                    // Member 1 reports, then the solve panics with the
+                    // reported-set guard alive — poisoning the mutex exactly
+                    // the way a mid-insert unwind would.
+                    {
+                        let (res, cv) = &*results;
+                        lock_or_recover(res).push(1);
+                        cv.notify_all();
+                    }
+                    let mut rep = lock_or_recover(&reported);
+                    rep.insert(1);
+                    std::panic::panic_any(Quiet("scripted mid-batch panic"));
+                }))
+                .is_err();
+                assert!(panicked, "the scripted panic must unwind");
+                // Supervisor: recover the pre-panic reported set and
+                // synthesize one error result per unreported member.
+                let rep = lock_or_recover(&reported);
+                for id in [1u64, 2] {
+                    if !rep.contains(&id) {
+                        let (res, cv) = &*results;
+                        lock_or_recover(res).push(id);
+                        cv.notify_all();
+                    }
+                }
+            })
+        };
+
+        // Fetcher: block until both results have arrived (a lost notify
+        // here would be a modeled deadlock).
+        let fetcher = {
+            let results = Arc::clone(&results);
+            thread::spawn(move || {
+                let (res, cv) = &*results;
+                let mut got = lock_or_recover(res);
+                while got.len() < 2 {
+                    got = cv.wait(got).unwrap_or_else(|p| p.into_inner());
+                }
+                let mut ids = got.clone();
+                ids.sort_unstable();
+                assert_eq!(ids, vec![1, 2], "one result per batch member");
+            })
+        };
+
+        worker.join().expect("worker must terminate");
+        fetcher.join().expect("fetcher must terminate");
+    });
+}

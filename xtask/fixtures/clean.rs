@@ -1,0 +1,21 @@
+//! Fixture: clean under every rule, even when linted as a migrated module.
+//! Demonstrates the sanctioned idioms — the sync shim, `lock_or_recover`,
+//! a justified `unsafe`, and the explicit waiver escape hatch.
+
+use crate::runtime::sync::{Arc, Mutex};
+use crate::util::lock_or_recover;
+// The waiver must name the rule it silences and sit on the offending line
+// or the line above; reviewers grep for it.
+use std::sync::atomic::AtomicU64; // pallas-lint: allow(R4)
+
+fn drain(queue: &Arc<Mutex<Vec<u64>>>) -> Vec<u64> {
+    let mut q = lock_or_recover(queue);
+    std::mem::take(&mut *q)
+}
+
+fn first_byte(bytes: &[u8]) -> u8 {
+    assert!(!bytes.is_empty());
+    // SAFETY: the assert above guarantees at least one element, so the
+    // pointer read is in bounds.
+    unsafe { *bytes.as_ptr() }
+}

@@ -1,0 +1,12 @@
+//! Fixture: violates rule R1 (`.lock().unwrap()` outside
+//! `util::lock_or_recover`). Pinned by the xtask self-tests — if the rule
+//! stops firing here, the lint has regressed.
+
+use std::sync::Mutex;
+
+fn drain(queue: &Mutex<Vec<u64>>) -> Vec<u64> {
+    // A panicking holder poisons `queue`; this unwrap then cascades the
+    // panic into every later caller instead of degrading gracefully.
+    let mut q = queue.lock().unwrap();
+    std::mem::take(&mut *q)
+}

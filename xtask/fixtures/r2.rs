@@ -1,0 +1,10 @@
+//! Fixture: violates rule R2 — an `unsafe` with no justification comment
+//! anywhere nearby. Pinned by the xtask self-tests. (This header must not
+//! spell out the required comment marker: it would land inside the rule's
+//! lookback window and satisfy it.)
+
+fn first_byte(bytes: &[u8]) -> u8 {
+    assert!(!bytes.is_empty());
+
+    unsafe { *bytes.as_ptr() }
+}

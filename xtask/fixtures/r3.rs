@@ -1,0 +1,10 @@
+//! Fixture: violates rule R3 — an allocating constructor inside a file
+//! tagged `hot-path`. Pinned by the xtask self-tests.
+
+#![doc = "hot-path"]
+
+fn scratch(n: usize) -> Vec<f64> {
+    // Hot-path files must draw scratch from the Workspace pool, never
+    // allocate per call.
+    Vec::with_capacity(n)
+}

@@ -1,0 +1,15 @@
+//! Fixture: violates rule R4 when linted under a migrated module path —
+//! a direct `std::sync` import that the `--cfg loom` build would not model.
+//! Pinned by the xtask self-tests (which lint this file as
+//! `rust/src/metrics.rs` to aim the rule, and as a non-migrated path to
+//! prove it stays silent elsewhere).
+
+use std::sync::Mutex;
+
+static REGISTRY: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+
+fn register(name: &'static str) {
+    if let Ok(mut reg) = REGISTRY.lock() {
+        reg.push(name);
+    }
+}

@@ -1,0 +1,556 @@
+//! `pallas-lint`: repo-specific static checks, run as `cargo xtask lint`.
+//!
+//! Four rules the stock clippy cannot express, each tied to a contract the
+//! crate's docs promise (see CONTRIBUTING.md for the rationale and the
+//! waiver syntax):
+//!
+//! * **R1** — no `.lock().unwrap()` outside `util::lock_or_recover` (and
+//!   the `runtime/sync` layer itself). A panicking lock holder must degrade
+//!   into typed error results, not cascade poison panics through the
+//!   service.
+//! * **R2** — every `unsafe` keyword carries a nearby `// SAFETY:` comment
+//!   (a `# Safety` doc section also counts) stating the discharged
+//!   obligations.
+//! * **R3** — files tagged `#![doc = "hot-path"]` contain no allocating
+//!   constructors (`Mat::zeros`, `Vec::with_capacity`, `vec![`) or
+//!   allocating matmuls (`.matmul(`): the engine cores' allocation-free
+//!   contract, checked at the source level instead of only by runtime
+//!   workspace counters.
+//! * **R4** — the migrated concurrency modules import sync primitives from
+//!   `crate::runtime::sync`, never `std::sync` directly, so the
+//!   `--cfg loom` build really models every lock they take.
+//!
+//! A finding on line N is waived by `pallas-lint: allow(R#)` in a comment
+//! on line N or N-1. The linter is a hand-rolled comment/string-aware
+//! scanner (the workspace is dependency-free by design — no `syn`); it
+//! walks `rust/src/**/*.rs` only. Tests, benches and examples may use
+//! plain `std::sync` freely.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files that must route every sync primitive through `crate::runtime::sync`
+/// (rule R4). Matched as path suffixes against the walked file paths.
+const MIGRATED: &[&str] = &[
+    "coordinator/service.rs",
+    "coordinator/schedule.rs",
+    "coordinator/supervise.rs",
+    "coordinator/gate.rs",
+    "threads.rs",
+    "metrics.rs",
+    "runtime/faultinject.rs",
+];
+
+/// Tokens banned in hot-path-tagged files (rule R3).
+const R3_BANNED: &[&str] = &[
+    "Mat::zeros",
+    "Mat32::zeros",
+    "Vec::with_capacity",
+    "vec![",
+    ".matmul(",
+];
+
+/// The `#![doc = ...]` marker that opts a file into rule R3.
+const HOT_PATH_TAG: &str = "#![doc = \"hot-path\"]";
+
+/// How many lines above an `unsafe` keyword a SAFETY comment may sit
+/// (covers a `# Safety` doc section followed by `cfg`/`target_feature`
+/// attributes).
+const R2_WINDOW: usize = 12;
+
+// One-line messages; CONTRIBUTING.md carries the full story per rule.
+const R1_MSG: &str = "`.lock().unwrap()` — use `util::lock_or_recover`";
+const R2_MSG: &str = "`unsafe` without a nearby `// SAFETY:` comment";
+const R4_MSG: &str = "`std::sync` in a migrated module — use `crate::runtime::sync`";
+
+#[derive(Debug)]
+struct Finding {
+    path: String,
+    /// 1-based line number.
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl Finding {
+    fn new(path: &str, line: usize, rule: &'static str, msg: impl Into<String>) -> Self {
+        Finding {
+            path: path.to_string(),
+            line,
+            rule,
+            msg: msg.into(),
+        }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let Finding { path, line, rule, msg } = self;
+        write!(f, "{path}:{line}: [{rule}] {msg}")
+    }
+}
+
+/// One source line split into its code text (strings replaced by spaces,
+/// comments removed) and its comment text (line + block + doc comments).
+#[derive(Default)]
+struct SourceLine {
+    code: String,
+    comment: String,
+}
+
+/// Comment/string-aware line splitter. Handles line comments, nested block
+/// comments, string/raw-string literals, char literals and lifetimes. Not a
+/// full lexer — just enough to keep the rules from firing on tokens inside
+/// strings or prose.
+fn strip(src: &str) -> Vec<SourceLine> {
+    #[derive(Clone, Copy)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(usize),
+        Str,
+        RawStr(usize),
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<SourceLine> = vec![SourceLine::default()];
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(SourceLine::default());
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        let cur = lines.last_mut().expect("lines is never empty");
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push(' ');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r' && !prev_is_word(&chars, i) {
+                    if let Some(hashes) = raw_str_hashes(&chars, i + 1) {
+                        cur.code.push(' ');
+                        st = St::RawStr(hashes);
+                        i += 2 + hashes;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    i = skip_char_literal(&chars, i, cur);
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && closes_raw_str(&chars, i + 1, hashes) {
+                    st = St::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines
+}
+
+fn prev_is_word(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// At `chars[i]`, does `#*"` start a raw-string body? Returns the hash count.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<usize> {
+    let mut hashes = 0;
+    while chars.get(i + hashes) == Some(&'#') {
+        hashes += 1;
+    }
+    if chars.get(i + hashes) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn closes_raw_str(chars: &[char], i: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Skip over a char literal (`'a'`, `'\n'`, `'\u{7f}'`) starting at the
+/// opening quote; a lifetime (`'static`) keeps the quote in the code text.
+/// Returns the next index to scan.
+fn skip_char_literal(chars: &[char], i: usize, cur: &mut SourceLine) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: scan (bounded) for the closing quote.
+        for j in (i + 3)..(i + 13).min(chars.len()) {
+            if chars[j] == '\'' {
+                cur.code.push(' ');
+                return j + 1;
+            }
+        }
+    } else if chars.get(i + 2) == Some(&'\'') {
+        cur.code.push(' ');
+        return i + 3;
+    }
+    // Lifetime or stray quote: keep it as code.
+    cur.code.push('\'');
+    i + 1
+}
+
+/// Is the comment on line `ln` (0-based) or the line above it a waiver for
+/// `rule`?
+fn waived(lines: &[SourceLine], ln: usize, rule: &str) -> bool {
+    let tag = format!("pallas-lint: allow({rule})");
+    let here = lines[ln].comment.contains(&tag);
+    let above = ln > 0 && lines[ln - 1].comment.contains(&tag);
+    here || above
+}
+
+/// Does `hay` contain `word` delimited by non-word characters? (Keeps R2
+/// from firing on `unsafe_op_in_unsafe_fn` and the like.)
+fn contains_word(hay: &str, word: &str) -> bool {
+    let bytes = hay.as_bytes();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(word) {
+        let at = from + p;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_word_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_word_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lint one file's contents. `path` is the repo-relative path the rules key
+/// on (R1's layer exemptions, R4's migrated list); fixtures pass synthetic
+/// paths to aim a rule.
+fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let lines = strip(src);
+    let mut findings = Vec::new();
+
+    // Joined code text with a byte → line map, for the cross-line R1 match.
+    let mut code = String::new();
+    let mut line_of: Vec<usize> = Vec::new();
+    for (ln, l) in lines.iter().enumerate() {
+        for ch in l.code.chars() {
+            code.push(ch);
+            line_of.resize(line_of.len() + ch.len_utf8(), ln);
+        }
+        code.push('\n');
+        line_of.push(ln);
+    }
+
+    // R1: `.lock()` immediately followed (modulo whitespace) by `.unwrap()`.
+    let r1_exempt = path.contains("runtime/sync/") || path.ends_with("util.rs");
+    if !r1_exempt {
+        let bytes = code.as_bytes();
+        let mut from = 0;
+        while let Some(p) = code[from..].find(".lock()") {
+            let at = from + p;
+            let mut rest = at + ".lock()".len();
+            while bytes.get(rest).is_some_and(|b| b.is_ascii_whitespace()) {
+                rest += 1;
+            }
+            if code[rest..].starts_with(".unwrap()") {
+                let ln = line_of[at];
+                if !waived(&lines, ln, "R1") {
+                    findings.push(Finding::new(path, ln + 1, "R1", R1_MSG));
+                }
+            }
+            from = at + ".lock()".len();
+        }
+    }
+
+    // R2: every `unsafe` keyword needs a SAFETY comment within the window.
+    for (ln, l) in lines.iter().enumerate() {
+        if !contains_word(&l.code, "unsafe") {
+            continue;
+        }
+        let lo = ln.saturating_sub(R2_WINDOW);
+        let documented = lines[lo..=ln]
+            .iter()
+            .any(|w| w.comment.contains("SAFETY:") || w.comment.contains("# Safety"));
+        if !documented && !waived(&lines, ln, "R2") {
+            findings.push(Finding::new(path, ln + 1, "R2", R2_MSG));
+        }
+    }
+
+    // R3: allocation-free contract of hot-path-tagged files (non-test code).
+    if src.contains(HOT_PATH_TAG) {
+        let first_test = lines
+            .iter()
+            .position(|l| l.code.contains("#[cfg(test)]"))
+            .unwrap_or(lines.len());
+        for (ln, l) in lines.iter().enumerate().take(first_test) {
+            for token in R3_BANNED {
+                if l.code.contains(token) && !waived(&lines, ln, "R3") {
+                    findings.push(Finding::new(
+                        path,
+                        ln + 1,
+                        "R3",
+                        format!("`{token}` allocates in a `hot-path`-tagged file"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // R4: migrated modules must not touch `std::sync` directly.
+    if MIGRATED.iter().any(|m| path.ends_with(m)) {
+        for (ln, l) in lines.iter().enumerate() {
+            if l.code.contains("std::sync") && !waived(&lines, ln, "R4") {
+                findings.push(Finding::new(path, ln + 1, "R4", R4_MSG));
+            }
+        }
+    }
+
+    findings
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable output.
+fn rs_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let Ok(entries) = fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            out.extend(rs_files(&p));
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Lint every `.rs` file under `rust/src` relative to `repo_root`.
+fn lint_tree(repo_root: &Path) -> Vec<Finding> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut findings = Vec::new();
+    for file in rs_files(&src_root) {
+        let rel = file
+            .strip_prefix(repo_root)
+            .unwrap_or(&file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        match fs::read_to_string(&file) {
+            Ok(src) => findings.extend(lint_source(&rel, &src)),
+            Err(e) => findings.push(Finding::new(&rel, 0, "io", format!("unreadable: {e}"))),
+        }
+    }
+    findings
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            // CARGO_MANIFEST_DIR is xtask/; the repo root is its parent.
+            let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .expect("xtask lives one level under the repo root")
+                .to_path_buf();
+            let findings = lint_tree(&root);
+            if findings.is_empty() {
+                println!("pallas-lint: clean (rules R1-R4, rust/src)");
+                ExitCode::SUCCESS
+            } else {
+                for f in &findings {
+                    eprintln!("{f}");
+                }
+                eprintln!("pallas-lint: {} finding(s)", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const R1_FIXTURE: &str = include_str!("../fixtures/r1.rs");
+    const R2_FIXTURE: &str = include_str!("../fixtures/r2.rs");
+    const R3_FIXTURE: &str = include_str!("../fixtures/r3.rs");
+    const R4_FIXTURE: &str = include_str!("../fixtures/r4.rs");
+    const CLEAN_FIXTURE: &str = include_str!("../fixtures/clean.rs");
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn r1_fires_on_lock_unwrap() {
+        let findings = lint_source("rust/src/fake.rs", R1_FIXTURE);
+        assert!(rules_of(&findings).contains(&"R1"), "{findings:?}");
+    }
+
+    #[test]
+    fn r1_fires_across_a_line_break() {
+        let src = "fn f(m: &M) {\n    let _g = m.lock()\n        .unwrap();\n}\n";
+        let findings = lint_source("rust/src/fake.rs", src);
+        assert_eq!(rules_of(&findings), vec!["R1"], "{findings:?}");
+        assert_eq!(findings[0].line, 2);
+    }
+
+    #[test]
+    fn r1_exempts_the_sync_layer_and_util() {
+        let model = lint_source("rust/src/runtime/sync/model.rs", R1_FIXTURE);
+        assert!(model.is_empty(), "{model:?}");
+        let util = lint_source("rust/src/util.rs", R1_FIXTURE);
+        assert!(util.is_empty(), "{util:?}");
+    }
+
+    #[test]
+    fn r2_fires_on_undocumented_unsafe() {
+        let findings = lint_source("rust/src/fake.rs", R2_FIXTURE);
+        assert!(rules_of(&findings).contains(&"R2"), "{findings:?}");
+    }
+
+    #[test]
+    fn r2_accepts_a_safety_comment() {
+        let src = "// SAFETY: p is valid per the caller contract.\nlet v = unsafe { *p };\n";
+        assert!(lint_source("rust/src/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r2_ignores_unsafe_in_strings_comments_and_identifiers() {
+        let src = "// unsafe in prose\nlet s = \"unsafe\";\n#![deny(unsafe_op_in_unsafe_fn)]\n";
+        assert!(lint_source("rust/src/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r3_fires_only_in_tagged_files() {
+        let findings = lint_source("rust/src/fake.rs", R3_FIXTURE);
+        assert!(rules_of(&findings).contains(&"R3"), "{findings:?}");
+        // The same source without the tag is not checked.
+        let untagged = R3_FIXTURE.replace(HOT_PATH_TAG, "");
+        assert!(lint_source("rust/src/fake.rs", &untagged).is_empty());
+    }
+
+    #[test]
+    fn r3_exempts_test_modules() {
+        let src = format!(
+            "{HOT_PATH_TAG}\nfn hot() {{}}\n#[cfg(test)]\nmod tests {{\n    \
+             fn t() {{ let v = Vec::with_capacity(4); let _ = v; }}\n}}\n"
+        );
+        assert!(lint_source("rust/src/fake.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn r4_fires_only_in_migrated_modules() {
+        let findings = lint_source("rust/src/metrics.rs", R4_FIXTURE);
+        assert!(rules_of(&findings).contains(&"R4"), "{findings:?}");
+        let other = lint_source("rust/src/other.rs", R4_FIXTURE);
+        assert!(other.is_empty(), "{other:?}");
+    }
+
+    #[test]
+    fn waiver_comment_suppresses_a_finding() {
+        let above = "// pallas-lint: allow(R1)\nlet _g = m.lock().unwrap();\n";
+        assert!(lint_source("rust/src/fake.rs", above).is_empty());
+        let same_line = "let _g = m.lock().unwrap(); // pallas-lint: allow(R1)\n";
+        assert!(lint_source("rust/src/fake.rs", same_line).is_empty());
+    }
+
+    #[test]
+    fn clean_fixture_is_clean() {
+        let findings = lint_source("rust/src/metrics.rs", CLEAN_FIXTURE);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn scanner_strips_strings_and_comments() {
+        let lines = strip("let a = \"x.lock().unwrap()\"; // .lock().unwrap()\n");
+        assert!(!lines[0].code.contains("lock"));
+        assert!(lines[0].comment.contains(".lock().unwrap()"));
+    }
+
+    #[test]
+    fn scanner_handles_raw_strings_and_char_literals() {
+        let raw = strip("let r = r#\"unsafe \" x\"#;\n");
+        assert!(!raw[0].code.contains("unsafe"), "{:?}", raw[0].code);
+        let chr = strip("let c = '\\'';\n");
+        assert!(chr[0].code.contains("let c ="));
+        let lt = strip("let l: &'static str = \"\";\n");
+        assert!(lt[0].code.contains("'static"));
+    }
+
+    #[test]
+    fn scanner_handles_nested_block_comments() {
+        let lines = strip("/* a /* inner unsafe */ still comment */ let x = 1;\n");
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].code.contains("let x = 1;"));
+    }
+
+    /// The acceptance gate: the real tree is clean under all four rules.
+    /// Runs in tier-1 (`cargo test` builds the workspace), so a violating
+    /// commit fails even before CI's explicit `cargo xtask lint` step.
+    #[test]
+    fn real_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("xtask lives one level under the repo root");
+        let findings = lint_tree(root);
+        let report: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        let report = report.join("\n");
+        assert!(findings.is_empty(), "violations in rust/src:\n{report}");
+    }
+}
